@@ -1,0 +1,66 @@
+//! FEMNIST non-IID comparison (the Fig. 2 / Table 1 FEMNIST row).
+//!
+//!   cargo run --release --example femnist_noniid -- --rounds 60 --seeds 2
+//!
+//! Runs the paper's four methods — No Compression, DGC, FD+DGC,
+//! Multi-Model AFD+DGC — on the synthetic non-IID FEMNIST workload and
+//! prints the accuracy curves plus the paper-style summary table.
+
+use afd::config::{ExperimentConfig, Preset};
+use afd::coordinator::experiment::run_experiment;
+use afd::metrics::{render_table, summarize};
+use afd::util::cli::ArgSpec;
+
+fn main() -> anyhow::Result<()> {
+    let spec = ArgSpec::new("FEMNIST non-IID: the paper's 4-method comparison")
+        .opt("rounds", "50", "federated rounds per run")
+        .opt("clients", "15", "client population")
+        .opt("seeds", "1", "seeds per method")
+        .opt("target", "0.60", "target accuracy for convergence time");
+    let args = spec
+        .parse("femnist_noniid", std::env::args().skip(1))
+        .map_err(|e| anyhow::anyhow!(e))?;
+
+    let mut base = ExperimentConfig::preset(Preset::FemnistSmallNonIid);
+    base.rounds = args.usize("rounds").map_err(|e| anyhow::anyhow!(e))?;
+    base.num_clients = args.usize("clients").map_err(|e| anyhow::anyhow!(e))?;
+    base.target_accuracy = Some(args.f64("target").map_err(|e| anyhow::anyhow!(e))?);
+    base.eval_every = 2;
+    let seeds = args.usize("seeds").map_err(|e| anyhow::anyhow!(e))?;
+
+    let grid = ExperimentConfig::paper_method_grid(&base, "afd_multi");
+    let mut rows = Vec::new();
+    for (label, cfg) in &grid {
+        let mut reports = Vec::new();
+        for s in 0..seeds as u64 {
+            let mut c = cfg.clone();
+            c.seed = base.seed + s;
+            eprintln!("[femnist_noniid] {label} seed {s} ...");
+            let r = run_experiment(&c)?;
+            eprintln!(
+                "  best acc {:.3} | sim {} | down {}",
+                r.best_accuracy(),
+                afd::util::human_duration(r.total_sim_seconds()),
+                afd::util::human_bytes(r.total_down_bytes())
+            );
+            reports.push(r);
+        }
+        // Print one accuracy-vs-simulated-time curve per method (Fig. 2).
+        println!("\ncurve [{label}] (sim seconds, accuracy):");
+        for (t, a) in reports[0].accuracy_curve() {
+            println!("  {t:>10.1}  {a:.3}");
+        }
+        rows.push(summarize(label, &reports, base.target_accuracy));
+    }
+    println!(
+        "{}",
+        render_table(
+            &format!(
+                "FEMNIST non-IID (paper Table 1 row; target {:.0}%)",
+                base.target_accuracy.unwrap() * 100.0
+            ),
+            &rows
+        )
+    );
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! Sentiment140 IID with Single-Model AFD (Fig. 3 / Table 2 row 3).
+//!
+//!   cargo run --release --example sentiment140_iid -- --rounds 40
+//!
+//! The IID setting is where the paper deploys Single-Model AFD: one
+//! global score map, one shared sub-model per round, updated from the
+//! cohort's average loss. 10% of clients participate per round.
+
+use afd::config::{ExperimentConfig, Preset};
+use afd::coordinator::experiment::run_experiment;
+use afd::metrics::{render_table, summarize};
+use afd::util::cli::ArgSpec;
+
+fn main() -> anyhow::Result<()> {
+    let spec = ArgSpec::new("Sentiment140 IID, Single-Model AFD")
+        .opt("rounds", "40", "federated rounds")
+        .opt("clients", "20", "client population (users)")
+        .opt("seeds", "1", "seeds per method")
+        .opt("target", "0.75", "target accuracy");
+    let args = spec
+        .parse("sentiment140_iid", std::env::args().skip(1))
+        .map_err(|e| anyhow::anyhow!(e))?;
+
+    let mut base = ExperimentConfig::preset(Preset::Sent140SmallIid);
+    base.rounds = args.usize("rounds").map_err(|e| anyhow::anyhow!(e))?;
+    base.num_clients = args.usize("clients").map_err(|e| anyhow::anyhow!(e))?;
+    base.target_accuracy = Some(args.f64("target").map_err(|e| anyhow::anyhow!(e))?);
+    base.eval_every = 2;
+    let seeds = args.usize("seeds").map_err(|e| anyhow::anyhow!(e))?;
+
+    println!("== Sentiment140 IID (Single-Model AFD) ==");
+    println!(
+        "frozen GloVe-like embeddings are NOT transmitted (manifest transmit=false)"
+    );
+
+    let grid = ExperimentConfig::paper_method_grid(&base, "afd_single");
+    let mut rows = Vec::new();
+    for (label, cfg) in &grid {
+        let mut reports = Vec::new();
+        for s in 0..seeds as u64 {
+            let mut c = cfg.clone();
+            c.seed = base.seed + s;
+            eprintln!("[sent140_iid] {label} seed {s} ...");
+            reports.push(run_experiment(&c)?);
+        }
+        println!("\ncurve [{label}] (sim seconds, accuracy):");
+        for (t, a) in reports[0].accuracy_curve() {
+            println!("  {t:>10.1}  {a:.3}");
+        }
+        rows.push(summarize(label, &reports, base.target_accuracy));
+    }
+    println!(
+        "{}",
+        render_table("Sentiment140 IID (paper Table 2 row)", &rows)
+    );
+    Ok(())
+}

@@ -1,0 +1,120 @@
+//! Shakespeare next-character prediction, non-IID roles (Table 1 row 2).
+//!
+//!   cargo run --release --example shakespeare_char -- --rounds 40
+//!
+//! Besides the federated comparison, this example samples text from the
+//! trained global model to show the char-LSTM stack is real: greedy
+//! generation runs through the same PJRT eval path.
+
+use afd::config::{Backend, ExperimentConfig, Preset};
+use afd::coordinator::experiment::{artifacts_dir, Experiment};
+use afd::data::shakespeare::{char_to_class, class_to_char};
+use afd::model::manifest::Manifest;
+use afd::runtime::{pjrt::PjrtRuntime, BatchInput, EvalBatch, ModelRuntime};
+use afd::util::cli::ArgSpec;
+
+fn main() -> anyhow::Result<()> {
+    let spec = ArgSpec::new("Shakespeare char-LSTM, non-IID roles")
+        .opt("rounds", "40", "federated rounds")
+        .opt("clients", "12", "client population (roles)")
+        .opt("sample", "120", "chars of text to sample after training");
+    let args = spec
+        .parse("shakespeare_char", std::env::args().skip(1))
+        .map_err(|e| anyhow::anyhow!(e))?;
+
+    let mut cfg = ExperimentConfig::preset(Preset::ShakespeareSmallNonIid);
+    cfg.backend = Backend::Pjrt;
+    cfg.rounds = args.usize("rounds").map_err(|e| anyhow::anyhow!(e))?;
+    cfg.num_clients = args.usize("clients").map_err(|e| anyhow::anyhow!(e))?;
+    cfg.eval_every = 4;
+
+    println!("== Shakespeare char-LSTM (non-IID roles) ==");
+    let mut exp = Experiment::build(&cfg)?;
+    for round in 1..=cfg.rounds {
+        let rec = exp.step(round)?;
+        if let Some(acc) = rec.eval_acc {
+            println!(
+                "round {:>4}  sim {:>9}  loss {:.4}  next-char acc {:.3}",
+                round,
+                afd::util::human_duration(rec.cum_s),
+                rec.train_loss,
+                acc
+            );
+        }
+    }
+
+    // ---- sample text from the trained global model -------------------
+    let n_sample = args.usize("sample").map_err(|e| anyhow::anyhow!(e))?;
+    let manifest = Manifest::load(&artifacts_dir())?;
+    let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    let rt = PjrtRuntime::load(&client, &manifest, &cfg.variant)?;
+    let mspec = rt.spec().clone();
+    let seq = mspec.input_shape[0];
+
+    let seed_text = "to be or not to be";
+    let mut ctx: Vec<i32> = seed_text.chars().map(|c| char_to_class(c) as i32).collect();
+    let mut out = String::from(seed_text);
+    // Greedy decode via the eval artifact: feed a batch whose first row
+    // is the context; argmax is recovered from the correct-count trick —
+    // instead we use eval loss over candidate labels. Simpler: use the
+    // artifact's loss on each candidate class would be 53 evals; instead
+    // run the train-free path: evaluate() returns only aggregates, so we
+    // reuse the native trick: take the class with max count by probing.
+    // Pragmatically: probe each candidate as the label of row 0 and pick
+    // the one with the highest per-batch correct increment.
+    for _ in 0..n_sample {
+        let window: Vec<i32> = {
+            let mut w = vec![52i32; seq.saturating_sub(ctx.len())];
+            let tail: Vec<i32> =
+                ctx.iter().rev().take(seq).rev().cloned().collect();
+            w.extend(tail);
+            w[w.len() - seq..].to_vec()
+        };
+        // Build a batch of identical windows; label row i with class i
+        // (plus padding rows when classes > batch). The class whose
+        // "correct" count comes back 1 is the argmax.
+        let mut predicted = 52usize;
+        'outer: for chunk_start in (0..mspec.classes).step_by(mspec.batch_size) {
+            let mut xs = Vec::with_capacity(mspec.batch_size * seq);
+            let mut ys = Vec::with_capacity(mspec.batch_size);
+            for i in 0..mspec.batch_size {
+                xs.extend_from_slice(&window);
+                ys.push(((chunk_start + i) % mspec.classes) as i32);
+            }
+            let ev = rt.evaluate(
+                &exp.global,
+                &EvalBatch {
+                    xs: BatchInput::I32(xs),
+                    ys,
+                },
+            )?;
+            if ev.correct > 0.0 {
+                // One of this chunk's labels matched the argmax.
+                for i in 0..mspec.batch_size {
+                    let cand = (chunk_start + i) % mspec.classes;
+                    let mut xs2 = Vec::with_capacity(mspec.batch_size * seq);
+                    let mut ys2 = Vec::with_capacity(mspec.batch_size);
+                    for _ in 0..mspec.batch_size {
+                        xs2.extend_from_slice(&window);
+                        ys2.push(cand as i32);
+                    }
+                    let ev2 = rt.evaluate(
+                        &exp.global,
+                        &EvalBatch {
+                            xs: BatchInput::I32(xs2),
+                            ys: ys2,
+                        },
+                    )?;
+                    if ev2.correct as usize == mspec.batch_size {
+                        predicted = cand;
+                        break 'outer;
+                    }
+                }
+            }
+        }
+        ctx.push(predicted as i32);
+        out.push(class_to_char(predicted));
+    }
+    println!("\nsampled text (greedy):\n  {out}");
+    Ok(())
+}

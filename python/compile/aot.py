@@ -1,0 +1,212 @@
+"""AOT pipeline: lower every model variant to HLO text + write the manifest.
+
+Python runs ONCE (``make artifacts``); the Rust coordinator is
+self-contained afterwards. Interchange is **HLO text** — the image's
+xla_extension 0.5.1 rejects jax≥0.5 serialized HloModuleProtos (64-bit
+instruction ids); the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Outputs (artifacts/):
+  train_<variant>.hlo.txt   — one local epoch (scan of SGD steps)
+  eval_<variant>.hlo.txt    — loss-sum + correct-count over one batch
+  <variant>.init.bin        — little-endian f32 initial parameters (concat)
+  kernel_masked_dense.hlo.txt     — L1 matmul kernel artifact (runtime tests)
+  kernel_hadamard_roundtrip.hlo.txt — L1 quant kernel artifact (bench/race)
+  manifest.json             — everything the Rust side needs: argument
+      order, parameter segments (+ packing metadata for sub-model byte
+      accounting), mask groups, data shapes, FLOPs attribution, lr.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import variants as V
+from .kernels import hadamard_quant as hq
+from .kernels import matmul as mk
+
+INIT_SEED = 0
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _axis_pack_json(ap: M.AxisPack | None):
+    if ap is None:
+        return None
+    return {
+        "group": ap.group,
+        "count": ap.count,
+        "repeat": ap.repeat,
+        "fixed": ap.fixed,
+    }
+
+
+def variant_manifest(v: V.Variant, model: M.ModelDef) -> dict:
+    params = []
+    offset = 0
+    for p in model.params:
+        params.append(
+            {
+                "name": p.name,
+                "shape": list(p.shape),
+                "size": p.size,
+                "offset": offset,
+                "trainable": p.trainable,
+                "transmit": p.transmit,
+                "rows": _axis_pack_json(p.rows),
+                "cols": _axis_pack_json(p.cols),
+                "flops_per_sample": p.flops_per_sample,
+            }
+        )
+        offset += p.size
+    masks = [
+        {"name": m.name, "size": m.size, "kind": m.kind} for m in model.masks
+    ]
+    cfg = dataclasses.asdict(v.cfg)
+    return {
+        "name": v.name,
+        "kind": v.kind,
+        "dataset": v.dataset,
+        "cfg": cfg,
+        "lr": v.lr,
+        "batch_size": v.batch_size,
+        "num_batches": v.num_batches,
+        "classes": v.cfg.classes,
+        "input_shape": list(model.input_shape),
+        "input_dtype": model.input_dtype,
+        "num_params": model.num_params,
+        "params": params,
+        "mask_groups": masks,
+        "train_hlo": f"train_{v.name}.hlo.txt",
+        "eval_hlo": f"eval_{v.name}.hlo.txt",
+        "init_params": f"{v.name}.init.bin",
+        # Argument orders, explicit so the Rust side never guesses:
+        "train_args": (
+            [p.name for p in model.params]
+            + [f"mask:{m.name}" for m in model.masks]
+            + ["xs", "ys", "lr"]
+        ),
+        "train_outputs": [p.name for p in model.params] + ["mean_loss"],
+        "eval_args": [p.name for p in model.params] + ["x", "y"],
+        "eval_outputs": ["loss_sum", "correct"],
+    }
+
+
+def lower_variant(v: V.Variant, outdir: str, verbose: bool = True) -> dict:
+    model = M.build(v)
+    if verbose:
+        print(f"[aot] lowering {v.name} ({model.num_params} params) ...", flush=True)
+
+    train = M.make_train_step(model)
+    lowered = jax.jit(train).lower(*M.example_args_train(model))
+    train_txt = to_hlo_text(lowered)
+    with open(os.path.join(outdir, f"train_{v.name}.hlo.txt"), "w") as f:
+        f.write(train_txt)
+
+    ev = M.make_eval_step(model)
+    lowered_e = jax.jit(ev).lower(*M.example_args_eval(model))
+    with open(os.path.join(outdir, f"eval_{v.name}.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered_e))
+
+    init = M.init_params(model, INIT_SEED)
+    flat = np.concatenate([p.reshape(-1) for p in init]).astype("<f4")
+    flat.tofile(os.path.join(outdir, f"{v.name}.init.bin"))
+
+    if verbose:
+        print(
+            f"[aot]   train hlo {len(train_txt)/1e6:.2f} MB, "
+            f"init {flat.nbytes/1e6:.2f} MB",
+            flush=True,
+        )
+    return variant_manifest(v, model)
+
+
+def lower_kernel_artifacts(outdir: str) -> dict:
+    """Standalone L1 kernel artifacts for Rust runtime tests + benches."""
+    m, k, n = 64, 96, 32
+
+    def masked_dense(x, w, b, mask):
+        return (mk.matmul(x, w, b, mask, "relu"),)
+
+    sds = [
+        jax.ShapeDtypeStruct((m, k), jnp.float32),
+        jax.ShapeDtypeStruct((k, n), jnp.float32),
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+    ]
+    with open(os.path.join(outdir, "kernel_masked_dense.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(jax.jit(masked_dense).lower(*sds)))
+
+    length, block = 4096, 256
+
+    def had_roundtrip(x, signs):
+        return (hq.roundtrip(x, signs, block),)
+
+    sds = [
+        jax.ShapeDtypeStruct((length,), jnp.float32),
+        jax.ShapeDtypeStruct((length,), jnp.float32),
+    ]
+    with open(os.path.join(outdir, "kernel_hadamard_roundtrip.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(jax.jit(had_roundtrip).lower(*sds)))
+
+    return {
+        "masked_dense": {
+            "hlo": "kernel_masked_dense.hlo.txt",
+            "m": m, "k": k, "n": n,
+        },
+        "hadamard_roundtrip": {
+            "hlo": "kernel_hadamard_roundtrip.hlo.txt",
+            "length": length, "block": block,
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--paper", action="store_true",
+        help="also lower paper-scale variants (slow; large artifacts)",
+    )
+    ap.add_argument("--variants", nargs="*", default=None)
+    args = ap.parse_args()
+
+    outdir = args.out
+    os.makedirs(outdir, exist_ok=True)
+
+    names = list(args.variants or V.DEFAULT_VARIANTS)
+    if args.paper:
+        names += [n for n in V.PAPER_VARIANTS if n not in names]
+
+    manifest = {
+        "format_version": 1,
+        "init_seed": INIT_SEED,
+        "variants": {},
+        "kernels": lower_kernel_artifacts(outdir),
+    }
+    for name in names:
+        v = V.get(name)
+        manifest["variants"][name] = lower_variant(v, outdir)
+
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote manifest with {len(names)} variants to {outdir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,144 @@
+"""L1 Pallas kernel: blockwise randomized Hadamard transform + 8-bit quantization.
+
+This is the paper's **downlink compression** operator ("8-bit Gradient
+Quantization after applying Hadamard transformation as a basis function
+to spread the information on the compressed weights", Konečný et al.
+2016 / Lyubarskii & Vershynin 2010): for each length-``H`` block ``x`` of
+the flattened sub-model,
+
+    y = (1/sqrt(H)) · H_H · (d ⊙ x)          (randomized Hadamard rotation)
+    q = round(clip(y / s, -1, 1) · 127)      (8-bit uniform quantization)
+    s = max|y|                               (per-block scale)
+
+and the inverse recovers ``x ≈ d ⊙ (1/sqrt(H)) · H_H · (q/127 · s)``
+(the Walsh–Hadamard matrix is symmetric and H·H = H·I, so the same
+butterfly inverts the rotation).
+
+TPU idiom: the butterfly runs log2(H) stages fully in-register on a
+(block, H) tile — a reshape/concat network rather than strided memory
+access — and the quantization epilogue is fused so each block makes one
+HBM round-trip. ``interpret=True`` for CPU PJRT (see matmul.py).
+
+The Rust coordinator has an equivalent native implementation
+(`compression::quant`); `aot.py` exports this kernel as its own artifact
+so the two can be cross-checked and raced (bench_micro_hotpath).
+
+Oracle: ``ref.hadamard_quantize_ref`` / ``ref.hadamard_dequantize_ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 256  # elements per Hadamard block (power of two)
+
+
+def _wht_inplace(v: jax.Array) -> jax.Array:
+    """Normalized fast Walsh–Hadamard transform along the last axis.
+
+    v: [..., H] with H a power of two. log2(H) butterfly stages expressed
+    as reshape + stack (in-register on TPU; no strided loads).
+    """
+    h = v.shape[-1]
+    lead = v.shape[:-1]
+    n = 1
+    while n < h:
+        v = v.reshape(lead + (h // (2 * n), 2, n))
+        a = v[..., 0, :]
+        b = v[..., 1, :]
+        v = jnp.stack((a + b, a - b), axis=-2)
+        n *= 2
+    v = v.reshape(lead + (h,))
+    return v / jnp.sqrt(jnp.asarray(h, jnp.float32))
+
+
+def _quant_kernel(x_ref, sign_ref, q_ref, scale_ref):
+    x = x_ref[...].astype(jnp.float32) * sign_ref[...].astype(jnp.float32)
+    y = _wht_inplace(x)
+    s = jnp.max(jnp.abs(y), axis=-1, keepdims=True)
+    safe = jnp.where(s > 0.0, s, 1.0)
+    q = jnp.clip(jnp.round(y / safe * 127.0), -127.0, 127.0)
+    q_ref[...] = q.astype(jnp.int8)
+    scale_ref[...] = s[..., 0]
+
+
+def _dequant_kernel(q_ref, scale_ref, sign_ref, x_ref):
+    y = q_ref[...].astype(jnp.float32) / 127.0 * scale_ref[...][..., None]
+    x = _wht_inplace(y)  # H is symmetric + orthogonal (normalized): self-inverse
+    x_ref[...] = x * sign_ref[...].astype(jnp.float32)
+
+
+def _block_specs(nblocks_tile: int, block: int):
+    return [
+        pl.BlockSpec((nblocks_tile, block), lambda i: (i, 0)),
+    ]
+
+
+def hadamard_quantize(
+    x: jax.Array, signs: jax.Array, block: int = DEFAULT_BLOCK
+) -> tuple[jax.Array, jax.Array]:
+    """Quantize a flat f32 vector.
+
+    Args:
+      x:     [L] flat parameters; L is padded to a multiple of ``block``.
+      signs: [L_padded] ±1 Rademacher diagonal (shared with the decoder;
+             the Rust side derives it from the round seed).
+
+    Returns (q [nblocks, block] int8, scales [nblocks] f32).
+    """
+    (l,) = x.shape
+    pad = (-l) % block
+    xp = jnp.pad(x, (0, pad)).reshape((-1, block))
+    nb = xp.shape[0]
+    sg = signs.reshape((-1, block))
+    assert sg.shape[0] == nb, (sg.shape, nb)
+
+    q, scales = pl.pallas_call(
+        _quant_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, block), jnp.int8),
+            jax.ShapeDtypeStruct((nb,), jnp.float32),
+        ],
+        interpret=True,
+    )(xp, sg)
+    return q, scales
+
+
+def hadamard_dequantize(
+    q: jax.Array, scales: jax.Array, signs: jax.Array, length: int
+) -> jax.Array:
+    """Inverse of :func:`hadamard_quantize`; returns [length] f32."""
+    nb, block = q.shape
+    sg = signs.reshape((nb, block))
+    x = pl.pallas_call(
+        _dequant_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, block), jnp.float32),
+        interpret=True,
+    )(q, scales, sg)
+    return x.reshape((-1,))[:length]
+
+
+def roundtrip(x: jax.Array, signs: jax.Array, block: int = DEFAULT_BLOCK) -> jax.Array:
+    """quantize → dequantize (the fused artifact exported by aot.py)."""
+    q, s = hadamard_quantize(x, signs, block)
+    return hadamard_dequantize(q, s, signs, x.shape[0])

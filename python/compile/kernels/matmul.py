@@ -1,0 +1,246 @@
+"""L1 Pallas kernel: tiled matmul with fused bias + activation + unit mask.
+
+This single kernel backs every dense contraction in the AFD models:
+
+* fully-connected layers (FEMNIST CNN head, LSTM output heads),
+* convolutions (lowered to im2col + matmul in ``model.py``),
+* LSTM gate pre-activations (``x @ Wx + h @ Wh + b``).
+
+The *unit mask* is how Adaptive Federated Dropout's sub-models reach the
+compute layer: a 0/1 vector over output units multiplies the activated
+output, so dropped units produce exactly zero and (through autodiff /
+the custom VJP below) receive exactly-zero gradients for every incident
+weight — numerically identical to training the reduced architecture the
+server logically shipped.
+
+TPU idiom (see DESIGN.md §Hardware-Adaptation): the kernel tiles
+M×N×K into VMEM-sized blocks (default 128×128×128 — MXU-aligned), loops
+K on the innermost grid axis accumulating into the revisited output
+block, and fuses bias/activation/mask into the final-K epilogue so the
+output makes a single HBM round-trip. On this image it must be lowered
+with ``interpret=True`` (CPU PJRT cannot execute Mosaic custom-calls);
+the structure is nevertheless what a real TPU lowering would want.
+
+Correctness oracle: ``ref.matmul_ref`` (pure jnp), swept by
+``python/tests/test_kernel_matmul.py`` (hypothesis over shapes/dtypes).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Activation codes shared with ref.py and the AOT manifest.
+ACTIVATIONS = ("none", "relu", "sigmoid", "tanh")
+
+# Tile defaults, tuned in the §Perf pass (EXPERIMENTS.md): on CPU-PJRT
+# interpret-mode the grid loop dominates, so larger M/K tiles (fewer
+# grid steps over the im2col'd conv rows) beat the MXU-shaped 128³
+# starting point by ~14% end-to-end on the FEMNIST train step. On a real
+# TPU these would be VMEM-budgeted (see DESIGN.md §Hardware-Adaptation).
+DEFAULT_BLOCK_M = 512
+DEFAULT_BLOCK_N = 128
+DEFAULT_BLOCK_K = 512
+
+
+def _apply_activation(z: jax.Array, activation: str) -> jax.Array:
+    if activation == "none":
+        return z
+    if activation == "relu":
+        return jnp.maximum(z, 0.0)
+    if activation == "sigmoid":
+        return jax.nn.sigmoid(z)
+    if activation == "tanh":
+        return jnp.tanh(z)
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+def _activation_grad_from_output(a: jax.Array, activation: str) -> jax.Array:
+    """d act(z) / dz expressed through the *output* a = act(z).
+
+    Using the output avoids stashing the pre-activation as a residual
+    (one fewer M×N tensor on the backward HBM path).
+    """
+    if activation == "none":
+        return jnp.ones_like(a)
+    if activation == "relu":
+        return (a > 0.0).astype(a.dtype)
+    if activation == "sigmoid":
+        return a * (1.0 - a)
+    if activation == "tanh":
+        return 1.0 - a * a
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+def _matmul_kernel(x_ref, w_ref, b_ref, m_ref, o_ref, *, nk: int, activation: str):
+    """Grid = (M/bm, N/bn, K/bk); o block revisited along k (accumulator)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        z = o_ref[...] + b_ref[...].astype(jnp.float32)[None, :]
+        a = _apply_activation(z, activation)
+        o_ref[...] = a * m_ref[...].astype(jnp.float32)[None, :]
+
+
+def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _matmul_fwd_raw(
+    x: jax.Array,
+    w: jax.Array,
+    bias: jax.Array,
+    mask: jax.Array,
+    activation: str,
+    block_m: int,
+    block_n: int,
+    block_k: int,
+) -> jax.Array:
+    """Pallas forward on padded operands; returns f32 [M, N]."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+
+    bm = min(block_m, max(8, m))
+    bn = min(block_n, max(8, n))
+    bk = min(block_k, max(8, k))
+
+    xp = _pad_to(_pad_to(x, 0, bm), 1, bk)
+    wp = _pad_to(_pad_to(w, 0, bk), 1, bn)
+    bp = _pad_to(bias, 0, bn)
+    mp = _pad_to(mask, 0, bn)
+
+    mp_, kp_ = xp.shape
+    _, np_ = wp.shape
+    nk = kp_ // bk
+    grid = (mp_ // bm, np_ // bn, nk)
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk, activation=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp_, np_), jnp.float32),
+        interpret=True,  # CPU PJRT: Mosaic custom-calls are not executable
+    )(xp, wp, bp, mp)
+    return out[:m, :n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def matmul(
+    x: jax.Array,
+    w: jax.Array,
+    bias: jax.Array,
+    mask: jax.Array,
+    activation: str = "none",
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_k: int = DEFAULT_BLOCK_K,
+) -> jax.Array:
+    """``mask * act(x @ w + bias)`` via the Pallas kernel.
+
+    Args:
+      x:    [M, K] input (f32 or bf16).
+      w:    [K, N] weights.
+      bias: [N].
+      mask: [N] 0/1 unit mask (AFD sub-model selection); not differentiated.
+      activation: one of ``ACTIVATIONS``.
+
+    Returns [M, N] in x.dtype.
+    """
+    out = _matmul_fwd_raw(x, w, bias, mask, activation, block_m, block_n, block_k)
+    return out.astype(x.dtype)
+
+
+def _matmul_vjp_fwd(x, w, bias, mask, activation, block_m, block_n, block_k):
+    a = _matmul_fwd_raw(x, w, bias, mask, activation, block_m, block_n, block_k)
+    # Residuals: inputs + the *masked activated output* a (mask is 0/1 so the
+    # activation-derivative-from-output trick still works on masked units:
+    # their cotangent is zeroed by the mask factor anyway).
+    return a.astype(x.dtype), (x, w, mask, a)
+
+
+def _matmul_vjp_bwd(activation, block_m, block_n, block_k, residuals, g):
+    x, w, mask, a = residuals
+    gf = g.astype(jnp.float32) * mask.astype(jnp.float32)[None, :]
+    # For masked units a == 0; relu'(0) = 0, sigmoid'(0-output) etc. are
+    # scaled by gf == 0, so dz is exact.
+    dz = gf * _activation_grad_from_output(a, activation)
+    ones = jnp.ones((), jnp.float32)
+    # dx = dz @ w.T  — reuse the Pallas kernel (no bias/act/mask).
+    dx = _matmul_fwd_raw(
+        dz,
+        w.astype(jnp.float32).T,
+        jnp.zeros((w.shape[0],), jnp.float32),
+        jnp.broadcast_to(ones, (w.shape[0],)),
+        "none",
+        block_m,
+        block_n,
+        block_k,
+    )
+    # dw = x.T @ dz
+    dw = _matmul_fwd_raw(
+        x.astype(jnp.float32).T,
+        dz,
+        jnp.zeros((dz.shape[1],), jnp.float32),
+        jnp.broadcast_to(ones, (dz.shape[1],)),
+        "none",
+        block_m,
+        block_n,
+        block_k,
+    )
+    db = jnp.sum(dz, axis=0)
+    return (
+        dx.astype(x.dtype),
+        dw.astype(w.dtype),
+        db.astype(x.dtype),
+        None,  # mask: not differentiated
+    )
+
+
+matmul.defvjp(_matmul_vjp_fwd, _matmul_vjp_bwd)
+
+
+def dense(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    mask: Optional[jax.Array] = None,
+    activation: str = "none",
+) -> jax.Array:
+    """Convenience wrapper: dense layer over the Pallas kernel.
+
+    Accepts inputs of rank >= 2; contracts the last axis.
+    """
+    if mask is None:
+        mask = jnp.ones((w.shape[1],), x.dtype)
+    lead = x.shape[:-1]
+    x2 = x.reshape((-1, x.shape[-1]))
+    y = matmul(x2, w, b, mask, activation)
+    return y.reshape(lead + (w.shape[1],))

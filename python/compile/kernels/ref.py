@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel must agree
+with its oracle to float tolerance across the shape/dtype sweep in
+``python/tests/``. They are also used by ``model.py --ref`` to build a
+kernel-free copy of each model for end-to-end numerical comparison.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def activation_ref(z: jax.Array, activation: str) -> jax.Array:
+    if activation == "none":
+        return z
+    if activation == "relu":
+        return jnp.maximum(z, 0.0)
+    if activation == "sigmoid":
+        return jax.nn.sigmoid(z)
+    if activation == "tanh":
+        return jnp.tanh(z)
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+def matmul_ref(
+    x: jax.Array,
+    w: jax.Array,
+    bias: jax.Array,
+    mask: jax.Array,
+    activation: str = "none",
+) -> jax.Array:
+    """Oracle for kernels.matmul.matmul: mask * act(x @ w + bias)."""
+    z = (
+        jnp.dot(
+            x.astype(jnp.float32),
+            w.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        + bias.astype(jnp.float32)[None, :]
+    )
+    a = activation_ref(z, activation)
+    return (a * mask.astype(jnp.float32)[None, :]).astype(x.dtype)
+
+
+def dense_ref(x, w, b, mask=None, activation="none"):
+    if mask is None:
+        mask = jnp.ones((w.shape[1],), x.dtype)
+    lead = x.shape[:-1]
+    y = matmul_ref(x.reshape((-1, x.shape[-1])), w, b, mask, activation)
+    return y.reshape(lead + (w.shape[1],))
+
+
+def hadamard_matrix(h: int) -> jax.Array:
+    """Explicit normalized Walsh–Hadamard matrix (Sylvester construction)."""
+    assert h & (h - 1) == 0 and h > 0, f"H must be a power of two, got {h}"
+    m = jnp.ones((1, 1), jnp.float32)
+    while m.shape[0] < h:
+        m = jnp.block([[m, m], [m, -m]])
+    return m / jnp.sqrt(jnp.asarray(h, jnp.float32))
+
+
+def hadamard_quantize_ref(x: jax.Array, signs: jax.Array, block: int = 256):
+    """Oracle for kernels.hadamard_quant.hadamard_quantize."""
+    (l,) = x.shape
+    pad = (-l) % block
+    xp = jnp.pad(x, (0, pad)).reshape((-1, block))
+    sg = signs.reshape((-1, block))
+    hm = hadamard_matrix(block)
+    y = (xp * sg) @ hm.T  # rows transformed
+    s = jnp.max(jnp.abs(y), axis=-1)
+    safe = jnp.where(s > 0.0, s, 1.0)
+    q = jnp.clip(jnp.round(y / safe[:, None] * 127.0), -127.0, 127.0).astype(jnp.int8)
+    return q, s
+
+
+def hadamard_dequantize_ref(q: jax.Array, scales: jax.Array, signs: jax.Array, length: int):
+    nb, block = q.shape
+    hm = hadamard_matrix(block)
+    y = q.astype(jnp.float32) / 127.0 * scales[:, None]
+    x = (y @ hm.T) * signs.reshape((nb, block))
+    return x.reshape((-1,))[:length]

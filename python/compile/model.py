@@ -1,0 +1,455 @@
+"""L2: the paper's models in JAX, every contraction through the L1 Pallas kernel.
+
+Three models (Experimental Setup §):
+
+* **FEMNIST CNN** — conv5x5(c1) → maxpool2 → conv5x5(c2) → maxpool2 →
+  dense(d) → softmax head. Convolutions are lowered to **im2col + the
+  Pallas masked matmul**, so AFD's filter masks reach the kernel as the
+  matmul's output-unit mask.
+* **Shakespeare char-LSTM** — embedding → 2×LSTM → dense head over the
+  last hidden state. AFD masks apply to the **non-recurrent**
+  connections only (the per-layer outputs flowing upward), preserving
+  the recurrent memory path per Zaremba et al. '14 / the paper's RNN
+  rule.
+* **Sent140 LSTM** — frozen (GloVe-like) embedding → 2×LSTM → 2-class
+  head; identical masking rule.
+
+Masking semantics: a sub-model is the full model with 0/1 unit masks.
+Dropped units output exactly 0 and every incident weight receives an
+exactly-zero gradient (see kernels/matmul.py), so SGD on the masked
+model ≡ SGD on the reduced architecture the server logically shipped.
+`python/tests/test_mask_gradients.py` asserts this invariant.
+
+The exported functions are *flat-argument* (params..., masks..., data)
+so `aot.py` can lower them with a stable argument order recorded in the
+manifest the Rust coordinator reads.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import matmul as mk
+from .kernels import ref as kref
+from .variants import CnnCfg, LstmCfg, Variant
+
+Params = tuple  # tuple of jnp arrays, ordered per ParamSpec list
+Masks = tuple   # tuple of jnp arrays, ordered per MaskSpec list
+
+
+# --------------------------------------------------------------------------
+# Specs: the single source of truth for parameter layout / packing metadata.
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisPack:
+    """How one axis of a parameter packs under a mask group.
+
+    ``count`` units of group ``group`` tile this axis ``repeat`` times
+    (e.g. the flattened conv features entering the CNN dense layer repeat
+    each channel H*W times, channel-fastest). Packed axis length =
+    kept(group) * repeat (+ ``fixed`` untouched rows, e.g. the embedding
+    part of an LSTM input block).
+    """
+
+    group: str
+    count: int
+    repeat: int = 1
+    fixed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    name: str
+    shape: tuple
+    trainable: bool = True
+    transmit: bool = True            # frozen GloVe embeddings are pre-shipped
+    rows: AxisPack | None = None     # packing along axis 0
+    cols: AxisPack | None = None     # packing along axis 1 (or 0 for biases)
+    flops_per_sample: float = 0.0    # full-model MACs*2 attributed to this param
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape))
+
+
+@dataclasses.dataclass(frozen=True)
+class MaskSpec:
+    name: str
+    size: int
+    kind: str  # "conv_filters" | "dense_units" | "lstm_units"
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelDef:
+    variant: Variant
+    params: tuple
+    masks: tuple
+    apply_fn: Callable  # (params, masks, x) -> logits
+    input_shape: tuple  # one sample, e.g. (28, 28, 1) or (seq,) int32
+    input_dtype: str    # "f32" | "i32"
+
+    @property
+    def num_params(self) -> int:
+        return sum(p.size for p in self.params)
+
+
+# --------------------------------------------------------------------------
+# CNN (FEMNIST)
+# --------------------------------------------------------------------------
+
+
+def _im2col(x: jax.Array, k: int) -> jax.Array:
+    """SAME-padded im2col: [B,H,W,C] -> [B*H*W, k*k*C] (dy,dx slow; C fast)."""
+    b, h, w, c = x.shape
+    p = k // 2
+    xp = jnp.pad(x, ((0, 0), (p, p), (p, p), (0, 0)))
+    cols = []
+    for dy in range(k):
+        for dx in range(k):
+            cols.append(xp[:, dy : dy + h, dx : dx + w, :])
+    patches = jnp.concatenate(cols, axis=-1)  # [B,H,W,k*k*C]
+    return patches.reshape(b * h * w, k * k * c)
+
+
+def _maxpool2(x: jax.Array) -> jax.Array:
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def _conv_pallas(x, w, b, mask, use_ref=False):
+    """conv2d(SAME) = im2col + Pallas masked matmul; mask = filter mask."""
+    bsz, h, ww, _ = x.shape
+    k = w.shape[0]
+    cout = w.shape[3]
+    cols = _im2col(x, k)                       # [B*H*W, k*k*Cin]
+    wr = w.reshape(-1, cout)                   # rows: (dy, dx, cin) — matches im2col
+    f = kref.matmul_ref if use_ref else mk.matmul
+    y = f(cols, wr, b, mask, "relu")
+    return y.reshape(bsz, h, ww, cout)
+
+
+def cnn_specs(cfg: CnnCfg) -> tuple[tuple, tuple]:
+    k, c1, c2, d = cfg.kernel, cfg.conv1, cfg.conv2, cfg.dense
+    img = cfg.image
+    pooled = img // 4
+    feat = pooled * pooled * c2
+    # MACs*2 per sample (conv: per output pixel per filter k*k*cin*2)
+    f_conv1 = 2.0 * img * img * c1 * k * k * cfg.channels
+    f_conv2 = 2.0 * (img // 2) ** 2 * c2 * k * k * c1
+    f_dense = 2.0 * feat * d
+    f_head = 2.0 * d * cfg.classes
+    params = (
+        ParamSpec("conv1_w", (k, k, cfg.channels, c1),
+                  cols=AxisPack("conv1", c1), flops_per_sample=f_conv1),
+        ParamSpec("conv1_b", (c1,), cols=AxisPack("conv1", c1)),
+        ParamSpec("conv2_w", (k, k, c1, c2),
+                  rows=AxisPack("conv1", c1, repeat=k * k),
+                  cols=AxisPack("conv2", c2), flops_per_sample=f_conv2),
+        ParamSpec("conv2_b", (c2,), cols=AxisPack("conv2", c2)),
+        ParamSpec("dense_w", (feat, d),
+                  rows=AxisPack("conv2", c2, repeat=pooled * pooled),
+                  cols=AxisPack("dense", d), flops_per_sample=f_dense),
+        ParamSpec("dense_b", (d,), cols=AxisPack("dense", d)),
+        # Output layer always kept intact (paper: input/output layers intact).
+        ParamSpec("head_w", (d, cfg.classes),
+                  rows=AxisPack("dense", d), flops_per_sample=f_head),
+        ParamSpec("head_b", (cfg.classes,)),
+    )
+    masks = (
+        MaskSpec("conv1", c1, "conv_filters"),
+        MaskSpec("conv2", c2, "conv_filters"),
+        MaskSpec("dense", d, "dense_units"),
+    )
+    return params, masks
+
+
+def cnn_apply(cfg: CnnCfg, params: Params, masks: Masks, x: jax.Array,
+              use_ref: bool = False) -> jax.Array:
+    """x: [B, H, W, C] f32 -> logits [B, classes]."""
+    c1w, c1b, c2w, c2b, dw, db, hw, hb = params
+    m1, m2, md = masks
+    f = kref.matmul_ref if use_ref else mk.matmul
+    y = _conv_pallas(x, c1w, c1b, m1, use_ref)        # [B,H,W,c1]
+    y = _maxpool2(y)
+    y = _conv_pallas(y, c2w, c2b, m2, use_ref)        # [B,H/2,W/2,c2]
+    y = _maxpool2(y)
+    b = y.shape[0]
+    y = y.reshape(b, -1)                              # channel-fastest flatten
+    y = f(y, dw, db, md, "relu")                      # [B,d]
+    ones = jnp.ones((hw.shape[1],), jnp.float32)
+    return f(y, hw, hb, ones, "none")                 # logits
+
+
+def cnn_init(cfg: CnnCfg, seed: int) -> list[np.ndarray]:
+    rng = np.random.default_rng(seed)
+    k, c1, c2, d = cfg.kernel, cfg.conv1, cfg.conv2, cfg.dense
+    feat = (cfg.image // 4) ** 2 * c2
+
+    def glorot(shape, fan_in, fan_out):
+        lim = np.sqrt(6.0 / (fan_in + fan_out))
+        return rng.uniform(-lim, lim, size=shape).astype(np.float32)
+
+    return [
+        glorot((k, k, cfg.channels, c1), k * k * cfg.channels, c1),
+        np.zeros((c1,), np.float32),
+        glorot((k, k, c1, c2), k * k * c1, c2),
+        np.zeros((c2,), np.float32),
+        glorot((feat, d), feat, d),
+        np.zeros((d,), np.float32),
+        glorot((d, cfg.classes), d, cfg.classes),
+        np.zeros((cfg.classes,), np.float32),
+    ]
+
+
+# --------------------------------------------------------------------------
+# LSTM (Shakespeare / Sent140)
+# --------------------------------------------------------------------------
+
+
+def _lstm_layer(xs, w, b, hidden: int, use_ref: bool = False):
+    """xs: [T, B, D] -> hs: [T, B, H]. Gates via the Pallas kernel.
+
+    Gate order: i, f, g, o. Forget-gate bias +1 at init time (see
+    lstm_init), not in the graph.
+    """
+    t, bsz, _ = xs.shape
+    ones = jnp.ones((4 * hidden,), jnp.float32)
+    f = kref.matmul_ref if use_ref else mk.matmul
+
+    def step(carry, x_t):
+        c, h = carry
+        z = f(jnp.concatenate([x_t, h], axis=1), w, b, ones, "none")
+        i, fg, g, o = jnp.split(z, 4, axis=1)
+        c = jax.nn.sigmoid(i) * jnp.tanh(g) + jax.nn.sigmoid(fg) * c
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (c, h), h
+
+    init = (
+        jnp.zeros((bsz, hidden), jnp.float32),
+        jnp.zeros((bsz, hidden), jnp.float32),
+    )
+    _, hs = jax.lax.scan(step, init, xs)
+    return hs
+
+
+def lstm_specs(cfg: LstmCfg) -> tuple[tuple, tuple]:
+    h, e = cfg.hidden, cfg.embed
+    # flops per sample: seq * (2*(D+H)*4H) per layer + head
+    f_l1 = 2.0 * cfg.seq * (e + h) * 4 * h
+    f_l2 = 2.0 * cfg.seq * (h + h) * 4 * h
+    f_head = 2.0 * h * cfg.classes
+    params = (
+        ParamSpec("embed", (cfg.vocab, e),
+                  trainable=not cfg.frozen_embed,
+                  transmit=not cfg.frozen_embed),
+        # Input block rows [0:D] = upward connections (maskable by the
+        # *previous* layer's mask); rows [D:D+H] = recurrent, never masked.
+        ParamSpec("lstm1_w", (e + h, 4 * h), flops_per_sample=f_l1),
+        ParamSpec("lstm1_b", (4 * h,)),
+        ParamSpec("lstm2_w", (h + h, 4 * h),
+                  rows=AxisPack("lstm1", h, fixed=h), flops_per_sample=f_l2),
+        ParamSpec("lstm2_b", (4 * h,)),
+        ParamSpec("head_w", (h, cfg.classes),
+                  rows=AxisPack("lstm2", h), flops_per_sample=f_head),
+        ParamSpec("head_b", (cfg.classes,)),
+    )
+    masks = (
+        MaskSpec("lstm1", h, "lstm_units"),
+        MaskSpec("lstm2", h, "lstm_units"),
+    )
+    return params, masks
+
+
+def lstm_apply(cfg: LstmCfg, params: Params, masks: Masks, x: jax.Array,
+               use_ref: bool = False) -> jax.Array:
+    """x: [B, T] int32 token ids -> logits [B, classes].
+
+    Masks multiply each layer's *upward* output (non-recurrent
+    connections only): the in-layer recurrence sees the unmasked h.
+    """
+    embed, w1, b1, w2, b2, hw, hb = params
+    m1, m2 = masks
+    f = kref.matmul_ref if use_ref else mk.matmul
+    emb = jnp.take(embed, x, axis=0)           # [B,T,E]
+    xs = jnp.transpose(emb, (1, 0, 2))         # [T,B,E]
+    h1 = _lstm_layer(xs, w1, b1, cfg.hidden, use_ref)
+    h1_up = h1 * m1[None, None, :]             # mask non-recurrent path
+    h2 = _lstm_layer(h1_up, w2, b2, cfg.hidden, use_ref)
+    last = h2[-1] * m2[None, :]
+    ones = jnp.ones((hw.shape[1],), jnp.float32)
+    return f(last, hw, hb, ones, "none")
+
+
+def lstm_init(cfg: LstmCfg, seed: int) -> list[np.ndarray]:
+    rng = np.random.default_rng(seed)
+    h, e = cfg.hidden, cfg.embed
+
+    def glorot(shape, fan_in, fan_out):
+        lim = np.sqrt(6.0 / (fan_in + fan_out))
+        return rng.uniform(-lim, lim, size=shape).astype(np.float32)
+
+    def gate_bias():
+        b = np.zeros((4 * h,), np.float32)
+        b[h : 2 * h] = 1.0  # forget-gate bias
+        return b
+
+    if cfg.frozen_embed:
+        # Deterministic "pretrained GloVe-like" table: unit-norm gaussian
+        # rows seeded independently of model init (ships with the app).
+        #
+        # Real GloVe vectors carry sentiment structure — that latent
+        # signal is what makes the paper's frozen-embedding Sent140 model
+        # trainable at all. We emulate it: token ids 1..20 (the positive
+        # lexicon, by convention shared with the Rust data generator) get
+        # a +µ component along a fixed latent axis, ids 21..40 (negative
+        # lexicon) get −µ; everything else is unstructured. See
+        # DESIGN.md §2 (Sent140 substitution).
+        erng = np.random.default_rng(0x610E)  # "GlOvE"
+        embed = erng.normal(size=(cfg.vocab, e)).astype(np.float32)
+        axis = erng.normal(size=(e,)).astype(np.float32)
+        axis /= np.linalg.norm(axis)
+        mu = 2.0
+        embed[1:21] += mu * axis
+        embed[21:41] -= mu * axis
+        embed /= np.maximum(np.linalg.norm(embed, axis=1, keepdims=True), 1e-6)
+    else:
+        embed = (rng.normal(size=(cfg.vocab, e)) * 0.1).astype(np.float32)
+    return [
+        embed,
+        glorot((e + h, 4 * h), e + h, 4 * h),
+        gate_bias(),
+        glorot((h + h, 4 * h), 2 * h, 4 * h),
+        gate_bias(),
+        glorot((h, cfg.classes), h, cfg.classes),
+        np.zeros((cfg.classes,), np.float32),
+    ]
+
+
+# --------------------------------------------------------------------------
+# Model registry + train/eval step builders
+# --------------------------------------------------------------------------
+
+
+def build(variant: Variant, use_ref: bool = False) -> ModelDef:
+    if variant.kind == "cnn":
+        cfg = variant.cfg
+        params, masks = cnn_specs(cfg)
+        apply_fn = functools.partial(cnn_apply, cfg, use_ref=use_ref)
+        input_shape = (cfg.image, cfg.image, cfg.channels)
+        input_dtype = "f32"
+    elif variant.kind == "lstm":
+        cfg = variant.cfg
+        params, masks = lstm_specs(cfg)
+        apply_fn = functools.partial(lstm_apply, cfg, use_ref=use_ref)
+        input_shape = (cfg.seq,)
+        input_dtype = "i32"
+    else:
+        raise ValueError(variant.kind)
+    return ModelDef(variant, params, masks, apply_fn, input_shape, input_dtype)
+
+
+def init_params(model: ModelDef, seed: int = 0) -> list[np.ndarray]:
+    if model.variant.kind == "cnn":
+        return cnn_init(model.variant.cfg, seed)
+    return lstm_init(model.variant.cfg, seed)
+
+
+def xent_loss(logits: jax.Array, y: jax.Array) -> jax.Array:
+    """Mean softmax cross-entropy; y int32 labels."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - picked)
+
+
+def make_train_step(model: ModelDef):
+    """One local epoch: lax.scan of SGD steps over the round's batches.
+
+    Flat signature (AOT argument order, mirrored in the manifest):
+      (*params, *masks, xs, ys, lr) ->
+      (*updated_params, mean_loss)
+
+    xs: [num_batches, B, *input_shape]; ys: [num_batches, B] i32;
+    lr: scalar f32.
+    """
+    np_, ng = len(model.params), len(model.masks)
+    trainable = tuple(p.trainable for p in model.params)
+    apply_fn = model.apply_fn
+
+    def train_step(*args):
+        params = args[:np_]
+        masks = args[np_ : np_ + ng]
+        xs, ys, lr = args[np_ + ng :]
+
+        def loss_fn(ps, x, y):
+            return xent_loss(apply_fn(ps, masks, x), y)
+
+        def body(ps, batch):
+            x, y = batch
+            loss, grads = jax.value_and_grad(loss_fn)(ps, x, y)
+            new = tuple(
+                p - lr * g if tr else p
+                for p, g, tr in zip(ps, grads, trainable)
+            )
+            return new, loss
+
+        out, losses = jax.lax.scan(body, tuple(params), (xs, ys))
+        return (*out, jnp.mean(losses))
+
+    return train_step
+
+
+def make_eval_step(model: ModelDef):
+    """Full-model evaluation over one batch.
+
+    (*params, x, y) -> (loss_sum, correct_count)  both f32 scalars.
+    """
+    np_ = len(model.params)
+    ones = tuple(jnp.ones((m.size,), jnp.float32) for m in model.masks)
+    apply_fn = model.apply_fn
+
+    def eval_step(*args):
+        params = args[:np_]
+        x, y = args[np_:]
+        logits = apply_fn(params, ones, x)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+        loss_sum = jnp.sum(logz - picked)
+        correct = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+        return loss_sum, correct
+
+    return eval_step
+
+
+def example_args_train(model: ModelDef, seed: int = 0):
+    """ShapeDtypeStructs for lowering the train step."""
+    v = model.variant
+    sds = []
+    for p in model.params:
+        sds.append(jax.ShapeDtypeStruct(p.shape, jnp.float32))
+    for m in model.masks:
+        sds.append(jax.ShapeDtypeStruct((m.size,), jnp.float32))
+    xdt = jnp.float32 if model.input_dtype == "f32" else jnp.int32
+    sds.append(
+        jax.ShapeDtypeStruct((v.num_batches, v.batch_size) + model.input_shape, xdt)
+    )
+    sds.append(jax.ShapeDtypeStruct((v.num_batches, v.batch_size), jnp.int32))
+    sds.append(jax.ShapeDtypeStruct((), jnp.float32))
+    return sds
+
+
+def example_args_eval(model: ModelDef):
+    v = model.variant
+    sds = [jax.ShapeDtypeStruct(p.shape, jnp.float32) for p in model.params]
+    xdt = jnp.float32 if model.input_dtype == "f32" else jnp.int32
+    sds.append(jax.ShapeDtypeStruct((v.batch_size,) + model.input_shape, xdt))
+    sds.append(jax.ShapeDtypeStruct((v.batch_size,), jnp.int32))
+    return sds

@@ -1,0 +1,152 @@
+"""Model/dataset variant registry shared by model.py, aot.py and the tests.
+
+A *variant* pins every shape the AOT pipeline needs: the model
+architecture (paper-scale or a CPU-budget `small` scale), the federated
+round geometry (batch size, batches per local epoch) and the
+paper's grid-searched learning rate. The Rust coordinator discovers all
+of this through ``artifacts/manifest.json`` — nothing here is duplicated
+on the Rust side.
+
+Paper setups (Experimental Setup §):
+  * FEMNIST   — CNN: 2×conv5x5 (32, 64) + 2×2 maxpool each, dense 2048,
+                softmax 62; lr 0.004.
+  * Shakespeare — 8-d embedding → 2×LSTM-256 → dense-53, seq 80; lr 0.08.
+  * Sent140   — frozen 300-d GloVe → 2×LSTM-100 → dense-2, seq 25; lr 0.001.
+  * batch size 10, one local epoch per round.
+
+`small` variants shrink widths/sequence lengths so that the full
+federated simulation (hundreds of rounds × tens of clients) runs in
+CPU-PJRT budget; the *structure* (layer types, mask groups, packing
+rules) is identical, which is what the reproduction's claims rest on.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class CnnCfg:
+    image: int = 28
+    channels: int = 1
+    conv1: int = 32
+    conv2: int = 64
+    kernel: int = 5
+    dense: int = 2048
+    classes: int = 62
+
+
+@dataclasses.dataclass(frozen=True)
+class LstmCfg:
+    vocab: int = 53
+    embed: int = 8
+    hidden: int = 256
+    layers: int = 2
+    seq: int = 80
+    classes: int = 53
+    frozen_embed: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class Variant:
+    name: str
+    kind: str                 # "cnn" | "lstm"
+    dataset: str              # "femnist" | "shakespeare" | "sent140"
+    cfg: object
+    lr: float
+    batch_size: int = 10      # paper: B = 10
+    num_batches: int = 5      # batches per local epoch (fixed per artifact)
+
+    @property
+    def samples_per_round(self) -> int:
+        return self.batch_size * self.num_batches
+
+
+VARIANTS: dict[str, Variant] = {}
+
+
+def _register(v: Variant) -> Variant:
+    VARIANTS[v.name] = v
+    return v
+
+
+# ----------------------------------------------------------------- FEMNIST
+_register(
+    Variant(
+        name="femnist_small",
+        kind="cnn",
+        dataset="femnist",
+        cfg=CnnCfg(image=28, conv1=8, conv2=16, dense=128, classes=10),
+        lr=0.02,  # smaller model trains best slightly hotter; grid-searched
+    )
+)
+_register(
+    Variant(
+        name="femnist_paper",
+        kind="cnn",
+        dataset="femnist",
+        cfg=CnnCfg(),  # paper shapes
+        lr=0.004,
+    )
+)
+
+# ------------------------------------------------------------- Shakespeare
+_register(
+    Variant(
+        name="shakespeare_small",
+        kind="lstm",
+        dataset="shakespeare",
+        cfg=LstmCfg(vocab=53, embed=8, hidden=64, layers=2, seq=20, classes=53),
+        lr=0.3,  # char-LSTMs at this scale need a hot lr (paper used 0.08 @ 256)
+        num_batches=10,  # LEAF shakespeare clients hold 100s of windows
+    )
+)
+_register(
+    Variant(
+        name="shakespeare_paper",
+        kind="lstm",
+        dataset="shakespeare",
+        cfg=LstmCfg(vocab=53, embed=8, hidden=256, layers=2, seq=80, classes=53),
+        lr=0.08,
+    )
+)
+
+# ---------------------------------------------------------------- Sent140
+_register(
+    Variant(
+        name="sent140_small",
+        kind="lstm",
+        dataset="sent140",
+        cfg=LstmCfg(
+            vocab=2000, embed=50, hidden=32, layers=2, seq=25, classes=2,
+            frozen_embed=True,
+        ),
+        lr=0.2,
+        num_batches=10,
+    )
+)
+_register(
+    Variant(
+        name="sent140_paper",
+        kind="lstm",
+        dataset="sent140",
+        cfg=LstmCfg(
+            vocab=10000, embed=300, hidden=100, layers=2, seq=25, classes=2,
+            frozen_embed=True,
+        ),
+        lr=0.001,
+    )
+)
+
+# Variants lowered by default (`make artifacts`); paper-scale ones are
+# produced with `python -m compile.aot --paper` and exist to prove the
+# full-size models lower + to size the §Perf roofline estimates.
+DEFAULT_VARIANTS = ("femnist_small", "shakespeare_small", "sent140_small")
+PAPER_VARIANTS = ("femnist_paper", "shakespeare_paper", "sent140_paper")
+
+
+def get(name: str) -> Variant:
+    if name not in VARIANTS:
+        raise KeyError(f"unknown variant {name!r}; have {sorted(VARIANTS)}")
+    return VARIANTS[name]

@@ -1,0 +1,86 @@
+"""L1 correctness: Pallas Hadamard+8-bit quantization vs the jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import hadamard_quant as hq
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _case(seed, length, block, scale=1.0):
+    rng = np.random.default_rng(seed)
+    x = (rng.normal(size=(length,)) * scale).astype(np.float32)
+    padded = length + ((-length) % block)
+    signs = rng.choice([-1.0, 1.0], size=(padded,)).astype(np.float32)
+    return jnp.asarray(x), jnp.asarray(signs)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    length=st.integers(1, 3000),
+    block=st.sampled_from([16, 64, 256]),
+)
+def test_quantize_matches_ref(seed, length, block):
+    x, signs = _case(seed, length, block)
+    q, s = hq.hadamard_quantize(x, signs, block)
+    qr, sr = ref.hadamard_quantize_ref(x, signs, block)
+    np.testing.assert_allclose(s, sr, rtol=1e-5, atol=1e-6)
+    # Round-to-nearest ties may fall either way across implementations:
+    # allow off-by-one on the int8 grid.
+    assert int(jnp.max(jnp.abs(q.astype(jnp.int32) - qr.astype(jnp.int32)))) <= 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    length=st.integers(1, 3000),
+    block=st.sampled_from([16, 64, 256]),
+    scale=st.sampled_from([1e-3, 1.0, 1e3]),
+)
+def test_roundtrip_error_bound(seed, length, block, scale):
+    """Quantization error per coordinate is bounded by the grid step.
+
+    After the rotation each block's values are bounded by its scale s;
+    the int8 grid step is s/127, and the inverse rotation is orthogonal
+    (preserves l-inf up to sqrt(block) in the worst case). Empirically
+    (and what matters for FL convergence) the max error is ~s·sqrt(b)/254;
+    we assert a conservative bound.
+    """
+    x, signs = _case(seed, length, block, scale)
+    y = hq.roundtrip(x, signs, block)
+    q, s = ref.hadamard_quantize_ref(x, signs, block)
+    bound = float(jnp.max(s)) / 254.0 * np.sqrt(block) * 1.5 + 1e-7
+    assert float(jnp.max(jnp.abs(y - x))) <= bound
+
+
+def test_roundtrip_zero_vector():
+    x = jnp.zeros((512,), jnp.float32)
+    signs = jnp.ones((512,), jnp.float32)
+    y = hq.roundtrip(x, signs, 256)
+    np.testing.assert_array_equal(np.asarray(y), np.zeros(512, np.float32))
+
+
+def test_wht_is_orthonormal_involution():
+    """The normalized WHT used in-kernel must be its own inverse."""
+    rng = np.random.default_rng(0)
+    v = jnp.asarray(rng.normal(size=(4, 128)).astype(np.float32))
+    w = hq._wht_inplace(hq._wht_inplace(v))
+    np.testing.assert_allclose(w, v, rtol=1e-5, atol=1e-5)
+    # And matches the explicit Sylvester matrix.
+    hm = ref.hadamard_matrix(128)
+    np.testing.assert_allclose(hq._wht_inplace(v), v @ hm.T, rtol=1e-5, atol=1e-5)
+
+
+def test_signs_change_rotation_but_not_recovery():
+    x, signs = _case(5, 1024, 256)
+    signs2 = -signs
+    y1 = hq.roundtrip(x, signs, 256)
+    y2 = hq.roundtrip(x, signs2, 256)
+    # Different rotations, both must recover x to quantization tolerance.
+    assert float(jnp.max(jnp.abs(y1 - x))) < 0.1
+    assert float(jnp.max(jnp.abs(y2 - x))) < 0.1

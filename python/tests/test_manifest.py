@@ -1,0 +1,107 @@
+"""Manifest consistency: the contract between aot.py and the Rust side."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+from compile import variants as V
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _manifest_for(name):
+    v = V.get(name)
+    md = M.build(v)
+    return aot.variant_manifest(v, md), md, v
+
+
+@pytest.mark.parametrize("name", V.DEFAULT_VARIANTS)
+def test_offsets_are_contiguous(name):
+    man, md, _ = _manifest_for(name)
+    off = 0
+    for p in man["params"]:
+        assert p["offset"] == off
+        assert p["size"] == int(np.prod(p["shape"]))
+        off += p["size"]
+    assert off == man["num_params"]
+
+
+@pytest.mark.parametrize("name", V.DEFAULT_VARIANTS)
+def test_packing_metadata_refers_to_real_groups(name):
+    man, _, _ = _manifest_for(name)
+    groups = {g["name"]: g["size"] for g in man["mask_groups"]}
+    for p in man["params"]:
+        for axis in ("rows", "cols"):
+            ap = p[axis]
+            if ap is None:
+                continue
+            assert ap["group"] in groups, (p["name"], ap)
+            assert ap["count"] == groups[ap["group"]]
+            # "rows" is the flattened leading extent (conv weights are 4-D:
+            # im2col flattens (kh, kw, cin) into matmul rows).
+            extent = (
+                int(np.prod(p["shape"][:-1])) if axis == "rows" else p["shape"][-1]
+            )
+            assert ap["count"] * ap["repeat"] + ap["fixed"] == extent, p["name"]
+
+
+@pytest.mark.parametrize("name", V.DEFAULT_VARIANTS)
+def test_arg_orders(name):
+    man, md, v = _manifest_for(name)
+    assert man["train_args"][: len(md.params)] == [p.name for p in md.params]
+    g = len(md.masks)
+    assert man["train_args"][len(md.params) : len(md.params) + g] == [
+        f"mask:{m.name}" for m in md.masks
+    ]
+    assert man["train_args"][-3:] == ["xs", "ys", "lr"]
+    assert man["train_outputs"][-1] == "mean_loss"
+    assert man["eval_outputs"] == ["loss_sum", "correct"]
+
+
+@pytest.mark.parametrize("name", V.DEFAULT_VARIANTS)
+def test_flops_attribution_positive(name):
+    man, _, _ = _manifest_for(name)
+    total = sum(p["flops_per_sample"] for p in man["params"])
+    assert total > 0
+    # Matmul-ish layers carry flops; biases don't.
+    for p in man["params"]:
+        if p["name"].endswith("_b"):
+            assert p["flops_per_sample"] == 0
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_written_manifest_matches_fresh():
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        written = json.load(f)
+    for name in written["variants"]:
+        fresh, _, _ = _manifest_for(name)
+        got = written["variants"][name]
+        assert got["params"] == fresh["params"], name
+        assert got["mask_groups"] == fresh["mask_groups"], name
+        assert got["train_args"] == fresh["train_args"], name
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_init_bin_sizes():
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        written = json.load(f)
+    for name, man in written["variants"].items():
+        path = os.path.join(ARTIFACTS, man["init_params"])
+        assert os.path.getsize(path) == 4 * man["num_params"], name
+
+
+def test_frozen_embed_flagged_not_transmitted():
+    man, _, _ = _manifest_for("sent140_small")
+    embed = next(p for p in man["params"] if p["name"] == "embed")
+    assert embed["trainable"] is False
+    assert embed["transmit"] is False

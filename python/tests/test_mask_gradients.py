@@ -1,0 +1,166 @@
+"""The masking invariant AFD rests on: masked full model ≡ reduced sub-model.
+
+1. Every parameter incident to a dropped unit receives an exactly-zero
+   gradient — SGD leaves it bit-identical.
+2. Training the masked full model step-by-step matches training the
+   physically-reduced architecture (columns/rows deleted) for the CNN
+   dense layer.
+3. LSTM masks only affect the *non-recurrent* path: the recurrent
+   weights of a layer keep receiving gradients even when the layer's
+   upward mask drops units.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model as M
+from compile import variants as V
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _data(v, md, seed=0):
+    rng = np.random.default_rng(seed)
+    if md.input_dtype == "f32":
+        x = rng.normal(size=(v.batch_size,) + md.input_shape).astype(np.float32)
+    else:
+        x = rng.integers(0, v.cfg.vocab, size=(v.batch_size,) + md.input_shape).astype(
+            np.int32
+        )
+    y = rng.integers(0, v.cfg.classes, size=(v.batch_size,)).astype(np.int32)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+def _grads(md, params, masks, x, y):
+    def loss_fn(ps):
+        return M.xent_loss(md.apply_fn(tuple(ps), tuple(masks), x), y)
+
+    return jax.grad(loss_fn)(list(params))
+
+
+def _masks_with_drop(md, group_idx, dropped_idx):
+    masks = [np.ones((m.size,), np.float32) for m in md.masks]
+    masks[group_idx][dropped_idx] = 0.0
+    return [jnp.asarray(m) for m in masks]
+
+
+def test_cnn_dropped_units_zero_grads():
+    v = V.get("femnist_small")
+    md = M.build(v)
+    params = [jnp.asarray(p) for p in M.init_params(md, 0)]
+    x, y = _data(v, md)
+
+    # Drop dense units 3, 7, 11.
+    dropped = np.array([3, 7, 11])
+    masks = _masks_with_drop(md, 2, dropped)
+    g = _grads(md, params, masks, x, y)
+    names = [p.name for p in md.params]
+    dw = np.asarray(g[names.index("dense_w")])
+    db = np.asarray(g[names.index("dense_b")])
+    hw = np.asarray(g[names.index("head_w")])
+    assert np.all(dw[:, dropped] == 0.0), "cols into dropped dense units"
+    assert np.all(db[dropped] == 0.0)
+    assert np.all(hw[dropped, :] == 0.0), "rows out of dropped dense units"
+    # Kept units still learn.
+    kept = np.setdiff1d(np.arange(dw.shape[1]), dropped)
+    assert np.any(dw[:, kept] != 0.0)
+
+
+def test_cnn_dropped_filters_zero_grads():
+    v = V.get("femnist_small")
+    md = M.build(v)
+    params = [jnp.asarray(p) for p in M.init_params(md, 0)]
+    x, y = _data(v, md)
+    dropped = np.array([1, 5])
+    masks = _masks_with_drop(md, 0, dropped)  # conv1 filters
+    g = _grads(md, params, masks, x, y)
+    names = [p.name for p in md.params]
+    c1w = np.asarray(g[names.index("conv1_w")])
+    c2w = np.asarray(g[names.index("conv2_w")])
+    assert np.all(c1w[..., dropped] == 0.0)
+    assert np.all(c2w[:, :, dropped, :] == 0.0), "conv2 weights reading dropped ch."
+
+
+def test_masked_training_equals_reduced_architecture():
+    """Delete two dense units physically; compare an SGD step."""
+    v = V.get("femnist_small")
+    md = M.build(v)
+    params = [jnp.asarray(p) for p in M.init_params(md, 0)]
+    x, y = _data(v, md)
+    names = [p.name for p in md.params]
+    dropped = np.array([0, 13])
+    kept = np.setdiff1d(np.arange(v.cfg.dense), dropped)
+    masks = _masks_with_drop(md, 2, dropped)
+
+    lr = 0.1
+    g = _grads(md, params, masks, x, y)
+    stepped = [p - lr * gg for p, gg in zip(params, g)]
+
+    # Reduced architecture: slice dense cols + head rows, retrain one step.
+    cfg2 = V.CnnCfg(
+        image=v.cfg.image, conv1=v.cfg.conv1, conv2=v.cfg.conv2,
+        dense=len(kept), classes=v.cfg.classes,
+    )
+    v2 = V.Variant(name="tmp", kind="cnn", dataset="femnist", cfg=cfg2, lr=v.lr)
+    md2 = M.build(v2)
+    p2 = list(params)
+    p2[names.index("dense_w")] = params[names.index("dense_w")][:, kept]
+    p2[names.index("dense_b")] = params[names.index("dense_b")][kept]
+    p2[names.index("head_w")] = params[names.index("head_w")][kept, :]
+    ones2 = [jnp.ones((m.size,), jnp.float32) for m in md2.masks]
+    g2 = _grads(md2, p2, ones2, x, y)
+    stepped2 = [p - lr * gg for p, gg in zip(p2, g2)]
+
+    # Compare the kept coordinates of every parameter.
+    np.testing.assert_allclose(
+        np.asarray(stepped[names.index("dense_w")])[:, kept],
+        np.asarray(stepped2[names.index("dense_w")]),
+        rtol=1e-5, atol=1e-6,
+    )
+    np.testing.assert_allclose(
+        np.asarray(stepped[names.index("head_w")])[kept, :],
+        np.asarray(stepped2[names.index("head_w")]),
+        rtol=1e-5, atol=1e-6,
+    )
+    # Dropped coordinates unchanged in the masked model.
+    np.testing.assert_array_equal(
+        np.asarray(stepped[names.index("dense_w")])[:, dropped],
+        np.asarray(params[names.index("dense_w")])[:, dropped],
+    )
+
+
+def test_lstm_recurrent_path_survives_masking():
+    v = V.get("shakespeare_small")
+    md = M.build(v)
+    params = [jnp.asarray(p) for p in M.init_params(md, 0)]
+    x, y = _data(v, md)
+    names = [p.name for p in md.params]
+    h = v.cfg.hidden
+
+    dropped = np.arange(h // 2)  # drop half of layer-1's upward units
+    masks = _masks_with_drop(md, 0, dropped)
+    g = _grads(md, params, masks, x, y)
+
+    # lstm2_w rows [0:h] read layer-1's (masked) upward output: dropped rows zero.
+    w2 = np.asarray(g[names.index("lstm2_w")])
+    assert np.all(w2[dropped, :] == 0.0)
+    assert np.any(w2[h:, :] != 0.0), "recurrent rows of layer 2 still learn"
+    # Layer-1's own recurrent rows keep nonzero gradient: memory preserved.
+    w1 = np.asarray(g[names.index("lstm1_w")])
+    emb = v.cfg.embed
+    rec_rows = w1[emb:, :]
+    assert np.any(rec_rows != 0.0), "layer-1 recurrence must keep learning"
+
+
+def test_full_mask_equals_no_mask():
+    for name in ("femnist_small", "shakespeare_small", "sent140_small"):
+        v = V.get(name)
+        md = M.build(v)
+        params = [jnp.asarray(p) for p in M.init_params(md, 1)]
+        ones = [jnp.ones((m.size,), jnp.float32) for m in md.masks]
+        x, _ = _data(v, md, seed=2)
+        a = md.apply_fn(tuple(params), tuple(ones), x)
+        md_ref = M.build(v, use_ref=True)
+        b = md_ref.apply_fn(tuple(params), tuple(ones), x)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-4)

@@ -1,0 +1,130 @@
+"""L2 model behaviour: shapes, training signal, eval semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import variants as V
+
+jax.config.update("jax_platform_name", "cpu")
+
+SMALL = ("femnist_small", "shakespeare_small", "sent140_small")
+
+
+def _batch(v, md, seed=0, nb=None):
+    rng = np.random.default_rng(seed)
+    nb = nb or v.num_batches
+    if md.input_dtype == "f32":
+        xs = rng.normal(size=(nb, v.batch_size) + md.input_shape).astype(np.float32)
+    else:
+        xs = rng.integers(
+            0, v.cfg.vocab, size=(nb, v.batch_size) + md.input_shape
+        ).astype(np.int32)
+    ys = rng.integers(0, v.cfg.classes, size=(nb, v.batch_size)).astype(np.int32)
+    return jnp.asarray(xs), jnp.asarray(ys)
+
+
+@pytest.mark.parametrize("name", SMALL)
+def test_logit_shapes(name):
+    v = V.get(name)
+    md = M.build(v)
+    params = [jnp.asarray(p) for p in M.init_params(md, 0)]
+    masks = [jnp.ones((m.size,), jnp.float32) for m in md.masks]
+    xs, _ = _batch(v, md, nb=1)
+    logits = md.apply_fn(tuple(params), tuple(masks), xs[0])
+    assert logits.shape == (v.batch_size, v.cfg.classes)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("name", SMALL)
+def test_train_step_reduces_loss(name):
+    v = V.get(name)
+    md = M.build(v)
+    params = [jnp.asarray(p) for p in M.init_params(md, 0)]
+    masks = [jnp.ones((m.size,), jnp.float32) for m in md.masks]
+    xs, ys = _batch(v, md)
+    step = jax.jit(M.make_train_step(md))
+    out = step(*params, *masks, xs, ys, jnp.float32(v.lr))
+    l0 = float(out[-1])
+    out2 = step(*out[:-1], *masks, xs, ys, jnp.float32(v.lr))
+    out3 = step(*out2[:-1], *masks, xs, ys, jnp.float32(v.lr))
+    assert float(out3[-1]) < l0, f"{name}: {l0} -> {float(out3[-1])}"
+
+
+def test_frozen_embedding_not_updated():
+    v = V.get("sent140_small")
+    md = M.build(v)
+    params = [jnp.asarray(p) for p in M.init_params(md, 0)]
+    masks = [jnp.ones((m.size,), jnp.float32) for m in md.masks]
+    xs, ys = _batch(v, md)
+    step = jax.jit(M.make_train_step(md))
+    out = step(*params, *masks, xs, ys, jnp.float32(v.lr))
+    names = [p.name for p in md.params]
+    i = names.index("embed")
+    np.testing.assert_array_equal(np.asarray(out[i]), np.asarray(params[i]))
+    # ...but everything trainable moved.
+    for j, p in enumerate(md.params):
+        if p.trainable:
+            assert np.any(np.asarray(out[j]) != np.asarray(params[j])), p.name
+
+
+def test_trainable_embedding_updates():
+    v = V.get("shakespeare_small")
+    md = M.build(v)
+    params = [jnp.asarray(p) for p in M.init_params(md, 0)]
+    masks = [jnp.ones((m.size,), jnp.float32) for m in md.masks]
+    xs, ys = _batch(v, md)
+    step = jax.jit(M.make_train_step(md))
+    out = step(*params, *masks, xs, ys, jnp.float32(v.lr))
+    names = [p.name for p in md.params]
+    i = names.index("embed")
+    assert np.any(np.asarray(out[i]) != np.asarray(params[i]))
+
+
+@pytest.mark.parametrize("name", SMALL)
+def test_eval_step_counts(name):
+    v = V.get(name)
+    md = M.build(v)
+    params = [jnp.asarray(p) for p in M.init_params(md, 0)]
+    xs, ys = _batch(v, md, nb=1)
+    ev = jax.jit(M.make_eval_step(md))
+    loss_sum, correct = ev(*params, xs[0], ys[0])
+    assert float(loss_sum) > 0.0
+    assert 0.0 <= float(correct) <= v.batch_size
+    # Cross-check correct-count against a manual argmax.
+    masks = [jnp.ones((m.size,), jnp.float32) for m in md.masks]
+    logits = md.apply_fn(tuple(params), tuple(masks), xs[0])
+    want = int(np.sum(np.argmax(np.asarray(logits), axis=-1) == np.asarray(ys[0])))
+    assert int(correct) == want
+
+
+def test_train_step_with_masks_only_updates_submodel():
+    v = V.get("femnist_small")
+    md = M.build(v)
+    params = [jnp.asarray(p) for p in M.init_params(md, 0)]
+    names = [p.name for p in md.params]
+    masks_np = [np.ones((m.size,), np.float32) for m in md.masks]
+    dropped = np.array([2, 4, 6, 8])
+    masks_np[2][dropped] = 0.0
+    masks = [jnp.asarray(m) for m in masks_np]
+    xs, ys = _batch(v, md)
+    step = jax.jit(M.make_train_step(md))
+    out = step(*params, *masks, xs, ys, jnp.float32(v.lr))
+    dw0 = np.asarray(params[names.index("dense_w")])
+    dw1 = np.asarray(out[names.index("dense_w")])
+    np.testing.assert_array_equal(dw1[:, dropped], dw0[:, dropped])
+    kept = np.setdiff1d(np.arange(dw0.shape[1]), dropped)
+    assert np.any(dw1[:, kept] != dw0[:, kept])
+
+
+def test_xent_loss_matches_manual():
+    rng = np.random.default_rng(0)
+    logits = jnp.asarray(rng.normal(size=(8, 5)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, 5, size=(8,)).astype(np.int32))
+    got = float(M.xent_loss(logits, y))
+    p = np.exp(np.asarray(logits))
+    p /= p.sum(axis=1, keepdims=True)
+    want = float(np.mean(-np.log(p[np.arange(8), np.asarray(y)])))
+    assert abs(got - want) < 1e-5

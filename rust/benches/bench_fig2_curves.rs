@@ -1,0 +1,50 @@
+//! Fig. 2: Top-1 accuracy curves (vs simulated time), non-IID datasets,
+//! Multi-Model AFD against the three baselines.
+//!
+//! Emits the per-method (sim_seconds, accuracy) series the figure plots.
+//! Scale up with AFD_BENCH_ROUNDS / AFD_BENCH_SEEDS.
+
+use afd::bench::tables::{env_usize, print_curves, run_grid};
+use afd::config::{ExperimentConfig, Preset};
+
+fn main() -> anyhow::Result<()> {
+    let seeds = env_usize("AFD_BENCH_SEEDS", 1);
+    let clients = env_usize("AFD_BENCH_CLIENTS", 12);
+
+    println!("== Fig. 2 (non-IID accuracy curves, Multi-Model AFD) ==\n");
+    for (preset, dataset, rounds_default) in [
+        (Preset::FemnistSmallNonIid, "femnist", 30),
+        (Preset::ShakespeareSmallNonIid, "shakespeare", 90),
+        (Preset::Sent140SmallNonIid, "sent140", 70),
+    ] {
+        let mut base = ExperimentConfig::preset(preset);
+        base.rounds = env_usize("AFD_BENCH_ROUNDS", rounds_default);
+        base.num_clients = clients;
+        base.eval_every = (base.rounds / 15).max(1);
+        println!("---- {dataset} (non-IID) ----");
+        let (rows, all) = run_grid(&base, "afd_multi", seeds)?;
+        print_curves(&all);
+        // Fig. 2's qualitative content: at any fixed simulated time
+        // budget, AFD+DGC's curve dominates No Compression's.
+        let afd = &all[3].1[0];
+        let none = &all[0].1[0];
+        let budget = afd.total_sim_seconds();
+        let afd_final = afd.best_accuracy();
+        let none_at_budget = none
+            .accuracy_curve()
+            .iter()
+            .take_while(|(t, _)| *t <= budget)
+            .map(|(_, a)| *a)
+            .fold(0.0, f64::max);
+        println!(
+            "\nat AFD's total budget ({}): AFD acc {:.3} vs NoComp acc {:.3}  [{}]",
+            afd::util::human_duration(budget),
+            afd_final,
+            none_at_budget,
+            if afd_final > none_at_budget { "ok" } else { "MISS" }
+        );
+        let _ = rows;
+        println!();
+    }
+    Ok(())
+}

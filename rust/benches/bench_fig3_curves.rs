@@ -1,0 +1,39 @@
+//! Fig. 3: Top-1 accuracy curves, IID datasets, Single-Model AFD.
+//!
+//! Scale up with AFD_BENCH_ROUNDS / AFD_BENCH_SEEDS.
+
+use afd::bench::tables::{env_usize, print_curves, run_grid};
+use afd::config::{ExperimentConfig, Preset};
+
+fn main() -> anyhow::Result<()> {
+    let seeds = env_usize("AFD_BENCH_SEEDS", 1);
+    let clients = env_usize("AFD_BENCH_CLIENTS", 20);
+
+    println!("== Fig. 3 (IID accuracy curves, Single-Model AFD) ==\n");
+    for (preset, dataset, rounds_default) in [
+        (Preset::FemnistSmallIid, "femnist", 30),
+        (Preset::ShakespeareSmallIid, "shakespeare", 90),
+        (Preset::Sent140SmallIid, "sent140", 70),
+    ] {
+        let mut base = ExperimentConfig::preset(preset);
+        base.rounds = env_usize("AFD_BENCH_ROUNDS", rounds_default);
+        base.num_clients = clients;
+        base.eval_every = (base.rounds / 15).max(1);
+        println!("---- {dataset} (IID) ----");
+        let (_, all) = run_grid(&base, "afd_single", seeds)?;
+        print_curves(&all);
+        // Fig. 3's content: compression curves track NoComp accuracy
+        // with at most minor degradation, and Single-Model AFD matches
+        // or beats the other compressed methods at its own budget.
+        let afd_acc = all[3].1[0].best_accuracy();
+        let fd_acc = all[2].1[0].best_accuracy();
+        println!(
+            "\nSingle-Model AFD {:.3} vs FD {:.3}  [{}]",
+            afd_acc,
+            fd_acc,
+            if afd_acc >= fd_acc - 0.02 { "ok" } else { "MISS" }
+        );
+        println!();
+    }
+    Ok(())
+}

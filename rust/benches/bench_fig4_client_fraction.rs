@@ -1,0 +1,69 @@
+//! Fig. 4: Top-1 accuracy of Multi-Model AFD vs FD as the fraction of
+//! clients per round varies (non-IID FEMNIST).
+//!
+//! Paper shape: at small fractions AFD ≈ FD (score maps update too
+//! rarely); the AFD advantage appears as the fraction grows, flattening
+//! past ~30-35%.
+//!
+//! Scale up with AFD_BENCH_ROUNDS / AFD_BENCH_SEEDS.
+
+use afd::bench::tables::env_usize;
+use afd::config::{ExperimentConfig, Preset};
+use afd::coordinator::experiment::run_experiment;
+use afd::util::stats;
+
+fn main() -> anyhow::Result<()> {
+    let rounds = env_usize("AFD_BENCH_ROUNDS", 30);
+    let seeds = env_usize("AFD_BENCH_SEEDS", 2);
+    let clients = env_usize("AFD_BENCH_CLIENTS", 20);
+    let fractions = [0.1, 0.2, 0.3, 0.5];
+
+    println!("== Fig. 4 (accuracy vs client fraction, non-IID FEMNIST) ==");
+    println!("rounds={rounds} seeds={seeds} clients={clients}\n");
+    println!(
+        "{:<10} {:>16} {:>16} {:>10}",
+        "fraction", "AFD (multi)", "FD", "AFD-FD"
+    );
+
+    let mut gaps = Vec::new();
+    for &f in &fractions {
+        let mut afd_accs = Vec::new();
+        let mut fd_accs = Vec::new();
+        for s in 0..seeds as u64 {
+            for (dropout, bucket) in
+                [("afd_multi", &mut afd_accs), ("fd", &mut fd_accs)]
+            {
+                let mut cfg = ExperimentConfig::preset(Preset::FemnistSmallNonIid);
+                cfg.rounds = rounds;
+                cfg.num_clients = clients;
+                cfg.client_fraction = f;
+                cfg.dropout = dropout.into();
+                cfg.eval_every = (rounds / 10).max(1);
+                cfg.seed = s;
+                bucket.push(run_experiment(&cfg)?.best_accuracy());
+            }
+        }
+        let (am, fm) = (stats::mean(&afd_accs), stats::mean(&fd_accs));
+        println!(
+            "{:<10.2} {:>9.3} ±{:.3} {:>9.3} ±{:.3} {:>+10.3}",
+            f,
+            am,
+            stats::std(&afd_accs),
+            fm,
+            stats::std(&fd_accs),
+            am - fm
+        );
+        gaps.push(am - fm);
+    }
+
+    // Shape check: the AFD advantage at the largest fraction exceeds the
+    // advantage at the smallest (score maps need participation).
+    let ok = *gaps.last().unwrap() >= gaps.first().unwrap() - 0.01;
+    println!(
+        "\nshape: AFD-FD gap grows with fraction (small {:.3} -> large {:.3})  [{}]",
+        gaps.first().unwrap(),
+        gaps.last().unwrap(),
+        if ok { "ok" } else { "MISS" }
+    );
+    Ok(())
+}

@@ -1,0 +1,90 @@
+//! Hot-path micro benches (the §Perf targets): compression codecs,
+//! packing, selection, aggregation — everything the coordinator does
+//! per client-round besides the XLA execution itself.
+
+use afd::bench::Bencher;
+use afd::compression::quant::HadamardQuant8;
+use afd::compression::{dgc, DenseCodec, RawF32};
+use afd::dropout::ScoreMap;
+use afd::model::packing;
+use afd::model::submodel::SubModel;
+use afd::runtime::native::mlp_spec;
+use afd::util::rng::Pcg64;
+
+fn main() {
+    let mut b = Bencher::default();
+    let mut rng = Pcg64::new(0);
+
+    // Model-sized payload: femnist_small-like 105k params (420 KB).
+    let n = 105_194;
+    let params: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 0.1)).collect();
+    let bytes = 4 * n as u64;
+
+    println!("-- downlink codecs ({} payload) --", afd::util::human_bytes(bytes));
+    let raw = RawF32;
+    b.run("raw_f32 encode", Some(bytes), || {
+        std::hint::black_box(raw.encode(&params, 1));
+    });
+    let q = HadamardQuant8::default();
+    b.run("quant8 encode (hadamard+int8)", Some(bytes), || {
+        std::hint::black_box(q.encode(&params, 1));
+    });
+    let enc = q.encode(&params, 1);
+    b.run("quant8 decode", Some(bytes), || {
+        std::hint::black_box(q.decode(&enc, 1));
+    });
+
+    println!("\n-- uplink DGC ({} delta) --", afd::util::human_bytes(bytes));
+    let delta: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 0.01)).collect();
+    let mut st = dgc::DgcState::new(dgc::DgcConfig::default());
+    b.run("dgc compress (topk+momentum)", Some(bytes), || {
+        std::hint::black_box(st.compress(&delta));
+    });
+    let msg = st.compress(&delta);
+    b.run("dgc decode", Some(msg.len() as u64), || {
+        std::hint::black_box(dgc::decode(&msg));
+    });
+
+    println!("\n-- packing / sub-model ops (8k-unit MLP spec) --");
+    let spec = mlp_spec("bench", 256, 2048, 32, 10, 5, 0.1);
+    let flat: Vec<f32> = (0..spec.num_params).map(|_| rng.normal_f32(0.0, 0.1)).collect();
+    let sm = {
+        let kept = vec![rng.sample_indices(2048, 1536)];
+        SubModel::from_kept_indices(&spec, &kept)
+    };
+    b.run("pack_values (FDR 25%)", Some(4 * spec.num_params as u64), || {
+        std::hint::black_box(packing::pack_values(&spec, &flat, &sm));
+    });
+    let packed = packing::pack_values(&spec, &flat, &sm);
+    let mut out = flat.clone();
+    b.run("unpack_values", Some(4 * packed.len() as u64), || {
+        packing::unpack_values(&spec, &packed, &sm, &mut out);
+        std::hint::black_box(&out);
+    });
+    b.run("coordinate_mask", None, || {
+        std::hint::black_box(packing::coordinate_mask(&spec, &sm));
+    });
+
+    println!("\n-- selection (2048-unit score map) --");
+    let mut map = ScoreMap::zeros(&spec);
+    map.credit(&sm, 0.5);
+    b.run("weighted_select (keep 75%)", None, || {
+        std::hint::black_box(map.weighted_select(&spec, 0.25, &mut rng));
+    });
+    b.run("uniform_select (keep 75%)", None, || {
+        std::hint::black_box(ScoreMap::uniform_select(&spec, 0.25, &mut rng));
+    });
+
+    println!("\n-- aggregation (105k params, 9 clients) --");
+    let mut agg = afd::aggregation::FedAvg::new(n);
+    let cm = vec![true; n];
+    b.run("fedavg add_masked x9 + finalize", Some(9 * bytes), || {
+        agg.reset();
+        for _ in 0..9 {
+            agg.add_masked(&params, &cm, 50.0);
+        }
+        std::hint::black_box(agg.finalize(&params));
+    });
+
+    println!("\n(JSON) {}", b.to_json().to_string_compact());
+}

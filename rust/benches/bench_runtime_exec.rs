@@ -1,0 +1,97 @@
+//! PJRT runtime bench: the XLA boundary of the per-client hot path —
+//! literal building, train-epoch execution, eval execution — plus the
+//! Pallas-kernel artifacts raced against the native Rust twins.
+//!
+//! Requires `make artifacts` (skips politely otherwise).
+
+use afd::bench::Bencher;
+use afd::compression::quant::HadamardQuant8;
+use afd::compression::DenseCodec;
+use afd::model::manifest::{DType, Manifest};
+use afd::model::submodel::SubModel;
+use afd::runtime::pjrt::{compile_kernel_artifact, PjrtRuntime};
+use afd::runtime::{BatchInput, EpochData, EvalBatch, ModelRuntime};
+use afd::util::rng::Pcg64;
+
+fn main() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("bench_runtime_exec: artifacts not built, skipping");
+        return;
+    }
+    let manifest = Manifest::load(&dir).unwrap();
+    let client = xla::PjRtClient::cpu().unwrap();
+    let mut b = Bencher::default();
+    let mut rng = Pcg64::new(0);
+
+    for name in ["femnist_small", "shakespeare_small", "sent140_small"] {
+        if !manifest.variants.contains_key(name) {
+            continue;
+        }
+        let rt = PjrtRuntime::load(&client, &manifest, name).unwrap();
+        let spec = rt.spec().clone();
+        let params = manifest.load_init_params(&spec).unwrap();
+        let sm = SubModel::full(&spec);
+        let masks = sm.masks_f32();
+
+        let per: usize = spec.input_shape.iter().product();
+        let nsamples = spec.samples_per_round();
+        let data = EpochData {
+            xs: match spec.input_dtype {
+                DType::F32 => BatchInput::F32(
+                    (0..nsamples * per).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+                ),
+                DType::I32 => BatchInput::I32(
+                    (0..nsamples * per)
+                        .map(|_| rng.below(spec.vocab.max(2) as u64) as i32)
+                        .collect(),
+                ),
+            },
+            ys: (0..nsamples)
+                .map(|_| rng.below(spec.classes as u64) as i32)
+                .collect(),
+        };
+        println!("\n-- {name}: train epoch ({} samples) --", nsamples);
+        b.run(&format!("{name} train_epoch (PJRT)"), None, || {
+            std::hint::black_box(
+                rt.train_epoch(&params, &masks, &data, spec.lr).unwrap(),
+            );
+        });
+        let batch = EvalBatch {
+            xs: match &data.xs {
+                BatchInput::F32(v) => BatchInput::F32(v[..spec.batch_size * per].to_vec()),
+                BatchInput::I32(v) => BatchInput::I32(v[..spec.batch_size * per].to_vec()),
+            },
+            ys: data.ys[..spec.batch_size].to_vec(),
+        };
+        b.run(&format!("{name} evaluate (PJRT)"), None, || {
+            std::hint::black_box(rt.evaluate(&params, &batch).unwrap());
+        });
+    }
+
+    // ---- L1 kernel artifact vs native Rust twin ----------------------
+    if let Some(k) = manifest.kernels.clone() {
+        println!("\n-- hadamard quant roundtrip: Pallas artifact vs native Rust --");
+        let exe =
+            compile_kernel_artifact(&client, &manifest, &k.hadamard_hlo).unwrap();
+        let len = k.hadamard_len;
+        let xs: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let signs = Pcg64::new(9).rademacher(len);
+        let bytes = 4 * len as u64;
+        b.run("hadamard roundtrip (Pallas/XLA)", Some(bytes), || {
+            let lits = [
+                afd::runtime::literal::f32_literal(&xs, &[len]).unwrap(),
+                afd::runtime::literal::f32_literal(&signs, &[len]).unwrap(),
+            ];
+            let res = exe.execute::<xla::Literal>(&lits).unwrap();
+            std::hint::black_box(res[0][0].to_literal_sync().unwrap());
+        });
+        let codec = HadamardQuant8 { block: k.hadamard_block };
+        b.run("hadamard roundtrip (native rust)", Some(bytes), || {
+            let enc = codec.encode(&xs, 7);
+            std::hint::black_box(codec.decode(&enc, 7));
+        });
+    }
+
+    println!("\n(JSON) {}", b.to_json().to_string_compact());
+}

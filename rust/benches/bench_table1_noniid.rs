@@ -1,0 +1,66 @@
+//! Table 1: accuracy + convergence time + speedup, **non-IID** LEAF
+//! datasets, Multi-Model AFD. Regenerates all three dataset rows.
+//!
+//! Paper setup: FDR 25%, 30% clients/round, 8-bit+Hadamard downlink,
+//! DGC uplink; 1000/80/400 rounds; targets 75/50/82%. Here: scaled
+//! workloads (synthetic LEAF, small model variants), same geometry.
+//! Success = orderings/shape, not absolute minutes (DESIGN.md §1).
+//!
+//! Scale up with: AFD_BENCH_ROUNDS=120 AFD_BENCH_SEEDS=3 cargo bench
+
+use afd::bench::tables::{env_usize, report_against_paper, run_grid, PaperRow};
+use afd::config::{ExperimentConfig, Preset};
+
+fn paper_rows(dataset: &str) -> Vec<PaperRow> {
+    match dataset {
+        "femnist" => vec![
+            PaperRow { method: "No Compression", accuracy: "78.9% ± 0.12%", time_min: 3233.2, speedup: "1x" },
+            PaperRow { method: "DGC", accuracy: "76.3% ± 0.43%", time_min: 102.4, speedup: "31x" },
+            PaperRow { method: "FD + DGC", accuracy: "77.5% ± 0.24%", time_min: 82.3, speedup: "39x" },
+            PaperRow { method: "AFD + DGC", accuracy: "80.6% ± 0.14%", time_min: 61.7, speedup: "52x" },
+        ],
+        "shakespeare" => vec![
+            PaperRow { method: "No Compression", accuracy: "53.1% ± 0.22%", time_min: 762.5, speedup: "1x" },
+            PaperRow { method: "DGC", accuracy: "52.8% ± 0.54%", time_min: 21.2, speedup: "36x" },
+            PaperRow { method: "FD + DGC", accuracy: "52.5% ± 0.34%", time_min: 17.4, speedup: "44x" },
+            PaperRow { method: "AFD + DGC", accuracy: "54.4% ± 0.36%", time_min: 13.3, speedup: "57x" },
+        ],
+        _ => vec![
+            PaperRow { method: "No Compression", accuracy: "82.9% ± 0.19%", time_min: 3050.7, speedup: "1x" },
+            PaperRow { method: "DGC", accuracy: "82.5% ± 0.29%", time_min: 89.7, speedup: "34x" },
+            PaperRow { method: "FD + DGC", accuracy: "82.7% ± 0.11%", time_min: 76.2, speedup: "40x" },
+            PaperRow { method: "AFD + DGC", accuracy: "83.8% ± 0.56%", time_min: 57.5, speedup: "53x" },
+        ],
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let seeds = env_usize("AFD_BENCH_SEEDS", 1);
+    let clients = env_usize("AFD_BENCH_CLIENTS", 12);
+
+    println!("== Table 1 (non-IID, Multi-Model AFD) ==");
+    println!("scaled: seeds={seeds} clients={clients}\n");
+
+    // Per-dataset horizons: the char-LSTM needs more rounds to leave its
+    // warm-up plateau than the CNN (mirrors the paper's 1000/80/400
+    // asymmetry, inverted by our scaled models' convergence speeds).
+    for (preset, dataset, rounds_default, target) in [
+        (Preset::FemnistSmallNonIid, "femnist", 30, 0.55),
+        (Preset::ShakespeareSmallNonIid, "shakespeare", 90, 0.15),
+        (Preset::Sent140SmallNonIid, "sent140", 70, 0.72),
+    ] {
+        let mut base = ExperimentConfig::preset(preset);
+        base.rounds = env_usize("AFD_BENCH_ROUNDS", rounds_default);
+        base.num_clients = clients;
+        base.eval_every = (base.rounds / 12).max(1);
+        base.target_accuracy = Some(target);
+        let (rows, _) = run_grid(&base, "afd_multi", seeds)?;
+        report_against_paper(
+            &format!("Table 1 / {dataset} (non-IID)"),
+            &rows,
+            &paper_rows(dataset),
+        );
+        println!();
+    }
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Table 2: accuracy + convergence time + speedup, **IID** datasets,
+//! Single-Model AFD, 10% of clients per round.
+//!
+//! Scale up with: AFD_BENCH_ROUNDS=120 AFD_BENCH_SEEDS=3 cargo bench
+
+use afd::bench::tables::{env_usize, report_against_paper, run_grid, PaperRow};
+use afd::config::{ExperimentConfig, Preset};
+
+fn paper_rows(dataset: &str) -> Vec<PaperRow> {
+    match dataset {
+        "femnist" => vec![
+            PaperRow { method: "No Compression", accuracy: "83.9% ± 0.09%", time_min: 3119.9, speedup: "1x" },
+            PaperRow { method: "DGC", accuracy: "83.6% ± 0.27%", time_min: 84.9, speedup: "37x" },
+            PaperRow { method: "FD + DGC", accuracy: "84.1% ± 0.72%", time_min: 65.7, speedup: "48x" },
+            PaperRow { method: "AFD + DGC", accuracy: "86.2% ± 0.55%", time_min: 58.1, speedup: "53x" },
+        ],
+        "shakespeare" => vec![
+            PaperRow { method: "No Compression", accuracy: "52.2% ± 0.18%", time_min: 705.7, speedup: "1x" },
+            PaperRow { method: "DGC", accuracy: "50.8% ± 0.85%", time_min: 25.6, speedup: "28x" },
+            PaperRow { method: "FD + DGC", accuracy: "50.9% ± 0.72%", time_min: 16.9, speedup: "48x" },
+            PaperRow { method: "AFD + DGC", accuracy: "53.7% ± 0.65%", time_min: 12.4, speedup: "57x" },
+        ],
+        _ => vec![
+            PaperRow { method: "No Compression", accuracy: "84.7% ± 0.16%", time_min: 2893.4, speedup: "1x" },
+            PaperRow { method: "DGC", accuracy: "84.5% ± 0.77%", time_min: 82.6, speedup: "35x" },
+            PaperRow { method: "FD + DGC", accuracy: "84.5% ± 0.39%", time_min: 68.8, speedup: "42x" },
+            PaperRow { method: "AFD + DGC", accuracy: "85.3% ± 0.75%", time_min: 52.6, speedup: "55x" },
+        ],
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let seeds = env_usize("AFD_BENCH_SEEDS", 1);
+    let clients = env_usize("AFD_BENCH_CLIENTS", 20);
+
+    println!("== Table 2 (IID, Single-Model AFD, 10% clients/round) ==");
+    println!("scaled: seeds={seeds} clients={clients}\n");
+
+    for (preset, dataset, rounds_default, target) in [
+        (Preset::FemnistSmallIid, "femnist", 30, 0.60),
+        (Preset::ShakespeareSmallIid, "shakespeare", 90, 0.15),
+        (Preset::Sent140SmallIid, "sent140", 70, 0.72),
+    ] {
+        let mut base = ExperimentConfig::preset(preset);
+        base.rounds = env_usize("AFD_BENCH_ROUNDS", rounds_default);
+        base.num_clients = clients;
+        base.eval_every = (base.rounds / 12).max(1);
+        base.target_accuracy = Some(target);
+        let (rows, _) = run_grid(&base, "afd_single", seeds)?;
+        report_against_paper(
+            &format!("Table 2 / {dataset} (IID)"),
+            &rows,
+            &paper_rows(dataset),
+        );
+        println!();
+    }
+    Ok(())
+}

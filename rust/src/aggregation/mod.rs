@@ -1,0 +1,115 @@
+//! FedAvg aggregation with sub-model recovery.
+//!
+//! Paper Eq. (2): `W_{t+1} = (1/n_t) Σ_c n_c W_t^c`, weighted by each
+//! client's sample count. Under AFD, client c only holds (and returns)
+//! the coordinates of its sub-model, so the average is **per
+//! coordinate** over the clients that hold it (Fig. 1 step 7 "recovered
+//! in its original shape ... aggregated"); coordinates no selected
+//! client held keep their previous global value.
+
+/// Accumulates one round of client updates.
+pub struct FedAvg {
+    accum: Vec<f64>,
+    weight: Vec<f64>,
+}
+
+impl FedAvg {
+    pub fn new(num_params: usize) -> FedAvg {
+        FedAvg {
+            accum: vec![0.0; num_params],
+            weight: vec![0.0; num_params],
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.accum.fill(0.0);
+        self.weight.fill(0.0);
+    }
+
+    /// Add a client's model restricted to its sub-model coordinates.
+    /// `n_c` is the client's sample count (the FedAvg weight).
+    pub fn add_masked(&mut self, values: &[f32], coord_mask: &[bool], n_c: f64) {
+        assert_eq!(values.len(), self.accum.len());
+        assert_eq!(coord_mask.len(), self.accum.len());
+        for i in 0..values.len() {
+            if coord_mask[i] {
+                self.accum[i] += n_c * values[i] as f64;
+                self.weight[i] += n_c;
+            }
+        }
+    }
+
+    /// Add a full-model client update (the no-dropout baselines).
+    pub fn add_full(&mut self, values: &[f32], n_c: f64) {
+        assert_eq!(values.len(), self.accum.len());
+        for i in 0..values.len() {
+            self.accum[i] += n_c * values[i] as f64;
+            self.weight[i] += n_c;
+        }
+    }
+
+    /// Finalize: coordinates nobody updated keep `base`'s value.
+    pub fn finalize(&self, base: &[f32]) -> Vec<f32> {
+        assert_eq!(base.len(), self.accum.len());
+        (0..base.len())
+            .map(|i| {
+                if self.weight[i] > 0.0 {
+                    (self.accum[i] / self.weight[i]) as f32
+                } else {
+                    base[i]
+                }
+            })
+            .collect()
+    }
+
+    /// Fraction of coordinates that received at least one update.
+    pub fn coverage(&self) -> f64 {
+        let covered = self.weight.iter().filter(|&&w| w > 0.0).count();
+        covered as f64 / self.weight.len().max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_average_matches_paper_formula() {
+        let mut agg = FedAvg::new(3);
+        agg.add_full(&[1.0, 2.0, 3.0], 10.0); // n_c = 10
+        agg.add_full(&[3.0, 0.0, 6.0], 30.0); // n_c = 30
+        let out = agg.finalize(&[9.0, 9.0, 9.0]);
+        // (10*1 + 30*3)/40 = 2.5 ; (10*2)/40 = 0.5 ; (10*3+30*6)/40 = 5.25
+        assert_eq!(out, vec![2.5, 0.5, 5.25]);
+        assert_eq!(agg.coverage(), 1.0);
+    }
+
+    #[test]
+    fn uncovered_coordinates_keep_base() {
+        let mut agg = FedAvg::new(4);
+        agg.add_masked(&[1.0, 2.0, 3.0, 4.0], &[true, false, true, false], 5.0);
+        agg.add_masked(&[10.0, 20.0, 30.0, 40.0], &[true, false, false, false], 5.0);
+        let out = agg.finalize(&[-1.0, -2.0, -3.0, -4.0]);
+        assert_eq!(out, vec![5.5, -2.0, 3.0, -4.0]);
+        assert_eq!(agg.coverage(), 0.5);
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut agg = FedAvg::new(2);
+        agg.add_full(&[1.0, 1.0], 1.0);
+        agg.reset();
+        let out = agg.finalize(&[7.0, 8.0]);
+        assert_eq!(out, vec![7.0, 8.0]);
+        assert_eq!(agg.coverage(), 0.0);
+    }
+
+    #[test]
+    fn weighting_respects_sample_counts() {
+        // A client with 9× the data dominates the average 9:1.
+        let mut agg = FedAvg::new(1);
+        agg.add_full(&[0.0], 90.0);
+        agg.add_full(&[10.0], 10.0);
+        assert_eq!(agg.finalize(&[0.0]), vec![1.0]);
+    }
+}

@@ -1,0 +1,181 @@
+//! Micro-benchmark harness substrate (no `criterion` offline).
+//!
+//! `Bencher::run` measures a closure with warmup, adaptive iteration
+//! counts and robust statistics (median + MAD), printing
+//! criterion-style lines. Bench binaries (`rust/benches/*.rs`,
+//! `harness = false`) use this for the hot-path measurements and plain
+//! experiment drivers for the paper tables.
+
+pub mod tables;
+
+use std::time::Instant;
+
+use crate::util::stats;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub std_ns: f64,
+    pub throughput: Option<(f64, &'static str)>,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        let t = fmt_ns(self.median_ns);
+        let pm = fmt_ns(self.std_ns);
+        let extra = match self.throughput {
+            Some((v, unit)) => format!("  ({v:.2} {unit})"),
+            None => String::new(),
+        };
+        println!(
+            "bench {:<44} {:>12}/iter ± {:>10}  ({} iters){extra}",
+            self.name, t, pm, self.iters
+        );
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+pub struct Bencher {
+    /// Target measurement time per bench (seconds).
+    pub target_s: f64,
+    /// Measurement samples.
+    pub samples: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            target_s: 1.0,
+            samples: 20,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Bencher {
+        Bencher {
+            target_s: 0.3,
+            samples: 10,
+            results: Vec::new(),
+        }
+    }
+
+    /// Measure `f`; `bytes_per_iter` (if given) adds MiB/s throughput.
+    pub fn run<F: FnMut()>(
+        &mut self,
+        name: &str,
+        bytes_per_iter: Option<u64>,
+        mut f: F,
+    ) -> BenchResult {
+        // Warmup + calibration: how many iters fit in target_s/samples?
+        let t0 = Instant::now();
+        f();
+        let once = t0.elapsed().as_secs_f64().max(1e-9);
+        let per_sample = (self.target_s / self.samples as f64 / once)
+            .ceil()
+            .max(1.0) as u64;
+
+        let mut samples_ns = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..per_sample {
+                f();
+            }
+            samples_ns.push(t.elapsed().as_nanos() as f64 / per_sample as f64);
+        }
+        let median = stats::quantile(&samples_ns, 0.5);
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: per_sample * self.samples as u64,
+            mean_ns: stats::mean(&samples_ns),
+            median_ns: median,
+            std_ns: stats::std(&samples_ns),
+            throughput: bytes_per_iter.map(|b| {
+                ((b as f64) / (median / 1e9) / (1024.0 * 1024.0), "MiB/s")
+            }),
+        };
+        result.print();
+        self.results.push(result.clone());
+        result
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Write results as JSON (consumed by EXPERIMENTS.md tooling).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::Arr(
+            self.results
+                .iter()
+                .map(|r| {
+                    let mut j = Json::obj();
+                    j.set("name", Json::Str(r.name.clone()));
+                    j.set("median_ns", Json::Num(r.median_ns));
+                    j.set("mean_ns", Json::Num(r.mean_ns));
+                    j.set("std_ns", Json::Num(r.std_ns));
+                    j.set("iters", Json::Num(r.iters as f64));
+                    j
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_sane() {
+        let mut b = Bencher {
+            target_s: 0.05,
+            samples: 5,
+            results: Vec::new(),
+        };
+        let mut acc = 0u64;
+        let r = b.run("noop-ish", None, || {
+            acc = acc.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(r.median_ns > 0.0);
+        assert!(r.median_ns < 1e7, "a no-op should not take 10ms");
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn throughput_units() {
+        let mut b = Bencher::quick();
+        let data = vec![0u8; 1 << 20];
+        let r = b.run("sum 1MiB", Some(1 << 20), || {
+            std::hint::black_box(data.iter().map(|&x| x as u64).sum::<u64>());
+        });
+        let (v, unit) = r.throughput.unwrap();
+        assert_eq!(unit, "MiB/s");
+        assert!(v > 10.0, "at least 10 MiB/s expected, got {v}");
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(2500.0), "2.50 µs");
+        assert_eq!(fmt_ns(3.5e6), "3.50 ms");
+        assert_eq!(fmt_ns(2.25e9), "2.250 s");
+    }
+}

@@ -1,0 +1,143 @@
+//! Shared driver for the paper-table benches (`rust/benches/bench_*`).
+//!
+//! Each bench target regenerates one table/figure: it runs the paper's
+//! method grid on a scaled workload, prints the measured rows next to
+//! the paper's published numbers, and checks the *shape* assertions
+//! (orderings/crossovers) that constitute reproduction success.
+//!
+//! Scaling knobs (env): `AFD_BENCH_ROUNDS`, `AFD_BENCH_SEEDS`,
+//! `AFD_BENCH_CLIENTS` — defaults keep `cargo bench` minutes-scale; the
+//! EXPERIMENTS.md numbers were produced with larger values.
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::experiment::run_experiment;
+use crate::metrics::{render_table, summarize, ExperimentReport, MethodSummary};
+
+/// A row of the paper's published table, for side-by-side printing.
+pub struct PaperRow {
+    pub method: &'static str,
+    pub accuracy: &'static str,
+    pub time_min: f64,
+    pub speedup: &'static str,
+}
+
+pub fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Run the 4-method grid; returns (summaries, all reports per method).
+pub fn run_grid(
+    base: &ExperimentConfig,
+    afd_kind: &str,
+    seeds: usize,
+) -> anyhow::Result<(Vec<MethodSummary>, Vec<(String, Vec<ExperimentReport>)>)> {
+    let grid = ExperimentConfig::paper_method_grid(base, afd_kind);
+    let mut rows = Vec::new();
+    let mut all = Vec::new();
+    for (label, cfg) in &grid {
+        let mut reports = Vec::new();
+        for s in 0..seeds as u64 {
+            let mut c = cfg.clone();
+            c.seed = base.seed + s;
+            eprintln!("[bench] {label} seed {} ...", c.seed);
+            reports.push(run_experiment(&c)?);
+        }
+        rows.push(summarize(label, &reports, base.target_accuracy));
+        all.push((label.clone(), reports));
+    }
+    Ok((rows, all))
+}
+
+/// Print measured vs paper rows + run the shape checks.
+pub fn report_against_paper(
+    title: &str,
+    rows: &[MethodSummary],
+    paper: &[PaperRow],
+) {
+    println!("{}", render_table(&format!("{title} — MEASURED"), rows));
+    println!("-- paper reports --");
+    println!(
+        "{:<18} {:>18} {:>16} {:>10}",
+        "Method", "Accuracy", "Time (min)", "Speedup"
+    );
+    for p in paper {
+        println!(
+            "{:<18} {:>18} {:>16.1} {:>10}",
+            p.method, p.accuracy, p.time_min, p.speedup
+        );
+    }
+    shape_checks(title, rows);
+}
+
+/// The reproduction's success criteria (DESIGN.md §1): orderings, not
+/// absolute numbers.
+pub fn shape_checks(title: &str, rows: &[MethodSummary]) {
+    assert_eq!(rows.len(), 4, "expected the 4-method grid");
+    let time = |i: usize| rows[i].time_mean_s;
+    let reached = |i: usize| rows[i].reached > 0;
+    println!("-- shape checks ({title}) --");
+
+    let mut pass = true;
+    // 1. Every compressed method must beat No Compression in time.
+    for i in 1..4 {
+        if reached(i) && reached(0) {
+            let ok = time(i) < time(0);
+            println!(
+                "  [{}] {} faster than No Compression ({} vs {})",
+                if ok { "ok" } else { "MISS" },
+                rows[i].method,
+                crate::util::human_duration(time(i)),
+                crate::util::human_duration(time(0)),
+            );
+            pass &= ok;
+        }
+    }
+    // 2. AFD+DGC is the fastest of the compressed methods.
+    if reached(3) && reached(2) {
+        let ok = time(3) <= time(2) * 1.05;
+        println!(
+            "  [{}] AFD+DGC at least matches FD+DGC in convergence time",
+            if ok { "ok" } else { "MISS" }
+        );
+        pass &= ok;
+    }
+    // 3. AFD accuracy ≥ FD accuracy (generalization claim).
+    {
+        let ok = rows[3].accuracy_mean >= rows[2].accuracy_mean - 0.01;
+        println!(
+            "  [{}] AFD accuracy ≥ FD accuracy ({:.1}% vs {:.1}%)",
+            if ok { "ok" } else { "MISS" },
+            rows[3].accuracy_mean * 100.0,
+            rows[2].accuracy_mean * 100.0
+        );
+        pass &= ok;
+    }
+    // 4. AFD accuracy within noise of (or above) No Compression.
+    {
+        let ok = rows[3].accuracy_mean >= rows[0].accuracy_mean - 0.03;
+        println!(
+            "  [{}] AFD accuracy ≥ NoComp − 3% ({:.1}% vs {:.1}%)",
+            if ok { "ok" } else { "MISS" },
+            rows[3].accuracy_mean * 100.0,
+            rows[0].accuracy_mean * 100.0
+        );
+        pass &= ok;
+    }
+    println!(
+        "  => {}",
+        if pass { "SHAPE REPRODUCED" } else { "shape deviations (see above)" }
+    );
+}
+
+/// Print a Fig. 2/3-style accuracy-vs-time curve set.
+pub fn print_curves(all: &[(String, Vec<ExperimentReport>)]) {
+    for (label, reports) in all {
+        println!("\ncurve [{label}] (sim_s, acc):");
+        for (t, a) in reports[0].accuracy_curve() {
+            println!("  {t:>10.1}  {a:.3}");
+        }
+    }
+}

@@ -1,0 +1,68 @@
+//! Client-side state the server tracks per participant.
+//!
+//! In a real deployment this state lives on the device; in the
+//! simulation the coordinator owns it: the client's local dataset
+//! handle, its DGC accumulation buffers (which must persist across the
+//! rounds it participates in) and its private RNG stream.
+
+use crate::compression::dgc::{DgcConfig, DgcState};
+use crate::util::rng::Pcg64;
+
+pub struct ClientState {
+    pub id: usize,
+    /// Sample count n_c (the FedAvg weight).
+    pub num_samples: usize,
+    /// Persistent DGC buffers (momentum + accumulation).
+    pub dgc: DgcState,
+    /// Private RNG stream (batch order etc.), decorrelated per client.
+    pub rng: Pcg64,
+    /// Rounds this client participated in (diagnostics / Fig. 4).
+    pub participations: usize,
+}
+
+impl ClientState {
+    pub fn new(id: usize, num_samples: usize, dgc_cfg: DgcConfig, seed: u64) -> Self {
+        ClientState {
+            id,
+            num_samples,
+            dgc: DgcState::new(dgc_cfg),
+            rng: Pcg64::with_stream(seed ^ 0xc11e, id as u64 + 1),
+            participations: 0,
+        }
+    }
+}
+
+/// Build the full client fleet for an experiment.
+pub fn build_fleet(
+    sizes: &[usize],
+    dgc_cfg: &DgcConfig,
+    seed: u64,
+) -> Vec<ClientState> {
+    sizes
+        .iter()
+        .enumerate()
+        .map(|(id, &n)| ClientState::new(id, n, dgc_cfg.clone(), seed))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fleet_has_decorrelated_rngs() {
+        let mut fleet = build_fleet(&[10, 20, 30], &DgcConfig::default(), 7);
+        assert_eq!(fleet.len(), 3);
+        assert_eq!(fleet[1].num_samples, 20);
+        let a = fleet[0].rng.next_u64();
+        let b = fleet[1].rng.next_u64();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn same_seed_same_fleet() {
+        let mut f1 = build_fleet(&[5], &DgcConfig::default(), 3);
+        let mut f2 = build_fleet(&[5], &DgcConfig::default(), 3);
+        assert_eq!(f1[0].rng.next_u64(), f2[0].rng.next_u64());
+    }
+}

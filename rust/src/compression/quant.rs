@@ -1,0 +1,226 @@
+//! 8-bit uniform quantization with randomized Hadamard rotation — the
+//! paper's downlink codec (native Rust twin of the Pallas kernel
+//! `python/compile/kernels/hadamard_quant.py`; the two are cross-checked
+//! in `rust/tests/compression_roundtrip.rs` and raced in
+//! `bench_micro_hotpath`).
+//!
+//! Pipeline per length-`B` block (B a power of two):
+//!   y = (1/√B) · H_B · (d ⊙ x)   — spread information across the block
+//!   s = max|y|,  q_i = round(y_i/s · 127) ∈ i8
+//! Wire format: `u32 length ‖ per block (f32 scale ‖ B × i8)`.
+//! The Rademacher diagonal `d` is derived from the shared seed, so it
+//! costs zero wire bytes.
+
+use crate::compression::{DenseCodec, Encoded};
+use crate::util::rng::Pcg64;
+
+pub const DEFAULT_BLOCK: usize = 256;
+
+pub struct HadamardQuant8 {
+    pub block: usize,
+}
+
+impl Default for HadamardQuant8 {
+    fn default() -> Self {
+        HadamardQuant8 {
+            block: DEFAULT_BLOCK,
+        }
+    }
+}
+
+/// In-place fast Walsh–Hadamard transform (unnormalized butterflies);
+/// caller applies the 1/√B normalization.
+pub fn fwht(v: &mut [f32]) {
+    let n = v.len();
+    debug_assert!(n.is_power_of_two());
+    let mut h = 1;
+    while h < n {
+        let stride = h * 2;
+        let mut base = 0;
+        while base < n {
+            for i in base..base + h {
+                let a = v[i];
+                let b = v[i + h];
+                v[i] = a + b;
+                v[i + h] = a - b;
+            }
+            base += stride;
+        }
+        h = stride;
+    }
+}
+
+fn signs_for(seed: u64, len: usize) -> Vec<f32> {
+    // Stream tag keeps the sign sequence independent of other per-seed
+    // randomness (cohort sampling etc.).
+    Pcg64::with_stream(seed, 0x5167).rademacher(len)
+}
+
+impl DenseCodec for HadamardQuant8 {
+    fn name(&self) -> &'static str {
+        "quant8"
+    }
+
+    fn encode(&self, values: &[f32], seed: u64) -> Encoded {
+        let b = self.block;
+        let n = values.len();
+        let nblocks = n.div_ceil(b);
+        let padded = nblocks * b;
+        let signs = signs_for(seed, padded);
+        let inv_sqrt = 1.0 / (b as f32).sqrt();
+
+        let mut bytes = Vec::with_capacity(4 + nblocks * (4 + b));
+        bytes.extend_from_slice(&(n as u32).to_le_bytes());
+        let mut buf = vec![0.0f32; b];
+        let mut qbuf = vec![0u8; b];
+        for blk in 0..nblocks {
+            let start = blk * b;
+            let take = (n - start).min(b);
+            buf[..take].copy_from_slice(&values[start..start + take]);
+            buf[take..].fill(0.0);
+            for (v, s) in buf.iter_mut().zip(&signs[start..start + b]) {
+                *v *= s;
+            }
+            fwht(&mut buf);
+            // max|buf| without the per-element normalization multiply
+            // (pulled out of the loop; §Perf).
+            let mut m = 0.0f32;
+            for v in &buf {
+                m = m.max(v.abs());
+            }
+            let scale = m * inv_sqrt;
+            bytes.extend_from_slice(&scale.to_le_bytes());
+            // Quantize into a stack buffer, then one memcpy — avoids the
+            // bounds-checked byte-at-a-time push (§Perf).
+            let qs = if scale > 0.0 { 127.0 / m } else { 0.0 };
+            for (dst, v) in qbuf.iter_mut().zip(&buf) {
+                *dst = (v * qs).round().clamp(-127.0, 127.0) as i8 as u8;
+            }
+            bytes.extend_from_slice(&qbuf);
+        }
+        Encoded { bytes }
+    }
+
+    fn decode(&self, enc: &Encoded, seed: u64) -> Vec<f32> {
+        let b = self.block;
+        let n = u32::from_le_bytes(enc.bytes[0..4].try_into().unwrap()) as usize;
+        let nblocks = n.div_ceil(b);
+        let padded = nblocks * b;
+        let signs = signs_for(seed, padded);
+        let inv_sqrt = 1.0 / (b as f32).sqrt();
+
+        let mut out = Vec::with_capacity(n);
+        let mut buf = vec![0.0f32; b];
+        let mut off = 4;
+        for blk in 0..nblocks {
+            let scale =
+                f32::from_le_bytes(enc.bytes[off..off + 4].try_into().unwrap());
+            off += 4;
+            for (v, &q) in buf.iter_mut().zip(&enc.bytes[off..off + b]) {
+                *v = (q as i8) as f32 / 127.0 * scale;
+            }
+            off += b;
+            // H is self-inverse under the 1/√B normalization: applying the
+            // unnormalized FWHT then multiplying by 1/√B inverts encode.
+            fwht(&mut buf);
+            let start = blk * b;
+            let take = (n - start).min(b);
+            for i in 0..take {
+                out.push(buf[i] * inv_sqrt * signs[start + i]);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gauss(n: usize, seed: u64, sigma: f32) -> Vec<f32> {
+        let mut rng = Pcg64::new(seed);
+        (0..n).map(|_| rng.normal_f32(0.0, sigma)).collect()
+    }
+
+    #[test]
+    fn fwht_is_self_inverse_up_to_n() {
+        let mut v = gauss(64, 0, 1.0);
+        let orig = v.clone();
+        fwht(&mut v);
+        fwht(&mut v);
+        for (a, b) in v.iter().zip(&orig) {
+            assert!((a / 64.0 - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn roundtrip_error_is_small_and_nonzero() {
+        let c = HadamardQuant8::default();
+        for (n, sigma) in [(1000usize, 1.0f32), (256, 0.01), (5000, 100.0), (3, 1.0)] {
+            let xs = gauss(n, 42, sigma);
+            let enc = c.encode(&xs, 7);
+            let dec = c.decode(&enc, 7);
+            assert_eq!(dec.len(), n);
+            let linf = xs
+                .iter()
+                .zip(&dec)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            // Per-coordinate error bounded by ~ s·√B/127 with s ≈ the
+            // post-rotation max ≈ few·σ for gaussian blocks.
+            assert!(linf <= sigma * 0.6 + 1e-6, "n={n} σ={sigma} err={linf}");
+            if n >= 256 {
+                assert!(linf > 0.0, "8-bit quantization cannot be lossless");
+            }
+        }
+    }
+
+    #[test]
+    fn wire_size_is_about_one_byte_per_element() {
+        let c = HadamardQuant8::default();
+        let xs = gauss(4096, 1, 1.0);
+        let enc = c.encode(&xs, 3);
+        let raw = 4 * 4096u64;
+        assert_eq!(enc.wire_bytes(), 4 + 16 * (4 + 256));
+        assert!(enc.wire_bytes() * 3 < raw, "must be ≳ 3.9× smaller than f32");
+    }
+
+    #[test]
+    fn wrong_seed_fails_to_recover() {
+        let c = HadamardQuant8::default();
+        let xs = gauss(512, 5, 1.0);
+        let enc = c.encode(&xs, 10);
+        let good = c.decode(&enc, 10);
+        let bad = c.decode(&enc, 11);
+        let err_good = crate::tensor::rel_l2_error(&good, &xs);
+        let err_bad = crate::tensor::rel_l2_error(&bad, &xs);
+        assert!(err_good < 0.02);
+        assert!(err_bad > 0.5, "decoding with the wrong signs must garble");
+    }
+
+    #[test]
+    fn zeros_roundtrip_exactly() {
+        let c = HadamardQuant8::default();
+        let xs = vec![0.0f32; 300];
+        let dec = c.decode(&c.encode(&xs, 0), 0);
+        assert_eq!(dec, xs);
+    }
+
+    #[test]
+    fn rotation_spreads_outliers() {
+        // A single huge coordinate would dominate naive quantization;
+        // the Hadamard rotation spreads it so other coords survive.
+        let c = HadamardQuant8::default();
+        let mut xs = vec![0.01f32; 256];
+        xs[17] = 50.0;
+        let dec = c.decode(&c.encode(&xs, 2), 2);
+        // The small coordinates should still be recovered with error
+        // much smaller than the outlier magnitude.
+        let small_err: f32 = (0..256)
+            .filter(|&i| i != 17)
+            .map(|i| (dec[i] - xs[i]).abs())
+            .fold(0.0, f32::max);
+        assert!((dec[17] - 50.0).abs() < 2.0);
+        assert!(small_err < 0.1, "small coords err {small_err}");
+    }
+}

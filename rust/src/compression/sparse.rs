@@ -1,0 +1,222 @@
+//! Sparse index codecs for the DGC uplink wire format.
+//!
+//! A sparsified delta is a set of (index, value) pairs over a vector of
+//! known length. Three index encodings are implemented and the encoder
+//! picks the smallest per message:
+//!
+//! * `Bitmap`  — n/8 bytes regardless of k (wins when k/n ≳ 1/40).
+//! * `U32`     — 4 bytes per index (wins for very sparse messages over
+//!               short vectors).
+//! * `Varint`  — delta-gap LEB128 (usually wins: sorted indices have
+//!               small gaps at DGC sparsities).
+
+/// LEB128 unsigned varint.
+pub fn write_varint(mut v: u64, out: &mut Vec<u8>) {
+    loop {
+        let byte = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(byte);
+            return;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+pub fn read_varint(bytes: &[u8], pos: &mut usize) -> u64 {
+    let mut v = 0u64;
+    let mut shift = 0;
+    loop {
+        let b = bytes[*pos];
+        *pos += 1;
+        v |= ((b & 0x7f) as u64) << shift;
+        if b & 0x80 == 0 {
+            return v;
+        }
+        shift += 7;
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum IndexScheme {
+    Bitmap = 0,
+    U32 = 1,
+    Varint = 2,
+}
+
+/// Encode sorted indices with the smallest applicable scheme.
+/// Format: `u8 scheme ‖ u32 k ‖ payload`.
+pub fn encode_indices(indices: &[u32], n: usize, out: &mut Vec<u8>) {
+    debug_assert!(indices.windows(2).all(|w| w[0] < w[1]), "sorted+unique");
+    let k = indices.len();
+    let bitmap_sz = n.div_ceil(8);
+    let u32_sz = 4 * k;
+    let mut varint_payload = Vec::with_capacity(2 * k);
+    let mut prev = 0u32;
+    for (i, &idx) in indices.iter().enumerate() {
+        let gap = if i == 0 { idx } else { idx - prev - 1 };
+        write_varint(gap as u64, &mut varint_payload);
+        prev = idx;
+    }
+    let (scheme, payload_len) = [
+        (IndexScheme::Bitmap, bitmap_sz),
+        (IndexScheme::U32, u32_sz),
+        (IndexScheme::Varint, varint_payload.len()),
+    ]
+    .into_iter()
+    .min_by_key(|(_, sz)| *sz)
+    .unwrap();
+
+    out.push(scheme as u8);
+    out.extend_from_slice(&(k as u32).to_le_bytes());
+    match scheme {
+        IndexScheme::Bitmap => {
+            let mut bm = vec![0u8; bitmap_sz];
+            for &i in indices {
+                bm[(i as usize) / 8] |= 1 << (i % 8);
+            }
+            out.extend_from_slice(&bm);
+        }
+        IndexScheme::U32 => {
+            for &i in indices {
+                out.extend_from_slice(&i.to_le_bytes());
+            }
+        }
+        IndexScheme::Varint => out.extend_from_slice(&varint_payload),
+    }
+    debug_assert_eq!(payload_len, payload_len); // silence unused in release
+}
+
+/// Decode indices; returns (indices, bytes consumed).
+pub fn decode_indices(bytes: &[u8], n: usize) -> (Vec<u32>, usize) {
+    let scheme = bytes[0];
+    let k = u32::from_le_bytes(bytes[1..5].try_into().unwrap()) as usize;
+    let mut pos = 5;
+    let mut out = Vec::with_capacity(k);
+    match scheme {
+        0 => {
+            let bitmap_sz = n.div_ceil(8);
+            let bm = &bytes[pos..pos + bitmap_sz];
+            for i in 0..n {
+                if bm[i / 8] & (1 << (i % 8)) != 0 {
+                    out.push(i as u32);
+                }
+            }
+            pos += bitmap_sz;
+        }
+        1 => {
+            for _ in 0..k {
+                out.push(u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()));
+                pos += 4;
+            }
+        }
+        2 => {
+            let mut prev = 0u32;
+            for i in 0..k {
+                let gap = read_varint(bytes, &mut pos) as u32;
+                let idx = if i == 0 { gap } else { prev + 1 + gap };
+                out.push(idx);
+                prev = idx;
+            }
+        }
+        s => panic!("unknown index scheme {s}"),
+    }
+    debug_assert_eq!(out.len(), k);
+    (out, pos)
+}
+
+/// Full sparse-vector message: indices + f32 values.
+/// Format: `u32 n ‖ indices ‖ k × f32`.
+pub fn encode_sparse(indices: &[u32], values: &[f32], n: usize) -> Vec<u8> {
+    assert_eq!(indices.len(), values.len());
+    let mut out = Vec::with_capacity(9 + indices.len() * 6);
+    out.extend_from_slice(&(n as u32).to_le_bytes());
+    encode_indices(indices, n, &mut out);
+    for v in values {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+pub fn decode_sparse(bytes: &[u8]) -> (Vec<u32>, Vec<f32>, usize) {
+    let n = u32::from_le_bytes(bytes[0..4].try_into().unwrap()) as usize;
+    let (indices, used) = decode_indices(&bytes[4..], n);
+    let mut pos = 4 + used;
+    let mut values = Vec::with_capacity(indices.len());
+    for _ in 0..indices.len() {
+        values.push(f32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()));
+        pos += 4;
+    }
+    (indices, values, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn varint_roundtrip() {
+        let vals = [0u64, 1, 127, 128, 300, 1 << 20, u64::MAX];
+        let mut buf = Vec::new();
+        for &v in &vals {
+            write_varint(v, &mut buf);
+        }
+        let mut pos = 0;
+        for &v in &vals {
+            assert_eq!(read_varint(&buf, &mut pos), v);
+        }
+        assert_eq!(pos, buf.len());
+    }
+
+    fn random_indices(n: usize, k: usize, seed: u64) -> Vec<u32> {
+        let mut rng = Pcg64::new(seed);
+        let mut idx = rng.sample_indices(n, k);
+        idx.sort_unstable();
+        idx.into_iter().map(|i| i as u32).collect()
+    }
+
+    #[test]
+    fn all_schemes_roundtrip() {
+        for (n, k) in [(1000usize, 5usize), (1000, 400), (64, 64), (10_000, 100), (8, 0)] {
+            let idx = random_indices(n, k, (n + k) as u64);
+            let mut buf = Vec::new();
+            encode_indices(&idx, n, &mut buf);
+            let (got, used) = decode_indices(&buf, n);
+            assert_eq!(got, idx, "n={n} k={k}");
+            assert_eq!(used, buf.len());
+        }
+    }
+
+    #[test]
+    fn dense_selection_picks_bitmap() {
+        let n = 800;
+        let idx = random_indices(n, 400, 1);
+        let mut buf = Vec::new();
+        encode_indices(&idx, n, &mut buf);
+        assert_eq!(buf[0], 0, "bitmap should win at 50% density");
+        assert_eq!(buf.len(), 5 + 100);
+    }
+
+    #[test]
+    fn sparse_selection_picks_varint() {
+        let n = 1_000_000;
+        let idx = random_indices(n, 500, 2);
+        let mut buf = Vec::new();
+        encode_indices(&idx, n, &mut buf);
+        assert_eq!(buf[0], 2, "varint should win at 0.05% density");
+        assert!(buf.len() < 5 + 4 * 500, "varint must beat u32 here");
+    }
+
+    #[test]
+    fn sparse_message_roundtrip() {
+        let n = 5000;
+        let idx = random_indices(n, 50, 3);
+        let vals: Vec<f32> = idx.iter().map(|&i| i as f32 * 0.25).collect();
+        let msg = encode_sparse(&idx, &vals, n);
+        let (gi, gv, gn) = decode_sparse(&msg);
+        assert_eq!(gn, n);
+        assert_eq!(gi, idx);
+        assert_eq!(gv, vals);
+    }
+}

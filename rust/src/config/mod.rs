@@ -1,0 +1,378 @@
+//! Experiment configuration + the paper's named presets.
+//!
+//! Every bench/example builds an [`ExperimentConfig`] (usually from a
+//! [`Preset`]) and hands it to `coordinator::run_experiment`. Configs
+//! round-trip through JSON (`to_json`/`from_json`) so experiment
+//! definitions can live in files and metrics records embed their full
+//! provenance.
+
+use crate::compression::dgc::DgcConfig;
+use crate::data::DataConfig;
+use crate::network::LinkConfig;
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// PJRT CPU running the AOT artifacts (requires `make artifacts`).
+    Pjrt,
+    /// Pure-Rust native MLP (artifact-free tests/benches).
+    Native,
+}
+
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// Manifest variant name (Pjrt) or a label (Native).
+    pub variant: String,
+    pub backend: Backend,
+    /// Total federated rounds T.
+    pub rounds: usize,
+    /// Total client population n.
+    pub num_clients: usize,
+    /// Fraction of clients selected per round (paper: 30% non-IID, 10% IID).
+    pub client_fraction: f64,
+    /// Sub-model strategy: none | fd | afd_multi | afd_single.
+    pub dropout: String,
+    /// Federated Dropout Rate (fraction of activations dropped).
+    pub fdr: f64,
+    /// Downlink codec: raw | quant8.
+    pub downlink: String,
+    /// Enable DGC on the uplink (raw packed values otherwise).
+    pub uplink_dgc: bool,
+    pub dgc: DgcConfig,
+    pub data: DataConfig,
+    pub link: LinkConfig,
+    pub seed: u64,
+    /// Evaluate the global model every k rounds (simulation-side only —
+    /// evaluation costs no simulated network time).
+    pub eval_every: usize,
+    /// Cap on pooled-test eval batches per evaluation.
+    pub eval_batch_limit: Option<usize>,
+    /// Stop early once smoothed test accuracy reaches this target.
+    pub target_accuracy: Option<f64>,
+    /// Override the manifest's learning rate.
+    pub lr_override: Option<f32>,
+    /// Native backend model dims (input, hidden, classes).
+    pub native_dims: (usize, usize, usize),
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            variant: "femnist_small".into(),
+            backend: Backend::Pjrt,
+            rounds: 100,
+            num_clients: 30,
+            client_fraction: 0.3,
+            dropout: "afd_multi".into(),
+            fdr: 0.25,
+            downlink: "quant8".into(),
+            uplink_dgc: true,
+            dgc: DgcConfig::default(),
+            data: DataConfig::default(),
+            link: LinkConfig::default(),
+            seed: 0,
+            eval_every: 5,
+            eval_batch_limit: Some(12),
+            target_accuracy: None,
+            lr_override: None,
+            native_dims: (32, 24, 6),
+        }
+    }
+}
+
+/// The paper's experiment presets (scaled; see DESIGN.md §2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Preset {
+    /// Fig. 2 / Table 1 row geometry: non-IID, Multi-Model AFD, 30% cohort.
+    FemnistSmallNonIid,
+    ShakespeareSmallNonIid,
+    Sent140SmallNonIid,
+    /// Fig. 3 / Table 2 geometry: IID, Single-Model AFD, 10% cohort.
+    FemnistSmallIid,
+    ShakespeareSmallIid,
+    Sent140SmallIid,
+    /// Artifact-free native MLP smoke preset.
+    NativeSmoke,
+}
+
+impl ExperimentConfig {
+    pub fn preset(p: Preset) -> ExperimentConfig {
+        let mut c = ExperimentConfig::default();
+        match p {
+            Preset::FemnistSmallNonIid => {
+                c.variant = "femnist_small".into();
+                c.dropout = "afd_multi".into();
+                c.client_fraction = 0.3;
+                c.data.iid = false;
+            }
+            Preset::ShakespeareSmallNonIid => {
+                c.variant = "shakespeare_small".into();
+                c.dropout = "afd_multi".into();
+                c.client_fraction = 0.3;
+                c.data.iid = false;
+                c.data.samples_per_client = (80, 200);
+            }
+            Preset::Sent140SmallNonIid => {
+                c.variant = "sent140_small".into();
+                c.dropout = "afd_multi".into();
+                c.client_fraction = 0.3;
+                c.data.iid = false;
+            }
+            Preset::FemnistSmallIid => {
+                c.variant = "femnist_small".into();
+                c.dropout = "afd_single".into();
+                c.client_fraction = 0.1;
+                c.data.iid = true;
+            }
+            Preset::ShakespeareSmallIid => {
+                c.variant = "shakespeare_small".into();
+                c.dropout = "afd_single".into();
+                c.client_fraction = 0.1;
+                c.data.iid = true;
+                c.data.samples_per_client = (80, 200);
+            }
+            Preset::Sent140SmallIid => {
+                c.variant = "sent140_small".into();
+                c.dropout = "afd_single".into();
+                c.client_fraction = 0.1;
+                c.data.iid = true;
+            }
+            Preset::NativeSmoke => {
+                c.variant = "native_mlp".into();
+                c.backend = Backend::Native;
+                c.rounds = 40;
+                c.num_clients = 20;
+                c.dropout = "afd_multi".into();
+                c.eval_every = 2;
+            }
+        }
+        c
+    }
+
+    pub fn preset_by_name(name: &str) -> anyhow::Result<ExperimentConfig> {
+        let p = match name {
+            "femnist_noniid" => Preset::FemnistSmallNonIid,
+            "shakespeare_noniid" => Preset::ShakespeareSmallNonIid,
+            "sent140_noniid" => Preset::Sent140SmallNonIid,
+            "femnist_iid" => Preset::FemnistSmallIid,
+            "shakespeare_iid" => Preset::ShakespeareSmallIid,
+            "sent140_iid" => Preset::Sent140SmallIid,
+            "native" => Preset::NativeSmoke,
+            other => anyhow::bail!("unknown preset {other:?}"),
+        };
+        Ok(ExperimentConfig::preset(p))
+    }
+
+    /// Cohort size m = ⌈fraction · n⌉, at least 1.
+    pub fn cohort_size(&self) -> usize {
+        ((self.num_clients as f64 * self.client_fraction).round() as usize)
+            .clamp(1, self.num_clients)
+    }
+
+    /// A short human id like `afd_multi+quant8+dgc` (tables/logs).
+    pub fn method_label(&self) -> String {
+        let mut parts = vec![self.dropout.clone()];
+        if self.downlink != "raw" {
+            parts.push(self.downlink.clone());
+        }
+        if self.uplink_dgc {
+            parts.push("dgc".into());
+        }
+        parts.join("+")
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("variant", Json::Str(self.variant.clone()));
+        j.set(
+            "backend",
+            Json::Str(
+                match self.backend {
+                    Backend::Pjrt => "pjrt",
+                    Backend::Native => "native",
+                }
+                .into(),
+            ),
+        );
+        j.set("rounds", Json::Num(self.rounds as f64));
+        j.set("num_clients", Json::Num(self.num_clients as f64));
+        j.set("client_fraction", Json::Num(self.client_fraction));
+        j.set("dropout", Json::Str(self.dropout.clone()));
+        j.set("fdr", Json::Num(self.fdr));
+        j.set("downlink", Json::Str(self.downlink.clone()));
+        j.set("uplink_dgc", Json::Bool(self.uplink_dgc));
+        j.set("dgc_sparsity", Json::Num(self.dgc.sparsity));
+        j.set("dgc_momentum", Json::Num(self.dgc.momentum as f64));
+        j.set(
+            "dgc_clip",
+            self.dgc
+                .clip_norm
+                .map(|c| Json::Num(c as f64))
+                .unwrap_or(Json::Null),
+        );
+        j.set("iid", Json::Bool(self.data.iid));
+        j.set("seed", Json::Num(self.seed as f64));
+        j.set("eval_every", Json::Num(self.eval_every as f64));
+        j.set(
+            "target_accuracy",
+            self.target_accuracy.map(Json::Num).unwrap_or(Json::Null),
+        );
+        j
+    }
+
+    /// Apply overrides parsed from a JSON object (partial configs OK).
+    pub fn apply_json(&mut self, j: &Json) -> anyhow::Result<()> {
+        if let Some(v) = j.get("variant").and_then(|v| v.as_str()) {
+            self.variant = v.to_string();
+        }
+        if let Some(v) = j.get("backend").and_then(|v| v.as_str()) {
+            self.backend = match v {
+                "pjrt" => Backend::Pjrt,
+                "native" => Backend::Native,
+                other => anyhow::bail!("unknown backend {other:?}"),
+            };
+        }
+        if let Some(v) = j.get("rounds").and_then(|v| v.as_usize()) {
+            self.rounds = v;
+        }
+        if let Some(v) = j.get("num_clients").and_then(|v| v.as_usize()) {
+            self.num_clients = v;
+        }
+        if let Some(v) = j.get("client_fraction").and_then(|v| v.as_f64()) {
+            self.client_fraction = v;
+        }
+        if let Some(v) = j.get("dropout").and_then(|v| v.as_str()) {
+            self.dropout = v.to_string();
+        }
+        if let Some(v) = j.get("fdr").and_then(|v| v.as_f64()) {
+            self.fdr = v;
+        }
+        if let Some(v) = j.get("downlink").and_then(|v| v.as_str()) {
+            self.downlink = v.to_string();
+        }
+        if let Some(v) = j.get("uplink_dgc").and_then(|v| v.as_bool()) {
+            self.uplink_dgc = v;
+        }
+        if let Some(v) = j.get("dgc_sparsity").and_then(|v| v.as_f64()) {
+            self.dgc.sparsity = v;
+        }
+        if let Some(v) = j.get("iid").and_then(|v| v.as_bool()) {
+            self.data.iid = v;
+        }
+        if let Some(v) = j.get("seed").and_then(|v| v.as_f64()) {
+            self.seed = v as u64;
+        }
+        if let Some(v) = j.get("eval_every").and_then(|v| v.as_usize()) {
+            self.eval_every = v;
+        }
+        if let Some(v) = j.get("target_accuracy").and_then(|v| v.as_f64()) {
+            self.target_accuracy = Some(v);
+        }
+        Ok(())
+    }
+
+    /// The four methods compared in every paper table, derived from a
+    /// base config: NoCompression, DGC, FD+DGC, AFD+DGC.
+    pub fn paper_method_grid(base: &ExperimentConfig, afd: &str) -> Vec<(String, ExperimentConfig)> {
+        let mut none = base.clone();
+        none.dropout = "none".into();
+        none.downlink = "raw".into();
+        none.uplink_dgc = false;
+
+        let mut dgc = base.clone();
+        dgc.dropout = "none".into();
+        dgc.downlink = "quant8".into();
+        dgc.uplink_dgc = true;
+
+        let mut fd = base.clone();
+        fd.dropout = "fd".into();
+        fd.downlink = "quant8".into();
+        fd.uplink_dgc = true;
+
+        let mut afd_cfg = base.clone();
+        afd_cfg.dropout = afd.into();
+        afd_cfg.downlink = "quant8".into();
+        afd_cfg.uplink_dgc = true;
+
+        vec![
+            ("No Compression".into(), none),
+            ("DGC".into(), dgc),
+            ("FD + DGC".into(), fd),
+            ("AFD + DGC".into(), afd_cfg),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cohort_size_bounds() {
+        let mut c = ExperimentConfig::default();
+        c.num_clients = 30;
+        c.client_fraction = 0.3;
+        assert_eq!(c.cohort_size(), 9);
+        c.client_fraction = 0.0001;
+        assert_eq!(c.cohort_size(), 1);
+        c.client_fraction = 1.0;
+        assert_eq!(c.cohort_size(), 30);
+    }
+
+    #[test]
+    fn presets_match_paper_geometry() {
+        let non_iid = ExperimentConfig::preset(Preset::FemnistSmallNonIid);
+        assert_eq!(non_iid.client_fraction, 0.3);
+        assert!(!non_iid.data.iid);
+        assert_eq!(non_iid.dropout, "afd_multi");
+
+        let iid = ExperimentConfig::preset(Preset::FemnistSmallIid);
+        assert_eq!(iid.client_fraction, 0.1);
+        assert!(iid.data.iid);
+        assert_eq!(iid.dropout, "afd_single");
+    }
+
+    #[test]
+    fn json_roundtrip_applies_overrides() {
+        let base = ExperimentConfig::default();
+        let j = base.to_json();
+        let mut other = ExperimentConfig::preset(Preset::NativeSmoke);
+        other.apply_json(&j).unwrap();
+        assert_eq!(other.variant, base.variant);
+        assert_eq!(other.rounds, base.rounds);
+        assert_eq!(other.dropout, base.dropout);
+
+        let partial = crate::util::json::parse(r#"{"fdr": 0.4, "rounds": 7}"#).unwrap();
+        let mut c = ExperimentConfig::default();
+        c.apply_json(&partial).unwrap();
+        assert_eq!(c.fdr, 0.4);
+        assert_eq!(c.rounds, 7);
+        assert_eq!(c.variant, "femnist_small"); // untouched
+    }
+
+    #[test]
+    fn method_grid_has_paper_rows() {
+        let base = ExperimentConfig::preset(Preset::FemnistSmallNonIid);
+        let grid = ExperimentConfig::paper_method_grid(&base, "afd_multi");
+        assert_eq!(grid.len(), 4);
+        assert_eq!(grid[0].0, "No Compression");
+        assert!(!grid[0].1.uplink_dgc);
+        assert_eq!(grid[0].1.downlink, "raw");
+        assert_eq!(grid[3].1.dropout, "afd_multi");
+        // All four share data geometry.
+        for (_, c) in &grid {
+            assert_eq!(c.num_clients, base.num_clients);
+            assert_eq!(c.seed, base.seed);
+        }
+    }
+
+    #[test]
+    fn method_labels() {
+        let mut c = ExperimentConfig::default();
+        assert_eq!(c.method_label(), "afd_multi+quant8+dgc");
+        c.uplink_dgc = false;
+        c.downlink = "raw".into();
+        c.dropout = "none".into();
+        assert_eq!(c.method_label(), "none");
+    }
+}

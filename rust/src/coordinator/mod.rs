@@ -1,0 +1,175 @@
+//! The federated-learning coordinator: the server of Fig. 1.
+//!
+//! Per round t (synchronous FedAvg, paper Problem Statement §):
+//!
+//! 1. sample the cohort S_t (m = ⌈fraction·n⌉ clients);
+//! 2. per client: strategy selects a sub-model (score-map logic for
+//!    AFD), the packed sub-model is **encoded with the downlink codec**
+//!    (8-bit Hadamard quantization) — the client starts from exactly
+//!    what the wire delivered;
+//! 3. the client runs one local epoch through the [`ModelRuntime`]
+//!    (PJRT artifact or native MLP) under the sub-model's masks;
+//! 4. the uplink ships either DGC-compressed deltas or the raw packed
+//!    sub-model; the server reconstructs each client's model;
+//! 5. FedAvg aggregates per coordinate (sample-count weighted),
+//!    coordinates nobody held keep their old value;
+//! 6. the network simulator charges the round's wall-clock time
+//!    (max over the cohort of down + compute + up);
+//! 7. losses are reported back to the strategy (score-map updates).
+
+pub mod experiment;
+
+pub use experiment::{run_experiment, Experiment};
+
+use crate::aggregation::FedAvg;
+use crate::compression::dgc;
+use crate::compression::DenseCodec;
+use crate::dropout::SubmodelStrategy;
+use crate::model::manifest::VariantSpec;
+use crate::model::packing;
+use crate::model::submodel::SubModel;
+use crate::network::{NetworkSim, RoundTiming};
+use crate::runtime::{EpochData, ModelRuntime};
+
+/// Everything exchanged for one client in one round (the simulated
+/// wire + the server-side bookkeeping needed to reconstruct it).
+pub struct ClientRoundOutcome {
+    pub client: usize,
+    pub submodel: SubModel,
+    pub train_loss: f32,
+    pub down_bytes: u64,
+    pub up_bytes: u64,
+    pub epoch_flops: f64,
+    /// Server-side reconstruction of the client's post-training model
+    /// (full coordinate space) + which coordinates it speaks for.
+    pub reconstructed: Vec<f32>,
+    pub coord_mask: Vec<bool>,
+}
+
+/// Run one client's round: downlink → local train → uplink.
+///
+/// `global` is W_t; returns the outcome to aggregate. This is the hot
+/// path of the whole system.
+#[allow(clippy::too_many_arguments)]
+pub fn run_client_round(
+    spec: &VariantSpec,
+    runtime: &dyn ModelRuntime,
+    global: &[f32],
+    submodel: &SubModel,
+    data: &EpochData,
+    lr: f32,
+    downlink: &dyn DenseCodec,
+    dgc_state: Option<&mut dgc::DgcState>,
+    round_seed: u64,
+    client: usize,
+) -> anyhow::Result<ClientRoundOutcome> {
+    // ---- Downlink: pack → encode → (wire) → decode → unpack ---------
+    let packed = packing::pack_values(spec, global, submodel);
+    let seed = round_seed ^ (client as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    let enc = downlink.encode(&packed, seed);
+    // Kept-unit bitmaps ride along uncompressed (the client must know
+    // which units it received).
+    let bitmap_bytes: u64 = spec
+        .mask_groups
+        .iter()
+        .map(|g| g.size.div_ceil(8) as u64)
+        .sum();
+    let down_bytes = enc.wire_bytes() + bitmap_bytes;
+    let decoded = downlink.decode(&enc, seed);
+
+    // The client's starting point: the global model with the sub-model
+    // coordinates replaced by what the wire delivered. Coordinates
+    // outside the sub-model exist only server-side; masked training
+    // never touches them.
+    let mut client_start = global.to_vec();
+    packing::unpack_values(spec, &decoded, submodel, &mut client_start);
+
+    // ---- Local training (one epoch; scan over batches inside XLA) ---
+    let out = runtime.train_epoch(&client_start, &submodel.masks_f32(), data, lr)?;
+
+    // ---- Uplink ------------------------------------------------------
+    let coord_mask = packing::coordinate_mask(spec, submodel);
+    let (up_bytes, reconstructed, coord_mask) = match dgc_state {
+        Some(st) => {
+            // Delta in full coordinate space (zero off-sub-model, so
+            // top-k naturally selects sub-model coordinates; residuals
+            // from earlier rounds may surface too — genuine DGC
+            // accumulation behaviour).
+            let mut delta = vec![0.0f32; spec.num_params];
+            crate::tensor::sub(&out.params, &client_start, &mut delta);
+            let msg = st.compress(&delta);
+            let up_bytes = msg.len() as u64;
+            let sparse_delta = dgc::decode(&msg);
+            let mut recon = client_start.clone();
+            crate::tensor::add_assign(&mut recon, &sparse_delta);
+            // The client speaks for its sub-model coords plus any
+            // residual coords DGC shipped.
+            let mut cm = coord_mask;
+            for (i, &v) in sparse_delta.iter().enumerate() {
+                if v != 0.0 {
+                    cm[i] = true;
+                }
+            }
+            (up_bytes, recon, cm)
+        }
+        None => {
+            // Raw packed sub-model values.
+            let packed_up = packing::pack_values(spec, &out.params, submodel);
+            let up_bytes = 4 * packed_up.len() as u64 + bitmap_bytes;
+            let mut recon = client_start.clone();
+            packing::unpack_values(spec, &packed_up, submodel, &mut recon);
+            (up_bytes, recon, coord_mask)
+        }
+    };
+
+    // Compute cost of the sub-model epoch: fwd + bwd ≈ 3× fwd FLOPs.
+    let epoch_flops = 3.0
+        * packing::effective_flops_per_sample(spec, submodel)
+        * spec.samples_per_round() as f64;
+
+    Ok(ClientRoundOutcome {
+        client,
+        submodel: submodel.clone(),
+        train_loss: out.mean_loss,
+        down_bytes,
+        up_bytes,
+        epoch_flops,
+        reconstructed,
+        coord_mask,
+    })
+}
+
+/// Aggregate a round's outcomes into W_{t+1} + charge network time.
+pub fn aggregate_round(
+    global: &[f32],
+    outcomes: &[ClientRoundOutcome],
+    sample_counts: &[usize],
+    agg: &mut FedAvg,
+    net: &NetworkSim,
+) -> (Vec<f32>, RoundTiming) {
+    agg.reset();
+    let mut jobs = Vec::with_capacity(outcomes.len());
+    for o in outcomes {
+        agg.add_masked(
+            &o.reconstructed,
+            &o.coord_mask,
+            sample_counts[o.client] as f64,
+        );
+        jobs.push((o.client, o.down_bytes, o.epoch_flops, o.up_bytes));
+    }
+    let timing = net.round(&jobs);
+    (agg.finalize(global), timing)
+}
+
+/// Report losses back to the strategy in cohort order, then close the
+/// round (Alg. 1 lines 15-23 / Alg. 2 lines 17-25).
+pub fn feed_strategy(
+    strategy: &mut dyn SubmodelStrategy,
+    round: usize,
+    outcomes: &[ClientRoundOutcome],
+) {
+    for o in outcomes {
+        strategy.report_loss(round, o.client, o.train_loss as f64);
+    }
+    strategy.end_round(round);
+}

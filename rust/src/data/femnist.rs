@@ -1,0 +1,359 @@
+//! Synthetic FEMNIST: 62-class glyph images partitioned by "writer".
+//!
+//! Each class has a prototype glyph — a deterministic mixture of
+//! gaussian strokes on the image grid. Each writer (client) owns a
+//! style: a small translation, intensity gain and stroke-width jitter
+//! applied to every glyph they "write", plus pixel noise per sample.
+//! Non-IID follows LEAF's structure (each writer covers a subset of
+//! classes with an own style); IID pools and re-deals.
+
+use crate::data::{partition, ClientDataset, DataConfig, FederatedDataset, Samples};
+use crate::model::manifest::VariantSpec;
+use crate::util::rng::Pcg64;
+
+/// Deterministic per-class stroke parameters.
+struct Prototype {
+    /// (cx, cy, sx, sy, amp) gaussian strokes in unit coordinates.
+    strokes: Vec<(f32, f32, f32, f32, f32)>,
+}
+
+fn prototype(class: usize, seed: u64) -> Prototype {
+    let mut rng = Pcg64::with_stream(seed ^ 0xfe31, class as u64 + 1);
+    let n = 3 + rng.below(3) as usize;
+    let strokes = (0..n)
+        .map(|_| {
+            (
+                rng.uniform(0.2, 0.8) as f32,
+                rng.uniform(0.2, 0.8) as f32,
+                rng.uniform(0.05, 0.22) as f32,
+                rng.uniform(0.05, 0.22) as f32,
+                rng.uniform(0.6, 1.0) as f32,
+            )
+        })
+        .collect();
+    Prototype { strokes }
+}
+
+/// Writer style transform.
+struct Style {
+    dx: f32,
+    dy: f32,
+    gain: f32,
+    width: f32,
+    noise: f32,
+}
+
+fn style(rng: &mut Pcg64) -> Style {
+    Style {
+        dx: rng.uniform(-0.08, 0.08) as f32,
+        dy: rng.uniform(-0.08, 0.08) as f32,
+        gain: rng.uniform(0.7, 1.3) as f32,
+        width: rng.uniform(0.85, 1.2) as f32,
+        noise: rng.uniform(0.05, 0.15) as f32,
+    }
+}
+
+fn render(
+    proto: &Prototype,
+    st: &Style,
+    side: usize,
+    rng: &mut Pcg64,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), side * side);
+    for py in 0..side {
+        for px in 0..side {
+            let x = (px as f32 + 0.5) / side as f32 - st.dx;
+            let y = (py as f32 + 0.5) / side as f32 - st.dy;
+            let mut v = 0.0f32;
+            for &(cx, cy, sx, sy, amp) in &proto.strokes {
+                let ddx = (x - cx) / (sx * st.width);
+                let ddy = (y - cy) / (sy * st.width);
+                v += amp * (-0.5 * (ddx * ddx + ddy * ddy)).exp();
+            }
+            out[py * side + px] =
+                (v * st.gain + rng.normal_f32(0.0, st.noise)).clamp(-0.5, 1.5);
+        }
+    }
+}
+
+pub fn generate(spec: &VariantSpec, cfg: &DataConfig) -> FederatedDataset {
+    let side = spec.input_shape[0];
+    assert_eq!(spec.input_shape.len(), 3, "femnist expects [H, W, C]");
+    let per = side * side * spec.input_shape[2];
+    let classes = spec.classes;
+    let mut rng = Pcg64::with_stream(cfg.seed, 0xfe);
+    let protos: Vec<Prototype> = (0..classes).map(|c| prototype(c, cfg.seed)).collect();
+
+    let sizes = partition::client_sizes(cfg, &mut rng);
+    // Non-IID: each writer covers ~half the classes (min 2).
+    let subsets = partition::class_subsets(
+        classes,
+        cfg.num_clients,
+        (classes / 2).max(2),
+        &mut rng,
+    );
+
+    let mut train_clients = Vec::with_capacity(cfg.num_clients);
+    let mut test_xs: Vec<f32> = Vec::new();
+    let mut test_ys: Vec<i32> = Vec::new();
+
+    // First generate per-writer pools (style applied), then either keep
+    // them (non-IID) or pool + re-deal (IID).
+    let mut all_xs: Vec<f32> = Vec::new();
+    let mut all_ys: Vec<i32> = Vec::new();
+    let mut writer_ranges = Vec::with_capacity(cfg.num_clients);
+    for (w, &n) in sizes.iter().enumerate() {
+        let mut wrng = rng.fork(w as u64);
+        let st = style(&mut wrng);
+        let start = all_ys.len();
+        let mut buf = vec![0.0f32; per];
+        for _ in 0..n {
+            let class = subsets[w][wrng.below(subsets[w].len() as u64) as usize];
+            render(&protos[class], &st, side, &mut wrng, &mut buf);
+            all_xs.extend_from_slice(&buf);
+            all_ys.push(class as i32);
+        }
+        writer_ranges.push(start..start + n);
+    }
+
+    let assignment: Vec<Vec<usize>> = if cfg.iid {
+        partition::iid_deal(all_ys.len(), &sizes, &mut rng)
+    } else {
+        writer_ranges.iter().map(|r| r.clone().collect()).collect()
+    };
+
+    for idxs in assignment {
+        let n_test = ((idxs.len() as f64) * cfg.test_fraction).round() as usize;
+        let (test_idx, train_idx) = idxs.split_at(n_test.min(idxs.len().saturating_sub(1)));
+        let mut xs = Vec::with_capacity(train_idx.len() * per);
+        let mut ys = Vec::with_capacity(train_idx.len());
+        for &i in train_idx {
+            xs.extend_from_slice(&all_xs[i * per..(i + 1) * per]);
+            ys.push(all_ys[i]);
+        }
+        for &i in test_idx {
+            test_xs.extend_from_slice(&all_xs[i * per..(i + 1) * per]);
+            test_ys.push(all_ys[i]);
+        }
+        train_clients.push(ClientDataset {
+            xs: Samples::F32(xs),
+            ys,
+            per_sample: per,
+        });
+    }
+
+    FederatedDataset {
+        clients: train_clients,
+        test: ClientDataset {
+            xs: Samples::F32(test_xs),
+            ys: test_ys,
+            per_sample: per,
+        },
+    }
+}
+
+/// Dense-vector variant for the synthetic MLP runtime (tests/benches):
+/// class-centred gaussian blobs over a flat feature vector.
+pub fn generate_dense(spec: &VariantSpec, cfg: &DataConfig) -> FederatedDataset {
+    let per: usize = spec.input_shape.iter().product();
+    let classes = spec.classes;
+    let mut rng = Pcg64::with_stream(cfg.seed, 0xde);
+    let sizes = partition::client_sizes(cfg, &mut rng);
+    let subsets = if cfg.iid {
+        vec![(0..classes).collect::<Vec<_>>(); cfg.num_clients]
+    } else {
+        partition::class_subsets(classes, cfg.num_clients, (classes / 2).max(2), &mut rng)
+    };
+    // Class centres: ±2 pattern over features, deterministic.
+    let centres: Vec<Vec<f32>> = (0..classes)
+        .map(|c| {
+            let mut crng = Pcg64::with_stream(cfg.seed ^ 0xce, c as u64 + 1);
+            (0..per).map(|_| crng.normal_f32(0.0, 1.5)).collect()
+        })
+        .collect();
+
+    let mut clients = Vec::new();
+    let mut test_xs = Vec::new();
+    let mut test_ys = Vec::new();
+    for (w, &n) in sizes.iter().enumerate() {
+        let mut wrng = rng.fork(w as u64 + 1000);
+        let n_test = ((n as f64) * cfg.test_fraction).round() as usize;
+        let mut xs = Vec::with_capacity(n * per);
+        let mut ys = Vec::with_capacity(n);
+        for i in 0..n {
+            let class = subsets[w][wrng.below(subsets[w].len() as u64) as usize];
+            let centre = &centres[class];
+            let sample: Vec<f32> = centre
+                .iter()
+                .map(|&c| c + wrng.normal_f32(0.0, 0.8))
+                .collect();
+            if i < n_test {
+                test_xs.extend_from_slice(&sample);
+                test_ys.push(class as i32);
+            } else {
+                xs.extend_from_slice(&sample);
+                ys.push(class as i32);
+            }
+        }
+        clients.push(ClientDataset {
+            xs: Samples::F32(xs),
+            ys,
+            per_sample: per,
+        });
+    }
+    FederatedDataset {
+        clients,
+        test: ClientDataset {
+            xs: Samples::F32(test_xs),
+            ys: test_ys,
+            per_sample: per,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native::mlp_spec;
+
+    fn cnn_like_spec() -> VariantSpec {
+        let mut spec = mlp_spec("f", 0, 4, 6, 10, 2, 0.1);
+        spec.dataset = "femnist".into();
+        spec.input_shape = vec![14, 14, 1];
+        spec
+    }
+
+    #[test]
+    fn generates_requested_structure() {
+        let spec = cnn_like_spec();
+        let cfg = DataConfig {
+            num_clients: 8,
+            samples_per_client: (20, 30),
+            iid: false,
+            test_fraction: 0.2,
+            seed: 1,
+        };
+        let ds = generate(&spec, &cfg);
+        assert_eq!(ds.num_clients(), 8);
+        for c in &ds.clients {
+            assert!(!c.is_empty());
+            assert_eq!(c.per_sample, 14 * 14);
+            assert!(c.ys.iter().all(|&y| (0..6).contains(&y)));
+        }
+        assert!(!ds.test.is_empty());
+        // Test fraction ≈ 20% of total.
+        let total = ds.total_train_samples() + ds.test.len();
+        let frac = ds.test.len() as f64 / total as f64;
+        assert!((0.1..0.3).contains(&frac), "test frac {frac}");
+    }
+
+    #[test]
+    fn noniid_writers_have_class_skew() {
+        let spec = cnn_like_spec();
+        let cfg = DataConfig {
+            num_clients: 6,
+            samples_per_client: (40, 40),
+            iid: false,
+            test_fraction: 0.0,
+            seed: 2,
+        };
+        let ds = generate(&spec, &cfg);
+        // Each non-IID writer must miss some classes.
+        let mut any_skew = false;
+        for c in &ds.clients {
+            let mut seen = vec![false; 6];
+            for &y in &c.ys {
+                seen[y as usize] = true;
+            }
+            if seen.iter().any(|&s| !s) {
+                any_skew = true;
+            }
+        }
+        assert!(any_skew, "non-IID writers should not cover all classes");
+    }
+
+    #[test]
+    fn iid_clients_cover_most_classes() {
+        let spec = cnn_like_spec();
+        let cfg = DataConfig {
+            num_clients: 4,
+            samples_per_client: (60, 60),
+            iid: true,
+            test_fraction: 0.0,
+            seed: 3,
+        };
+        let ds = generate(&spec, &cfg);
+        for c in &ds.clients {
+            let mut seen = vec![false; 6];
+            for &y in &c.ys {
+                seen[y as usize] = true;
+            }
+            let covered = seen.iter().filter(|&&s| s).count();
+            assert!(covered >= 4, "IID client covers only {covered}/6 classes");
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let spec = cnn_like_spec();
+        let cfg = DataConfig {
+            num_clients: 3,
+            samples_per_client: (10, 12),
+            iid: false,
+            test_fraction: 0.2,
+            seed: 9,
+        };
+        let a = generate(&spec, &cfg);
+        let b = generate(&spec, &cfg);
+        assert_eq!(a.clients[0].ys, b.clients[0].ys);
+        match (&a.clients[0].xs, &b.clients[0].xs) {
+            (Samples::F32(x), Samples::F32(y)) => assert_eq!(x, y),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn classes_are_visually_distinct() {
+        // Same-class samples must be closer (L2) than cross-class ones on
+        // average — otherwise nothing is learnable.
+        let spec = cnn_like_spec();
+        let cfg = DataConfig {
+            num_clients: 2,
+            samples_per_client: (80, 80),
+            iid: true,
+            test_fraction: 0.0,
+            seed: 4,
+        };
+        let ds = generate(&spec, &cfg);
+        let c = &ds.clients[0];
+        let per = c.per_sample;
+        let xs = match &c.xs {
+            Samples::F32(v) => v,
+            _ => unreachable!(),
+        };
+        let mut same = (0.0f64, 0usize);
+        let mut diff = (0.0f64, 0usize);
+        for i in 0..c.len() {
+            for j in (i + 1)..c.len() {
+                let d: f64 = (0..per)
+                    .map(|k| {
+                        let e = (xs[i * per + k] - xs[j * per + k]) as f64;
+                        e * e
+                    })
+                    .sum();
+                if c.ys[i] == c.ys[j] {
+                    same = (same.0 + d, same.1 + 1);
+                } else {
+                    diff = (diff.0 + d, diff.1 + 1);
+                }
+            }
+        }
+        let same_avg = same.0 / same.1 as f64;
+        let diff_avg = diff.0 / diff.1 as f64;
+        assert!(
+            diff_avg > same_avg * 1.3,
+            "same {same_avg:.2} vs diff {diff_avg:.2}"
+        );
+    }
+}

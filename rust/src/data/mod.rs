@@ -1,0 +1,210 @@
+//! Synthetic federated datasets standing in for LEAF (see DESIGN.md §2).
+//!
+//! The real LEAF benchmark partitions privacy-sensitive user data
+//! (handwriting by writer, plays by role, tweets by account). What the
+//! AFD experiments *need* from the data is (a) a learnable supervised
+//! signal for each of the paper's three model families and (b)
+//! controllable statistical heterogeneity across clients. The
+//! generators here provide both, deterministically from a seed:
+//!
+//! * [`femnist`]   — 62-class glyph images, client = "writer" with an
+//!   own style transform + class subset (non-IID) or pooled (IID);
+//! * [`shakespeare`] — next-character prediction over role-conditioned
+//!   Markov text seeded from an embedded public-domain excerpt;
+//! * [`sent140`]   — 2-class lexicon/template tweets, client = "user"
+//!   with an own vocabulary bias.
+
+pub mod femnist;
+pub mod partition;
+pub mod sent140;
+pub mod shakespeare;
+
+use crate::model::manifest::{DType, VariantSpec};
+use crate::runtime::{BatchInput, EpochData, EvalBatch};
+use crate::util::rng::Pcg64;
+
+/// Raw per-sample storage (one flat buffer, `n * per_sample` long).
+#[derive(Clone, Debug)]
+pub enum Samples {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Samples {
+    pub fn dtype(&self) -> DType {
+        match self {
+            Samples::F32(_) => DType::F32,
+            Samples::I32(_) => DType::I32,
+        }
+    }
+}
+
+/// One client's local dataset (train split) or a pooled test set.
+#[derive(Clone, Debug)]
+pub struct ClientDataset {
+    pub xs: Samples,
+    pub ys: Vec<i32>,
+    pub per_sample: usize,
+}
+
+impl ClientDataset {
+    pub fn len(&self) -> usize {
+        self.ys.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ys.is_empty()
+    }
+
+    fn gather(&self, order: &[usize]) -> (Samples, Vec<i32>) {
+        let ys = order.iter().map(|&i| self.ys[i]).collect();
+        let xs = match &self.xs {
+            Samples::F32(v) => Samples::F32(
+                order
+                    .iter()
+                    .flat_map(|&i| v[i * self.per_sample..(i + 1) * self.per_sample].iter().copied())
+                    .collect(),
+            ),
+            Samples::I32(v) => Samples::I32(
+                order
+                    .iter()
+                    .flat_map(|&i| v[i * self.per_sample..(i + 1) * self.per_sample].iter().copied())
+                    .collect(),
+            ),
+        };
+        (xs, ys)
+    }
+
+    /// Assemble one local epoch (`num_batches × batch_size` samples) for
+    /// the train artifact: a shuffled pass over the local data, cycling
+    /// if the client holds fewer samples than one epoch consumes.
+    pub fn epoch_data(&self, spec: &VariantSpec, rng: &mut Pcg64) -> EpochData {
+        let need = spec.samples_per_round();
+        let mut order: Vec<usize> = (0..self.len()).collect();
+        rng.shuffle(&mut order);
+        while order.len() < need {
+            let mut again: Vec<usize> = (0..self.len()).collect();
+            rng.shuffle(&mut again);
+            order.extend(again);
+        }
+        order.truncate(need);
+        let (xs, ys) = self.gather(&order);
+        EpochData {
+            xs: match xs {
+                Samples::F32(v) => BatchInput::F32(v),
+                Samples::I32(v) => BatchInput::I32(v),
+            },
+            ys,
+        }
+    }
+
+    /// Full pass as eval batches (tail padded by wrapping; callers use
+    /// `limit` to cap eval cost).
+    pub fn eval_batches(&self, spec: &VariantSpec, limit: Option<usize>) -> Vec<EvalBatch> {
+        let bs = spec.batch_size;
+        let n = self.len();
+        let nb = n.div_ceil(bs).min(limit.unwrap_or(usize::MAX));
+        (0..nb)
+            .map(|b| {
+                let order: Vec<usize> = (0..bs).map(|i| (b * bs + i) % n).collect();
+                let (xs, ys) = self.gather(&order);
+                EvalBatch {
+                    xs: match xs {
+                        Samples::F32(v) => BatchInput::F32(v),
+                        Samples::I32(v) => BatchInput::I32(v),
+                    },
+                    ys,
+                }
+            })
+            .collect()
+    }
+}
+
+/// A federated dataset: per-client train splits + a pooled test set
+/// (the paper reserves 20% of each client's data for testing).
+#[derive(Clone, Debug)]
+pub struct FederatedDataset {
+    pub clients: Vec<ClientDataset>,
+    pub test: ClientDataset,
+}
+
+impl FederatedDataset {
+    pub fn num_clients(&self) -> usize {
+        self.clients.len()
+    }
+
+    pub fn total_train_samples(&self) -> usize {
+        self.clients.iter().map(|c| c.len()).sum()
+    }
+}
+
+/// Generation knobs shared by the three dataset families.
+#[derive(Clone, Debug)]
+pub struct DataConfig {
+    pub num_clients: usize,
+    /// Per-client sample count range (inclusive), drawn uniformly.
+    pub samples_per_client: (usize, usize),
+    /// IID: pool + shuffle + deal evenly. Non-IID: writer/role/user skew.
+    pub iid: bool,
+    /// Fraction of each client's data reserved for the pooled test set.
+    pub test_fraction: f64,
+    pub seed: u64,
+}
+
+impl Default for DataConfig {
+    fn default() -> Self {
+        DataConfig {
+            num_clients: 30,
+            samples_per_client: (60, 140),
+            iid: false,
+            test_fraction: 0.2,
+            seed: 0,
+        }
+    }
+}
+
+/// Dispatch on the variant's dataset family.
+pub fn generate(spec: &VariantSpec, cfg: &DataConfig) -> FederatedDataset {
+    match spec.dataset.as_str() {
+        "femnist" => femnist::generate(spec, cfg),
+        "shakespeare" => shakespeare::generate(spec, cfg),
+        "sent140" => sent140::generate(spec, cfg),
+        "synthetic" => femnist::generate_dense(spec, cfg),
+        other => panic!("unknown dataset family {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native::mlp_spec;
+
+    #[test]
+    fn epoch_data_cycles_small_clients() {
+        let spec = mlp_spec("t", 4, 8, 3, 10, 5, 0.1); // needs 50 samples
+        let ds = ClientDataset {
+            xs: Samples::F32((0..12 * 4).map(|i| i as f32).collect()),
+            ys: (0..12).map(|i| (i % 3) as i32).collect(),
+            per_sample: 4,
+        };
+        let mut rng = Pcg64::new(0);
+        let ep = ds.epoch_data(&spec, &mut rng);
+        assert_eq!(ep.ys.len(), 50);
+        assert_eq!(ep.xs.len(), 200);
+    }
+
+    #[test]
+    fn eval_batches_cover_and_wrap() {
+        let spec = mlp_spec("t", 4, 8, 3, 10, 5, 0.1);
+        let ds = ClientDataset {
+            xs: Samples::F32((0..25 * 4).map(|i| i as f32).collect()),
+            ys: (0..25).map(|i| (i % 3) as i32).collect(),
+            per_sample: 4,
+        };
+        let batches = ds.eval_batches(&spec, None);
+        assert_eq!(batches.len(), 3); // ceil(25/10)
+        assert!(batches.iter().all(|b| b.ys.len() == 10));
+        let limited = ds.eval_batches(&spec, Some(2));
+        assert_eq!(limited.len(), 2);
+    }
+}

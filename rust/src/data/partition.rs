@@ -1,0 +1,97 @@
+//! Partitioning helpers shared by the dataset generators.
+
+use crate::util::rng::Pcg64;
+
+/// Draw per-client sample counts uniformly from the configured range.
+pub fn client_sizes(cfg: &super::DataConfig, rng: &mut Pcg64) -> Vec<usize> {
+    let (lo, hi) = cfg.samples_per_client;
+    assert!(lo >= 1 && hi >= lo, "bad samples_per_client range");
+    (0..cfg.num_clients)
+        .map(|_| lo + rng.below((hi - lo + 1) as u64) as usize)
+        .collect()
+}
+
+/// Non-IID class skew: each client sees `classes_per_client` of the
+/// label space (LEAF's writer/role/user effect). Returns per-client
+/// class lists.
+pub fn class_subsets(
+    num_classes: usize,
+    num_clients: usize,
+    classes_per_client: usize,
+    rng: &mut Pcg64,
+) -> Vec<Vec<usize>> {
+    let k = classes_per_client.clamp(1, num_classes);
+    (0..num_clients)
+        .map(|_| rng.sample_indices(num_classes, k))
+        .collect()
+}
+
+/// IID re-deal: pool every sample index, shuffle, deal out contiguous
+/// chunks sized like the original clients (the paper's "data is sampled
+/// and randomly distributed over the clients").
+pub fn iid_deal(total: usize, sizes: &[usize], rng: &mut Pcg64) -> Vec<Vec<usize>> {
+    let want: usize = sizes.iter().sum();
+    let mut pool: Vec<usize> = (0..total).collect();
+    rng.shuffle(&mut pool);
+    while pool.len() < want {
+        // Sample with replacement if the pool is short (tiny configs).
+        pool.push(rng.below(total as u64) as usize);
+    }
+    let mut out = Vec::with_capacity(sizes.len());
+    let mut off = 0;
+    for &s in sizes {
+        out.push(pool[off..off + s].to_vec());
+        off += s;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DataConfig;
+
+    #[test]
+    fn sizes_in_range() {
+        let cfg = DataConfig {
+            num_clients: 50,
+            samples_per_client: (10, 20),
+            ..Default::default()
+        };
+        let mut rng = Pcg64::new(0);
+        let sizes = client_sizes(&cfg, &mut rng);
+        assert_eq!(sizes.len(), 50);
+        assert!(sizes.iter().all(|&s| (10..=20).contains(&s)));
+        assert!(sizes.iter().any(|&s| s != sizes[0]), "sizes should vary");
+    }
+
+    #[test]
+    fn class_subsets_have_k_distinct() {
+        let mut rng = Pcg64::new(1);
+        let subs = class_subsets(10, 20, 4, &mut rng);
+        for s in &subs {
+            let mut t = s.clone();
+            t.sort_unstable();
+            t.dedup();
+            assert_eq!(t.len(), 4);
+        }
+        // Clients must differ (heterogeneity).
+        assert!(subs.iter().any(|s| s != &subs[0]));
+    }
+
+    #[test]
+    fn iid_deal_covers_requested_sizes() {
+        let mut rng = Pcg64::new(2);
+        let sizes = vec![5, 7, 3];
+        let deal = iid_deal(100, &sizes, &mut rng);
+        assert_eq!(deal.iter().map(Vec::len).collect::<Vec<_>>(), sizes);
+        assert!(deal.iter().flatten().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn iid_deal_oversubscribes_with_replacement() {
+        let mut rng = Pcg64::new(3);
+        let deal = iid_deal(4, &[10], &mut rng);
+        assert_eq!(deal[0].len(), 10);
+    }
+}

@@ -1,0 +1,288 @@
+//! Synthetic Sentiment140: 2-class tweet sentiment, client = "user".
+//!
+//! Tweets are lexicon/template compositions: a sentiment skeleton drawn
+//! from positive/negative word lists plus neutral filler, tokenized to
+//! ids via a deterministic hash into the model's vocabulary (standing in
+//! for a GloVe lookup table, which the model treats as a frozen
+//! embedding — exactly the paper's setup). Non-IID: every user has an
+//! own filler-vocabulary bias and a sentiment prior; IID pools+re-deals.
+
+use crate::data::{partition, ClientDataset, DataConfig, FederatedDataset, Samples};
+use crate::model::manifest::VariantSpec;
+use crate::util::rng::Pcg64;
+
+const POSITIVE: &[&str] = &[
+    "love", "great", "awesome", "happy", "wonderful", "best", "amazing",
+    "excited", "fantastic", "perfect", "beautiful", "win", "delighted",
+    "brilliant", "joy", "smile", "sunshine", "sweet", "good", "nice",
+];
+
+const NEGATIVE: &[&str] = &[
+    "hate", "awful", "terrible", "sad", "horrible", "worst", "angry",
+    "disappointed", "broken", "fail", "ugly", "lose", "miserable", "gross",
+    "pain", "cry", "rainy", "sour", "bad", "annoying",
+];
+
+const FILLER: &[&str] = &[
+    "the", "a", "my", "today", "really", "just", "so", "this", "that",
+    "morning", "night", "coffee", "work", "school", "phone", "game",
+    "movie", "song", "friend", "dog", "cat", "weather", "monday", "friday",
+    "weekend", "dinner", "lunch", "train", "bus", "city", "home", "team",
+    "match", "show", "book", "class", "test", "traffic", "meeting", "very",
+];
+
+/// Deterministic token id for a word (a stand-in for a GloVe row index).
+///
+/// Id layout (the convention shared with the frozen embedding table in
+/// `python/compile/model.py::lstm_init`): 0 = padding; 1..=20 positive
+/// lexicon; 21..=40 negative lexicon; 41.. hashed filler. The embedding
+/// generator plants a latent sentiment axis on ids 1..=40, emulating the
+/// sentiment structure real pretrained GloVe vectors carry.
+pub fn token_id(word: &str, vocab: usize) -> i32 {
+    if let Some(i) = POSITIVE.iter().position(|w| *w == word) {
+        return 1 + i as i32;
+    }
+    if let Some(i) = NEGATIVE.iter().position(|w| *w == word) {
+        return 21 + i as i32;
+    }
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in word.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    (41 + (h % (vocab as u64 - 41))) as i32
+}
+
+fn compose_tweet(
+    label: usize,
+    seq: usize,
+    vocab: usize,
+    filler_bias: &[usize],
+    rng: &mut Pcg64,
+) -> Vec<i32> {
+    let lex = if label == 1 { POSITIVE } else { NEGATIVE };
+    // 2-4 sentiment words, rest filler, then pad with 0.
+    let n_sent = 2 + rng.below(3) as usize;
+    let n_fill = (seq / 2 + rng.below((seq / 3) as u64 + 1) as usize)
+        .min(seq.saturating_sub(n_sent));
+    let mut words: Vec<i32> = Vec::with_capacity(seq);
+    for _ in 0..n_sent {
+        words.push(token_id(lex[rng.below(lex.len() as u64) as usize], vocab));
+    }
+    for _ in 0..n_fill {
+        let w = filler_bias[rng.below(filler_bias.len() as u64) as usize];
+        words.push(token_id(FILLER[w], vocab));
+    }
+    rng.shuffle(&mut words);
+    words.truncate(seq);
+    while words.len() < seq {
+        words.push(0); // pad
+    }
+    words
+}
+
+pub fn generate(spec: &VariantSpec, cfg: &DataConfig) -> FederatedDataset {
+    let seq = spec.input_shape[0];
+    assert_eq!(spec.classes, 2, "sent140 is binary");
+    let vocab = spec.vocab.max(64);
+    let mut rng = Pcg64::with_stream(cfg.seed, 0x5e);
+    let sizes = partition::client_sizes(cfg, &mut rng);
+
+    // Per-user style: filler vocabulary subset + sentiment prior.
+    let mut pool_xs: Vec<i32> = Vec::new();
+    let mut pool_ys: Vec<i32> = Vec::new();
+    for (u, &n) in sizes.iter().enumerate() {
+        let mut urng = rng.fork(u as u64 + 77);
+        let filler_bias: Vec<usize> = if cfg.iid {
+            (0..FILLER.len()).collect()
+        } else {
+            urng.sample_indices(FILLER.len(), FILLER.len() / 3)
+        };
+        let pos_prior = if cfg.iid {
+            0.5
+        } else {
+            urng.uniform(0.25, 0.75)
+        };
+        for _ in 0..n {
+            let label = if urng.next_f64() < pos_prior { 1 } else { 0 };
+            let tweet = compose_tweet(label, seq, vocab, &filler_bias, &mut urng);
+            pool_xs.extend_from_slice(&tweet);
+            pool_ys.push(label as i32);
+        }
+    }
+
+    let assignment: Vec<Vec<usize>> = if cfg.iid {
+        partition::iid_deal(pool_ys.len(), &sizes, &mut rng)
+    } else {
+        let mut out = Vec::with_capacity(sizes.len());
+        let mut off = 0;
+        for &n in &sizes {
+            out.push((off..off + n).collect());
+            off += n;
+        }
+        out
+    };
+
+    let mut clients = Vec::with_capacity(cfg.num_clients);
+    let mut test_xs = Vec::new();
+    let mut test_ys = Vec::new();
+    for idxs in assignment {
+        let n_test = ((idxs.len() as f64) * cfg.test_fraction).round() as usize;
+        let (test_idx, train_idx) =
+            idxs.split_at(n_test.min(idxs.len().saturating_sub(1)));
+        let mut xs = Vec::with_capacity(train_idx.len() * seq);
+        let mut ys = Vec::with_capacity(train_idx.len());
+        for &i in train_idx {
+            xs.extend_from_slice(&pool_xs[i * seq..(i + 1) * seq]);
+            ys.push(pool_ys[i]);
+        }
+        for &i in test_idx {
+            test_xs.extend_from_slice(&pool_xs[i * seq..(i + 1) * seq]);
+            test_ys.push(pool_ys[i]);
+        }
+        clients.push(ClientDataset {
+            xs: Samples::I32(xs),
+            ys,
+            per_sample: seq,
+        });
+    }
+
+    FederatedDataset {
+        clients,
+        test: ClientDataset {
+            xs: Samples::I32(test_xs),
+            ys: test_ys,
+            per_sample: seq,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native::mlp_spec;
+
+    fn sent_spec() -> VariantSpec {
+        let mut spec = mlp_spec("s", 0, 4, 2, 10, 2, 0.1);
+        spec.dataset = "sent140".into();
+        spec.input_shape = vec![25];
+        spec.classes = 2;
+        spec.vocab = 2000;
+        spec
+    }
+
+    #[test]
+    fn token_ids_stable_and_in_range() {
+        assert_eq!(token_id("love", 2000), token_id("love", 2000));
+        assert_ne!(token_id("love", 2000), token_id("hate", 2000));
+        for w in POSITIVE.iter().chain(NEGATIVE).chain(FILLER) {
+            let t = token_id(w, 2000);
+            assert!((1..2000).contains(&t), "{w} -> {t}");
+        }
+    }
+
+    #[test]
+    fn lexicons_are_disjoint() {
+        for p in POSITIVE {
+            assert!(!NEGATIVE.contains(p), "{p} in both lexicons");
+        }
+    }
+
+    #[test]
+    fn generates_balanced_iid_labels() {
+        let cfg = DataConfig {
+            num_clients: 6,
+            samples_per_client: (100, 100),
+            iid: true,
+            test_fraction: 0.2,
+            seed: 5,
+        };
+        let ds = generate(&sent_spec(), &cfg);
+        let total: usize = ds.clients.iter().map(|c| c.len()).sum();
+        let pos: usize = ds
+            .clients
+            .iter()
+            .flat_map(|c| c.ys.iter())
+            .filter(|&&y| y == 1)
+            .count();
+        let frac = pos as f64 / total as f64;
+        assert!((0.4..0.6).contains(&frac), "pos frac {frac}");
+    }
+
+    #[test]
+    fn noniid_users_have_label_skew() {
+        let cfg = DataConfig {
+            num_clients: 12,
+            samples_per_client: (80, 80),
+            iid: false,
+            test_fraction: 0.0,
+            seed: 6,
+        };
+        let ds = generate(&sent_spec(), &cfg);
+        let fracs: Vec<f64> = ds
+            .clients
+            .iter()
+            .map(|c| {
+                c.ys.iter().filter(|&&y| y == 1).count() as f64 / c.len() as f64
+            })
+            .collect();
+        let spread = fracs
+            .iter()
+            .fold(0.0f64, |m, &f| m.max(f))
+            - fracs.iter().fold(1.0f64, |m, &f| m.min(f));
+        assert!(spread > 0.15, "user priors should vary, spread={spread}");
+    }
+
+    #[test]
+    fn tweets_are_padded_sequences() {
+        let cfg = DataConfig {
+            num_clients: 2,
+            samples_per_client: (20, 20),
+            iid: false,
+            test_fraction: 0.0,
+            seed: 7,
+        };
+        let spec = sent_spec();
+        let ds = generate(&spec, &cfg);
+        for c in &ds.clients {
+            let xs = match &c.xs {
+                Samples::I32(v) => v,
+                _ => panic!(),
+            };
+            assert_eq!(xs.len(), c.len() * 25);
+            assert!(xs.iter().all(|&t| (0..2000).contains(&t)));
+        }
+    }
+
+    #[test]
+    fn sentiment_words_separate_classes() {
+        // Positive tweets must contain positive-lexicon tokens and not
+        // negative ones (and vice versa) — the learnable signal.
+        let cfg = DataConfig {
+            num_clients: 1,
+            samples_per_client: (200, 200),
+            iid: true,
+            test_fraction: 0.0,
+            seed: 8,
+        };
+        let spec = sent_spec();
+        let ds = generate(&spec, &cfg);
+        let c = &ds.clients[0];
+        let xs = match &c.xs {
+            Samples::I32(v) => v,
+            _ => panic!(),
+        };
+        let pos_ids: Vec<i32> = POSITIVE.iter().map(|w| token_id(w, 2000)).collect();
+        let neg_ids: Vec<i32> = NEGATIVE.iter().map(|w| token_id(w, 2000)).collect();
+        for (i, &y) in c.ys.iter().enumerate() {
+            let toks = &xs[i * 25..(i + 1) * 25];
+            let has_pos = toks.iter().any(|t| pos_ids.contains(t));
+            let has_neg = toks.iter().any(|t| neg_ids.contains(t));
+            if y == 1 {
+                assert!(has_pos && !has_neg, "tweet {i} mislabeled");
+            } else {
+                assert!(has_neg && !has_pos, "tweet {i} mislabeled");
+            }
+        }
+    }
+}

@@ -1,0 +1,335 @@
+//! Synthetic Shakespeare: next-character prediction, client = "role".
+//!
+//! LEAF builds this task from *The Complete Works*; each speaking role
+//! is a client. We embed a small public-domain excerpt (below) as the
+//! base corpus and give every role its own order-2 character Markov
+//! chain: the transition counts from the base corpus, re-weighted by a
+//! role-specific perturbation, plus a role catch-phrase mixed into the
+//! stream. That preserves the properties AFD interacts with — character
+//! sequences with shared global structure and per-client distribution
+//! shift — with variable client sizes.
+//!
+//! Character set: 26 lowercase + 26 uppercase + space = 53 classes,
+//! matching the paper's "class label between 0 and 52".
+
+use crate::data::{partition, ClientDataset, DataConfig, FederatedDataset, Samples};
+use crate::model::manifest::VariantSpec;
+use crate::util::rng::Pcg64;
+
+/// Public-domain Shakespeare excerpts (Sonnet 18, Hamlet III.i, Macbeth
+/// V.v, Richard III I.i) used to seed the per-role Markov chains.
+pub const BASE_CORPUS: &str = "Shall I compare thee to a summers day \
+Thou art more lovely and more temperate Rough winds do shake the darling \
+buds of May And summers lease hath all too short a date Sometime too hot \
+the eye of heaven shines And often is his gold complexion dimmd And every \
+fair from fair sometime declines By chance or natures changing course \
+untrimmd But thy eternal summer shall not fade Nor lose possession of \
+that fair thou owest Nor shall Death brag thou wanderst in his shade \
+When in eternal lines to time thou growest So long as men can breathe or \
+eyes can see So long lives this and this gives life to thee \
+To be or not to be that is the question Whether tis nobler in the mind \
+to suffer The slings and arrows of outrageous fortune Or to take arms \
+against a sea of troubles And by opposing end them To die to sleep No \
+more and by a sleep to say we end The heartache and the thousand natural \
+shocks That flesh is heir to tis a consummation Devoutly to be wishd To \
+die to sleep To sleep perchance to dream ay theres the rub For in that \
+sleep of death what dreams may come When we have shuffled off this \
+mortal coil Must give us pause \
+Tomorrow and tomorrow and tomorrow Creeps in this petty pace from day \
+to day To the last syllable of recorded time And all our yesterdays \
+have lighted fools The way to dusty death Out out brief candle Life is \
+but a walking shadow a poor player That struts and frets his hour upon \
+the stage And then is heard no more It is a tale Told by an idiot full \
+of sound and fury Signifying nothing \
+Now is the winter of our discontent Made glorious summer by this sun of \
+York And all the clouds that lourd upon our house In the deep bosom of \
+the ocean buried Now are our brows bound with victorious wreaths Our \
+bruised arms hung up for monuments Our stern alarums changed to merry \
+meetings Our dreadful marches to delightful measures";
+
+pub const CHARSET_SIZE: usize = 53;
+
+/// Map a char to [0, 53): a-z → 0..26, A-Z → 26..52, everything else → 52
+/// (space).
+pub fn char_to_class(c: char) -> usize {
+    match c {
+        'a'..='z' => (c as usize) - ('a' as usize),
+        'A'..='Z' => 26 + (c as usize) - ('A' as usize),
+        _ => 52,
+    }
+}
+
+pub fn class_to_char(k: usize) -> char {
+    match k {
+        0..=25 => (b'a' + k as u8) as char,
+        26..=51 => (b'A' + (k - 26) as u8) as char,
+        _ => ' ',
+    }
+}
+
+/// Order-2 Markov transition table over the 53-char alphabet.
+struct Markov {
+    /// counts[prev2 * 53 * 53 ... ] — flattened [53, 53, 53].
+    counts: Vec<f32>,
+}
+
+impl Markov {
+    fn from_text(text: &str) -> Markov {
+        let mut counts = vec![0.0f32; CHARSET_SIZE * CHARSET_SIZE * CHARSET_SIZE];
+        let ids: Vec<usize> = text.chars().map(char_to_class).collect();
+        for w in ids.windows(3) {
+            counts[(w[0] * CHARSET_SIZE + w[1]) * CHARSET_SIZE + w[2]] += 1.0;
+        }
+        Markov { counts }
+    }
+
+    /// Sample the next char given the previous two, with a role-specific
+    /// multiplicative perturbation and add-k smoothing.
+    fn next(&self, a: usize, b: usize, perturb: &[f32], rng: &mut Pcg64) -> usize {
+        let base = (a * CHARSET_SIZE + b) * CHARSET_SIZE;
+        let row = &self.counts[base..base + CHARSET_SIZE];
+        let mut cum = [0.0f32; CHARSET_SIZE];
+        let mut total = 0.0f32;
+        for k in 0..CHARSET_SIZE {
+            // Sharpened (temperature < 1) transition distribution: the
+            // scaled char-LSTM has a fraction of the paper model's
+            // capacity, so the synthetic corpus entropy is lowered to
+            // keep the achievable next-char accuracy in the paper's
+            // ~50% band (DESIGN.md §2).
+            let c = row[k] + 0.005;
+            total += c * c.sqrt() * perturb[k]; // counts^1.5
+            cum[k] = total;
+        }
+        let r = rng.next_f32() * total;
+        cum.iter().position(|&c| c >= r).unwrap_or(CHARSET_SIZE - 1)
+    }
+}
+
+fn role_text(
+    markov: &Markov,
+    role: usize,
+    len: usize,
+    seed: u64,
+) -> Vec<usize> {
+    let mut rng = Pcg64::with_stream(seed ^ 0x5a4e, role as u64 + 1);
+    // Role style: multiplicative preference over the alphabet.
+    let perturb: Vec<f32> = (0..CHARSET_SIZE)
+        .map(|_| (rng.normal() as f32 * 0.6).exp())
+        .collect();
+    // Role catch-phrase injected periodically (strong per-client signal).
+    let phrases = [
+        "my lord the king commands",
+        "alas poor soul so sweet",
+        "what light through yonder",
+        "the crown weighs heavy here",
+        "mark me well good friend",
+        "by my troth a fool",
+    ];
+    let phrase: Vec<usize> = phrases[role % phrases.len()]
+        .chars()
+        .map(char_to_class)
+        .collect();
+
+    let mut out = Vec::with_capacity(len);
+    let (mut a, mut b) = (52usize, char_to_class('t'));
+    while out.len() < len {
+        if out.len() % 53 == 40 {
+            out.extend_from_slice(&phrase);
+            if phrase.len() >= 2 {
+                a = phrase[phrase.len() - 2];
+                b = phrase[phrase.len() - 1];
+            }
+            continue;
+        }
+        let c = markov.next(a, b, &perturb, &mut rng);
+        out.push(c);
+        a = b;
+        b = c;
+    }
+    out.truncate(len);
+    out
+}
+
+pub fn generate(spec: &VariantSpec, cfg: &DataConfig) -> FederatedDataset {
+    let seq = spec.input_shape[0];
+    assert!(spec.classes == CHARSET_SIZE, "shakespeare expects 53 classes");
+    let markov = Markov::from_text(BASE_CORPUS);
+    let mut rng = Pcg64::with_stream(cfg.seed, 0x5a);
+    let sizes = partition::client_sizes(cfg, &mut rng);
+
+    // Per role: generate text of (n_samples + seq) chars; samples are
+    // sliding windows (stride ~ seq/4 for de-correlation).
+    let stride = (seq / 4).max(1);
+    let mut roles: Vec<(Vec<i32>, Vec<i32>)> = Vec::with_capacity(cfg.num_clients);
+    for (role, &n) in sizes.iter().enumerate() {
+        let text_len = n * stride + seq + 1;
+        let text = role_text(&markov, role, text_len, cfg.seed);
+        let mut xs = Vec::with_capacity(n * seq);
+        let mut ys = Vec::with_capacity(n);
+        for s in 0..n {
+            let start = s * stride;
+            for t in 0..seq {
+                xs.push(text[start + t] as i32);
+            }
+            ys.push(text[start + seq] as i32);
+        }
+        roles.push((xs, ys));
+    }
+
+    // IID: pool all windows and re-deal.
+    let assignment: Option<Vec<Vec<usize>>> = if cfg.iid {
+        let total: usize = roles.iter().map(|(_, y)| y.len()).sum();
+        Some(partition::iid_deal(total, &sizes, &mut rng))
+    } else {
+        None
+    };
+
+    let (pool_xs, pool_ys): (Vec<i32>, Vec<i32>) = {
+        let mut pxs = Vec::new();
+        let mut pys = Vec::new();
+        for (xs, ys) in &roles {
+            pxs.extend_from_slice(xs);
+            pys.extend_from_slice(ys);
+        }
+        (pxs, pys)
+    };
+
+    let mut clients = Vec::with_capacity(cfg.num_clients);
+    let mut test_xs = Vec::new();
+    let mut test_ys = Vec::new();
+    let mut offset = 0usize;
+    for (role, &n) in sizes.iter().enumerate() {
+        let idxs: Vec<usize> = match &assignment {
+            Some(deal) => deal[role].clone(),
+            None => (offset..offset + n).collect(),
+        };
+        offset += n;
+        let n_test = ((idxs.len() as f64) * cfg.test_fraction).round() as usize;
+        let (test_idx, train_idx) =
+            idxs.split_at(n_test.min(idxs.len().saturating_sub(1)));
+        let mut xs = Vec::with_capacity(train_idx.len() * seq);
+        let mut ys = Vec::with_capacity(train_idx.len());
+        for &i in train_idx {
+            xs.extend_from_slice(&pool_xs[i * seq..(i + 1) * seq]);
+            ys.push(pool_ys[i]);
+        }
+        for &i in test_idx {
+            test_xs.extend_from_slice(&pool_xs[i * seq..(i + 1) * seq]);
+            test_ys.push(pool_ys[i]);
+        }
+        clients.push(ClientDataset {
+            xs: Samples::I32(xs),
+            ys,
+            per_sample: seq,
+        });
+    }
+
+    FederatedDataset {
+        clients,
+        test: ClientDataset {
+            xs: Samples::I32(test_xs),
+            ys: test_ys,
+            per_sample: seq,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native::mlp_spec;
+
+    fn lstm_like_spec(seq: usize) -> VariantSpec {
+        let mut spec = mlp_spec("s", 0, 4, CHARSET_SIZE, 10, 2, 0.1);
+        spec.dataset = "shakespeare".into();
+        spec.input_shape = vec![seq];
+        spec.classes = CHARSET_SIZE;
+        spec.vocab = CHARSET_SIZE;
+        spec
+    }
+
+    #[test]
+    fn charset_mapping_is_total_and_consistent() {
+        for k in 0..CHARSET_SIZE {
+            assert_eq!(char_to_class(class_to_char(k)), k);
+        }
+        assert_eq!(char_to_class('!'), 52);
+        assert_eq!(char_to_class('z'), 25);
+        assert_eq!(char_to_class('A'), 26);
+    }
+
+    #[test]
+    fn generates_windows_with_valid_ids() {
+        let spec = lstm_like_spec(20);
+        let cfg = DataConfig {
+            num_clients: 5,
+            samples_per_client: (30, 50),
+            iid: false,
+            test_fraction: 0.2,
+            seed: 7,
+        };
+        let ds = generate(&spec, &cfg);
+        assert_eq!(ds.num_clients(), 5);
+        for c in &ds.clients {
+            let xs = match &c.xs {
+                Samples::I32(v) => v,
+                _ => panic!("expected i32 tokens"),
+            };
+            assert!(xs.iter().all(|&t| (0..53).contains(&t)));
+            assert!(c.ys.iter().all(|&y| (0..53).contains(&y)));
+            assert_eq!(xs.len(), c.len() * 20);
+        }
+        assert!(!ds.test.is_empty());
+    }
+
+    #[test]
+    fn next_char_depends_on_context() {
+        // The generator must be better than uniform: frequent English
+        // bigrams (like "th" → 'e'/space) should dominate their context.
+        let markov = Markov::from_text(BASE_CORPUS);
+        let mut rng = Pcg64::new(0);
+        let uniform = vec![1.0f32; CHARSET_SIZE];
+        let mut counts = vec![0usize; CHARSET_SIZE];
+        for _ in 0..500 {
+            let c = markov.next(char_to_class('t'), char_to_class('h'), &uniform, &mut rng);
+            counts[c] += 1;
+        }
+        let e = counts[char_to_class('e')];
+        assert!(e > 150, "'the' should dominate after 'th', got e={e}");
+    }
+
+    #[test]
+    fn roles_differ_noniid() {
+        let spec = lstm_like_spec(20);
+        let cfg = DataConfig {
+            num_clients: 3,
+            samples_per_client: (200, 200),
+            iid: false,
+            test_fraction: 0.0,
+            seed: 1,
+        };
+        let ds = generate(&spec, &cfg);
+        // Character distributions across roles must differ measurably.
+        let hist = |c: &ClientDataset| -> Vec<f64> {
+            let xs = match &c.xs {
+                Samples::I32(v) => v,
+                _ => panic!(),
+            };
+            let mut h = vec![0.0f64; CHARSET_SIZE];
+            for &t in xs {
+                h[t as usize] += 1.0;
+            }
+            let s: f64 = h.iter().sum();
+            h.into_iter().map(|v| v / s).collect()
+        };
+        let h0 = hist(&ds.clients[0]);
+        let h1 = hist(&ds.clients[1]);
+        let tv: f64 = h0
+            .iter()
+            .zip(&h1)
+            .map(|(a, b)| (a - b).abs())
+            .sum::<f64>()
+            / 2.0;
+        assert!(tv > 0.05, "roles should be heterogeneous, TV={tv}");
+    }
+}

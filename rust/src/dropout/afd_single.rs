@@ -1,0 +1,198 @@
+//! Single-Model Adaptive Federated Dropout — Algorithm 2 of the paper.
+//!
+//! One **global** activation score map `M` at the server; a single
+//! sub-model `w_t` per round, shared by every selected client. The
+//! recording signal is the *average* loss of the round's cohort
+//! (Alg. 2 line 17): if `l̄_t < l̄` the round's activation set is
+//! recorded and credited with `(l̄ − l̄_t)/l̄`; otherwise the next round
+//! falls back to weighted random selection.
+//!
+//! The paper notes this mode is robust to small client fractions (the
+//! score signal no longer depends on how often an individual client is
+//! selected) but is only reliable in IID settings, where the average
+//! loss of different cohorts is comparable round-to-round — our IID
+//! benches (Table 2 / Fig. 3) use it accordingly.
+
+use crate::dropout::score_map::ScoreMap;
+use crate::dropout::SubmodelStrategy;
+use crate::model::manifest::VariantSpec;
+use crate::model::submodel::SubModel;
+use crate::util::rng::Pcg64;
+
+pub struct SingleModelAfd {
+    spec: VariantSpec,
+    fdr: f64,
+    score_map: ScoreMap,
+    last_avg_loss: f64,
+    recorded: bool,
+    recorded_submodel: Option<SubModel>,
+    /// The round's shared sub-model + collected cohort losses.
+    current: Option<SubModel>,
+    current_round: usize,
+    round_losses: Vec<f64>,
+}
+
+impl SingleModelAfd {
+    pub fn new(spec: &VariantSpec, fdr: f64) -> Self {
+        assert!((0.0..1.0).contains(&fdr), "FDR must be in [0,1), got {fdr}");
+        SingleModelAfd {
+            spec: spec.clone(),
+            fdr,
+            score_map: ScoreMap::zeros(spec),
+            last_avg_loss: 0.0, // paper initialises l ← 0
+            recorded: false,
+            recorded_submodel: None,
+            current: None,
+            current_round: 0,
+            round_losses: Vec::new(),
+        }
+    }
+
+    pub fn score_map(&self) -> &ScoreMap {
+        &self.score_map
+    }
+
+    pub fn recorded(&self) -> bool {
+        self.recorded
+    }
+
+    fn build_round_submodel(&mut self, round: usize, rng: &mut Pcg64) -> SubModel {
+        if round <= 1 {
+            // Line 10: random selection in the first round.
+            ScoreMap::uniform_select(&self.spec, self.fdr, rng)
+        } else if self.recorded {
+            // Line 5: reuse the recorded activation set A.
+            self.recorded_submodel
+                .clone()
+                .expect("recorded implies stored sub-model")
+        } else {
+            // Line 7: weighted random selection from M.
+            self.score_map.weighted_select(&self.spec, self.fdr, rng)
+        }
+    }
+}
+
+impl SubmodelStrategy for SingleModelAfd {
+    fn select(&mut self, round: usize, _client: usize, rng: &mut Pcg64) -> SubModel {
+        if self.current_round != round || self.current.is_none() {
+            // First client of the round: build the shared sub-model.
+            let sm = self.build_round_submodel(round, rng);
+            self.current = Some(sm);
+            self.current_round = round;
+            self.round_losses.clear();
+        }
+        self.current.clone().unwrap()
+    }
+
+    fn report_loss(&mut self, round: usize, _client: usize, loss: f64) {
+        debug_assert_eq!(round, self.current_round);
+        self.round_losses.push(loss);
+    }
+
+    fn end_round(&mut self, _round: usize) {
+        let Some(sm) = self.current.take() else {
+            return;
+        };
+        if self.round_losses.is_empty() {
+            return;
+        }
+        // Line 17: l̄_t = (1/m) Σ l_t^c over the cohort.
+        let avg = self.round_losses.iter().sum::<f64>() / self.round_losses.len() as f64;
+        // Lines 18-24.
+        if self.last_avg_loss > 0.0 && avg < self.last_avg_loss {
+            let delta = (self.last_avg_loss - avg) / self.last_avg_loss;
+            self.score_map.credit(&sm, delta);
+            self.recorded_submodel = Some(sm);
+            self.recorded = true;
+        } else {
+            self.recorded = false;
+        }
+        self.last_avg_loss = avg;
+        self.round_losses.clear();
+    }
+
+    fn name(&self) -> &'static str {
+        "afd_single"
+    }
+
+    fn fdr(&self) -> f64 {
+        self.fdr
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::tests::tiny_spec;
+
+    #[test]
+    fn whole_cohort_shares_one_submodel() {
+        let spec = tiny_spec();
+        let mut s = SingleModelAfd::new(&spec, 0.25);
+        let mut rng = Pcg64::new(0);
+        let a = s.select(1, 0, &mut rng);
+        let b = s.select(1, 5, &mut rng);
+        let c = s.select(1, 9, &mut rng);
+        assert_eq!(a, b);
+        assert_eq!(b, c);
+        // New round → (possibly) new sub-model, but freshly built.
+        for cl in [0, 5, 9] {
+            s.report_loss(1, cl, 1.0);
+        }
+        s.end_round(1);
+        let d = s.select(2, 0, &mut rng);
+        assert_eq!(d.kept_counts(), vec![3]);
+    }
+
+    #[test]
+    fn average_loss_improvement_records() {
+        let spec = tiny_spec();
+        let mut s = SingleModelAfd::new(&spec, 0.5);
+        let mut rng = Pcg64::new(1);
+        let _ = s.select(1, 0, &mut rng);
+        s.report_loss(1, 0, 4.0);
+        s.report_loss(1, 1, 2.0); // avg 3.0
+        s.end_round(1);
+        assert!(!s.recorded(), "first round cannot record (l starts at 0)");
+
+        let sm2 = s.select(2, 0, &mut rng);
+        s.report_loss(2, 0, 2.0);
+        s.report_loss(2, 1, 1.0); // avg 1.5 < 3.0 → record, delta 0.5
+        s.end_round(2);
+        assert!(s.recorded());
+        let m = s.score_map();
+        for (g, keep) in sm2.keep.iter().enumerate() {
+            for (u, &k) in keep.iter().enumerate() {
+                assert_eq!(m.scores[g][u], if k { 0.5 } else { 0.0 });
+            }
+        }
+        // Round 3 reuses the recorded sub-model.
+        let sm3 = s.select(3, 7, &mut rng);
+        assert_eq!(sm3, sm2);
+    }
+
+    #[test]
+    fn regression_unrecords() {
+        let spec = tiny_spec();
+        let mut s = SingleModelAfd::new(&spec, 0.25);
+        let mut rng = Pcg64::new(2);
+        for (round, losses) in [(1usize, [3.0, 3.0]), (2, [1.0, 1.0]), (3, [5.0, 5.0])] {
+            let _ = s.select(round, 0, &mut rng);
+            for (c, l) in losses.iter().enumerate() {
+                s.report_loss(round, c, *l);
+            }
+            s.end_round(round);
+        }
+        assert!(!s.recorded());
+        // avg loss path: 3 → 1 (recorded) → 5 (unrecorded)
+        assert!(s.score_map().total() > 0.0);
+    }
+
+    #[test]
+    fn empty_round_is_noop() {
+        let spec = tiny_spec();
+        let mut s = SingleModelAfd::new(&spec, 0.25);
+        s.end_round(1); // no select, no losses — must not panic
+        assert!(!s.recorded());
+    }
+}

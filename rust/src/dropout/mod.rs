@@ -1,0 +1,120 @@
+//! Sub-model selection strategies — the paper's contribution.
+//!
+//! * [`afd_multi::MultiModelAfd`] — Algorithm 1: one activation score map
+//!   **per client**, driven by per-client local losses.
+//! * [`afd_single::SingleModelAfd`] — Algorithm 2: one **global** score
+//!   map, one shared sub-model per round, driven by the round-average
+//!   loss.
+//! * [`random_fd::RandomFd`] — the Federated Dropout baseline (Caldas et
+//!   al. '18): uniform random sub-models each round.
+//! * [`NoDropout`] — full model every round (the No-Compression and
+//!   DGC-only baselines).
+//!
+//! The coordinator drives every strategy through [`SubmodelStrategy`]:
+//! `select` before the round's local training, `report_loss` after each
+//! client trains, `end_round` once the cohort finishes.
+
+pub mod afd_multi;
+pub mod afd_single;
+pub mod random_fd;
+pub mod score_map;
+
+use crate::model::manifest::VariantSpec;
+use crate::model::submodel::SubModel;
+use crate::util::rng::Pcg64;
+
+pub use afd_multi::MultiModelAfd;
+pub use afd_single::SingleModelAfd;
+pub use random_fd::RandomFd;
+pub use score_map::{kept_count, ScoreMap};
+
+/// Strategy interface the coordinator drives each round.
+pub trait SubmodelStrategy: Send {
+    /// Sub-model for `client` in `round` (1-based, as in the paper).
+    fn select(&mut self, round: usize, client: usize, rng: &mut Pcg64) -> SubModel;
+
+    /// Client `client`'s local training loss for this round.
+    fn report_loss(&mut self, round: usize, client: usize, loss: f64);
+
+    /// All of the round's cohort finished; update round-level state.
+    fn end_round(&mut self, round: usize);
+
+    fn name(&self) -> &'static str;
+
+    /// Fraction of activations dropped (0 for NoDropout).
+    fn fdr(&self) -> f64;
+}
+
+/// Baseline: every client trains the full model.
+pub struct NoDropout {
+    spec: VariantSpec,
+}
+
+impl NoDropout {
+    pub fn new(spec: &VariantSpec) -> Self {
+        NoDropout { spec: spec.clone() }
+    }
+}
+
+impl SubmodelStrategy for NoDropout {
+    fn select(&mut self, _round: usize, _client: usize, _rng: &mut Pcg64) -> SubModel {
+        SubModel::full(&self.spec)
+    }
+
+    fn report_loss(&mut self, _round: usize, _client: usize, _loss: f64) {}
+
+    fn end_round(&mut self, _round: usize) {}
+
+    fn name(&self) -> &'static str {
+        "none"
+    }
+
+    fn fdr(&self) -> f64 {
+        0.0
+    }
+}
+
+/// Construct a strategy by name (CLI / config layer).
+pub fn make_strategy(
+    kind: &str,
+    spec: &VariantSpec,
+    num_clients: usize,
+    fdr: f64,
+) -> anyhow::Result<Box<dyn SubmodelStrategy>> {
+    Ok(match kind {
+        "none" => Box::new(NoDropout::new(spec)),
+        "fd" => Box::new(RandomFd::new(spec, fdr)),
+        "afd_multi" => Box::new(MultiModelAfd::new(spec, num_clients, fdr)),
+        "afd_single" => Box::new(SingleModelAfd::new(spec, fdr)),
+        other => anyhow::bail!(
+            "unknown dropout strategy {other:?} (expected none|fd|afd_multi|afd_single)"
+        ),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::tests::tiny_spec;
+
+    #[test]
+    fn no_dropout_always_full() {
+        let spec = tiny_spec();
+        let mut s = NoDropout::new(&spec);
+        let mut rng = Pcg64::new(0);
+        for round in 1..5 {
+            assert!(s.select(round, 0, &mut rng).is_full());
+        }
+        assert_eq!(s.fdr(), 0.0);
+    }
+
+    #[test]
+    fn factory_builds_all_kinds() {
+        let spec = tiny_spec();
+        for kind in ["none", "fd", "afd_multi", "afd_single"] {
+            let s = make_strategy(kind, &spec, 10, 0.25).unwrap();
+            assert!(!s.name().is_empty());
+        }
+        assert!(make_strategy("bogus", &spec, 10, 0.25).is_err());
+    }
+}

@@ -1,0 +1,75 @@
+//! Federated Dropout baseline (Caldas et al. 2018): uniform random
+//! sub-models each round, no importance signal.
+
+use crate::dropout::score_map::ScoreMap;
+use crate::dropout::SubmodelStrategy;
+use crate::model::manifest::VariantSpec;
+use crate::model::submodel::SubModel;
+use crate::util::rng::Pcg64;
+
+pub struct RandomFd {
+    spec: VariantSpec,
+    fdr: f64,
+}
+
+impl RandomFd {
+    pub fn new(spec: &VariantSpec, fdr: f64) -> Self {
+        assert!((0.0..1.0).contains(&fdr), "FDR must be in [0,1), got {fdr}");
+        RandomFd {
+            spec: spec.clone(),
+            fdr,
+        }
+    }
+}
+
+impl SubmodelStrategy for RandomFd {
+    fn select(&mut self, _round: usize, _client: usize, rng: &mut Pcg64) -> SubModel {
+        ScoreMap::uniform_select(&self.spec, self.fdr, rng)
+    }
+
+    fn report_loss(&mut self, _round: usize, _client: usize, _loss: f64) {}
+
+    fn end_round(&mut self, _round: usize) {}
+
+    fn name(&self) -> &'static str {
+        "fd"
+    }
+
+    fn fdr(&self) -> f64 {
+        self.fdr
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::tests::tiny_spec;
+
+    #[test]
+    fn drops_requested_fraction_every_round() {
+        let spec = tiny_spec();
+        let mut s = RandomFd::new(&spec, 0.25);
+        let mut rng = Pcg64::new(3);
+        for round in 1..20 {
+            let sm = s.select(round, round % 3, &mut rng);
+            assert_eq!(sm.kept_counts(), vec![3]); // 4 units, keep 75%
+        }
+    }
+
+    #[test]
+    fn selections_vary_between_calls() {
+        let spec = tiny_spec();
+        let mut s = RandomFd::new(&spec, 0.5);
+        let mut rng = Pcg64::new(4);
+        let picks: Vec<_> = (0..30).map(|r| s.select(r, 0, &mut rng).kept_indices()).collect();
+        let first = &picks[0];
+        assert!(picks.iter().any(|p| p != first), "FD must randomize");
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_fdr_one() {
+        let spec = tiny_spec();
+        RandomFd::new(&spec, 1.0);
+    }
+}

@@ -1,0 +1,159 @@
+//! Activation score maps — the paper's central data structure.
+//!
+//! A score map assigns every droppable activation a real value measuring
+//! its importance: whenever a sub-model improves the (client or round)
+//! loss, each of its activations is credited with the relative
+//! improvement `(l_prev − l_now) / l_prev` (Alg. 1 line 18 / Alg. 2
+//! line 19). Weighted random selection then biases future sub-models
+//! toward high-scoring activations.
+
+use crate::model::manifest::VariantSpec;
+use crate::model::submodel::SubModel;
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Debug)]
+pub struct ScoreMap {
+    /// scores[g][u], indexed like `spec.mask_groups` — initialised to 0.
+    pub scores: Vec<Vec<f64>>,
+}
+
+impl ScoreMap {
+    pub fn zeros(spec: &VariantSpec) -> ScoreMap {
+        ScoreMap {
+            scores: spec.mask_groups.iter().map(|g| vec![0.0; g.size]).collect(),
+        }
+    }
+
+    /// Credit every activation of `sm` with `delta` (the relative loss
+    /// improvement). Paper: "signing a positive value equal to
+    /// (l_c − l_t^c)/l_c to their corresponding entries".
+    pub fn credit(&mut self, sm: &SubModel, delta: f64) {
+        debug_assert!(delta >= 0.0);
+        for (g, keep) in sm.keep.iter().enumerate() {
+            for (u, &k) in keep.iter().enumerate() {
+                if k {
+                    self.scores[g][u] += delta;
+                }
+            }
+        }
+    }
+
+    /// Weighted random selection of a sub-model keeping `1 − fdr` of each
+    /// group's units (Alg. 1 line 9: "weighted random selection of the
+    /// activations using weights from M").
+    pub fn weighted_select(
+        &self,
+        spec: &VariantSpec,
+        fdr: f64,
+        rng: &mut Pcg64,
+    ) -> SubModel {
+        let kept: Vec<Vec<usize>> = self
+            .scores
+            .iter()
+            .enumerate()
+            .map(|(g, ws)| {
+                let keep = kept_count(spec.mask_groups[g].size, fdr);
+                rng.weighted_sample_distinct(ws, keep)
+            })
+            .collect();
+        SubModel::from_kept_indices(spec, &kept)
+    }
+
+    /// Uniform random selection (round 1 / plain Federated Dropout).
+    pub fn uniform_select(spec: &VariantSpec, fdr: f64, rng: &mut Pcg64) -> SubModel {
+        let kept: Vec<Vec<usize>> = spec
+            .mask_groups
+            .iter()
+            .map(|g| {
+                let keep = kept_count(g.size, fdr);
+                rng.sample_indices(g.size, keep)
+            })
+            .collect();
+        SubModel::from_kept_indices(spec, &kept)
+    }
+
+    /// Total score mass (diagnostics / tests).
+    pub fn total(&self) -> f64 {
+        self.scores.iter().flatten().sum()
+    }
+
+    /// Top-scoring unit per group (diagnostics).
+    pub fn argmax(&self) -> Vec<usize> {
+        self.scores
+            .iter()
+            .map(|g| {
+                g.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+}
+
+/// Units kept per group under a federated dropout rate. At least one
+/// unit is always kept (a fully-dropped layer would sever the network).
+pub fn kept_count(group_size: usize, fdr: f64) -> usize {
+    let keep = ((group_size as f64) * (1.0 - fdr)).round() as usize;
+    keep.clamp(1, group_size)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::tests::tiny_spec;
+
+    #[test]
+    fn kept_count_bounds() {
+        assert_eq!(kept_count(100, 0.25), 75);
+        assert_eq!(kept_count(4, 0.25), 3);
+        assert_eq!(kept_count(10, 0.999), 1); // never zero
+        assert_eq!(kept_count(10, 0.0), 10);
+    }
+
+    #[test]
+    fn credit_only_touches_kept_units() {
+        let spec = tiny_spec();
+        let mut m = ScoreMap::zeros(&spec);
+        let sm = SubModel::from_kept_indices(&spec, &[vec![1, 2]]);
+        m.credit(&sm, 0.5);
+        assert_eq!(m.scores[0], vec![0.0, 0.5, 0.5, 0.0]);
+        m.credit(&sm, 0.25);
+        assert_eq!(m.scores[0], vec![0.0, 0.75, 0.75, 0.0]);
+        assert_eq!(m.total(), 1.5);
+        assert!(m.argmax()[0] == 1 || m.argmax()[0] == 2);
+    }
+
+    #[test]
+    fn weighted_select_prefers_credited_units() {
+        let spec = tiny_spec();
+        let mut m = ScoreMap::zeros(&spec);
+        let good = SubModel::from_kept_indices(&spec, &[vec![0, 3]]);
+        for _ in 0..20 {
+            m.credit(&good, 1.0);
+        }
+        let mut rng = Pcg64::new(1);
+        let mut hits = 0;
+        let trials = 300;
+        for _ in 0..trials {
+            let sm = m.weighted_select(&spec, 0.5, &mut rng); // keep 2 of 4
+            let kept = sm.kept_indices();
+            if kept[0] == vec![0, 3] {
+                hits += 1;
+            }
+        }
+        // With 20:1e-9 weight ratio, {0,3} should dominate overwhelmingly.
+        assert!(hits > trials * 8 / 10, "hits={hits}/{trials}");
+    }
+
+    #[test]
+    fn uniform_select_respects_fdr() {
+        let spec = tiny_spec();
+        let mut rng = Pcg64::new(2);
+        let sm = ScoreMap::uniform_select(&spec, 0.25, &mut rng);
+        assert_eq!(sm.kept_counts(), vec![3]);
+        let sm = ScoreMap::uniform_select(&spec, 0.0, &mut rng);
+        assert!(sm.is_full());
+    }
+}

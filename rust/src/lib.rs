@@ -1,0 +1,36 @@
+//! # AFD — Adaptive Federated Dropout
+//!
+//! Production-oriented reproduction of *"Adaptive Federated Dropout:
+//! Improving Communication Efficiency and Generalization for Federated
+//! Learning"* (Bouacida et al., 2020) as a three-layer Rust + JAX +
+//! Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the federated-learning coordinator:
+//!   client selection, activation score maps, sub-model construction
+//!   ([`dropout`]), downlink/uplink compression ([`compression`]),
+//!   FedAvg aggregation ([`aggregation`]), wireless link simulation
+//!   ([`network`]) and convergence accounting ([`metrics`]).
+//! * **Layer 2** — the paper's models (FEMNIST CNN, Shakespeare and
+//!   Sent140 LSTMs) written in JAX and AOT-lowered to HLO text
+//!   (`python/compile/`), executed from Rust through [`runtime`].
+//! * **Layer 1** — Pallas kernels for every dense contraction and the
+//!   Hadamard/8-bit quantizer (`python/compile/kernels/`).
+//!
+//! Python runs only at build time (`make artifacts`); the request path
+//! is pure Rust + PJRT.
+
+pub mod aggregation;
+pub mod bench;
+pub mod clients;
+pub mod compression;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod dropout;
+pub mod metrics;
+pub mod model;
+pub mod network;
+pub mod prop;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,282 @@
+//! `afd` — launcher CLI for the Adaptive Federated Dropout system.
+//!
+//! Subcommands:
+//!   train     run one federated experiment (preset + overrides)
+//!   compare   run the paper's 4-method grid on one preset
+//!   inspect   print the artifacts manifest summary
+//!   selftest  artifact-free native end-to-end smoke
+//!
+//! Examples:
+//!   afd train --preset femnist_noniid --rounds 120 --seeds 3
+//!   afd train --preset native --dropout afd_single
+//!   afd compare --preset femnist_noniid --rounds 80 --target 0.70
+//!   afd inspect
+
+use anyhow::Result;
+
+use afd::config::ExperimentConfig;
+use afd::coordinator::experiment::{artifacts_dir, run_experiment};
+use afd::metrics::{render_table, summarize};
+use afd::util::cli::ArgSpec;
+use afd::util::json::Json;
+use afd::util::logging;
+
+fn main() {
+    logging::init_from_env();
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = if argv.is_empty() {
+        "help".to_string()
+    } else {
+        argv.remove(0)
+    };
+    let result = match cmd.as_str() {
+        "train" => cmd_train(argv),
+        "compare" => cmd_compare(argv),
+        "inspect" => cmd_inspect(),
+        "selftest" => cmd_selftest(),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n");
+            print_help();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "afd — Adaptive Federated Dropout (paper reproduction)\n\n\
+         Usage: afd <command> [flags]\n\n\
+         Commands:\n\
+           train     run one federated experiment\n\
+           compare   run the paper's No-Compression/DGC/FD+DGC/AFD+DGC grid\n\
+           inspect   summarize artifacts/manifest.json\n\
+           selftest  artifact-free native end-to-end smoke\n\n\
+         Run `afd <command> --help` for flags."
+    );
+}
+
+fn experiment_spec() -> ArgSpec {
+    ArgSpec::new("Run a federated AFD experiment")
+        .opt("preset", "femnist_noniid",
+             "femnist_noniid|shakespeare_noniid|sent140_noniid|femnist_iid|shakespeare_iid|sent140_iid|native")
+        .opt_maybe("rounds", "total federated rounds")
+        .opt_maybe("clients", "client population size")
+        .opt_maybe("fraction", "fraction of clients per round")
+        .opt_maybe("dropout", "none|fd|afd_multi|afd_single")
+        .opt_maybe("fdr", "federated dropout rate (0..1)")
+        .opt_maybe("downlink", "raw|quant8")
+        .opt_maybe("dgc", "true|false: DGC on the uplink")
+        .opt_maybe("lr", "override the manifest learning rate")
+        .opt_maybe("seed", "base RNG seed")
+        .opt("seeds", "1", "number of seeds (mean ± std reporting)")
+        .opt_maybe("target", "target accuracy for convergence time")
+        .opt_maybe("out", "write per-round records to this JSONL file")
+}
+
+fn parse_experiment(args: &afd::util::cli::Args) -> Result<ExperimentConfig> {
+    let mut cfg =
+        ExperimentConfig::preset_by_name(args.get("preset").unwrap_or("femnist_noniid"))
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+    if let Some(v) = args.get("rounds") {
+        cfg.rounds = v.parse()?;
+    }
+    if let Some(v) = args.get("clients") {
+        cfg.num_clients = v.parse()?;
+    }
+    if let Some(v) = args.get("fraction") {
+        cfg.client_fraction = v.parse()?;
+    }
+    if let Some(v) = args.get("dropout") {
+        cfg.dropout = v.to_string();
+    }
+    if let Some(v) = args.get("fdr") {
+        cfg.fdr = v.parse()?;
+    }
+    if let Some(v) = args.get("downlink") {
+        cfg.downlink = v.to_string();
+    }
+    if let Some(v) = args.get("dgc") {
+        cfg.uplink_dgc = v == "true" || v == "1";
+    }
+    if let Some(v) = args.get("lr") {
+        cfg.lr_override = Some(v.parse()?);
+    }
+    if let Some(v) = args.get("seed") {
+        cfg.seed = v.parse()?;
+    }
+    if let Some(v) = args.get("target") {
+        cfg.target_accuracy = Some(v.parse()?);
+    }
+    Ok(cfg)
+}
+
+fn cmd_train(argv: Vec<String>) -> Result<()> {
+    let spec = experiment_spec();
+    let args = spec
+        .parse("afd train", argv)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let base = parse_experiment(&args)?;
+    let seeds: usize = args.usize("seeds").map_err(|e| anyhow::anyhow!(e))?;
+
+    let mut reports = Vec::new();
+    for s in 0..seeds as u64 {
+        let mut cfg = base.clone();
+        cfg.seed = base.seed + s;
+        println!(
+            "[afd] {} variant={} dropout={} rounds={} clients={} (seed {})",
+            cfg.method_label(),
+            cfg.variant,
+            cfg.dropout,
+            cfg.rounds,
+            cfg.num_clients,
+            cfg.seed
+        );
+        let report = run_experiment(&cfg)?;
+        for r in &report.records {
+            if let Some(acc) = r.eval_acc {
+                println!(
+                    "  round {:>4}  t={:>9}  loss {:.4}  acc {:.3}",
+                    r.round,
+                    afd::util::human_duration(r.cum_s),
+                    r.train_loss,
+                    acc
+                );
+            }
+        }
+        println!(
+            "  final acc {:.3}  best {:.3}  sim time {}  down {}  up {}",
+            report.final_accuracy(),
+            report.best_accuracy(),
+            afd::util::human_duration(report.total_sim_seconds()),
+            afd::util::human_bytes(report.total_down_bytes()),
+            afd::util::human_bytes(report.total_up_bytes()),
+        );
+        if let Some(path) = args.get("out") {
+            let sink = afd::util::logging::JsonlSink::create(std::path::Path::new(path))?;
+            for r in &report.records {
+                let mut rec = r.to_json();
+                rec.set("seed", Json::Num(cfg.seed as f64));
+                rec.set("method", Json::Str(cfg.method_label()));
+                sink.write(&rec);
+            }
+            println!("  wrote records to {path}");
+        }
+        reports.push(report);
+    }
+    if seeds > 1 {
+        let summary = summarize(&base.method_label(), &reports, base.target_accuracy);
+        println!(
+            "\nmean best accuracy {:.2}% ± {:.2}% over {} seeds",
+            summary.accuracy_mean * 100.0,
+            summary.accuracy_std * 100.0,
+            seeds
+        );
+    }
+    Ok(())
+}
+
+fn cmd_compare(argv: Vec<String>) -> Result<()> {
+    let spec = experiment_spec();
+    let args = spec
+        .parse("afd compare", argv)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let base = parse_experiment(&args)?;
+    let seeds: usize = args.usize("seeds").map_err(|e| anyhow::anyhow!(e))?;
+    let afd_kind = if base.data.iid { "afd_single" } else { "afd_multi" };
+    let target = base.target_accuracy;
+
+    let grid = ExperimentConfig::paper_method_grid(&base, afd_kind);
+    let mut rows = Vec::new();
+    for (label, method_cfg) in &grid {
+        let mut reports = Vec::new();
+        for s in 0..seeds as u64 {
+            let mut cfg = method_cfg.clone();
+            cfg.seed = base.seed + s;
+            println!("[afd] running {label} (seed {})...", cfg.seed);
+            reports.push(run_experiment(&cfg)?);
+        }
+        rows.push(summarize(label, &reports, target));
+    }
+    println!(
+        "{}",
+        render_table(
+            &format!(
+                "{} ({}) — target {:?}",
+                base.variant,
+                if base.data.iid { "IID" } else { "non-IID" },
+                target
+            ),
+            &rows
+        )
+    );
+    Ok(())
+}
+
+fn cmd_inspect() -> Result<()> {
+    let dir = artifacts_dir();
+    let manifest = afd::model::manifest::Manifest::load(&dir)?;
+    println!("artifacts: {}", dir.display());
+    for (name, spec) in &manifest.variants {
+        println!(
+            "\n{name}: kind={} dataset={} params={} ({} transmissible)",
+            spec.kind,
+            spec.dataset,
+            spec.num_params,
+            afd::util::human_bytes(spec.transmit_bytes_full()),
+        );
+        println!(
+            "  lr={} batch={}x{} classes={} input={:?} ({:?})",
+            spec.lr,
+            spec.num_batches,
+            spec.batch_size,
+            spec.classes,
+            spec.input_shape,
+            spec.input_dtype
+        );
+        for g in &spec.mask_groups {
+            println!("  mask group {:<10} {:>5} units ({})", g.name, g.size, g.kind);
+        }
+        for p in &spec.params {
+            println!(
+                "  param {:<12} shape {:?} {}{}",
+                p.name,
+                p.shape,
+                if p.trainable { "" } else { "[frozen] " },
+                if p.transmit { "" } else { "[not transmitted]" },
+            );
+        }
+    }
+    if let Some(k) = &manifest.kernels {
+        println!(
+            "\nkernel artifacts: masked_dense {:?}, hadamard block {}",
+            k.masked_dense_dims, k.hadamard_block
+        );
+    }
+    Ok(())
+}
+
+fn cmd_selftest() -> Result<()> {
+    use afd::config::Preset;
+    println!("[afd] native end-to-end selftest (no artifacts needed)");
+    let mut cfg = ExperimentConfig::preset(Preset::NativeSmoke);
+    cfg.rounds = 30;
+    cfg.eval_every = 5;
+    let report = run_experiment(&cfg)?;
+    let best = report.best_accuracy();
+    println!(
+        "native MLP federated run: best acc {:.3}, sim time {}",
+        best,
+        afd::util::human_duration(report.total_sim_seconds())
+    );
+    anyhow::ensure!(best > 0.5, "selftest should learn (best={best})");
+    println!("selftest OK");
+    Ok(())
+}

@@ -1,0 +1,302 @@
+//! Metrics: per-round records, convergence detection, report rendering.
+
+use crate::util::json::Json;
+use crate::util::stats;
+
+/// One federated round's record.
+#[derive(Clone, Debug)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// Simulated wall-clock duration of this round (network + compute).
+    pub round_s: f64,
+    /// Cumulative simulated time at the end of this round.
+    pub cum_s: f64,
+    /// Mean local training loss over the cohort.
+    pub train_loss: f64,
+    /// Global-model test accuracy (if this round evaluated).
+    pub eval_acc: Option<f64>,
+    pub eval_loss: Option<f64>,
+    pub down_bytes: u64,
+    pub up_bytes: u64,
+    /// Mean keep fraction of the round's sub-models.
+    pub keep_fraction: f64,
+}
+
+impl RoundRecord {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("round", Json::Num(self.round as f64));
+        j.set("round_s", Json::Num(self.round_s));
+        j.set("cum_s", Json::Num(self.cum_s));
+        j.set("train_loss", Json::Num(self.train_loss));
+        j.set(
+            "eval_acc",
+            self.eval_acc.map(Json::Num).unwrap_or(Json::Null),
+        );
+        j.set(
+            "eval_loss",
+            self.eval_loss.map(Json::Num).unwrap_or(Json::Null),
+        );
+        j.set("down_bytes", Json::Num(self.down_bytes as f64));
+        j.set("up_bytes", Json::Num(self.up_bytes as f64));
+        j.set("keep_fraction", Json::Num(self.keep_fraction));
+        j
+    }
+}
+
+/// Full experiment output.
+#[derive(Clone, Debug)]
+pub struct ExperimentReport {
+    pub method: String,
+    pub variant: String,
+    pub seed: u64,
+    pub records: Vec<RoundRecord>,
+    /// (round, simulated seconds) at which the target accuracy was first
+    /// reached (smoothed), if a target was configured and reached.
+    pub converged: Option<(usize, f64)>,
+}
+
+impl ExperimentReport {
+    pub fn final_accuracy(&self) -> f64 {
+        self.records
+            .iter()
+            .rev()
+            .find_map(|r| r.eval_acc)
+            .unwrap_or(0.0)
+    }
+
+    /// Best (peak) evaluated accuracy.
+    pub fn best_accuracy(&self) -> f64 {
+        self.records
+            .iter()
+            .filter_map(|r| r.eval_acc)
+            .fold(0.0, f64::max)
+    }
+
+    pub fn total_sim_seconds(&self) -> f64 {
+        self.records.last().map(|r| r.cum_s).unwrap_or(0.0)
+    }
+
+    pub fn total_down_bytes(&self) -> u64 {
+        self.records.iter().map(|r| r.down_bytes).sum()
+    }
+
+    pub fn total_up_bytes(&self) -> u64 {
+        self.records.iter().map(|r| r.up_bytes).sum()
+    }
+
+    /// Accuracy curve as (cum simulated seconds, accuracy) points.
+    pub fn accuracy_curve(&self) -> Vec<(f64, f64)> {
+        self.records
+            .iter()
+            .filter_map(|r| r.eval_acc.map(|a| (r.cum_s, a)))
+            .collect()
+    }
+
+    /// First simulated time at which the (moving-average smoothed)
+    /// accuracy reaches `target` — the paper's "convergence time".
+    pub fn time_to_accuracy(&self, target: f64, window: usize) -> Option<(usize, f64)> {
+        let pts: Vec<(usize, f64, f64)> = self
+            .records
+            .iter()
+            .filter_map(|r| r.eval_acc.map(|a| (r.round, r.cum_s, a)))
+            .collect();
+        if pts.is_empty() {
+            return None;
+        }
+        let accs: Vec<f64> = pts.iter().map(|p| p.2).collect();
+        let smooth = stats::moving_average(&accs, window);
+        for (i, &s) in smooth.iter().enumerate() {
+            if s >= target {
+                return Some((pts[i].0, pts[i].1));
+            }
+        }
+        None
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("method", Json::Str(self.method.clone()));
+        j.set("variant", Json::Str(self.variant.clone()));
+        j.set("seed", Json::Num(self.seed as f64));
+        j.set(
+            "records",
+            Json::Arr(self.records.iter().map(|r| r.to_json()).collect()),
+        );
+        j.set(
+            "converged",
+            self.converged
+                .map(|(r, s)| {
+                    let mut o = Json::obj();
+                    o.set("round", Json::Num(r as f64));
+                    o.set("sim_s", Json::Num(s));
+                    o
+                })
+                .unwrap_or(Json::Null),
+        );
+        j
+    }
+}
+
+/// Aggregate several seeds of the same method into mean ± std, the way
+/// the paper reports ("we repeat each experiment 5 times ... report the
+/// mean").
+pub struct MethodSummary {
+    pub method: String,
+    pub accuracy_mean: f64,
+    pub accuracy_std: f64,
+    pub time_mean_s: f64,
+    pub reached: usize,
+    pub total: usize,
+}
+
+pub fn summarize(
+    method: &str,
+    reports: &[ExperimentReport],
+    target: Option<f64>,
+) -> MethodSummary {
+    let accs: Vec<f64> = reports.iter().map(|r| r.best_accuracy()).collect();
+    let times: Vec<f64> = match target {
+        Some(t) => reports
+            .iter()
+            .filter_map(|r| r.time_to_accuracy(t, 3).map(|(_, s)| s))
+            .collect(),
+        None => reports.iter().map(|r| r.total_sim_seconds()).collect(),
+    };
+    MethodSummary {
+        method: method.to_string(),
+        accuracy_mean: stats::mean(&accs),
+        accuracy_std: stats::std(&accs),
+        time_mean_s: stats::mean(&times),
+        reached: times.len(),
+        total: reports.len(),
+    }
+}
+
+/// Render a paper-style table (method / accuracy / convergence time /
+/// speedup vs the first row).
+pub fn render_table(title: &str, rows: &[MethodSummary]) -> String {
+    let mut s = format!("\n== {title} ==\n");
+    s.push_str(&format!(
+        "{:<18} {:>18} {:>22} {:>10}\n",
+        "Method", "Accuracy", "Convergence Time", "Speedup"
+    ));
+    let base = rows.first().map(|r| r.time_mean_s).unwrap_or(0.0);
+    for r in rows {
+        let acc = format!(
+            "{:.1}% ± {:.2}%",
+            r.accuracy_mean * 100.0,
+            r.accuracy_std * 100.0
+        );
+        let time = if r.reached == 0 {
+            "not reached".to_string()
+        } else {
+            format!(
+                "{} ({}/{})",
+                crate::util::human_duration(r.time_mean_s),
+                r.reached,
+                r.total
+            )
+        };
+        let speedup = if r.time_mean_s > 0.0 && base > 0.0 && r.reached > 0 {
+            format!("{:.0}x", base / r.time_mean_s)
+        } else {
+            "-".to_string()
+        };
+        s.push_str(&format!(
+            "{:<18} {:>18} {:>22} {:>10}\n",
+            r.method, acc, time, speedup
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_report(acc_per_round: &[f64], secs_per_round: f64) -> ExperimentReport {
+        let mut cum = 0.0;
+        let records = acc_per_round
+            .iter()
+            .enumerate()
+            .map(|(i, &a)| {
+                cum += secs_per_round;
+                RoundRecord {
+                    round: i + 1,
+                    round_s: secs_per_round,
+                    cum_s: cum,
+                    train_loss: 1.0 / (i + 1) as f64,
+                    eval_acc: Some(a),
+                    eval_loss: Some(1.0 - a),
+                    down_bytes: 1000,
+                    up_bytes: 500,
+                    keep_fraction: 0.75,
+                }
+            })
+            .collect();
+        ExperimentReport {
+            method: "test".into(),
+            variant: "v".into(),
+            seed: 0,
+            records,
+            converged: None,
+        }
+    }
+
+    #[test]
+    fn convergence_detection_uses_smoothing() {
+        // A single noisy spike must not count as convergence (window 3).
+        let r = fake_report(&[0.1, 0.9, 0.1, 0.5, 0.8, 0.85, 0.9], 10.0);
+        let hit = r.time_to_accuracy(0.8, 3).unwrap();
+        assert_eq!(hit.0, 7, "spike at round 2 must not trigger");
+        assert!(r.time_to_accuracy(0.99, 3).is_none());
+        // Window of 1 takes the spike.
+        assert_eq!(r.time_to_accuracy(0.8, 1).unwrap().0, 2);
+    }
+
+    #[test]
+    fn report_accessors() {
+        let r = fake_report(&[0.2, 0.6, 0.4], 5.0);
+        assert_eq!(r.final_accuracy(), 0.4);
+        assert_eq!(r.best_accuracy(), 0.6);
+        assert_eq!(r.total_sim_seconds(), 15.0);
+        assert_eq!(r.total_down_bytes(), 3000);
+        assert_eq!(r.accuracy_curve().len(), 3);
+    }
+
+    #[test]
+    fn summary_and_table_render() {
+        let reports = vec![
+            fake_report(&[0.5, 0.8, 0.9], 10.0),
+            fake_report(&[0.4, 0.7, 0.9], 10.0),
+        ];
+        let s = summarize("AFD + DGC", &reports, Some(0.85));
+        assert_eq!(s.total, 2);
+        assert!(s.accuracy_mean > 0.8);
+        let slow = MethodSummary {
+            method: "No Compression".into(),
+            accuracy_mean: 0.9,
+            accuracy_std: 0.01,
+            time_mean_s: 300.0,
+            reached: 2,
+            total: 2,
+        };
+        let table = render_table("Table 1 (tiny)", &[slow, s]);
+        assert!(table.contains("No Compression"));
+        assert!(table.contains("AFD + DGC"));
+        assert!(table.contains('x'), "speedup column should render: {table}");
+    }
+
+    #[test]
+    fn json_serialization() {
+        let r = fake_report(&[0.3], 1.0);
+        let j = r.to_json();
+        let text = j.to_string_compact();
+        let parsed = crate::util::json::parse(&text).unwrap();
+        assert_eq!(
+            parsed.get("records").unwrap().as_arr().unwrap().len(),
+            1
+        );
+    }
+}

@@ -1,0 +1,486 @@
+//! Parsed form of `artifacts/manifest.json` — the contract with L2.
+//!
+//! The AOT pipeline (python/compile/aot.py) records everything the
+//! coordinator must know about each lowered model variant: parameter
+//! segments (name/shape/offset into the flat vector), which mask group
+//! packs which axis of which parameter, argument orders of the train and
+//! eval artifacts, data shapes and the paper's learning rate. The Rust
+//! side never guesses — it parses this file or fails loudly.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+/// How one axis of a parameter packs under a mask group (see
+/// `python/compile/model.py::AxisPack` for the authoritative semantics).
+#[derive(Clone, Debug, PartialEq)]
+pub struct AxisPack {
+    pub group: String,
+    pub count: usize,
+    pub repeat: usize,
+    pub fixed: usize,
+}
+
+impl AxisPack {
+    pub fn full_extent(&self) -> usize {
+        self.count * self.repeat + self.fixed
+    }
+
+    pub fn packed_extent(&self, kept: usize) -> usize {
+        kept * self.repeat + self.fixed
+    }
+}
+
+/// One parameter tensor's segment in the flat model vector.
+#[derive(Clone, Debug)]
+pub struct ParamSeg {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub size: usize,
+    pub offset: usize,
+    pub trainable: bool,
+    pub transmit: bool,
+    /// Packing along the flattened leading extent (matmul rows).
+    pub rows: Option<AxisPack>,
+    /// Packing along the last axis (matmul cols / bias index).
+    pub cols: Option<AxisPack>,
+    pub flops_per_sample: f64,
+}
+
+impl ParamSeg {
+    /// Flattened leading extent (= matmul rows; 1 for biases).
+    pub fn rows_extent(&self) -> usize {
+        if self.shape.len() <= 1 {
+            1
+        } else {
+            self.shape[..self.shape.len() - 1].iter().product()
+        }
+    }
+
+    pub fn cols_extent(&self) -> usize {
+        *self.shape.last().unwrap_or(&1)
+    }
+
+    pub fn range(&self) -> std::ops::Range<usize> {
+        self.offset..self.offset + self.size
+    }
+}
+
+/// A droppable-unit group (conv filters / dense units / LSTM units).
+#[derive(Clone, Debug)]
+pub struct MaskGroup {
+    pub name: String,
+    pub size: usize,
+    pub kind: String,
+}
+
+/// One lowered model variant.
+#[derive(Clone, Debug)]
+pub struct VariantSpec {
+    pub name: String,
+    pub kind: String,    // "cnn" | "lstm"
+    pub dataset: String, // "femnist" | "shakespeare" | "sent140"
+    pub lr: f32,
+    pub batch_size: usize,
+    pub num_batches: usize,
+    pub classes: usize,
+    pub vocab: usize, // 0 for image models
+    pub input_shape: Vec<usize>,
+    pub input_dtype: DType,
+    pub num_params: usize,
+    pub params: Vec<ParamSeg>,
+    pub mask_groups: Vec<MaskGroup>,
+    pub train_hlo: String,
+    pub eval_hlo: String,
+    pub init_params: String,
+    pub train_args: Vec<String>,
+    pub train_outputs: Vec<String>,
+    pub eval_args: Vec<String>,
+    pub eval_outputs: Vec<String>,
+}
+
+impl VariantSpec {
+    pub fn param(&self, name: &str) -> Option<&ParamSeg> {
+        self.params.iter().find(|p| p.name == name)
+    }
+
+    pub fn group_index(&self, name: &str) -> Option<usize> {
+        self.mask_groups.iter().position(|g| g.name == name)
+    }
+
+    /// Total droppable units across all groups.
+    pub fn total_units(&self) -> usize {
+        self.mask_groups.iter().map(|g| g.size).sum()
+    }
+
+    /// Samples consumed per local epoch (one train artifact call).
+    pub fn samples_per_round(&self) -> usize {
+        self.batch_size * self.num_batches
+    }
+
+    /// Bytes of a full uncompressed transmissible model.
+    pub fn transmit_bytes_full(&self) -> u64 {
+        self.params
+            .iter()
+            .filter(|p| p.transmit)
+            .map(|p| 4 * p.size as u64)
+            .sum()
+    }
+}
+
+/// Standalone kernel artifacts (L1 exercised directly from Rust).
+#[derive(Clone, Debug)]
+pub struct KernelArtifacts {
+    pub masked_dense_hlo: String,
+    pub masked_dense_dims: (usize, usize, usize),
+    pub hadamard_hlo: String,
+    pub hadamard_len: usize,
+    pub hadamard_block: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub init_seed: u64,
+    pub variants: BTreeMap<String, VariantSpec>,
+    pub kernels: Option<KernelArtifacts>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let root = json::parse_file(&path)?;
+        let mut variants = BTreeMap::new();
+        let vmap = root
+            .req("variants")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest: variants must be an object"))?;
+        for (name, v) in vmap {
+            variants.insert(
+                name.clone(),
+                parse_variant(v).with_context(|| format!("variant {name}"))?,
+            );
+        }
+        let kernels = match root.get("kernels") {
+            Some(k) if !k.is_null() => Some(parse_kernels(k)?),
+            _ => None,
+        };
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            init_seed: root
+                .get("init_seed")
+                .and_then(|j| j.as_f64())
+                .unwrap_or(0.0) as u64,
+            variants,
+            kernels,
+        })
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&VariantSpec> {
+        self.variants
+            .get(name)
+            .ok_or_else(|| anyhow!("manifest has no variant {name:?}; have {:?}",
+                                   self.variants.keys().collect::<Vec<_>>()))
+    }
+
+    /// Read a variant's initial parameters (little-endian f32 file).
+    pub fn load_init_params(&self, spec: &VariantSpec) -> Result<Vec<f32>> {
+        let path = self.dir.join(&spec.init_params);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        if bytes.len() != 4 * spec.num_params {
+            bail!(
+                "{}: expected {} bytes, found {}",
+                path.display(),
+                4 * spec.num_params,
+                bytes.len()
+            );
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+fn get_usize(j: &Json, key: &str) -> Result<usize> {
+    j.req(key)?
+        .as_usize()
+        .ok_or_else(|| anyhow!("{key}: expected number"))
+}
+
+fn get_str(j: &Json, key: &str) -> Result<String> {
+    Ok(j.req(key)?
+        .as_str()
+        .ok_or_else(|| anyhow!("{key}: expected string"))?
+        .to_string())
+}
+
+fn get_str_list(j: &Json, key: &str) -> Result<Vec<String>> {
+    j.req(key)?
+        .as_arr()
+        .ok_or_else(|| anyhow!("{key}: expected array"))?
+        .iter()
+        .map(|v| {
+            v.as_str()
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("{key}: expected string items"))
+        })
+        .collect()
+}
+
+fn parse_axis_pack(j: &Json) -> Result<Option<AxisPack>> {
+    if j.is_null() {
+        return Ok(None);
+    }
+    Ok(Some(AxisPack {
+        group: get_str(j, "group")?,
+        count: get_usize(j, "count")?,
+        repeat: get_usize(j, "repeat")?,
+        fixed: get_usize(j, "fixed")?,
+    }))
+}
+
+fn parse_variant(v: &Json) -> Result<VariantSpec> {
+    let params = v
+        .req("params")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("params: expected array"))?
+        .iter()
+        .map(|p| -> Result<ParamSeg> {
+            Ok(ParamSeg {
+                name: get_str(p, "name")?,
+                shape: p
+                    .req("shape")?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("shape: expected array"))?
+                    .iter()
+                    .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                    .collect::<Result<_>>()?,
+                size: get_usize(p, "size")?,
+                offset: get_usize(p, "offset")?,
+                trainable: p.req("trainable")?.as_bool().unwrap_or(true),
+                transmit: p.req("transmit")?.as_bool().unwrap_or(true),
+                rows: parse_axis_pack(p.req("rows")?)?,
+                cols: parse_axis_pack(p.req("cols")?)?,
+                flops_per_sample: p
+                    .get("flops_per_sample")
+                    .and_then(|f| f.as_f64())
+                    .unwrap_or(0.0),
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+
+    let mask_groups = v
+        .req("mask_groups")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("mask_groups: expected array"))?
+        .iter()
+        .map(|g| -> Result<MaskGroup> {
+            Ok(MaskGroup {
+                name: get_str(g, "name")?,
+                size: get_usize(g, "size")?,
+                kind: get_str(g, "kind")?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+
+    let input_dtype = match get_str(v, "input_dtype")?.as_str() {
+        "f32" => DType::F32,
+        "i32" => DType::I32,
+        other => bail!("unknown input_dtype {other:?}"),
+    };
+
+    let spec = VariantSpec {
+        name: get_str(v, "name")?,
+        kind: get_str(v, "kind")?,
+        dataset: get_str(v, "dataset")?,
+        lr: v.req("lr")?.as_f64().ok_or_else(|| anyhow!("lr"))? as f32,
+        batch_size: get_usize(v, "batch_size")?,
+        num_batches: get_usize(v, "num_batches")?,
+        classes: get_usize(v, "classes")?,
+        vocab: v
+            .get("cfg")
+            .and_then(|c| c.get("vocab"))
+            .and_then(|x| x.as_usize())
+            .unwrap_or(0),
+        input_shape: v
+            .req("input_shape")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("input_shape"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<_>>()?,
+        input_dtype,
+        num_params: get_usize(v, "num_params")?,
+        params,
+        mask_groups,
+        train_hlo: get_str(v, "train_hlo")?,
+        eval_hlo: get_str(v, "eval_hlo")?,
+        init_params: get_str(v, "init_params")?,
+        train_args: get_str_list(v, "train_args")?,
+        train_outputs: get_str_list(v, "train_outputs")?,
+        eval_args: get_str_list(v, "eval_args")?,
+        eval_outputs: get_str_list(v, "eval_outputs")?,
+    };
+
+    // Structural validation: fail at load, not mid-experiment.
+    let mut off = 0;
+    for p in &spec.params {
+        if p.offset != off {
+            bail!("param {} offset {} != expected {}", p.name, p.offset, off);
+        }
+        let numel: usize = p.shape.iter().product();
+        if numel != p.size {
+            bail!("param {} size {} != shape product {}", p.name, p.size, numel);
+        }
+        off += p.size;
+        for (ap, extent) in [
+            (&p.rows, p.rows_extent()),
+            (&p.cols, p.cols_extent()),
+        ] {
+            if let Some(ap) = ap {
+                if spec.mask_groups.iter().all(|g| g.name != ap.group) {
+                    bail!("param {} references unknown group {}", p.name, ap.group);
+                }
+                if ap.full_extent() != extent {
+                    bail!(
+                        "param {}: pack extent {} != axis extent {}",
+                        p.name,
+                        ap.full_extent(),
+                        extent
+                    );
+                }
+            }
+        }
+    }
+    if off != spec.num_params {
+        bail!("num_params {} != sum of segments {}", spec.num_params, off);
+    }
+    Ok(spec)
+}
+
+fn parse_kernels(k: &Json) -> Result<KernelArtifacts> {
+    let md = k.req("masked_dense")?;
+    let hr = k.req("hadamard_roundtrip")?;
+    Ok(KernelArtifacts {
+        masked_dense_hlo: get_str(md, "hlo")?,
+        masked_dense_dims: (
+            get_usize(md, "m")?,
+            get_usize(md, "k")?,
+            get_usize(md, "n")?,
+        ),
+        hadamard_hlo: get_str(hr, "hlo")?,
+        hadamard_len: get_usize(hr, "length")?,
+        hadamard_block: get_usize(hr, "block")?,
+    })
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+
+    /// A miniature but structurally-valid manifest for unit tests.
+    pub(crate) fn tiny_manifest_json() -> String {
+        r#"{
+  "format_version": 1,
+  "init_seed": 0,
+  "kernels": null,
+  "variants": {
+   "tiny": {
+    "name": "tiny", "kind": "cnn", "dataset": "femnist",
+    "cfg": {"vocab": 0},
+    "lr": 0.1, "batch_size": 2, "num_batches": 3, "classes": 4,
+    "input_shape": [6], "input_dtype": "f32", "num_params": 34,
+    "params": [
+      {"name": "w1", "shape": [6, 4], "size": 24, "offset": 0,
+       "trainable": true, "transmit": true,
+       "rows": null, "cols": {"group": "h", "count": 4, "repeat": 1, "fixed": 0},
+       "flops_per_sample": 48},
+      {"name": "b1", "shape": [4], "size": 4, "offset": 24,
+       "trainable": true, "transmit": true,
+       "rows": null, "cols": {"group": "h", "count": 4, "repeat": 1, "fixed": 0},
+       "flops_per_sample": 0},
+      {"name": "w2", "shape": [4, 1], "size": 4, "offset": 28,
+       "trainable": true, "transmit": true,
+       "rows": {"group": "h", "count": 4, "repeat": 1, "fixed": 0}, "cols": null,
+       "flops_per_sample": 8},
+      {"name": "b2", "shape": [1], "size": 1, "offset": 32,
+       "trainable": true, "transmit": true, "rows": null, "cols": null,
+       "flops_per_sample": 0},
+      {"name": "frozen", "shape": [1], "size": 1, "offset": 33,
+       "trainable": false, "transmit": false, "rows": null, "cols": null,
+       "flops_per_sample": 0}
+    ],
+    "mask_groups": [{"name": "h", "size": 4, "kind": "dense_units"}],
+    "train_hlo": "train_tiny.hlo.txt", "eval_hlo": "eval_tiny.hlo.txt",
+    "init_params": "tiny.init.bin",
+    "train_args": ["w1","b1","w2","b2","frozen","mask:h","xs","ys","lr"],
+    "train_outputs": ["w1","b1","w2","b2","frozen","mean_loss"],
+    "eval_args": ["w1","b1","w2","b2","frozen","x","y"],
+    "eval_outputs": ["loss_sum","correct"]
+   }
+  }
+}"#
+        .to_string()
+    }
+
+    pub(crate) fn tiny_spec() -> VariantSpec {
+        let root = crate::util::json::parse(&tiny_manifest_json()).unwrap();
+        parse_variant(root.get("variants").unwrap().get("tiny").unwrap()).unwrap()
+    }
+
+    #[test]
+    fn parses_tiny_manifest() {
+        let spec = tiny_spec();
+        assert_eq!(spec.num_params, 34);
+        assert_eq!(spec.params.len(), 5);
+        assert_eq!(spec.mask_groups.len(), 1);
+        assert_eq!(spec.param("w2").unwrap().rows.as_ref().unwrap().group, "h");
+        assert_eq!(spec.transmit_bytes_full(), 4 * 33);
+        assert_eq!(spec.samples_per_round(), 6);
+        assert_eq!(spec.total_units(), 4);
+    }
+
+    #[test]
+    fn rejects_bad_offsets() {
+        let mut text = tiny_manifest_json();
+        text = text.replace("\"offset\": 24", "\"offset\": 25");
+        let root = crate::util::json::parse(&text).unwrap();
+        let res = parse_variant(root.get("variants").unwrap().get("tiny").unwrap());
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_group() {
+        let text = tiny_manifest_json().replace("\"group\": \"h\"", "\"group\": \"zz\"");
+        let root = crate::util::json::parse(&text).unwrap();
+        assert!(parse_variant(root.get("variants").unwrap().get("tiny").unwrap()).is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_if_built() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return; // artifacts not built in this checkout
+        }
+        let man = Manifest::load(&dir).unwrap();
+        assert!(man.variants.contains_key("femnist_small"));
+        for spec in man.variants.values() {
+            let init = man.load_init_params(spec).unwrap();
+            assert_eq!(init.len(), spec.num_params);
+            assert!(init.iter().all(|v| v.is_finite()));
+        }
+        assert!(man.kernels.is_some());
+    }
+}

@@ -1,0 +1,9 @@
+//! Model metadata layer: the manifest contract with L2, sub-model
+//! representation, packing/byte-accounting and FLOPs scaling.
+
+pub mod manifest;
+pub mod packing;
+pub mod submodel;
+
+pub use manifest::{AxisPack, DType, Manifest, MaskGroup, ParamSeg, VariantSpec};
+pub use submodel::SubModel;

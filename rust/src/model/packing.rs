@@ -1,0 +1,250 @@
+//! Sub-model packing: exact transmitted-size accounting + value pack/unpack.
+//!
+//! The paper's communication saving comes from shipping only "the
+//! necessary parameters that are not affected by the selective dropping
+//! of the activations". For a weight matrix that means deleting the
+//! columns of dropped output units and the rows of dropped input units
+//! (with the repeat/fixed patterns the manifest records for conv→dense
+//! flattening and LSTM recurrent blocks).
+//!
+//! Training itself runs on the masked full model (numerically identical;
+//! see DESIGN.md), but the bytes placed on the simulated link — and the
+//! round-trip tests in `rust/tests/packing_equivalence.rs` — use the real
+//! packed layout implemented here.
+
+use crate::model::manifest::{AxisPack, ParamSeg, VariantSpec};
+use crate::model::submodel::SubModel;
+
+/// Kept row/col index lists for one parameter under a sub-model.
+fn axis_indices(
+    pack: &Option<AxisPack>,
+    full_extent: usize,
+    spec: &VariantSpec,
+    sm: &SubModel,
+) -> Vec<usize> {
+    match pack {
+        None => (0..full_extent).collect(),
+        Some(ap) => {
+            let g = spec
+                .group_index(&ap.group)
+                .expect("validated at manifest load");
+            let kept: Vec<usize> = sm.keep[g]
+                .iter()
+                .enumerate()
+                .filter_map(|(i, &k)| if k { Some(i) } else { None })
+                .collect();
+            let mut idx = Vec::with_capacity(kept.len() * ap.repeat + ap.fixed);
+            // Unit-fastest tiling: position p of `repeat` ⇒ rows p*count + u.
+            for p in 0..ap.repeat {
+                for &u in &kept {
+                    idx.push(p * ap.count + u);
+                }
+            }
+            // Fixed block (e.g. LSTM recurrent rows) sits after the tiled part.
+            for j in 0..ap.fixed {
+                idx.push(ap.count * ap.repeat + j);
+            }
+            idx.sort_unstable();
+            idx
+        }
+    }
+}
+
+/// Packed element count of one parameter under a sub-model.
+pub fn packed_param_elems(seg: &ParamSeg, spec: &VariantSpec, sm: &SubModel) -> usize {
+    let rows = match &seg.rows {
+        None => seg.rows_extent(),
+        Some(ap) => ap.packed_extent(sm.kept_for(spec, &ap.group)),
+    };
+    let cols = match &seg.cols {
+        None => seg.cols_extent(),
+        Some(ap) => ap.packed_extent(sm.kept_for(spec, &ap.group)),
+    };
+    rows * cols
+}
+
+/// Total packed f32 element count of the transmissible sub-model.
+pub fn packed_model_elems(spec: &VariantSpec, sm: &SubModel) -> usize {
+    spec.params
+        .iter()
+        .filter(|p| p.transmit)
+        .map(|p| packed_param_elems(p, spec, sm))
+        .sum()
+}
+
+/// Wire bytes for a *raw f32* packed sub-model: values + the kept-unit
+/// bitmap per group (the client must learn which units it holds).
+pub fn submodel_wire_bytes(spec: &VariantSpec, sm: &SubModel) -> u64 {
+    let values = 4 * packed_model_elems(spec, sm) as u64;
+    let bitmap: u64 = spec
+        .mask_groups
+        .iter()
+        .map(|g| g.size.div_ceil(8) as u64)
+        .sum();
+    values + bitmap
+}
+
+/// Extract packed values from a flat full-model vector.
+///
+/// Layout: parameters in manifest order (transmit-only); within one
+/// parameter, kept rows ascending × kept cols ascending (row-major).
+pub fn pack_values(spec: &VariantSpec, full: &[f32], sm: &SubModel) -> Vec<f32> {
+    assert_eq!(full.len(), spec.num_params);
+    let mut out = Vec::with_capacity(packed_model_elems(spec, sm));
+    for seg in spec.params.iter().filter(|p| p.transmit) {
+        let rows = axis_indices(&seg.rows, seg.rows_extent(), spec, sm);
+        let cols = axis_indices(&seg.cols, seg.cols_extent(), spec, sm);
+        let stride = seg.cols_extent();
+        let base = seg.offset;
+        for &r in &rows {
+            let row_base = base + r * stride;
+            for &c in &cols {
+                out.push(full[row_base + c]);
+            }
+        }
+    }
+    out
+}
+
+/// Scatter packed values back into a flat full-model vector. Dropped
+/// coordinates are left untouched (the server's stale copy persists —
+/// exactly the paper's recovery step, Fig. 1 step 7).
+pub fn unpack_values(spec: &VariantSpec, packed: &[f32], sm: &SubModel, full: &mut [f32]) {
+    assert_eq!(full.len(), spec.num_params);
+    let mut k = 0;
+    for seg in spec.params.iter().filter(|p| p.transmit) {
+        let rows = axis_indices(&seg.rows, seg.rows_extent(), spec, sm);
+        let cols = axis_indices(&seg.cols, seg.cols_extent(), spec, sm);
+        let stride = seg.cols_extent();
+        let base = seg.offset;
+        for &r in &rows {
+            let row_base = base + r * stride;
+            for &c in &cols {
+                full[row_base + c] = packed[k];
+                k += 1;
+            }
+        }
+    }
+    assert_eq!(k, packed.len(), "packed length mismatch");
+}
+
+/// Coordinate mask: true for every flat index that belongs to the
+/// sub-model (transmit params only). Used by FedAvg's mask-aware
+/// aggregation and by the uplink delta compressor.
+pub fn coordinate_mask(spec: &VariantSpec, sm: &SubModel) -> Vec<bool> {
+    let mut mask = vec![false; spec.num_params];
+    for seg in spec.params.iter().filter(|p| p.transmit) {
+        let rows = axis_indices(&seg.rows, seg.rows_extent(), spec, sm);
+        let cols = axis_indices(&seg.cols, seg.cols_extent(), spec, sm);
+        let stride = seg.cols_extent();
+        for &r in &rows {
+            let row_base = seg.offset + r * stride;
+            for &c in &cols {
+                mask[row_base + c] = true;
+            }
+        }
+    }
+    mask
+}
+
+/// Effective FLOPs per sample for a sub-model (compute-time simulation:
+/// the paper's claim that AFD also reduces client computation).
+pub fn effective_flops_per_sample(spec: &VariantSpec, sm: &SubModel) -> f64 {
+    spec.params
+        .iter()
+        .map(|p| {
+            if p.flops_per_sample == 0.0 {
+                return 0.0;
+            }
+            let rf = match &p.rows {
+                None => 1.0,
+                Some(ap) => {
+                    ap.packed_extent(sm.kept_for(spec, &ap.group)) as f64
+                        / ap.full_extent() as f64
+                }
+            };
+            let cf = match &p.cols {
+                None => 1.0,
+                Some(ap) => {
+                    ap.packed_extent(sm.kept_for(spec, &ap.group)) as f64
+                        / ap.full_extent() as f64
+                }
+            };
+            p.flops_per_sample * rf * cf
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::tests::tiny_spec;
+
+    fn numbered(spec: &VariantSpec) -> Vec<f32> {
+        (0..spec.num_params).map(|i| i as f32).collect()
+    }
+
+    #[test]
+    fn full_submodel_packs_all_transmit_params() {
+        let spec = tiny_spec();
+        let sm = SubModel::full(&spec);
+        assert_eq!(packed_model_elems(&spec, &sm), 33); // 34 minus frozen
+        let full = numbered(&spec);
+        let packed = pack_values(&spec, &full, &sm);
+        assert_eq!(packed.len(), 33);
+        // frozen param (index 33) must not appear
+        assert!(!packed.contains(&33.0));
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let spec = tiny_spec();
+        let sm = SubModel::from_kept_indices(&spec, &[vec![1, 3]]);
+        let full = numbered(&spec);
+        let packed = pack_values(&spec, &full, &sm);
+        // w1 cols {1,3}: 6 rows × 2 cols = 12; b1: 2; w2 rows {1,3}: 2; b2: 1
+        assert_eq!(packed.len(), 12 + 2 + 2 + 1);
+        let mut out = vec![-1.0; spec.num_params];
+        unpack_values(&spec, &packed, &sm, &mut out);
+        let cm = coordinate_mask(&spec, &sm);
+        for i in 0..spec.num_params {
+            if cm[i] {
+                assert_eq!(out[i], full[i], "index {i}");
+            } else {
+                assert_eq!(out[i], -1.0, "index {i} must be untouched");
+            }
+        }
+    }
+
+    #[test]
+    fn coordinate_mask_counts_match_elems() {
+        let spec = tiny_spec();
+        for kept in [vec![0usize], vec![0, 1, 2], vec![1, 3]] {
+            let sm = SubModel::from_kept_indices(&spec, &[kept]);
+            let cm = coordinate_mask(&spec, &sm);
+            assert_eq!(
+                cm.iter().filter(|&&b| b).count(),
+                packed_model_elems(&spec, &sm)
+            );
+        }
+    }
+
+    #[test]
+    fn wire_bytes_include_bitmap() {
+        let spec = tiny_spec();
+        let sm = SubModel::full(&spec);
+        assert_eq!(submodel_wire_bytes(&spec, &sm), 4 * 33 + 1);
+    }
+
+    #[test]
+    fn flops_scale_with_dropping() {
+        let spec = tiny_spec();
+        let full = SubModel::full(&spec);
+        let half = SubModel::from_kept_indices(&spec, &[vec![0, 1]]);
+        let f_full = effective_flops_per_sample(&spec, &full);
+        let f_half = effective_flops_per_sample(&spec, &half);
+        assert_eq!(f_full, 56.0);
+        // w1: 48 * 0.5 (cols) = 24 ; w2: 8 * 0.5 (rows) = 4
+        assert_eq!(f_half, 28.0);
+    }
+}

@@ -1,0 +1,125 @@
+//! Sub-model representation: which units of each mask group are kept.
+//!
+//! A `SubModel` is the server-side object the AFD strategies produce
+//! each round (paper Fig. 1 step 1). It converts to the f32 masks the
+//! train artifact consumes, and drives both the packing byte-accounting
+//! and the FLOPs scaling of the compute-time simulation.
+
+use crate::model::manifest::VariantSpec;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct SubModel {
+    /// keep[g][u] — indexed like `spec.mask_groups`.
+    pub keep: Vec<Vec<bool>>,
+}
+
+impl SubModel {
+    /// Full model (nothing dropped).
+    pub fn full(spec: &VariantSpec) -> SubModel {
+        SubModel {
+            keep: spec.mask_groups.iter().map(|g| vec![true; g.size]).collect(),
+        }
+    }
+
+    /// From kept-index lists (validated).
+    pub fn from_kept_indices(spec: &VariantSpec, kept: &[Vec<usize>]) -> SubModel {
+        assert_eq!(kept.len(), spec.mask_groups.len());
+        let mut keep: Vec<Vec<bool>> = spec
+            .mask_groups
+            .iter()
+            .map(|g| vec![false; g.size])
+            .collect();
+        for (g, idxs) in kept.iter().enumerate() {
+            for &u in idxs {
+                assert!(u < keep[g].len(), "unit {u} out of range for group {g}");
+                keep[g][u] = true;
+            }
+        }
+        SubModel { keep }
+    }
+
+    /// Kept-unit indices per group (ascending).
+    pub fn kept_indices(&self) -> Vec<Vec<usize>> {
+        self.keep
+            .iter()
+            .map(|g| {
+                g.iter()
+                    .enumerate()
+                    .filter_map(|(i, &k)| if k { Some(i) } else { None })
+                    .collect()
+            })
+            .collect()
+    }
+
+    pub fn kept_counts(&self) -> Vec<usize> {
+        self.keep
+            .iter()
+            .map(|g| g.iter().filter(|&&k| k).count())
+            .collect()
+    }
+
+    /// The 0/1 f32 masks fed to the train artifact, per group.
+    pub fn masks_f32(&self) -> Vec<Vec<f32>> {
+        self.keep
+            .iter()
+            .map(|g| g.iter().map(|&k| if k { 1.0 } else { 0.0 }).collect())
+            .collect()
+    }
+
+    /// Kept count for a named group.
+    pub fn kept_for(&self, spec: &VariantSpec, group: &str) -> usize {
+        match spec.group_index(group) {
+            Some(g) => self.keep[g].iter().filter(|&&k| k).count(),
+            None => 0,
+        }
+    }
+
+    /// Fraction of all droppable units kept (diagnostics).
+    pub fn keep_fraction(&self) -> f64 {
+        let total: usize = self.keep.iter().map(|g| g.len()).sum();
+        if total == 0 {
+            return 1.0;
+        }
+        let kept: usize = self.kept_counts().iter().sum();
+        kept as f64 / total as f64
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.keep.iter().all(|g| g.iter().all(|&k| k))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::tests::tiny_spec;
+
+    #[test]
+    fn full_keeps_everything() {
+        let spec = tiny_spec();
+        let sm = SubModel::full(&spec);
+        assert!(sm.is_full());
+        assert_eq!(sm.kept_counts(), vec![4]);
+        assert_eq!(sm.keep_fraction(), 1.0);
+    }
+
+    #[test]
+    fn from_indices_roundtrip() {
+        let spec = tiny_spec();
+        let sm = SubModel::from_kept_indices(&spec, &[vec![0, 2]]);
+        assert_eq!(sm.kept_indices(), vec![vec![0, 2]]);
+        assert_eq!(sm.kept_counts(), vec![2]);
+        assert_eq!(sm.masks_f32(), vec![vec![1.0, 0.0, 1.0, 0.0]]);
+        assert_eq!(sm.keep_fraction(), 0.5);
+        assert!(!sm.is_full());
+        assert_eq!(sm.kept_for(&spec, "h"), 2);
+        assert_eq!(sm.kept_for(&spec, "nope"), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_unit_panics() {
+        let spec = tiny_spec();
+        SubModel::from_kept_indices(&spec, &[vec![9]]);
+    }
+}

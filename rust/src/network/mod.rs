@@ -1,0 +1,207 @@
+//! Wireless network simulation — the paper's convergence-time
+//! methodology.
+//!
+//! "These results are obtained by simulating wireless links between the
+//! server and the clients based on the standard network speeds of
+//! Verizon 4G LTE ... download speeds between 5 and 12 Mbps and upload
+//! speeds between 2 and 5 Mbps. All clients are supposed to experience
+//! the same network conditions."
+//!
+//! Each client's link is sampled once (deterministically per seed) from
+//! those ranges. A synchronous FedAvg round finishes when its slowest
+//! client finishes, so
+//!
+//!   t_round = max over cohort ( t_down + t_compute + t_up )
+//!
+//! with `t_compute = epoch_flops / device_flops` scaled by the
+//! *sub-model's* effective FLOPs (AFD's computation saving).
+
+use crate::util::rng::Pcg64;
+
+/// Mbps → bytes/second.
+fn mbps_to_bps(mbps: f64) -> f64 {
+    mbps * 1_000_000.0 / 8.0
+}
+
+#[derive(Clone, Debug)]
+pub struct LinkConfig {
+    /// Download (server→client) range in Mbps.
+    pub down_mbps: (f64, f64),
+    /// Upload (client→server) range in Mbps.
+    pub up_mbps: (f64, f64),
+    /// Client device compute in GFLOP/s (mobile-class range).
+    pub device_gflops: (f64, f64),
+    /// Fixed per-message latency (s), both directions.
+    pub rtt_latency_s: f64,
+}
+
+impl Default for LinkConfig {
+    /// The paper's Verizon 4G LTE profile.
+    fn default() -> Self {
+        LinkConfig {
+            down_mbps: (5.0, 12.0),
+            up_mbps: (2.0, 5.0),
+            device_gflops: (2.0, 8.0),
+            rtt_latency_s: 0.05,
+        }
+    }
+}
+
+/// One client's sampled network + device characteristics.
+#[derive(Clone, Debug)]
+pub struct ClientLink {
+    pub down_bps: f64,
+    pub up_bps: f64,
+    pub device_flops: f64,
+}
+
+impl ClientLink {
+    pub fn sample(cfg: &LinkConfig, rng: &mut Pcg64) -> ClientLink {
+        ClientLink {
+            down_bps: mbps_to_bps(rng.uniform(cfg.down_mbps.0, cfg.down_mbps.1)),
+            up_bps: mbps_to_bps(rng.uniform(cfg.up_mbps.0, cfg.up_mbps.1)),
+            device_flops: rng.uniform(cfg.device_gflops.0, cfg.device_gflops.1) * 1e9,
+        }
+    }
+
+    pub fn down_time(&self, bytes: u64, cfg: &LinkConfig) -> f64 {
+        cfg.rtt_latency_s + bytes as f64 / self.down_bps
+    }
+
+    pub fn up_time(&self, bytes: u64, cfg: &LinkConfig) -> f64 {
+        cfg.rtt_latency_s + bytes as f64 / self.up_bps
+    }
+
+    pub fn compute_time(&self, flops: f64) -> f64 {
+        flops / self.device_flops
+    }
+}
+
+/// Simulated network: per-client links, sampled once.
+#[derive(Clone, Debug)]
+pub struct NetworkSim {
+    pub cfg: LinkConfig,
+    pub links: Vec<ClientLink>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct ClientTiming {
+    pub down_s: f64,
+    pub compute_s: f64,
+    pub up_s: f64,
+}
+
+impl ClientTiming {
+    pub fn total(&self) -> f64 {
+        self.down_s + self.compute_s + self.up_s
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct RoundTiming {
+    pub per_client: Vec<ClientTiming>,
+    /// Synchronous round duration = slowest client.
+    pub round_s: f64,
+    pub down_bytes: u64,
+    pub up_bytes: u64,
+}
+
+impl NetworkSim {
+    pub fn new(cfg: LinkConfig, num_clients: usize, seed: u64) -> NetworkSim {
+        let mut rng = Pcg64::with_stream(seed, 0x11e7);
+        let links = (0..num_clients)
+            .map(|_| ClientLink::sample(&cfg, &mut rng))
+            .collect();
+        NetworkSim { cfg, links }
+    }
+
+    /// Account one synchronous round. `per_client`: (client id,
+    /// downlink bytes, epoch flops, uplink bytes).
+    pub fn round(&self, per_client: &[(usize, u64, f64, u64)]) -> RoundTiming {
+        let mut timing = RoundTiming::default();
+        for &(c, down_b, flops, up_b) in per_client {
+            let link = &self.links[c];
+            let t = ClientTiming {
+                down_s: link.down_time(down_b, &self.cfg),
+                compute_s: link.compute_time(flops),
+                up_s: link.up_time(up_b, &self.cfg),
+            };
+            timing.round_s = timing.round_s.max(t.total());
+            timing.down_bytes += down_b;
+            timing.up_bytes += up_b;
+            timing.per_client.push(t);
+        }
+        timing
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampled_links_stay_in_ranges() {
+        let cfg = LinkConfig::default();
+        let sim = NetworkSim::new(cfg.clone(), 200, 1);
+        for l in &sim.links {
+            assert!(l.down_bps >= mbps_to_bps(5.0) && l.down_bps <= mbps_to_bps(12.0));
+            assert!(l.up_bps >= mbps_to_bps(2.0) && l.up_bps <= mbps_to_bps(5.0));
+            assert!(l.device_flops >= 2e9 && l.device_flops <= 8e9);
+        }
+        // Paper's asymmetry: downlink faster than uplink on average.
+        let avg_down: f64 =
+            sim.links.iter().map(|l| l.down_bps).sum::<f64>() / sim.links.len() as f64;
+        let avg_up: f64 =
+            sim.links.iter().map(|l| l.up_bps).sum::<f64>() / sim.links.len() as f64;
+        assert!(avg_down > avg_up);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = NetworkSim::new(LinkConfig::default(), 10, 7);
+        let b = NetworkSim::new(LinkConfig::default(), 10, 7);
+        for (x, y) in a.links.iter().zip(&b.links) {
+            assert_eq!(x.down_bps, y.down_bps);
+            assert_eq!(x.up_bps, y.up_bps);
+        }
+        let c = NetworkSim::new(LinkConfig::default(), 10, 8);
+        assert!(a.links[0].down_bps != c.links[0].down_bps);
+    }
+
+    #[test]
+    fn round_time_is_max_not_sum() {
+        let sim = NetworkSim::new(LinkConfig::default(), 4, 3);
+        let jobs: Vec<(usize, u64, f64, u64)> =
+            (0..4).map(|c| (c, 1_000_000, 1e9, 500_000)).collect();
+        let t = sim.round(&jobs);
+        let max_c = t
+            .per_client
+            .iter()
+            .map(|c| c.total())
+            .fold(0.0f64, f64::max);
+        assert_eq!(t.round_s, max_c);
+        let sum_c: f64 = t.per_client.iter().map(|c| c.total()).sum();
+        assert!(t.round_s < sum_c);
+        assert_eq!(t.down_bytes, 4_000_000);
+        assert_eq!(t.up_bytes, 2_000_000);
+    }
+
+    #[test]
+    fn smaller_payloads_are_faster() {
+        let sim = NetworkSim::new(LinkConfig::default(), 1, 5);
+        let full = sim.round(&[(0, 4_000_000, 1e9, 4_000_000)]);
+        let compressed = sim.round(&[(0, 200_000, 0.75e9, 100_000)]);
+        assert!(compressed.round_s < full.round_s / 5.0);
+    }
+
+    #[test]
+    fn uplink_dominates_for_symmetric_payloads() {
+        // 2–5 Mbps up vs 5–12 Mbps down: equal bytes → up slower.
+        let sim = NetworkSim::new(LinkConfig::default(), 50, 6);
+        for l in &sim.links {
+            let down = l.down_time(1_000_000, &sim.cfg);
+            let up = l.up_time(1_000_000, &sim.cfg);
+            assert!(up > down);
+        }
+    }
+}

@@ -1,0 +1,227 @@
+//! Minimal property-testing substrate (no `proptest` offline).
+//!
+//! `check` runs a property over `cases` generated inputs; on failure it
+//! re-runs a bounded shrink loop (halving sizes via the generator's own
+//! `shrink`) and reports the smallest failing seed + case so failures
+//! are reproducible (`AFD_PROP_SEED=<n>` re-runs a specific seed).
+
+use crate::util::rng::Pcg64;
+
+/// A generator of random test cases with optional shrinking.
+pub trait Gen {
+    type Output;
+    fn generate(&self, rng: &mut Pcg64) -> Self::Output;
+    /// Candidate smaller versions of a failing case (default: none).
+    fn shrink(&self, _case: &Self::Output) -> Vec<Self::Output> {
+        Vec::new()
+    }
+}
+
+/// Run `prop` on `cases` random inputs. Panics with the seed and the
+/// (possibly shrunk) counterexample on failure.
+pub fn check<G, F>(name: &str, gen: &G, cases: usize, prop: F)
+where
+    G: Gen,
+    G::Output: std::fmt::Debug,
+    F: Fn(&G::Output) -> Result<(), String>,
+{
+    let base_seed = std::env::var("AFD_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok());
+    let seeds: Vec<u64> = match base_seed {
+        Some(s) => vec![s],
+        None => (0..cases as u64).collect(),
+    };
+    for seed in seeds {
+        let mut rng = Pcg64::with_stream(seed, 0x9409);
+        let case = gen.generate(&mut rng);
+        if let Err(msg) = prop(&case) {
+            // Shrink loop: greedily accept any smaller failing case.
+            let mut best = case;
+            let mut best_msg = msg;
+            let mut budget = 200;
+            loop {
+                let mut advanced = false;
+                for cand in gen.shrink(&best) {
+                    budget -= 1;
+                    if budget == 0 {
+                        break;
+                    }
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        advanced = true;
+                        break;
+                    }
+                }
+                if !advanced || budget == 0 {
+                    break;
+                }
+            }
+            panic!(
+                "property {name:?} failed (seed {seed}, rerun with \
+                 AFD_PROP_SEED={seed}):\n  case: {best:?}\n  error: {best_msg}"
+            );
+        }
+    }
+}
+
+/// Generator combinators ------------------------------------------------
+
+/// Uniform usize in [lo, hi].
+pub struct UsizeIn(pub usize, pub usize);
+
+impl Gen for UsizeIn {
+    type Output = usize;
+
+    fn generate(&self, rng: &mut Pcg64) -> usize {
+        self.0 + rng.below((self.1 - self.0 + 1) as u64) as usize
+    }
+
+    fn shrink(&self, case: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *case > self.0 {
+            out.push(self.0);
+            out.push(self.0 + (case - self.0) / 2);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Vec<f32> of random length with N(0, sigma) entries.
+pub struct F32Vec {
+    pub min_len: usize,
+    pub max_len: usize,
+    pub sigma: f32,
+}
+
+impl Gen for F32Vec {
+    type Output = Vec<f32>;
+
+    fn generate(&self, rng: &mut Pcg64) -> Vec<f32> {
+        let n = self.min_len + rng.below((self.max_len - self.min_len + 1) as u64) as usize;
+        (0..n).map(|_| rng.normal_f32(0.0, self.sigma)).collect()
+    }
+
+    fn shrink(&self, case: &Vec<f32>) -> Vec<Vec<f32>> {
+        let mut out = Vec::new();
+        if case.len() > self.min_len {
+            let half = self.min_len.max(case.len() / 2);
+            out.push(case[..half].to_vec());
+        }
+        // Also try zeroing the tail (often isolates the failing value).
+        if case.iter().any(|&v| v != 0.0) {
+            let mut z = case.clone();
+            let n = z.len();
+            for v in &mut z[n / 2..] {
+                *v = 0.0;
+            }
+            out.push(z);
+        }
+        out
+    }
+}
+
+/// Pair generator.
+pub struct Pair<A, B>(pub A, pub B);
+
+impl<A, B> Gen for Pair<A, B>
+where
+    A: Gen,
+    B: Gen,
+    A::Output: Clone,
+    B::Output: Clone,
+{
+    type Output = (A::Output, B::Output);
+
+    fn generate(&self, rng: &mut Pcg64) -> Self::Output {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+
+    fn shrink(&self, case: &Self::Output) -> Vec<Self::Output> {
+        let mut out: Vec<Self::Output> = self
+            .0
+            .shrink(&case.0)
+            .into_iter()
+            .map(|a| (a, case.1.clone()))
+            .collect();
+        out.extend(
+            self.1
+                .shrink(&case.1)
+                .into_iter()
+                .map(|b| (case.0.clone(), b)),
+        );
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_is_quiet() {
+        check("len in range", &UsizeIn(3, 9), 50, |&n| {
+            if (3..=9).contains(&n) {
+                Ok(())
+            } else {
+                Err(format!("{n} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_panics_with_seed() {
+        check("always fails", &UsizeIn(0, 10), 5, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn f32vec_respects_bounds() {
+        let gen = F32Vec {
+            min_len: 2,
+            max_len: 40,
+            sigma: 1.0,
+        };
+        check("vec len", &gen, 40, |v| {
+            if (2..=40).contains(&v.len()) {
+                Ok(())
+            } else {
+                Err(format!("len {}", v.len()))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn shrinking_finds_smaller_case() {
+        // Fails for any vec of length ≥ 4; the shrinker should reach a
+        // small one (we can't capture the panic message easily here, so
+        // just verify it panics — shrink exercised on the way).
+        let gen = F32Vec {
+            min_len: 1,
+            max_len: 64,
+            sigma: 1.0,
+        };
+        check("short only", &gen, 30, |v| {
+            if v.len() < 4 {
+                Ok(())
+            } else {
+                Err("too long".into())
+            }
+        });
+    }
+
+    #[test]
+    fn pair_generates_both() {
+        let gen = Pair(UsizeIn(1, 5), UsizeIn(10, 20));
+        check("pair ranges", &gen, 30, |&(a, b)| {
+            if (1..=5).contains(&a) && (10..=20).contains(&b) {
+                Ok(())
+            } else {
+                Err(format!("({a},{b})"))
+            }
+        });
+    }
+}

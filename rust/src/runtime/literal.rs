@@ -1,0 +1,89 @@
+//! Literal conversion helpers: flat Rust buffers ⇄ `xla::Literal`.
+//!
+//! This is the PJRT boundary of the hot path — building input literals
+//! and reading back outputs for every client-round. Kept separate so the
+//! §Perf pass can measure and optimize it in isolation.
+
+use anyhow::{anyhow, Result};
+use xla::{ElementType, Literal};
+
+/// f32 tensor literal with the given dims.
+pub fn f32_literal(data: &[f32], dims: &[usize]) -> Result<Literal> {
+    let numel: usize = dims.iter().product();
+    anyhow::ensure!(
+        numel == data.len(),
+        "f32_literal: dims {:?} need {} values, got {}",
+        dims,
+        numel,
+        data.len()
+    );
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    Literal::create_from_shape_and_untyped_data(ElementType::F32, dims, bytes)
+        .map_err(|e| anyhow!("creating f32 literal: {e:?}"))
+}
+
+/// i32 tensor literal with the given dims.
+pub fn i32_literal(data: &[i32], dims: &[usize]) -> Result<Literal> {
+    let numel: usize = dims.iter().product();
+    anyhow::ensure!(
+        numel == data.len(),
+        "i32_literal: dims {:?} need {} values, got {}",
+        dims,
+        numel,
+        data.len()
+    );
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    Literal::create_from_shape_and_untyped_data(ElementType::S32, dims, bytes)
+        .map_err(|e| anyhow!("creating i32 literal: {e:?}"))
+}
+
+pub fn f32_scalar(v: f32) -> Result<Literal> {
+    f32_literal(&[v], &[])
+}
+
+/// Read a literal back as Vec<f32>.
+pub fn to_f32_vec(lit: &Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>()
+        .map_err(|e| anyhow!("literal to_vec<f32>: {e:?}"))
+}
+
+pub fn to_f32_scalar(lit: &Literal) -> Result<f32> {
+    let v = to_f32_vec(lit)?;
+    anyhow::ensure!(v.len() == 1, "expected scalar, got {} values", v.len());
+    Ok(v[0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let data = vec![1.0f32, -2.5, 3.25, 0.0, 7.0, 8.0];
+        let lit = f32_literal(&data, &[2, 3]).unwrap();
+        assert_eq!(to_f32_vec(&lit).unwrap(), data);
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let data = vec![1i32, -2, 3];
+        let lit = i32_literal(&data, &[3]).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), data);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let lit = f32_scalar(4.5).unwrap();
+        assert_eq!(to_f32_scalar(&lit).unwrap(), 4.5);
+    }
+
+    #[test]
+    fn dim_mismatch_is_error() {
+        assert!(f32_literal(&[1.0, 2.0], &[3]).is_err());
+        assert!(i32_literal(&[1], &[2, 2]).is_err());
+    }
+}

@@ -1,0 +1,150 @@
+//! Execution layer: run AOT-compiled model artifacts from the Rust
+//! coordinator (Python is never on this path).
+//!
+//! * [`ModelRuntime`] — the interface the coordinator trains through:
+//!   one *local epoch* per call (the artifact scans SGD over the round's
+//!   batches) plus one-batch evaluation.
+//! * [`pjrt::PjrtRuntime`] — the real backend: `xla` crate / PJRT CPU,
+//!   loading `artifacts/*.hlo.txt` (HLO text → compile → execute).
+//! * [`native::NativeMlp`] — a pure-Rust reference model (1-hidden-layer
+//!   masked MLP with handwritten fwd/bwd). Used by artifact-free tests,
+//!   property suites and as a CPU baseline in benches.
+//!
+//! PJRT wrapper types are not `Send`; executions are issued from the
+//! coordinator thread (XLA CPU parallelizes internally), while the
+//! `util::pool` workers handle compression/data work.
+
+pub mod literal;
+pub mod native;
+pub mod pjrt;
+
+use anyhow::Result;
+
+use crate::model::manifest::VariantSpec;
+
+/// Input tensor data for one call (train: all batches; eval: one batch).
+#[derive(Clone, Debug)]
+pub enum BatchInput {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl BatchInput {
+    pub fn len(&self) -> usize {
+        match self {
+            BatchInput::F32(v) => v.len(),
+            BatchInput::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// One local-epoch's worth of training data, already batched:
+/// `xs` is `[num_batches, batch_size, *input_shape]` flattened,
+/// `ys` is `[num_batches * batch_size]`.
+#[derive(Clone, Debug)]
+pub struct EpochData {
+    pub xs: BatchInput,
+    pub ys: Vec<i32>,
+}
+
+/// One evaluation batch: `xs` is `[batch_size, *input_shape]` flattened.
+#[derive(Clone, Debug)]
+pub struct EvalBatch {
+    pub xs: BatchInput,
+    pub ys: Vec<i32>,
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainOutput {
+    pub params: Vec<f32>,
+    pub mean_loss: f32,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct EvalOutput {
+    pub loss_sum: f64,
+    pub correct: f64,
+    pub count: usize,
+}
+
+impl EvalOutput {
+    pub fn merge(&mut self, other: &EvalOutput) {
+        self.loss_sum += other.loss_sum;
+        self.correct += other.correct;
+        self.count += other.count;
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.correct / self.count as f64
+        }
+    }
+
+    pub fn mean_loss(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.loss_sum / self.count as f64
+        }
+    }
+}
+
+/// The coordinator's view of a compiled model.
+pub trait ModelRuntime {
+    fn spec(&self) -> &VariantSpec;
+
+    /// Run one local epoch of SGD on `data` starting from `params`
+    /// (flat, manifest layout) under the given unit `masks` (one f32
+    /// 0/1 vector per mask group). Returns updated params + mean loss.
+    fn train_epoch(
+        &self,
+        params: &[f32],
+        masks: &[Vec<f32>],
+        data: &EpochData,
+        lr: f32,
+    ) -> Result<TrainOutput>;
+
+    /// Evaluate the *full* model on one batch.
+    fn evaluate(&self, params: &[f32], batch: &EvalBatch) -> Result<EvalOutput>;
+}
+
+/// Validate data sizes against the spec (shared by both backends).
+pub fn check_epoch_data(spec: &VariantSpec, data: &EpochData) -> Result<()> {
+    let per_sample: usize = spec.input_shape.iter().product();
+    let want_x = spec.num_batches * spec.batch_size * per_sample;
+    let want_y = spec.num_batches * spec.batch_size;
+    anyhow::ensure!(
+        data.xs.len() == want_x,
+        "xs: expected {want_x} elements, got {}",
+        data.xs.len()
+    );
+    anyhow::ensure!(
+        data.ys.len() == want_y,
+        "ys: expected {want_y} labels, got {}",
+        data.ys.len()
+    );
+    Ok(())
+}
+
+pub fn check_eval_batch(spec: &VariantSpec, batch: &EvalBatch) -> Result<()> {
+    let per_sample: usize = spec.input_shape.iter().product();
+    anyhow::ensure!(
+        batch.xs.len() == spec.batch_size * per_sample,
+        "eval xs: expected {}, got {}",
+        spec.batch_size * per_sample,
+        batch.xs.len()
+    );
+    anyhow::ensure!(
+        batch.ys.len() == spec.batch_size,
+        "eval ys: expected {}, got {}",
+        spec.batch_size,
+        batch.ys.len()
+    );
+    Ok(())
+}

@@ -1,0 +1,173 @@
+//! PJRT-backed model runtime: load HLO text, compile once, execute many.
+//!
+//! One `PjrtRuntime` per model variant holds the compiled train and eval
+//! executables. The train artifact runs a full local epoch per call
+//! (`lax.scan` over the round's batches happens *inside* XLA), so the
+//! per-client PJRT boundary cost is one literal build + one execute.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::model::manifest::{DType, Manifest, VariantSpec};
+use crate::runtime::literal::{f32_literal, f32_scalar, i32_literal, to_f32_vec};
+use crate::runtime::{
+    check_epoch_data, check_eval_batch, BatchInput, EpochData, EvalBatch, EvalOutput,
+    ModelRuntime, TrainOutput,
+};
+
+pub struct PjrtRuntime {
+    spec: VariantSpec,
+    train_exe: PjRtLoadedExecutable,
+    eval_exe: PjRtLoadedExecutable,
+}
+
+fn compile_hlo(client: &PjRtClient, path: &Path) -> Result<PjRtLoadedExecutable> {
+    let proto = HloModuleProto::from_text_file(path)
+        .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", path.display()))?;
+    let comp = XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))
+}
+
+impl PjrtRuntime {
+    /// Load + compile a variant's artifacts on the given client.
+    pub fn load(client: &PjRtClient, manifest: &Manifest, variant: &str) -> Result<PjrtRuntime> {
+        let spec = manifest.variant(variant)?.clone();
+        let train_exe = compile_hlo(client, &manifest.dir.join(&spec.train_hlo))
+            .with_context(|| format!("train artifact for {variant}"))?;
+        let eval_exe = compile_hlo(client, &manifest.dir.join(&spec.eval_hlo))
+            .with_context(|| format!("eval artifact for {variant}"))?;
+        Ok(PjrtRuntime {
+            spec,
+            train_exe,
+            eval_exe,
+        })
+    }
+
+    fn param_literals(&self, params: &[f32]) -> Result<Vec<Literal>> {
+        anyhow::ensure!(
+            params.len() == self.spec.num_params,
+            "params: expected {}, got {}",
+            self.spec.num_params,
+            params.len()
+        );
+        self.spec
+            .params
+            .iter()
+            .map(|seg| f32_literal(&params[seg.range()], &seg.shape))
+            .collect()
+    }
+
+    fn input_literal(&self, xs: &BatchInput, lead: &[usize]) -> Result<Literal> {
+        let mut dims = lead.to_vec();
+        dims.extend_from_slice(&self.spec.input_shape);
+        match (xs, self.spec.input_dtype) {
+            (BatchInput::F32(v), DType::F32) => f32_literal(v, &dims),
+            (BatchInput::I32(v), DType::I32) => i32_literal(v, &dims),
+            _ => anyhow::bail!("input dtype mismatch for {}", self.spec.name),
+        }
+    }
+}
+
+impl ModelRuntime for PjrtRuntime {
+    fn spec(&self) -> &VariantSpec {
+        &self.spec
+    }
+
+    fn train_epoch(
+        &self,
+        params: &[f32],
+        masks: &[Vec<f32>],
+        data: &EpochData,
+        lr: f32,
+    ) -> Result<TrainOutput> {
+        check_epoch_data(&self.spec, data)?;
+        anyhow::ensure!(
+            masks.len() == self.spec.mask_groups.len(),
+            "expected {} masks, got {}",
+            self.spec.mask_groups.len(),
+            masks.len()
+        );
+        let mut inputs = self.param_literals(params)?;
+        for (g, m) in self.spec.mask_groups.iter().zip(masks) {
+            anyhow::ensure!(
+                m.len() == g.size,
+                "mask {} expected {} units, got {}",
+                g.name,
+                g.size,
+                m.len()
+            );
+            inputs.push(f32_literal(m, &[g.size])?);
+        }
+        inputs.push(self.input_literal(
+            &data.xs,
+            &[self.spec.num_batches, self.spec.batch_size],
+        )?);
+        inputs.push(i32_literal(
+            &data.ys,
+            &[self.spec.num_batches, self.spec.batch_size],
+        )?);
+        inputs.push(f32_scalar(lr)?);
+
+        let result = self
+            .train_exe
+            .execute::<Literal>(&inputs)
+            .map_err(|e| anyhow!("train execute: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("train to_literal: {e:?}"))?
+            .to_tuple()
+            .map_err(|e| anyhow!("train to_tuple: {e:?}"))?;
+        anyhow::ensure!(
+            tuple.len() == self.spec.params.len() + 1,
+            "train artifact returned {} outputs, expected {}",
+            tuple.len(),
+            self.spec.params.len() + 1
+        );
+        let mut out = vec![0.0f32; self.spec.num_params];
+        for (seg, lit) in self.spec.params.iter().zip(&tuple) {
+            let vals = to_f32_vec(lit)?;
+            anyhow::ensure!(vals.len() == seg.size, "output {} size mismatch", seg.name);
+            out[seg.range()].copy_from_slice(&vals);
+        }
+        let mean_loss = crate::runtime::literal::to_f32_scalar(&tuple[tuple.len() - 1])?;
+        Ok(TrainOutput {
+            params: out,
+            mean_loss,
+        })
+    }
+
+    fn evaluate(&self, params: &[f32], batch: &EvalBatch) -> Result<EvalOutput> {
+        check_eval_batch(&self.spec, batch)?;
+        let mut inputs = self.param_literals(params)?;
+        inputs.push(self.input_literal(&batch.xs, &[self.spec.batch_size])?);
+        inputs.push(i32_literal(&batch.ys, &[self.spec.batch_size])?);
+        let result = self
+            .eval_exe
+            .execute::<Literal>(&inputs)
+            .map_err(|e| anyhow!("eval execute: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("eval to_literal: {e:?}"))?
+            .to_tuple()
+            .map_err(|e| anyhow!("eval to_tuple: {e:?}"))?;
+        anyhow::ensure!(tuple.len() == 2, "eval artifact must return 2 outputs");
+        Ok(EvalOutput {
+            loss_sum: crate::runtime::literal::to_f32_scalar(&tuple[0])? as f64,
+            correct: crate::runtime::literal::to_f32_scalar(&tuple[1])? as f64,
+            count: self.spec.batch_size,
+        })
+    }
+}
+
+/// Load + compile a standalone L1 kernel artifact (tests/benches).
+pub fn compile_kernel_artifact(
+    client: &PjRtClient,
+    manifest: &Manifest,
+    hlo_file: &str,
+) -> Result<PjRtLoadedExecutable> {
+    compile_hlo(client, &manifest.dir.join(hlo_file))
+}

@@ -1,0 +1,123 @@
+//! Flat f32 tensor used on the coordinator hot path.
+//!
+//! The coordinator treats a model as one contiguous `Vec<f32>` (the
+//! manifest's parameter segments index into it). Everything the server
+//! does per round — aggregation, delta computation, compression,
+//! masking — is a pass over flat arrays, so this module keeps the ops
+//! simple, allocation-conscious and autovectorizer-friendly.
+
+/// Shaped view metadata (shapes live in the manifest; data stays flat).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Shape(pub Vec<usize>);
+
+impl Shape {
+    pub fn numel(&self) -> usize {
+        self.0.iter().product()
+    }
+}
+
+/// y += alpha * x
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// y = x (copy)
+pub fn copy(x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    y.copy_from_slice(x);
+}
+
+/// x *= alpha
+pub fn scale(alpha: f32, x: &mut [f32]) {
+    for xi in x.iter_mut() {
+        *xi *= alpha;
+    }
+}
+
+/// out = a - b
+pub fn sub(a: &[f32], b: &[f32], out: &mut [f32]) {
+    assert_eq!(a.len(), b.len());
+    assert_eq!(a.len(), out.len());
+    for i in 0..a.len() {
+        out[i] = a[i] - b[i];
+    }
+}
+
+/// a += b
+pub fn add_assign(a: &mut [f32], b: &[f32]) {
+    assert_eq!(a.len(), b.len());
+    for (ai, bi) in a.iter_mut().zip(b) {
+        *ai += bi;
+    }
+}
+
+pub fn l2_norm(x: &[f32]) -> f32 {
+    x.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>().sqrt() as f32
+}
+
+pub fn linf_norm(x: &[f32]) -> f32 {
+    x.iter().fold(0.0f32, |m, v| m.max(v.abs()))
+}
+
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (*x as f64) * (*y as f64)).sum::<f64>() as f32
+}
+
+/// Relative L2 error ‖a−b‖/‖b‖ (artifact cross-checks).
+pub fn rel_l2_error(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for i in 0..a.len() {
+        let d = (a[i] - b[i]) as f64;
+        num += d * d;
+        den += (b[i] as f64) * (b[i] as f64);
+    }
+    if den == 0.0 {
+        return if num == 0.0 { 0.0 } else { f32::INFINITY };
+    }
+    (num / den).sqrt() as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_and_sub() {
+        let x = vec![1.0, 2.0, 3.0];
+        let mut y = vec![10.0, 20.0, 30.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, vec![12.0, 24.0, 36.0]);
+        let mut out = vec![0.0; 3];
+        sub(&y, &x, &mut out);
+        assert_eq!(out, vec![11.0, 22.0, 33.0]);
+    }
+
+    #[test]
+    fn norms() {
+        let x = vec![3.0, 4.0];
+        assert!((l2_norm(&x) - 5.0).abs() < 1e-6);
+        assert_eq!(linf_norm(&[-7.0, 2.0]), 7.0);
+        assert!((dot(&x, &x) - 25.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn relative_error() {
+        let a = vec![1.0, 2.0];
+        let b = vec![1.0, 2.0];
+        assert_eq!(rel_l2_error(&a, &b), 0.0);
+        assert_eq!(rel_l2_error(&[0.0], &[0.0]), 0.0);
+        assert!(rel_l2_error(&[1.0], &[0.0]).is_infinite());
+    }
+
+    #[test]
+    fn shape_numel() {
+        assert_eq!(Shape(vec![2, 3, 4]).numel(), 24);
+        assert_eq!(Shape(vec![]).numel(), 1);
+    }
+}

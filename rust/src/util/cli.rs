@@ -1,0 +1,258 @@
+//! Declarative CLI flag parser substrate (no `clap` offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, repeated
+//! flags, positional arguments and auto-generated `--help`. Each binary
+//! (the `afd` launcher, every example and bench) builds an `ArgSpec` and
+//! gets consistent parsing + usage text.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+pub struct FlagDef {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<String>,
+}
+
+#[derive(Default)]
+pub struct ArgSpec {
+    pub about: &'static str,
+    flags: Vec<FlagDef>,
+    positional: Vec<(&'static str, &'static str)>,
+}
+
+#[derive(Debug)]
+pub struct Args {
+    values: BTreeMap<String, Vec<String>>,
+    positional: Vec<String>,
+}
+
+impl ArgSpec {
+    pub fn new(about: &'static str) -> Self {
+        ArgSpec {
+            about,
+            ..Default::default()
+        }
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagDef {
+            name,
+            help,
+            takes_value: false,
+            default: None,
+        });
+        self
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.flags.push(FlagDef {
+            name,
+            help,
+            takes_value: true,
+            default: Some(default.to_string()),
+        });
+        self
+    }
+
+    /// Option with no default (optional value).
+    pub fn opt_maybe(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagDef {
+            name,
+            help,
+            takes_value: true,
+            default: None,
+        });
+        self
+    }
+
+    pub fn positional(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positional.push((name, help));
+        self
+    }
+
+    pub fn usage(&self, prog: &str) -> String {
+        let mut s = format!("{}\n\nUsage: {prog}", self.about);
+        for (p, _) in &self.positional {
+            s.push_str(&format!(" <{p}>"));
+        }
+        s.push_str(" [flags]\n\nFlags:\n");
+        for f in &self.flags {
+            let val = if f.takes_value { " <value>" } else { "" };
+            let def = match &f.default {
+                Some(d) => format!(" (default: {d})"),
+                None => String::new(),
+            };
+            s.push_str(&format!("  --{}{val}\n      {}{def}\n", f.name, f.help));
+        }
+        s.push_str("  --help\n      print this message\n");
+        for (p, h) in &self.positional {
+            s.push_str(&format!("\n<{p}>: {h}"));
+        }
+        s
+    }
+
+    /// Parse `std::env::args().skip(1)`-style iterators. On `--help`
+    /// prints usage and exits 0; on errors returns Err with message.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        &self,
+        prog: &str,
+        argv: I,
+    ) -> Result<Args, String> {
+        let mut values: BTreeMap<String, Vec<String>> = BTreeMap::new();
+        for f in &self.flags {
+            if let Some(d) = &f.default {
+                values.insert(f.name.to_string(), vec![d.clone()]);
+            }
+        }
+        let mut positional = Vec::new();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if arg == "--help" || arg == "-h" {
+                println!("{}", self.usage(prog));
+                std::process::exit(0);
+            }
+            if let Some(stripped) = arg.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let def = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| format!("unknown flag --{name}"))?;
+                let value = if def.takes_value {
+                    match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("--{name} requires a value"))?,
+                    }
+                } else {
+                    if inline.is_some() {
+                        return Err(format!("--{name} does not take a value"));
+                    }
+                    "true".to_string()
+                };
+                let entry = values.entry(name).or_default();
+                if def.default.is_some() && entry.len() == 1 && entry[0] == *def.default.as_ref().unwrap() {
+                    entry.clear(); // replace default on first explicit use
+                }
+                entry.push(value);
+            } else {
+                positional.push(arg);
+            }
+        }
+        if positional.len() > self.positional.len() {
+            return Err(format!(
+                "unexpected positional argument {:?}",
+                positional[self.positional.len()]
+            ));
+        }
+        Ok(Args { values, positional })
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn get_all(&self, name: &str) -> Vec<&str> {
+        self.values
+            .get(name)
+            .map(|v| v.iter().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.values.get(name).map(|v| !v.is_empty()).unwrap_or(false)
+    }
+
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.positional.get(i).map(|s| s.as_str())
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize, String> {
+        self.parse_as(name)
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64, String> {
+        self.parse_as(name)
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64, String> {
+        self.parse_as(name)
+    }
+
+    pub fn bool(&self, name: &str) -> bool {
+        matches!(self.get(name), Some("true") | Some("1") | Some("yes"))
+    }
+
+    fn parse_as<T: std::str::FromStr>(&self, name: &str) -> Result<T, String> {
+        let raw = self
+            .get(name)
+            .ok_or_else(|| format!("missing --{name}"))?;
+        raw.parse::<T>()
+            .map_err(|_| format!("--{name}: cannot parse {raw:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ArgSpec {
+        ArgSpec::new("test tool")
+            .opt("rounds", "100", "number of rounds")
+            .opt_maybe("preset", "preset name")
+            .flag("verbose", "chatty output")
+            .positional("target", "what to run")
+    }
+
+    fn parse(args: &[&str]) -> Result<Args, String> {
+        spec().parse("t", args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]).unwrap();
+        assert_eq!(a.usize("rounds").unwrap(), 100);
+        assert!(!a.bool("verbose"));
+        assert!(a.get("preset").is_none());
+    }
+
+    #[test]
+    fn explicit_values_override() {
+        let a = parse(&["--rounds", "7", "--verbose", "--preset=x", "tgt"]).unwrap();
+        assert_eq!(a.usize("rounds").unwrap(), 7);
+        assert!(a.bool("verbose"));
+        assert_eq!(a.get("preset"), Some("x"));
+        assert_eq!(a.positional(0), Some("tgt"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse(&["--rounds=55"]).unwrap();
+        assert_eq!(a.usize("rounds").unwrap(), 55);
+    }
+
+    #[test]
+    fn repeated_flags_accumulate() {
+        let a = parse(&["--preset", "a", "--preset", "b"]).unwrap();
+        assert_eq!(a.get_all("preset"), vec!["a", "b"]);
+        assert_eq!(a.get("preset"), Some("b")); // last wins for scalar get
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse(&["--nope"]).is_err());
+        assert!(parse(&["--rounds"]).is_err());
+        assert!(parse(&["--verbose=x"]).is_err());
+        assert!(parse(&["a", "b"]).is_err());
+        let a = parse(&["--rounds", "abc"]).unwrap();
+        assert!(a.usize("rounds").is_err());
+    }
+}

@@ -1,0 +1,126 @@
+//! Leveled logging substrate with per-round structured records.
+//!
+//! `AFD_LOG=debug|info|warn|error` controls verbosity (default info).
+//! The coordinator also appends machine-readable JSON-lines round records
+//! through `JsonlSink` for post-hoc analysis (EXPERIMENTS.md plots).
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(1);
+static START: Mutex<Option<Instant>> = Mutex::new(None);
+
+pub fn init_from_env() {
+    let lvl = match std::env::var("AFD_LOG").as_deref() {
+        Ok("debug") => Level::Debug,
+        Ok("warn") => Level::Warn,
+        Ok("error") => Level::Error,
+        _ => Level::Info,
+    };
+    set_level(lvl);
+    *START.lock().unwrap() = Some(Instant::now());
+}
+
+pub fn set_level(lvl: Level) {
+    LEVEL.store(lvl as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(lvl: Level) -> bool {
+    lvl as u8 >= LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn log(lvl: Level, msg: &str) {
+    if !enabled(lvl) {
+        return;
+    }
+    let t = START
+        .lock()
+        .unwrap()
+        .map(|s| s.elapsed().as_secs_f64())
+        .unwrap_or(0.0);
+    let tag = match lvl {
+        Level::Debug => "DBG",
+        Level::Info => "INF",
+        Level::Warn => "WRN",
+        Level::Error => "ERR",
+    };
+    eprintln!("[{t:9.3}s {tag}] {msg}");
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Debug, &format!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Info, &format!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! warn_ {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Warn, &format!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Error, &format!($($arg)*)) };
+}
+
+/// Append-only JSON-lines sink (metrics export).
+pub struct JsonlSink {
+    file: Mutex<std::fs::File>,
+}
+
+impl JsonlSink {
+    pub fn create(path: &std::path::Path) -> std::io::Result<JsonlSink> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        Ok(JsonlSink {
+            file: Mutex::new(std::fs::File::create(path)?),
+        })
+    }
+
+    pub fn write(&self, record: &crate::util::json::Json) {
+        let line = record.to_string_compact();
+        let mut f = self.file.lock().unwrap();
+        let _ = writeln!(f, "{line}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gating() {
+        set_level(Level::Warn);
+        assert!(!enabled(Level::Info));
+        assert!(enabled(Level::Error));
+        set_level(Level::Info);
+        assert!(enabled(Level::Info));
+    }
+
+    #[test]
+    fn jsonl_sink_writes_lines() {
+        let dir = std::env::temp_dir().join("afd_log_test");
+        let path = dir.join("out.jsonl");
+        let sink = JsonlSink::create(&path).unwrap();
+        let mut rec = crate::util::json::Json::obj();
+        rec.set("round", crate::util::json::Json::Num(3.0));
+        sink.write(&rec);
+        sink.write(&rec);
+        drop(sink);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        assert!(text.contains("\"round\":3"));
+    }
+}

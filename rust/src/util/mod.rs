@@ -1,0 +1,57 @@
+//! Foundation substrates built in-tree (offline environment: the cargo
+//! registry only carries the xla-crate closure, so the usual ecosystem
+//! crates — rand, serde, clap, tokio, rayon, criterion, proptest — are
+//! replaced by the minimal, tested implementations in this module).
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod pool;
+pub mod rng;
+pub mod stats;
+
+/// Format a byte count human-readably (tables in benches/examples).
+pub fn human_bytes(n: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{:.2} {}", v, UNITS[u])
+    }
+}
+
+/// Format seconds as h/m/s for convergence-time tables.
+pub fn human_duration(secs: f64) -> String {
+    if secs < 60.0 {
+        format!("{secs:.1}s")
+    } else if secs < 3600.0 {
+        format!("{:.1}min", secs / 60.0)
+    } else {
+        format!("{:.2}h", secs / 3600.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(human_duration(5.0), "5.0s");
+        assert_eq!(human_duration(90.0), "1.5min");
+        assert_eq!(human_duration(7200.0), "2.00h");
+    }
+}

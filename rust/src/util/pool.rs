@@ -1,0 +1,204 @@
+//! Worker thread-pool substrate (no `tokio`/`rayon` offline).
+//!
+//! The coordinator trains a round's cohort in parallel: each selected
+//! client's local epoch is an independent PJRT execution. `Pool` is a
+//! fixed-size worker pool with a `scope`d parallel-map that preserves
+//! input order and propagates panics — all the structure the round loop
+//! needs, none of the generality we'd get (and pay for) from an async
+//! runtime. Python is never on this path.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Shutdown,
+}
+
+/// Fixed-size worker pool.
+pub struct Pool {
+    tx: mpsc::Sender<Msg>,
+    rx_shared: Arc<Mutex<mpsc::Receiver<Msg>>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    size: usize,
+}
+
+impl Pool {
+    pub fn new(size: usize) -> Pool {
+        let size = size.max(1);
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let rx_shared = Arc::new(Mutex::new(rx));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&rx_shared);
+                thread::Builder::new()
+                    .name(format!("afd-worker-{i}"))
+                    .spawn(move || loop {
+                        let msg = { rx.lock().unwrap().recv() };
+                        match msg {
+                            Ok(Msg::Run(job)) => job(),
+                            Ok(Msg::Shutdown) | Err(_) => break,
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        Pool {
+            tx,
+            rx_shared,
+            workers,
+            size,
+        }
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Default pool sized to the machine (leaving a core for the
+    /// coordinator thread).
+    pub fn default_for_machine() -> Pool {
+        let n = thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4);
+        Pool::new(n.saturating_sub(1).max(1))
+    }
+
+    /// Parallel map preserving input order. Panics in tasks are captured
+    /// and re-raised on the caller thread (after all tasks finish).
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let n = items.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let f = Arc::new(f);
+        let (done_tx, done_rx) = mpsc::channel::<(usize, thread::Result<R>)>();
+        for (i, item) in items.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let done = done_tx.clone();
+            let job: Job = Box::new(move || {
+                let out = catch_unwind(AssertUnwindSafe(|| f(item)));
+                let _ = done.send((i, out));
+            });
+            self.tx.send(Msg::Run(job)).expect("pool closed");
+        }
+        drop(done_tx);
+        let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        let mut panic: Option<Box<dyn std::any::Any + Send>> = None;
+        for _ in 0..n {
+            let (i, res) = done_rx.recv().expect("worker vanished");
+            match res {
+                Ok(r) => slots[i] = Some(r),
+                Err(p) => panic = Some(p),
+            }
+        }
+        if let Some(p) = panic {
+            std::panic::resume_unwind(p);
+        }
+        slots.into_iter().map(|s| s.unwrap()).collect()
+    }
+
+    /// Fire-and-wait execution of heterogeneous closures.
+    pub fn run_all(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'static>>) {
+        let n = jobs.len();
+        let (done_tx, done_rx) = mpsc::channel::<thread::Result<()>>();
+        for job in jobs {
+            let done = done_tx.clone();
+            let wrapped: Job = Box::new(move || {
+                let out = catch_unwind(AssertUnwindSafe(job));
+                let _ = done.send(out);
+            });
+            self.tx.send(Msg::Run(wrapped)).expect("pool closed");
+        }
+        drop(done_tx);
+        let mut panic = None;
+        for _ in 0..n {
+            if let Err(p) = done_rx.recv().expect("worker vanished") {
+                panic = Some(p);
+            }
+        }
+        if let Some(p) = panic {
+            std::panic::resume_unwind(p);
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        for _ in 0..self.workers.len() {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        // Wake any worker blocked on an empty queue after the channel is
+        // drained: dropping the sender disconnects recv().
+        let _ = &self.rx_shared;
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = Pool::new(4);
+        let out = pool.map((0..100).collect(), |i: usize| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_runs_in_parallel() {
+        let pool = Pool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&counter);
+        let start = std::time::Instant::now();
+        pool.map((0..8).collect(), move |_: usize| {
+            c.fetch_add(1, Ordering::SeqCst);
+            std::thread::sleep(std::time::Duration::from_millis(50));
+        });
+        // 8 × 50ms on 4 workers ≈ 100ms; serial would be 400ms.
+        assert!(start.elapsed().as_millis() < 350);
+        assert_eq!(counter.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "boom")]
+    fn panics_propagate() {
+        let pool = Pool::new(2);
+        pool.map(vec![0, 1, 2], |i: i32| {
+            if i == 1 {
+                panic!("boom");
+            }
+            i
+        });
+    }
+
+    #[test]
+    fn empty_map() {
+        let pool = Pool::new(2);
+        let out: Vec<i32> = pool.map(Vec::<i32>::new(), |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn pool_survives_many_rounds() {
+        let pool = Pool::new(3);
+        for round in 0..20 {
+            let out = pool.map((0..10).collect(), move |i: usize| i + round);
+            assert_eq!(out.len(), 10);
+        }
+    }
+}

@@ -1,0 +1,214 @@
+//! Property tests on the coordinator's invariants (in-tree `prop`
+//! substrate standing in for proptest).
+
+use afd::dropout::{
+    kept_count, make_strategy, MultiModelAfd, RandomFd, ScoreMap, SingleModelAfd,
+    SubmodelStrategy,
+};
+use afd::prop::{check, Pair, UsizeIn};
+use afd::runtime::native::mlp_spec;
+use afd::util::rng::Pcg64;
+
+fn spec_with_hidden(h: usize) -> afd::model::manifest::VariantSpec {
+    mlp_spec("p", 6, h, 3, 4, 2, 0.1)
+}
+
+#[test]
+fn prop_selection_always_keeps_fdr_fraction() {
+    // For every strategy, every round, every client: the sub-model keeps
+    // exactly kept_count(group, fdr) units per group.
+    let gen = Pair(UsizeIn(2, 64), UsizeIn(0, 10_000));
+    check("selection size invariant", &gen, 60, |&(h, seed)| {
+        let spec = spec_with_hidden(h);
+        let fdr = 0.25;
+        let mut rng = Pcg64::new(seed as u64);
+        for kind in ["fd", "afd_multi", "afd_single"] {
+            let mut s = make_strategy(kind, &spec, 5, fdr).unwrap();
+            for round in 1..6 {
+                for client in 0..3 {
+                    let sm = s.select(round, client, &mut rng);
+                    let want = kept_count(h, fdr);
+                    let got = sm.kept_counts()[0];
+                    if got != want {
+                        return Err(format!("{kind} r{round} c{client}: {got} != {want}"));
+                    }
+                    s.report_loss(round, client, 1.0 / round as f64);
+                }
+                s.end_round(round);
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_strategies_are_deterministic_given_rng() {
+    let gen = UsizeIn(0, 100_000);
+    check("strategy determinism", &gen, 30, |&seed| {
+        let spec = spec_with_hidden(16);
+        for kind in ["fd", "afd_multi", "afd_single"] {
+            let run = |s: u64| {
+                let mut strat = make_strategy(kind, &spec, 4, 0.25).unwrap();
+                let mut rng = Pcg64::new(s);
+                let mut trace = Vec::new();
+                for round in 1..5 {
+                    for c in 0..2 {
+                        let sm = strat.select(round, c, &mut rng);
+                        trace.push(sm.kept_indices());
+                        strat.report_loss(round, c, 1.0 / (round + c) as f64);
+                    }
+                    strat.end_round(round);
+                }
+                trace
+            };
+            if run(seed as u64) != run(seed as u64) {
+                return Err(format!("{kind} not deterministic"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_score_map_total_monotone_under_improvement() {
+    // Strictly decreasing losses ⇒ the score map total never decreases
+    // and strictly increases after the second round.
+    let gen = Pair(UsizeIn(4, 64), UsizeIn(0, 10_000));
+    check("score map monotone", &gen, 40, |&(h, seed)| {
+        let spec = spec_with_hidden(h);
+        let mut s = MultiModelAfd::new(&spec, 1, 0.25);
+        let mut rng = Pcg64::new(seed as u64);
+        let mut prev_total = 0.0;
+        let mut loss = 10.0;
+        for round in 1..8 {
+            let _ = s.select(round, 0, &mut rng);
+            loss *= 0.8;
+            s.report_loss(round, 0, loss);
+            let total = s.score_map(0).total();
+            if total < prev_total - 1e-12 {
+                return Err(format!("total fell {prev_total} -> {total}"));
+            }
+            if round > 2 && total <= 0.0 {
+                return Err("no credit accumulated".into());
+            }
+            prev_total = total;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_recorded_submodel_reused_exactly() {
+    // Whenever loss improves, the NEXT selection must be identical
+    // (Alg. 1 line 7).
+    let gen = UsizeIn(0, 10_000);
+    check("recorded reuse", &gen, 40, |&seed| {
+        let spec = spec_with_hidden(24);
+        let mut s = MultiModelAfd::new(&spec, 1, 0.3);
+        let mut rng = Pcg64::new(seed as u64);
+        let mut last = None;
+        let mut loss = 5.0;
+        for round in 1..10 {
+            let sm = s.select(round, 0, &mut rng);
+            if s.recorded(0) {
+                if let Some(prev) = &last {
+                    if &sm != prev {
+                        return Err(format!("round {round}: recorded but changed"));
+                    }
+                }
+            }
+            loss *= 0.9; // improving every round after round 1
+            s.report_loss(round, 0, loss);
+            last = Some(sm);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_single_model_cohort_consistency() {
+    // All clients of a round share one sub-model regardless of cohort
+    // size or call order.
+    let gen = Pair(UsizeIn(1, 12), UsizeIn(0, 10_000));
+    check("single-model cohort", &gen, 40, |&(m, seed)| {
+        let spec = spec_with_hidden(20);
+        let mut s = SingleModelAfd::new(&spec, 0.25);
+        let mut rng = Pcg64::new(seed as u64);
+        for round in 1..6 {
+            let first = s.select(round, 0, &mut rng);
+            for c in 1..m {
+                let sm = s.select(round, c, &mut rng);
+                if sm != first {
+                    return Err(format!("round {round}: client {c} diverged"));
+                }
+            }
+            for c in 0..m {
+                s.report_loss(round, c, 1.0 / (round * (c + 1)) as f64);
+            }
+            s.end_round(round);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_weighted_selection_biases_toward_credit() {
+    // Units with overwhelming score must be selected (statistically).
+    let gen = UsizeIn(0, 1_000);
+    check("weighted bias", &gen, 15, |&seed| {
+        let spec = spec_with_hidden(16);
+        let mut map = ScoreMap::zeros(&spec);
+        let favored =
+            afd::model::submodel::SubModel::from_kept_indices(&spec, &[vec![0, 5, 9, 13]]);
+        for _ in 0..50 {
+            map.credit(&favored, 1.0);
+        }
+        let mut rng = Pcg64::new(seed as u64);
+        let mut favored_hits = 0usize;
+        let trials = 50;
+        for _ in 0..trials {
+            let sm = map.weighted_select(&spec, 0.75, &mut rng); // keep 4 of 16
+            favored_hits += sm.kept_indices()[0]
+                .iter()
+                .filter(|u| [0usize, 5, 9, 13].contains(u))
+                .count();
+        }
+        // Of 4·trials kept slots, the overwhelming majority must be the
+        // 4 favored units.
+        if favored_hits * 10 >= trials * 4 * 8 {
+            Ok(())
+        } else {
+            Err(format!("favored hits {favored_hits}/{}", trials * 4))
+        }
+    });
+}
+
+#[test]
+fn prop_fd_has_no_memory() {
+    // FD selections are iid across rounds: reporting different losses
+    // must not change the distribution (compare traces under different
+    // loss feeds with the same rng seed).
+    let gen = UsizeIn(0, 10_000);
+    check("fd memoryless", &gen, 30, |&seed| {
+        let spec = spec_with_hidden(16);
+        let run = |losses: &[f64]| {
+            let mut s = RandomFd::new(&spec, 0.25);
+            let mut rng = Pcg64::new(seed as u64);
+            let mut trace = Vec::new();
+            for (round, &l) in losses.iter().enumerate() {
+                let sm = s.select(round + 1, 0, &mut rng);
+                trace.push(sm.kept_indices());
+                s.report_loss(round + 1, 0, l);
+                s.end_round(round + 1);
+            }
+            trace
+        };
+        let a = run(&[5.0, 4.0, 3.0, 2.0]);
+        let b = run(&[1.0, 9.0, 1.0, 9.0]);
+        if a == b {
+            Ok(())
+        } else {
+            Err("FD selections depended on losses".into())
+        }
+    });
+}

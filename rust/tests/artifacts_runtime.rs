@@ -1,0 +1,206 @@
+//! Integration: load + compile + execute the AOT artifacts through PJRT.
+//!
+//! Requires `make artifacts`. Tests are skipped (with a note) if the
+//! artifacts directory is absent so `cargo test` stays green on a fresh
+//! checkout.
+
+use afd::model::manifest::{DType, Manifest};
+use afd::model::submodel::SubModel;
+use afd::runtime::pjrt::{compile_kernel_artifact, PjrtRuntime};
+use afd::runtime::{BatchInput, EpochData, EvalBatch, ModelRuntime};
+use afd::util::rng::Pcg64;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn synth_epoch(spec: &afd::model::manifest::VariantSpec, seed: u64) -> EpochData {
+    let mut rng = Pcg64::new(seed);
+    let per: usize = spec.input_shape.iter().product();
+    let n = spec.num_batches * spec.batch_size;
+    let ys: Vec<i32> = (0..n).map(|_| rng.below(spec.classes as u64) as i32).collect();
+    let xs = match spec.input_dtype {
+        DType::F32 => BatchInput::F32(
+            (0..n * per).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+        ),
+        DType::I32 => BatchInput::I32(
+            (0..n * per)
+                .map(|_| rng.below(spec.vocab.max(2) as u64) as i32)
+                .collect(),
+        ),
+    };
+    EpochData { xs, ys }
+}
+
+#[test]
+fn all_variants_train_and_eval() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let client = xla::PjRtClient::cpu().unwrap();
+    for name in manifest.variants.keys() {
+        let rt = PjrtRuntime::load(&client, &manifest, name).unwrap();
+        let spec = rt.spec().clone();
+        let params = manifest.load_init_params(&spec).unwrap();
+        let sm = SubModel::full(&spec);
+        let data = synth_epoch(&spec, 7);
+
+        let out = rt
+            .train_epoch(&params, &sm.masks_f32(), &data, spec.lr)
+            .unwrap();
+        assert_eq!(out.params.len(), spec.num_params);
+        assert!(out.mean_loss.is_finite(), "{name}: loss must be finite");
+        assert!(out.mean_loss > 0.0, "{name}: xent loss must be positive");
+        assert!(
+            out.params.iter().zip(&params).any(|(a, b)| a != b),
+            "{name}: training must change parameters"
+        );
+
+        // Repeated epochs on the same (memorizable) data must reduce loss.
+        let out2 = rt
+            .train_epoch(&out.params, &sm.masks_f32(), &data, spec.lr)
+            .unwrap();
+        let out3 = rt
+            .train_epoch(&out2.params, &sm.masks_f32(), &data, spec.lr)
+            .unwrap();
+        assert!(
+            out3.mean_loss < out.mean_loss,
+            "{name}: loss should fall: {} -> {} -> {}",
+            out.mean_loss,
+            out2.mean_loss,
+            out3.mean_loss
+        );
+
+        // Eval runs and counts sanely.
+        let per: usize = spec.input_shape.iter().product();
+        let batch = EvalBatch {
+            xs: match &data.xs {
+                BatchInput::F32(v) => BatchInput::F32(v[..spec.batch_size * per].to_vec()),
+                BatchInput::I32(v) => BatchInput::I32(v[..spec.batch_size * per].to_vec()),
+            },
+            ys: data.ys[..spec.batch_size].to_vec(),
+        };
+        let ev = rt.evaluate(&out3.params, &batch).unwrap();
+        assert_eq!(ev.count, spec.batch_size);
+        assert!(ev.loss_sum.is_finite() && ev.loss_sum > 0.0);
+        assert!(ev.correct >= 0.0 && ev.correct <= spec.batch_size as f64);
+        eprintln!(
+            "{name}: loss {:.4} -> {:.4}, eval acc {:.2}",
+            out.mean_loss,
+            out3.mean_loss,
+            ev.accuracy()
+        );
+    }
+}
+
+#[test]
+fn masked_training_freezes_dropped_units_via_pjrt() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let client = xla::PjRtClient::cpu().unwrap();
+    let rt = PjrtRuntime::load(&client, &manifest, "femnist_small").unwrap();
+    let spec = rt.spec().clone();
+    let params = manifest.load_init_params(&spec).unwrap();
+
+    // Drop 25% of each group (paper's FDR default).
+    let mut rng = Pcg64::new(11);
+    let kept: Vec<Vec<usize>> = spec
+        .mask_groups
+        .iter()
+        .map(|g| {
+            let keep = (g.size * 3) / 4;
+            rng.sample_indices(g.size, keep)
+        })
+        .collect();
+    let sm = SubModel::from_kept_indices(&spec, &kept);
+    let data = synth_epoch(&spec, 13);
+    let out = rt
+        .train_epoch(&params, &sm.masks_f32(), &data, spec.lr)
+        .unwrap();
+
+    // Every coordinate outside the sub-model must be bit-identical.
+    let cm = afd::model::packing::coordinate_mask(&spec, &sm);
+    let mut frozen_checked = 0usize;
+    for i in 0..spec.num_params {
+        if !cm[i] {
+            assert_eq!(out.params[i], params[i], "coordinate {i} must not move");
+            frozen_checked += 1;
+        }
+    }
+    assert!(frozen_checked > 0, "sub-model must actually drop something");
+    // And the sub-model must have learned.
+    assert!(out.params.iter().zip(&params).any(|(a, b)| a != b));
+}
+
+#[test]
+fn kernel_artifacts_execute() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let Some(k) = manifest.kernels.clone() else {
+        panic!("manifest missing kernel artifacts")
+    };
+    let client = xla::PjRtClient::cpu().unwrap();
+
+    // masked_dense: y = relu(x @ w + b) * mask — cross-check vs native.
+    let exe = compile_kernel_artifact(&client, &manifest, &k.masked_dense_hlo).unwrap();
+    let (m, kk, n) = k.masked_dense_dims;
+    let mut rng = Pcg64::new(3);
+    let x: Vec<f32> = (0..m * kk).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let w: Vec<f32> = (0..kk * n).map(|_| rng.normal_f32(0.0, 0.3)).collect();
+    let b: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 0.1)).collect();
+    let mask: Vec<f32> = (0..n).map(|i| if i % 3 == 0 { 0.0 } else { 1.0 }).collect();
+    let lits = [
+        afd::runtime::literal::f32_literal(&x, &[m, kk]).unwrap(),
+        afd::runtime::literal::f32_literal(&w, &[kk, n]).unwrap(),
+        afd::runtime::literal::f32_literal(&b, &[n]).unwrap(),
+        afd::runtime::literal::f32_literal(&mask, &[n]).unwrap(),
+    ];
+    let res = exe.execute::<xla::Literal>(&lits).unwrap()[0][0]
+        .to_literal_sync()
+        .unwrap()
+        .to_tuple1()
+        .unwrap();
+    let got = afd::runtime::literal::to_f32_vec(&res).unwrap();
+    assert_eq!(got.len(), m * n);
+    // Native reference.
+    let mut want = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = b[j];
+            for t in 0..kk {
+                acc += x[i * kk + t] * w[t * n + j];
+            }
+            want[i * n + j] = acc.max(0.0) * mask[j];
+        }
+    }
+    let err = afd::tensor::rel_l2_error(&got, &want);
+    assert!(err < 1e-5, "masked_dense rel err {err}");
+
+    // hadamard roundtrip: ‖out - in‖∞ bounded by quantization step.
+    let exe = compile_kernel_artifact(&client, &manifest, &k.hadamard_hlo).unwrap();
+    let len = k.hadamard_len;
+    let v: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let signs = Pcg64::new(99).rademacher(len);
+    let lits = [
+        afd::runtime::literal::f32_literal(&v, &[len]).unwrap(),
+        afd::runtime::literal::f32_literal(&signs, &[len]).unwrap(),
+    ];
+    let res = exe.execute::<xla::Literal>(&lits).unwrap()[0][0]
+        .to_literal_sync()
+        .unwrap()
+        .to_tuple1()
+        .unwrap();
+    let got = afd::runtime::literal::to_f32_vec(&res).unwrap();
+    let max_err = v
+        .iter()
+        .zip(&got)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_err < 0.25, "hadamard roundtrip max err {max_err}");
+    assert!(max_err > 0.0, "quantization must not be lossless");
+}

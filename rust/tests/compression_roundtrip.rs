@@ -1,0 +1,155 @@
+//! Compression integration: Rust codecs against each other and against
+//! the Pallas hadamard kernel artifact (when built).
+
+use afd::compression::quant::HadamardQuant8;
+use afd::compression::{dgc, make_dense_codec, DenseCodec, RawF32};
+use afd::model::manifest::Manifest;
+use afd::prop::{check, F32Vec};
+use afd::util::rng::Pcg64;
+
+#[test]
+fn quant8_roundtrip_property() {
+    let codec = HadamardQuant8::default();
+    let gen = F32Vec {
+        min_len: 1,
+        max_len: 5000,
+        sigma: 2.0,
+    };
+    check("quant8 roundtrip error bound", &gen, 60, |xs| {
+        let enc = codec.encode(xs, 42);
+        let dec = codec.decode(&enc, 42);
+        if dec.len() != xs.len() {
+            return Err(format!("length {} != {}", dec.len(), xs.len()));
+        }
+        // Error bound: per-block linf ≤ scale·√B/127 where scale ≤
+        // max|rotated| ≤ √B·max|x| — use a generous global bound.
+        let max_abs = xs.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        let bound = max_abs * 0.6 + 1e-6;
+        for (i, (a, b)) in xs.iter().zip(&dec).enumerate() {
+            if (a - b).abs() > bound {
+                return Err(format!("coord {i}: {a} vs {b} (bound {bound})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn quant8_compression_ratio_property() {
+    let codec = HadamardQuant8::default();
+    let gen = F32Vec {
+        min_len: 1024,
+        max_len: 50_000,
+        sigma: 1.0,
+    };
+    check("quant8 ~4x smaller than raw", &gen, 20, |xs| {
+        let raw = RawF32.encode(xs, 0).wire_bytes();
+        let q = codec.encode(xs, 0).wire_bytes();
+        if q * 3 < raw {
+            Ok(())
+        } else {
+            Err(format!("raw {raw} vs quant {q}"))
+        }
+    });
+}
+
+#[test]
+fn dgc_mass_conservation_property() {
+    // Without momentum/clipping, decoded mass + residual == input mass.
+    let gen = F32Vec {
+        min_len: 64,
+        max_len: 4096,
+        sigma: 1.0,
+    };
+    check("dgc conserves mass", &gen, 30, |xs| {
+        let mut st = dgc::DgcState::new(dgc::DgcConfig {
+            sparsity: 0.05,
+            momentum: 0.0,
+            clip_norm: None,
+        });
+        let mut shipped = vec![0.0f32; xs.len()];
+        for _ in 0..10 {
+            let out = dgc::decode(&st.compress(xs));
+            afd::tensor::add_assign(&mut shipped, &out);
+        }
+        // After r rounds of the SAME delta: shipped + residual = 10·xs.
+        let resid = st.residual_l2();
+        let mut want = xs.clone();
+        afd::tensor::scale(10.0, &mut want);
+        let mut diff = vec![0.0f32; xs.len()];
+        afd::tensor::sub(&want, &shipped, &mut diff);
+        let gap = (afd::tensor::l2_norm(&diff) - resid).abs();
+        if gap < 1e-2 * (want.len() as f32).max(1.0) {
+            Ok(())
+        } else {
+            Err(format!("mass gap {gap} (residual {resid})"))
+        }
+    });
+}
+
+#[test]
+fn rust_quant_matches_pallas_artifact() {
+    // The Rust codec and the Pallas kernel implement the same transform;
+    // their reconstructions must be close (identical block size + scale
+    // logic; signs differ by seed derivation, so compare distortion, not
+    // bits).
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let manifest = Manifest::load(&dir).unwrap();
+    let k = manifest.kernels.clone().expect("kernel artifacts");
+    let client = xla::PjRtClient::cpu().unwrap();
+    let exe =
+        afd::runtime::pjrt::compile_kernel_artifact(&client, &manifest, &k.hadamard_hlo)
+            .unwrap();
+
+    let mut rng = Pcg64::new(5);
+    let len = k.hadamard_len;
+    let xs: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let signs = Pcg64::new(1234).rademacher(len);
+
+    // Pallas path.
+    let lits = [
+        afd::runtime::literal::f32_literal(&xs, &[len]).unwrap(),
+        afd::runtime::literal::f32_literal(&signs, &[len]).unwrap(),
+    ];
+    let res = exe.execute::<xla::Literal>(&lits).unwrap()[0][0]
+        .to_literal_sync()
+        .unwrap()
+        .to_tuple1()
+        .unwrap();
+    let pallas_out = afd::runtime::literal::to_f32_vec(&res).unwrap();
+
+    // Rust path (block size must match the artifact's).
+    let codec = HadamardQuant8 { block: k.hadamard_block };
+    let rust_out = codec.decode(&codec.encode(&xs, 77), 77);
+
+    let pallas_err = afd::tensor::rel_l2_error(&pallas_out, &xs) as f64;
+    let rust_err = afd::tensor::rel_l2_error(&rust_out, &xs) as f64;
+    // Same algorithm ⇒ same distortion magnitude (within 20%).
+    assert!(pallas_err > 0.0 && rust_err > 0.0);
+    let ratio = pallas_err / rust_err;
+    assert!(
+        (0.8..1.25).contains(&ratio),
+        "distortion mismatch: pallas {pallas_err:.5} vs rust {rust_err:.5}"
+    );
+}
+
+#[test]
+fn codec_factory_roundtrips_on_model_sized_payloads() {
+    let mut rng = Pcg64::new(8);
+    let xs: Vec<f32> = (0..105_194).map(|_| rng.normal_f32(0.0, 0.1)).collect();
+    for kind in ["raw", "quant8"] {
+        let codec = make_dense_codec(kind).unwrap();
+        let enc = codec.encode(&xs, 3);
+        let dec = codec.decode(&enc, 3);
+        assert_eq!(dec.len(), xs.len());
+        let err = afd::tensor::rel_l2_error(&dec, &xs);
+        match kind {
+            "raw" => assert_eq!(err, 0.0),
+            _ => assert!(err < 0.02, "{kind}: rel err {err}"),
+        }
+    }
+}

@@ -1,0 +1,189 @@
+//! Data-pipeline integration on the real artifact specs: generators must
+//! produce model-consumable, learnable, heterogeneity-controlled data.
+
+use afd::data::{generate, DataConfig, Samples};
+use afd::model::manifest::{DType, Manifest};
+use afd::util::rng::Pcg64;
+
+fn manifest() -> Option<Manifest> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(Manifest::load(&dir).unwrap())
+    } else {
+        eprintln!("skipping: artifacts not built");
+        None
+    }
+}
+
+#[test]
+fn generators_match_every_variant_spec() {
+    let Some(man) = manifest() else { return };
+    for spec in man.variants.values() {
+        let cfg = DataConfig {
+            num_clients: 10,
+            samples_per_client: (30, 60),
+            iid: false,
+            test_fraction: 0.2,
+            seed: 3,
+        };
+        let ds = generate(spec, &cfg);
+        assert_eq!(ds.num_clients(), 10, "{}", spec.name);
+        let per: usize = spec.input_shape.iter().product();
+        for c in &ds.clients {
+            assert_eq!(c.per_sample, per, "{}", spec.name);
+            assert!(c.ys.iter().all(|&y| (y as usize) < spec.classes));
+            match (&c.xs, spec.input_dtype) {
+                (Samples::F32(v), DType::F32) => assert_eq!(v.len(), c.len() * per),
+                (Samples::I32(v), DType::I32) => {
+                    assert_eq!(v.len(), c.len() * per);
+                    assert!(v.iter().all(|&t| (t as usize) < spec.vocab.max(53)));
+                }
+                _ => panic!("{}: dtype mismatch", spec.name),
+            }
+        }
+        assert!(!ds.test.is_empty());
+    }
+}
+
+#[test]
+fn epoch_data_feeds_runtime_shapes() {
+    let Some(man) = manifest() else { return };
+    for spec in man.variants.values() {
+        let cfg = DataConfig {
+            num_clients: 4,
+            samples_per_client: (20, 40),
+            iid: true,
+            test_fraction: 0.2,
+            seed: 5,
+        };
+        let ds = generate(spec, &cfg);
+        let mut rng = Pcg64::new(0);
+        let ep = ds.clients[0].epoch_data(spec, &mut rng);
+        afd::runtime::check_epoch_data(spec, &ep)
+            .unwrap_or_else(|e| panic!("{}: {e}", spec.name));
+        let batches = ds.test.eval_batches(spec, Some(3));
+        for b in &batches {
+            afd::runtime::check_eval_batch(spec, b)
+                .unwrap_or_else(|e| panic!("{}: {e}", spec.name));
+        }
+    }
+}
+
+#[test]
+fn noniid_is_more_heterogeneous_than_iid() {
+    // Label-distribution spread across clients must be measurably larger
+    // in the non-IID split for every dataset family.
+    let Some(man) = manifest() else { return };
+    for spec in man.variants.values() {
+        let spread = |iid: bool| -> f64 {
+            let cfg = DataConfig {
+                num_clients: 12,
+                samples_per_client: (60, 60),
+                iid,
+                test_fraction: 0.0,
+                seed: 11,
+            };
+            let ds = generate(spec, &cfg);
+            // Mean total-variation distance of each client's histogram
+            // from the global one. For sequence data (many tokens per
+            // client) we histogram input tokens — labels over 53 classes
+            // with ~50 samples are sampling-noise dominated; tokens give
+            // ~1000s of observations per client.
+            let per_client_hist: Vec<Vec<f64>> = ds
+                .clients
+                .iter()
+                .map(|c| match &c.xs {
+                    Samples::I32(v) if c.per_sample > 1 => {
+                        let k = spec.vocab.max(spec.classes);
+                        let mut h = vec![0.0f64; k];
+                        for &t in v {
+                            h[t as usize] += 1.0;
+                        }
+                        h
+                    }
+                    _ => {
+                        let mut h = vec![0.0f64; spec.classes];
+                        for &y in &c.ys {
+                            h[y as usize] += 1.0;
+                        }
+                        h
+                    }
+                })
+                .collect();
+            let k = per_client_hist[0].len();
+            let mut global = vec![0.0f64; k];
+            for h in &per_client_hist {
+                for (g, v) in global.iter_mut().zip(h) {
+                    *g += v;
+                }
+            }
+            let gt: f64 = global.iter().sum();
+            for g in &mut global {
+                *g /= gt;
+            }
+            let mut tv = 0.0;
+            for h in &per_client_hist {
+                let t: f64 = h.iter().sum();
+                tv += h
+                    .iter()
+                    .zip(&global)
+                    .map(|(a, b)| (a / t - b).abs())
+                    .sum::<f64>()
+                    / 2.0;
+            }
+            tv / ds.clients.len() as f64
+        };
+        let tv_noniid = spread(false);
+        let tv_iid = spread(true);
+        assert!(
+            tv_noniid > tv_iid * 1.3,
+            "{}: non-IID TV {tv_noniid:.3} vs IID {tv_iid:.3}",
+            spec.name
+        );
+    }
+}
+
+#[test]
+fn femnist_is_learnable_through_pjrt() {
+    // The synthetic glyphs must actually be learnable by the CNN
+    // artifact: a few epochs of central training on pooled data should
+    // beat random-guess accuracy by a wide margin.
+    let Some(man) = manifest() else { return };
+    use afd::runtime::{pjrt::PjrtRuntime, ModelRuntime};
+    let spec = man.variant("femnist_small").unwrap().clone();
+    let client = xla::PjRtClient::cpu().unwrap();
+    let rt = PjrtRuntime::load(&client, &man, "femnist_small").unwrap();
+    let mut params = man.load_init_params(&spec).unwrap();
+
+    let cfg = DataConfig {
+        num_clients: 4,
+        samples_per_client: (80, 80),
+        iid: true,
+        test_fraction: 0.25,
+        seed: 21,
+    };
+    let ds = generate(&spec, &cfg);
+    let masks: Vec<Vec<f32>> = spec
+        .mask_groups
+        .iter()
+        .map(|g| vec![1.0; g.size])
+        .collect();
+    let mut rng = Pcg64::new(1);
+    for _epoch in 0..6 {
+        for c in &ds.clients {
+            let ep = c.epoch_data(&spec, &mut rng);
+            let out = rt.train_epoch(&params, &masks, &ep, spec.lr).unwrap();
+            params = out.params;
+        }
+    }
+    let mut total = afd::runtime::EvalOutput::default();
+    for b in ds.test.eval_batches(&spec, Some(8)) {
+        total.merge(&rt.evaluate(&params, &b).unwrap());
+    }
+    let acc = total.accuracy();
+    let chance = 1.0 / spec.classes as f64;
+    assert!(
+        acc > chance * 3.0,
+        "synthetic femnist should be learnable: acc {acc:.3} (chance {chance:.3})"
+    );
+}

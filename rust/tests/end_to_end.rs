@@ -1,0 +1,157 @@
+//! Artifact-free end-to-end system tests on the native backend:
+//! the paper's qualitative claims must hold on the full coordinator
+//! stack (selection → downlink codec → local training → uplink DGC →
+//! FedAvg → network accounting).
+
+use afd::config::{Backend, ExperimentConfig, Preset};
+use afd::coordinator::experiment::run_experiment;
+
+fn native_base(seed: u64) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::preset(Preset::NativeSmoke);
+    cfg.backend = Backend::Native;
+    cfg.native_dims = (48, 64, 6);
+    cfg.num_clients = 24;
+    cfg.client_fraction = 0.3;
+    cfg.rounds = 40;
+    cfg.eval_every = 4;
+    cfg.seed = seed;
+    cfg.data.samples_per_client = (40, 100);
+    cfg
+}
+
+#[test]
+fn full_stack_learns_under_every_method() {
+    for (dropout, downlink, dgc) in [
+        ("none", "raw", false),
+        ("none", "quant8", true),
+        ("fd", "quant8", true),
+        ("afd_multi", "quant8", true),
+        ("afd_single", "quant8", true),
+    ] {
+        let mut cfg = native_base(3);
+        cfg.dropout = dropout.into();
+        cfg.downlink = downlink.into();
+        cfg.uplink_dgc = dgc;
+        let r = run_experiment(&cfg)
+            .unwrap_or_else(|e| panic!("{dropout}/{downlink}: {e}"));
+        let best = r.best_accuracy();
+        assert!(
+            best > 0.55,
+            "{dropout}+{downlink}+dgc={dgc} should learn, best={best}"
+        );
+    }
+}
+
+#[test]
+fn compression_shrinks_time_but_keeps_accuracy() {
+    // The paper's core claim shape: AFD+DGC reaches comparable (or
+    // better) accuracy in far less simulated time than No Compression.
+    let mut none = native_base(1);
+    none.dropout = "none".into();
+    none.downlink = "raw".into();
+    none.uplink_dgc = false;
+    // Payload-dominated regime.
+    none.native_dims = (128, 192, 8);
+
+    let mut afd = none.clone();
+    afd.dropout = "afd_multi".into();
+    afd.downlink = "quant8".into();
+    afd.uplink_dgc = true;
+
+    let r_none = run_experiment(&none).unwrap();
+    let r_afd = run_experiment(&afd).unwrap();
+
+    assert!(
+        r_afd.total_sim_seconds() < r_none.total_sim_seconds() / 4.0,
+        "AFD+DGC should be ≥4× faster in simulated time: {} vs {}",
+        r_afd.total_sim_seconds(),
+        r_none.total_sim_seconds()
+    );
+    assert!(
+        r_afd.best_accuracy() > r_none.best_accuracy() - 0.1,
+        "accuracy must not collapse: afd {} vs none {}",
+        r_afd.best_accuracy(),
+        r_none.best_accuracy()
+    );
+}
+
+#[test]
+fn afd_multi_updates_score_maps_through_training() {
+    // Run the real loop, then verify AFD state changed (the strategy is
+    // driven through the full coordinator, not in isolation).
+    use afd::dropout::{MultiModelAfd, SubmodelStrategy};
+    use afd::util::rng::Pcg64;
+
+    // Direct strategy exercise with realistic loss sequences from an
+    // actual native run.
+    let cfg = native_base(7);
+    let report = run_experiment(&cfg).unwrap();
+    let losses: Vec<f64> = report.records.iter().map(|r| r.train_loss).collect();
+    assert!(losses.len() >= 10);
+
+    let spec = afd::runtime::native::mlp_spec("t", 48, 64, 6, 10, 5, 0.1);
+    let mut strat = MultiModelAfd::new(&spec, 1, 0.25);
+    let mut rng = Pcg64::new(0);
+    for (i, &l) in losses.iter().enumerate() {
+        let _ = strat.select(i + 1, 0, &mut rng);
+        strat.report_loss(i + 1, 0, l);
+    }
+    // Real training losses decrease overall → the map must accumulate.
+    assert!(
+        strat.score_map(0).total() > 0.0,
+        "decreasing real losses must credit the score map"
+    );
+}
+
+#[test]
+fn dgc_residuals_eventually_ship() {
+    // With DGC, early-round residuals must surface later: total uplink
+    // bytes stay bounded but coverage (aggregated coordinates) over many
+    // rounds must exceed one round's sparse fraction.
+    let mut cfg = native_base(9);
+    cfg.dropout = "none".into();
+    cfg.downlink = "raw".into();
+    cfg.uplink_dgc = true;
+    cfg.dgc.sparsity = 0.02;
+    cfg.rounds = 20;
+    let r = run_experiment(&cfg).unwrap();
+    // The run must still learn despite 98% sparsification.
+    assert!(r.best_accuracy() > 0.5, "acc {}", r.best_accuracy());
+    // And uplink ≪ downlink (dense raw down vs sparse up).
+    assert!(r.total_up_bytes() * 4 < r.total_down_bytes());
+}
+
+#[test]
+fn fdr_sweep_trades_bytes_for_capacity() {
+    // Higher FDR ⇒ smaller sub-models ⇒ fewer downlink bytes.
+    let mut bytes = Vec::new();
+    for fdr in [0.1, 0.25, 0.5] {
+        let mut cfg = native_base(5);
+        cfg.dropout = "fd".into();
+        cfg.fdr = fdr;
+        cfg.rounds = 6;
+        let r = run_experiment(&cfg).unwrap();
+        bytes.push(r.total_down_bytes());
+    }
+    assert!(
+        bytes[0] > bytes[1] && bytes[1] > bytes[2],
+        "down bytes must fall with FDR: {bytes:?}"
+    );
+}
+
+#[test]
+fn single_model_afd_shares_submodel_in_cohort() {
+    // keep_fraction identical across rounds implies consistent FDR; the
+    // strategy itself is validated in unit tests — here we make sure the
+    // coordinator path keeps cohort-wide selection consistent (one
+    // sub-model per round ⇒ per-round keep_fraction exactly the group
+    // quantile of the FDR).
+    let mut cfg = native_base(11);
+    cfg.dropout = "afd_single".into();
+    cfg.fdr = 0.25;
+    cfg.rounds = 8;
+    let r = run_experiment(&cfg).unwrap();
+    for rec in &r.records {
+        assert!((rec.keep_fraction - 0.75).abs() < 0.02, "{}", rec.keep_fraction);
+    }
+}

@@ -1,0 +1,105 @@
+//! Network-simulation integration: orderings the paper's convergence
+//! times rest on must hold across the sampled fleet.
+
+use afd::network::{LinkConfig, NetworkSim};
+use afd::prop::{check, Pair, UsizeIn};
+
+#[test]
+fn prop_round_time_monotone_in_payload() {
+    let gen = Pair(UsizeIn(1, 40), UsizeIn(0, 100_000));
+    check("monotone in bytes", &gen, 40, |&(m, seed)| {
+        let sim = NetworkSim::new(LinkConfig::default(), m, seed as u64);
+        let small: Vec<(usize, u64, f64, u64)> =
+            (0..m).map(|c| (c, 100_000, 1e8, 50_000)).collect();
+        let large: Vec<(usize, u64, f64, u64)> =
+            (0..m).map(|c| (c, 1_000_000, 1e8, 500_000)).collect();
+        let ts = sim.round(&small).round_s;
+        let tl = sim.round(&large).round_s;
+        if tl > ts {
+            Ok(())
+        } else {
+            Err(format!("large {tl} ≤ small {ts}"))
+        }
+    });
+}
+
+#[test]
+fn prop_round_time_monotone_in_cohort() {
+    // Adding a straggler can only increase the (max-based) round time.
+    let gen = UsizeIn(0, 100_000);
+    check("monotone in cohort", &gen, 40, |&seed| {
+        let sim = NetworkSim::new(LinkConfig::default(), 10, seed as u64);
+        let jobs: Vec<(usize, u64, f64, u64)> =
+            (0..10).map(|c| (c, 500_000, 5e8, 200_000)).collect();
+        let mut prev = 0.0;
+        for m in 1..=10 {
+            let t = sim.round(&jobs[..m]).round_s;
+            if t + 1e-12 < prev {
+                return Err(format!("m={m}: {t} < {prev}"));
+            }
+            prev = t;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn compute_and_transfer_compose() {
+    let sim = NetworkSim::new(LinkConfig::default(), 1, 3);
+    let t_all = sim.round(&[(0, 1_000_000, 2e9, 400_000)]);
+    let t_net = sim.round(&[(0, 1_000_000, 0.0, 400_000)]);
+    let link = &sim.links[0];
+    let want_compute = 2e9 / link.device_flops;
+    let got = t_all.round_s - t_net.round_s;
+    assert!(
+        (got - want_compute).abs() < 1e-9,
+        "compute time should add exactly: {got} vs {want_compute}"
+    );
+}
+
+#[test]
+fn paper_profile_round_times_are_plausible() {
+    // A 4-layer CNN-sized payload (~420 KB f32 full model) over 4G LTE
+    // should cost on the order of seconds per round — the regime that
+    // makes the paper's 3233-minute FEMNIST baseline plausible at scale.
+    let sim = NetworkSim::new(LinkConfig::default(), 30, 7);
+    let jobs: Vec<(usize, u64, f64, u64)> = (0..9)
+        .map(|c| (c, 420_776, 3.0 * 7.8e6 * 50.0, 420_776))
+        .collect();
+    let t = sim.round(&jobs);
+    assert!(
+        t.round_s > 0.5 && t.round_s < 10.0,
+        "full-model round {}s out of the plausible band",
+        t.round_s
+    );
+    // And a compressed sub-model round is several times cheaper.
+    let jobs_c: Vec<(usize, u64, f64, u64)> = (0..9)
+        .map(|c| (c, 75_000, 3.0 * 4.5e6 * 50.0, 15_000))
+        .collect();
+    let tc = sim.round(&jobs_c);
+    assert!(
+        t.round_s / tc.round_s > 3.0,
+        "compression should cut round time ≥3×: {} vs {}",
+        t.round_s,
+        tc.round_s
+    );
+}
+
+#[test]
+fn fleet_heterogeneity_creates_stragglers() {
+    // With sampled links, identical payloads finish at different times —
+    // the straggler effect the paper argues synchronous FL suffers from.
+    let sim = NetworkSim::new(LinkConfig::default(), 40, 11);
+    let jobs: Vec<(usize, u64, f64, u64)> =
+        (0..40).map(|c| (c, 1_000_000, 1e9, 1_000_000)).collect();
+    let t = sim.round(&jobs);
+    let times: Vec<f64> = t.per_client.iter().map(|c| c.total()).collect();
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = times.iter().cloned().fold(0.0f64, f64::max);
+    assert!(
+        max / min > 1.5,
+        "expected ≥1.5× straggler spread, got {:.2}",
+        max / min
+    );
+    assert_eq!(t.round_s, max);
+}

@@ -1,0 +1,188 @@
+//! Packing on the real model manifests: byte accounting and round-trip
+//! correctness for every lowered variant, plus property tests.
+
+use afd::model::manifest::Manifest;
+use afd::model::packing;
+use afd::model::submodel::SubModel;
+use afd::prop::{check, UsizeIn};
+use afd::util::rng::Pcg64;
+
+fn manifest() -> Option<Manifest> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(Manifest::load(&dir).unwrap())
+    } else {
+        eprintln!("skipping: artifacts not built");
+        None
+    }
+}
+
+fn random_submodel(
+    spec: &afd::model::manifest::VariantSpec,
+    fdr: f64,
+    rng: &mut Pcg64,
+) -> SubModel {
+    let kept: Vec<Vec<usize>> = spec
+        .mask_groups
+        .iter()
+        .map(|g| {
+            let keep = afd::dropout::kept_count(g.size, fdr);
+            rng.sample_indices(g.size, keep)
+        })
+        .collect();
+    SubModel::from_kept_indices(spec, &kept)
+}
+
+#[test]
+fn pack_unpack_roundtrip_all_variants() {
+    let Some(man) = manifest() else { return };
+    let mut rng = Pcg64::new(1);
+    for spec in man.variants.values() {
+        let params = man.load_init_params(spec).unwrap();
+        for fdr in [0.0, 0.25, 0.5] {
+            let sm = random_submodel(spec, fdr, &mut rng);
+            let packed = packing::pack_values(spec, &params, &sm);
+            assert_eq!(packed.len(), packing::packed_model_elems(spec, &sm));
+
+            let mut out = vec![f32::NAN; spec.num_params];
+            packing::unpack_values(spec, &packed, &sm, &mut out);
+            let cm = packing::coordinate_mask(spec, &sm);
+            for i in 0..spec.num_params {
+                if cm[i] {
+                    assert_eq!(out[i], params[i], "{}: coord {i}", spec.name);
+                } else {
+                    assert!(out[i].is_nan(), "{}: coord {i} touched", spec.name);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fdr25_saves_expected_fraction() {
+    // At FDR 25% the transmissible payload must shrink. How much is
+    // architecture-dependent: the CNN's dense layer has both rows and
+    // cols masked (≈ 0.75² on the biggest tensor), while LSTMs mask only
+    // non-recurrent connections (inter-layer + head rows), so their
+    // structural saving is small — quantization carries the downlink
+    // saving for them (exactly the paper's situation: "dropping
+    // activations would not save any space" in some layers).
+    let Some(man) = manifest() else { return };
+    let mut rng = Pcg64::new(2);
+    for spec in man.variants.values() {
+        let full = SubModel::full(spec);
+        let full_elems = packing::packed_model_elems(spec, &full);
+        let sm = random_submodel(spec, 0.25, &mut rng);
+        let sub_elems = packing::packed_model_elems(spec, &sm);
+        let ratio = sub_elems as f64 / full_elems as f64;
+        let max_ratio = if spec.kind == "cnn" { 0.85 } else { 0.985 };
+        assert!(
+            ratio < max_ratio,
+            "{}: FDR 25% should save params, ratio {ratio:.3}",
+            spec.name
+        );
+        assert!(ratio > 0.4, "{}: ratio suspiciously low {ratio:.3}", spec.name);
+        // FLOPs shrink too (the paper's computation saving). LSTM
+        // recurrent units keep computing even when their upward output
+        // is dropped, so their compute saving is correspondingly small.
+        let f_full = packing::effective_flops_per_sample(spec, &full);
+        let f_sub = packing::effective_flops_per_sample(spec, &sm);
+        let max_f = if spec.kind == "cnn" { 0.9 } else { 0.99 };
+        assert!(
+            f_sub < f_full * max_f,
+            "{}: flops {f_sub} vs {f_full}",
+            spec.name
+        );
+    }
+}
+
+#[test]
+fn frozen_embeddings_never_packed() {
+    let Some(man) = manifest() else { return };
+    let spec = man.variant("sent140_small").unwrap();
+    let embed = spec.param("embed").unwrap();
+    assert!(!embed.transmit);
+    let full = SubModel::full(spec);
+    let elems = packing::packed_model_elems(spec, &full);
+    assert_eq!(
+        elems,
+        spec.num_params - embed.size,
+        "embedding must not count toward wire size"
+    );
+    let cm = packing::coordinate_mask(spec, &full);
+    for i in embed.range() {
+        assert!(!cm[i]);
+    }
+}
+
+#[test]
+fn packed_size_monotone_in_kept_units() {
+    // Property: adding a kept unit never shrinks the packed model.
+    let Some(man) = manifest() else { return };
+    let spec = man.variant("femnist_small").unwrap().clone();
+    let gen = UsizeIn(0, 1_000_000);
+    check("packing monotone", &gen, 25, |&seed| {
+        let mut rng = Pcg64::new(seed as u64);
+        let sm_small = random_submodel(&spec, 0.5, &mut rng);
+        // Grow: add one dropped unit back in group 0.
+        let mut keep = sm_small.keep.clone();
+        if let Some(pos) = keep[0].iter().position(|&k| !k) {
+            keep[0][pos] = true;
+        }
+        let sm_big = SubModel { keep };
+        let small = packing::packed_model_elems(&spec, &sm_small);
+        let big = packing::packed_model_elems(&spec, &sm_big);
+        if big >= small {
+            Ok(())
+        } else {
+            Err(format!("grew {small} -> {big}"))
+        }
+    });
+}
+
+#[test]
+fn lstm_recurrent_rows_always_transmitted() {
+    // The fixed (recurrent) block of lstm2_w must survive any sub-model:
+    // masking is non-recurrent only.
+    let Some(man) = manifest() else { return };
+    let spec = man.variant("shakespeare_small").unwrap();
+    let l2 = spec.param("lstm2_w").unwrap();
+    let hidden = spec.mask_groups[0].size;
+    let mut rng = Pcg64::new(3);
+    let sm = random_submodel(spec, 0.5, &mut rng);
+    let cm = packing::coordinate_mask(spec, &sm);
+    // Rows [hidden .. 2*hidden) of lstm2_w are the recurrent block.
+    let stride = l2.cols_extent();
+    for r in hidden..2 * hidden {
+        for c in 0..stride {
+            assert!(
+                cm[l2.offset + r * stride + c],
+                "recurrent row {r} col {c} must be in every sub-model"
+            );
+        }
+    }
+}
+
+#[test]
+fn wire_bytes_match_network_savings_claim() {
+    // Sanity: quant8(packed submodel) at FDR 25% vs the raw full model —
+    // the combined downlink saving the paper banks on. CNN: dropping ×
+    // quantization ≳ 5×; LSTM: quantization-dominated ≳ 3.9×.
+    let Some(man) = manifest() else { return };
+    use afd::compression::{quant::HadamardQuant8, DenseCodec};
+    let codec = HadamardQuant8::default();
+    let mut rng = Pcg64::new(4);
+    for spec in man.variants.values() {
+        let params = man.load_init_params(spec).unwrap();
+        let full_raw = spec.transmit_bytes_full() as f64;
+        let sm = random_submodel(spec, 0.25, &mut rng);
+        let packed = packing::pack_values(spec, &params, &sm);
+        let wire = codec.encode(&packed, 9).wire_bytes() as f64;
+        let min_factor = if spec.kind == "cnn" { 5.0 } else { 3.9 };
+        assert!(
+            wire * min_factor < full_raw,
+            "{}: wire {wire} vs full raw {full_raw} (want ≥{min_factor}×)",
+            spec.name
+        );
+    }
+}
