@@ -1,0 +1,102 @@
+//! Scheduler policy comparison: time-to-target-accuracy for
+//! Sync vs Overselect vs AsyncBuffered under straggler-heavy links.
+//!
+//! The paper's convergence-time metric makes every synchronous round
+//! as slow as its slowest client; this bench quantifies what the two
+//! standard straggler levers buy on the artifact-free native workload
+//! (log-uniform link fleet — see `LinkConfig::straggler_heavy`).
+//!
+//! Scale up with: AFD_BENCH_ROUNDS=120 AFD_BENCH_SEEDS=3 \
+//!   cargo bench --bench bench_sched_policies
+
+use afd::bench::tables::env_usize;
+use afd::config::{ExperimentConfig, Preset};
+use afd::coordinator::experiment::run_experiment;
+use afd::network::LinkConfig;
+use afd::util::{human_bytes, human_duration};
+
+fn main() -> anyhow::Result<()> {
+    let seeds = env_usize("AFD_BENCH_SEEDS", 2) as u64;
+    let rounds = env_usize("AFD_BENCH_ROUNDS", 60);
+    let target = 0.45;
+
+    println!("== Scheduler policies (native, straggler-heavy links) ==");
+    println!("rounds={rounds} seeds={seeds} target accuracy={target}\n");
+    println!(
+        "{:<16} {:>9} {:>14} {:>14} {:>12} {:>10} {:>8}",
+        "policy", "best acc", "t(target)", "total sim", "down", "cut", "speedup"
+    );
+
+    let mut t_per_policy = Vec::new();
+    for policy in ["sync", "overselect", "async_buffered"] {
+        let mut t_target = 0.0f64;
+        let mut t_total = 0.0f64;
+        let mut best = 0.0f64;
+        let mut down = 0u64;
+        let mut cut = 0usize;
+        let mut reached = 0usize;
+        for seed in 0..seeds {
+            let mut cfg = ExperimentConfig::preset(Preset::NativeSmoke);
+            cfg.rounds = rounds;
+            cfg.eval_every = 2;
+            cfg.seed = seed;
+            cfg.link = LinkConfig::straggler_heavy();
+            cfg.sched.policy = policy.into();
+            let r = run_experiment(&cfg)?;
+            if let Some((_, t)) = r.time_to_accuracy(target, 1) {
+                t_target += t;
+                reached += 1;
+            }
+            t_total += r.total_sim_seconds();
+            best = best.max(r.best_accuracy());
+            down += r.total_down_bytes();
+            cut += r.records.iter().map(|rec| rec.cut).sum::<usize>();
+        }
+        let t_shown = if reached == seeds as usize {
+            t_target
+        } else {
+            f64::INFINITY
+        };
+        t_per_policy.push((policy, t_shown));
+        let speedup = match t_per_policy.first() {
+            Some((_, base)) if t_shown.is_finite() && base.is_finite() && *base > 0.0 => {
+                format!("{:.1}x", base / t_shown)
+            }
+            _ => "-".into(),
+        };
+        println!(
+            "{:<16} {:>9.3} {:>14} {:>14} {:>12} {:>10} {:>8}",
+            policy,
+            best,
+            if t_shown.is_finite() {
+                human_duration(t_shown)
+            } else {
+                format!("not reached ({reached}/{seeds})")
+            },
+            human_duration(t_total),
+            human_bytes(down),
+            cut,
+            speedup
+        );
+    }
+
+    // The subsystem's acceptance assertion: both straggler policies
+    // must reach the target in less simulated time than sync.
+    let t_sync = t_per_policy[0].1;
+    let t_over = t_per_policy[1].1;
+    let t_async = t_per_policy[2].1;
+    anyhow::ensure!(
+        t_sync.is_finite(),
+        "sync never reached the target accuracy — nothing was measured"
+    );
+    anyhow::ensure!(
+        t_over < t_sync,
+        "overselect must beat sync: {t_over:.1}s vs {t_sync:.1}s"
+    );
+    anyhow::ensure!(
+        t_async < t_sync,
+        "async_buffered must beat sync: {t_async:.1}s vs {t_sync:.1}s"
+    );
+    println!("\nOK: both straggler policies beat sync to {target} accuracy.");
+    Ok(())
+}

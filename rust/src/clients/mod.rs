@@ -30,6 +30,20 @@ impl ClientState {
             participations: 0,
         }
     }
+
+    /// Move the DGC buffers out for a dispatched round (the scheduler
+    /// ships them with the per-client job so local training can run on
+    /// a worker thread), leaving empty buffers behind.
+    pub fn take_dgc(&mut self) -> DgcState {
+        let fresh = DgcState::new(self.dgc.config().clone());
+        std::mem::replace(&mut self.dgc, fresh)
+    }
+
+    /// Return the DGC buffers after the round (accumulation must
+    /// persist across the rounds a client participates in).
+    pub fn put_dgc(&mut self, st: DgcState) {
+        self.dgc = st;
+    }
 }
 
 /// Build the full client fleet for an experiment.

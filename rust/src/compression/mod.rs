@@ -34,8 +34,10 @@ impl Encoded {
     }
 }
 
-/// Downlink codec interface (dense f32 payloads).
-pub trait DenseCodec: Send {
+/// Downlink codec interface (dense f32 payloads). `Sync` because the
+/// scheduler shares one codec across the worker pool (codecs are
+/// stateless; shared randomness is derived from the per-call seed).
+pub trait DenseCodec: Send + Sync {
     fn name(&self) -> &'static str;
     /// Encode; `seed` lets encoder+decoder derive shared randomness
     /// (Hadamard signs) without shipping it.

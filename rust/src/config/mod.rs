@@ -9,6 +9,7 @@
 use crate::compression::dgc::DgcConfig;
 use crate::data::DataConfig;
 use crate::network::LinkConfig;
+use crate::sched::SchedConfig;
 use crate::util::json::Json;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -41,6 +42,9 @@ pub struct ExperimentConfig {
     pub dgc: DgcConfig,
     pub data: DataConfig,
     pub link: LinkConfig,
+    /// Round scheduler: policy (sync/overselect/async_buffered) +
+    /// availability churn (see [`crate::sched`]).
+    pub sched: SchedConfig,
     pub seed: u64,
     /// Evaluate the global model every k rounds (simulation-side only —
     /// evaluation costs no simulated network time).
@@ -70,6 +74,7 @@ impl Default for ExperimentConfig {
             dgc: DgcConfig::default(),
             data: DataConfig::default(),
             link: LinkConfig::default(),
+            sched: SchedConfig::default(),
             seed: 0,
             eval_every: 5,
             eval_batch_limit: Some(12),
@@ -93,6 +98,11 @@ pub enum Preset {
     Sent140SmallIid,
     /// Artifact-free native MLP smoke preset.
     NativeSmoke,
+    /// NativeSmoke driven by the overselect scheduler (straggler
+    /// cutting: dispatch ⌈m·(1+ε)⌉, close at m arrivals).
+    NativeSmokeOverselect,
+    /// NativeSmoke driven by FedBuff-style buffered async aggregation.
+    NativeSmokeAsync,
 }
 
 impl ExperimentConfig {
@@ -145,6 +155,14 @@ impl ExperimentConfig {
                 c.dropout = "afd_multi".into();
                 c.eval_every = 2;
             }
+            Preset::NativeSmokeOverselect => {
+                c = ExperimentConfig::preset(Preset::NativeSmoke);
+                c.sched.policy = "overselect".into();
+            }
+            Preset::NativeSmokeAsync => {
+                c = ExperimentConfig::preset(Preset::NativeSmoke);
+                c.sched.policy = "async_buffered".into();
+            }
         }
         c
     }
@@ -158,6 +176,8 @@ impl ExperimentConfig {
             "shakespeare_iid" => Preset::ShakespeareSmallIid,
             "sent140_iid" => Preset::Sent140SmallIid,
             "native" => Preset::NativeSmoke,
+            "native_overselect" => Preset::NativeSmokeOverselect,
+            "native_async" => Preset::NativeSmokeAsync,
             other => anyhow::bail!("unknown preset {other:?}"),
         };
         Ok(ExperimentConfig::preset(p))
@@ -178,7 +198,12 @@ impl ExperimentConfig {
         if self.uplink_dgc {
             parts.push("dgc".into());
         }
-        parts.join("+")
+        let label = parts.join("+");
+        if self.sched.policy == "sync" {
+            label
+        } else {
+            format!("{label}@{}", self.sched.policy)
+        }
     }
 
     pub fn to_json(&self) -> Json {
@@ -211,6 +236,27 @@ impl ExperimentConfig {
                 .unwrap_or(Json::Null),
         );
         j.set("iid", Json::Bool(self.data.iid));
+        j.set("sched_policy", Json::Str(self.sched.policy.clone()));
+        j.set("sched_over_fraction", Json::Num(self.sched.over_fraction));
+        j.set(
+            "sched_deadline_s",
+            self.sched.deadline_s.map(Json::Num).unwrap_or(Json::Null),
+        );
+        j.set("sched_buffer_k", Json::Num(self.sched.buffer_k as f64));
+        j.set(
+            "sched_concurrency",
+            Json::Num(self.sched.concurrency as f64),
+        );
+        j.set(
+            "sched_staleness_alpha",
+            Json::Num(self.sched.staleness_alpha),
+        );
+        j.set("churn_enabled", Json::Bool(self.sched.churn.enabled));
+        j.set(
+            "churn_availability",
+            Json::Num(self.sched.churn.availability),
+        );
+        j.set("churn_period_s", Json::Num(self.sched.churn.period_s));
         j.set("seed", Json::Num(self.seed as f64));
         j.set("eval_every", Json::Num(self.eval_every as f64));
         j.set(
@@ -258,6 +304,33 @@ impl ExperimentConfig {
         }
         if let Some(v) = j.get("iid").and_then(|v| v.as_bool()) {
             self.data.iid = v;
+        }
+        if let Some(v) = j.get("sched_policy").and_then(|v| v.as_str()) {
+            self.sched.policy = v.to_string();
+        }
+        if let Some(v) = j.get("sched_over_fraction").and_then(|v| v.as_f64()) {
+            self.sched.over_fraction = v;
+        }
+        if let Some(v) = j.get("sched_deadline_s").and_then(|v| v.as_f64()) {
+            self.sched.deadline_s = Some(v);
+        }
+        if let Some(v) = j.get("sched_buffer_k").and_then(|v| v.as_usize()) {
+            self.sched.buffer_k = v;
+        }
+        if let Some(v) = j.get("sched_concurrency").and_then(|v| v.as_usize()) {
+            self.sched.concurrency = v;
+        }
+        if let Some(v) = j.get("sched_staleness_alpha").and_then(|v| v.as_f64()) {
+            self.sched.staleness_alpha = v;
+        }
+        if let Some(v) = j.get("churn_enabled").and_then(|v| v.as_bool()) {
+            self.sched.churn.enabled = v;
+        }
+        if let Some(v) = j.get("churn_availability").and_then(|v| v.as_f64()) {
+            self.sched.churn.availability = v;
+        }
+        if let Some(v) = j.get("churn_period_s").and_then(|v| v.as_f64()) {
+            self.sched.churn.period_s = v;
         }
         if let Some(v) = j.get("seed").and_then(|v| v.as_f64()) {
             self.seed = v as u64;
@@ -364,6 +437,31 @@ mod tests {
             assert_eq!(c.num_clients, base.num_clients);
             assert_eq!(c.seed, base.seed);
         }
+    }
+
+    #[test]
+    fn sched_presets_and_json_roundtrip() {
+        let over = ExperimentConfig::preset(Preset::NativeSmokeOverselect);
+        assert_eq!(over.sched.policy, "overselect");
+        assert_eq!(over.backend, Backend::Native);
+        let async_c = ExperimentConfig::preset_by_name("native_async").unwrap();
+        assert_eq!(async_c.sched.policy, "async_buffered");
+
+        let mut src = ExperimentConfig::default();
+        src.sched.policy = "async_buffered".into();
+        src.sched.buffer_k = 4;
+        src.sched.staleness_alpha = 0.25;
+        src.sched.churn.enabled = true;
+        src.sched.churn.availability = 0.6;
+        let j = src.to_json();
+        let mut dst = ExperimentConfig::default();
+        dst.apply_json(&j).unwrap();
+        assert_eq!(dst.sched.policy, "async_buffered");
+        assert_eq!(dst.sched.buffer_k, 4);
+        assert_eq!(dst.sched.staleness_alpha, 0.25);
+        assert!(dst.sched.churn.enabled);
+        assert_eq!(dst.sched.churn.availability, 0.6);
+        assert_eq!(dst.method_label(), "afd_multi+quant8+dgc@async_buffered");
     }
 
     #[test]

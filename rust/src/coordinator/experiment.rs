@@ -1,4 +1,15 @@
 //! End-to-end experiment driver: config → full federated run → report.
+//!
+//! Rounds are driven through the event-driven scheduler
+//! ([`crate::sched::Engine`]): the policy decides dispatch width and
+//! round closing, in-flight clients train in parallel on the worker
+//! pool when the runtime is thread-safe, and the engine charges
+//! simulated time from the sampled links. The pre-scheduler serial
+//! loop is retained as [`Experiment::step_serial_reference`] — the
+//! `sync` policy must reproduce it bit-for-bit (enforced in
+//! `rust/tests/sched_policies.rs`).
+
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
@@ -11,23 +22,25 @@ use crate::data::{self, FederatedDataset};
 use crate::dropout::{make_strategy, SubmodelStrategy};
 use crate::metrics::{ExperimentReport, RoundRecord};
 use crate::model::manifest::{Manifest, VariantSpec};
-use crate::network::NetworkSim;
+use crate::network::{Availability, NetworkSim};
 use crate::runtime::native::{mlp_spec, NativeMlp};
-use crate::runtime::{EvalOutput, ModelRuntime};
+use crate::runtime::{EvalOutput, ModelRuntime, RuntimeHost};
+use crate::sched::{make_policy, Engine, RoundCtx};
 use crate::util::rng::Pcg64;
 
 /// A fully-assembled experiment, ready to run round-by-round.
 pub struct Experiment {
     pub cfg: ExperimentConfig,
     pub spec: VariantSpec,
-    runtime: Box<dyn ModelRuntime>,
+    runtime: RuntimeHost,
     dataset: FederatedDataset,
     strategy: Box<dyn SubmodelStrategy>,
-    downlink: Box<dyn DenseCodec>,
+    downlink: Arc<dyn DenseCodec>,
     fleet: Vec<ClientState>,
     net: NetworkSim,
     agg: FedAvg,
     rng: Pcg64,
+    engine: Engine,
     pub global: Vec<f32>,
     records: Vec<RoundRecord>,
     cum_s: f64,
@@ -36,7 +49,7 @@ pub struct Experiment {
 
 impl Experiment {
     pub fn build(cfg: &ExperimentConfig) -> Result<Experiment> {
-        let (runtime, spec, init): (Box<dyn ModelRuntime>, VariantSpec, Vec<f32>) =
+        let (runtime, spec, init): (RuntimeHost, VariantSpec, Vec<f32>) =
             match cfg.backend {
                 Backend::Pjrt => {
                     let dir = artifacts_dir();
@@ -49,14 +62,17 @@ impl Experiment {
                     )?;
                     let spec = rt.spec().clone();
                     let init = manifest.load_init_params(&spec)?;
-                    (Box::new(rt), spec, init)
+                    // PJRT wrapper types are not `Send`: execute
+                    // serially on the coordinator thread.
+                    (RuntimeHost::Serial(Box::new(rt)), spec, init)
                 }
                 Backend::Native => {
                     let (d, h, c) = cfg.native_dims;
                     let spec = mlp_spec(&cfg.variant, d, h, c, 10, 5, 0.1);
                     let mlp = NativeMlp::new(spec.clone());
                     let init = mlp.init_params(cfg.seed);
-                    (Box::new(mlp), spec, init)
+                    // Pure-Rust model: share it across pool workers.
+                    (RuntimeHost::Parallel(Arc::new(mlp)), spec, init)
                 }
             };
 
@@ -70,12 +86,17 @@ impl Experiment {
         );
 
         let strategy = make_strategy(&cfg.dropout, &spec, cfg.num_clients, cfg.fdr)?;
-        let downlink = make_dense_codec(&cfg.downlink)?;
+        let downlink: Arc<dyn DenseCodec> = Arc::from(make_dense_codec(&cfg.downlink)?);
         let sizes: Vec<usize> = dataset.clients.iter().map(|c| c.len()).collect();
         let fleet = build_fleet(&sizes, &cfg.dgc, cfg.seed);
         let net = NetworkSim::new(cfg.link.clone(), cfg.num_clients, cfg.seed);
         let agg = FedAvg::new(spec.num_params);
         let lr = cfg.lr_override.unwrap_or(spec.lr);
+        let policy = make_policy(&cfg.sched, cfg.cohort_size(), cfg.num_clients)?;
+        let engine = Engine::new(
+            policy,
+            Availability::new(cfg.sched.churn.clone(), cfg.seed),
+        );
 
         Ok(Experiment {
             cfg: cfg.clone(),
@@ -87,6 +108,7 @@ impl Experiment {
             net,
             agg,
             rng: Pcg64::with_stream(cfg.seed, 0xe4be),
+            engine,
             global: init,
             records: Vec::new(),
             cum_s: 0.0,
@@ -95,8 +117,46 @@ impl Experiment {
         })
     }
 
-    /// Execute one federated round; returns the round's record.
+    /// Execute one federated round through the scheduler; returns the
+    /// round's record.
     pub fn step(&mut self, round: usize) -> Result<RoundRecord> {
+        let mut ctx = RoundCtx {
+            cfg: &self.cfg,
+            spec: &self.spec,
+            runtime: &self.runtime,
+            strategy: self.strategy.as_mut(),
+            downlink: &self.downlink,
+            dataset: &self.dataset,
+            fleet: &mut self.fleet,
+            net: &self.net,
+            agg: &mut self.agg,
+            rng: &mut self.rng,
+            global: &mut self.global,
+            lr: self.lr,
+            cum_s: self.cum_s,
+        };
+        let s = self.engine.step(round, &mut ctx)?;
+        self.cum_s += s.round_s;
+        self.finish_round(
+            round,
+            s.round_s,
+            s.train_loss,
+            s.keep_fraction,
+            s.down_bytes,
+            s.up_bytes,
+            s.arrived,
+            s.cut,
+            s.dropped,
+        )
+    }
+
+    /// The pre-scheduler serial round loop, kept as the bit-exactness
+    /// reference for the `sync` policy (and for debugging the engine):
+    /// same RNG call sequence, same aggregation order, same network
+    /// accounting — `RoundRecord`s must match [`Experiment::step`]
+    /// byte-for-byte at equal seeds when `sched.policy == "sync"` and
+    /// churn is disabled.
+    pub fn step_serial_reference(&mut self, round: usize) -> Result<RoundRecord> {
         let m = self.cfg.cohort_size();
         let cohort = self.rng.sample_indices(self.cfg.num_clients, m);
 
@@ -115,7 +175,7 @@ impl Experiment {
             };
             let outcome = run_client_round(
                 &self.spec,
-                self.runtime.as_ref(),
+                self.runtime.get(),
                 &self.global,
                 &sm,
                 &data,
@@ -142,7 +202,32 @@ impl Experiment {
             .map(|o| o.submodel.keep_fraction())
             .sum::<f64>()
             / outcomes.len().max(1) as f64;
+        self.finish_round(
+            round,
+            timing.round_s,
+            train_loss,
+            keep_fraction,
+            timing.down_bytes,
+            timing.up_bytes,
+            outcomes.len(),
+            0,
+            0,
+        )
+    }
 
+    /// Shared record assembly + (simulation-free) periodic evaluation.
+    fn finish_round(
+        &mut self,
+        round: usize,
+        round_s: f64,
+        train_loss: f64,
+        keep_fraction: f64,
+        down_bytes: u64,
+        up_bytes: u64,
+        arrived: usize,
+        cut: usize,
+        dropped: usize,
+    ) -> Result<RoundRecord> {
         let (eval_acc, eval_loss) = if round % self.cfg.eval_every == 0
             || round == self.cfg.rounds
         {
@@ -154,14 +239,17 @@ impl Experiment {
 
         let rec = RoundRecord {
             round,
-            round_s: timing.round_s,
+            round_s,
             cum_s: self.cum_s,
             train_loss,
             eval_acc,
             eval_loss,
-            down_bytes: timing.down_bytes,
-            up_bytes: timing.up_bytes,
+            down_bytes,
+            up_bytes,
             keep_fraction,
+            arrived,
+            cut,
+            dropped,
         };
         self.records.push(rec.clone());
         Ok(rec)
@@ -175,7 +263,7 @@ impl Experiment {
             .test
             .eval_batches(&self.spec, self.cfg.eval_batch_limit)
         {
-            let ev = self.runtime.evaluate(&self.global, &batch)?;
+            let ev = self.runtime.get().evaluate(&self.global, &batch)?;
             total.merge(&ev);
         }
         Ok(total)
@@ -317,5 +405,47 @@ mod tests {
                 assert!(r.records.iter().all(|rec| rec.keep_fraction < 1.0));
             }
         }
+    }
+
+    #[test]
+    fn all_sched_policies_run_native() {
+        for preset in [
+            Preset::NativeSmoke,
+            Preset::NativeSmokeOverselect,
+            Preset::NativeSmokeAsync,
+        ] {
+            let mut cfg = ExperimentConfig::preset(preset);
+            cfg.rounds = 6;
+            cfg.eval_every = 3;
+            let r = run_experiment(&cfg)
+                .unwrap_or_else(|e| panic!("{:?} failed: {e}", cfg.sched.policy));
+            assert_eq!(r.records.len(), 6);
+            assert!(r.total_sim_seconds() > 0.0, "{}", cfg.sched.policy);
+            assert!(
+                r.records.iter().all(|rec| rec.arrived > 0),
+                "{} must aggregate someone every round",
+                cfg.sched.policy
+            );
+        }
+    }
+
+    #[test]
+    fn churn_drops_clients_and_stays_deterministic() {
+        let mut cfg = ExperimentConfig::preset(Preset::NativeSmoke);
+        cfg.rounds = 10;
+        cfg.eval_every = 5;
+        cfg.sched.churn.enabled = true;
+        cfg.sched.churn.availability = 0.5;
+        cfg.sched.churn.period_s = 5.0;
+        let a = run_experiment(&cfg).unwrap();
+        let b = run_experiment(&cfg).unwrap();
+        for (x, y) in a.records.iter().zip(&b.records) {
+            assert_eq!(x.train_loss, y.train_loss);
+            assert_eq!(x.dropped, y.dropped);
+        }
+        let dropped: usize = a.records.iter().map(|r| r.dropped).sum();
+        assert!(dropped > 0, "50% availability must drop someone");
+        // The run survives drops and still learns something.
+        assert!(a.best_accuracy() > 0.0);
     }
 }

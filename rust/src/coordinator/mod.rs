@@ -16,6 +16,13 @@
 //! 6. the network simulator charges the round's wall-clock time
 //!    (max over the cohort of down + compute + up);
 //! 7. losses are reported back to the strategy (score-map updates).
+//!
+//! Steps 1 and 6 are owned by the event-driven scheduler
+//! ([`crate::sched`]): the `sync` policy reproduces the synchronous
+//! behaviour above bit-for-bit, while `overselect` and
+//! `async_buffered` relax it for straggler tolerance. The helpers in
+//! this module ([`run_client_round`], [`aggregate_round`],
+//! [`feed_strategy`]) stay policy-agnostic.
 
 pub mod experiment;
 

@@ -8,8 +8,10 @@
 //! * **Layer 3 (this crate)** — the federated-learning coordinator:
 //!   client selection, activation score maps, sub-model construction
 //!   ([`dropout`]), downlink/uplink compression ([`compression`]),
-//!   FedAvg aggregation ([`aggregation`]), wireless link simulation
-//!   ([`network`]) and convergence accounting ([`metrics`]).
+//!   FedAvg aggregation ([`aggregation`]), wireless link simulation +
+//!   availability churn ([`network`]), the event-driven round
+//!   scheduler with sync/overselect/async-buffered policies
+//!   ([`sched`]) and convergence accounting ([`metrics`]).
 //! * **Layer 2** — the paper's models (FEMNIST CNN, Shakespeare and
 //!   Sent140 LSTMs) written in JAX and AOT-lowered to HLO text
 //!   (`python/compile/`), executed from Rust through [`runtime`].
@@ -18,6 +20,23 @@
 //!
 //! Python runs only at build time (`make artifacts`); the request path
 //! is pure Rust + PJRT.
+//!
+//! Module map (coordinator side): [`config`] assembles an experiment;
+//! [`coordinator`] owns the round loop and drives it through
+//! [`sched`]'s virtual-clock engine; per-client work flows through
+//! [`dropout`] → [`compression`] → [`runtime`] → [`aggregation`],
+//! with [`network`] charging simulated time and [`metrics`] keeping
+//! the books. [`util`] holds the offline substrates (RNG, JSON, CLI,
+//! thread pool, stats).
+
+// The offline substrates favor explicit indexed loops over iterator
+// adapters in hot paths; keep clippy's style-only lints from failing
+// `-D warnings` CI on that idiom.
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::field_reassign_with_default)]
+#![allow(clippy::new_without_default)]
+#![allow(clippy::manual_memcpy)]
 
 pub mod aggregation;
 pub mod bench;
@@ -32,5 +51,6 @@ pub mod model;
 pub mod network;
 pub mod prop;
 pub mod runtime;
+pub mod sched;
 pub mod tensor;
 pub mod util;

@@ -74,6 +74,8 @@ fn experiment_spec() -> ArgSpec {
         .opt_maybe("fdr", "federated dropout rate (0..1)")
         .opt_maybe("downlink", "raw|quant8")
         .opt_maybe("dgc", "true|false: DGC on the uplink")
+        .opt_maybe("sched", "sync|overselect|async_buffered: round scheduler policy")
+        .opt_maybe("churn", "client availability in (0,1]: enables on/off churn")
         .opt_maybe("lr", "override the manifest learning rate")
         .opt_maybe("seed", "base RNG seed")
         .opt("seeds", "1", "number of seeds (mean ± std reporting)")
@@ -105,6 +107,12 @@ fn parse_experiment(args: &afd::util::cli::Args) -> Result<ExperimentConfig> {
     }
     if let Some(v) = args.get("dgc") {
         cfg.uplink_dgc = v == "true" || v == "1";
+    }
+    if let Some(v) = args.get("sched") {
+        cfg.sched.policy = v.to_string();
+    }
+    if let Some(v) = args.get("churn") {
+        cfg.sched.enable_churn(v.parse()?)?;
     }
     if let Some(v) = args.get("lr") {
         cfg.lr_override = Some(v.parse()?);

@@ -20,6 +20,12 @@ pub struct RoundRecord {
     pub up_bytes: u64,
     /// Mean keep fraction of the round's sub-models.
     pub keep_fraction: f64,
+    /// Clients whose updates were aggregated this round.
+    pub arrived: usize,
+    /// Stragglers cut by the scheduler (quorum/deadline).
+    pub cut: usize,
+    /// Clients lost to availability churn before arrival.
+    pub dropped: usize,
 }
 
 impl RoundRecord {
@@ -40,6 +46,9 @@ impl RoundRecord {
         j.set("down_bytes", Json::Num(self.down_bytes as f64));
         j.set("up_bytes", Json::Num(self.up_bytes as f64));
         j.set("keep_fraction", Json::Num(self.keep_fraction));
+        j.set("arrived", Json::Num(self.arrived as f64));
+        j.set("cut", Json::Num(self.cut as f64));
+        j.set("dropped", Json::Num(self.dropped as f64));
         j
     }
 }
@@ -232,6 +241,9 @@ mod tests {
                     down_bytes: 1000,
                     up_bytes: 500,
                     keep_fraction: 0.75,
+                    arrived: 5,
+                    cut: 0,
+                    dropped: 0,
                 }
             })
             .collect();

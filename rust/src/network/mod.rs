@@ -15,6 +15,11 @@
 //!
 //! with `t_compute = epoch_flops / device_flops` scaled by the
 //! *sub-model's* effective FLOPs (AFD's computation saving).
+//!
+//! Beyond the paper's synchronous model, [`Availability`] adds
+//! per-client availability churn (deterministic on/off windows sampled
+//! per seed) so the event-driven scheduler ([`crate::sched`]) can treat
+//! dropped clients as a first-class scenario.
 
 use crate::util::rng::Pcg64;
 
@@ -33,6 +38,12 @@ pub struct LinkConfig {
     pub device_gflops: (f64, f64),
     /// Fixed per-message latency (s), both directions.
     pub rtt_latency_s: f64,
+    /// Sample rates log-uniformly over the ranges instead of
+    /// uniformly. A log-uniform fleet has a guaranteed heavy slow
+    /// tail (every decade of the range is equally likely), which is
+    /// the straggler regime the scheduler policies target. `false`
+    /// preserves the paper's uniform sampling exactly.
+    pub log_uniform: bool,
 }
 
 impl Default for LinkConfig {
@@ -43,6 +54,24 @@ impl Default for LinkConfig {
             up_mbps: (2.0, 5.0),
             device_gflops: (2.0, 8.0),
             rtt_latency_s: 0.05,
+            log_uniform: false,
+        }
+    }
+}
+
+impl LinkConfig {
+    /// A straggler-heavy profile: the paper's LTE upper ends, but with
+    /// the low tails stretched to IoT/edge-class rates and log-uniform
+    /// sampling, so a sizable fraction of every fleet is orders of
+    /// magnitude slower than the median — the regime over-selection
+    /// and buffered asynchrony are built for.
+    pub fn straggler_heavy() -> LinkConfig {
+        LinkConfig {
+            down_mbps: (0.005, 12.0),
+            up_mbps: (0.002, 5.0),
+            device_gflops: (0.02, 8.0),
+            rtt_latency_s: 0.05,
+            log_uniform: true,
         }
     }
 }
@@ -55,12 +84,20 @@ pub struct ClientLink {
     pub device_flops: f64,
 }
 
+fn sample_rate(rng: &mut Pcg64, (lo, hi): (f64, f64), log_uniform: bool) -> f64 {
+    if log_uniform {
+        (rng.uniform(lo.ln(), hi.ln())).exp().clamp(lo, hi)
+    } else {
+        rng.uniform(lo, hi)
+    }
+}
+
 impl ClientLink {
     pub fn sample(cfg: &LinkConfig, rng: &mut Pcg64) -> ClientLink {
         ClientLink {
-            down_bps: mbps_to_bps(rng.uniform(cfg.down_mbps.0, cfg.down_mbps.1)),
-            up_bps: mbps_to_bps(rng.uniform(cfg.up_mbps.0, cfg.up_mbps.1)),
-            device_flops: rng.uniform(cfg.device_gflops.0, cfg.device_gflops.1) * 1e9,
+            down_bps: mbps_to_bps(sample_rate(rng, cfg.down_mbps, cfg.log_uniform)),
+            up_bps: mbps_to_bps(sample_rate(rng, cfg.up_mbps, cfg.log_uniform)),
+            device_flops: sample_rate(rng, cfg.device_gflops, cfg.log_uniform) * 1e9,
         }
     }
 
@@ -135,6 +172,80 @@ impl NetworkSim {
     }
 }
 
+/// Per-client availability churn configuration.
+///
+/// Availability is piecewise-constant over windows of `period_s`
+/// simulated seconds: in each window a client is online with
+/// probability `availability`, decided by a stateless hash of
+/// `(seed, client, window)` — O(1) to query at any virtual time, no
+/// trace storage, and deterministic per seed.
+#[derive(Clone, Debug)]
+pub struct ChurnConfig {
+    /// Disabled by default: every client is always online (the paper's
+    /// setting, and required for bit-identical `Sync` scheduling).
+    pub enabled: bool,
+    /// Probability a client is online in any given window.
+    pub availability: f64,
+    /// Window length in simulated seconds.
+    pub period_s: f64,
+}
+
+impl Default for ChurnConfig {
+    fn default() -> Self {
+        ChurnConfig {
+            enabled: false,
+            availability: 0.8,
+            period_s: 60.0,
+        }
+    }
+}
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Deterministic per-client on/off availability traces.
+#[derive(Clone, Debug)]
+pub struct Availability {
+    cfg: ChurnConfig,
+    seed: u64,
+}
+
+impl Availability {
+    pub fn new(cfg: ChurnConfig, seed: u64) -> Availability {
+        Availability { cfg, seed }
+    }
+
+    pub fn config(&self) -> &ChurnConfig {
+        &self.cfg
+    }
+
+    /// Is `client` online at virtual time `t_s`?
+    pub fn is_online(&self, client: usize, t_s: f64) -> bool {
+        if !self.cfg.enabled {
+            return true;
+        }
+        let window = (t_s.max(0.0) / self.cfg.period_s.max(1e-9)) as u64;
+        let h = splitmix64(
+            self.seed
+                ^ (client as u64).wrapping_mul(0xd1b5_4a32_d192_ed03)
+                ^ window.wrapping_mul(0x2545_f491_4f6c_dd1d),
+        );
+        let u = (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        u < self.cfg.availability
+    }
+
+    /// Clients (of `n`) online at virtual time `t_s`, in index order —
+    /// the scheduler's dispatch candidate pool.
+    pub fn online_at(&self, n: usize, t_s: f64) -> Vec<usize> {
+        (0..n).filter(|&c| self.is_online(c, t_s)).collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -192,6 +303,91 @@ mod tests {
         let full = sim.round(&[(0, 4_000_000, 1e9, 4_000_000)]);
         let compressed = sim.round(&[(0, 200_000, 0.75e9, 100_000)]);
         assert!(compressed.round_s < full.round_s / 5.0);
+    }
+
+    #[test]
+    fn straggler_profile_has_heavy_slow_tail() {
+        let cfg = LinkConfig::straggler_heavy();
+        let sim = NetworkSim::new(cfg.clone(), 200, 1);
+        let (lo, hi) = cfg.down_mbps;
+        for l in &sim.links {
+            assert!(l.down_bps >= mbps_to_bps(lo) && l.down_bps <= mbps_to_bps(hi));
+        }
+        // Log-uniform sampling: each decade of the range is equally
+        // likely, so a sizable fraction of any fleet sits orders of
+        // magnitude below the top rate.
+        let slow = sim
+            .links
+            .iter()
+            .filter(|l| l.down_bps < mbps_to_bps(hi / 100.0))
+            .count();
+        assert!(slow > 20, "slow tail must be heavy: {slow}/200");
+        let mx = sim.links.iter().map(|l| l.down_bps).fold(0.0, f64::max);
+        let mn = sim
+            .links
+            .iter()
+            .map(|l| l.down_bps)
+            .fold(f64::INFINITY, f64::min);
+        assert!(mx / mn > 100.0, "spread {mx}/{mn}");
+    }
+
+    #[test]
+    fn churn_disabled_means_always_online() {
+        let a = Availability::new(ChurnConfig::default(), 3);
+        for c in 0..50 {
+            for t in [0.0, 59.0, 1e6] {
+                assert!(a.is_online(c, t));
+            }
+        }
+    }
+
+    #[test]
+    fn churn_is_deterministic_and_respects_rate() {
+        let cfg = ChurnConfig {
+            enabled: true,
+            availability: 0.7,
+            period_s: 30.0,
+        };
+        let a = Availability::new(cfg.clone(), 9);
+        let b = Availability::new(cfg, 9);
+        let mut online = 0usize;
+        let mut total = 0usize;
+        let mut toggles = 0usize;
+        for c in 0..40 {
+            let mut prev = None;
+            for w in 0..50 {
+                let t = w as f64 * 30.0 + 1.0;
+                let on = a.is_online(c, t);
+                assert_eq!(on, b.is_online(c, t), "determinism");
+                // Constant within a window.
+                assert_eq!(on, a.is_online(c, t + 25.0));
+                if prev == Some(!on) {
+                    toggles += 1;
+                }
+                prev = Some(on);
+                online += on as usize;
+                total += 1;
+            }
+        }
+        let rate = online as f64 / total as f64;
+        assert!((rate - 0.7).abs() < 0.05, "empirical rate {rate}");
+        assert!(toggles > 100, "clients must actually churn ({toggles})");
+    }
+
+    #[test]
+    fn online_at_filters_in_index_order() {
+        let cfg = ChurnConfig {
+            enabled: true,
+            availability: 0.5,
+            period_s: 10.0,
+        };
+        let a = Availability::new(cfg, 4);
+        let on = a.online_at(64, 5.0);
+        assert!(on.windows(2).all(|w| w[0] < w[1]));
+        assert!(!on.is_empty() && on.len() < 64);
+        for &c in &on {
+            assert!(a.is_online(c, 5.0));
+        }
     }
 
     #[test]

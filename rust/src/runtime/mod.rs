@@ -114,6 +114,27 @@ pub trait ModelRuntime {
     fn evaluate(&self, params: &[f32], batch: &EvalBatch) -> Result<EvalOutput>;
 }
 
+/// How the coordinator holds a runtime, which decides whether the
+/// scheduler may fan client rounds out across `util::pool` workers.
+pub enum RuntimeHost {
+    /// Thread-safe runtime (native backend): in-flight clients train in
+    /// parallel, sharing the runtime behind an `Arc`.
+    Parallel(std::sync::Arc<dyn ModelRuntime + Send + Sync>),
+    /// Not thread-safe (PJRT wrapper types are not `Send`): clients
+    /// execute serially on the coordinator thread; XLA parallelizes
+    /// internally.
+    Serial(Box<dyn ModelRuntime>),
+}
+
+impl RuntimeHost {
+    pub fn get(&self) -> &dyn ModelRuntime {
+        match self {
+            RuntimeHost::Parallel(rt) => rt.as_ref(),
+            RuntimeHost::Serial(rt) => rt.as_ref(),
+        }
+    }
+}
+
 /// Validate data sizes against the spec (shared by both backends).
 pub fn check_epoch_data(spec: &VariantSpec, data: &EpochData) -> Result<()> {
     let per_sample: usize = spec.input_shape.iter().product();

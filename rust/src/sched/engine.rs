@@ -1,0 +1,605 @@
+//! The event-driven round engine: virtual clock, client lifecycle,
+//! parallel local training, policy-driven round closing.
+//!
+//! One [`Engine`] owns the scheduling state of an experiment: the
+//! policy, the availability model, the worker pool, and — for
+//! continuous policies — the in-flight min-heap and the virtual clock.
+//! Each [`Engine::step`] produces one aggregation's [`RoundSummary`];
+//! the coordinator wraps it into a `RoundRecord` (evaluation stays
+//! coordinator-side, costing no simulated time).
+//!
+//! ## Client lifecycle
+//!
+//! dispatch (cohort sampled, sub-model selected, epoch drawn)
+//!   → compute (local training, executed *eagerly* on the host — the
+//!     virtual clock charges `down + compute + up` from the sampled
+//!     [`ClientLink`], so simulation order is free to differ from
+//!     virtual-time order)
+//!   → arrival event (min-heap keyed on virtual arrival time)
+//!   → banked by the policy, cut at a deadline, or dropped by churn.
+//!
+//! Local training runs through `util::pool::Pool` when the runtime is
+//! thread-safe ([`RuntimeHost::Parallel`], the native backend); the
+//! PJRT backend executes serially on the coordinator thread (its
+//! wrapper types are not `Send` — XLA parallelizes internally).
+//! Results are identical either way: each client's round is a pure
+//! function of its job, and `Pool::map` preserves input order.
+//!
+//! ## Determinism
+//!
+//! All RNG draws (cohort sampling, sub-model selection, epoch
+//! shuffles) happen on the coordinator thread in dispatch order;
+//! worker threads only run the pure per-client function. Arrival ties
+//! break on dispatch sequence numbers. With the `Sync` policy and
+//! churn disabled, the engine performs exactly the RNG call sequence
+//! of the pre-scheduler serial loop and reproduces its `RoundRecord`s
+//! bit-for-bit (see `rust/tests/sched_policies.rs`).
+
+use std::collections::BinaryHeap;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::aggregation::FedAvg;
+use crate::clients::ClientState;
+use crate::compression::dgc::DgcState;
+use crate::compression::DenseCodec;
+use crate::config::ExperimentConfig;
+use crate::coordinator::{run_client_round, ClientRoundOutcome};
+use crate::data::FederatedDataset;
+use crate::dropout::SubmodelStrategy;
+use crate::model::manifest::VariantSpec;
+use crate::model::submodel::SubModel;
+use crate::network::{Availability, NetworkSim};
+use crate::runtime::{EpochData, RuntimeHost};
+use crate::sched::policy::SchedulerPolicy;
+use crate::util::pool::Pool;
+use crate::util::rng::Pcg64;
+
+/// Everything the engine borrows from the experiment for one step.
+/// Field-level borrows keep the engine separable from the coordinator
+/// struct (the serial `&mut self.fleet[c]` pattern the engine replaces).
+pub struct RoundCtx<'a> {
+    pub cfg: &'a ExperimentConfig,
+    pub spec: &'a VariantSpec,
+    pub runtime: &'a RuntimeHost,
+    pub strategy: &'a mut dyn SubmodelStrategy,
+    pub downlink: &'a Arc<dyn DenseCodec>,
+    pub dataset: &'a FederatedDataset,
+    pub fleet: &'a mut Vec<ClientState>,
+    pub net: &'a NetworkSim,
+    pub agg: &'a mut FedAvg,
+    pub rng: &'a mut Pcg64,
+    pub global: &'a mut Vec<f32>,
+    pub lr: f32,
+    /// Cumulative simulated seconds before this step (availability
+    /// time base for round-scoped policies).
+    pub cum_s: f64,
+}
+
+/// One aggregation's accounting, produced by [`Engine::step`].
+#[derive(Clone, Debug, Default)]
+pub struct RoundSummary {
+    /// Simulated duration of this round / aggregation window.
+    pub round_s: f64,
+    pub down_bytes: u64,
+    pub up_bytes: u64,
+    /// Mean local training loss over aggregated clients.
+    pub train_loss: f64,
+    /// Mean keep fraction over aggregated clients' sub-models.
+    pub keep_fraction: f64,
+    /// Clients whose updates were aggregated.
+    pub arrived: usize,
+    /// Stragglers cut by quorum/deadline (work discarded, no bytes
+    /// charged).
+    pub cut: usize,
+    /// Clients lost to availability churn before arrival.
+    pub dropped: usize,
+}
+
+/// A prepared per-client job: everything the (possibly worker-thread)
+/// training closure needs, moved out of coordinator state.
+struct ClientJob {
+    client: usize,
+    submodel: SubModel,
+    data: EpochData,
+    dgc: Option<DgcState>,
+}
+
+struct JobResult {
+    outcome: ClientRoundOutcome,
+    dgc: Option<DgcState>,
+}
+
+/// An in-flight client's completion event (continuous policies carry
+/// these across aggregations).
+struct InFlight {
+    arrival: f64,
+    seq: u64,
+    version: u64,
+    outcome: ClientRoundOutcome,
+    /// Pre-round DGC snapshot, restored if this client is dropped
+    /// before its upload lands (see [`Engine::prepare_jobs`]).
+    dgc_backup: Option<DgcState>,
+}
+
+impl PartialEq for InFlight {
+    fn eq(&self, other: &InFlight) -> bool {
+        self.seq == other.seq
+    }
+}
+
+impl Eq for InFlight {}
+
+impl Ord for InFlight {
+    // Reversed (earliest arrival first) so BinaryHeap pops in virtual
+    // time order; ties break on dispatch sequence for determinism.
+    fn cmp(&self, other: &InFlight) -> std::cmp::Ordering {
+        other
+            .arrival
+            .total_cmp(&self.arrival)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+impl PartialOrd for InFlight {
+    fn partial_cmp(&self, other: &InFlight) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+fn round_seed(seed: u64, round: usize) -> u64 {
+    // Matches the pre-scheduler serial loop's expression bit-for-bit.
+    seed ^ ((round as u64) << 20)
+}
+
+/// The event-driven federation scheduler.
+pub struct Engine {
+    policy: Box<dyn SchedulerPolicy>,
+    avail: Availability,
+    pool: Option<Pool>,
+    /// Virtual clock (continuous policies only; round-scoped policies
+    /// work in per-round offsets to stay bit-compatible with the
+    /// serial reference).
+    now: f64,
+    /// Global model version (incremented per aggregation).
+    version: u64,
+    /// Dispatch sequence counter (arrival tie-break).
+    seq: u64,
+    heap: BinaryHeap<InFlight>,
+    in_flight: Vec<bool>,
+    /// Downlink bytes charged at dispatch, reported at the next
+    /// aggregation (continuous policies).
+    pending_down: u64,
+}
+
+impl Engine {
+    pub fn new(policy: Box<dyn SchedulerPolicy>, avail: Availability) -> Engine {
+        Engine {
+            policy,
+            avail,
+            pool: None,
+            now: 0.0,
+            version: 0,
+            seq: 0,
+            heap: BinaryHeap::new(),
+            in_flight: Vec::new(),
+            pending_down: 0,
+        }
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    /// Execute one round / aggregation window.
+    pub fn step(&mut self, round: usize, ctx: &mut RoundCtx) -> Result<RoundSummary> {
+        if self.policy.continuous() {
+            self.step_continuous(round, ctx)
+        } else {
+            self.step_round(round, ctx)
+        }
+    }
+
+    // ---- shared machinery -------------------------------------------
+
+    /// Sample `k` of `cands` via the coordinator RNG. When `cands` is
+    /// the full population this performs exactly the serial loop's
+    /// `sample_indices(n, k)` call (bit-compatibility).
+    fn sample_from(rng: &mut Pcg64, cands: &[usize], k: usize) -> Vec<usize> {
+        let k = k.min(cands.len());
+        rng.sample_indices(cands.len(), k)
+            .into_iter()
+            .map(|i| cands[i])
+            .collect()
+    }
+
+    /// Serially draw each dispatched client's sub-model and epoch (all
+    /// RNG on the coordinator thread, dispatch order), moving per-
+    /// client state (DGC buffers, epoch data) into owned jobs.
+    ///
+    /// With `snapshot_dgc`, also returns a pre-round snapshot of each
+    /// client's DGC buffers: `run_client_round` clears the sent top-k
+    /// coordinates from the accumulators, which is only correct if the
+    /// upload actually reaches the server. A client that is later cut
+    /// or churn-dropped never delivered — the caller restores its
+    /// snapshot so DGC's no-information-loss invariant holds (the
+    /// round never happened from the client's perspective). Callers
+    /// pass `snapshot_dgc = false` when exclusion is impossible
+    /// (`Sync` with churn off) to skip the 2×`num_params` copy.
+    fn prepare_jobs(
+        ctx: &mut RoundCtx,
+        round: usize,
+        cohort: &[usize],
+        snapshot_dgc: bool,
+    ) -> (Vec<ClientJob>, Vec<Option<DgcState>>) {
+        let mut backups = Vec::with_capacity(cohort.len());
+        let jobs = cohort
+            .iter()
+            .map(|&c| {
+                let submodel = ctx.strategy.select(round, c, ctx.rng);
+                let st = &mut ctx.fleet[c];
+                st.participations += 1;
+                let data = ctx.dataset.clients[c].epoch_data(ctx.spec, &mut st.rng);
+                let dgc = if ctx.cfg.uplink_dgc {
+                    let taken = st.take_dgc();
+                    backups.push(snapshot_dgc.then(|| taken.clone()));
+                    Some(taken)
+                } else {
+                    backups.push(None);
+                    None
+                };
+                ClientJob {
+                    client: c,
+                    submodel,
+                    data,
+                    dgc,
+                }
+            })
+            .collect();
+        (jobs, backups)
+    }
+
+    /// Run the jobs' local training — in parallel on the worker pool
+    /// when the runtime is shareable, serially otherwise — and hand
+    /// each client's DGC buffers back to the fleet. Output preserves
+    /// dispatch order.
+    fn execute_jobs(
+        &mut self,
+        ctx: &mut RoundCtx,
+        round: usize,
+        jobs: Vec<ClientJob>,
+    ) -> Result<Vec<JobResult>> {
+        let seed = round_seed(ctx.cfg.seed, round);
+        let parallel = match ctx.runtime {
+            RuntimeHost::Parallel(rt) if jobs.len() > 1 => Some(rt.clone()),
+            _ => None,
+        };
+        let mut results = match parallel {
+            Some(rt) => {
+                let spec = ctx.spec.clone();
+                let codec = ctx.downlink.clone();
+                let global: Arc<Vec<f32>> = Arc::new(ctx.global.clone());
+                let lr = ctx.lr;
+                let pool = self.pool.get_or_insert_with(Pool::default_for_machine);
+                pool.map(jobs, move |mut job: ClientJob| {
+                    let mut dgc = job.dgc.take();
+                    run_client_round(
+                        &spec,
+                        rt.as_ref(),
+                        &global,
+                        &job.submodel,
+                        &job.data,
+                        lr,
+                        codec.as_ref(),
+                        dgc.as_mut(),
+                        seed,
+                        job.client,
+                    )
+                    .map(|outcome| JobResult { outcome, dgc })
+                })
+                .into_iter()
+                .collect::<Result<Vec<_>>>()?
+            }
+            None => {
+                let rt = ctx.runtime.get();
+                let mut out = Vec::with_capacity(jobs.len());
+                for mut job in jobs {
+                    let mut dgc = job.dgc.take();
+                    let outcome = run_client_round(
+                        ctx.spec,
+                        rt,
+                        ctx.global,
+                        &job.submodel,
+                        &job.data,
+                        ctx.lr,
+                        ctx.downlink.as_ref(),
+                        dgc.as_mut(),
+                        seed,
+                        job.client,
+                    )?;
+                    out.push(JobResult { outcome, dgc });
+                }
+                out
+            }
+        };
+        for r in &mut results {
+            if let Some(st) = r.dgc.take() {
+                ctx.fleet[r.outcome.client].put_dgc(st);
+            }
+        }
+        Ok(results)
+    }
+
+    /// A client's simulated `down + compute + up` duration.
+    fn flight_time(ctx: &RoundCtx, o: &ClientRoundOutcome) -> f64 {
+        let link = &ctx.net.links[o.client];
+        link.down_time(o.down_bytes, &ctx.net.cfg)
+            + link.compute_time(o.epoch_flops)
+            + link.up_time(o.up_bytes, &ctx.net.cfg)
+    }
+
+    // ---- round-scoped policies (Sync, Overselect) -------------------
+
+    fn step_round(&mut self, round: usize, ctx: &mut RoundCtx) -> Result<RoundSummary> {
+        let m = ctx.cfg.cohort_size();
+        let n = ctx.cfg.num_clients;
+        let want = self.policy.dispatch_count(m).min(n);
+        let cands: Vec<usize> = if self.avail.config().enabled {
+            self.avail.online_at(n, ctx.cum_s)
+        } else {
+            (0..n).collect()
+        };
+        let cohort = Self::sample_from(ctx.rng, &cands, want);
+        // Rollback snapshots (2×num_params f32 per client) are only
+        // taken when a client can actually end up excluded.
+        let snapshot = self.policy.may_cut() || self.avail.config().enabled;
+        let (jobs, mut dgc_backups) = Self::prepare_jobs(ctx, round, &cohort, snapshot);
+        let results = self.execute_jobs(ctx, round, jobs)?;
+
+        // Arrival offsets (seconds after dispatch) + churn drops.
+        let k = results.len();
+        let mut offsets = Vec::with_capacity(k);
+        let mut dropped_flag = vec![false; k];
+        let mut dropped = 0usize;
+        for (i, r) in results.iter().enumerate() {
+            let off = Self::flight_time(ctx, &r.outcome);
+            if !self.avail.is_online(r.outcome.client, ctx.cum_s + off) {
+                dropped_flag[i] = true;
+                dropped += 1;
+            }
+            offsets.push(off);
+        }
+
+        // Replay arrivals in virtual-time order until the policy (or a
+        // deadline, or an empty sky) closes the round.
+        let mut order: Vec<usize> = (0..k).filter(|&i| !dropped_flag[i]).collect();
+        order.sort_by(|&a, &b| offsets[a].total_cmp(&offsets[b]).then(a.cmp(&b)));
+        let deadline = self.policy.deadline_s();
+        let mut included = vec![false; k];
+        let mut arrived = 0usize;
+        let mut close_t = 0.0f64;
+        let mut pending = order.len();
+        let mut deadline_hit = false;
+        for &i in &order {
+            if let Some(d) = deadline {
+                if offsets[i] > d {
+                    deadline_hit = true;
+                    break;
+                }
+            }
+            included[i] = true;
+            arrived += 1;
+            pending -= 1;
+            close_t = offsets[i];
+            if self.policy.close_after(m, arrived, pending) {
+                break;
+            }
+        }
+        if deadline_hit {
+            close_t = deadline.unwrap_or(close_t);
+        }
+        if arrived == 0 {
+            // Nothing arrived (all dispatched clients dropped, or no
+            // one was online to dispatch). Charge the time the round
+            // actually occupied — the deadline, or the would-be
+            // arrivals — and, under churn, at least one availability
+            // window: `is_online` is a pure function of time, so a
+            // frozen clock would re-evaluate the same offline pattern
+            // forever and wedge the rest of the run.
+            close_t = deadline
+                .unwrap_or_else(|| offsets.iter().copied().fold(0.0, f64::max));
+            if self.avail.config().enabled {
+                close_t = close_t.max(self.avail.config().period_s.max(1e-3));
+            }
+        }
+        let cut = order.len() - arrived;
+
+        // Cut/dropped uploads never reached the server: roll their DGC
+        // accumulators back to the pre-round snapshot (no-op for Sync,
+        // which includes everyone — bit-compat preserved).
+        for (i, r) in results.iter().enumerate() {
+            if included[i] {
+                continue;
+            }
+            if let Some(b) = dgc_backups[i].take() {
+                ctx.fleet[r.outcome.client].put_dgc(b);
+            }
+        }
+
+        let mut summary =
+            Self::aggregate(ctx, round, results.iter().map(|r| &r.outcome), &included, |_| 1.0);
+        summary.round_s = close_t;
+        summary.arrived = arrived;
+        summary.cut = cut;
+        summary.dropped = dropped;
+        self.version += 1;
+        Ok(summary)
+    }
+
+    // ---- continuous policies (AsyncBuffered) ------------------------
+
+    fn step_continuous(&mut self, round: usize, ctx: &mut RoundCtx) -> Result<RoundSummary> {
+        if self.in_flight.len() != ctx.cfg.num_clients {
+            self.in_flight = vec![false; ctx.cfg.num_clients];
+        }
+        let m = ctx.cfg.cohort_size();
+        let target = self.policy.dispatch_count(m).min(ctx.cfg.num_clients);
+        let window_start = self.now;
+        let mut dropped = 0usize;
+        // Refill is *leading*: clients aggregated by the previous step
+        // are replaced here, dispatched at `self.now` (that step's
+        // aggregation close — the same virtual instant a trailing
+        // refill would use). Leading keeps the strategy's view
+        // consistent: its `select`s for round R always precede round
+        // R's `report_loss`es.
+        self.refill(ctx, round, target)?;
+
+        // Drain arrivals until the buffer fills (or the sky empties).
+        let mut buffer: Vec<InFlight> = Vec::new();
+        loop {
+            match self.heap.pop() {
+                Some(mut f) => {
+                    self.in_flight[f.outcome.client] = false;
+                    self.now = self.now.max(f.arrival);
+                    if !self.avail.is_online(f.outcome.client, f.arrival) {
+                        dropped += 1;
+                        // The upload never landed: undo the round's DGC
+                        // accumulator mutation.
+                        if let Some(b) = f.dgc_backup.take() {
+                            ctx.fleet[f.outcome.client].put_dgc(b);
+                        }
+                        continue;
+                    }
+                    let full = self.policy.close_after(m, buffer.len() + 1, self.heap.len());
+                    buffer.push(f);
+                    if full {
+                        break;
+                    }
+                }
+                None => {
+                    if !buffer.is_empty() {
+                        break;
+                    }
+                    // Nothing in flight: try to refill at the current
+                    // clock; if the whole population is offline, idle
+                    // one churn window so availability can recover.
+                    let before = self.heap.len();
+                    self.refill(ctx, round, target)?;
+                    if self.heap.len() == before {
+                        let idle = self.avail.config().period_s.max(1e-3);
+                        self.now += idle;
+                        return Ok(RoundSummary {
+                            round_s: idle,
+                            dropped,
+                            // Bytes were charged at dispatch for clients
+                            // that have since all dropped — report them
+                            // here rather than misattributing them to a
+                            // later aggregation (or losing them if the
+                            // run ends idle).
+                            down_bytes: std::mem::take(&mut self.pending_down),
+                            ..RoundSummary::default()
+                        });
+                    }
+                }
+            }
+        }
+
+        // Staleness-discounted buffered aggregation, arrival order.
+        let included = vec![true; buffer.len()];
+        let cur = self.version;
+        let policy = &*self.policy;
+        let mut summary = Self::aggregate(
+            ctx,
+            round,
+            buffer.iter().map(|f| &f.outcome),
+            &included,
+            |i| policy.staleness_weight(cur - buffer[i].version),
+        );
+        self.version += 1;
+        summary.round_s = self.now - window_start;
+        summary.arrived = buffer.len();
+        summary.dropped = dropped;
+        summary.down_bytes = std::mem::take(&mut self.pending_down);
+        Ok(summary)
+    }
+
+    /// Top the in-flight set back up to `target` with clients that are
+    /// online and not already in flight, dispatching at `self.now`.
+    fn refill(&mut self, ctx: &mut RoundCtx, round: usize, target: usize) -> Result<()> {
+        if self.heap.len() >= target {
+            return Ok(());
+        }
+        let now = self.now;
+        let cands: Vec<usize> = (0..ctx.cfg.num_clients)
+            .filter(|&c| !self.in_flight[c] && self.avail.is_online(c, now))
+            .collect();
+        if cands.is_empty() {
+            return Ok(());
+        }
+        let picked = Self::sample_from(ctx.rng, &cands, target - self.heap.len());
+        // Continuous policies only exclude via churn drops.
+        let snapshot = self.avail.config().enabled;
+        let (jobs, dgc_backups) = Self::prepare_jobs(ctx, round, &picked, snapshot);
+        let results = self.execute_jobs(ctx, round, jobs)?;
+        for (r, dgc_backup) in results.into_iter().zip(dgc_backups) {
+            let o = r.outcome;
+            let dt = Self::flight_time(ctx, &o);
+            self.pending_down += o.down_bytes;
+            self.seq += 1;
+            self.in_flight[o.client] = true;
+            self.heap.push(InFlight {
+                arrival: now + dt,
+                seq: self.seq,
+                version: self.version,
+                outcome: o,
+                dgc_backup,
+            });
+        }
+        Ok(())
+    }
+
+    /// FedAvg the included outcomes (iteration order = caller order =
+    /// dispatch/arrival order, which fixes the f64 summation order for
+    /// reproducibility), update the global, feed the strategy, and
+    /// account bytes/losses.
+    fn aggregate<'o>(
+        ctx: &mut RoundCtx,
+        round: usize,
+        outcomes: impl Iterator<Item = &'o ClientRoundOutcome> + Clone,
+        included: &[bool],
+        weight_of: impl Fn(usize) -> f64,
+    ) -> RoundSummary {
+        ctx.agg.reset();
+        let mut summary = RoundSummary::default();
+        let mut loss_sum = 0.0f64;
+        let mut keep_sum = 0.0f64;
+        let mut count = 0usize;
+        for (i, o) in outcomes.clone().enumerate() {
+            if !included[i] {
+                continue;
+            }
+            let n_c = ctx.fleet[o.client].num_samples as f64;
+            let w = weight_of(i);
+            // `n_c * 1.0 == n_c` exactly, so unit weights stay bit-
+            // compatible with the serial reference.
+            ctx.agg.add_masked(&o.reconstructed, &o.coord_mask, n_c * w);
+            summary.down_bytes += o.down_bytes;
+            summary.up_bytes += o.up_bytes;
+            loss_sum += o.train_loss as f64;
+            keep_sum += o.submodel.keep_fraction();
+            count += 1;
+        }
+        let new_global = ctx.agg.finalize(ctx.global);
+        *ctx.global = new_global;
+        for (i, o) in outcomes.enumerate() {
+            if included[i] {
+                ctx.strategy.report_loss(round, o.client, o.train_loss as f64);
+            }
+        }
+        ctx.strategy.end_round(round);
+        summary.train_loss = loss_sum / count.max(1) as f64;
+        summary.keep_fraction = keep_sum / count.max(1) as f64;
+        summary
+    }
+}

@@ -1,0 +1,95 @@
+//! Event-driven federation scheduler: parallel cohorts, stragglers,
+//! and async aggregation.
+//!
+//! The paper's convergence-time metric is
+//! `t_round = max over cohort(down + compute + up)` — synchronous
+//! FedAvg, where the slowest client gates every round. This module
+//! generalizes the round loop into a virtual-clock, event-driven
+//! engine ([`Engine`]) with pluggable closing policies
+//! ([`SchedulerPolicy`]):
+//!
+//! * [`SyncPolicy`] — the paper's synchronous rounds, bit-identical to
+//!   the pre-scheduler serial loop at equal seeds;
+//! * [`OverselectPolicy`] — dispatch `⌈m·(1+ε)⌉` clients, close at the
+//!   first `m` arrivals or a deadline, cut stragglers;
+//! * [`AsyncBufferedPolicy`] — FedBuff-style buffered asynchrony:
+//!   aggregate every `K` arrivals with staleness-discounted weights,
+//!   keep a fixed number of clients in flight at all times.
+//!
+//! In-flight clients train in parallel on `util::pool::Pool` whenever
+//! the model runtime is thread-safe (the native backend); see
+//! `engine.rs` for the determinism story and `README.md` in this
+//! directory for the event-loop walkthrough.
+
+pub mod engine;
+pub mod policy;
+
+pub use engine::{Engine, RoundCtx, RoundSummary};
+pub use policy::{
+    make_policy, AsyncBufferedPolicy, OverselectPolicy, SchedulerPolicy, SyncPolicy,
+};
+
+use crate::network::ChurnConfig;
+
+/// Scheduler configuration (experiment-config subtree).
+#[derive(Clone, Debug)]
+pub struct SchedConfig {
+    /// Policy: `sync` | `overselect` | `async_buffered`.
+    pub policy: String,
+    /// Overselect: over-provisioning fraction ε.
+    pub over_fraction: f64,
+    /// Overselect: optional round deadline in simulated seconds.
+    pub deadline_s: Option<f64>,
+    /// AsyncBuffered: aggregate every K arrivals (0 = auto:
+    /// `max(1, ⌊m/2⌋)`).
+    pub buffer_k: usize,
+    /// AsyncBuffered: clients kept in flight (0 = auto: min(2m, n)).
+    pub concurrency: usize,
+    /// AsyncBuffered: staleness discount exponent α in
+    /// `w = 1/(1+staleness)^α`.
+    pub staleness_alpha: f64,
+    /// Per-client availability churn (off by default).
+    pub churn: ChurnConfig,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        SchedConfig {
+            policy: "sync".into(),
+            over_fraction: 0.5,
+            deadline_s: None,
+            buffer_k: 0,
+            concurrency: 0,
+            staleness_alpha: 1.0,
+            churn: ChurnConfig::default(),
+        }
+    }
+}
+
+impl SchedConfig {
+    /// Enable availability churn at the given steady-state
+    /// availability (single validation point for the CLI/examples).
+    pub fn enable_churn(&mut self, availability: f64) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            availability > 0.0 && availability <= 1.0,
+            "churn availability must be in (0,1], got {availability}"
+        );
+        self.churn.enabled = true;
+        self.churn.availability = availability;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_sync_with_no_churn() {
+        let c = SchedConfig::default();
+        assert_eq!(c.policy, "sync");
+        assert!(!c.churn.enabled);
+        assert_eq!(c.buffer_k, 0);
+        assert_eq!(c.concurrency, 0);
+    }
+}

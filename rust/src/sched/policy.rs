@@ -1,0 +1,251 @@
+//! Pluggable scheduling policies for the event-driven round engine.
+//!
+//! A policy answers the engine's four questions and nothing else — the
+//! engine owns the virtual clock, the in-flight set and all client
+//! state movement:
+//!
+//! 1. how many clients to put in flight for a round targeting cohort
+//!    `m` ([`SchedulerPolicy::dispatch_count`]);
+//! 2. whether to close the round after each arrival
+//!    ([`SchedulerPolicy::close_after`]);
+//! 3. whether a wall-clock deadline cuts stragglers
+//!    ([`SchedulerPolicy::deadline_s`]);
+//! 4. how to weight an update that trained against a stale global model
+//!    ([`SchedulerPolicy::staleness_weight`]).
+//!
+//! [`SyncPolicy`] reproduces the paper's synchronous FedAvg
+//! bit-for-bit; [`OverselectPolicy`] and [`AsyncBufferedPolicy`] are
+//! the two standard straggler-mitigation levers from the communication
+//! -efficiency literature (over-selection, FedBuff-style buffered
+//! asynchrony).
+
+use crate::sched::SchedConfig;
+
+/// Round-closing policy driven by the engine (see module docs).
+pub trait SchedulerPolicy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Number of clients to put in flight for a round targeting cohort
+    /// size `m`. For continuous policies this is the steady-state
+    /// concurrency the engine refills to.
+    fn dispatch_count(&self, m: usize) -> usize;
+
+    /// Close the round after an arrival? `arrived` counts arrivals
+    /// banked this round (including the one just processed);
+    /// `in_flight` counts dispatched clients still pending. The engine
+    /// always closes on its own when nothing is left in flight.
+    fn close_after(&self, m: usize, arrived: usize, in_flight: usize) -> bool;
+
+    /// Deadline (seconds after dispatch) at which the round force-
+    /// closes; clients still in flight are cut — their work is
+    /// discarded and their bytes are not charged.
+    fn deadline_s(&self) -> Option<f64> {
+        None
+    }
+
+    /// Continuous (buffered-async) operation: in-flight work survives
+    /// aggregations, and the engine refills the in-flight set after
+    /// every aggregation instead of waiting for a round boundary.
+    fn continuous(&self) -> bool {
+        false
+    }
+
+    /// Can this policy discard a dispatched client's finished work
+    /// (quorum/deadline cutting)? Lets the engine skip the per-round
+    /// DGC rollback snapshots when exclusion is impossible.
+    fn may_cut(&self) -> bool {
+        true
+    }
+
+    /// Aggregation-weight multiplier for an update whose training
+    /// started `staleness` model versions ago.
+    fn staleness_weight(&self, _staleness: u64) -> f64 {
+        1.0
+    }
+}
+
+/// Synchronous FedAvg: dispatch exactly `m`, wait for everyone.
+/// Reproduces the pre-scheduler serial loop bit-for-bit.
+pub struct SyncPolicy;
+
+impl SchedulerPolicy for SyncPolicy {
+    fn name(&self) -> &'static str {
+        "sync"
+    }
+
+    fn dispatch_count(&self, m: usize) -> usize {
+        m
+    }
+
+    fn close_after(&self, _m: usize, _arrived: usize, in_flight: usize) -> bool {
+        in_flight == 0
+    }
+
+    fn may_cut(&self) -> bool {
+        false // waits for everyone; only churn can exclude a client
+    }
+}
+
+/// Over-selection (client over-provisioning): dispatch `⌈m·(1+ε)⌉`
+/// clients, close after the first `m` arrivals or at the deadline,
+/// whichever comes first. Stragglers are cut; only arrived clients'
+/// bytes are charged.
+pub struct OverselectPolicy {
+    /// ε — the over-provisioning fraction.
+    pub over_fraction: f64,
+    /// Optional hard deadline in seconds after dispatch.
+    pub deadline_s: Option<f64>,
+}
+
+impl SchedulerPolicy for OverselectPolicy {
+    fn name(&self) -> &'static str {
+        "overselect"
+    }
+
+    fn dispatch_count(&self, m: usize) -> usize {
+        ((m as f64) * (1.0 + self.over_fraction.max(0.0))).ceil() as usize
+    }
+
+    fn close_after(&self, m: usize, arrived: usize, _in_flight: usize) -> bool {
+        arrived >= m
+    }
+
+    fn deadline_s(&self) -> Option<f64> {
+        self.deadline_s
+    }
+}
+
+/// FedBuff-style buffered asynchrony: keep `concurrency` clients in
+/// flight, aggregate every `buffer_k` arrivals with staleness-
+/// discounted weights (`1 / (1 + staleness)^alpha`), refill
+/// immediately after each aggregation. Slow clients never gate
+/// aggregation cadence — they simply stay in flight.
+pub struct AsyncBufferedPolicy {
+    /// Aggregate after this many arrivals.
+    pub buffer_k: usize,
+    /// Staleness discount exponent α.
+    pub staleness_alpha: f64,
+    /// Steady-state number of clients in flight.
+    pub concurrency: usize,
+}
+
+impl SchedulerPolicy for AsyncBufferedPolicy {
+    fn name(&self) -> &'static str {
+        "async_buffered"
+    }
+
+    fn dispatch_count(&self, _m: usize) -> usize {
+        self.concurrency
+    }
+
+    fn close_after(&self, _m: usize, arrived: usize, _in_flight: usize) -> bool {
+        arrived >= self.buffer_k.max(1)
+    }
+
+    fn continuous(&self) -> bool {
+        true
+    }
+
+    fn staleness_weight(&self, staleness: u64) -> f64 {
+        (1.0 + staleness as f64).powf(-self.staleness_alpha)
+    }
+
+    fn may_cut(&self) -> bool {
+        false // arrivals always buffer; stragglers stay in flight
+    }
+}
+
+/// Build a policy from config, resolving the `0 = auto` knobs against
+/// the experiment geometry (`m` = cohort size, `n` = population).
+pub fn make_policy(
+    cfg: &SchedConfig,
+    m: usize,
+    n: usize,
+) -> anyhow::Result<Box<dyn SchedulerPolicy>> {
+    Ok(match cfg.policy.as_str() {
+        "sync" => Box::new(SyncPolicy),
+        "overselect" => Box::new(OverselectPolicy {
+            over_fraction: cfg.over_fraction,
+            deadline_s: cfg.deadline_s,
+        }),
+        "async_buffered" => Box::new(AsyncBufferedPolicy {
+            buffer_k: if cfg.buffer_k == 0 {
+                (m / 2).max(1)
+            } else {
+                cfg.buffer_k
+            },
+            staleness_alpha: cfg.staleness_alpha,
+            concurrency: if cfg.concurrency == 0 {
+                (2 * m).clamp(1, n)
+            } else {
+                cfg.concurrency.min(n)
+            },
+        }),
+        other => anyhow::bail!(
+            "unknown scheduler policy {other:?} (expected sync|overselect|async_buffered)"
+        ),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sync_waits_for_everyone() {
+        let p = SyncPolicy;
+        assert_eq!(p.dispatch_count(6), 6);
+        assert!(!p.close_after(6, 5, 1));
+        assert!(p.close_after(6, 6, 0));
+        assert!(p.deadline_s().is_none());
+        assert!(!p.continuous());
+        assert_eq!(p.staleness_weight(3), 1.0);
+        assert!(!p.may_cut(), "sync never discards finished work");
+    }
+
+    #[test]
+    fn overselect_overprovisions_and_closes_at_quorum() {
+        let p = OverselectPolicy {
+            over_fraction: 0.5,
+            deadline_s: Some(10.0),
+        };
+        assert_eq!(p.dispatch_count(6), 9);
+        assert_eq!(p.dispatch_count(1), 2);
+        assert!(!p.close_after(6, 5, 4));
+        assert!(p.close_after(6, 6, 3));
+        assert_eq!(p.deadline_s(), Some(10.0));
+        assert!(p.may_cut());
+    }
+
+    #[test]
+    fn async_buffered_discounts_staleness() {
+        let p = AsyncBufferedPolicy {
+            buffer_k: 3,
+            staleness_alpha: 1.0,
+            concurrency: 12,
+        };
+        assert!(p.continuous());
+        assert_eq!(p.dispatch_count(6), 12);
+        assert!(!p.close_after(6, 2, 10));
+        assert!(p.close_after(6, 3, 9));
+        assert_eq!(p.staleness_weight(0), 1.0);
+        assert_eq!(p.staleness_weight(1), 0.5);
+        assert!(p.staleness_weight(9) < p.staleness_weight(1));
+    }
+
+    #[test]
+    fn factory_resolves_auto_knobs() {
+        let mut cfg = SchedConfig::default();
+        assert_eq!(make_policy(&cfg, 6, 20).unwrap().name(), "sync");
+        cfg.policy = "overselect".into();
+        assert_eq!(make_policy(&cfg, 6, 20).unwrap().name(), "overselect");
+        cfg.policy = "async_buffered".into();
+        let p = make_policy(&cfg, 6, 20).unwrap();
+        assert_eq!(p.name(), "async_buffered");
+        // auto concurrency = min(2m, n) = 12; auto buffer = m/2 = 3.
+        assert_eq!(p.dispatch_count(6), 12);
+        assert!(p.close_after(6, 3, 9) && !p.close_after(6, 2, 10));
+        cfg.policy = "bogus".into();
+        assert!(make_policy(&cfg, 6, 20).is_err());
+    }
+}

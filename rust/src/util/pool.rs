@@ -1,11 +1,21 @@
 //! Worker thread-pool substrate (no `tokio`/`rayon` offline).
 //!
-//! The coordinator trains a round's cohort in parallel: each selected
-//! client's local epoch is an independent PJRT execution. `Pool` is a
-//! fixed-size worker pool with a `scope`d parallel-map that preserves
-//! input order and propagates panics — all the structure the round loop
-//! needs, none of the generality we'd get (and pay for) from an async
-//! runtime. Python is never on this path.
+//! The scheduler ([`crate::sched::Engine`]) fans a dispatch batch's
+//! local training out across this pool whenever the model runtime is
+//! thread-safe (`RuntimeHost::Parallel`, the native backend); the PJRT
+//! backend executes serially on the coordinator thread because its
+//! wrapper types are not `Send` (XLA parallelizes internally). `Pool`
+//! is a fixed-size worker pool with a parallel map that preserves
+//! input order — all the structure the engine needs, none of the
+//! generality we'd get (and pay for) from an async runtime. Python is
+//! never on this path.
+//!
+//! Error-vs-panic contract of [`Pool::map`]: fallible jobs return
+//! their `Result`s as ordinary *values*, collected in input order
+//! (the scheduler's jobs return `anyhow::Result` and the caller
+//! decides what an `Err` means); *panics* in jobs are caught, all
+//! remaining jobs still run, and one captured panic is re-raised on
+//! the caller thread afterwards.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
@@ -184,6 +194,32 @@ mod tests {
             }
             i
         });
+    }
+
+    #[test]
+    fn map_returns_result_values_without_panicking() {
+        // Errors are values: every job completes, Errs come back in
+        // input order, and nothing unwinds (contrast `panics_propagate`).
+        let pool = Pool::new(3);
+        let out: Vec<Result<usize, String>> =
+            pool.map((0..10).collect(), |i: usize| {
+                if i % 3 == 0 {
+                    Err(format!("job {i} failed"))
+                } else {
+                    Ok(i * 2)
+                }
+            });
+        assert_eq!(out.len(), 10);
+        for (i, r) in out.iter().enumerate() {
+            if i % 3 == 0 {
+                assert_eq!(r.as_ref().unwrap_err(), &format!("job {i} failed"));
+            } else {
+                assert_eq!(*r.as_ref().unwrap(), i * 2);
+            }
+        }
+        // The pool is still healthy after a batch with errors.
+        let ok = pool.map(vec![1, 2, 3], |i: i32| i + 1);
+        assert_eq!(ok, vec![2, 3, 4]);
     }
 
     #[test]

@@ -1,0 +1,180 @@
+//! Minimal in-tree replacement for the `anyhow` crate.
+//!
+//! The build environment for this repository is fully offline (see
+//! `afd::util` module docs), so the usual ecosystem crates are replaced
+//! by small, tested implementations. This crate provides exactly the
+//! `anyhow` API subset the workspace uses:
+//!
+//! * [`Error`] — an opaque, `Send + Sync` error value built from a
+//!   message or any `std::error::Error`;
+//! * [`Result`] — `Result<T, Error>` with the usual default parameter;
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — the construction macros;
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result`
+//!   and `Option`.
+//!
+//! Error chains are flattened eagerly into the message
+//! (`"context: cause"`), which matches how the workspace formats errors
+//! (`{e}` / `{e:#}`); downcasting and backtraces are intentionally out
+//! of scope. Swap this path dependency for the registry `anyhow` in
+//! `rust/Cargo.toml` if the full feature set is ever needed.
+
+use std::fmt;
+
+/// Opaque error: a flattened message chain.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Note: `Error` deliberately does NOT implement `std::error::Error`,
+// exactly like the real `anyhow::Error` — that is what makes the
+// blanket `From` below coherent.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error::msg(&e)
+    }
+}
+
+/// `anyhow::Result<T>` — `E` defaults to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a message, a format string, or any
+/// displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!(concat!("condition failed: `", stringify!($cond), "`"));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($t)*);
+        }
+    };
+}
+
+/// Attach context to errors (and to `None`).
+pub trait Context<T, E> {
+    /// Wrap the error value with additional context.
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+
+    /// Wrap the error value with lazily-evaluated context.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T, ()> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<i32> {
+        let v: i32 = s.parse()?; // From<ParseIntError>
+        ensure!(v > 0, "want positive, got {v}");
+        Ok(v)
+    }
+
+    #[test]
+    fn macros_and_from() {
+        assert_eq!(parse("3").unwrap(), 3);
+        assert!(parse("x").is_err());
+        let e = parse("-1").unwrap_err();
+        assert_eq!(e.to_string(), "want positive, got -1");
+        let e = anyhow!("plain");
+        assert_eq!(format!("{e}"), "plain");
+        let owned: Error = anyhow!(String::from("owned"));
+        assert_eq!(owned.to_string(), "owned");
+        let fmt = anyhow!("x={} y={:?}", 1, "z");
+        assert_eq!(fmt.to_string(), "x=1 y=\"z\"");
+    }
+
+    #[test]
+    fn context_chains() {
+        let r: std::result::Result<(), std::fmt::Error> = Err(std::fmt::Error);
+        let e = r.context("outer").unwrap_err();
+        assert!(e.to_string().starts_with("outer: "));
+        let n: Option<i32> = None;
+        assert_eq!(n.context("missing").unwrap_err().to_string(), "missing");
+        let w: std::result::Result<(), String> = Err("inner".into());
+        let e = w.with_context(|| format!("step {}", 2)).unwrap_err();
+        assert_eq!(e.to_string(), "step 2: inner");
+    }
+
+    #[test]
+    fn bail_and_bare_ensure() {
+        fn f(flag: bool) -> Result<()> {
+            ensure!(flag);
+            bail!("always");
+        }
+        assert!(f(false).unwrap_err().to_string().contains("flag"));
+        assert_eq!(f(true).unwrap_err().to_string(), "always");
+    }
+
+    #[test]
+    fn error_is_send_sync() {
+        fn assert_bounds<T: Send + Sync + 'static>() {}
+        assert_bounds::<Error>();
+    }
+}

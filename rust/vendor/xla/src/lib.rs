@@ -1,0 +1,220 @@
+//! In-tree stub of the `xla` (xla-rs) API surface used by `afd`.
+//!
+//! The PJRT backend needs the XLA C++ toolchain, which is not present
+//! in offline or CI environments. This stub keeps the whole workspace
+//! compiling and testable without it:
+//!
+//! * [`Literal`] is fully functional (create from bytes, read back as
+//!   typed vectors) — the `runtime::literal` helpers and their tests
+//!   work against it unchanged;
+//! * [`PjRtClient::cpu`] returns a descriptive error, so every PJRT
+//!   call site gates cleanly at runtime ("backend unavailable") — the
+//!   same way PJRT tests already gate on `rust/artifacts/` being
+//!   present.
+//!
+//! To run the real PJRT backend, repoint the `xla` path dependency in
+//! `rust/Cargo.toml` at an environment that provides xla-rs and run
+//! `make artifacts`; no source changes are needed.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error. Every fallible entry point returns this with a message
+/// explaining that the stub is active.
+#[derive(Clone, Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: XLA/PJRT unavailable (built against the in-tree xla stub; \
+         point rust/Cargo.toml's `xla` dependency at xla-rs to enable it)"
+    ))
+}
+
+/// Element types used by the afd artifacts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+impl ElementType {
+    fn byte_width(self) -> usize {
+        4
+    }
+}
+
+/// Rust scalar types storable in a [`Literal`].
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn from_le(bytes: &[u8]) -> Self;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn from_le(b: &[u8]) -> f32 {
+        f32::from_le_bytes([b[0], b[1], b[2], b[3]])
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn from_le(b: &[u8]) -> i32 {
+        i32::from_le_bytes([b[0], b[1], b[2], b[3]])
+    }
+}
+
+/// A host tensor literal: element type + dims + raw little-endian data.
+/// Fully functional in the stub (tuples only come out of executions,
+/// which the stub cannot perform).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<usize>,
+    bytes: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let numel: usize = dims.iter().product();
+        if numel * ty.byte_width() != data.len() {
+            return Err(Error(format!(
+                "literal shape {dims:?} ({numel} elements) does not match {} data bytes",
+                data.len()
+            )));
+        }
+        Ok(Literal {
+            ty,
+            dims: dims.to_vec(),
+            bytes: data.to_vec(),
+        })
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.ty != T::TY {
+            return Err(Error(format!(
+                "literal holds {:?}, asked for {:?}",
+                self.ty,
+                T::TY
+            )));
+        }
+        Ok(self.bytes.chunks_exact(4).map(T::from_le).collect())
+    }
+
+    /// Decompose a tuple literal. Tuples are only produced by PJRT
+    /// executions, which the stub cannot run.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+
+    /// One-element tuple convenience used by kernel tests.
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(unavailable("Literal::to_tuple1"))
+    }
+}
+
+/// Parsed HLO module. The stub cannot parse HLO text.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto> {
+        Err(unavailable(&format!(
+            "parsing HLO text {}",
+            path.as_ref().display()
+        )))
+    }
+}
+
+/// An XLA computation handle.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer returned by executions.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable. Unconstructible through the stub (compile
+/// always fails), but the type and methods keep call sites compiling.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// PJRT device client.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let data = [1.0f32, -2.5, 3.25];
+        let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &bytes)
+                .unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), data);
+        assert_eq!(lit.dims(), &[3]);
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(
+            Literal::create_from_shape_and_untyped_data(ElementType::S32, &[2], &[0u8; 4])
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn client_is_gated() {
+        let err = PjRtClient::cpu().err().unwrap();
+        assert!(err.0.contains("stub"));
+    }
+}
