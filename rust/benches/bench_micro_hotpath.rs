@@ -1,15 +1,30 @@
-//! Hot-path micro benches (the §Perf targets): compression codecs,
-//! packing, selection, aggregation — everything the coordinator does
-//! per client-round besides the XLA execution itself.
+//! Hot-path micro benches (the §Perf targets): native training kernels
+//! vs the retained scalar reference, plan-based vs legacy packing,
+//! compression codecs, selection, aggregation — everything the
+//! coordinator does per client-round besides the XLA execution itself.
+//!
+//! This is a *before/after harness*: the "before" side (scalar
+//! `train_epoch`, `pack_values`/`unpack_values`) is retained in-tree,
+//! so every run measures the speedup on the same machine and writes
+//! the tracked baseline to `BENCH_hotpath.json` at the repo root —
+//! epoch time, pack/unpack time, and allocations-per-epoch from a
+//! counting allocator.
 
 use afd::bench::Bencher;
 use afd::compression::quant::HadamardQuant8;
 use afd::compression::{dgc, DenseCodec, RawF32};
 use afd::dropout::ScoreMap;
-use afd::model::packing;
+use afd::model::packing::{self, PackPlan, PlanCache};
 use afd::model::submodel::SubModel;
-use afd::runtime::native::mlp_spec;
+use afd::runtime::native::{mlp_spec, NativeMlp};
+use afd::runtime::{BatchInput, EpochData, ModelRuntime};
+use afd::tensor::kernels::Workspace;
+use afd::util::alloc_count::{self, CountingAllocator};
+use afd::util::json::Json;
 use afd::util::rng::Pcg64;
+
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
 
 fn main() {
     let mut b = Bencher::default();
@@ -45,25 +60,92 @@ fn main() {
         std::hint::black_box(dgc::decode(&msg));
     });
 
-    println!("\n-- packing / sub-model ops (8k-unit MLP spec) --");
+    // ---- native train_epoch: scalar reference vs kernels ------------
+    println!("\n-- native train_epoch (d=784 h=256 c=62, batch 20 × 5) --");
+    let tspec = mlp_spec("hot", 784, 256, 62, 20, 5, 0.05);
+    let mlp = NativeMlp::new(tspec.clone());
+    let init = mlp.init_params(0);
+    let n_samples = tspec.num_batches * tspec.batch_size;
+    let xs: Vec<f32> = (0..n_samples * 784)
+        .map(|_| rng.normal_f32(0.0, 1.0))
+        .collect();
+    let ys: Vec<i32> = (0..n_samples).map(|_| rng.below(62) as i32).collect();
+    let data = EpochData {
+        xs: BatchInput::F32(xs),
+        ys,
+    };
+    let tsm = {
+        let kept = vec![rng.sample_indices(256, 192)];
+        SubModel::from_kept_indices(&tspec, &kept)
+    };
+    let masks = tsm.masks_f32();
+    let r_scalar = b.run("train_epoch scalar reference", None, || {
+        std::hint::black_box(mlp.train_epoch_scalar(&init, &masks, &data, 0.05).unwrap());
+    });
+    let mut ws = Workspace::new();
+    let mut p = init.clone();
+    let r_kernel = b.run("train_epoch kernels+workspace", None, || {
+        p.copy_from_slice(&init);
+        std::hint::black_box(mlp.train_epoch_in(&mut ws, &mut p, &masks, &data, 0.05).unwrap());
+    });
+    // Allocations for one warmed epoch, via the counting allocator.
+    p.copy_from_slice(&init);
+    alloc_count::arm();
+    mlp.train_epoch_in(&mut ws, &mut p, &masks, &data, 0.05).unwrap();
+    let epoch_allocs = alloc_count::disarm();
+    println!("train_epoch allocations after warm-up: {epoch_allocs}");
+
+    // ---- packing: legacy one-shot vs PackPlan -----------------------
+    println!("\n-- packing / sub-model ops (8k-unit MLP spec, FDR 25%) --");
     let spec = mlp_spec("bench", 256, 2048, 32, 10, 5, 0.1);
     let flat: Vec<f32> = (0..spec.num_params).map(|_| rng.normal_f32(0.0, 0.1)).collect();
     let sm = {
         let kept = vec![rng.sample_indices(2048, 1536)];
         SubModel::from_kept_indices(&spec, &kept)
     };
-    b.run("pack_values (FDR 25%)", Some(4 * spec.num_params as u64), || {
+    let pack_bytes = 4 * spec.num_params as u64;
+    let r_pack_legacy = b.run("pack_values (legacy)", Some(pack_bytes), || {
         std::hint::black_box(packing::pack_values(&spec, &flat, &sm));
     });
     let packed = packing::pack_values(&spec, &flat, &sm);
     let mut out = flat.clone();
-    b.run("unpack_values", Some(4 * packed.len() as u64), || {
+    let r_unpack_legacy = b.run("unpack_values (legacy)", Some(4 * packed.len() as u64), || {
         packing::unpack_values(&spec, &packed, &sm, &mut out);
         std::hint::black_box(&out);
     });
-    b.run("coordinate_mask", None, || {
+    let r_mask_legacy = b.run("coordinate_mask (legacy)", None, || {
         std::hint::black_box(packing::coordinate_mask(&spec, &sm));
     });
+
+    let plan = PackPlan::build(&spec, &sm);
+    let mut pbuf = Vec::new();
+    plan.pack_into(&flat, &mut pbuf); // warm the reusable buffer
+    let r_pack_plan = b.run("PackPlan::pack_into", Some(pack_bytes), || {
+        plan.pack_into(&flat, &mut pbuf);
+        std::hint::black_box(&pbuf);
+    });
+    let r_unpack_plan = b.run("PackPlan::unpack_from", Some(4 * pbuf.len() as u64), || {
+        plan.unpack_from(&pbuf, &mut out);
+        std::hint::black_box(&out);
+    });
+    let mut cmask = vec![false; spec.num_params];
+    let r_mask_plan = b.run("PackPlan::mark_coord_mask", None, || {
+        plan.mark_coord_mask(&mut cmask);
+        std::hint::black_box(&cmask);
+    });
+    b.run("PackPlan::build (cache miss)", None, || {
+        std::hint::black_box(PackPlan::build(&spec, &sm));
+    });
+    let cache = PlanCache::default();
+    let _ = cache.get(&spec, &sm);
+    b.run("PlanCache::get (hit)", None, || {
+        std::hint::black_box(cache.get(&spec, &sm));
+    });
+    alloc_count::arm();
+    plan.pack_into(&flat, &mut pbuf);
+    plan.unpack_from(&pbuf, &mut out);
+    let pack_allocs = alloc_count::disarm();
+    println!("plan pack+unpack allocations after warm-up: {pack_allocs}");
 
     println!("\n-- selection (2048-unit score map) --");
     let mut map = ScoreMap::zeros(&spec);
@@ -86,5 +168,76 @@ fn main() {
         std::hint::black_box(agg.finalize(&params));
     });
 
-    println!("\n(JSON) {}", b.to_json().to_string_compact());
+    // ---- tracked baseline: BENCH_hotpath.json -----------------------
+    let mut baseline = Json::obj();
+    baseline.set("train_epoch_scalar_ns", Json::Num(r_scalar.median_ns));
+    baseline.set("pack_values_ns", Json::Num(r_pack_legacy.median_ns));
+    baseline.set("unpack_values_ns", Json::Num(r_unpack_legacy.median_ns));
+    baseline.set("coordinate_mask_ns", Json::Num(r_mask_legacy.median_ns));
+    let mut new = Json::obj();
+    new.set("train_epoch_ns", Json::Num(r_kernel.median_ns));
+    new.set("pack_into_ns", Json::Num(r_pack_plan.median_ns));
+    new.set("unpack_from_ns", Json::Num(r_unpack_plan.median_ns));
+    new.set("mark_coord_mask_ns", Json::Num(r_mask_plan.median_ns));
+    let mut speedup = Json::obj();
+    speedup.set(
+        "train_epoch",
+        Json::Num(r_scalar.median_ns / r_kernel.median_ns),
+    );
+    speedup.set(
+        "pack",
+        Json::Num(r_pack_legacy.median_ns / r_pack_plan.median_ns),
+    );
+    speedup.set(
+        "unpack",
+        Json::Num(r_unpack_legacy.median_ns / r_unpack_plan.median_ns),
+    );
+    let mut doc = Json::obj();
+    doc.set("bench", Json::Str("bench_micro_hotpath".into()));
+    doc.set(
+        "note",
+        Json::Str(
+            "Before/after harness: `baseline` is the retained scalar train_epoch \
+             reference and the legacy one-shot packing; `kernels` is the blocked \
+             kernel + workspace path and PackPlan, measured in the same run on the \
+             same machine. Regenerate with `cargo bench --bench bench_micro_hotpath`."
+                .into(),
+        ),
+    );
+    let mut targets = Json::obj();
+    targets.set("train_epoch", Json::Num(3.0));
+    targets.set("pack", Json::Num(5.0));
+    targets.set("unpack", Json::Num(5.0));
+    doc.set("targets", targets);
+    doc.set(
+        "train_config",
+        Json::Str("d=784 h=256 c=62 batch=20 batches=5, keep 192/256".into()),
+    );
+    doc.set(
+        "pack_config",
+        Json::Str("d=256 h=2048 c=32, keep 1536/2048 (FDR 25%)".into()),
+    );
+    doc.set("baseline", baseline);
+    doc.set("kernels", new);
+    doc.set("speedup", speedup);
+    doc.set(
+        "allocations_per_epoch_after_warmup",
+        Json::Num(epoch_allocs as f64),
+    );
+    doc.set(
+        "allocations_per_pack_unpack_after_warmup",
+        Json::Num(pack_allocs as f64),
+    );
+    doc.set("all_results", b.to_json());
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_hotpath.json");
+    std::fs::write(&path, doc.to_string_pretty()).expect("write BENCH_hotpath.json");
+    println!("\nwrote {}", path.display());
+    println!(
+        "speedups: train_epoch {:.2}x, pack {:.2}x, unpack {:.2}x",
+        r_scalar.median_ns / r_kernel.median_ns,
+        r_pack_legacy.median_ns / r_pack_plan.median_ns,
+        r_unpack_legacy.median_ns / r_unpack_plan.median_ns
+    );
 }

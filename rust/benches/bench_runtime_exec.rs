@@ -86,7 +86,7 @@ fn main() {
             let res = exe.execute::<xla::Literal>(&lits).unwrap();
             std::hint::black_box(res[0][0].to_literal_sync().unwrap());
         });
-        let codec = HadamardQuant8 { block: k.hadamard_block };
+        let codec = HadamardQuant8::new(k.hadamard_block);
         b.run("hadamard roundtrip (native rust)", Some(bytes), || {
             let enc = codec.encode(&xs, 7);
             std::hint::black_box(codec.decode(&enc, 7));

@@ -41,13 +41,34 @@ impl Default for DgcConfig {
 }
 
 /// Per-client DGC accumulation state (survives across rounds).
-#[derive(Clone, Debug)]
+#[derive(Debug)]
 pub struct DgcState {
     cfg: DgcConfig,
     /// Momentum buffer `u` (lazily sized on first use).
     u: Vec<f32>,
     /// Velocity accumulation `v`.
     v: Vec<f32>,
+    /// Reusable top-k candidate indices (refilled with `0..n` per
+    /// round; keeping the buffer avoids a fresh `(0..n).collect()`
+    /// allocation every compress).
+    idx_scratch: Vec<u32>,
+    /// Reusable gathered-values buffer for the wire encoder.
+    val_scratch: Vec<f32>,
+}
+
+/// Manual `Clone`: the scheduler snapshots DGC state to roll back
+/// cut/churn-dropped clients — the scratch buffers carry no round
+/// state, so clones start them empty instead of copying.
+impl Clone for DgcState {
+    fn clone(&self) -> DgcState {
+        DgcState {
+            cfg: self.cfg.clone(),
+            u: self.u.clone(),
+            v: self.v.clone(),
+            idx_scratch: Vec::new(),
+            val_scratch: Vec::new(),
+        }
+    }
 }
 
 impl DgcState {
@@ -56,6 +77,8 @@ impl DgcState {
             cfg,
             u: Vec::new(),
             v: Vec::new(),
+            idx_scratch: Vec::new(),
+            val_scratch: Vec::new(),
         }
     }
 
@@ -96,23 +119,34 @@ impl DgcState {
         // Top-k selection on |v|.
         let k = ((n as f64) * self.cfg.sparsity).ceil() as usize;
         let k = k.clamp(1, n);
-        let mut idx: Vec<u32> = (0..n as u32).collect();
-        // Partial selection: O(n) average via select_nth.
-        idx.select_nth_unstable_by(k - 1, |&a, &b| {
-            let va = self.v[a as usize].abs();
-            let vb = self.v[b as usize].abs();
-            vb.partial_cmp(&va).unwrap()
+        let Self {
+            v,
+            u,
+            idx_scratch,
+            val_scratch,
+            ..
+        } = self;
+        idx_scratch.clear();
+        idx_scratch.extend(0..n as u32);
+        // Partial selection: O(n) average via select_nth. `total_cmp`
+        // (not `partial_cmp(..).unwrap()`) keeps NaN deltas from
+        // panicking: NaN magnitudes sort as largest, deterministically.
+        idx_scratch.select_nth_unstable_by(k - 1, |&a, &b| {
+            let va = v[a as usize].abs();
+            let vb = v[b as usize].abs();
+            vb.total_cmp(&va)
         });
-        idx.truncate(k);
-        idx.sort_unstable();
+        idx_scratch.truncate(k);
+        idx_scratch.sort_unstable();
 
-        let values: Vec<f32> = idx.iter().map(|&i| self.v[i as usize]).collect();
+        val_scratch.clear();
+        val_scratch.extend(idx_scratch.iter().map(|&i| v[i as usize]));
         // (4) masked momentum: clear sent coordinates in both buffers.
-        for &i in &idx {
-            self.v[i as usize] = 0.0;
-            self.u[i as usize] = 0.0;
+        for &i in idx_scratch.iter() {
+            v[i as usize] = 0.0;
+            u[i as usize] = 0.0;
         }
-        sparse::encode_sparse(&idx, &values, n)
+        sparse::encode_sparse(idx_scratch, val_scratch, n)
     }
 }
 
@@ -233,6 +267,41 @@ mod tests {
             "expected ≥15× reduction, got {}x",
             dense / msg.len()
         );
+    }
+
+    #[test]
+    fn nan_delta_does_not_panic() {
+        // Regression: top-k used `partial_cmp(..).unwrap()`, which
+        // panics the moment a NaN reaches the comparator. `total_cmp`
+        // sorts NaN magnitudes first instead — deterministic, no panic.
+        let mut st = DgcState::new(DgcConfig {
+            sparsity: 0.05,
+            momentum: 0.9,
+            clip_norm: None, // clipping would smear NaN everywhere
+        });
+        let mut d = gauss(256, 3);
+        d[17] = f32::NAN;
+        d[201] = f32::NAN;
+        let msg = st.compress(&d);
+        let dec = decode(&msg);
+        assert_eq!(dec.len(), 256);
+        // The NaN coordinates were the "largest" and got shipped.
+        assert!(dec[17].is_nan());
+        assert!(dec[201].is_nan());
+        // Later clean rounds keep working on the same state.
+        let msg2 = st.compress(&gauss(256, 4));
+        assert_eq!(decode(&msg2).len(), 256);
+    }
+
+    #[test]
+    fn clone_resets_scratch_but_keeps_accumulators() {
+        let mut st = DgcState::new(DgcConfig::default());
+        let _ = st.compress(&gauss(512, 8));
+        let cl = st.clone();
+        assert_eq!(cl.v, st.v);
+        assert_eq!(cl.u, st.u);
+        assert!(cl.idx_scratch.is_empty());
+        assert!(cl.val_scratch.is_empty());
     }
 
     #[test]

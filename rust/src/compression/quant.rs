@@ -11,20 +11,66 @@
 //! The Rademacher diagonal `d` is derived from the shared seed, so it
 //! costs zero wire bytes.
 
+use std::sync::{Arc, Mutex};
+
 use crate::compression::{DenseCodec, Encoded};
 use crate::util::rng::Pcg64;
 
 pub const DEFAULT_BLOCK: usize = 256;
 
+/// Cached sign vectors the encoder state holds. Seeds are unique per
+/// (round, client), so the realistic hit is the decode immediately
+/// following an encode of the same payload — the cap only needs to
+/// cover the worker threads' concurrently in-flight encode/decode
+/// pairs, and a small cap bounds retained memory (each entry is a
+/// model-sized f32 vector).
+const SIGN_CACHE_CAP: usize = 8;
+
+/// One cached Rademacher diagonal: `(seed, padded_len, signs)`.
+type SignEntry = (u64, usize, Arc<Vec<f32>>);
+
 pub struct HadamardQuant8 {
     pub block: usize,
+    /// Rademacher sign cache keyed by `(seed, padded_len)` — encode and
+    /// decode of the same payload derive identical signs, so caching
+    /// halves the sign generation per client round (and a stable seed
+    /// reuses them outright). Entries are invalidated by key: a new
+    /// seed or length simply misses and regenerates; LRU order evicts.
+    signs: Mutex<Vec<SignEntry>>,
+}
+
+impl HadamardQuant8 {
+    pub fn new(block: usize) -> HadamardQuant8 {
+        HadamardQuant8 {
+            block,
+            signs: Mutex::new(Vec::new()),
+        }
+    }
+
+    fn signs_for(&self, seed: u64, len: usize) -> Arc<Vec<f32>> {
+        {
+            let mut g = self.signs.lock().unwrap();
+            if let Some(pos) = g.iter().position(|e| e.0 == seed && e.1 == len) {
+                let e = g.remove(pos); // move to back = most recent
+                let s = e.2.clone();
+                g.push(e);
+                return s;
+            }
+        }
+        // Generate outside the lock (the expensive part).
+        let fresh = Arc::new(signs_for(seed, len));
+        let mut g = self.signs.lock().unwrap();
+        if g.len() >= SIGN_CACHE_CAP {
+            g.remove(0);
+        }
+        g.push((seed, len, fresh.clone()));
+        fresh
+    }
 }
 
 impl Default for HadamardQuant8 {
     fn default() -> Self {
-        HadamardQuant8 {
-            block: DEFAULT_BLOCK,
-        }
+        HadamardQuant8::new(DEFAULT_BLOCK)
     }
 }
 
@@ -66,7 +112,7 @@ impl DenseCodec for HadamardQuant8 {
         let n = values.len();
         let nblocks = n.div_ceil(b);
         let padded = nblocks * b;
-        let signs = signs_for(seed, padded);
+        let signs = self.signs_for(seed, padded);
         let inv_sqrt = 1.0 / (b as f32).sqrt();
 
         let mut bytes = Vec::with_capacity(4 + nblocks * (4 + b));
@@ -106,7 +152,7 @@ impl DenseCodec for HadamardQuant8 {
         let n = u32::from_le_bytes(enc.bytes[0..4].try_into().unwrap()) as usize;
         let nblocks = n.div_ceil(b);
         let padded = nblocks * b;
-        let signs = signs_for(seed, padded);
+        let signs = self.signs_for(seed, padded);
         let inv_sqrt = 1.0 / (b as f32).sqrt();
 
         let mut out = Vec::with_capacity(n);
@@ -196,6 +242,27 @@ mod tests {
         let err_bad = crate::tensor::rel_l2_error(&bad, &xs);
         assert!(err_good < 0.02);
         assert!(err_bad > 0.5, "decoding with the wrong signs must garble");
+    }
+
+    #[test]
+    fn sign_cache_hits_and_invalidates() {
+        let c = HadamardQuant8::default();
+        let a = c.signs_for(7, 512);
+        let b = c.signs_for(7, 512);
+        assert!(std::sync::Arc::ptr_eq(&a, &b), "same (seed, len) must hit");
+        let d = c.signs_for(8, 512); // seed change → regenerate
+        assert!(!std::sync::Arc::ptr_eq(&a, &d));
+        let e = c.signs_for(7, 256); // length change → regenerate
+        assert_eq!(e.len(), 256);
+        assert!(!std::sync::Arc::ptr_eq(&a, &e));
+        // Cached signs are exactly the seed-derived sequence.
+        assert_eq!(*a, signs_for(7, 512));
+        // Encode/decode agree through the cache (and with fresh state).
+        let xs = gauss(512, 1, 1.0);
+        let enc = c.encode(&xs, 7);
+        let fresh = HadamardQuant8::default();
+        let enc2 = fresh.encode(&xs, 7);
+        assert_eq!(enc.bytes, enc2.bytes);
     }
 
     #[test]

@@ -22,10 +22,12 @@ use crate::data::{self, FederatedDataset};
 use crate::dropout::{make_strategy, SubmodelStrategy};
 use crate::metrics::{ExperimentReport, RoundRecord};
 use crate::model::manifest::{Manifest, VariantSpec};
+use crate::model::packing::PlanCache;
 use crate::network::{Availability, NetworkSim};
 use crate::runtime::native::{mlp_spec, NativeMlp};
 use crate::runtime::{EvalOutput, ModelRuntime, RuntimeHost};
 use crate::sched::{make_policy, Engine, RoundCtx};
+use crate::tensor::kernels::WorkspacePool;
 use crate::util::rng::Pcg64;
 
 /// A fully-assembled experiment, ready to run round-by-round.
@@ -45,6 +47,12 @@ pub struct Experiment {
     records: Vec<RoundRecord>,
     cum_s: f64,
     lr: f32,
+    /// Pack-plan LRU cache (keyed by kept-unit bitmap).
+    plans: PlanCache,
+    /// Scratch workspaces shared across client jobs / worker threads
+    /// (`Arc` so the engine can hand it to pool workers, which check
+    /// one out only while a job executes).
+    workspaces: Arc<WorkspacePool>,
 }
 
 impl Experiment {
@@ -114,6 +122,8 @@ impl Experiment {
             cum_s: 0.0,
             spec,
             lr,
+            plans: PlanCache::default(),
+            workspaces: Arc::new(WorkspacePool::new()),
         })
     }
 
@@ -134,6 +144,8 @@ impl Experiment {
             global: &mut self.global,
             lr: self.lr,
             cum_s: self.cum_s,
+            plans: &self.plans,
+            workspaces: &self.workspaces,
         };
         let s = self.engine.step(round, &mut ctx)?;
         self.cum_s += s.round_s;
@@ -163,6 +175,7 @@ impl Experiment {
         let mut outcomes = Vec::with_capacity(m);
         for &c in &cohort {
             let sm = self.strategy.select(round, c, &mut self.rng);
+            let plan = self.plans.get(&self.spec, &sm);
             let data = {
                 let st = &mut self.fleet[c];
                 st.participations += 1;
@@ -173,18 +186,22 @@ impl Experiment {
             } else {
                 None
             };
+            let mut ws = self.workspaces.checkout();
             let outcome = run_client_round(
                 &self.spec,
                 self.runtime.get(),
                 &self.global,
                 &sm,
+                &plan,
                 &data,
                 self.lr,
                 self.downlink.as_ref(),
                 dgc_state,
                 self.cfg.seed ^ (round as u64) << 20,
                 c,
+                &mut ws,
             )?;
+            self.workspaces.restore(ws);
             outcomes.push(outcome);
         }
 

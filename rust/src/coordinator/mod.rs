@@ -33,10 +33,11 @@ use crate::compression::dgc;
 use crate::compression::DenseCodec;
 use crate::dropout::SubmodelStrategy;
 use crate::model::manifest::VariantSpec;
-use crate::model::packing;
+use crate::model::packing::PackPlan;
 use crate::model::submodel::SubModel;
 use crate::network::{NetworkSim, RoundTiming};
 use crate::runtime::{EpochData, ModelRuntime};
+use crate::tensor::kernels::Workspace;
 
 /// Everything exchanged for one client in one round (the simulated
 /// wire + the server-side bookkeeping needed to reconstruct it).
@@ -56,31 +57,39 @@ pub struct ClientRoundOutcome {
 /// Run one client's round: downlink → local train → uplink.
 ///
 /// `global` is W_t; returns the outcome to aggregate. This is the hot
-/// path of the whole system.
+/// path of the whole system: packing runs through the precomputed
+/// `plan` (resolved from the coordinator's [`PlanCache`] at dispatch),
+/// big temporaries come from the job's [`Workspace`], and training
+/// runs in place via [`ModelRuntime::train_epoch_in`].
+///
+/// [`PlanCache`]: crate::model::packing::PlanCache
 #[allow(clippy::too_many_arguments)]
 pub fn run_client_round(
     spec: &VariantSpec,
     runtime: &dyn ModelRuntime,
     global: &[f32],
     submodel: &SubModel,
+    plan: &PackPlan,
     data: &EpochData,
     lr: f32,
     downlink: &dyn DenseCodec,
     dgc_state: Option<&mut dgc::DgcState>,
     round_seed: u64,
     client: usize,
+    ws: &mut Workspace,
 ) -> anyhow::Result<ClientRoundOutcome> {
+    let n = spec.num_params;
     // ---- Downlink: pack → encode → (wire) → decode → unpack ---------
-    let packed = packing::pack_values(spec, global, submodel);
+    // `take_uncleared` everywhere below: each buffer is fully
+    // overwritten before its first read (pack_into clears, the model
+    // buffers are copy_from_slice'd, the delta is written by `sub`).
+    let mut packed = ws.take_uncleared(plan.packed_len());
+    plan.pack_into(global, &mut packed);
     let seed = round_seed ^ (client as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
     let enc = downlink.encode(&packed, seed);
     // Kept-unit bitmaps ride along uncompressed (the client must know
     // which units it received).
-    let bitmap_bytes: u64 = spec
-        .mask_groups
-        .iter()
-        .map(|g| g.size.div_ceil(8) as u64)
-        .sum();
+    let bitmap_bytes = plan.bitmap_bytes();
     let down_bytes = enc.wire_bytes() + bitmap_bytes;
     let decoded = downlink.decode(&enc, seed);
 
@@ -88,23 +97,28 @@ pub fn run_client_round(
     // coordinates replaced by what the wire delivered. Coordinates
     // outside the sub-model exist only server-side; masked training
     // never touches them.
-    let mut client_start = global.to_vec();
-    packing::unpack_values(spec, &decoded, submodel, &mut client_start);
+    let mut client_start = ws.take_uncleared(n);
+    client_start.copy_from_slice(global);
+    plan.unpack_from(&decoded, &mut client_start);
 
-    // ---- Local training (one epoch; scan over batches inside XLA) ---
-    let out = runtime.train_epoch(&client_start, &submodel.masks_f32(), data, lr)?;
+    // ---- Local training (one epoch, in place on the model buffer) ---
+    let mut model = ws.take_uncleared(n);
+    model.copy_from_slice(&client_start);
+    let mean_loss = runtime.train_epoch_in(ws, &mut model, &submodel.masks_f32(), data, lr)?;
 
     // ---- Uplink ------------------------------------------------------
-    let coord_mask = packing::coordinate_mask(spec, submodel);
+    let mut coord_mask = vec![false; n];
+    plan.mark_coord_mask(&mut coord_mask);
     let (up_bytes, reconstructed, coord_mask) = match dgc_state {
         Some(st) => {
             // Delta in full coordinate space (zero off-sub-model, so
             // top-k naturally selects sub-model coordinates; residuals
             // from earlier rounds may surface too — genuine DGC
             // accumulation behaviour).
-            let mut delta = vec![0.0f32; spec.num_params];
-            crate::tensor::sub(&out.params, &client_start, &mut delta);
+            let mut delta = ws.take_uncleared(n);
+            crate::tensor::sub(&model, &client_start, &mut delta);
             let msg = st.compress(&delta);
+            ws.give(delta);
             let up_bytes = msg.len() as u64;
             let sparse_delta = dgc::decode(&msg);
             let mut recon = client_start.clone();
@@ -120,24 +134,28 @@ pub fn run_client_round(
             (up_bytes, recon, cm)
         }
         None => {
-            // Raw packed sub-model values.
-            let packed_up = packing::pack_values(spec, &out.params, submodel);
-            let up_bytes = 4 * packed_up.len() as u64 + bitmap_bytes;
+            // Raw packed sub-model values (reusing the downlink's pack
+            // buffer).
+            plan.pack_into(&model, &mut packed);
+            let up_bytes = 4 * packed.len() as u64 + bitmap_bytes;
             let mut recon = client_start.clone();
-            packing::unpack_values(spec, &packed_up, submodel, &mut recon);
+            plan.unpack_from(&packed, &mut recon);
             (up_bytes, recon, coord_mask)
         }
     };
 
     // Compute cost of the sub-model epoch: fwd + bwd ≈ 3× fwd FLOPs.
-    let epoch_flops = 3.0
-        * packing::effective_flops_per_sample(spec, submodel)
-        * spec.samples_per_round() as f64;
+    let epoch_flops = 3.0 * plan.flops_per_sample() * spec.samples_per_round() as f64;
+
+    let train_loss = mean_loss;
+    ws.give(packed);
+    ws.give(client_start);
+    ws.give(model);
 
     Ok(ClientRoundOutcome {
         client,
         submodel: submodel.clone(),
-        train_loss: out.mean_loss,
+        train_loss,
         down_bytes,
         up_bytes,
         epoch_flops,

@@ -40,7 +40,10 @@ impl ScoreMap {
 
     /// Weighted random selection of a sub-model keeping `1 − fdr` of each
     /// group's units (Alg. 1 line 9: "weighted random selection of the
-    /// activations using weights from M").
+    /// activations using weights from M"). One prefix-sum (Fenwick)
+    /// structure is built per group per selection round; each of the
+    /// `keep` draws is then a single O(log n) prefix-sum descent with
+    /// removal, replacing the per-draw linear rescans.
     pub fn weighted_select(
         &self,
         spec: &VariantSpec,
@@ -53,7 +56,7 @@ impl ScoreMap {
             .enumerate()
             .map(|(g, ws)| {
                 let keep = kept_count(spec.mask_groups[g].size, fdr);
-                rng.weighted_sample_distinct(ws, keep)
+                prefix_sum_sample_distinct(ws, keep, rng)
             })
             .collect();
         SubModel::from_kept_indices(spec, &kept)
@@ -97,6 +100,83 @@ impl ScoreMap {
 pub fn kept_count(group_size: usize, fdr: f64) -> usize {
     let keep = ((group_size as f64) * (1.0 - fdr)).round() as usize;
     keep.clamp(1, group_size)
+}
+
+/// Draw `k` distinct indices ∝ `weights` via a Fenwick prefix-sum tree:
+/// O(n) build, then one O(log n) cumulative-sum descent + weight
+/// removal per draw. Zero/negative weights get a tiny epsilon floor so
+/// unscored units stay explorable (weighted *random* selection, Alg. 1
+/// line 9) — the same floor the previous sampler used.
+pub fn prefix_sum_sample_distinct(
+    weights: &[f64],
+    k: usize,
+    rng: &mut Pcg64,
+) -> Vec<usize> {
+    let n = weights.len();
+    assert!(k <= n, "cannot draw {k} distinct of {n}");
+    let mut eff: Vec<f64> = weights
+        .iter()
+        .map(|&w| if w > 0.0 { w } else { 1e-9 })
+        .collect();
+    // Fenwick build: tree[i] covers (i − lowbit(i), i], 1-based.
+    let mut tree = vec![0.0f64; n + 1];
+    for i in 1..=n {
+        tree[i] += eff[i - 1];
+        let j = i + (i & i.wrapping_neg());
+        if j <= n {
+            let t = tree[i];
+            tree[j] += t;
+        }
+    }
+    let prefix = |tree: &[f64], mut i: usize| -> f64 {
+        let mut s = 0.0;
+        while i > 0 {
+            s += tree[i];
+            i &= i - 1;
+        }
+        s
+    };
+    let mut top = 1usize;
+    while top * 2 <= n {
+        top *= 2;
+    }
+    let mut selected = vec![false; n];
+    let mut out = Vec::with_capacity(k);
+    for _ in 0..k {
+        // Remaining mass read off the tree each draw (no FP drift).
+        let total = prefix(&tree, n);
+        let u = rng.next_f64() * total;
+        // Descend: largest pos with cumsum(pos) <= u; the draw lands
+        // in element pos (0-based).
+        let mut pos = 0usize;
+        let mut rem = u;
+        let mut bit = top;
+        while bit > 0 {
+            let next = pos + bit;
+            if next <= n && tree[next] <= rem {
+                rem -= tree[next];
+                pos = next;
+            }
+            bit >>= 1;
+        }
+        let mut idx = pos.min(n - 1);
+        if selected[idx] {
+            // FP boundary case (u rounded onto a removed coordinate's
+            // edge): fall back to the first live index.
+            idx = (0..n).find(|&i| !selected[i]).expect("k <= n");
+        }
+        selected[idx] = true;
+        out.push(idx);
+        // Remove the drawn weight from the tree.
+        let w = eff[idx];
+        eff[idx] = 0.0;
+        let mut i = idx + 1;
+        while i <= n {
+            tree[i] -= w;
+            i += i & i.wrapping_neg();
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -145,6 +225,50 @@ mod tests {
         }
         // With 20:1e-9 weight ratio, {0,3} should dominate overwhelmingly.
         assert!(hits > trials * 8 / 10, "hits={hits}/{trials}");
+    }
+
+    #[test]
+    fn prefix_sum_draws_are_distinct_and_in_range() {
+        let mut rng = Pcg64::new(11);
+        for k in [1usize, 3, 7, 10] {
+            let weights: Vec<f64> = (0..10).map(|i| i as f64).collect(); // includes 0
+            let s = prefix_sum_sample_distinct(&weights, k, &mut rng);
+            assert_eq!(s.len(), k);
+            let mut t = s.clone();
+            t.sort_unstable();
+            t.dedup();
+            assert_eq!(t.len(), k, "duplicates in {s:?}");
+            assert!(s.iter().all(|&i| i < 10));
+        }
+    }
+
+    #[test]
+    fn prefix_sum_selection_frequencies_track_scores() {
+        // Property: with weights 1:2:4:8 and single-unit draws, the
+        // selection frequencies reproduce the weight proportions.
+        let spec = tiny_spec();
+        let mut m = ScoreMap::zeros(&spec);
+        m.scores[0] = vec![1.0, 2.0, 4.0, 8.0];
+        let mut rng = Pcg64::new(9);
+        let trials = 6000;
+        let mut counts = [0usize; 4];
+        for _ in 0..trials {
+            let sm = m.weighted_select(&spec, 0.75, &mut rng); // keep 1 of 4
+            counts[sm.kept_indices()[0][0]] += 1;
+        }
+        // Expected proportions i/15; allow generous sampling noise.
+        for (i, &c) in counts.iter().enumerate() {
+            let expect = trials as f64 * m.scores[0][i] / 15.0;
+            let err = (c as f64 - expect).abs();
+            assert!(
+                err < 0.15 * trials as f64 / 4.0 + 5.0 * expect.sqrt(),
+                "unit {i}: {c} vs expected {expect:.0} ({counts:?})"
+            );
+        }
+        assert!(
+            counts[0] < counts[1] && counts[1] < counts[2] && counts[2] < counts[3],
+            "{counts:?}"
+        );
     }
 
     #[test]

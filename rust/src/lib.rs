@@ -26,8 +26,11 @@
 //! [`sched`]'s virtual-clock engine; per-client work flows through
 //! [`dropout`] → [`compression`] → [`runtime`] → [`aggregation`],
 //! with [`network`] charging simulated time and [`metrics`] keeping
-//! the books. [`util`] holds the offline substrates (RNG, JSON, CLI,
-//! thread pool, stats).
+//! the books. [`tensor`] holds the flat-array ops plus the blocked
+//! training kernels and zero-allocation workspace arena the native
+//! backend trains through (see `rust/src/tensor/README.md`). [`util`]
+//! holds the offline substrates (RNG, JSON, CLI, thread pool, stats,
+//! counting allocator).
 
 // The offline substrates favor explicit indexed loops over iterator
 // adapters in hot paths; keep clippy's style-only lints from failing

@@ -11,6 +11,21 @@
 //! see DESIGN.md), but the bytes placed on the simulated link — and the
 //! round-trip tests in `rust/tests/packing_equivalence.rs` — use the real
 //! packed layout implemented here.
+//!
+//! Two implementations coexist:
+//!
+//! * the legacy one-shot functions ([`pack_values`], [`unpack_values`],
+//!   [`coordinate_mask`]) rebuild the kept row/col index lists on every
+//!   call — simple, and retained as the reference;
+//! * [`PackPlan`] precomputes the packed layout once per
+//!   `(VariantSpec, SubModel)` pair as maximal contiguous runs, giving
+//!   allocation-free [`PackPlan::pack_into`] / [`PackPlan::unpack_from`]
+//!   on the hot path. [`PlanCache`] LRU-caches plans on the coordinator
+//!   keyed by the kept-unit bitmap (AFD's recorded activation sets make
+//!   bitmaps recur across rounds).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
 use crate::model::manifest::{AxisPack, ParamSeg, VariantSpec};
 use crate::model::submodel::SubModel;
@@ -147,6 +162,241 @@ pub fn coordinate_mask(spec: &VariantSpec, sm: &SubModel) -> Vec<bool> {
     mask
 }
 
+/// Precomputed gather/scatter program for one `(VariantSpec, SubModel)`
+/// pair. The packed layout (identical, element for element, to
+/// [`pack_values`]'s output order) is flattened into maximal contiguous
+/// runs of full-model coordinates, so pack/unpack become a sequence of
+/// `memcpy`s with no per-call index rebuilding — and no allocations
+/// when the caller reuses the output buffer.
+pub struct PackPlan {
+    /// `(start, len)` runs into the flat full-model vector, in packed
+    /// order.
+    runs: Vec<(u32, u32)>,
+    packed_len: usize,
+    num_params: usize,
+    bitmap_bytes: u64,
+    flops_per_sample: f64,
+}
+
+impl PackPlan {
+    pub fn build(spec: &VariantSpec, sm: &SubModel) -> PackPlan {
+        assert!(
+            spec.num_params <= u32::MAX as usize,
+            "flat model too large for u32 plan indices"
+        );
+        let mut runs: Vec<(u32, u32)> = Vec::new();
+        let mut packed_len = 0usize;
+        for seg in spec.params.iter().filter(|p| p.transmit) {
+            let rows = axis_indices(&seg.rows, seg.rows_extent(), spec, sm);
+            let cols = axis_indices(&seg.cols, seg.cols_extent(), spec, sm);
+            let stride = seg.cols_extent();
+            for &r in &rows {
+                let row_base = seg.offset + r * stride;
+                for &c in &cols {
+                    let idx = (row_base + c) as u32;
+                    match runs.last_mut() {
+                        Some((s, l)) if *s + *l == idx => *l += 1,
+                        _ => runs.push((idx, 1)),
+                    }
+                    packed_len += 1;
+                }
+            }
+        }
+        let bitmap_bytes = spec
+            .mask_groups
+            .iter()
+            .map(|g| g.size.div_ceil(8) as u64)
+            .sum();
+        PackPlan {
+            runs,
+            packed_len,
+            num_params: spec.num_params,
+            bitmap_bytes,
+            flops_per_sample: effective_flops_per_sample(spec, sm),
+        }
+    }
+
+    /// Packed f32 element count (== [`packed_model_elems`]).
+    pub fn packed_len(&self) -> usize {
+        self.packed_len
+    }
+
+    /// Number of contiguous runs (diagnostics; lower is faster).
+    pub fn run_count(&self) -> usize {
+        self.runs.len()
+    }
+
+    /// Kept-unit bitmap bytes that ride along with raw payloads.
+    pub fn bitmap_bytes(&self) -> u64 {
+        self.bitmap_bytes
+    }
+
+    /// Wire bytes of the raw-f32 packed sub-model
+    /// (== [`submodel_wire_bytes`]).
+    pub fn wire_bytes(&self) -> u64 {
+        4 * self.packed_len as u64 + self.bitmap_bytes
+    }
+
+    /// Cached [`effective_flops_per_sample`] for this sub-model.
+    pub fn flops_per_sample(&self) -> f64 {
+        self.flops_per_sample
+    }
+
+    /// Gather packed values out of a flat full-model vector into `out`
+    /// (cleared first; allocation-free once `out`'s capacity is warm).
+    pub fn pack_into(&self, full: &[f32], out: &mut Vec<f32>) {
+        assert_eq!(full.len(), self.num_params);
+        out.clear();
+        out.reserve(self.packed_len);
+        for &(s, l) in &self.runs {
+            let s = s as usize;
+            out.extend_from_slice(&full[s..s + l as usize]);
+        }
+    }
+
+    /// Scatter packed values back into a flat full-model vector;
+    /// dropped coordinates are left untouched (paper Fig. 1 step 7).
+    pub fn unpack_from(&self, packed: &[f32], full: &mut [f32]) {
+        assert_eq!(full.len(), self.num_params);
+        assert_eq!(packed.len(), self.packed_len, "packed length mismatch");
+        let mut k = 0usize;
+        for &(s, l) in &self.runs {
+            let s = s as usize;
+            let l = l as usize;
+            full[s..s + l].copy_from_slice(&packed[k..k + l]);
+            k += l;
+        }
+    }
+
+    /// Set `mask[i] = true` for every sub-model coordinate (the
+    /// caller clears/reuses the buffer; == [`coordinate_mask`] when
+    /// starting from all-false).
+    pub fn mark_coord_mask(&self, mask: &mut [bool]) {
+        assert_eq!(mask.len(), self.num_params);
+        for &(s, l) in &self.runs {
+            let s = s as usize;
+            mask[s..s + l as usize].fill(true);
+        }
+    }
+}
+
+/// Coordinator-side LRU cache of [`PackPlan`]s keyed by the kept-unit
+/// bitmap. AFD re-uses recorded activation sets across rounds (and the
+/// no-dropout baselines use one full-model plan forever), so recurring
+/// bitmaps hit; random-dropout misses still win because one built plan
+/// serves the round's five pack/unpack/mask passes.
+pub struct PlanCache {
+    inner: Mutex<PlanCacheInner>,
+    capacity: usize,
+}
+
+struct PlanCacheInner {
+    map: HashMap<Vec<u64>, (u64, Arc<PackPlan>)>,
+    tick: u64,
+}
+
+impl PlanCache {
+    pub const DEFAULT_CAPACITY: usize = 64;
+
+    pub fn new(capacity: usize) -> PlanCache {
+        PlanCache {
+            inner: Mutex::new(PlanCacheInner {
+                map: HashMap::new(),
+                tick: 0,
+            }),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// One `u64` identifying an optional axis pack (`u64::MAX` for an
+    /// unpacked axis). A plan's layout for a given kept-unit bitmap is
+    /// fully determined by each transmit segment's offset, extents and
+    /// axis packs, so folding these into the key makes one cache safe
+    /// to share across variants.
+    fn axis_code(spec: &VariantSpec, ap: &Option<AxisPack>) -> u64 {
+        match ap {
+            None => u64::MAX,
+            Some(a) => {
+                let g = spec.group_index(&a.group).unwrap_or(62) as u64;
+                (a.count as u64)
+                    | ((a.repeat as u64) << 20)
+                    | ((a.fixed as u64) << 40)
+                    | (g << 57)
+            }
+        }
+    }
+
+    /// Cache key: the spec's packing layout (per segment: offset,
+    /// extents, transmit flag, axis packs) followed by, per group, the
+    /// unit count then the packed kept-unit bits.
+    fn key(spec: &VariantSpec, sm: &SubModel) -> Vec<u64> {
+        let mut key = Vec::with_capacity(1 + spec.params.len() * 4 + sm.keep.len() * 2);
+        key.push(spec.num_params as u64);
+        for seg in &spec.params {
+            key.push((seg.offset as u64) | ((seg.transmit as u64) << 63));
+            key.push((seg.rows_extent() as u64) | ((seg.cols_extent() as u64) << 32));
+            key.push(Self::axis_code(spec, &seg.rows));
+            key.push(Self::axis_code(spec, &seg.cols));
+        }
+        for keep in &sm.keep {
+            key.push(keep.len() as u64);
+            let mut word = 0u64;
+            for (i, &k) in keep.iter().enumerate() {
+                if k {
+                    word |= 1 << (i % 64);
+                }
+                if i % 64 == 63 {
+                    key.push(word);
+                    word = 0;
+                }
+            }
+            if keep.len() % 64 != 0 {
+                key.push(word);
+            }
+        }
+        key
+    }
+
+    /// Fetch (or build and cache) the plan for `sm`.
+    pub fn get(&self, spec: &VariantSpec, sm: &SubModel) -> Arc<PackPlan> {
+        let key = Self::key(spec, sm);
+        let mut g = self.inner.lock().unwrap();
+        g.tick += 1;
+        let tick = g.tick;
+        if let Some((t, plan)) = g.map.get_mut(&key) {
+            *t = tick;
+            return plan.clone();
+        }
+        let plan = Arc::new(PackPlan::build(spec, sm));
+        if g.map.len() >= self.capacity {
+            if let Some(oldest) = g
+                .map
+                .iter()
+                .min_by_key(|(_, (t, _))| *t)
+                .map(|(k, _)| k.clone())
+            {
+                g.map.remove(&oldest);
+            }
+        }
+        g.map.insert(key, (tick, plan.clone()));
+        plan
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Default for PlanCache {
+    fn default() -> PlanCache {
+        PlanCache::new(PlanCache::DEFAULT_CAPACITY)
+    }
+}
+
 /// Effective FLOPs per sample for a sub-model (compute-time simulation:
 /// the paper's claim that AFD also reduces client computation).
 pub fn effective_flops_per_sample(spec: &VariantSpec, sm: &SubModel) -> f64 {
@@ -234,6 +484,80 @@ mod tests {
         let spec = tiny_spec();
         let sm = SubModel::full(&spec);
         assert_eq!(submodel_wire_bytes(&spec, &sm), 4 * 33 + 1);
+    }
+
+    #[test]
+    fn plan_matches_legacy_pack_unpack() {
+        let spec = tiny_spec();
+        let full = numbered(&spec);
+        for kept in [vec![0usize, 1, 2, 3], vec![1, 3], vec![2]] {
+            let sm = SubModel::from_kept_indices(&spec, &[kept]);
+            let plan = PackPlan::build(&spec, &sm);
+            assert_eq!(plan.packed_len(), packed_model_elems(&spec, &sm));
+            assert_eq!(plan.wire_bytes(), submodel_wire_bytes(&spec, &sm));
+            assert_eq!(
+                plan.flops_per_sample(),
+                effective_flops_per_sample(&spec, &sm)
+            );
+            let mut packed = Vec::new();
+            plan.pack_into(&full, &mut packed);
+            assert_eq!(packed, pack_values(&spec, &full, &sm));
+            let mut a = vec![-1.0; spec.num_params];
+            let mut b = vec![-1.0; spec.num_params];
+            plan.unpack_from(&packed, &mut a);
+            unpack_values(&spec, &packed, &sm, &mut b);
+            assert_eq!(a, b);
+            let mut cm = vec![false; spec.num_params];
+            plan.mark_coord_mask(&mut cm);
+            assert_eq!(cm, coordinate_mask(&spec, &sm));
+        }
+    }
+
+    #[test]
+    fn plan_merges_contiguous_runs() {
+        let spec = tiny_spec();
+        let sm = SubModel::full(&spec);
+        let plan = PackPlan::build(&spec, &sm);
+        // A full sub-model packs each transmit segment as few runs —
+        // far fewer than one per element.
+        assert!(plan.run_count() < plan.packed_len() / 2);
+    }
+
+    #[test]
+    fn plan_cache_hits_and_evicts() {
+        let spec = tiny_spec();
+        let cache = PlanCache::new(2);
+        let a = SubModel::from_kept_indices(&spec, &[vec![0, 1]]);
+        let b = SubModel::from_kept_indices(&spec, &[vec![2, 3]]);
+        let c = SubModel::from_kept_indices(&spec, &[vec![1, 2]]);
+        let p1 = cache.get(&spec, &a);
+        let p2 = cache.get(&spec, &a);
+        assert!(std::sync::Arc::ptr_eq(&p1, &p2), "same bitmap must hit");
+        let _ = cache.get(&spec, &b);
+        assert_eq!(cache.len(), 2);
+        let _ = cache.get(&spec, &c); // evicts the LRU entry
+        assert_eq!(cache.len(), 2);
+        // Post-eviction lookups still produce correct plans.
+        let p3 = cache.get(&spec, &a);
+        assert_eq!(p3.packed_len(), packed_model_elems(&spec, &a));
+    }
+
+    #[test]
+    fn plan_cache_distinguishes_structurally_similar_specs() {
+        // Same num_params, param count and group count — only a
+        // transmit flag differs. One shared cache must not hand spec
+        // B a plan built for spec A.
+        let spec_a = tiny_spec();
+        let mut spec_b = tiny_spec();
+        let flipped = spec_b.params.iter().position(|p| p.transmit).unwrap();
+        spec_b.params[flipped].transmit = false;
+        let cache = PlanCache::default();
+        let sm = SubModel::full(&spec_a);
+        let pa = cache.get(&spec_a, &sm);
+        let pb = cache.get(&spec_b, &sm);
+        assert_eq!(pa.packed_len(), packed_model_elems(&spec_a, &sm));
+        assert_eq!(pb.packed_len(), packed_model_elems(&spec_b, &sm));
+        assert_ne!(pa.packed_len(), pb.packed_len());
     }
 
     #[test]

@@ -110,6 +110,25 @@ pub trait ModelRuntime {
         lr: f32,
     ) -> Result<TrainOutput>;
 
+    /// In-place epoch: trains `params` directly, drawing scratch from
+    /// `ws` so a warmed workspace makes the epoch allocation-free.
+    /// Returns the mean loss. The default forwards to [`train_epoch`]
+    /// (backends without a workspace path, e.g. PJRT, stay correct);
+    /// the native backend overrides it with the kernel implementation.
+    fn train_epoch_in(
+        &self,
+        ws: &mut crate::tensor::kernels::Workspace,
+        params: &mut [f32],
+        masks: &[Vec<f32>],
+        data: &EpochData,
+        lr: f32,
+    ) -> Result<f32> {
+        let _ = ws;
+        let out = self.train_epoch(params, masks, data, lr)?;
+        params.copy_from_slice(&out.params);
+        Ok(out.mean_loss)
+    }
+
     /// Evaluate the *full* model on one batch.
     fn evaluate(&self, params: &[f32], batch: &EvalBatch) -> Result<EvalOutput>;
 }

@@ -10,6 +10,20 @@
 //! The MLP honours exactly the same masking semantics as the L2 models:
 //! the hidden mask zeroes activations, so dropped units' weights receive
 //! zero gradient and stay bit-identical through SGD.
+//!
+//! ## Two implementations
+//!
+//! The hot path runs on the blocked [`crate::tensor::kernels`] layer
+//! through [`NativeMlp::train_epoch_in`] /
+//! [`NativeMlp::train_epoch_with_block`]: scratch comes from a
+//! [`Workspace`], so a warmed epoch performs zero heap allocations
+//! (`rust/tests/zero_alloc.rs`), and the SGD update fuses batch rows
+//! in blocks of [`kernels::DEFAULT_BATCH_BLOCK`]. The original
+//! unblocked scalar implementation is retained verbatim as
+//! [`NativeMlp::train_epoch_scalar`] — it is the numerical reference
+//! (`rust/tests/kernel_equivalence.rs` proves the kernel path is
+//! bit-identical at block size 1 and within 1e-5 blocked) and the
+//! "before" side of `bench_micro_hotpath`.
 
 use anyhow::Result;
 
@@ -18,6 +32,7 @@ use crate::runtime::{
     check_epoch_data, check_eval_batch, BatchInput, EpochData, EvalBatch, EvalOutput,
     ModelRuntime, TrainOutput,
 };
+use crate::tensor::kernels::{self, Workspace};
 
 /// Build a synthetic `VariantSpec` for a d→h(masked)→c MLP so every
 /// coordinator component (packing, compression accounting, score maps)
@@ -144,9 +159,103 @@ impl NativeMlp {
         out
     }
 
+    // ---- kernel path (the hot path) ---------------------------------
+
+    /// One SGD step on one batch through the kernel layer; scratch
+    /// slices are caller-provided (sized `bsz*h`, `bsz*h`, `bsz*c`,
+    /// `bsz*h`). Returns the batch's mean loss.
+    #[allow(clippy::too_many_arguments)]
+    fn sgd_step_kernels(
+        &self,
+        params: &mut [f32],
+        mask: &[f32],
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+        pre: &mut [f32],
+        hid: &mut [f32],
+        dlog: &mut [f32],
+        dh: &mut [f32],
+        bb: usize,
+    ) -> f32 {
+        let (d, h, c) = (self.d, self.h, self.c);
+        let bsz = y.len();
+        let w2_off = d * h + h;
+        let b2_off = w2_off + h * c;
+
+        // Forward: pre = b1 + x·W1 ; hid = mask ⊙ relu(pre) ;
+        // dlog (as logits) = b2 + hid·W2.
+        kernels::gemm_bias(x, &params[..d * h], &params[d * h..w2_off], pre, bsz, d, h, bb);
+        kernels::relu_mask(pre, mask, hid, bsz, h);
+        kernels::gemm_bias(hid, &params[w2_off..b2_off], &params[b2_off..], dlog, bsz, h, c, bb);
+
+        // Loss + gradient, fused in place on the logits buffer.
+        let loss = kernels::softmax_xent_grad(dlog, y, bsz, c);
+
+        // dh from the *pre-update* W2 (the reference computes dh first).
+        kernels::backprop_hidden(dlog, &params[w2_off..b2_off], mask, pre, dh, bsz, h, c);
+
+        // W2/b2 then W1/b1 — the reference's update order.
+        {
+            let (w2, b2) = params[w2_off..].split_at_mut(h * c);
+            kernels::sgd_rank_update(w2, b2, hid, dlog, lr, bsz, h, c, bb);
+        }
+        {
+            let (w1, rest) = params.split_at_mut(d * h);
+            kernels::sgd_rank_update(w1, &mut rest[..h], x, dh, lr, bsz, d, h, bb);
+        }
+        loss
+    }
+
+    /// In-place epoch with an explicit batch-row block size (`bb == 1`
+    /// reproduces [`NativeMlp::train_epoch_scalar`] bit-for-bit; the
+    /// default block is [`kernels::DEFAULT_BATCH_BLOCK`]). Zero heap
+    /// allocations once `ws` is warm.
+    pub fn train_epoch_with_block(
+        &self,
+        ws: &mut Workspace,
+        params: &mut [f32],
+        masks: &[Vec<f32>],
+        data: &EpochData,
+        lr: f32,
+        bb: usize,
+    ) -> Result<f32> {
+        check_epoch_data(&self.spec, data)?;
+        anyhow::ensure!(masks.len() == 1, "NativeMlp expects one mask group");
+        anyhow::ensure!(params.len() == self.spec.num_params, "params length mismatch");
+        let xs = match &data.xs {
+            BatchInput::F32(v) => v,
+            _ => anyhow::bail!("NativeMlp expects f32 inputs"),
+        };
+        let (bs, d, h, c) = (self.spec.batch_size, self.d, self.h, self.c);
+        // Every kernel writes every element of its output buffer, so
+        // stale scratch is fine (no per-epoch memset).
+        let mut pre = ws.take_uncleared(bs * h);
+        let mut hid = ws.take_uncleared(bs * h);
+        let mut dlog = ws.take_uncleared(bs * c);
+        let mut dh = ws.take_uncleared(bs * h);
+        let mask = &masks[0];
+        let mut loss_sum = 0.0f32;
+        for nb in 0..self.spec.num_batches {
+            let x = &xs[nb * bs * d..(nb + 1) * bs * d];
+            let y = &data.ys[nb * bs..(nb + 1) * bs];
+            loss_sum += self.sgd_step_kernels(
+                params, mask, x, y, lr, &mut pre, &mut hid, &mut dlog, &mut dh, bb,
+            );
+        }
+        ws.give(pre);
+        ws.give(hid);
+        ws.give(dlog);
+        ws.give(dh);
+        Ok(loss_sum / self.spec.num_batches as f32)
+    }
+
+    // ---- scalar reference (retained verbatim) -----------------------
+
     /// Forward pass for one batch; returns (probs [B,c], hidden [B,h],
-    /// pre-activations [B,h]).
-    fn forward(
+    /// pre-activations [B,h]). The original unblocked implementation,
+    /// kept as the numerical reference for the kernel path.
+    fn forward_scalar(
         &self,
         params: &[f32],
         mask: &[f32],
@@ -210,8 +319,9 @@ impl NativeMlp {
         (logits, hid, pre)
     }
 
-    /// One SGD step on one batch; returns the batch's mean loss.
-    fn sgd_step(
+    /// One SGD step on one batch (scalar reference); returns the
+    /// batch's mean loss.
+    fn sgd_step_scalar(
         &self,
         params: &mut [f32],
         mask: &[f32],
@@ -221,7 +331,7 @@ impl NativeMlp {
     ) -> f32 {
         let (d, h, c) = (self.d, self.h, self.c);
         let bsz = y.len();
-        let (probs, hid, pre) = self.forward(params, mask, x, bsz);
+        let (probs, hid, pre) = self.forward_scalar(params, mask, x, bsz);
 
         let mut loss = 0.0f32;
         // dlogits = (probs - onehot) / B
@@ -295,14 +405,11 @@ impl NativeMlp {
         }
         loss
     }
-}
 
-impl ModelRuntime for NativeMlp {
-    fn spec(&self) -> &VariantSpec {
-        &self.spec
-    }
-
-    fn train_epoch(
+    /// The original allocating scalar epoch, retained as the "before"
+    /// baseline of `bench_micro_hotpath` and the bit-exactness
+    /// reference of `rust/tests/kernel_equivalence.rs`.
+    pub fn train_epoch_scalar(
         &self,
         params: &[f32],
         masks: &[Vec<f32>],
@@ -321,12 +428,52 @@ impl ModelRuntime for NativeMlp {
         for nb in 0..self.spec.num_batches {
             let x = &xs[nb * bs * d..(nb + 1) * bs * d];
             let y = &data.ys[nb * bs..(nb + 1) * bs];
-            loss_sum += self.sgd_step(&mut p, &masks[0], x, y, lr);
+            loss_sum += self.sgd_step_scalar(&mut p, &masks[0], x, y, lr);
         }
         Ok(TrainOutput {
             params: p,
             mean_loss: loss_sum / self.spec.num_batches as f32,
         })
+    }
+}
+
+impl ModelRuntime for NativeMlp {
+    fn spec(&self) -> &VariantSpec {
+        &self.spec
+    }
+
+    fn train_epoch(
+        &self,
+        params: &[f32],
+        masks: &[Vec<f32>],
+        data: &EpochData,
+        lr: f32,
+    ) -> Result<TrainOutput> {
+        let mut p = params.to_vec();
+        let mut ws = Workspace::new();
+        let mean_loss = self.train_epoch_with_block(
+            &mut ws,
+            &mut p,
+            masks,
+            data,
+            lr,
+            kernels::DEFAULT_BATCH_BLOCK,
+        )?;
+        Ok(TrainOutput {
+            params: p,
+            mean_loss,
+        })
+    }
+
+    fn train_epoch_in(
+        &self,
+        ws: &mut Workspace,
+        params: &mut [f32],
+        masks: &[Vec<f32>],
+        data: &EpochData,
+        lr: f32,
+    ) -> Result<f32> {
+        self.train_epoch_with_block(ws, params, masks, data, lr, kernels::DEFAULT_BATCH_BLOCK)
     }
 
     fn evaluate(&self, params: &[f32], batch: &EvalBatch) -> Result<EvalOutput> {
@@ -335,19 +482,37 @@ impl ModelRuntime for NativeMlp {
             BatchInput::F32(v) => v,
             _ => anyhow::bail!("NativeMlp expects f32 inputs"),
         };
-        let bsz = self.spec.batch_size;
-        let ones = vec![1.0f32; self.h];
-        let (probs, _, _) = self.forward(params, &ones, xs, bsz);
+        let (bsz, d, h, c) = (self.spec.batch_size, self.d, self.h, self.c);
+        let w2_off = d * h + h;
+        let b2_off = w2_off + h * c;
+        let ones = vec![1.0f32; h];
+        let mut pre = vec![0.0f32; bsz * h];
+        let mut hid = vec![0.0f32; bsz * h];
+        let mut probs = vec![0.0f32; bsz * c];
+        let bb = kernels::DEFAULT_BATCH_BLOCK;
+        kernels::gemm_bias(xs, &params[..d * h], &params[d * h..w2_off], &mut pre, bsz, d, h, bb);
+        kernels::relu_mask(&pre, &ones, &mut hid, bsz, h);
+        kernels::gemm_bias(
+            &hid,
+            &params[w2_off..b2_off],
+            &params[b2_off..],
+            &mut probs,
+            bsz,
+            h,
+            c,
+            bb,
+        );
+        kernels::softmax_rows(&mut probs, bsz, c);
         let mut loss_sum = 0.0f64;
         let mut correct = 0.0f64;
         for b in 0..bsz {
-            let row = &probs[b * self.c..(b + 1) * self.c];
+            let row = &probs[b * c..(b + 1) * c];
             let yi = batch.ys[b] as usize;
             loss_sum += -(row[yi].max(1e-12) as f64).ln();
             let pred = row
                 .iter()
                 .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .max_by(|a, b| a.1.total_cmp(b.1))
                 .unwrap()
                 .0;
             if pred == yi {
@@ -483,6 +648,32 @@ mod tests {
         packing::unpack_values(&spec, &packed, &sm, &mut recovered);
         // Recovered == trained: sub-model coords updated, rest == params.
         assert_eq!(recovered, out.params);
+    }
+
+    #[test]
+    fn scalar_reference_still_learns() {
+        // The retained reference must stay a working implementation —
+        // the equivalence suite and the bench baseline depend on it.
+        let spec = mlp_spec("t", 12, 16, 3, 10, 4, 0.2);
+        let mlp = NativeMlp::new(spec);
+        let mut params = mlp.init_params(0);
+        let (xs, ys) = toy_data(mlp.spec(), 1, 4);
+        let data = EpochData {
+            xs: BatchInput::F32(xs),
+            ys,
+        };
+        let masks = vec![vec![1.0f32; 16]];
+        let mut first = 0.0;
+        let mut last = 0.0;
+        for e in 0..15 {
+            let out = mlp.train_epoch_scalar(&params, &masks, &data, 0.2).unwrap();
+            if e == 0 {
+                first = out.mean_loss;
+            }
+            last = out.mean_loss;
+            params = out.params;
+        }
+        assert!(last < 0.5 * first, "first {first} last {last}");
     }
 
     #[test]

@@ -49,10 +49,12 @@ use crate::coordinator::{run_client_round, ClientRoundOutcome};
 use crate::data::FederatedDataset;
 use crate::dropout::SubmodelStrategy;
 use crate::model::manifest::VariantSpec;
+use crate::model::packing::{PackPlan, PlanCache};
 use crate::model::submodel::SubModel;
 use crate::network::{Availability, NetworkSim};
 use crate::runtime::{EpochData, RuntimeHost};
 use crate::sched::policy::SchedulerPolicy;
+use crate::tensor::kernels::WorkspacePool;
 use crate::util::pool::Pool;
 use crate::util::rng::Pcg64;
 
@@ -75,6 +77,13 @@ pub struct RoundCtx<'a> {
     /// Cumulative simulated seconds before this step (availability
     /// time base for round-scoped policies).
     pub cum_s: f64,
+    /// Coordinator-side pack-plan cache (keyed by kept-unit bitmap);
+    /// plans are resolved at dispatch so workers never touch the lock.
+    pub plans: &'a PlanCache,
+    /// Shared scratch workspaces; jobs check one out only while they
+    /// execute, so peak scratch scales with worker-pool width, not
+    /// cohort size.
+    pub workspaces: &'a Arc<WorkspacePool>,
 }
 
 /// One aggregation's accounting, produced by [`Engine::step`].
@@ -102,6 +111,8 @@ pub struct RoundSummary {
 struct ClientJob {
     client: usize,
     submodel: SubModel,
+    /// Pack plan resolved from the coordinator's cache at dispatch.
+    plan: Arc<PackPlan>,
     data: EpochData,
     dgc: Option<DgcState>,
 }
@@ -238,6 +249,7 @@ impl Engine {
             .iter()
             .map(|&c| {
                 let submodel = ctx.strategy.select(round, c, ctx.rng);
+                let plan = ctx.plans.get(ctx.spec, &submodel);
                 let st = &mut ctx.fleet[c];
                 st.participations += 1;
                 let data = ctx.dataset.clients[c].epoch_data(ctx.spec, &mut st.rng);
@@ -252,6 +264,7 @@ impl Engine {
                 ClientJob {
                     client: c,
                     submodel,
+                    plan,
                     data,
                     dgc,
                 }
@@ -281,22 +294,30 @@ impl Engine {
                 let codec = ctx.downlink.clone();
                 let global: Arc<Vec<f32>> = Arc::new(ctx.global.clone());
                 let lr = ctx.lr;
+                let wsp = Arc::clone(ctx.workspaces);
                 let pool = self.pool.get_or_insert_with(Pool::default_for_machine);
                 pool.map(jobs, move |mut job: ClientJob| {
                     let mut dgc = job.dgc.take();
-                    run_client_round(
+                    // Checked out only for the job's execution window:
+                    // peak scratch = concurrently running jobs (pool
+                    // width), not cohort size.
+                    let mut ws = wsp.checkout();
+                    let result = run_client_round(
                         &spec,
                         rt.as_ref(),
                         &global,
                         &job.submodel,
+                        &job.plan,
                         &job.data,
                         lr,
                         codec.as_ref(),
                         dgc.as_mut(),
                         seed,
                         job.client,
-                    )
-                    .map(|outcome| JobResult { outcome, dgc })
+                        &mut ws,
+                    );
+                    wsp.restore(ws);
+                    result.map(|outcome| JobResult { outcome, dgc })
                 })
                 .into_iter()
                 .collect::<Result<Vec<_>>>()?
@@ -306,19 +327,26 @@ impl Engine {
                 let mut out = Vec::with_capacity(jobs.len());
                 for mut job in jobs {
                     let mut dgc = job.dgc.take();
-                    let outcome = run_client_round(
+                    let mut ws = ctx.workspaces.checkout();
+                    let result = run_client_round(
                         ctx.spec,
                         rt,
                         ctx.global,
                         &job.submodel,
+                        &job.plan,
                         &job.data,
                         ctx.lr,
                         ctx.downlink.as_ref(),
                         dgc.as_mut(),
                         seed,
                         job.client,
-                    )?;
-                    out.push(JobResult { outcome, dgc });
+                        &mut ws,
+                    );
+                    ctx.workspaces.restore(ws);
+                    out.push(JobResult {
+                        outcome: result?,
+                        dgc,
+                    });
                 }
                 out
             }

@@ -1,0 +1,546 @@
+//! Blocked training kernels + workspace arena — the native backend's
+//! compute core.
+//!
+//! The scalar reference MLP (`runtime::native`, retained as
+//! `NativeMlp::train_epoch_scalar`) spends its time in unblocked
+//! triple loops that re-stream the weight matrices once per batch row
+//! and allocate four fresh `Vec<f32>` per batch. This module provides
+//! the same math as loop-structured kernels:
+//!
+//! * [`gemm_bias`] — `out = bias + x·W`, batch rows processed in
+//!   blocks so each weight row is loaded once per *block* instead of
+//!   once per *row* (the dominant memory-traffic saving for
+//!   784×256-sized layers);
+//! * [`relu_mask`] — fused ReLU + unit-mask epilogue;
+//! * [`softmax_xent_grad`] — fused softmax → cross-entropy loss →
+//!   mean gradient, in place on the logits buffer;
+//! * [`backprop_hidden`] — `dh = mask ⊙ relu' ⊙ (dlog·W₂ᵀ)`;
+//! * [`sgd_rank_update`] — the SGD weight update `W -= lr·AᵀG`,
+//!   `b -= lr·Σ G`, fused over a block of batch rows.
+//!
+//! ## Numerical contract
+//!
+//! Every kernel accumulates along the contraction axis in strictly
+//! ascending order, so [`gemm_bias`], [`relu_mask`],
+//! [`softmax_xent_grad`] and [`backprop_hidden`] are bit-identical to
+//! the scalar reference for **every** block size. [`sgd_rank_update`]
+//! fuses a block's rank-1 updates into one pass over the weight
+//! matrix: with `bb == 1` it performs exactly the reference's
+//! per-sample update sequence (bit-for-bit); larger blocks change
+//! rounding by ≤ 1e-5 relative error (asserted in
+//! `rust/tests/kernel_equivalence.rs`) while cutting weight-matrix
+//! traffic by the block factor.
+//!
+//! ## Workspace ownership
+//!
+//! [`Workspace`] is a per-job scratch arena: `take(len)` hands out a
+//! recycled `Vec<f32>` (allocating only if no free buffer has enough
+//! capacity), `give` returns it. A job checks buffers out, uses them,
+//! and gives every one back before finishing — after the first
+//! (warm-up) call, a full `train_epoch` performs **zero heap
+//! allocations** (proved by `rust/tests/zero_alloc.rs` with a counting
+//! allocator). [`WorkspacePool`] shares workspaces across the
+//! scheduler's worker threads: a job checks one out only while it
+//! executes, so peak scratch follows pool width, not cohort size, and
+//! the pool keeps at most [`WorkspacePool::MAX_IDLE`] warm across
+//! rounds. `take` hands out zero-filled
+//! buffers; `take_uncleared` skips the memset for consumers that fully
+//! overwrite their buffer before the first read.
+
+/// Default batch-row block for the SGD rank update (powers of two up
+/// to this bound are dispatched to const-generic micro-kernels).
+pub const DEFAULT_BATCH_BLOCK: usize = 8;
+
+/// Largest supported batch-row block.
+pub const MAX_BATCH_BLOCK: usize = 16;
+
+// ---------------------------------------------------------------------
+// Workspace arena
+// ---------------------------------------------------------------------
+
+/// Recycling arena of f32 scratch buffers (see module docs).
+#[derive(Default)]
+pub struct Workspace {
+    free: Vec<Vec<f32>>,
+}
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace { free: Vec::new() }
+    }
+
+    /// Check out a zero-filled buffer of `len` elements. Reuses the
+    /// smallest free buffer whose capacity suffices; allocates only
+    /// when none does (the warm-up path).
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        let mut b = self.take_uncleared(len);
+        b.fill(0.0);
+        b
+    }
+
+    /// Like [`Workspace::take`] but skips the zero-fill: the buffer
+    /// holds arbitrary stale data. Only for consumers that fully
+    /// overwrite it before the first read (a model-sized memset per
+    /// take is real money on the hot path).
+    pub fn take_uncleared(&mut self, len: usize) -> Vec<f32> {
+        let mut best: Option<(usize, usize)> = None; // (capacity, index)
+        for (i, b) in self.free.iter().enumerate() {
+            let cap = b.capacity();
+            if cap < len {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some((bc, _)) => cap < bc,
+            };
+            if better {
+                best = Some((cap, i));
+            }
+        }
+        match best {
+            Some((_, i)) => {
+                let mut b = self.free.swap_remove(i);
+                // Truncates or grows in place (only grown elements are
+                // written); never reallocates since capacity >= len.
+                b.resize(len, 0.0);
+                b
+            }
+            None => vec![0.0; len],
+        }
+    }
+
+    /// Return a buffer to the arena for reuse.
+    pub fn give(&mut self, buf: Vec<f32>) {
+        self.free.push(buf);
+    }
+
+    /// Number of free buffers currently held (diagnostics/tests).
+    pub fn free_buffers(&self) -> usize {
+        self.free.len()
+    }
+}
+
+/// Thread-safe pool of [`Workspace`]s shared across scheduler workers.
+/// A job checks one out only for its execution window and restores it
+/// immediately after, so at most pool-width workspaces are live at
+/// once; only [`WorkspacePool::MAX_IDLE`] stay warm across rounds,
+/// bounding retained scratch for the process lifetime.
+#[derive(Default)]
+pub struct WorkspacePool {
+    free: std::sync::Mutex<Vec<Workspace>>,
+}
+
+impl WorkspacePool {
+    /// Idle workspaces retained across rounds.
+    pub const MAX_IDLE: usize = 32;
+
+    pub fn new() -> WorkspacePool {
+        WorkspacePool::default()
+    }
+
+    pub fn checkout(&self) -> Workspace {
+        self.free.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    pub fn restore(&self, ws: Workspace) {
+        let mut g = self.free.lock().unwrap();
+        if g.len() < Self::MAX_IDLE {
+            g.push(ws);
+        }
+    }
+
+    pub fn idle(&self) -> usize {
+        self.free.lock().unwrap().len()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Forward kernels
+// ---------------------------------------------------------------------
+
+/// `out[r, :] = bias + x[r, :]·w` for `r in 0..rows`, where `x` is
+/// `[rows, k]`, `w` is `[k, n]`, `bias` is `[n]` (all row-major).
+///
+/// Batch rows are processed in blocks of `bb` so each `w` row is
+/// streamed once per block. Per-element accumulation over `k` is
+/// strictly ascending (and zero inputs are skipped, matching the
+/// scalar reference's sparse-input fast path), so the result is
+/// bit-identical to the reference for every `bb`.
+pub fn gemm_bias(
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    out: &mut [f32],
+    rows: usize,
+    k: usize,
+    n: usize,
+    bb: usize,
+) {
+    debug_assert_eq!(x.len(), rows * k);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(bias.len(), n);
+    debug_assert_eq!(out.len(), rows * n);
+    let bb = bb.max(1);
+    let mut r0 = 0;
+    while r0 < rows {
+        let blk = bb.min(rows - r0);
+        for r in r0..r0 + blk {
+            out[r * n..(r + 1) * n].copy_from_slice(bias);
+        }
+        for i in 0..k {
+            let wrow = &w[i * n..(i + 1) * n];
+            for r in r0..r0 + blk {
+                let xi = x[r * k + i];
+                if xi != 0.0 {
+                    let orow = &mut out[r * n..(r + 1) * n];
+                    for (o, &wv) in orow.iter_mut().zip(wrow) {
+                        *o += xi * wv;
+                    }
+                }
+            }
+        }
+        r0 += blk;
+    }
+}
+
+/// Fused ReLU + unit-mask epilogue: `out[r, j] = pre[r, j] · mask[j]`
+/// where `pre > 0`, else `0`. Writes every element (reused scratch
+/// needs no pre-clearing).
+pub fn relu_mask(pre: &[f32], mask: &[f32], out: &mut [f32], rows: usize, n: usize) {
+    debug_assert_eq!(pre.len(), rows * n);
+    debug_assert_eq!(mask.len(), n);
+    debug_assert_eq!(out.len(), rows * n);
+    for r in 0..rows {
+        let prow = &pre[r * n..(r + 1) * n];
+        let orow = &mut out[r * n..(r + 1) * n];
+        for ((o, &v), &m) in orow.iter_mut().zip(prow).zip(mask) {
+            *o = if v > 0.0 { v * m } else { 0.0 };
+        }
+    }
+}
+
+/// Row-wise softmax in place (shared by the fused grad kernel and the
+/// eval path).
+pub fn softmax_rows(logits: &mut [f32], rows: usize, c: usize) {
+    debug_assert_eq!(logits.len(), rows * c);
+    for r in 0..rows {
+        let row = &mut logits[r * c..(r + 1) * c];
+        let m = row.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+        let mut z = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - m).exp();
+            z += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= z;
+        }
+    }
+}
+
+/// Fused softmax → cross-entropy → mean gradient, in place on the
+/// logits buffer: on return `logits` holds `(softmax(logits) −
+/// onehot(ys)) / rows` and the batch's mean loss is returned.
+/// Operation order matches the scalar reference bit-for-bit.
+pub fn softmax_xent_grad(logits: &mut [f32], ys: &[i32], rows: usize, c: usize) -> f32 {
+    debug_assert_eq!(ys.len(), rows);
+    softmax_rows(logits, rows, c);
+    let mut loss = 0.0f32;
+    for r in 0..rows {
+        let yi = ys[r] as usize;
+        loss += -logits[r * c + yi].max(1e-12).ln();
+        logits[r * c + yi] -= 1.0;
+    }
+    let inv_b = 1.0 / rows as f32;
+    for v in logits.iter_mut() {
+        *v *= inv_b;
+    }
+    loss * inv_b
+}
+
+/// Hidden-layer gradient: `dh[r, j] = mask[j] · (dlog[r, :]·w2[j, :])`
+/// where the unit is kept and its pre-activation was positive, else 0.
+/// Every element is written, so reused scratch needs no pre-clearing.
+/// The dot over `c` accumulates in ascending order (bit-identical to
+/// the scalar reference).
+pub fn backprop_hidden(
+    dlog: &[f32],
+    w2: &[f32],
+    mask: &[f32],
+    pre: &[f32],
+    dh: &mut [f32],
+    rows: usize,
+    h: usize,
+    c: usize,
+) {
+    debug_assert_eq!(dlog.len(), rows * c);
+    debug_assert_eq!(w2.len(), h * c);
+    debug_assert_eq!(mask.len(), h);
+    debug_assert_eq!(pre.len(), rows * h);
+    debug_assert_eq!(dh.len(), rows * h);
+    for r in 0..rows {
+        let dl = &dlog[r * c..(r + 1) * c];
+        let dhrow = &mut dh[r * h..(r + 1) * h];
+        for j in 0..h {
+            if mask[j] == 0.0 || pre[r * h + j] <= 0.0 {
+                dhrow[j] = 0.0;
+                continue;
+            }
+            let wrow = &w2[j * c..(j + 1) * c];
+            let mut acc = 0.0f32;
+            for (a, b) in dl.iter().zip(wrow) {
+                acc += a * b;
+            }
+            dhrow[j] = acc * mask[j];
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// SGD rank update
+// ---------------------------------------------------------------------
+
+/// Const-generic micro-kernel: one block of `B` batch rows starting at
+/// `r0`. Fuses the block's rank-1 contributions into a single pass
+/// over `w`: `w[i, :] -= lr · Σ_{t<B} a[r0+t, i] · g[r0+t, :]`, then
+/// `bias -= lr · Σ_{t<B} g[r0+t, :]`. Rows of `a` that are entirely
+/// zero over the block are skipped (the reference's sparse fast path;
+/// it also keeps fully-dropped units' weights bit-untouched).
+fn rank_update_block<const B: usize>(
+    w: &mut [f32],
+    bias: &mut [f32],
+    a: &[f32],
+    g: &[f32],
+    lr: f32,
+    r0: usize,
+    k: usize,
+    n: usize,
+) {
+    let mut av = [0.0f32; B];
+    for i in 0..k {
+        let mut any = false;
+        for t in 0..B {
+            let v = a[(r0 + t) * k + i];
+            av[t] = v;
+            any |= v != 0.0;
+        }
+        if !any {
+            continue;
+        }
+        let wrow = &mut w[i * n..(i + 1) * n];
+        if B == 1 {
+            // Exactly the scalar reference's op sequence:
+            // w -= (lr · a) · g, one multiply-chain per element.
+            let s = lr * av[0];
+            let grow = &g[r0 * n..(r0 + 1) * n];
+            for (wv, &gv) in wrow.iter_mut().zip(grow) {
+                *wv -= s * gv;
+            }
+        } else {
+            for j in 0..n {
+                let mut acc = 0.0f32;
+                for t in 0..B {
+                    acc += av[t] * g[(r0 + t) * n + j];
+                }
+                wrow[j] -= lr * acc;
+            }
+        }
+    }
+    if B == 1 {
+        let grow = &g[r0 * n..(r0 + 1) * n];
+        for (bv, &gv) in bias.iter_mut().zip(grow) {
+            *bv -= lr * gv;
+        }
+    } else {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for t in 0..B {
+                acc += g[(r0 + t) * n + j];
+            }
+            bias[j] -= lr * acc;
+        }
+    }
+}
+
+/// SGD weight + bias update for one layer: activations `a` `[rows, k]`
+/// against gradients `g` `[rows, n]` into `w` `[k, n]` and `bias`
+/// `[n]`. Batch rows are consumed in power-of-two blocks of at most
+/// `bb` (clamped to [`MAX_BATCH_BLOCK`]); `bb == 1` reproduces the
+/// scalar reference bit-for-bit (see module docs).
+pub fn sgd_rank_update(
+    w: &mut [f32],
+    bias: &mut [f32],
+    a: &[f32],
+    g: &[f32],
+    lr: f32,
+    rows: usize,
+    k: usize,
+    n: usize,
+    bb: usize,
+) {
+    debug_assert_eq!(a.len(), rows * k);
+    debug_assert_eq!(g.len(), rows * n);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(bias.len(), n);
+    let bb = bb.clamp(1, MAX_BATCH_BLOCK);
+    let mut r0 = 0;
+    while r0 < rows {
+        let rem = rows - r0;
+        // Largest power-of-two block ≤ min(bb, remaining): every block
+        // hits a const-generic micro-kernel.
+        let mut blk = 1usize;
+        while blk * 2 <= bb && blk * 2 <= rem {
+            blk *= 2;
+        }
+        match blk {
+            16 => rank_update_block::<16>(w, bias, a, g, lr, r0, k, n),
+            8 => rank_update_block::<8>(w, bias, a, g, lr, r0, k, n),
+            4 => rank_update_block::<4>(w, bias, a, g, lr, r0, k, n),
+            2 => rank_update_block::<2>(w, bias, a, g, lr, r0, k, n),
+            _ => rank_update_block::<1>(w, bias, a, g, lr, r0, k, n),
+        }
+        r0 += blk;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn gauss(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::new(seed);
+        (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn workspace_reuses_buffers() {
+        let mut ws = Workspace::new();
+        let a = ws.take(100);
+        let ptr = a.as_ptr();
+        ws.give(a);
+        let b = ws.take(80); // smaller fits in the same buffer
+        assert_eq!(b.as_ptr(), ptr);
+        assert_eq!(b.len(), 80);
+        assert!(b.iter().all(|&v| v == 0.0));
+        ws.give(b);
+        assert_eq!(ws.free_buffers(), 1);
+    }
+
+    #[test]
+    fn workspace_pool_roundtrip() {
+        let pool = WorkspacePool::new();
+        let mut ws = pool.checkout();
+        ws.give(ws.take(8));
+        pool.restore(ws);
+        assert_eq!(pool.idle(), 1);
+        let ws2 = pool.checkout();
+        assert_eq!(ws2.free_buffers(), 1);
+        assert_eq!(pool.idle(), 0);
+    }
+
+    #[test]
+    fn gemm_bias_matches_naive_for_all_blocks() {
+        let (rows, k, n) = (5, 7, 6);
+        let x = gauss(rows * k, 1);
+        let w = gauss(k * n, 2);
+        let bias = gauss(n, 3);
+        let mut naive = vec![0.0f32; rows * n];
+        for r in 0..rows {
+            for j in 0..n {
+                let mut acc = bias[j];
+                for i in 0..k {
+                    acc += x[r * k + i] * w[i * n + j];
+                }
+                naive[r * n + j] = acc;
+            }
+        }
+        for bb in [1, 2, 3, 8] {
+            let mut out = vec![0.0f32; rows * n];
+            gemm_bias(&x, &w, &bias, &mut out, rows, k, n, bb);
+            for (a, b) in out.iter().zip(&naive) {
+                assert!((a - b).abs() < 1e-5, "bb={bb}: {a} vs {b}");
+            }
+        }
+        // Identical bits across block sizes (k-order never changes).
+        let mut o1 = vec![0.0f32; rows * n];
+        let mut o8 = vec![0.0f32; rows * n];
+        gemm_bias(&x, &w, &bias, &mut o1, rows, k, n, 1);
+        gemm_bias(&x, &w, &bias, &mut o8, rows, k, n, 8);
+        for (a, b) in o1.iter().zip(&o8) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn softmax_grad_sums_to_zero_rows() {
+        let (rows, c) = (4, 5);
+        let mut logits = gauss(rows * c, 4);
+        let ys = vec![0i32, 3, 1, 4];
+        let loss = softmax_xent_grad(&mut logits, &ys, rows, c);
+        assert!(loss > 0.0 && loss.is_finite());
+        for r in 0..rows {
+            let s: f32 = logits[r * c..(r + 1) * c].iter().sum();
+            assert!(s.abs() < 1e-6, "row {r} grad sums to {s}");
+        }
+    }
+
+    #[test]
+    fn rank_update_block_one_equals_sequential_rank_ones() {
+        let (rows, k, n) = (6, 4, 3);
+        let a = gauss(rows * k, 5);
+        let g = gauss(rows * n, 6);
+        let w0 = gauss(k * n, 7);
+        let b0 = gauss(n, 8);
+        // Reference: per-sample updates, the scalar loop's order.
+        let mut wr = w0.clone();
+        let mut br = b0.clone();
+        for r in 0..rows {
+            for i in 0..k {
+                let av = a[r * k + i];
+                if av != 0.0 {
+                    for j in 0..n {
+                        wr[i * n + j] -= 0.1 * av * g[r * n + j];
+                    }
+                }
+            }
+            for j in 0..n {
+                br[j] -= 0.1 * g[r * n + j];
+            }
+        }
+        let mut w = w0.clone();
+        let mut b = b0.clone();
+        sgd_rank_update(&mut w, &mut b, &a, &g, 0.1, rows, k, n, 1);
+        for (x, y) in w.iter().zip(&wr) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        for (x, y) in b.iter().zip(&br) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        // Blocked: close but not necessarily bit-equal.
+        let mut wb = w0.clone();
+        let mut bb_ = b0.clone();
+        sgd_rank_update(&mut wb, &mut bb_, &a, &g, 0.1, rows, k, n, 8);
+        let err = crate::tensor::rel_l2_error(&wb, &wr);
+        assert!(err < 1e-5, "blocked update drifted: {err}");
+    }
+
+    #[test]
+    fn rank_update_skips_all_zero_activation_rows() {
+        let (rows, k, n) = (4, 3, 2);
+        let mut a = gauss(rows * k, 9);
+        for r in 0..rows {
+            a[r * k + 1] = 0.0; // activation column 1 dead in every row
+        }
+        let g = gauss(rows * n, 10);
+        let w0 = gauss(k * n, 11);
+        let b0 = gauss(n, 12);
+        for bb in [1, 4] {
+            let mut w = w0.clone();
+            let mut b = b0.clone();
+            sgd_rank_update(&mut w, &mut b, &a, &g, 0.2, rows, k, n, bb);
+            for j in 0..n {
+                assert_eq!(w[n + j].to_bits(), w0[n + j].to_bits(), "bb={bb}");
+            }
+        }
+    }
+}

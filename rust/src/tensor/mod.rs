@@ -5,6 +5,13 @@
 //! does per round — aggregation, delta computation, compression,
 //! masking — is a pass over flat arrays, so this module keeps the ops
 //! simple, allocation-conscious and autovectorizer-friendly.
+//!
+//! The compute-heavy training kernels (blocked GEMM, fused epilogues,
+//! SGD rank updates) and the zero-allocation [`kernels::Workspace`]
+//! arena live in [`kernels`]; see `rust/src/tensor/README.md` for the
+//! layer's design notes.
+
+pub mod kernels;
 
 /// Shaped view metadata (shapes live in the manifest; data stays flat).
 #[derive(Clone, Debug, PartialEq)]

@@ -1,0 +1,80 @@
+//! Counting global allocator for zero-allocation proofs.
+//!
+//! The hot-path contract of this repo — `train_epoch` and plan-based
+//! pack/unpack allocate nothing after warm-up — is enforced by tests
+//! and reported by benches. Both need the same instrument: a
+//! `GlobalAlloc` wrapper around [`System`] that counts allocation
+//! events while armed.
+//!
+//! The library itself never installs an allocator; binaries that want
+//! counting opt in:
+//!
+//! ```ignore
+//! use afd::util::alloc_count::{self, CountingAllocator};
+//!
+//! #[global_allocator]
+//! static ALLOC: CountingAllocator = CountingAllocator;
+//!
+//! // ... warm up ...
+//! alloc_count::arm();
+//! hot_path();
+//! assert_eq!(alloc_count::disarm(), 0);
+//! ```
+//!
+//! Counting is process-global (any thread's allocations count while
+//! armed), so measure with concurrent work quiesced — the zero-alloc
+//! test lives alone in its own integration-test binary for exactly
+//! this reason.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+/// System allocator that counts `alloc`/`realloc` events while armed.
+pub struct CountingAllocator;
+
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if ARMED.load(Ordering::Relaxed) {
+            ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        if ARMED.load(Ordering::Relaxed) {
+            ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if ARMED.load(Ordering::Relaxed) {
+            ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+/// Reset the counter and start counting allocation events.
+pub fn arm() {
+    ALLOCATIONS.store(0, Ordering::SeqCst);
+    ARMED.store(true, Ordering::SeqCst);
+}
+
+/// Stop counting; returns the number of events since [`arm`].
+pub fn disarm() -> u64 {
+    ARMED.store(false, Ordering::SeqCst);
+    ALLOCATIONS.load(Ordering::SeqCst)
+}
+
+/// Current count (armed or not).
+pub fn allocations() -> u64 {
+    ALLOCATIONS.load(Ordering::SeqCst)
+}

@@ -3,6 +3,7 @@
 //! crates — rand, serde, clap, tokio, rayon, criterion, proptest — are
 //! replaced by the minimal, tested implementations in this module).
 
+pub mod alloc_count;
 pub mod cli;
 pub mod json;
 pub mod logging;

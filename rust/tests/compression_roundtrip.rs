@@ -123,7 +123,7 @@ fn rust_quant_matches_pallas_artifact() {
     let pallas_out = afd::runtime::literal::to_f32_vec(&res).unwrap();
 
     // Rust path (block size must match the artifact's).
-    let codec = HadamardQuant8 { block: k.hadamard_block };
+    let codec = HadamardQuant8::new(k.hadamard_block);
     let rust_out = codec.decode(&codec.encode(&xs, 77), 77);
 
     let pallas_err = afd::tensor::rel_l2_error(&pallas_out, &xs) as f64;

@@ -1,0 +1,291 @@
+//! Equivalence suite for the PR's two hot-path rewrites:
+//!
+//! * the kernel-based `train_epoch` (blocked GEMM + fused epilogues +
+//!   SGD rank updates) against the retained scalar reference —
+//!   **bit-for-bit** at batch-block size 1 (identical accumulation
+//!   order), within 1e-5 relative error for blocked configs;
+//! * `PackPlan`-based pack/unpack/mask against the legacy
+//!   `pack_values`/`unpack_values`/`coordinate_mask` — exact identity
+//!   on random sub-models, including repeat/fixed axis packing.
+
+use afd::model::manifest::{AxisPack, DType, MaskGroup, ParamSeg, VariantSpec};
+use afd::model::packing::{self, PackPlan};
+use afd::model::submodel::SubModel;
+use afd::runtime::native::{mlp_spec, NativeMlp};
+use afd::runtime::{BatchInput, EpochData, ModelRuntime};
+use afd::tensor::kernels::Workspace;
+use afd::util::rng::Pcg64;
+
+fn random_epoch(spec: &VariantSpec, seed: u64) -> EpochData {
+    let mut rng = Pcg64::new(seed);
+    let d = spec.input_shape[0];
+    let n = spec.num_batches * spec.batch_size;
+    let mut xs = vec![0.0f32; n * d];
+    for v in xs.iter_mut() {
+        // Mix of zeros (sparse fast path) and dense values.
+        if rng.next_f64() < 0.3 {
+            *v = 0.0;
+        } else {
+            *v = rng.normal_f32(0.0, 1.0);
+        }
+    }
+    let ys: Vec<i32> = (0..n)
+        .map(|_| rng.below(spec.classes as u64) as i32)
+        .collect();
+    EpochData {
+        xs: BatchInput::F32(xs),
+        ys,
+    }
+}
+
+fn partial_mask(h: usize, drop_every: usize) -> Vec<Vec<f32>> {
+    let mask: Vec<f32> = (0..h)
+        .map(|j| if j % drop_every == 0 { 0.0 } else { 1.0 })
+        .collect();
+    vec![mask]
+}
+
+/// Block size 1: the kernel path must reproduce the scalar reference
+/// bit-for-bit — same accumulation order, same zero-skips, same update
+/// sequence — across masks and epochs.
+#[test]
+fn block_one_is_bit_identical_to_scalar_reference() {
+    // Odd sizes exercise partial tail blocks everywhere.
+    let spec = mlp_spec("eq", 33, 17, 7, 5, 3, 0.15);
+    let mlp = NativeMlp::new(spec.clone());
+    let masks = partial_mask(17, 4);
+    let mut p_ref = mlp.init_params(42);
+    let mut p_ker = p_ref.clone();
+    let mut ws = Workspace::new();
+    for epoch in 0..3 {
+        let data = random_epoch(&spec, 100 + epoch);
+        let out = mlp
+            .train_epoch_scalar(&p_ref, &masks, &data, 0.15)
+            .unwrap();
+        let loss_ker = mlp
+            .train_epoch_with_block(&mut ws, &mut p_ker, &masks, &data, 0.15, 1)
+            .unwrap();
+        assert_eq!(
+            out.mean_loss.to_bits(),
+            loss_ker.to_bits(),
+            "epoch {epoch} loss"
+        );
+        p_ref = out.params;
+        for (i, (a, b)) in p_ref.iter().zip(&p_ker).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "epoch {epoch} param {i}: {a} vs {b}"
+            );
+        }
+    }
+}
+
+/// Blocked configs (including the default block) stay within 1e-5
+/// relative L2 of the scalar reference over multiple epochs.
+#[test]
+fn blocked_configs_match_scalar_reference_within_tolerance() {
+    let spec = mlp_spec("eq", 20, 24, 5, 12, 4, 0.1);
+    let mlp = NativeMlp::new(spec.clone());
+    let masks = partial_mask(24, 5);
+    let init = mlp.init_params(7);
+    for bb in [2usize, 4, 8, 16] {
+        let mut p_ref = init.clone();
+        let mut p_ker = init.clone();
+        let mut ws = Workspace::new();
+        for epoch in 0..3 {
+            let data = random_epoch(&spec, 500 + epoch);
+            let out = mlp.train_epoch_scalar(&p_ref, &masks, &data, 0.1).unwrap();
+            let loss_ker = mlp
+                .train_epoch_with_block(&mut ws, &mut p_ker, &masks, &data, 0.1, bb)
+                .unwrap();
+            p_ref = out.params;
+            assert!(
+                (out.mean_loss - loss_ker).abs() <= 1e-5 * out.mean_loss.abs().max(1.0),
+                "bb={bb} epoch {epoch}: loss {} vs {loss_ker}",
+                out.mean_loss
+            );
+        }
+        let err = afd::tensor::rel_l2_error(&p_ker, &p_ref);
+        assert!(err <= 1e-5, "bb={bb}: rel err {err}");
+    }
+}
+
+/// The trait entry points ride the kernel path: `train_epoch` (the
+/// allocating API) and `train_epoch_in` (the workspace API) must agree
+/// exactly with `train_epoch_with_block` at the default block.
+#[test]
+fn trait_entry_points_agree_with_explicit_block() {
+    let spec = mlp_spec("eq", 12, 10, 4, 6, 2, 0.2);
+    let mlp = NativeMlp::new(spec.clone());
+    let masks = partial_mask(10, 3);
+    let init = mlp.init_params(3);
+    let data = random_epoch(&spec, 9);
+
+    let out = mlp.train_epoch(&init, &masks, &data, 0.2).unwrap();
+
+    let mut ws = Workspace::new();
+    let mut p_in = init.clone();
+    let loss_in = mlp
+        .train_epoch_in(&mut ws, &mut p_in, &masks, &data, 0.2)
+        .unwrap();
+
+    assert_eq!(out.mean_loss.to_bits(), loss_in.to_bits());
+    for (a, b) in out.params.iter().zip(&p_in) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
+
+/// Dropped units must stay bit-untouched through the kernel path at
+/// every block size (the masking contract the whole coordinator relies
+/// on).
+#[test]
+fn blocked_updates_keep_dropped_units_untouched() {
+    let spec = mlp_spec("eq", 9, 11, 3, 7, 2, 0.1);
+    let mlp = NativeMlp::new(spec.clone());
+    let (d, h, c) = (9usize, 11usize, 3usize);
+    let dropped = [0usize, 5, 10];
+    let mut mask = vec![1.0f32; h];
+    for &j in &dropped {
+        mask[j] = 0.0;
+    }
+    let init = mlp.init_params(5);
+    let data = random_epoch(&spec, 77);
+    for bb in [1usize, 4, 8] {
+        let mut p = init.clone();
+        let mut ws = Workspace::new();
+        mlp.train_epoch_with_block(&mut ws, &mut p, &[mask.clone()], &data, 0.1, bb)
+            .unwrap();
+        for &j in &dropped {
+            for i in 0..d {
+                assert_eq!(p[i * h + j], init[i * h + j], "bb={bb} w1[{i},{j}]");
+            }
+            assert_eq!(p[d * h + j], init[d * h + j], "bb={bb} b1[{j}]");
+            for k in 0..c {
+                let off = d * h + h + j * c + k;
+                assert_eq!(p[off], init[off], "bb={bb} w2[{j},{k}]");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// PackPlan vs legacy packing
+// ---------------------------------------------------------------------
+
+/// A spec with repeat/fixed axis packing (LSTM-style recurrent rows) —
+/// the tiling cases `mlp_spec` never exercises.
+fn lstmish_spec() -> VariantSpec {
+    let packed_rows = AxisPack {
+        group: "u".to_string(),
+        count: 6,
+        repeat: 4,
+        fixed: 2,
+    };
+    let packed_cols = AxisPack {
+        group: "u".to_string(),
+        count: 6,
+        repeat: 1,
+        fixed: 0,
+    };
+    let params = vec![
+        ParamSeg {
+            name: "wr".into(),
+            shape: vec![26, 3],
+            size: 78,
+            offset: 0,
+            trainable: true,
+            transmit: true,
+            rows: Some(packed_rows),
+            cols: None,
+            flops_per_sample: 10.0,
+        },
+        ParamSeg {
+            name: "b".into(),
+            shape: vec![6],
+            size: 6,
+            offset: 78,
+            trainable: true,
+            transmit: true,
+            rows: None,
+            cols: Some(packed_cols),
+            flops_per_sample: 0.0,
+        },
+        ParamSeg {
+            name: "frozen".into(),
+            shape: vec![4],
+            size: 4,
+            offset: 84,
+            trainable: false,
+            transmit: false,
+            rows: None,
+            cols: None,
+            flops_per_sample: 0.0,
+        },
+    ];
+    VariantSpec {
+        name: "lstmish".to_string(),
+        kind: "lstm".to_string(),
+        dataset: "synthetic".to_string(),
+        lr: 0.1,
+        batch_size: 1,
+        num_batches: 1,
+        classes: 2,
+        vocab: 0,
+        input_shape: vec![1],
+        input_dtype: DType::F32,
+        num_params: 88,
+        params,
+        mask_groups: vec![MaskGroup {
+            name: "u".to_string(),
+            size: 6,
+            kind: "lstm_units".to_string(),
+        }],
+        train_hlo: String::new(),
+        eval_hlo: String::new(),
+        init_params: String::new(),
+        train_args: vec![],
+        train_outputs: vec![],
+        eval_args: vec![],
+        eval_outputs: vec![],
+    }
+}
+
+fn assert_plan_matches_legacy(spec: &VariantSpec, sm: &SubModel, full: &[f32]) {
+    let plan = PackPlan::build(spec, sm);
+    assert_eq!(plan.packed_len(), packing::packed_model_elems(spec, sm));
+    assert_eq!(plan.wire_bytes(), packing::submodel_wire_bytes(spec, sm));
+
+    let legacy_packed = packing::pack_values(spec, full, sm);
+    let mut plan_packed = Vec::new();
+    plan.pack_into(full, &mut plan_packed);
+    assert_eq!(plan_packed, legacy_packed);
+
+    let mut legacy_full = vec![-7.0f32; spec.num_params];
+    let mut plan_full = vec![-7.0f32; spec.num_params];
+    packing::unpack_values(spec, &legacy_packed, sm, &mut legacy_full);
+    plan.unpack_from(&plan_packed, &mut plan_full);
+    assert_eq!(plan_full, legacy_full);
+
+    let mut cm = vec![false; spec.num_params];
+    plan.mark_coord_mask(&mut cm);
+    assert_eq!(cm, packing::coordinate_mask(spec, sm));
+}
+
+#[test]
+fn pack_plan_matches_legacy_on_random_submodels() {
+    let mut rng = Pcg64::new(2024);
+    let mlp = mlp_spec("pp", 14, 12, 5, 4, 2, 0.1);
+    let lstm = lstmish_spec();
+    for spec in [&mlp, &lstm] {
+        let full: Vec<f32> = (0..spec.num_params).map(|i| i as f32).collect();
+        let g = spec.mask_groups[0].size;
+        for _ in 0..20 {
+            let k = 1 + rng.below(g as u64) as usize;
+            let kept = vec![rng.sample_indices(g, k)];
+            let sm = SubModel::from_kept_indices(spec, &kept);
+            assert_plan_matches_legacy(spec, &sm, &full);
+        }
+        assert_plan_matches_legacy(spec, &SubModel::full(spec), &full);
+    }
+}

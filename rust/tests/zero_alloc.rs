@@ -1,0 +1,77 @@
+//! Zero-allocation proof for the hot paths: with a warmed
+//! [`Workspace`], a full `train_epoch` and the plan-based
+//! pack/unpack/mask perform **no heap allocations** — counted by a
+//! real `GlobalAlloc` wrapper, not inferred.
+//!
+//! This test lives alone in its own integration-test binary because
+//! the counting allocator is process-global: nothing else may allocate
+//! while the counter is armed.
+
+use afd::model::packing::PackPlan;
+use afd::model::submodel::SubModel;
+use afd::runtime::native::{mlp_spec, NativeMlp};
+use afd::runtime::{BatchInput, EpochData, ModelRuntime};
+use afd::tensor::kernels::Workspace;
+use afd::util::alloc_count::{self, CountingAllocator};
+use afd::util::rng::Pcg64;
+
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
+
+#[test]
+fn train_epoch_and_plan_packing_allocate_nothing_after_warmup() {
+    // ---- setup (allocates freely) -----------------------------------
+    let spec = mlp_spec("z", 24, 16, 6, 8, 3, 0.1);
+    let mlp = NativeMlp::new(spec.clone());
+    let mut params = mlp.init_params(1);
+    let mut rng = Pcg64::new(2);
+    let n_samples = spec.num_batches * spec.batch_size;
+    let xs: Vec<f32> = (0..n_samples * 24).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let ys: Vec<i32> = (0..n_samples).map(|_| rng.below(6) as i32).collect();
+    let data = EpochData {
+        xs: BatchInput::F32(xs),
+        ys,
+    };
+    let sm = SubModel::from_kept_indices(&spec, &[vec![0, 2, 3, 5, 8, 9, 11, 14, 15]]);
+    let masks = sm.masks_f32();
+    let mut ws = Workspace::new();
+
+    // Warm-up: first call may allocate workspace buffers.
+    mlp.train_epoch_in(&mut ws, &mut params, &masks, &data, 0.1)
+        .unwrap();
+
+    // ---- train_epoch under the counter ------------------------------
+    alloc_count::arm();
+    mlp.train_epoch_in(&mut ws, &mut params, &masks, &data, 0.1)
+        .unwrap();
+    let train_allocs = alloc_count::disarm();
+    assert_eq!(
+        train_allocs, 0,
+        "train_epoch made {train_allocs} allocations after warm-up"
+    );
+
+    // ---- plan-based pack/unpack/mask under the counter --------------
+    let plan = PackPlan::build(&spec, &sm);
+    let mut packed = Vec::new();
+    let mut full = params.clone();
+    let mut cmask = vec![false; spec.num_params];
+    plan.pack_into(&params, &mut packed); // warm the output buffer
+
+    alloc_count::arm();
+    plan.pack_into(&params, &mut packed);
+    plan.unpack_from(&packed, &mut full);
+    plan.mark_coord_mask(&mut cmask);
+    let pack_allocs = alloc_count::disarm();
+    assert_eq!(
+        pack_allocs, 0,
+        "plan-based packing made {pack_allocs} allocations after warm-up"
+    );
+
+    // Sanity: the counter itself works (an allocation is observed).
+    alloc_count::arm();
+    let v: Vec<u8> = Vec::with_capacity(1024);
+    std::hint::black_box(&v);
+    let observed = alloc_count::disarm();
+    drop(v);
+    assert!(observed >= 1, "counter failed to observe an allocation");
+}
