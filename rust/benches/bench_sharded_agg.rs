@@ -1,0 +1,142 @@
+//! Sharded-aggregation before/after harness → `BENCH_agg.json`.
+//!
+//! The "before" side is the retained single-threaded [`FedAvg`]
+//! reference; the "after" side is [`ShardedFedAvg`] at several shard
+//! counts, with both mask-based and pack-plan (contiguous-run) adds —
+//! all measured in the same run on the same machine, so the recorded
+//! speedups are machine-independent ratios. The payload is a
+//! femnist-large-like ~1.18M-parameter MLP spec with a 16-client
+//! cohort, the regime where aggregation is worth sharding.
+
+use std::sync::Arc;
+
+use afd::aggregation::{FedAvg, ShardedFedAvg};
+use afd::bench::Bencher;
+use afd::model::packing::{coordinate_mask, PackPlan};
+use afd::model::submodel::SubModel;
+use afd::runtime::native::mlp_spec;
+use afd::util::json::Json;
+use afd::util::pool::LazyPool;
+use afd::util::rng::Pcg64;
+
+fn main() {
+    let mut b = Bencher::default();
+    let mut rng = Pcg64::new(0);
+    let pool = Arc::new(LazyPool::default_for_machine());
+
+    // d=512 h=2048 c=64 ⇒ 512·2048 + 2048 + 2048·64 + 64 ≈ 1.18M params.
+    let spec = mlp_spec("agg_bench", 512, 2048, 64, 10, 5, 0.1);
+    let n = spec.num_params;
+    let clients = 16usize;
+    let sm = SubModel::from_kept_indices(&spec, &[rng.sample_indices(2048, 1536)]);
+    let plan = PackPlan::build(&spec, &sm);
+    let cm = coordinate_mask(&spec, &sm);
+    let values: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 0.1)).collect();
+    let base: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 0.1)).collect();
+    let bytes = (clients * 4 * n) as u64;
+
+    println!(
+        "-- aggregation: {n} params x {clients} clients (keep 1536/2048), pool width {} --",
+        pool.size()
+    );
+
+    let mut reference = FedAvg::new(n);
+    let r_ref = b.run(
+        "fedavg reference: add_masked x16 + finalize",
+        Some(bytes),
+        || {
+            reference.reset();
+            for _ in 0..clients {
+                reference.add_masked(&values, &cm, 50.0);
+            }
+            std::hint::black_box(reference.finalize(&base));
+        },
+    );
+
+    let mut shard_counts = vec![1usize, 2, 4, pool.size().max(1)];
+    shard_counts.sort_unstable();
+    shard_counts.dedup();
+
+    let mut sharded_rows = Vec::new();
+    let mut best_masked = f64::INFINITY;
+    let mut best_planned = f64::INFINITY;
+    let mut best_shards = 0usize;
+    for &shards in &shard_counts {
+        let mut agg = ShardedFedAvg::new(n, shards, Arc::clone(&pool));
+        let r_mask = b.run(
+            &format!("sharded x{shards}: add_masked x16 + finalize"),
+            Some(bytes),
+            || {
+                agg.reset();
+                for _ in 0..clients {
+                    agg.add_masked(&values, &cm, 50.0);
+                }
+                std::hint::black_box(agg.finalize(&base));
+            },
+        );
+        let r_plan = b.run(
+            &format!("sharded x{shards}: add_planned x16 + finalize"),
+            Some(bytes),
+            || {
+                agg.reset();
+                for _ in 0..clients {
+                    agg.add_planned(&values, &plan, 50.0);
+                }
+                std::hint::black_box(agg.finalize(&base));
+            },
+        );
+        if r_mask.median_ns < best_masked {
+            best_masked = r_mask.median_ns;
+            best_shards = shards;
+        }
+        best_planned = best_planned.min(r_plan.median_ns);
+        let mut row = Json::obj();
+        row.set("shards", Json::Num(shards as f64));
+        row.set("add_masked_finalize_ns", Json::Num(r_mask.median_ns));
+        row.set("add_planned_finalize_ns", Json::Num(r_plan.median_ns));
+        sharded_rows.push(row);
+    }
+
+    let mut doc = Json::obj();
+    doc.set("bench", Json::Str("bench_sharded_agg".into()));
+    doc.set(
+        "note",
+        Json::Str(
+            "Before/after harness: `reference` is the retained single-threaded FedAvg \
+             (add_masked x16 + finalize); `sharded` is ShardedFedAvg at each shard \
+             count, mask-based and pack-plan (contiguous-run) adds, same machine, \
+             same run. Regenerate with `cargo bench --bench bench_sharded_agg`."
+                .into(),
+        ),
+    );
+    doc.set(
+        "config",
+        Json::Str(format!(
+            "d=512 h=2048 c=64 ({n} params), {clients} clients, keep 1536/2048, \
+             pool width {}",
+            pool.size()
+        )),
+    );
+    let mut reference_j = Json::obj();
+    reference_j.set("add_masked_finalize_ns", Json::Num(r_ref.median_ns));
+    doc.set("reference", reference_j);
+    doc.set("sharded", Json::Arr(sharded_rows));
+    let mut speedup = Json::obj();
+    speedup.set("best_masked", Json::Num(r_ref.median_ns / best_masked));
+    speedup.set("best_planned", Json::Num(r_ref.median_ns / best_planned));
+    speedup.set("best_shards", Json::Num(best_shards as f64));
+    doc.set("speedup", speedup);
+    doc.set("all_results", b.to_json());
+
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_agg.json");
+    std::fs::write(&path, doc.to_string_pretty()).expect("write BENCH_agg.json");
+    println!("\nwrote {}", path.display());
+    println!(
+        "speedup vs reference: masked {:.2}x (at {} shards), planned {:.2}x",
+        r_ref.median_ns / best_masked,
+        best_shards,
+        r_ref.median_ns / best_planned
+    );
+}

@@ -6,6 +6,20 @@
 //! coordinate** over the clients that hold it (Fig. 1 step 7 "recovered
 //! in its original shape ... aggregated"); coordinates no selected
 //! client held keep their previous global value.
+//!
+//! Two aggregators coexist (see `README.md` in this directory):
+//!
+//! * [`FedAvg`] — the original single-threaded pass over the flat
+//!   parameter vector, retained as the bit-exactness **reference** (it
+//!   also still serves `Experiment::step_serial_reference`);
+//! * [`ShardedFedAvg`] — the production path: the vector partitioned
+//!   into contiguous shards, adds and finalize fanned out across the
+//!   worker pool, output bit-identical to [`FedAvg`] for every shard
+//!   count (enforced by `rust/tests/agg_sharding.rs`).
+
+pub mod sharded;
+
+pub use sharded::{ShardedFedAvg, ShardingConfig};
 
 /// Accumulates one round of client updates.
 pub struct FedAvg {
@@ -29,8 +43,16 @@ impl FedAvg {
     /// Add a client's model restricted to its sub-model coordinates.
     /// `n_c` is the client's sample count (the FedAvg weight).
     pub fn add_masked(&mut self, values: &[f32], coord_mask: &[bool], n_c: f64) {
-        assert_eq!(values.len(), self.accum.len());
-        assert_eq!(coord_mask.len(), self.accum.len());
+        assert_eq!(
+            values.len(),
+            self.accum.len(),
+            "add_masked: values buffer length != accum length"
+        );
+        assert_eq!(
+            coord_mask.len(),
+            self.accum.len(),
+            "add_masked: coord_mask buffer length != accum length"
+        );
         for i in 0..values.len() {
             if coord_mask[i] {
                 self.accum[i] += n_c * values[i] as f64;
@@ -41,7 +63,11 @@ impl FedAvg {
 
     /// Add a full-model client update (the no-dropout baselines).
     pub fn add_full(&mut self, values: &[f32], n_c: f64) {
-        assert_eq!(values.len(), self.accum.len());
+        assert_eq!(
+            values.len(),
+            self.accum.len(),
+            "add_full: values buffer length != accum length"
+        );
         for i in 0..values.len() {
             self.accum[i] += n_c * values[i] as f64;
             self.weight[i] += n_c;
@@ -50,7 +76,11 @@ impl FedAvg {
 
     /// Finalize: coordinates nobody updated keep `base`'s value.
     pub fn finalize(&self, base: &[f32]) -> Vec<f32> {
-        assert_eq!(base.len(), self.accum.len());
+        assert_eq!(
+            base.len(),
+            self.accum.len(),
+            "finalize: base buffer length != accum length"
+        );
         (0..base.len())
             .map(|i| {
                 if self.weight[i] > 0.0 {

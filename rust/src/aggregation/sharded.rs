@@ -1,0 +1,493 @@
+//! Sharded parallel FedAvg: the flat parameter vector partitioned into
+//! contiguous shards, each owned by one `(accum, weight)` slice pair and
+//! processed on the worker pool.
+//!
+//! ## Shard layout
+//!
+//! Shard `i` of `k` owns the contiguous coordinate range
+//! `[i·n/k, (i+1)·n/k)` (balanced split: shard lengths differ by at most
+//! one; shards beyond `n` are empty). Shards are disjoint and cover the
+//! whole vector, so every coordinate has exactly one owner.
+//!
+//! ## Bit-identity contract
+//!
+//! [`ShardedFedAvg`] must produce output **bit-identical** to the
+//! retained single-threaded [`FedAvg`](crate::aggregation::FedAvg)
+//! reference for *every* shard count (including 1 and counts larger
+//! than the parameter count). This holds because each coordinate's
+//! accumulator is independent: `accum[i]`/`weight[i]` depend only on
+//! the sequence of client adds touching coordinate `i`, which every
+//! shard replays in the caller's add order. No cross-coordinate
+//! arithmetic happens anywhere, so the partition cannot reorder any
+//! floating-point sum. The contract is enforced property-style by
+//! `rust/tests/agg_sharding.rs` and end-to-end by the Sync-vs-serial
+//! bit-identity test in `rust/tests/sched_policies.rs`.
+//!
+//! ## Disjoint-slice ownership rule
+//!
+//! During a fan-out, a worker may touch (a) its own shard's `accum` /
+//! `weight` slices mutably, (b) the caller's input buffers read-only,
+//! and (c) for `finalize`, the output range matching its own shard.
+//! Input/output borrows are smuggled into the pool's `'static` jobs
+//! through lifetime-erased views ([`SliceView`] / [`SliceViewMut`]);
+//! this is sound because [`Pool::map`](crate::util::pool::Pool::map)
+//! joins every job before returning (the manual scoped-threads
+//! argument — see the SAFETY notes below).
+
+use std::sync::Arc;
+
+use crate::model::packing::PackPlan;
+use crate::util::pool::LazyPool;
+
+/// Aggregation-sharding configuration (experiment-config subtree).
+#[derive(Clone, Debug)]
+pub struct ShardingConfig {
+    /// Shard count: `0` = auto — one shard per pool worker, capped so
+    /// every shard keeps at least `min_shard_params` coordinates;
+    /// `k ≥ 1` = exactly `k` shards (clamped to the parameter count by
+    /// [`ShardingConfig::resolve`]).
+    pub shard_count: usize,
+    /// Auto mode: lower bound on coordinates per shard (below this the
+    /// fan-out overhead dominates the per-coordinate work).
+    pub min_shard_params: usize,
+}
+
+impl Default for ShardingConfig {
+    fn default() -> Self {
+        ShardingConfig {
+            shard_count: 0,
+            min_shard_params: 16_384,
+        }
+    }
+}
+
+impl ShardingConfig {
+    /// Resolve the effective shard count for a model of `num_params`
+    /// aggregated on a pool of `pool_width` workers. Explicit counts
+    /// are clamped to `num_params` (surplus shards would be empty —
+    /// semantics-preserving, and it keeps a typo'd `--shards 1e8` from
+    /// allocating and dispatching millions of no-op shard jobs).
+    pub fn resolve(&self, num_params: usize, pool_width: usize) -> usize {
+        if self.shard_count > 0 {
+            return self.shard_count.min(num_params.max(1));
+        }
+        let cap = num_params.div_ceil(self.min_shard_params.max(1)).max(1);
+        pool_width.clamp(1, cap)
+    }
+}
+
+/// Lifetime-erased read-only view of a caller-borrowed slice, used to
+/// hand borrowed inputs to the pool's `'static` jobs.
+///
+/// Soundness contract: a view may only be dereferenced inside the
+/// `Pool::map` call it was built for. `Pool::map` returns only after
+/// every job has finished (each job reports completion even when it
+/// panics), so the borrow the view was created from strictly outlives
+/// every dereference — the classic scoped-threads argument, done by
+/// hand because the offline `Pool` requires `'static` jobs.
+struct SliceView<T> {
+    ptr: *const T,
+    len: usize,
+}
+
+impl<T> Clone for SliceView<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+
+impl<T> Copy for SliceView<T> {}
+
+// SAFETY: the view only permits shared (&[T]) access, and the
+// soundness contract above guarantees the underlying borrow is live
+// for every dereference.
+unsafe impl<T: Sync> Send for SliceView<T> {}
+unsafe impl<T: Sync> Sync for SliceView<T> {}
+
+impl<T> SliceView<T> {
+    fn new(s: &[T]) -> SliceView<T> {
+        SliceView {
+            ptr: s.as_ptr(),
+            len: s.len(),
+        }
+    }
+
+    /// SAFETY: callers must uphold the view's soundness contract (only
+    /// dereference inside the fan-out the view was built for).
+    unsafe fn get<'a>(self) -> &'a [T] {
+        std::slice::from_raw_parts(self.ptr, self.len)
+    }
+}
+
+/// Lifetime-erased mutable view; each shard materializes only its own
+/// disjoint sub-range, so no two `&mut` slices ever overlap.
+struct SliceViewMut<T> {
+    ptr: *mut T,
+    len: usize,
+}
+
+impl<T> Clone for SliceViewMut<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+
+impl<T> Copy for SliceViewMut<T> {}
+
+// SAFETY: see SliceView; additionally, callers must only materialize
+// pairwise-disjoint sub-ranges (the shard partition guarantees this).
+unsafe impl<T: Send> Send for SliceViewMut<T> {}
+unsafe impl<T: Send> Sync for SliceViewMut<T> {}
+
+impl<T> SliceViewMut<T> {
+    fn new(s: &mut [T]) -> SliceViewMut<T> {
+        SliceViewMut {
+            ptr: s.as_mut_ptr(),
+            len: s.len(),
+        }
+    }
+
+    /// SAFETY: callers must uphold the view's soundness contract and
+    /// must never materialize overlapping ranges across live jobs.
+    unsafe fn range_mut<'a>(self, start: usize, len: usize) -> &'a mut [T] {
+        debug_assert!(start + len <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(start), len)
+    }
+}
+
+/// One shard: a contiguous coordinate range and its private
+/// accumulator/weight slices. All methods read full-length input
+/// buffers and index them by absolute coordinate, writing only the
+/// shard's own state.
+struct Shard {
+    /// First flat coordinate this shard owns.
+    start: usize,
+    accum: Vec<f64>,
+    weight: Vec<f64>,
+}
+
+impl Shard {
+    fn len(&self) -> usize {
+        self.accum.len()
+    }
+
+    fn reset(&mut self) {
+        self.accum.fill(0.0);
+        self.weight.fill(0.0);
+    }
+
+    fn add_masked(&mut self, values: &[f32], coord_mask: &[bool], n_c: f64) {
+        let s = self.start;
+        for i in 0..self.len() {
+            if coord_mask[s + i] {
+                self.accum[i] += n_c * values[s + i] as f64;
+                self.weight[i] += n_c;
+            }
+        }
+    }
+
+    fn add_full(&mut self, values: &[f32], n_c: f64) {
+        let s = self.start;
+        for i in 0..self.len() {
+            self.accum[i] += n_c * values[s + i] as f64;
+            self.weight[i] += n_c;
+        }
+    }
+
+    /// Accumulate the kept coordinates of a pack plan: scan the plan's
+    /// contiguous runs clipped to this shard's range instead of
+    /// testing a full-length `coord_mask` per coordinate.
+    fn add_runs(&mut self, values: &[f32], runs: &[(u32, u32)], n_c: f64) {
+        let lo = self.start;
+        let hi = self.start + self.len();
+        for &(rs, rl) in runs {
+            let rs = rs as usize;
+            let re = rs + rl as usize;
+            if re <= lo || rs >= hi {
+                continue;
+            }
+            for i in rs.max(lo)..re.min(hi) {
+                self.accum[i - lo] += n_c * values[i] as f64;
+                self.weight[i - lo] += n_c;
+            }
+        }
+    }
+
+    /// Write this shard's averaged coordinates into `out` (the shard's
+    /// own range of the full output, `out.len() == self.len()`).
+    fn finalize_into(&self, base: &[f32], out: &mut [f32]) {
+        let s = self.start;
+        for i in 0..self.len() {
+            out[i] = if self.weight[i] > 0.0 {
+                (self.accum[i] / self.weight[i]) as f32
+            } else {
+                base[s + i]
+            };
+        }
+    }
+
+    fn covered(&self) -> usize {
+        self.weight.iter().filter(|&&w| w > 0.0).count()
+    }
+}
+
+/// Sharded parallel FedAvg accumulator: the drop-in replacement for
+/// the retained [`FedAvg`](crate::aggregation::FedAvg) reference on
+/// the coordinator's aggregation path. Same per-coordinate semantics
+/// (paper Eq. 2 / Fig. 1 step 7), bit-identical output for every
+/// shard count, with `add_masked` / `add_full` / `add_planned` /
+/// `finalize` fanned out across the worker pool — one disjoint
+/// `(accum, weight)` slice pair per shard.
+pub struct ShardedFedAvg {
+    num_params: usize,
+    shards: Vec<Shard>,
+    /// Lazily-spawned shared pool: a single-shard aggregator never
+    /// forces the worker threads into existence.
+    pool: Arc<LazyPool>,
+}
+
+impl ShardedFedAvg {
+    /// `shard_count` is clamped to at least 1; counts larger than
+    /// `num_params` simply leave the surplus shards empty.
+    pub fn new(num_params: usize, shard_count: usize, pool: Arc<LazyPool>) -> ShardedFedAvg {
+        let k = shard_count.max(1);
+        let shards = (0..k)
+            .map(|i| {
+                let start = i * num_params / k;
+                let end = (i + 1) * num_params / k;
+                Shard {
+                    start,
+                    accum: vec![0.0; end - start],
+                    weight: vec![0.0; end - start],
+                }
+            })
+            .collect();
+        ShardedFedAvg {
+            num_params,
+            shards,
+            pool,
+        }
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.num_params
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn reset(&mut self) {
+        // Plain memsets: not worth a fan-out.
+        for s in &mut self.shards {
+            s.reset();
+        }
+    }
+
+    /// Apply `op` to every shard — inline for a single shard, on the
+    /// worker pool otherwise. Shards are moved through `Pool::map`
+    /// (input order preserved) so each job owns its shard outright;
+    /// only the caller's input buffers cross threads by reference.
+    fn for_each_shard(&mut self, op: impl Fn(&mut Shard) + Send + Sync + 'static) {
+        if self.shards.len() == 1 {
+            op(&mut self.shards[0]);
+            return;
+        }
+        let shards = std::mem::take(&mut self.shards);
+        let shards = self.pool.get().map(shards, move |mut s: Shard| {
+            op(&mut s);
+            s
+        });
+        self.shards = shards;
+    }
+
+    /// Add a client's model restricted to its sub-model coordinates.
+    /// `n_c` is the client's sample count (the FedAvg weight).
+    pub fn add_masked(&mut self, values: &[f32], coord_mask: &[bool], n_c: f64) {
+        assert_eq!(
+            values.len(),
+            self.num_params,
+            "add_masked: values buffer length != aggregator num_params"
+        );
+        assert_eq!(
+            coord_mask.len(),
+            self.num_params,
+            "add_masked: coord_mask buffer length != aggregator num_params"
+        );
+        let values = SliceView::new(values);
+        let mask = SliceView::new(coord_mask);
+        // SAFETY: the views are dereferenced only inside this fan-out;
+        // `for_each_shard` joins every pool job before returning, so
+        // the borrows outlive every dereference.
+        self.for_each_shard(move |s| {
+            let (v, m) = unsafe { (values.get(), mask.get()) };
+            s.add_masked(v, m, n_c);
+        });
+    }
+
+    /// Add a full-model client update (the no-dropout baselines).
+    pub fn add_full(&mut self, values: &[f32], n_c: f64) {
+        assert_eq!(
+            values.len(),
+            self.num_params,
+            "add_full: values buffer length != aggregator num_params"
+        );
+        let values = SliceView::new(values);
+        // SAFETY: see `add_masked`.
+        self.for_each_shard(move |s| {
+            let v = unsafe { values.get() };
+            s.add_full(v, n_c);
+        });
+    }
+
+    /// Add a raw-uplink client update through its pack plan: each
+    /// shard scans the plan's contiguous kept runs clipped to its own
+    /// range instead of testing `coord_mask[i]` per coordinate.
+    /// Bit-identical to [`ShardedFedAvg::add_masked`] with the plan's
+    /// coordinate mask — same per-coordinate operation, and every
+    /// packed coordinate appears in exactly one run.
+    pub fn add_planned(&mut self, values: &[f32], plan: &PackPlan, n_c: f64) {
+        assert_eq!(
+            values.len(),
+            self.num_params,
+            "add_planned: values buffer length != aggregator num_params"
+        );
+        assert_eq!(
+            plan.num_params(),
+            self.num_params,
+            "add_planned: plan num_params != aggregator num_params"
+        );
+        let values = SliceView::new(values);
+        let runs = SliceView::new(plan.runs());
+        // SAFETY: see `add_masked`; the plan is borrowed by the caller
+        // for the duration of this call, so the runs view is live too.
+        self.for_each_shard(move |s| {
+            let (v, r) = unsafe { (values.get(), runs.get()) };
+            s.add_runs(v, r, n_c);
+        });
+    }
+
+    /// Finalize: coordinates nobody updated keep `base`'s value. Each
+    /// shard writes only its own disjoint range of the output.
+    pub fn finalize(&mut self, base: &[f32]) -> Vec<f32> {
+        assert_eq!(
+            base.len(),
+            self.num_params,
+            "finalize: base buffer length != aggregator num_params"
+        );
+        let mut out = vec![0.0f32; self.num_params];
+        let base_v = SliceView::new(base);
+        let out_v = SliceViewMut::new(&mut out);
+        // SAFETY: see `add_masked`; each shard materializes only its
+        // own `[start, start+len)` output range, and the shard
+        // partition makes those ranges pairwise disjoint.
+        self.for_each_shard(move |s| {
+            let b = unsafe { base_v.get() };
+            let o = unsafe { out_v.range_mut(s.start, s.len()) };
+            s.finalize_into(b, o);
+        });
+        out
+    }
+
+    /// Fraction of coordinates that received at least one update.
+    /// Same covered-count and same final division as the reference
+    /// [`FedAvg::coverage`](crate::aggregation::FedAvg::coverage), so
+    /// the two agree exactly.
+    pub fn coverage(&self) -> f64 {
+        let covered: usize = self.shards.iter().map(Shard::covered).sum();
+        covered as f64 / self.num_params.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aggregation::FedAvg;
+
+    fn pool() -> Arc<LazyPool> {
+        Arc::new(LazyPool::new(3))
+    }
+
+    #[test]
+    fn matches_reference_on_the_paper_example() {
+        for shards in [1usize, 2, 3, 7] {
+            let mut agg = ShardedFedAvg::new(3, shards, pool());
+            agg.add_full(&[1.0, 2.0, 3.0], 10.0);
+            agg.add_full(&[3.0, 0.0, 6.0], 30.0);
+            let out = agg.finalize(&[9.0, 9.0, 9.0]);
+            assert_eq!(out, vec![2.5, 0.5, 5.25], "shards={shards}");
+            assert_eq!(agg.coverage(), 1.0);
+        }
+    }
+
+    #[test]
+    fn shard_partition_is_disjoint_balanced_and_covering() {
+        for (n, k) in [(13usize, 5usize), (4, 7), (0, 3), (942, 4), (16, 16)] {
+            let agg = ShardedFedAvg::new(n, k, pool());
+            assert_eq!(agg.shard_count(), k.max(1));
+            let mut next = 0usize;
+            let (mut min_len, mut max_len) = (usize::MAX, 0usize);
+            for s in &agg.shards {
+                assert_eq!(s.start, next, "n={n} k={k}: shards must tile contiguously");
+                next += s.len();
+                min_len = min_len.min(s.len());
+                max_len = max_len.max(s.len());
+            }
+            assert_eq!(next, n, "n={n} k={k}: shards must cover the vector");
+            assert!(max_len - min_len <= 1, "n={n} k={k}: balanced split");
+        }
+    }
+
+    #[test]
+    fn coverage_agrees_exactly_with_reference() {
+        let n = 29;
+        for shards in [1usize, 2, 7, 40] {
+            let mut sharded = ShardedFedAvg::new(n, shards, pool());
+            let mut reference = FedAvg::new(n);
+            let values: Vec<f32> = (0..n).map(|i| i as f32).collect();
+            let mask: Vec<bool> = (0..n).map(|i| i % 3 == 0).collect();
+            sharded.add_masked(&values, &mask, 5.0);
+            reference.add_masked(&values, &mask, 5.0);
+            assert_eq!(
+                sharded.coverage().to_bits(),
+                reference.coverage().to_bits(),
+                "shards={shards}"
+            );
+            // Zero-weight adds cover nothing extra in either.
+            sharded.add_full(&values, 0.0);
+            reference.add_full(&values, 0.0);
+            assert_eq!(sharded.coverage().to_bits(), reference.coverage().to_bits());
+        }
+        // Degenerate: empty aggregator.
+        let empty = ShardedFedAvg::new(0, 4, pool());
+        assert_eq!(empty.coverage(), FedAvg::new(0).coverage());
+    }
+
+    #[test]
+    fn reset_clears_every_shard() {
+        let mut agg = ShardedFedAvg::new(10, 4, pool());
+        agg.add_full(&[1.0; 10], 2.0);
+        agg.reset();
+        let out = agg.finalize(&[7.0; 10]);
+        assert_eq!(out, vec![7.0; 10]);
+        assert_eq!(agg.coverage(), 0.0);
+    }
+
+    #[test]
+    fn sharding_config_resolves_auto_and_explicit() {
+        let mut cfg = ShardingConfig::default();
+        assert_eq!(cfg.shard_count, 0, "default is auto");
+        // Auto: small models stay single-shard, big ones use the pool.
+        assert_eq!(cfg.resolve(942, 8), 1);
+        assert_eq!(cfg.resolve(1_000_000, 8), 8);
+        assert_eq!(cfg.resolve(40_000, 8), 3); // ceil(40000/16384)=3 caps it
+        assert_eq!(cfg.resolve(0, 8), 1);
+        // Explicit wins regardless of size, but clamps to num_params
+        // (surplus shards would be empty no-op jobs).
+        cfg.shard_count = 5;
+        assert_eq!(cfg.resolve(10, 8), 5);
+        cfg.shard_count = 100_000_000;
+        assert_eq!(cfg.resolve(10, 8), 10);
+        assert_eq!(cfg.resolve(0, 8), 1);
+    }
+}

@@ -6,6 +6,7 @@
 //! definitions can live in files and metrics records embed their full
 //! provenance.
 
+use crate::aggregation::ShardingConfig;
 use crate::compression::dgc::DgcConfig;
 use crate::data::DataConfig;
 use crate::network::LinkConfig;
@@ -45,6 +46,9 @@ pub struct ExperimentConfig {
     /// Round scheduler: policy (sync/overselect/async_buffered) +
     /// availability churn (see [`crate::sched`]).
     pub sched: SchedConfig,
+    /// Server-side aggregation sharding: shard count = auto (0, sized
+    /// to the worker pool) or explicit (see [`crate::aggregation`]).
+    pub sharding: ShardingConfig,
     pub seed: u64,
     /// Evaluate the global model every k rounds (simulation-side only —
     /// evaluation costs no simulated network time).
@@ -75,6 +79,7 @@ impl Default for ExperimentConfig {
             data: DataConfig::default(),
             link: LinkConfig::default(),
             sched: SchedConfig::default(),
+            sharding: ShardingConfig::default(),
             seed: 0,
             eval_every: 5,
             eval_batch_limit: Some(12),
@@ -251,6 +256,14 @@ impl ExperimentConfig {
             "sched_staleness_alpha",
             Json::Num(self.sched.staleness_alpha),
         );
+        j.set(
+            "sharding_shard_count",
+            Json::Num(self.sharding.shard_count as f64),
+        );
+        j.set(
+            "sharding_min_shard_params",
+            Json::Num(self.sharding.min_shard_params as f64),
+        );
         j.set("churn_enabled", Json::Bool(self.sched.churn.enabled));
         j.set(
             "churn_availability",
@@ -322,6 +335,12 @@ impl ExperimentConfig {
         }
         if let Some(v) = j.get("sched_staleness_alpha").and_then(|v| v.as_f64()) {
             self.sched.staleness_alpha = v;
+        }
+        if let Some(v) = j.get("sharding_shard_count").and_then(|v| v.as_usize()) {
+            self.sharding.shard_count = v;
+        }
+        if let Some(v) = j.get("sharding_min_shard_params").and_then(|v| v.as_usize()) {
+            self.sharding.min_shard_params = v;
         }
         if let Some(v) = j.get("churn_enabled").and_then(|v| v.as_bool()) {
             self.sched.churn.enabled = v;
@@ -462,6 +481,25 @@ mod tests {
         assert!(dst.sched.churn.enabled);
         assert_eq!(dst.sched.churn.availability, 0.6);
         assert_eq!(dst.method_label(), "afd_multi+quant8+dgc@async_buffered");
+    }
+
+    #[test]
+    fn sharding_json_roundtrip() {
+        let mut src = ExperimentConfig::default();
+        assert_eq!(src.sharding.shard_count, 0, "default is auto");
+        src.sharding.shard_count = 7;
+        src.sharding.min_shard_params = 1024;
+        let j = src.to_json();
+        let mut dst = ExperimentConfig::default();
+        dst.apply_json(&j).unwrap();
+        assert_eq!(dst.sharding.shard_count, 7);
+        assert_eq!(dst.sharding.min_shard_params, 1024);
+
+        // Partial configs leave the subtree untouched.
+        let partial = crate::util::json::parse(r#"{"rounds": 3}"#).unwrap();
+        let mut c = ExperimentConfig::default();
+        c.apply_json(&partial).unwrap();
+        assert_eq!(c.sharding.shard_count, 0);
     }
 
     #[test]

@@ -13,7 +13,7 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use crate::aggregation::FedAvg;
+use crate::aggregation::{FedAvg, ShardedFedAvg};
 use crate::clients::{build_fleet, ClientState};
 use crate::compression::{make_dense_codec, DenseCodec};
 use crate::config::{Backend, ExperimentConfig};
@@ -28,6 +28,7 @@ use crate::runtime::native::{mlp_spec, NativeMlp};
 use crate::runtime::{EvalOutput, ModelRuntime, RuntimeHost};
 use crate::sched::{make_policy, Engine, RoundCtx};
 use crate::tensor::kernels::WorkspacePool;
+use crate::util::pool::LazyPool;
 use crate::util::rng::Pcg64;
 
 /// A fully-assembled experiment, ready to run round-by-round.
@@ -40,7 +41,13 @@ pub struct Experiment {
     downlink: Arc<dyn DenseCodec>,
     fleet: Vec<ClientState>,
     net: NetworkSim,
-    agg: FedAvg,
+    /// Sharded parallel aggregator driven by the engine path (shard
+    /// count resolved from `cfg.sharding` against the pool width).
+    agg: ShardedFedAvg,
+    /// Retained single-threaded reference aggregator, built lazily the
+    /// first time [`Experiment::step_serial_reference`] runs (test /
+    /// debug path only — production rounds never pay for it).
+    agg_ref: Option<FedAvg>,
     rng: Pcg64,
     engine: Engine,
     pub global: Vec<f32>,
@@ -98,12 +105,20 @@ impl Experiment {
         let sizes: Vec<usize> = dataset.clients.iter().map(|c| c.len()).collect();
         let fleet = build_fleet(&sizes, &cfg.dgc, cfg.seed);
         let net = NetworkSim::new(cfg.link.clone(), cfg.num_clients, cfg.seed);
-        let agg = FedAvg::new(spec.num_params);
+        // One worker pool serves both parallel local training (engine)
+        // and sharded aggregation — they never overlap in time. Lazy:
+        // its threads spawn on the first fan-out, so serial-only runs
+        // (PJRT, the reference path, single-shard small models) never
+        // create them; the width is known up front for shard sizing.
+        let pool = Arc::new(LazyPool::default_for_machine());
+        let shard_count = cfg.sharding.resolve(spec.num_params, pool.size());
+        let agg = ShardedFedAvg::new(spec.num_params, shard_count, Arc::clone(&pool));
         let lr = cfg.lr_override.unwrap_or(spec.lr);
         let policy = make_policy(&cfg.sched, cfg.cohort_size(), cfg.num_clients)?;
         let engine = Engine::new(
             policy,
             Availability::new(cfg.sched.churn.clone(), cfg.seed),
+            pool,
         );
 
         Ok(Experiment {
@@ -115,6 +130,7 @@ impl Experiment {
             fleet,
             net,
             agg,
+            agg_ref: None,
             rng: Pcg64::with_stream(cfg.seed, 0xe4be),
             engine,
             global: init,
@@ -206,8 +222,10 @@ impl Experiment {
         }
 
         let sizes: Vec<usize> = self.fleet.iter().map(|c| c.num_samples).collect();
+        let num_params = self.spec.num_params;
+        let agg_ref = self.agg_ref.get_or_insert_with(|| FedAvg::new(num_params));
         let (new_global, timing) =
-            aggregate_round(&self.global, &outcomes, &sizes, &mut self.agg, &self.net);
+            aggregate_round(&self.global, &outcomes, &sizes, agg_ref, &self.net);
         self.global = new_global;
         feed_strategy(self.strategy.as_mut(), round, &outcomes);
 

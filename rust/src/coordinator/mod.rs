@@ -12,7 +12,10 @@
 //! 4. the uplink ships either DGC-compressed deltas or the raw packed
 //!    sub-model; the server reconstructs each client's model;
 //! 5. FedAvg aggregates per coordinate (sample-count weighted),
-//!    coordinates nobody held keep their old value;
+//!    coordinates nobody held keep their old value — on the engine
+//!    path this runs sharded across the worker pool
+//!    ([`crate::aggregation::ShardedFedAvg`], bit-identical to the
+//!    retained [`FedAvg`] reference);
 //! 6. the network simulator charges the round's wall-clock time
 //!    (max over the cohort of down + compute + up);
 //! 7. losses are reported back to the strategy (score-map updates).
@@ -27,6 +30,8 @@
 pub mod experiment;
 
 pub use experiment::{run_experiment, Experiment};
+
+use std::sync::Arc;
 
 use crate::aggregation::FedAvg;
 use crate::compression::dgc;
@@ -52,6 +57,12 @@ pub struct ClientRoundOutcome {
     /// (full coordinate space) + which coordinates it speaks for.
     pub reconstructed: Vec<f32>,
     pub coord_mask: Vec<bool>,
+    /// The pack plan whose runs are exactly `coord_mask`'s true
+    /// coordinates (raw uplink only — `None` when DGC may have shipped
+    /// residual coordinates beyond the plan). Lets the sharded
+    /// aggregator memcpy-scan contiguous kept runs instead of testing
+    /// the mask per coordinate.
+    pub agg_plan: Option<Arc<PackPlan>>,
 }
 
 /// Run one client's round: downlink → local train → uplink.
@@ -69,7 +80,7 @@ pub fn run_client_round(
     runtime: &dyn ModelRuntime,
     global: &[f32],
     submodel: &SubModel,
-    plan: &PackPlan,
+    plan: &Arc<PackPlan>,
     data: &EpochData,
     lr: f32,
     downlink: &dyn DenseCodec,
@@ -109,7 +120,7 @@ pub fn run_client_round(
     // ---- Uplink ------------------------------------------------------
     let mut coord_mask = vec![false; n];
     plan.mark_coord_mask(&mut coord_mask);
-    let (up_bytes, reconstructed, coord_mask) = match dgc_state {
+    let (up_bytes, reconstructed, coord_mask, agg_plan) = match dgc_state {
         Some(st) => {
             // Delta in full coordinate space (zero off-sub-model, so
             // top-k naturally selects sub-model coordinates; residuals
@@ -131,7 +142,7 @@ pub fn run_client_round(
                     cm[i] = true;
                 }
             }
-            (up_bytes, recon, cm)
+            (up_bytes, recon, cm, None)
         }
         None => {
             // Raw packed sub-model values (reusing the downlink's pack
@@ -140,7 +151,7 @@ pub fn run_client_round(
             let up_bytes = 4 * packed.len() as u64 + bitmap_bytes;
             let mut recon = client_start.clone();
             plan.unpack_from(&packed, &mut recon);
-            (up_bytes, recon, coord_mask)
+            (up_bytes, recon, coord_mask, Some(Arc::clone(plan)))
         }
     };
 
@@ -161,10 +172,16 @@ pub fn run_client_round(
         epoch_flops,
         reconstructed,
         coord_mask,
+        agg_plan,
     })
 }
 
 /// Aggregate a round's outcomes into W_{t+1} + charge network time.
+///
+/// Serial-reference path only: drives the retained single-threaded
+/// [`FedAvg`] (always mask-based, never plan-based) so
+/// `Experiment::step_serial_reference` stays the independent
+/// bit-exactness oracle for the sharded engine path.
 pub fn aggregate_round(
     global: &[f32],
     outcomes: &[ClientRoundOutcome],

@@ -8,10 +8,12 @@
 //! * **Layer 3 (this crate)** — the federated-learning coordinator:
 //!   client selection, activation score maps, sub-model construction
 //!   ([`dropout`]), downlink/uplink compression ([`compression`]),
-//!   FedAvg aggregation ([`aggregation`]), wireless link simulation +
-//!   availability churn ([`network`]), the event-driven round
-//!   scheduler with sync/overselect/async-buffered policies
-//!   ([`sched`]) and convergence accounting ([`metrics`]).
+//!   FedAvg aggregation — sharded across the worker pool, with a
+//!   retained single-threaded reference it must match bit-for-bit
+//!   ([`aggregation`], see `rust/src/aggregation/README.md`) —
+//!   wireless link simulation + availability churn ([`network`]), the
+//!   event-driven round scheduler with sync/overselect/async-buffered
+//!   policies ([`sched`]) and convergence accounting ([`metrics`]).
 //! * **Layer 2** — the paper's models (FEMNIST CNN, Shakespeare and
 //!   Sent140 LSTMs) written in JAX and AOT-lowered to HLO text
 //!   (`python/compile/`), executed from Rust through [`runtime`].
@@ -24,9 +26,10 @@
 //! Module map (coordinator side): [`config`] assembles an experiment;
 //! [`coordinator`] owns the round loop and drives it through
 //! [`sched`]'s virtual-clock engine; per-client work flows through
-//! [`dropout`] → [`compression`] → [`runtime`] → [`aggregation`],
-//! with [`network`] charging simulated time and [`metrics`] keeping
-//! the books. [`tensor`] holds the flat-array ops plus the blocked
+//! [`dropout`] → [`compression`] → [`runtime`] → [`aggregation`]
+//! (client training and the sharded server-side average share one
+//! worker pool), with [`network`] charging simulated time and
+//! [`metrics`] keeping the books. [`tensor`] holds the flat-array ops plus the blocked
 //! training kernels and zero-allocation workspace arena the native
 //! backend trains through (see `rust/src/tensor/README.md`). [`util`]
 //! holds the offline substrates (RNG, JSON, CLI, thread pool, stats,

@@ -76,6 +76,7 @@ fn experiment_spec() -> ArgSpec {
         .opt_maybe("dgc", "true|false: DGC on the uplink")
         .opt_maybe("sched", "sync|overselect|async_buffered: round scheduler policy")
         .opt_maybe("churn", "client availability in (0,1]: enables on/off churn")
+        .opt_maybe("shards", "aggregation shards (0 = auto: pool width, >=16k params/shard)")
         .opt_maybe("lr", "override the manifest learning rate")
         .opt_maybe("seed", "base RNG seed")
         .opt("seeds", "1", "number of seeds (mean ± std reporting)")
@@ -113,6 +114,9 @@ fn parse_experiment(args: &afd::util::cli::Args) -> Result<ExperimentConfig> {
     }
     if let Some(v) = args.get("churn") {
         cfg.sched.enable_churn(v.parse()?)?;
+    }
+    if let Some(v) = args.get("shards") {
+        cfg.sharding.shard_count = v.parse()?;
     }
     if let Some(v) = args.get("lr") {
         cfg.lr_override = Some(v.parse()?);

@@ -226,6 +226,19 @@ impl PackPlan {
         self.runs.len()
     }
 
+    /// The packed-order `(start, len)` runs into the flat full-model
+    /// vector. Runs are disjoint (every packed coordinate appears in
+    /// exactly one run); the sharded aggregator walks them instead of
+    /// testing a full-length coordinate mask per coordinate.
+    pub fn runs(&self) -> &[(u32, u32)] {
+        &self.runs
+    }
+
+    /// Flat full-model length this plan was built for.
+    pub fn num_params(&self) -> usize {
+        self.num_params
+    }
+
     /// Kept-unit bitmap bytes that ride along with raw payloads.
     pub fn bitmap_bytes(&self) -> u64 {
         self.bitmap_bytes

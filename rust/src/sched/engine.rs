@@ -2,7 +2,8 @@
 //! parallel local training, policy-driven round closing.
 //!
 //! One [`Engine`] owns the scheduling state of an experiment: the
-//! policy, the availability model, the worker pool, and — for
+//! policy, the availability model, a handle to the shared worker pool
+//! (also used by the coordinator's sharded aggregator), and — for
 //! continuous policies — the in-flight min-heap and the virtual clock.
 //! Each [`Engine::step`] produces one aggregation's [`RoundSummary`];
 //! the coordinator wraps it into a `RoundRecord` (evaluation stays
@@ -40,7 +41,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::aggregation::FedAvg;
+use crate::aggregation::ShardedFedAvg;
 use crate::clients::ClientState;
 use crate::compression::dgc::DgcState;
 use crate::compression::DenseCodec;
@@ -55,7 +56,7 @@ use crate::network::{Availability, NetworkSim};
 use crate::runtime::{EpochData, RuntimeHost};
 use crate::sched::policy::SchedulerPolicy;
 use crate::tensor::kernels::WorkspacePool;
-use crate::util::pool::Pool;
+use crate::util::pool::LazyPool;
 use crate::util::rng::Pcg64;
 
 /// Everything the engine borrows from the experiment for one step.
@@ -70,7 +71,10 @@ pub struct RoundCtx<'a> {
     pub dataset: &'a FederatedDataset,
     pub fleet: &'a mut Vec<ClientState>,
     pub net: &'a NetworkSim,
-    pub agg: &'a mut FedAvg,
+    /// Sharded parallel aggregator (bit-identical to the retained
+    /// `FedAvg` reference for every shard count; it shares the
+    /// engine's worker pool).
+    pub agg: &'a mut ShardedFedAvg,
     pub rng: &'a mut Pcg64,
     pub global: &'a mut Vec<f32>,
     pub lr: f32,
@@ -168,7 +172,13 @@ fn round_seed(seed: u64, round: usize) -> u64 {
 pub struct Engine {
     policy: Box<dyn SchedulerPolicy>,
     avail: Availability,
-    pool: Option<Pool>,
+    /// Worker pool for parallel local training; shared (same `Arc`)
+    /// with the coordinator's sharded aggregator so training and
+    /// aggregation fan out over one set of threads — they never run
+    /// concurrently (aggregation starts after the batch's jobs join).
+    /// Lazy: workers spawn on the first actual fan-out, so serial
+    /// paths (PJRT, the bit-exactness reference) never pay for them.
+    pool: Arc<LazyPool>,
     /// Virtual clock (continuous policies only; round-scoped policies
     /// work in per-round offsets to stay bit-compatible with the
     /// serial reference).
@@ -185,11 +195,15 @@ pub struct Engine {
 }
 
 impl Engine {
-    pub fn new(policy: Box<dyn SchedulerPolicy>, avail: Availability) -> Engine {
+    pub fn new(
+        policy: Box<dyn SchedulerPolicy>,
+        avail: Availability,
+        pool: Arc<LazyPool>,
+    ) -> Engine {
         Engine {
             policy,
             avail,
-            pool: None,
+            pool,
             now: 0.0,
             version: 0,
             seq: 0,
@@ -295,8 +309,7 @@ impl Engine {
                 let global: Arc<Vec<f32>> = Arc::new(ctx.global.clone());
                 let lr = ctx.lr;
                 let wsp = Arc::clone(ctx.workspaces);
-                let pool = self.pool.get_or_insert_with(Pool::default_for_machine);
-                pool.map(jobs, move |mut job: ClientJob| {
+                self.pool.get().map(jobs, move |mut job: ClientJob| {
                     let mut dgc = job.dgc.take();
                     // Checked out only for the job's execution window:
                     // peak scratch = concurrently running jobs (pool
@@ -590,7 +603,11 @@ impl Engine {
     /// FedAvg the included outcomes (iteration order = caller order =
     /// dispatch/arrival order, which fixes the f64 summation order for
     /// reproducibility), update the global, feed the strategy, and
-    /// account bytes/losses.
+    /// account bytes/losses. Aggregation is sharded across the worker
+    /// pool; raw-uplink outcomes add through their pack plan's
+    /// contiguous kept runs, DGC outcomes (whose masks may include
+    /// residual coordinates beyond the plan) stay mask-based. Both are
+    /// bit-identical per coordinate to the serial `FedAvg` reference.
     fn aggregate<'o>(
         ctx: &mut RoundCtx,
         round: usize,
@@ -611,7 +628,10 @@ impl Engine {
             let w = weight_of(i);
             // `n_c * 1.0 == n_c` exactly, so unit weights stay bit-
             // compatible with the serial reference.
-            ctx.agg.add_masked(&o.reconstructed, &o.coord_mask, n_c * w);
+            match &o.agg_plan {
+                Some(plan) => ctx.agg.add_planned(&o.reconstructed, plan, n_c * w),
+                None => ctx.agg.add_masked(&o.reconstructed, &o.coord_mask, n_c * w),
+            }
             summary.down_bytes += o.down_bytes;
             summary.up_bytes += o.up_bytes;
             loss_sum += o.train_loss as f64;

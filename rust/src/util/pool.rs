@@ -70,13 +70,20 @@ impl Pool {
         self.size
     }
 
-    /// Default pool sized to the machine (leaving a core for the
-    /// coordinator thread).
-    pub fn default_for_machine() -> Pool {
+    /// Worker count [`Pool::default_for_machine`] would choose —
+    /// computable without spawning anything (used to size shard
+    /// layouts before any thread exists).
+    pub fn default_machine_width() -> usize {
         let n = thread::available_parallelism()
             .map(|n| n.get())
             .unwrap_or(4);
-        Pool::new(n.saturating_sub(1).max(1))
+        n.saturating_sub(1).max(1)
+    }
+
+    /// Default pool sized to the machine (leaving a core for the
+    /// coordinator thread).
+    pub fn default_for_machine() -> Pool {
+        Pool::new(Pool::default_machine_width())
     }
 
     /// Parallel map preserving input order. Panics in tasks are captured
@@ -140,6 +147,46 @@ impl Pool {
         if let Some(p) = panic {
             std::panic::resume_unwind(p);
         }
+    }
+}
+
+/// A [`Pool`] whose worker threads spawn on first fan-out. Consumers
+/// that share one pool (the scheduler's parallel training path and the
+/// sharded aggregator) hold an `Arc<LazyPool>`; runs that never fan
+/// out — the serial bit-exactness reference, single-shard aggregation
+/// on small models, the PJRT backend — never pay for the threads. The
+/// width is fixed at construction so shard layouts can be sized before
+/// any thread exists.
+pub struct LazyPool {
+    inner: std::sync::OnceLock<Pool>,
+    size: usize,
+}
+
+impl LazyPool {
+    /// Lazy pool with a fixed worker count (spawned on first [`get`]).
+    ///
+    /// [`get`]: LazyPool::get
+    pub fn new(size: usize) -> LazyPool {
+        LazyPool {
+            inner: std::sync::OnceLock::new(),
+            size: size.max(1),
+        }
+    }
+
+    /// Machine-default width (same sizing as
+    /// [`Pool::default_for_machine`]), threads not yet spawned.
+    pub fn default_for_machine() -> LazyPool {
+        LazyPool::new(Pool::default_machine_width())
+    }
+
+    /// Worker count the pool has (or will have) — no spawning.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// The underlying pool, spawning its workers on first call.
+    pub fn get(&self) -> &Pool {
+        self.inner.get_or_init(|| Pool::new(self.size))
     }
 }
 
@@ -227,6 +274,19 @@ mod tests {
         let pool = Pool::new(2);
         let out: Vec<i32> = pool.map(Vec::<i32>::new(), |i| i);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn lazy_pool_reports_width_without_spawning_and_maps_after() {
+        let lazy = LazyPool::new(3);
+        // Width is known before any thread exists.
+        assert_eq!(lazy.size(), 3);
+        // First fan-out spawns; repeated gets reuse the same pool.
+        let out = lazy.get().map((0..10).collect(), |i: usize| i * 2);
+        assert_eq!(out, (0..10).map(|i| i * 2).collect::<Vec<_>>());
+        assert_eq!(lazy.get().size(), 3);
+        assert_eq!(LazyPool::default_for_machine().size(), Pool::default_machine_width());
+        assert_eq!(LazyPool::new(0).size(), 1, "width clamps to 1 like Pool::new");
     }
 
     #[test]

@@ -1,0 +1,338 @@
+//! Determinism-conformance suite for sharded aggregation.
+//!
+//! The contract under test: [`ShardedFedAvg`] output — `finalize` bits
+//! and `coverage` bits — is **bit-identical** to the retained
+//! single-threaded [`FedAvg`] reference for every shard count
+//! (including 1 and counts larger than the parameter count), for every
+//! mix of `add_masked` / `add_full` / `add_planned` calls, and for
+//! degenerate inputs (zero clients, zero-weight clients, all-false
+//! masks, non-divisible parameter counts, non-finite values).
+
+use std::sync::Arc;
+
+use afd::aggregation::{FedAvg, ShardedFedAvg};
+use afd::model::packing::{coordinate_mask, PackPlan};
+use afd::model::submodel::SubModel;
+use afd::prop::{check, Gen};
+use afd::runtime::native::mlp_spec;
+use afd::util::pool::LazyPool;
+use afd::util::rng::Pcg64;
+
+/// One client's contribution to a round.
+#[derive(Clone, Debug)]
+enum Add {
+    Masked {
+        values: Vec<f32>,
+        mask: Vec<bool>,
+        n_c: f64,
+    },
+    Full {
+        values: Vec<f32>,
+        n_c: f64,
+    },
+}
+
+/// A randomized aggregation round: parameter count, previous global
+/// (`base`), and a mixed sequence of client adds.
+#[derive(Clone, Debug)]
+struct Scenario {
+    num_params: usize,
+    base: Vec<f32>,
+    adds: Vec<Add>,
+}
+
+struct ScenarioGen;
+
+impl Gen for ScenarioGen {
+    type Output = Scenario;
+
+    fn generate(&self, rng: &mut Pcg64) -> Scenario {
+        // 1..=257: exercises tiny vectors, primes (indivisible by most
+        // shard counts) and sizes below the tested shard counts.
+        let n = 1 + rng.below(257) as usize;
+        let base = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let clients = rng.below(7) as usize; // 0..=6, zero-client included
+        let adds = (0..clients)
+            .map(|_| {
+                let mut values: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                // Occasionally inject a non-finite value: identical op
+                // sequences must yield identical bits even through
+                // NaN/∞ propagation.
+                if rng.below(8) == 0 {
+                    let i = rng.below(n as u64) as usize;
+                    values[i] = match rng.below(3) {
+                        0 => f32::NAN,
+                        1 => f32::INFINITY,
+                        _ => f32::NEG_INFINITY,
+                    };
+                }
+                // Mostly real sample counts; sometimes a zero-weight
+                // client (contributes nothing to the average).
+                let n_c = if rng.below(5) == 0 {
+                    0.0
+                } else {
+                    (1 + rng.below(100)) as f64
+                };
+                if rng.below(3) == 0 {
+                    Add::Full { values, n_c }
+                } else {
+                    // Mask density drawn per client: p near 0 produces
+                    // all-false masks, p near 1 full masks.
+                    let p = rng.next_f64();
+                    let mask = (0..n).map(|_| rng.next_f64() < p).collect();
+                    Add::Masked { values, mask, n_c }
+                }
+            })
+            .collect();
+        Scenario {
+            num_params: n,
+            base,
+            adds,
+        }
+    }
+
+    fn shrink(&self, case: &Scenario) -> Vec<Scenario> {
+        // Dropping the last add keeps the scenario well-formed and
+        // usually isolates the offending client.
+        let mut out = Vec::new();
+        if !case.adds.is_empty() {
+            let mut c = case.clone();
+            c.adds.pop();
+            out.push(c);
+        }
+        out
+    }
+}
+
+fn apply_reference(s: &Scenario) -> (Vec<u32>, u64) {
+    let mut agg = FedAvg::new(s.num_params);
+    for add in &s.adds {
+        match add {
+            Add::Masked { values, mask, n_c } => agg.add_masked(values, mask, *n_c),
+            Add::Full { values, n_c } => agg.add_full(values, *n_c),
+        }
+    }
+    let out = agg.finalize(&s.base);
+    (bits(&out), agg.coverage().to_bits())
+}
+
+fn apply_sharded(agg: &mut ShardedFedAvg, s: &Scenario) -> (Vec<u32>, u64) {
+    for add in &s.adds {
+        match add {
+            Add::Masked { values, mask, n_c } => agg.add_masked(values, mask, *n_c),
+            Add::Full { values, n_c } => agg.add_full(values, *n_c),
+        }
+    }
+    let out = agg.finalize(&s.base);
+    (bits(&out), agg.coverage().to_bits())
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// The acceptance bar: random rounds, five shard counts each (1, 2, 7,
+/// pool width, > num_params), replayed twice through `reset` — all
+/// bit-identical to the reference.
+#[test]
+fn sharded_is_bit_identical_to_reference_across_shard_counts() {
+    let pool = Arc::new(LazyPool::new(4));
+    check("sharded fedavg conformance", &ScenarioGen, 48, |s| {
+        let (want, want_cov) = apply_reference(s);
+        for shards in [1usize, 2, 7, pool.size(), s.num_params + 5] {
+            let mut agg = ShardedFedAvg::new(s.num_params, shards, Arc::clone(&pool));
+            let (got, cov) = apply_sharded(&mut agg, s);
+            if got != want {
+                return Err(format!(
+                    "shards={shards}: finalize diverges from FedAvg reference"
+                ));
+            }
+            if cov != want_cov {
+                return Err(format!(
+                    "shards={shards}: coverage diverges from FedAvg reference"
+                ));
+            }
+            // Round-to-round reuse: reset + replay must reproduce the
+            // same bits (the engine resets the accumulator per round).
+            agg.reset();
+            let (again, cov_again) = apply_sharded(&mut agg, s);
+            if again != want || cov_again != want_cov {
+                return Err(format!("shards={shards}: reset+replay diverges"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Zero clients: finalize returns `base` bitwise, coverage is 0 — for
+/// shard counts dividing, not dividing, and exceeding num_params.
+#[test]
+fn zero_clients_return_base_for_every_shard_count() {
+    let pool = Arc::new(LazyPool::new(4));
+    let n = 13;
+    let base: Vec<f32> = (0..n).map(|i| (i as f32).sin()).collect();
+    for shards in [1usize, 5, 13, 29] {
+        let mut agg = ShardedFedAvg::new(n, shards, Arc::clone(&pool));
+        let out = agg.finalize(&base);
+        assert_eq!(bits(&out), bits(&base), "shards={shards}");
+        assert_eq!(agg.coverage(), 0.0, "shards={shards}");
+    }
+}
+
+/// Zero-weight clients and all-false masks leave every coordinate on
+/// `base`, exactly as the reference does.
+#[test]
+fn zero_weight_and_all_false_masks_match_reference() {
+    let pool = Arc::new(LazyPool::new(4));
+    let n = 37;
+    let mut rng = Pcg64::new(5);
+    let base: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let values: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+
+    let mut reference = FedAvg::new(n);
+    reference.add_full(&values, 0.0); // zero-weight client
+    reference.add_masked(&values, &vec![false; n], 9.0); // all-false mask
+    let want = reference.finalize(&base);
+    assert_eq!(bits(&want), bits(&base), "reference sanity: base survives");
+
+    for shards in [1usize, 4, 36, 50] {
+        let mut agg = ShardedFedAvg::new(n, shards, Arc::clone(&pool));
+        agg.add_full(&values, 0.0);
+        agg.add_masked(&values, &vec![false; n], 9.0);
+        let got = agg.finalize(&base);
+        assert_eq!(bits(&got), bits(&want), "shards={shards}");
+        assert_eq!(
+            agg.coverage().to_bits(),
+            reference.coverage().to_bits(),
+            "shards={shards}"
+        );
+    }
+}
+
+/// `add_planned` (pack-plan contiguous runs) is bit-identical to
+/// mask-based adds with the plan's coordinate mask — on the reference
+/// and on every shard count, mixed with full and masked adds.
+#[test]
+fn planned_adds_match_masked_reference() {
+    let spec = mlp_spec("agg_conformance", 24, 32, 8, 4, 2, 0.1);
+    let n = spec.num_params;
+    let pool = Arc::new(LazyPool::new(4));
+    let mut rng = Pcg64::new(11);
+    let base: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+
+    for kept_n in [32usize, 20, 5] {
+        let kept = rng.sample_indices(32, kept_n);
+        let sm = SubModel::from_kept_indices(&spec, &[kept]);
+        let plan = PackPlan::build(&spec, &sm);
+        let cm = coordinate_mask(&spec, &sm);
+
+        let clients: Vec<(Vec<f32>, f64)> = (0..4)
+            .map(|c| {
+                let v = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                let n_c = if c == 3 { 0.0 } else { 10.0 + c as f64 };
+                (v, n_c)
+            })
+            .collect();
+        let extra_full: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+
+        let mut reference = FedAvg::new(n);
+        for (v, n_c) in &clients {
+            reference.add_masked(v, &cm, *n_c);
+        }
+        reference.add_full(&extra_full, 3.0);
+        let want = reference.finalize(&base);
+
+        for shards in [1usize, 3, pool.size(), n + 1] {
+            let mut agg = ShardedFedAvg::new(n, shards, Arc::clone(&pool));
+            for (v, n_c) in &clients {
+                agg.add_planned(v, &plan, *n_c);
+            }
+            agg.add_full(&extra_full, 3.0);
+            let got = agg.finalize(&base);
+            assert_eq!(
+                bits(&got),
+                bits(&want),
+                "kept={kept_n} shards={shards}: planned adds must match masked reference"
+            );
+            assert_eq!(
+                agg.coverage().to_bits(),
+                reference.coverage().to_bits(),
+                "kept={kept_n} shards={shards}"
+            );
+        }
+    }
+}
+
+/// Non-finite client values poison exactly their own coordinates:
+/// every other coordinate stays finite and bit-identical to the
+/// reference, on every shard count (a NaN in shard i must never leak
+/// into shard j's slices).
+#[test]
+fn non_finite_values_only_poison_their_own_coordinates() {
+    let pool = Arc::new(LazyPool::new(4));
+    let n = 64;
+    let poisoned = [5usize, 17, 40];
+    let mut rng = Pcg64::new(3);
+    let base: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let mut bad: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    bad[poisoned[0]] = f32::NAN;
+    bad[poisoned[1]] = f32::INFINITY;
+    bad[poisoned[2]] = f32::NEG_INFINITY;
+    let clean: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+
+    let mut reference = FedAvg::new(n);
+    reference.add_full(&bad, 7.0);
+    reference.add_full(&clean, 3.0);
+    let want = reference.finalize(&base);
+
+    for shards in [1usize, 2, 9, 64] {
+        let mut agg = ShardedFedAvg::new(n, shards, Arc::clone(&pool));
+        agg.add_full(&bad, 7.0);
+        agg.add_full(&clean, 3.0);
+        let got = agg.finalize(&base);
+        assert_eq!(bits(&got), bits(&want), "shards={shards}");
+        for (i, v) in got.iter().enumerate() {
+            if poisoned.contains(&i) {
+                assert!(
+                    !v.is_finite(),
+                    "shards={shards}: coordinate {i} should carry the poison"
+                );
+            } else {
+                assert!(
+                    v.is_finite(),
+                    "shards={shards}: coordinate {i} poisoned by another shard"
+                );
+            }
+        }
+    }
+}
+
+/// `FedAvg::coverage` and `ShardedFedAvg::coverage` agree exactly
+/// through partial masks, repeated adds, and the empty aggregator.
+#[test]
+fn coverage_parity_with_reference() {
+    let pool = Arc::new(LazyPool::new(4));
+    let n = 101; // prime: never divisible by the shard counts below
+    let mut rng = Pcg64::new(17);
+    let values: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    for shards in [1usize, 2, 7, 25] {
+        let mut sharded = ShardedFedAvg::new(n, shards, Arc::clone(&pool));
+        let mut reference = FedAvg::new(n);
+        assert_eq!(
+            sharded.coverage().to_bits(),
+            reference.coverage().to_bits(),
+            "shards={shards}: empty aggregators"
+        );
+        for round in 0..3 {
+            let p = [0.1, 0.6, 0.95][round];
+            let mask: Vec<bool> = (0..n).map(|_| rng.next_f64() < p).collect();
+            sharded.add_masked(&values, &mask, 4.0);
+            reference.add_masked(&values, &mask, 4.0);
+            assert_eq!(
+                sharded.coverage().to_bits(),
+                reference.coverage().to_bits(),
+                "shards={shards} round={round}"
+            );
+        }
+    }
+}

@@ -49,17 +49,20 @@ fn assert_bit_identical(a: &RoundRecord, b: &RoundRecord) {
 }
 
 /// The acceptance bar for the engine rewrite: `Sync` through the
-/// event loop (with parallel client execution) reproduces the serial
-/// reference byte-for-byte — losses, bytes, simulated times — with
-/// and without DGC on the uplink, across dropout strategies and seeds.
+/// event loop (with parallel client execution and sharded
+/// aggregation) reproduces the serial reference byte-for-byte —
+/// losses, bytes, simulated times — with and without DGC on the
+/// uplink, across dropout strategies, seeds, and shard counts
+/// (0 = auto; explicit counts force multi-shard fan-out on the small
+/// native model, including a count above the worker-pool width).
 #[test]
 fn sync_engine_is_bit_identical_to_serial_reference() {
-    for (uplink_dgc, dropout, seed) in [
-        (true, "afd_multi", 0u64),
-        (true, "afd_single", 3),
-        (false, "afd_multi", 0),
-        (false, "none", 7),
-        (true, "fd", 11),
+    for (uplink_dgc, dropout, seed, shards) in [
+        (true, "afd_multi", 0u64, 0usize),
+        (true, "afd_single", 3, 4),
+        (false, "afd_multi", 0, 7),
+        (false, "none", 7, 1),
+        (true, "fd", 11, 13),
     ] {
         let mut cfg = ExperimentConfig::preset(Preset::NativeSmoke);
         cfg.rounds = 8;
@@ -67,6 +70,7 @@ fn sync_engine_is_bit_identical_to_serial_reference() {
         cfg.uplink_dgc = uplink_dgc;
         cfg.dropout = dropout.into();
         cfg.seed = seed;
+        cfg.sharding.shard_count = shards;
         assert_eq!(cfg.sched.policy, "sync");
 
         let mut engine = Experiment::build(&cfg).unwrap();
@@ -82,9 +86,77 @@ fn sync_engine_is_bit_identical_to_serial_reference() {
             assert_eq!(
                 x.to_bits(),
                 y.to_bits(),
-                "dgc={uplink_dgc} {dropout} seed {seed}"
+                "dgc={uplink_dgc} {dropout} seed {seed} shards {shards}"
             );
         }
+    }
+}
+
+/// Sharded aggregation must be invisible in every record: the same run
+/// at shard counts 1 and 7 is bit-identical, for every policy
+/// (AsyncBuffered exercises staleness-discounted non-unit aggregation
+/// weights through the sharded adds).
+#[test]
+fn every_policy_is_shard_count_invariant() {
+    for policy in ["sync", "overselect", "async_buffered"] {
+        let mut cfg = ExperimentConfig::preset(Preset::NativeSmoke);
+        cfg.rounds = 6;
+        cfg.eval_every = 3;
+        cfg.link = LinkConfig::straggler_heavy();
+        cfg.sched.policy = policy.into();
+        cfg.sched.buffer_k = 2; // async: small buffers ⇒ staleness > 0
+        let mut one = cfg.clone();
+        one.sharding.shard_count = 1;
+        let mut many = cfg.clone();
+        many.sharding.shard_count = 7;
+        let a = run_experiment(&one).unwrap();
+        let b = run_experiment(&many).unwrap();
+        assert_eq!(a.records.len(), b.records.len(), "{policy}");
+        for (x, y) in a.records.iter().zip(&b.records) {
+            assert_bit_identical(x, y);
+        }
+    }
+}
+
+/// Staleness-weighting regression under sharding: with buffered async
+/// aggregation, the `1/(1+staleness)^α` discount must actually flow
+/// through the sharded adds — cranking α must change the trajectory,
+/// and each α must stay shard-count invariant.
+#[test]
+fn async_staleness_weighting_survives_sharding() {
+    let base = {
+        let mut cfg = ExperimentConfig::preset(Preset::NativeSmoke);
+        cfg.rounds = 12;
+        cfg.eval_every = 3;
+        cfg.link = LinkConfig::straggler_heavy();
+        cfg.sched.policy = "async_buffered".into();
+        cfg.sched.buffer_k = 2; // aggregate every 2 arrivals ⇒ frequent
+        cfg.sharding.shard_count = 6; // stale merges under sharding
+        cfg
+    };
+    let mut flat = base.clone();
+    flat.sched.staleness_alpha = 0.0; // discount off: all weights 1
+    let mut heavy = base.clone();
+    heavy.sched.staleness_alpha = 4.0; // aggressive discount
+
+    let r_flat = run_experiment(&flat).unwrap();
+    let r_heavy = run_experiment(&heavy).unwrap();
+    assert!(
+        r_flat
+            .records
+            .iter()
+            .zip(&r_heavy.records)
+            .any(|(x, y)| x.train_loss.to_bits() != y.train_loss.to_bits()
+                || x.eval_acc.map(f64::to_bits) != y.eval_acc.map(f64::to_bits)),
+        "staleness discount must influence sharded aggregation"
+    );
+    // And the discounted run itself is reproducible and shard-count
+    // invariant (non-unit weights take the same per-coordinate path).
+    let mut heavy_one = heavy.clone();
+    heavy_one.sharding.shard_count = 1;
+    let r_heavy_one = run_experiment(&heavy_one).unwrap();
+    for (x, y) in r_heavy.records.iter().zip(&r_heavy_one.records) {
+        assert_bit_identical(x, y);
     }
 }
 
