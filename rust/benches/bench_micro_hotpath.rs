@@ -19,6 +19,7 @@ use afd::model::submodel::SubModel;
 use afd::runtime::native::{mlp_spec, NativeMlp};
 use afd::runtime::{BatchInput, EpochData, ModelRuntime};
 use afd::tensor::kernels::Workspace;
+use afd::tensor::simd::{self, scalar};
 use afd::util::alloc_count::{self, CountingAllocator};
 use afd::util::json::Json;
 use afd::util::rng::Pcg64;
@@ -29,6 +30,11 @@ static ALLOC: CountingAllocator = CountingAllocator;
 fn main() {
     let mut b = Bencher::default();
     let mut rng = Pcg64::new(0);
+    println!(
+        "simd dispatch: {} (cpu: {})",
+        simd::active_name(),
+        simd::cpu_features().join(",")
+    );
 
     // Model-sized payload: femnist_small-like 105k params (420 KB).
     let n = 105_194;
@@ -147,6 +153,65 @@ fn main() {
     let pack_allocs = alloc_count::disarm();
     println!("plan pack+unpack allocations after warm-up: {pack_allocs}");
 
+    // ---- SIMD primitives: dispatched vs retained scalar -------------
+    // Both paths live in the same binary, so the recorded ratios are
+    // machine-independent. Without `--features simd` (or no AVX2) the
+    // dispatch IS scalar and every ratio is ~1.0 — the `simd.active`
+    // field in the JSON says which case was measured.
+    println!("\n-- simd primitives ({} dispatch) --", simd::active_name());
+    let prim_n = 105_194usize;
+    let pa: Vec<f32> = (0..prim_n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let pb: Vec<f32> = (0..prim_n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let prim_bytes = 4 * prim_n as u64;
+
+    let mut out = pa.clone();
+    let r_axpy_s = b.run("axpy_row scalar", Some(prim_bytes), || {
+        scalar::axpy_row(&mut out, 0.37, &pb);
+        std::hint::black_box(&out);
+    });
+    let r_axpy_d = b.run("axpy_row dispatched", Some(prim_bytes), || {
+        simd::axpy_row(&mut out, 0.37, &pb);
+        std::hint::black_box(&out);
+    });
+
+    let mut fw = pa[..4096].to_vec();
+    let r_fwht_s = b.run("fwht 4096 scalar", Some(4 * 4096), || {
+        scalar::fwht(&mut fw);
+        std::hint::black_box(&fw);
+    });
+    let r_fwht_d = b.run("fwht 4096 dispatched", Some(4 * 4096), || {
+        simd::fwht(&mut fw);
+        std::hint::black_box(&fw);
+    });
+
+    let mut qout = vec![0u8; prim_n];
+    let r_quant_s = b.run("quantize_block scalar", Some(prim_bytes), || {
+        scalar::quantize_block(&pa, 12.7, &mut qout);
+        std::hint::black_box(&qout);
+    });
+    let r_quant_d = b.run("quantize_block dispatched", Some(prim_bytes), || {
+        simd::quantize_block(&pa, 12.7, &mut qout);
+        std::hint::black_box(&qout);
+    });
+
+    let r_absmax_s = b.run("absmax scalar", Some(prim_bytes), || {
+        std::hint::black_box(scalar::absmax(&pa));
+    });
+    let r_absmax_d = b.run("absmax dispatched", Some(prim_bytes), || {
+        std::hint::black_box(simd::absmax(&pa));
+    });
+
+    let mut du = pa.clone();
+    let mut dv = pb.clone();
+    let r_scan_s = b.run("dgc_scan scalar", Some(prim_bytes), || {
+        scalar::dgc_scan(&mut du, &mut dv, &pa, 0.9, 0.99);
+        std::hint::black_box(&dv);
+    });
+    let r_scan_d = b.run("dgc_scan dispatched", Some(prim_bytes), || {
+        simd::dgc_scan(&mut du, &mut dv, &pa, 0.9, 0.99);
+        std::hint::black_box(&dv);
+    });
+
     println!("\n-- selection (2048-unit score map) --");
     let mut map = ScoreMap::zeros(&spec);
     map.credit(&sm, 0.5);
@@ -199,8 +264,11 @@ fn main() {
         Json::Str(
             "Before/after harness: `baseline` is the retained scalar train_epoch \
              reference and the legacy one-shot packing; `kernels` is the blocked \
-             kernel + workspace path and PackPlan, measured in the same run on the \
-             same machine. Regenerate with `cargo bench --bench bench_micro_hotpath`."
+             kernel + workspace path and PackPlan; `simd` records the detected CPU \
+             features, the active dispatch level and dispatched-vs-scalar primitive \
+             ratios — all measured in the same run on the same machine. Regenerate \
+             with `cargo bench --bench bench_micro_hotpath` (add `--features simd` \
+             to measure the AVX2 dispatch)."
                 .into(),
         ),
     );
@@ -228,6 +296,34 @@ fn main() {
         "allocations_per_pack_unpack_after_warmup",
         Json::Num(pack_allocs as f64),
     );
+    let mut simd_j = Json::obj();
+    simd_j.set("active", Json::Str(simd::active_name().into()));
+    simd_j.set(
+        "cpu_features",
+        Json::Arr(
+            simd::cpu_features()
+                .iter()
+                .map(|f| Json::Str((*f).to_string()))
+                .collect(),
+        ),
+    );
+    let mut prim = Json::obj();
+    prim.set("axpy_row", Json::Num(r_axpy_s.median_ns / r_axpy_d.median_ns));
+    prim.set("fwht", Json::Num(r_fwht_s.median_ns / r_fwht_d.median_ns));
+    prim.set(
+        "quantize_block",
+        Json::Num(r_quant_s.median_ns / r_quant_d.median_ns),
+    );
+    prim.set(
+        "absmax",
+        Json::Num(r_absmax_s.median_ns / r_absmax_d.median_ns),
+    );
+    prim.set(
+        "dgc_scan",
+        Json::Num(r_scan_s.median_ns / r_scan_d.median_ns),
+    );
+    simd_j.set("primitive_speedup", prim);
+    doc.set("simd", simd_j);
     doc.set("all_results", b.to_json());
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
         .join("..")

@@ -10,11 +10,12 @@
 
 use std::sync::Arc;
 
-use afd::aggregation::{FedAvg, ShardedFedAvg};
+use afd::aggregation::{AddOp, FedAvg, ShardedFedAvg};
 use afd::bench::Bencher;
 use afd::model::packing::{coordinate_mask, PackPlan};
 use afd::model::submodel::SubModel;
 use afd::runtime::native::mlp_spec;
+use afd::tensor::simd;
 use afd::util::json::Json;
 use afd::util::pool::LazyPool;
 use afd::util::rng::Pcg64;
@@ -60,6 +61,7 @@ fn main() {
     let mut sharded_rows = Vec::new();
     let mut best_masked = f64::INFINITY;
     let mut best_planned = f64::INFINITY;
+    let mut best_batched = f64::INFINITY;
     let mut best_shards = 0usize;
     for &shards in &shard_counts {
         let mut agg = ShardedFedAvg::new(n, shards, Arc::clone(&pool));
@@ -85,15 +87,37 @@ fn main() {
                 std::hint::black_box(agg.finalize(&base));
             },
         );
+        // Persistent fan-out: the whole round (reset + 16 adds +
+        // finalize) in ONE pool dispatch — shard workers stay pinned
+        // across the adds (bit-identical to the per-add path,
+        // rust/tests/agg_sharding.rs).
+        let ops: Vec<AddOp> = (0..clients)
+            .map(|_| AddOp::Planned {
+                values: &values,
+                plan: &plan,
+                n_c: 50.0,
+            })
+            .collect();
+        let mut out = Vec::new();
+        let r_batch = b.run(
+            &format!("sharded x{shards}: aggregate_batch x16 (1 dispatch)"),
+            Some(bytes),
+            || {
+                agg.aggregate_batch(&ops, &base, &mut out);
+                std::hint::black_box(&out);
+            },
+        );
         if r_mask.median_ns < best_masked {
             best_masked = r_mask.median_ns;
             best_shards = shards;
         }
         best_planned = best_planned.min(r_plan.median_ns);
+        best_batched = best_batched.min(r_batch.median_ns);
         let mut row = Json::obj();
         row.set("shards", Json::Num(shards as f64));
         row.set("add_masked_finalize_ns", Json::Num(r_mask.median_ns));
         row.set("add_planned_finalize_ns", Json::Num(r_plan.median_ns));
+        row.set("aggregate_batch_ns", Json::Num(r_batch.median_ns));
         sharded_rows.push(row);
     }
 
@@ -124,8 +148,21 @@ fn main() {
     let mut speedup = Json::obj();
     speedup.set("best_masked", Json::Num(r_ref.median_ns / best_masked));
     speedup.set("best_planned", Json::Num(r_ref.median_ns / best_planned));
+    speedup.set("best_batched", Json::Num(r_ref.median_ns / best_batched));
     speedup.set("best_shards", Json::Num(best_shards as f64));
     doc.set("speedup", speedup);
+    let mut simd_j = Json::obj();
+    simd_j.set("active", Json::Str(simd::active_name().to_string()));
+    simd_j.set(
+        "cpu_features",
+        Json::Arr(
+            simd::cpu_features()
+                .iter()
+                .map(|f| Json::Str((*f).to_string()))
+                .collect(),
+        ),
+    );
+    doc.set("simd", simd_j);
     doc.set("all_results", b.to_json());
 
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))

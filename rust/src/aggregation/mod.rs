@@ -19,7 +19,7 @@
 
 pub mod sharded;
 
-pub use sharded::{ShardedFedAvg, ShardingConfig};
+pub use sharded::{AddOp, ShardedFedAvg, ShardingConfig};
 
 /// Accumulates one round of client updates.
 pub struct FedAvg {

@@ -231,16 +231,50 @@ impl Shard {
     }
 }
 
+/// One queued client add for a batched round, borrowing the caller's
+/// buffers. [`ShardedFedAvg::aggregate_batch`] replays a round's worth
+/// of these in one pool dispatch (persistent fan-out: shard workers
+/// stay pinned across the adds instead of re-dispatching per client).
+pub enum AddOp<'a> {
+    /// A sub-model update restricted to `coord_mask` (DGC uplink).
+    Masked {
+        values: &'a [f32],
+        coord_mask: &'a [bool],
+        n_c: f64,
+    },
+    /// A raw-uplink update scanned through its pack plan's runs.
+    Planned {
+        values: &'a [f32],
+        plan: &'a PackPlan,
+        n_c: f64,
+    },
+    /// A full-model update (no-dropout baselines).
+    Full { values: &'a [f32], n_c: f64 },
+}
+
+/// Lifetime-erased twin of [`AddOp`], safe to move into the pool's
+/// `'static` jobs under the [`SliceView`] soundness contract.
+#[derive(Clone, Copy)]
+enum OpView {
+    Masked(SliceView<f32>, SliceView<bool>, f64),
+    Planned(SliceView<f32>, SliceView<(u32, u32)>, f64),
+    Full(SliceView<f32>, f64),
+}
+
 /// Sharded parallel FedAvg accumulator: the drop-in replacement for
 /// the retained [`FedAvg`](crate::aggregation::FedAvg) reference on
 /// the coordinator's aggregation path. Same per-coordinate semantics
 /// (paper Eq. 2 / Fig. 1 step 7), bit-identical output for every
 /// shard count, with `add_masked` / `add_full` / `add_planned` /
 /// `finalize` fanned out across the worker pool — one disjoint
-/// `(accum, weight)` slice pair per shard.
+/// `(accum, weight)` slice pair per shard. The engine drives whole
+/// rounds through [`ShardedFedAvg::aggregate_batch`]: one dispatch
+/// replays reset, every add and the finalize on pinned shard workers.
 pub struct ShardedFedAvg {
     num_params: usize,
     shards: Vec<Shard>,
+    /// Reused staging for a batch's lifetime-erased op list.
+    op_scratch: Vec<OpView>,
     /// Lazily-spawned shared pool: a single-shard aggregator never
     /// forces the worker threads into existence.
     pool: Arc<LazyPool>,
@@ -265,6 +299,7 @@ impl ShardedFedAvg {
         ShardedFedAvg {
             num_params,
             shards,
+            op_scratch: Vec::new(),
             pool,
         }
     }
@@ -367,17 +402,22 @@ impl ShardedFedAvg {
         });
     }
 
-    /// Finalize: coordinates nobody updated keep `base`'s value. Each
-    /// shard writes only its own disjoint range of the output.
-    pub fn finalize(&mut self, base: &[f32]) -> Vec<f32> {
+    /// Finalize into `out` (length `num_params`): coordinates nobody
+    /// updated keep `base`'s value. Each shard writes only its own
+    /// disjoint range of the output.
+    pub fn finalize_into(&mut self, base: &[f32], out: &mut [f32]) {
         assert_eq!(
             base.len(),
             self.num_params,
             "finalize: base buffer length != aggregator num_params"
         );
-        let mut out = vec![0.0f32; self.num_params];
+        assert_eq!(
+            out.len(),
+            self.num_params,
+            "finalize: output buffer length != aggregator num_params"
+        );
         let base_v = SliceView::new(base);
-        let out_v = SliceViewMut::new(&mut out);
+        let out_v = SliceViewMut::new(out);
         // SAFETY: see `add_masked`; each shard materializes only its
         // own `[start, start+len)` output range, and the shard
         // partition makes those ranges pairwise disjoint.
@@ -386,7 +426,114 @@ impl ShardedFedAvg {
             let o = unsafe { out_v.range_mut(s.start, s.len()) };
             s.finalize_into(b, o);
         });
+    }
+
+    /// Allocating wrapper around [`ShardedFedAvg::finalize_into`].
+    pub fn finalize(&mut self, base: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.num_params];
+        self.finalize_into(base, &mut out);
         out
+    }
+
+    /// Execute one round's aggregation — reset, every add in `ops`
+    /// order, finalize into `out` (resized to `num_params`; capacity
+    /// reused) — in a **single** pool dispatch: shard workers stay
+    /// pinned across the round's adds instead of being re-dispatched
+    /// per client. Bit-identical to calling [`ShardedFedAvg::reset`],
+    /// the matching `add_*` sequence and
+    /// [`ShardedFedAvg::finalize_into`]: each shard replays the ops in
+    /// caller order over its own coordinates, so no per-coordinate
+    /// operation sequence changes (enforced by
+    /// `rust/tests/agg_sharding.rs`).
+    pub fn aggregate_batch(&mut self, ops: &[AddOp], base: &[f32], out: &mut Vec<f32>) {
+        assert_eq!(
+            base.len(),
+            self.num_params,
+            "aggregate_batch: base buffer length != aggregator num_params"
+        );
+        for op in ops {
+            match op {
+                AddOp::Masked { values, coord_mask, .. } => {
+                    assert_eq!(
+                        values.len(),
+                        self.num_params,
+                        "aggregate_batch: values buffer length != aggregator num_params"
+                    );
+                    assert_eq!(
+                        coord_mask.len(),
+                        self.num_params,
+                        "aggregate_batch: coord_mask buffer length != aggregator num_params"
+                    );
+                }
+                AddOp::Planned { values, plan, .. } => {
+                    assert_eq!(
+                        values.len(),
+                        self.num_params,
+                        "aggregate_batch: values buffer length != aggregator num_params"
+                    );
+                    assert_eq!(
+                        plan.num_params(),
+                        self.num_params,
+                        "aggregate_batch: plan num_params != aggregator num_params"
+                    );
+                }
+                AddOp::Full { values, .. } => {
+                    assert_eq!(
+                        values.len(),
+                        self.num_params,
+                        "aggregate_batch: values buffer length != aggregator num_params"
+                    );
+                }
+            }
+        }
+        // Stage the lifetime-erased op list in a local (its heap
+        // buffer is recycled through `op_scratch` across rounds, but
+        // the Vec itself is moved out so the fan-out's view never
+        // aliases the `&mut self` borrow `for_each_shard` takes).
+        let mut staged = std::mem::take(&mut self.op_scratch);
+        staged.clear();
+        staged.extend(ops.iter().map(|op| match op {
+            AddOp::Masked { values, coord_mask, n_c } => {
+                OpView::Masked(SliceView::new(values), SliceView::new(coord_mask), *n_c)
+            }
+            AddOp::Planned { values, plan, n_c } => {
+                OpView::Planned(SliceView::new(values), SliceView::new(plan.runs()), *n_c)
+            }
+            AddOp::Full { values, n_c } => OpView::Full(SliceView::new(values), *n_c),
+        }));
+        out.clear();
+        out.resize(self.num_params, 0.0);
+        let ops_v = SliceView::new(&staged);
+        let base_v = SliceView::new(base);
+        let out_v = SliceViewMut::new(out);
+        // SAFETY: see `add_masked`/`finalize_into` — every view
+        // (including the staged op list, a local the fan-out cannot
+        // touch) is dereferenced only inside this fan-out, and output
+        // ranges are pairwise disjoint.
+        self.for_each_shard(move |s| {
+            s.reset();
+            let ops = unsafe { ops_v.get() };
+            for op in ops {
+                match *op {
+                    OpView::Masked(values, mask, n_c) => {
+                        let (v, m) = unsafe { (values.get(), mask.get()) };
+                        s.add_masked(v, m, n_c);
+                    }
+                    OpView::Planned(values, runs, n_c) => {
+                        let (v, r) = unsafe { (values.get(), runs.get()) };
+                        s.add_runs(v, r, n_c);
+                    }
+                    OpView::Full(values, n_c) => {
+                        let v = unsafe { values.get() };
+                        s.add_full(v, n_c);
+                    }
+                }
+            }
+            let b = unsafe { base_v.get() };
+            let o = unsafe { out_v.range_mut(s.start, s.len()) };
+            s.finalize_into(b, o);
+        });
+        self.op_scratch = staged;
     }
 
     /// Fraction of coordinates that received at least one update.
@@ -461,6 +608,74 @@ mod tests {
         // Degenerate: empty aggregator.
         let empty = ShardedFedAvg::new(0, 4, pool());
         assert_eq!(empty.coverage(), FedAvg::new(0).coverage());
+    }
+
+    #[test]
+    fn aggregate_batch_matches_per_add_dispatch_bitwise() {
+        use crate::model::submodel::SubModel;
+        use crate::runtime::native::mlp_spec;
+        let spec = mlp_spec("batch", 7, 12, 4, 2, 1, 0.1);
+        let n = spec.num_params;
+        let sm = SubModel::from_kept_indices(&spec, &[vec![0, 3, 4, 9, 11]]);
+        let plan = PackPlan::build(&spec, &sm);
+        let vals_a: Vec<f32> = (0..n).map(|i| (i as f32).sin()).collect();
+        let vals_b: Vec<f32> = (0..n).map(|i| (i as f32) * 0.01 - 1.0).collect();
+        let mask: Vec<bool> = (0..n).map(|i| i % 3 != 1).collect();
+        let base: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        for shards in [1usize, 2, 7, 40] {
+            let mut per_add = ShardedFedAvg::new(n, shards, pool());
+            per_add.reset();
+            per_add.add_masked(&vals_a, &mask, 10.0);
+            per_add.add_planned(&vals_b, &plan, 3.0);
+            per_add.add_full(&vals_a, 0.5);
+            let want = per_add.finalize(&base);
+
+            let mut batched = ShardedFedAvg::new(n, shards, pool());
+            let ops = vec![
+                AddOp::Masked {
+                    values: &vals_a,
+                    coord_mask: &mask,
+                    n_c: 10.0,
+                },
+                AddOp::Planned {
+                    values: &vals_b,
+                    plan: &plan,
+                    n_c: 3.0,
+                },
+                AddOp::Full {
+                    values: &vals_a,
+                    n_c: 0.5,
+                },
+            ];
+            let mut out = Vec::new();
+            batched.aggregate_batch(&ops, &base, &mut out);
+            for (i, (a, b)) in out.iter().zip(&want).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "shards={shards} coord {i}");
+            }
+            // The batch resets internally: replay on the same
+            // aggregator (reused output buffer) must be identical.
+            batched.aggregate_batch(&ops, &base, &mut out);
+            for (a, b) in out.iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            // Empty batch: pure reset + finalize.
+            batched.aggregate_batch(&[], &base, &mut out);
+            assert_eq!(out, base);
+        }
+    }
+
+    #[test]
+    fn finalize_into_matches_finalize() {
+        let mut a = ShardedFedAvg::new(10, 3, pool());
+        let mut b = ShardedFedAvg::new(10, 3, pool());
+        let vals = [0.5f32; 10];
+        a.add_full(&vals, 2.0);
+        b.add_full(&vals, 2.0);
+        let base = [9.0f32; 10];
+        let want = a.finalize(&base);
+        let mut out = vec![0.0f32; 10];
+        b.finalize_into(&base, &mut out);
+        assert_eq!(out, want);
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //! rounds it participates in) and its private RNG stream.
 
 use crate::compression::dgc::{DgcConfig, DgcState};
+use crate::runtime::{BatchInput, EpochData};
 use crate::util::rng::Pcg64;
 
 pub struct ClientState {
@@ -18,6 +19,17 @@ pub struct ClientState {
     pub rng: Pcg64,
     /// Rounds this client participated in (diagnostics / Fig. 4).
     pub participations: usize,
+    /// Recycled epoch-assembly buffer: `epoch_data_into` refills it at
+    /// each dispatch, so a client's epoch assembly allocates nothing
+    /// after its first participation.
+    pub epoch_buf: EpochData,
+}
+
+fn empty_epoch() -> EpochData {
+    EpochData {
+        xs: BatchInput::F32(Vec::new()),
+        ys: Vec::new(),
+    }
 }
 
 impl ClientState {
@@ -28,7 +40,21 @@ impl ClientState {
             dgc: DgcState::new(dgc_cfg),
             rng: Pcg64::with_stream(seed ^ 0xc11e, id as u64 + 1),
             participations: 0,
+            epoch_buf: empty_epoch(),
         }
+    }
+
+    /// Move the epoch buffer out for a dispatched round (the job owns
+    /// its training data on the worker thread), leaving an empty
+    /// placeholder behind.
+    pub fn take_epoch_buf(&mut self) -> EpochData {
+        std::mem::replace(&mut self.epoch_buf, empty_epoch())
+    }
+
+    /// Return the epoch buffer after the round so the next dispatch
+    /// reuses its capacity.
+    pub fn put_epoch_buf(&mut self, data: EpochData) {
+        self.epoch_buf = data;
     }
 
     /// Move the DGC buffers out for a dispatched round (the scheduler

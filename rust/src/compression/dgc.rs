@@ -17,8 +17,16 @@
 //!
 //! Each FL client owns one [`DgcState`]; the server decodes with
 //! [`decode`] (shared wire format from [`super::sparse`]).
+//!
+//! The hot path is [`DgcState::compress_into`]: the momentum scan
+//! dispatches through [`crate::tensor::simd`] (bit-identical scalar /
+//! AVX2), the top-k value gather vectorizes, and the wire message plus
+//! varint staging go into caller-provided sinks — zero heap
+//! allocations once the accumulators and sinks are warm. The
+//! allocating [`DgcState::compress`] wrapper delegates byte-for-byte.
 
 use crate::compression::sparse;
+use crate::tensor::simd;
 
 #[derive(Clone, Debug)]
 pub struct DgcConfig {
@@ -91,10 +99,23 @@ impl DgcState {
         crate::tensor::l2_norm(&self.v)
     }
 
-    /// Compress one round's delta. Returns the wire message; internal
-    /// accumulators keep everything that was not sent.
-    pub fn compress(&mut self, delta: &[f32]) -> Vec<u8> {
+    /// Compress one round's delta into `out` (cleared first; capacity
+    /// reused), staging the varint index candidate in
+    /// `varint_scratch`. Internal accumulators keep everything that
+    /// was not sent. Allocation-free once the accumulators (first call
+    /// per model size) and sinks are warm.
+    pub fn compress_into(
+        &mut self,
+        delta: &[f32],
+        varint_scratch: &mut Vec<u8>,
+        out: &mut Vec<u8>,
+    ) {
         let n = delta.len();
+        if n == 0 {
+            out.clear();
+            sparse::encode_sparse_into(&[], &[], 0, varint_scratch, out);
+            return;
+        }
         if self.u.len() != n {
             self.u = vec![0.0; n];
             self.v = vec![0.0; n];
@@ -109,12 +130,10 @@ impl DgcState {
             }
         }
 
-        // (1) momentum correction + (2) accumulation.
+        // (1) momentum correction + (2) accumulation (elementwise,
+        // SIMD-dispatched, bit-identical to the scalar scan).
         let m = self.cfg.momentum;
-        for i in 0..n {
-            self.u[i] = m * self.u[i] + delta[i] * scale;
-            self.v[i] += self.u[i];
-        }
+        simd::dgc_scan(&mut self.u, &mut self.v, delta, m, scale);
 
         // Top-k selection on |v|.
         let k = ((n as f64) * self.cfg.sparsity).ceil() as usize;
@@ -140,13 +159,22 @@ impl DgcState {
         idx_scratch.sort_unstable();
 
         val_scratch.clear();
-        val_scratch.extend(idx_scratch.iter().map(|&i| v[i as usize]));
+        simd::gather_extend(val_scratch, v, idx_scratch);
         // (4) masked momentum: clear sent coordinates in both buffers.
         for &i in idx_scratch.iter() {
             v[i as usize] = 0.0;
             u[i as usize] = 0.0;
         }
-        sparse::encode_sparse(idx_scratch, val_scratch, n)
+        out.clear();
+        sparse::encode_sparse_into(idx_scratch, val_scratch, n, varint_scratch, out);
+    }
+
+    /// Allocating wrapper around [`DgcState::compress_into`].
+    pub fn compress(&mut self, delta: &[f32]) -> Vec<u8> {
+        let mut out = Vec::new();
+        let mut scratch = Vec::new();
+        self.compress_into(delta, &mut scratch, &mut out);
+        out
     }
 }
 
@@ -302,6 +330,22 @@ mod tests {
         assert_eq!(cl.u, st.u);
         assert!(cl.idx_scratch.is_empty());
         assert!(cl.val_scratch.is_empty());
+    }
+
+    #[test]
+    fn compress_into_matches_allocating_api_and_reuses_sinks() {
+        let mut a = DgcState::new(DgcConfig::default());
+        let mut b = DgcState::new(DgcConfig::default());
+        let mut scratch = Vec::new();
+        let mut out = Vec::new();
+        for r in 0..5 {
+            let d = gauss(512, 40 + r);
+            let want = a.compress(&d);
+            b.compress_into(&d, &mut scratch, &mut out);
+            assert_eq!(out, want, "round {r}");
+        }
+        assert_eq!(a.v, b.v);
+        assert_eq!(a.u, b.u);
     }
 
     #[test]

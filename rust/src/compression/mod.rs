@@ -17,13 +17,29 @@
 //! byte counts fed to the network simulator are the actual encoded
 //! sizes and the distortion the training loop sees is the actual
 //! quantization/sparsification error.
+//!
+//! ## Allocation-free entry points
+//!
+//! The hot path runs through the `*_into` methods: every codec writes
+//! its wire bytes into a caller-provided [`Encoded`] and decodes into
+//! a caller-provided `Vec<f32>`, drawing internal scratch (block
+//! buffers, streamed Hadamard signs, varint staging) from the
+//! [`Workspace`] arena — so a warmed client round encodes and decodes
+//! with **zero heap allocations** (`rust/tests/zero_alloc.rs`). The
+//! allocating `encode`/`decode` wrappers delegate to `*_into` and are
+//! byte-identical to them; inner loops dispatch through
+//! [`crate::tensor::simd`] and are byte-identical between the SIMD
+//! and scalar paths (`rust/tests/simd_conformance.rs`). See
+//! `rust/src/compression/README.md` for the scratch contract.
 
 pub mod dgc;
 pub mod quant;
 pub mod sparse;
 
+use crate::tensor::kernels::Workspace;
+
 /// A wire message with its true encoded size.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct Encoded {
     pub bytes: Vec<u8>,
 }
@@ -37,12 +53,36 @@ impl Encoded {
 /// Downlink codec interface (dense f32 payloads). `Sync` because the
 /// scheduler shares one codec across the worker pool (codecs are
 /// stateless; shared randomness is derived from the per-call seed).
+///
+/// Implementations provide the allocation-free `*_into` methods;
+/// `encode`/`decode` are convenience wrappers that allocate and must
+/// stay byte-identical (they delegate by default).
 pub trait DenseCodec: Send + Sync {
     fn name(&self) -> &'static str;
-    /// Encode; `seed` lets encoder+decoder derive shared randomness
-    /// (Hadamard signs) without shipping it.
-    fn encode(&self, values: &[f32], seed: u64) -> Encoded;
-    fn decode(&self, enc: &Encoded, seed: u64) -> Vec<f32>;
+
+    /// Encode into `out` (cleared first; capacity reused). `seed` lets
+    /// encoder+decoder derive shared randomness (Hadamard signs)
+    /// without shipping it; `ws` supplies internal scratch.
+    fn encode_into(&self, values: &[f32], seed: u64, ws: &mut Workspace, out: &mut Encoded);
+
+    /// Decode into `out` (cleared first; capacity reused).
+    fn decode_into(&self, enc: &Encoded, seed: u64, ws: &mut Workspace, out: &mut Vec<f32>);
+
+    /// Allocating wrapper around [`DenseCodec::encode_into`].
+    fn encode(&self, values: &[f32], seed: u64) -> Encoded {
+        let mut ws = Workspace::new();
+        let mut out = Encoded::default();
+        self.encode_into(values, seed, &mut ws, &mut out);
+        out
+    }
+
+    /// Allocating wrapper around [`DenseCodec::decode_into`].
+    fn decode(&self, enc: &Encoded, seed: u64) -> Vec<f32> {
+        let mut ws = Workspace::new();
+        let mut out = Vec::new();
+        self.decode_into(enc, seed, &mut ws, &mut out);
+        out
+    }
 }
 
 /// Identity codec: raw little-endian f32 (the No-Compression baseline).
@@ -53,21 +93,30 @@ impl DenseCodec for RawF32 {
         "raw_f32"
     }
 
-    fn encode(&self, values: &[f32], _seed: u64) -> Encoded {
-        let mut bytes = Vec::with_capacity(4 + values.len() * 4);
+    fn encode_into(&self, values: &[f32], _seed: u64, _ws: &mut Workspace, out: &mut Encoded) {
+        let bytes = &mut out.bytes;
+        bytes.clear();
+        bytes.reserve(4 + values.len() * 4);
         bytes.extend_from_slice(&(values.len() as u32).to_le_bytes());
         for v in values {
             bytes.extend_from_slice(&v.to_le_bytes());
         }
-        Encoded { bytes }
     }
 
-    fn decode(&self, enc: &Encoded, _seed: u64) -> Vec<f32> {
+    fn decode_into(&self, enc: &Encoded, _seed: u64, _ws: &mut Workspace, out: &mut Vec<f32>) {
         let n = u32::from_le_bytes(enc.bytes[0..4].try_into().unwrap()) as usize;
-        enc.bytes[4..4 + 4 * n]
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect()
+        assert!(
+            enc.bytes.len() >= 4 + 4 * n,
+            "raw_f32 decode: encoded buffer holds {} bytes but its header claims \
+             {n} f32 values ({} bytes) — truncated or corrupt message",
+            enc.bytes.len(),
+            4 + 4 * n
+        );
+        out.clear();
+        out.reserve(n);
+        for c in enc.bytes[4..4 + 4 * n].chunks_exact(4) {
+            out.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
     }
 }
 
@@ -91,6 +140,30 @@ mod tests {
         let enc = c.encode(&xs, 1);
         assert_eq!(enc.wire_bytes(), 4 + 37 * 4);
         assert_eq!(c.decode(&enc, 1), xs);
+    }
+
+    #[test]
+    fn raw_into_reuses_buffers_and_matches_allocating_api() {
+        let xs: Vec<f32> = (0..100).map(|i| i as f32 * 0.25).collect();
+        let c = RawF32;
+        let mut ws = Workspace::new();
+        let mut enc = Encoded::default();
+        let mut dec = Vec::new();
+        for run in 0..3 {
+            c.encode_into(&xs, 1, &mut ws, &mut enc);
+            assert_eq!(enc.bytes, c.encode(&xs, 1).bytes, "run {run}");
+            c.decode_into(&enc, 1, &mut ws, &mut dec);
+            assert_eq!(dec, xs, "run {run}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "raw_f32 decode")]
+    fn raw_decode_names_the_buffer_on_truncation() {
+        let c = RawF32;
+        let mut enc = c.encode(&[1.0, 2.0, 3.0], 0);
+        enc.bytes.truncate(8); // header claims 3 values, payload cut
+        let _ = c.decode(&enc, 0);
     }
 
     #[test]

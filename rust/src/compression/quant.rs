@@ -9,62 +9,51 @@
 //!   s = max|y|,  q_i = round(y_i/s · 127) ∈ i8
 //! Wire format: `u32 length ‖ per block (f32 scale ‖ B × i8)`.
 //! The Rademacher diagonal `d` is derived from the shared seed, so it
-//! costs zero wire bytes.
-
-use std::sync::{Arc, Mutex};
+//! costs zero wire bytes — and it is **streamed** block by block from
+//! the seed's PRNG stream into workspace scratch, so neither encode
+//! nor decode materializes (or caches) a payload-sized sign vector:
+//! the codec is stateless and allocation-free against a warm
+//! [`Workspace`] (the sign *values* are identical to generating the
+//! whole padded vector up front, because the stream is consumed in
+//! block order). Trade-off vs the deleted coordinator-side sign
+//! cache: an encode-then-decode of the same payload now generates the
+//! stream twice (one `next_u64` per coordinate each) instead of once —
+//! accepted for statelessness and zero allocation; batching the draw
+//! (e.g. 64 signs per `next_u64`) would change the seed-derived sign
+//! sequence and is left as a ROADMAP follow-on.
+//!
+//! Rounding is ties-to-even via [`simd::quantize_unit`] (the
+//! magic-constant trick), computed identically by the scalar and AVX2
+//! paths — encodings are byte-identical between the two (enforced by
+//! `rust/tests/simd_conformance.rs`); ties-to-even also matches the
+//! Pallas twin (`jnp.round`).
 
 use crate::compression::{DenseCodec, Encoded};
+use crate::tensor::kernels::Workspace;
+use crate::tensor::simd;
 use crate::util::rng::Pcg64;
 
 pub const DEFAULT_BLOCK: usize = 256;
 
-/// Cached sign vectors the encoder state holds. Seeds are unique per
-/// (round, client), so the realistic hit is the decode immediately
-/// following an encode of the same payload — the cap only needs to
-/// cover the worker threads' concurrently in-flight encode/decode
-/// pairs, and a small cap bounds retained memory (each entry is a
-/// model-sized f32 vector).
-const SIGN_CACHE_CAP: usize = 8;
+/// Stream tag keeping the sign sequence independent of other per-seed
+/// randomness (cohort sampling etc.).
+const SIGN_STREAM: u64 = 0x5167;
 
-/// One cached Rademacher diagonal: `(seed, padded_len, signs)`.
-type SignEntry = (u64, usize, Arc<Vec<f32>>);
+/// The seed's sign stream; consumed in block order by encode/decode
+/// (public so reference implementations — the conformance suite's
+/// scalar-primitive encoder — derive identical signs).
+pub fn sign_stream(seed: u64) -> Pcg64 {
+    Pcg64::with_stream(seed, SIGN_STREAM)
+}
 
+/// Stateless Hadamard + int8 codec (see module docs).
 pub struct HadamardQuant8 {
     pub block: usize,
-    /// Rademacher sign cache keyed by `(seed, padded_len)` — encode and
-    /// decode of the same payload derive identical signs, so caching
-    /// halves the sign generation per client round (and a stable seed
-    /// reuses them outright). Entries are invalidated by key: a new
-    /// seed or length simply misses and regenerates; LRU order evicts.
-    signs: Mutex<Vec<SignEntry>>,
 }
 
 impl HadamardQuant8 {
     pub fn new(block: usize) -> HadamardQuant8 {
-        HadamardQuant8 {
-            block,
-            signs: Mutex::new(Vec::new()),
-        }
-    }
-
-    fn signs_for(&self, seed: u64, len: usize) -> Arc<Vec<f32>> {
-        {
-            let mut g = self.signs.lock().unwrap();
-            if let Some(pos) = g.iter().position(|e| e.0 == seed && e.1 == len) {
-                let e = g.remove(pos); // move to back = most recent
-                let s = e.2.clone();
-                g.push(e);
-                return s;
-            }
-        }
-        // Generate outside the lock (the expensive part).
-        let fresh = Arc::new(signs_for(seed, len));
-        let mut g = self.signs.lock().unwrap();
-        if g.len() >= SIGN_CACHE_CAP {
-            g.remove(0);
-        }
-        g.push((seed, len, fresh.clone()));
-        fresh
+        HadamardQuant8 { block }
     }
 }
 
@@ -75,31 +64,10 @@ impl Default for HadamardQuant8 {
 }
 
 /// In-place fast Walsh–Hadamard transform (unnormalized butterflies);
-/// caller applies the 1/√B normalization.
+/// caller applies the 1/√B normalization. Dispatches through the SIMD
+/// layer (bit-identical to the scalar butterflies for every length).
 pub fn fwht(v: &mut [f32]) {
-    let n = v.len();
-    debug_assert!(n.is_power_of_two());
-    let mut h = 1;
-    while h < n {
-        let stride = h * 2;
-        let mut base = 0;
-        while base < n {
-            for i in base..base + h {
-                let a = v[i];
-                let b = v[i + h];
-                v[i] = a + b;
-                v[i + h] = a - b;
-            }
-            base += stride;
-        }
-        h = stride;
-    }
-}
-
-fn signs_for(seed: u64, len: usize) -> Vec<f32> {
-    // Stream tag keeps the sign sequence independent of other per-seed
-    // randomness (cohort sampling etc.).
-    Pcg64::with_stream(seed, 0x5167).rademacher(len)
+    simd::fwht(v);
 }
 
 impl DenseCodec for HadamardQuant8 {
@@ -107,75 +75,71 @@ impl DenseCodec for HadamardQuant8 {
         "quant8"
     }
 
-    fn encode(&self, values: &[f32], seed: u64) -> Encoded {
+    fn encode_into(&self, values: &[f32], seed: u64, ws: &mut Workspace, out: &mut Encoded) {
         let b = self.block;
         let n = values.len();
         let nblocks = n.div_ceil(b);
-        let padded = nblocks * b;
-        let signs = self.signs_for(seed, padded);
         let inv_sqrt = 1.0 / (b as f32).sqrt();
+        let mut signs_rng = sign_stream(seed);
 
-        let mut bytes = Vec::with_capacity(4 + nblocks * (4 + b));
+        let bytes = &mut out.bytes;
+        bytes.clear();
+        bytes.reserve(4 + nblocks * (4 + b));
         bytes.extend_from_slice(&(n as u32).to_le_bytes());
-        let mut buf = vec![0.0f32; b];
-        let mut qbuf = vec![0u8; b];
+        let mut buf = ws.take_uncleared(b);
+        let mut signs = ws.take_uncleared(b);
         for blk in 0..nblocks {
             let start = blk * b;
             let take = (n - start).min(b);
             buf[..take].copy_from_slice(&values[start..start + take]);
             buf[take..].fill(0.0);
-            for (v, s) in buf.iter_mut().zip(&signs[start..start + b]) {
-                *v *= s;
-            }
-            fwht(&mut buf);
+            signs_rng.rademacher_fill(&mut signs);
+            simd::mul_inplace(&mut buf, &signs);
+            simd::fwht(&mut buf);
             // max|buf| without the per-element normalization multiply
             // (pulled out of the loop; §Perf).
-            let mut m = 0.0f32;
-            for v in &buf {
-                m = m.max(v.abs());
-            }
+            let m = simd::absmax(&buf);
             let scale = m * inv_sqrt;
             bytes.extend_from_slice(&scale.to_le_bytes());
-            // Quantize into a stack buffer, then one memcpy — avoids the
-            // bounds-checked byte-at-a-time push (§Perf).
+            // Quantize straight into the wire buffer (no staging copy).
             let qs = if scale > 0.0 { 127.0 / m } else { 0.0 };
-            for (dst, v) in qbuf.iter_mut().zip(&buf) {
-                *dst = (v * qs).round().clamp(-127.0, 127.0) as i8 as u8;
-            }
-            bytes.extend_from_slice(&qbuf);
+            let base = bytes.len();
+            bytes.resize(base + b, 0);
+            simd::quantize_block(&buf, qs, &mut bytes[base..]);
         }
-        Encoded { bytes }
+        ws.give(buf);
+        ws.give(signs);
     }
 
-    fn decode(&self, enc: &Encoded, seed: u64) -> Vec<f32> {
+    fn decode_into(&self, enc: &Encoded, seed: u64, ws: &mut Workspace, out: &mut Vec<f32>) {
         let b = self.block;
         let n = u32::from_le_bytes(enc.bytes[0..4].try_into().unwrap()) as usize;
         let nblocks = n.div_ceil(b);
-        let padded = nblocks * b;
-        let signs = self.signs_for(seed, padded);
         let inv_sqrt = 1.0 / (b as f32).sqrt();
+        let mut signs_rng = sign_stream(seed);
 
-        let mut out = Vec::with_capacity(n);
-        let mut buf = vec![0.0f32; b];
+        out.clear();
+        out.reserve(n);
+        let mut buf = ws.take_uncleared(b);
+        let mut signs = ws.take_uncleared(b);
         let mut off = 4;
         for blk in 0..nblocks {
-            let scale =
-                f32::from_le_bytes(enc.bytes[off..off + 4].try_into().unwrap());
+            let scale = f32::from_le_bytes(enc.bytes[off..off + 4].try_into().unwrap());
             off += 4;
-            for (v, &q) in buf.iter_mut().zip(&enc.bytes[off..off + b]) {
-                *v = (q as i8) as f32 / 127.0 * scale;
-            }
+            simd::dequantize_block(&enc.bytes[off..off + b], scale, &mut buf);
             off += b;
             // H is self-inverse under the 1/√B normalization: applying the
             // unnormalized FWHT then multiplying by 1/√B inverts encode.
-            fwht(&mut buf);
+            simd::fwht(&mut buf);
+            signs_rng.rademacher_fill(&mut signs);
             let start = blk * b;
             let take = (n - start).min(b);
-            for i in 0..take {
-                out.push(buf[i] * inv_sqrt * signs[start + i]);
-            }
+            let base = out.len();
+            out.resize(base + take, 0.0);
+            simd::scaled_signed_mul(&buf[..take], &signs[..take], inv_sqrt, &mut out[base..]);
         }
-        out
+        ws.give(buf);
+        ws.give(signs);
     }
 }
 
@@ -245,24 +209,35 @@ mod tests {
     }
 
     #[test]
-    fn sign_cache_hits_and_invalidates() {
+    fn streamed_signs_match_whole_vector_generation() {
+        // The per-block sign stream must equal generating the whole
+        // padded diagonal up front — the invariant that lets encode
+        // and decode stream independently.
+        let padded = 3 * DEFAULT_BLOCK;
+        let whole = sign_stream(9).rademacher(padded);
+        let mut streamed = vec![0.0f32; padded];
+        let mut rng = sign_stream(9);
+        for blk in 0..3 {
+            rng.rademacher_fill(&mut streamed[blk * DEFAULT_BLOCK..(blk + 1) * DEFAULT_BLOCK]);
+        }
+        assert_eq!(whole, streamed);
+    }
+
+    #[test]
+    fn into_api_is_byte_identical_to_allocating_api() {
         let c = HadamardQuant8::default();
-        let a = c.signs_for(7, 512);
-        let b = c.signs_for(7, 512);
-        assert!(std::sync::Arc::ptr_eq(&a, &b), "same (seed, len) must hit");
-        let d = c.signs_for(8, 512); // seed change → regenerate
-        assert!(!std::sync::Arc::ptr_eq(&a, &d));
-        let e = c.signs_for(7, 256); // length change → regenerate
-        assert_eq!(e.len(), 256);
-        assert!(!std::sync::Arc::ptr_eq(&a, &e));
-        // Cached signs are exactly the seed-derived sequence.
-        assert_eq!(*a, signs_for(7, 512));
-        // Encode/decode agree through the cache (and with fresh state).
-        let xs = gauss(512, 1, 1.0);
-        let enc = c.encode(&xs, 7);
-        let fresh = HadamardQuant8::default();
-        let enc2 = fresh.encode(&xs, 7);
-        assert_eq!(enc.bytes, enc2.bytes);
+        let mut ws = Workspace::new();
+        for n in [1usize, 255, 256, 257, 1000] {
+            let xs = gauss(n, n as u64, 1.0);
+            let mut enc = Encoded::default();
+            c.encode_into(&xs, 7, &mut ws, &mut enc);
+            assert_eq!(enc.bytes, c.encode(&xs, 7).bytes, "n={n}");
+            let mut dec = Vec::new();
+            c.decode_into(&enc, 7, &mut ws, &mut dec);
+            let dec2 = c.decode(&enc, 7);
+            assert_eq!(dec, dec2, "n={n}");
+            assert_eq!(dec.len(), n);
+        }
     }
 
     #[test]

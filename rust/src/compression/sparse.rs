@@ -9,6 +9,12 @@
 //!               short vectors).
 //! * `Varint`  — delta-gap LEB128 (usually wins: sorted indices have
 //!               small gaps at DGC sparsities).
+//!
+//! The `*_into` entry points are the hot path: they write into
+//! caller-provided sinks (wire output, varint staging, decoded
+//! index/value buffers), so a warm client round encodes and decodes
+//! sparse messages with zero heap allocations; the allocating
+//! wrappers delegate to them byte-for-byte.
 
 /// LEB128 unsigned varint.
 pub fn write_varint(mut v: u64, out: &mut Vec<u8>) {
@@ -44,24 +50,30 @@ enum IndexScheme {
     Varint = 2,
 }
 
-/// Encode sorted indices with the smallest applicable scheme.
-/// Format: `u8 scheme ‖ u32 k ‖ payload`.
-pub fn encode_indices(indices: &[u32], n: usize, out: &mut Vec<u8>) {
+/// Encode sorted indices with the smallest applicable scheme, staging
+/// the varint candidate in `varint_scratch` (cleared first; capacity
+/// reused). Format: `u8 scheme ‖ u32 k ‖ payload`.
+pub fn encode_indices_into(
+    indices: &[u32],
+    n: usize,
+    varint_scratch: &mut Vec<u8>,
+    out: &mut Vec<u8>,
+) {
     debug_assert!(indices.windows(2).all(|w| w[0] < w[1]), "sorted+unique");
     let k = indices.len();
     let bitmap_sz = n.div_ceil(8);
     let u32_sz = 4 * k;
-    let mut varint_payload = Vec::with_capacity(2 * k);
+    varint_scratch.clear();
     let mut prev = 0u32;
     for (i, &idx) in indices.iter().enumerate() {
         let gap = if i == 0 { idx } else { idx - prev - 1 };
-        write_varint(gap as u64, &mut varint_payload);
+        write_varint(gap as u64, varint_scratch);
         prev = idx;
     }
-    let (scheme, payload_len) = [
+    let (scheme, _) = [
         (IndexScheme::Bitmap, bitmap_sz),
         (IndexScheme::U32, u32_sz),
-        (IndexScheme::Varint, varint_payload.len()),
+        (IndexScheme::Varint, varint_scratch.len()),
     ]
     .into_iter()
     .min_by_key(|(_, sz)| *sz)
@@ -71,28 +83,37 @@ pub fn encode_indices(indices: &[u32], n: usize, out: &mut Vec<u8>) {
     out.extend_from_slice(&(k as u32).to_le_bytes());
     match scheme {
         IndexScheme::Bitmap => {
-            let mut bm = vec![0u8; bitmap_sz];
+            // Build the bitmap in place on the output sink (zeroed
+            // range, then set bits) — no staging buffer.
+            let base = out.len();
+            out.resize(base + bitmap_sz, 0);
             for &i in indices {
-                bm[(i as usize) / 8] |= 1 << (i % 8);
+                out[base + (i as usize) / 8] |= 1 << (i % 8);
             }
-            out.extend_from_slice(&bm);
         }
         IndexScheme::U32 => {
             for &i in indices {
                 out.extend_from_slice(&i.to_le_bytes());
             }
         }
-        IndexScheme::Varint => out.extend_from_slice(&varint_payload),
+        IndexScheme::Varint => out.extend_from_slice(varint_scratch),
     }
-    debug_assert_eq!(payload_len, payload_len); // silence unused in release
 }
 
-/// Decode indices; returns (indices, bytes consumed).
-pub fn decode_indices(bytes: &[u8], n: usize) -> (Vec<u32>, usize) {
+/// Allocating wrapper around [`encode_indices_into`].
+pub fn encode_indices(indices: &[u32], n: usize, out: &mut Vec<u8>) {
+    let mut scratch = Vec::with_capacity(2 * indices.len());
+    encode_indices_into(indices, n, &mut scratch, out);
+}
+
+/// Decode indices into `out` (cleared first; capacity reused); returns
+/// bytes consumed.
+pub fn decode_indices_into(bytes: &[u8], n: usize, out: &mut Vec<u32>) -> usize {
     let scheme = bytes[0];
     let k = u32::from_le_bytes(bytes[1..5].try_into().unwrap()) as usize;
     let mut pos = 5;
-    let mut out = Vec::with_capacity(k);
+    out.clear();
+    out.reserve(k);
     match scheme {
         0 => {
             let bitmap_sz = n.div_ceil(8);
@@ -122,31 +143,63 @@ pub fn decode_indices(bytes: &[u8], n: usize) -> (Vec<u32>, usize) {
         s => panic!("unknown index scheme {s}"),
     }
     debug_assert_eq!(out.len(), k);
-    (out, pos)
+    pos
 }
 
-/// Full sparse-vector message: indices + f32 values.
-/// Format: `u32 n ‖ indices ‖ k × f32`.
-pub fn encode_sparse(indices: &[u32], values: &[f32], n: usize) -> Vec<u8> {
+/// Allocating wrapper: decode indices; returns (indices, bytes consumed).
+pub fn decode_indices(bytes: &[u8], n: usize) -> (Vec<u32>, usize) {
+    let mut out = Vec::new();
+    let used = decode_indices_into(bytes, n, &mut out);
+    (out, used)
+}
+
+/// Full sparse-vector message into `out` (appended; callers clear).
+/// Format: `u32 n ‖ indices ‖ k × f32`. `varint_scratch` stages the
+/// varint index candidate (capacity reused).
+pub fn encode_sparse_into(
+    indices: &[u32],
+    values: &[f32],
+    n: usize,
+    varint_scratch: &mut Vec<u8>,
+    out: &mut Vec<u8>,
+) {
     assert_eq!(indices.len(), values.len());
-    let mut out = Vec::with_capacity(9 + indices.len() * 6);
+    out.reserve(9 + indices.len() * 6);
     out.extend_from_slice(&(n as u32).to_le_bytes());
-    encode_indices(indices, n, &mut out);
+    encode_indices_into(indices, n, varint_scratch, out);
     for v in values {
         out.extend_from_slice(&v.to_le_bytes());
     }
+}
+
+/// Allocating wrapper around [`encode_sparse_into`].
+pub fn encode_sparse(indices: &[u32], values: &[f32], n: usize) -> Vec<u8> {
+    let mut out = Vec::with_capacity(9 + indices.len() * 6);
+    let mut scratch = Vec::with_capacity(2 * indices.len());
+    encode_sparse_into(indices, values, n, &mut scratch, &mut out);
     out
 }
 
-pub fn decode_sparse(bytes: &[u8]) -> (Vec<u32>, Vec<f32>, usize) {
+/// Decode a sparse message into caller-provided index/value sinks
+/// (cleared first; capacity reused); returns the dense length `n`.
+pub fn decode_sparse_into(bytes: &[u8], indices: &mut Vec<u32>, values: &mut Vec<f32>) -> usize {
     let n = u32::from_le_bytes(bytes[0..4].try_into().unwrap()) as usize;
-    let (indices, used) = decode_indices(&bytes[4..], n);
+    let used = decode_indices_into(&bytes[4..], n, indices);
     let mut pos = 4 + used;
-    let mut values = Vec::with_capacity(indices.len());
+    values.clear();
+    values.reserve(indices.len());
     for _ in 0..indices.len() {
         values.push(f32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()));
         pos += 4;
     }
+    n
+}
+
+/// Allocating wrapper around [`decode_sparse_into`].
+pub fn decode_sparse(bytes: &[u8]) -> (Vec<u32>, Vec<f32>, usize) {
+    let mut indices = Vec::new();
+    let mut values = Vec::new();
+    let n = decode_sparse_into(bytes, &mut indices, &mut values);
     (indices, values, n)
 }
 
@@ -185,6 +238,25 @@ mod tests {
             let (got, used) = decode_indices(&buf, n);
             assert_eq!(got, idx, "n={n} k={k}");
             assert_eq!(used, buf.len());
+        }
+    }
+
+    #[test]
+    fn into_api_reuses_sinks_and_matches_allocating_api() {
+        let mut scratch = Vec::new();
+        let mut wire = Vec::new();
+        let mut idx_out = Vec::new();
+        let mut val_out = Vec::new();
+        for (n, k) in [(1000usize, 5usize), (800, 400), (10_000, 100), (8, 0)] {
+            let idx = random_indices(n, k, 7 * (n + k) as u64);
+            let vals: Vec<f32> = idx.iter().map(|&i| i as f32 * 0.5).collect();
+            wire.clear();
+            encode_sparse_into(&idx, &vals, n, &mut scratch, &mut wire);
+            assert_eq!(wire, encode_sparse(&idx, &vals, n), "n={n} k={k}");
+            let got_n = decode_sparse_into(&wire, &mut idx_out, &mut val_out);
+            assert_eq!(got_n, n);
+            assert_eq!(idx_out, idx);
+            assert_eq!(val_out, vals);
         }
     }
 

@@ -64,6 +64,12 @@ pub struct Experiment {
 
 impl Experiment {
     pub fn build(cfg: &ExperimentConfig) -> Result<Experiment> {
+        // Resolve the SIMD dispatch level once, before any kernel or
+        // codec runs (workspace construction re-checks the cached
+        // probe; this keeps even the first client round off the
+        // detection path). Scalar and SIMD paths are bit-identical,
+        // so the choice never affects results.
+        crate::tensor::simd::init();
         let (runtime, spec, init): (RuntimeHost, VariantSpec, Vec<f32>) =
             match cfg.backend {
                 Backend::Pjrt => {

@@ -34,8 +34,7 @@ pub use experiment::{run_experiment, Experiment};
 use std::sync::Arc;
 
 use crate::aggregation::FedAvg;
-use crate::compression::dgc;
-use crate::compression::DenseCodec;
+use crate::compression::{dgc, sparse, DenseCodec, Encoded};
 use crate::dropout::SubmodelStrategy;
 use crate::model::manifest::VariantSpec;
 use crate::model::packing::PackPlan;
@@ -55,6 +54,10 @@ pub struct ClientRoundOutcome {
     pub epoch_flops: f64,
     /// Server-side reconstruction of the client's post-training model
     /// (full coordinate space) + which coordinates it speaks for.
+    /// Both buffers are drawn from the job's [`Workspace`] and escape
+    /// with the outcome; the engine hands them back to the workspace
+    /// pool once the round's aggregation has consumed them, closing
+    /// the allocation-free loop.
     pub reconstructed: Vec<f32>,
     pub coord_mask: Vec<bool>,
     /// The pack plan whose runs are exactly `coord_mask`'s true
@@ -94,15 +97,23 @@ pub fn run_client_round(
     // `take_uncleared` everywhere below: each buffer is fully
     // overwritten before its first read (pack_into clears, the model
     // buffers are copy_from_slice'd, the delta is written by `sub`).
+    // Codec wire/scratch buffers come from the arena's byte/u32 sinks,
+    // so the whole pipeline allocates nothing once `ws` is warm
+    // (`rust/tests/zero_alloc.rs`).
     let mut packed = ws.take_uncleared(plan.packed_len());
     plan.pack_into(global, &mut packed);
     let seed = round_seed ^ (client as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
-    let enc = downlink.encode(&packed, seed);
+    let mut enc = Encoded {
+        bytes: ws.take_bytes(),
+    };
+    downlink.encode_into(&packed, seed, ws, &mut enc);
     // Kept-unit bitmaps ride along uncompressed (the client must know
     // which units it received).
     let bitmap_bytes = plan.bitmap_bytes();
     let down_bytes = enc.wire_bytes() + bitmap_bytes;
-    let decoded = downlink.decode(&enc, seed);
+    let mut decoded = ws.take_uncleared(plan.packed_len());
+    downlink.decode_into(&enc, seed, ws, &mut decoded);
+    ws.give_bytes(enc.bytes);
 
     // The client's starting point: the global model with the sub-model
     // coordinates replaced by what the wire delivered. Coordinates
@@ -111,14 +122,17 @@ pub fn run_client_round(
     let mut client_start = ws.take_uncleared(n);
     client_start.copy_from_slice(global);
     plan.unpack_from(&decoded, &mut client_start);
+    ws.give(decoded);
 
     // ---- Local training (one epoch, in place on the model buffer) ---
     let mut model = ws.take_uncleared(n);
     model.copy_from_slice(&client_start);
-    let mean_loss = runtime.train_epoch_in(ws, &mut model, &submodel.masks_f32(), data, lr)?;
+    let mean_loss = runtime.train_epoch_in(ws, &mut model, submodel.masks_f32(), data, lr)?;
 
     // ---- Uplink ------------------------------------------------------
-    let mut coord_mask = vec![false; n];
+    // `coord_mask` and `reconstructed` escape with the outcome (the
+    // engine returns them to the workspace pool after aggregation).
+    let mut coord_mask = ws.take_bool(n);
     plan.mark_coord_mask(&mut coord_mask);
     let (up_bytes, reconstructed, coord_mask, agg_plan) = match dgc_state {
         Some(st) => {
@@ -128,20 +142,31 @@ pub fn run_client_round(
             // accumulation behaviour).
             let mut delta = ws.take_uncleared(n);
             crate::tensor::sub(&model, &client_start, &mut delta);
-            let msg = st.compress(&delta);
+            let mut varint_scratch = ws.take_bytes();
+            let mut msg = ws.take_bytes();
+            st.compress_into(&delta, &mut varint_scratch, &mut msg);
             ws.give(delta);
+            ws.give_bytes(varint_scratch);
             let up_bytes = msg.len() as u64;
-            let sparse_delta = dgc::decode(&msg);
-            let mut recon = client_start.clone();
-            crate::tensor::add_assign(&mut recon, &sparse_delta);
+            // Server side: scatter the sparse delta straight onto the
+            // client's starting point (no dense intermediate).
+            let mut idx = ws.take_u32();
+            let mut vals = ws.take_uncleared(0);
+            sparse::decode_sparse_into(&msg, &mut idx, &mut vals);
+            ws.give_bytes(msg);
+            let mut recon = ws.take_uncleared(n);
+            recon.copy_from_slice(&client_start);
             // The client speaks for its sub-model coords plus any
             // residual coords DGC shipped.
             let mut cm = coord_mask;
-            for (i, &v) in sparse_delta.iter().enumerate() {
+            for (&i, &v) in idx.iter().zip(vals.iter()) {
                 if v != 0.0 {
-                    cm[i] = true;
+                    recon[i as usize] += v;
+                    cm[i as usize] = true;
                 }
             }
+            ws.give_u32(idx);
+            ws.give(vals);
             (up_bytes, recon, cm, None)
         }
         None => {
@@ -149,7 +174,8 @@ pub fn run_client_round(
             // buffer).
             plan.pack_into(&model, &mut packed);
             let up_bytes = 4 * packed.len() as u64 + bitmap_bytes;
-            let mut recon = client_start.clone();
+            let mut recon = ws.take_uncleared(n);
+            recon.copy_from_slice(&client_start);
             plan.unpack_from(&packed, &mut recon);
             (up_bytes, recon, coord_mask, Some(Arc::clone(plan)))
         }

@@ -79,22 +79,75 @@ impl ClientDataset {
     /// the train artifact: a shuffled pass over the local data, cycling
     /// if the client holds fewer samples than one epoch consumes.
     pub fn epoch_data(&self, spec: &VariantSpec, rng: &mut Pcg64) -> EpochData {
+        let mut order = Vec::new();
+        let mut out = EpochData {
+            xs: BatchInput::F32(Vec::new()),
+            ys: Vec::new(),
+        };
+        self.epoch_data_into(spec, rng, &mut order, &mut out);
+        out
+    }
+
+    /// [`ClientDataset::epoch_data`] into caller-provided buffers: the
+    /// shuffle order goes through `order` and the samples/labels into
+    /// `out`'s recycled vectors, so a warm buffer assembles an epoch
+    /// with zero heap allocations. The RNG draw sequence is identical
+    /// to the allocating API (each cycle shuffles a fresh `0..len`
+    /// range in place), so trajectories don't depend on which entry
+    /// point assembled the epoch.
+    pub fn epoch_data_into(
+        &self,
+        spec: &VariantSpec,
+        rng: &mut Pcg64,
+        order: &mut Vec<u32>,
+        out: &mut EpochData,
+    ) {
         let need = spec.samples_per_round();
-        let mut order: Vec<usize> = (0..self.len()).collect();
-        rng.shuffle(&mut order);
+        // An empty client can never fill an epoch — fail loudly instead
+        // of spinning in the cycling loop below.
+        assert!(
+            !self.is_empty() || need == 0,
+            "epoch_data: client dataset is empty but the spec needs {need} samples per round"
+        );
+        order.clear();
+        order.extend(0..self.len() as u32);
+        rng.shuffle(&mut order[..]);
         while order.len() < need {
-            let mut again: Vec<usize> = (0..self.len()).collect();
-            rng.shuffle(&mut again);
-            order.extend(again);
+            let start = order.len();
+            order.extend(0..self.len() as u32);
+            rng.shuffle(&mut order[start..]);
         }
         order.truncate(need);
-        let (xs, ys) = self.gather(&order);
-        EpochData {
-            xs: match xs {
-                Samples::F32(v) => BatchInput::F32(v),
-                Samples::I32(v) => BatchInput::I32(v),
-            },
-            ys,
+        let ps = self.per_sample;
+        out.ys.clear();
+        out.ys.extend(order.iter().map(|&i| self.ys[i as usize]));
+        match &self.xs {
+            Samples::F32(v) => {
+                if !matches!(out.xs, BatchInput::F32(_)) {
+                    out.xs = BatchInput::F32(Vec::new());
+                }
+                if let BatchInput::F32(dst) = &mut out.xs {
+                    dst.clear();
+                    dst.reserve(order.len() * ps);
+                    for &i in order.iter() {
+                        let i = i as usize;
+                        dst.extend_from_slice(&v[i * ps..(i + 1) * ps]);
+                    }
+                }
+            }
+            Samples::I32(v) => {
+                if !matches!(out.xs, BatchInput::I32(_)) {
+                    out.xs = BatchInput::I32(Vec::new());
+                }
+                if let BatchInput::I32(dst) = &mut out.xs {
+                    dst.clear();
+                    dst.reserve(order.len() * ps);
+                    for &i in order.iter() {
+                        let i = i as usize;
+                        dst.extend_from_slice(&v[i * ps..(i + 1) * ps]);
+                    }
+                }
+            }
         }
     }
 
@@ -191,6 +244,33 @@ mod tests {
         let ep = ds.epoch_data(&spec, &mut rng);
         assert_eq!(ep.ys.len(), 50);
         assert_eq!(ep.xs.len(), 200);
+    }
+
+    #[test]
+    fn epoch_data_into_matches_allocating_api_and_reuses_buffers() {
+        let spec = mlp_spec("t", 4, 8, 3, 10, 5, 0.1);
+        let ds = ClientDataset {
+            xs: Samples::F32((0..12 * 4).map(|i| i as f32).collect()),
+            ys: (0..12).map(|i| (i % 3) as i32).collect(),
+            per_sample: 4,
+        };
+        // Same RNG stream state ⇒ identical epochs through both APIs.
+        let mut rng_a = Pcg64::new(9);
+        let mut rng_b = Pcg64::new(9);
+        let mut order = Vec::new();
+        let mut out = EpochData {
+            xs: BatchInput::F32(Vec::new()),
+            ys: Vec::new(),
+        };
+        for round in 0..3 {
+            let want = ds.epoch_data(&spec, &mut rng_a);
+            ds.epoch_data_into(&spec, &mut rng_b, &mut order, &mut out);
+            assert_eq!(out.ys, want.ys, "round {round}");
+            match (&out.xs, &want.xs) {
+                (BatchInput::F32(a), BatchInput::F32(b)) => assert_eq!(a, b),
+                _ => panic!("dtype mismatch"),
+            }
+        }
     }
 
     #[test]

@@ -28,12 +28,17 @@
 //! [`sched`]'s virtual-clock engine; per-client work flows through
 //! [`dropout`] → [`compression`] → [`runtime`] → [`aggregation`]
 //! (client training and the sharded server-side average share one
-//! worker pool), with [`network`] charging simulated time and
-//! [`metrics`] keeping the books. [`tensor`] holds the flat-array ops plus the blocked
-//! training kernels and zero-allocation workspace arena the native
-//! backend trains through (see `rust/src/tensor/README.md`). [`util`]
-//! holds the offline substrates (RNG, JSON, CLI, thread pool, stats,
-//! counting allocator).
+//! worker pool; whole rounds aggregate in a single batched dispatch),
+//! with [`network`] charging simulated time and [`metrics`] keeping
+//! the books. [`tensor`] holds the flat-array ops, the blocked
+//! training kernels, the runtime-dispatched SIMD layer
+//! (`tensor::simd`, cargo feature `simd`: AVX2 with a scalar
+//! reference that is bit-identical either way) and the zero-allocation
+//! workspace arena — f32 training scratch plus the codec byte/u32/bool
+//! pools that make a whole warm client round allocation-free (see
+//! `rust/src/tensor/README.md` and `rust/src/compression/README.md`).
+//! [`util`] holds the offline substrates (RNG, JSON, CLI, thread
+//! pool, stats, counting allocator).
 
 // The offline substrates favor explicit indexed loops over iterator
 // adapters in hot paths; keep clippy's style-only lints from failing

@@ -11,14 +11,28 @@ use crate::model::manifest::VariantSpec;
 pub struct SubModel {
     /// keep[g][u] — indexed like `spec.mask_groups`.
     pub keep: Vec<Vec<bool>>,
+    /// The 0/1 f32 masks derived from `keep`, built once at
+    /// construction so the training hot path borrows instead of
+    /// re-materializing them every epoch.
+    masks: Vec<Vec<f32>>,
+}
+
+fn masks_from_keep(keep: &[Vec<bool>]) -> Vec<Vec<f32>> {
+    keep.iter()
+        .map(|g| g.iter().map(|&k| if k { 1.0 } else { 0.0 }).collect())
+        .collect()
 }
 
 impl SubModel {
+    /// Build from the kept-unit bitsets (masks derived eagerly).
+    pub fn from_keep(keep: Vec<Vec<bool>>) -> SubModel {
+        let masks = masks_from_keep(&keep);
+        SubModel { keep, masks }
+    }
+
     /// Full model (nothing dropped).
     pub fn full(spec: &VariantSpec) -> SubModel {
-        SubModel {
-            keep: spec.mask_groups.iter().map(|g| vec![true; g.size]).collect(),
-        }
+        SubModel::from_keep(spec.mask_groups.iter().map(|g| vec![true; g.size]).collect())
     }
 
     /// From kept-index lists (validated).
@@ -35,7 +49,7 @@ impl SubModel {
                 keep[g][u] = true;
             }
         }
-        SubModel { keep }
+        SubModel::from_keep(keep)
     }
 
     /// Kept-unit indices per group (ascending).
@@ -58,12 +72,10 @@ impl SubModel {
             .collect()
     }
 
-    /// The 0/1 f32 masks fed to the train artifact, per group.
-    pub fn masks_f32(&self) -> Vec<Vec<f32>> {
-        self.keep
-            .iter()
-            .map(|g| g.iter().map(|&k| if k { 1.0 } else { 0.0 }).collect())
-            .collect()
+    /// The 0/1 f32 masks fed to the train artifact, per group
+    /// (precomputed at construction; borrowing, not allocating).
+    pub fn masks_f32(&self) -> &[Vec<f32>] {
+        &self.masks
     }
 
     /// Kept count for a named group.

@@ -41,7 +41,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::aggregation::ShardedFedAvg;
+use crate::aggregation::{AddOp, ShardedFedAvg};
 use crate::clients::ClientState;
 use crate::compression::dgc::DgcState;
 use crate::compression::DenseCodec;
@@ -124,6 +124,10 @@ struct ClientJob {
 struct JobResult {
     outcome: ClientRoundOutcome,
     dgc: Option<DgcState>,
+    /// The job's epoch buffer, handed back to the client's
+    /// [`ClientState`] for reuse next round (allocation-free epoch
+    /// assembly after each client's warm-up).
+    data: Option<EpochData>,
 }
 
 /// An in-flight client's completion event (continuous policies carry
@@ -192,6 +196,13 @@ pub struct Engine {
     /// Downlink bytes charged at dispatch, reported at the next
     /// aggregation (continuous policies).
     pending_down: u64,
+    /// Reused output buffer for the batched aggregation: the new
+    /// global is built here in one pool dispatch, then swapped with
+    /// `ctx.global` (last round's vector becomes next round's
+    /// scratch — no per-round model-sized allocation).
+    global_scratch: Vec<f32>,
+    /// Reused index scratch for epoch assembly (shuffle order).
+    epoch_order: Vec<u32>,
 }
 
 impl Engine {
@@ -210,6 +221,8 @@ impl Engine {
             heap: BinaryHeap::new(),
             in_flight: Vec::new(),
             pending_down: 0,
+            global_scratch: Vec::new(),
+            epoch_order: Vec::new(),
         }
     }
 
@@ -257,6 +270,7 @@ impl Engine {
         round: usize,
         cohort: &[usize],
         snapshot_dgc: bool,
+        epoch_order: &mut Vec<u32>,
     ) -> (Vec<ClientJob>, Vec<Option<DgcState>>) {
         let mut backups = Vec::with_capacity(cohort.len());
         let jobs = cohort
@@ -266,7 +280,16 @@ impl Engine {
                 let plan = ctx.plans.get(ctx.spec, &submodel);
                 let st = &mut ctx.fleet[c];
                 st.participations += 1;
-                let data = ctx.dataset.clients[c].epoch_data(ctx.spec, &mut st.rng);
+                // Assemble the epoch into the client's recycled buffer
+                // (returned by `execute_jobs` after the round; same
+                // RNG draw sequence as the allocating `epoch_data`).
+                let mut data = st.take_epoch_buf();
+                ctx.dataset.clients[c].epoch_data_into(
+                    ctx.spec,
+                    &mut st.rng,
+                    epoch_order,
+                    &mut data,
+                );
                 let dgc = if ctx.cfg.uplink_dgc {
                     let taken = st.take_dgc();
                     backups.push(snapshot_dgc.then(|| taken.clone()));
@@ -330,7 +353,11 @@ impl Engine {
                         &mut ws,
                     );
                     wsp.restore(ws);
-                    result.map(|outcome| JobResult { outcome, dgc })
+                    result.map(|outcome| JobResult {
+                        outcome,
+                        dgc,
+                        data: Some(job.data),
+                    })
                 })
                 .into_iter()
                 .collect::<Result<Vec<_>>>()?
@@ -359,6 +386,7 @@ impl Engine {
                     out.push(JobResult {
                         outcome: result?,
                         dgc,
+                        data: Some(job.data),
                     });
                 }
                 out
@@ -367,6 +395,9 @@ impl Engine {
         for r in &mut results {
             if let Some(st) = r.dgc.take() {
                 ctx.fleet[r.outcome.client].put_dgc(st);
+            }
+            if let Some(d) = r.data.take() {
+                ctx.fleet[r.outcome.client].put_epoch_buf(d);
             }
         }
         Ok(results)
@@ -395,7 +426,8 @@ impl Engine {
         // Rollback snapshots (2×num_params f32 per client) are only
         // taken when a client can actually end up excluded.
         let snapshot = self.policy.may_cut() || self.avail.config().enabled;
-        let (jobs, mut dgc_backups) = Self::prepare_jobs(ctx, round, &cohort, snapshot);
+        let (jobs, mut dgc_backups) =
+            Self::prepare_jobs(ctx, round, &cohort, snapshot, &mut self.epoch_order);
         let results = self.execute_jobs(ctx, round, jobs)?;
 
         // Arrival offsets (seconds after dispatch) + churn drops.
@@ -468,12 +500,19 @@ impl Engine {
             }
         }
 
-        let mut summary =
-            Self::aggregate(ctx, round, results.iter().map(|r| &r.outcome), &included, |_| 1.0);
+        let mut summary = Self::aggregate(
+            ctx,
+            round,
+            results.iter().map(|r| &r.outcome),
+            &included,
+            |_| 1.0,
+            &mut self.global_scratch,
+        );
         summary.round_s = close_t;
         summary.arrived = arrived;
         summary.cut = cut;
         summary.dropped = dropped;
+        Self::recycle_outcomes(ctx, results.into_iter().map(|r| r.outcome));
         self.version += 1;
         Ok(summary)
     }
@@ -556,12 +595,14 @@ impl Engine {
             buffer.iter().map(|f| &f.outcome),
             &included,
             |i| policy.staleness_weight(cur - buffer[i].version),
+            &mut self.global_scratch,
         );
         self.version += 1;
         summary.round_s = self.now - window_start;
         summary.arrived = buffer.len();
         summary.dropped = dropped;
         summary.down_bytes = std::mem::take(&mut self.pending_down);
+        Self::recycle_outcomes(ctx, buffer.into_iter().map(|f| f.outcome));
         Ok(summary)
     }
 
@@ -581,7 +622,8 @@ impl Engine {
         let picked = Self::sample_from(ctx.rng, &cands, target - self.heap.len());
         // Continuous policies only exclude via churn drops.
         let snapshot = self.avail.config().enabled;
-        let (jobs, dgc_backups) = Self::prepare_jobs(ctx, round, &picked, snapshot);
+        let (jobs, dgc_backups) =
+            Self::prepare_jobs(ctx, round, &picked, snapshot, &mut self.epoch_order);
         let results = self.execute_jobs(ctx, round, jobs)?;
         for (r, dgc_backup) in results.into_iter().zip(dgc_backups) {
             let o = r.outcome;
@@ -603,23 +645,30 @@ impl Engine {
     /// FedAvg the included outcomes (iteration order = caller order =
     /// dispatch/arrival order, which fixes the f64 summation order for
     /// reproducibility), update the global, feed the strategy, and
-    /// account bytes/losses. Aggregation is sharded across the worker
-    /// pool; raw-uplink outcomes add through their pack plan's
-    /// contiguous kept runs, DGC outcomes (whose masks may include
-    /// residual coordinates beyond the plan) stay mask-based. Both are
-    /// bit-identical per coordinate to the serial `FedAvg` reference.
+    /// account bytes/losses. The whole round — reset, every add,
+    /// finalize — runs as **one** pool dispatch
+    /// ([`ShardedFedAvg::aggregate_batch`]: shard workers stay pinned
+    /// across the adds); raw-uplink outcomes add through their pack
+    /// plan's contiguous kept runs, DGC outcomes (whose masks may
+    /// include residual coordinates beyond the plan) stay mask-based.
+    /// Both are bit-identical per coordinate to the serial `FedAvg`
+    /// reference, and the batch is bit-identical to the per-add
+    /// dispatch path (`rust/tests/agg_sharding.rs`). The new global is
+    /// built in `global_scratch` and swapped in, so steady-state
+    /// rounds allocate no model-sized buffer.
     fn aggregate<'o>(
         ctx: &mut RoundCtx,
         round: usize,
         outcomes: impl Iterator<Item = &'o ClientRoundOutcome> + Clone,
         included: &[bool],
         weight_of: impl Fn(usize) -> f64,
+        global_scratch: &mut Vec<f32>,
     ) -> RoundSummary {
-        ctx.agg.reset();
         let mut summary = RoundSummary::default();
         let mut loss_sum = 0.0f64;
         let mut keep_sum = 0.0f64;
         let mut count = 0usize;
+        let mut ops: Vec<AddOp> = Vec::with_capacity(included.len());
         for (i, o) in outcomes.clone().enumerate() {
             if !included[i] {
                 continue;
@@ -628,18 +677,27 @@ impl Engine {
             let w = weight_of(i);
             // `n_c * 1.0 == n_c` exactly, so unit weights stay bit-
             // compatible with the serial reference.
-            match &o.agg_plan {
-                Some(plan) => ctx.agg.add_planned(&o.reconstructed, plan, n_c * w),
-                None => ctx.agg.add_masked(&o.reconstructed, &o.coord_mask, n_c * w),
-            }
+            ops.push(match &o.agg_plan {
+                Some(plan) => AddOp::Planned {
+                    values: &o.reconstructed,
+                    plan: plan.as_ref(),
+                    n_c: n_c * w,
+                },
+                None => AddOp::Masked {
+                    values: &o.reconstructed,
+                    coord_mask: &o.coord_mask,
+                    n_c: n_c * w,
+                },
+            });
             summary.down_bytes += o.down_bytes;
             summary.up_bytes += o.up_bytes;
             loss_sum += o.train_loss as f64;
             keep_sum += o.submodel.keep_fraction();
             count += 1;
         }
-        let new_global = ctx.agg.finalize(ctx.global);
-        *ctx.global = new_global;
+        ctx.agg.aggregate_batch(&ops, ctx.global, global_scratch);
+        drop(ops);
+        std::mem::swap(ctx.global, global_scratch);
         for (i, o) in outcomes.enumerate() {
             if included[i] {
                 ctx.strategy.report_loss(round, o.client, o.train_loss as f64);
@@ -649,5 +707,17 @@ impl Engine {
         summary.train_loss = loss_sum / count.max(1) as f64;
         summary.keep_fraction = keep_sum / count.max(1) as f64;
         summary
+    }
+
+    /// Return a drained batch's outcome buffers (drawn from the
+    /// workspace pool inside `run_client_round`) so the next round
+    /// reuses them instead of allocating.
+    fn recycle_outcomes(ctx: &mut RoundCtx, outcomes: impl Iterator<Item = ClientRoundOutcome>) {
+        let mut ws = ctx.workspaces.checkout();
+        for o in outcomes {
+            ws.give(o.reconstructed);
+            ws.give_bool(o.coord_mask);
+        }
+        ctx.workspaces.restore(ws);
     }
 }

@@ -31,6 +31,14 @@
 //! `rust/tests/kernel_equivalence.rs`) while cutting weight-matrix
 //! traffic by the block factor.
 //!
+//! The inner loops of every kernel dispatch through
+//! [`crate::tensor::simd`]: AVX2 when the `simd` cargo feature is on
+//! and the CPU has it (runtime-detected once, at workspace/pool
+//! construction), the scalar reference otherwise. Dispatch never
+//! changes results — the SIMD implementations are bit-identical to
+//! scalar (no FMA, no reassociation; see `simd.rs`), so the numerical
+//! contract below holds for both paths.
+//!
 //! ## Workspace ownership
 //!
 //! [`Workspace`] is a per-job scratch arena: `take(len)` hands out a
@@ -46,6 +54,19 @@
 //! rounds. `take` hands out zero-filled
 //! buffers; `take_uncleared` skips the memset for consumers that fully
 //! overwrite their buffer before the first read.
+//!
+//! Beyond f32 training scratch, the arena pools the **codec scratch**
+//! the compression layer draws per client round: byte sinks
+//! ([`Workspace::take_bytes`] — encoder wire buffers, varint scratch),
+//! `u32` sinks ([`Workspace::take_u32`] — sparse index decode) and
+//! bool masks ([`Workspace::take_bool`] — coordinate masks). Sinks
+//! come back with length 0 and warm capacity: checkout order is
+//! deterministic per round, so after warm-up every call site receives
+//! a buffer that already fits and the whole client round — train,
+//! pack, encode, decode, aggregate add — allocates nothing
+//! (`rust/tests/zero_alloc.rs`).
+
+use crate::tensor::simd;
 
 /// Default batch-row block for the SGD rank update (powers of two up
 /// to this bound are dispatched to const-generic micro-kernels).
@@ -58,15 +79,53 @@ pub const MAX_BATCH_BLOCK: usize = 16;
 // Workspace arena
 // ---------------------------------------------------------------------
 
-/// Recycling arena of f32 scratch buffers (see module docs).
+/// Recycling arena of hot-path scratch buffers: f32 training scratch
+/// plus the codec-scratch pools (byte/u32 sinks, bool masks) — see
+/// module docs.
 #[derive(Default)]
 pub struct Workspace {
     free: Vec<Vec<f32>>,
+    free_bytes: Vec<Vec<u8>>,
+    free_u32: Vec<Vec<u32>>,
+    free_bool: Vec<Vec<bool>>,
+}
+
+/// Pop the smallest free buffer whose capacity covers `len` (best-fit;
+/// `None` means the caller must allocate — the warm-up path).
+fn best_fit<T>(free: &mut Vec<Vec<T>>, len: usize) -> Option<Vec<T>> {
+    let mut best: Option<(usize, usize)> = None; // (capacity, index)
+    for (i, b) in free.iter().enumerate() {
+        let cap = b.capacity();
+        if cap < len {
+            continue;
+        }
+        let better = match best {
+            None => true,
+            Some((bc, _)) => cap < bc,
+        };
+        if better {
+            best = Some((cap, i));
+        }
+    }
+    best.map(|(_, i)| free.swap_remove(i))
 }
 
 impl Workspace {
+    /// Free buffers retained per pool. A `give` beyond this cap drops
+    /// the buffer instead of pooling it: the engine recycles every
+    /// outcome's model-sized buffers into one checked-out workspace
+    /// after aggregation, and without a cap that workspace's free
+    /// lists would grow by the cohort size every round for the process
+    /// lifetime. The cap is far above what one client round checks
+    /// out (~12 buffers), so the zero-allocation contract of a warm
+    /// round is unaffected.
+    pub const MAX_FREE_PER_POOL: usize = 32;
+
     pub fn new() -> Workspace {
-        Workspace { free: Vec::new() }
+        // Resolve the SIMD dispatch level before any kernel runs (the
+        // probe is cached process-wide; this keeps it off hot paths).
+        simd::init();
+        Workspace::default()
     }
 
     /// Check out a zero-filled buffer of `len` elements. Reuses the
@@ -83,23 +142,8 @@ impl Workspace {
     /// overwrite it before the first read (a model-sized memset per
     /// take is real money on the hot path).
     pub fn take_uncleared(&mut self, len: usize) -> Vec<f32> {
-        let mut best: Option<(usize, usize)> = None; // (capacity, index)
-        for (i, b) in self.free.iter().enumerate() {
-            let cap = b.capacity();
-            if cap < len {
-                continue;
-            }
-            let better = match best {
-                None => true,
-                Some((bc, _)) => cap < bc,
-            };
-            if better {
-                best = Some((cap, i));
-            }
-        }
-        match best {
-            Some((_, i)) => {
-                let mut b = self.free.swap_remove(i);
+        match best_fit(&mut self.free, len) {
+            Some(mut b) => {
                 // Truncates or grows in place (only grown elements are
                 // written); never reallocates since capacity >= len.
                 b.resize(len, 0.0);
@@ -111,10 +155,63 @@ impl Workspace {
 
     /// Return a buffer to the arena for reuse.
     pub fn give(&mut self, buf: Vec<f32>) {
-        self.free.push(buf);
+        if self.free.len() < Self::MAX_FREE_PER_POOL {
+            self.free.push(buf);
+        }
     }
 
-    /// Number of free buffers currently held (diagnostics/tests).
+    /// Check out a byte *sink*: length 0, recycled capacity. Sinks are
+    /// grow-by-extend buffers (encoder wire output, varint scratch);
+    /// checkout order is deterministic per round, so each call site
+    /// reclaims the same buffer — grown once, warm thereafter.
+    pub fn take_bytes(&mut self) -> Vec<u8> {
+        let mut b = self.free_bytes.pop().unwrap_or_default();
+        b.clear();
+        b
+    }
+
+    /// Return a byte sink to the arena.
+    pub fn give_bytes(&mut self, buf: Vec<u8>) {
+        if self.free_bytes.len() < Self::MAX_FREE_PER_POOL {
+            self.free_bytes.push(buf);
+        }
+    }
+
+    /// Check out a `u32` sink (length 0, recycled capacity).
+    pub fn take_u32(&mut self) -> Vec<u32> {
+        let mut b = self.free_u32.pop().unwrap_or_default();
+        b.clear();
+        b
+    }
+
+    /// Return a `u32` sink to the arena.
+    pub fn give_u32(&mut self, buf: Vec<u32>) {
+        if self.free_u32.len() < Self::MAX_FREE_PER_POOL {
+            self.free_u32.push(buf);
+        }
+    }
+
+    /// Check out an all-`false` bool mask of `len` elements (reuses
+    /// the smallest free buffer whose capacity suffices).
+    pub fn take_bool(&mut self, len: usize) -> Vec<bool> {
+        match best_fit(&mut self.free_bool, len) {
+            Some(mut b) => {
+                b.clear();
+                b.resize(len, false);
+                b
+            }
+            None => vec![false; len],
+        }
+    }
+
+    /// Return a bool mask to the arena.
+    pub fn give_bool(&mut self, buf: Vec<bool>) {
+        if self.free_bool.len() < Self::MAX_FREE_PER_POOL {
+            self.free_bool.push(buf);
+        }
+    }
+
+    /// Number of free f32 buffers currently held (diagnostics/tests).
     pub fn free_buffers(&self) -> usize {
         self.free.len()
     }
@@ -135,6 +232,7 @@ impl WorkspacePool {
     pub const MAX_IDLE: usize = 32;
 
     pub fn new() -> WorkspacePool {
+        simd::init();
         WorkspacePool::default()
     }
 
@@ -193,9 +291,7 @@ pub fn gemm_bias(
                 let xi = x[r * k + i];
                 if xi != 0.0 {
                     let orow = &mut out[r * n..(r + 1) * n];
-                    for (o, &wv) in orow.iter_mut().zip(wrow) {
-                        *o += xi * wv;
-                    }
+                    simd::axpy_row(orow, xi, wrow);
                 }
             }
         }
@@ -213,9 +309,7 @@ pub fn relu_mask(pre: &[f32], mask: &[f32], out: &mut [f32], rows: usize, n: usi
     for r in 0..rows {
         let prow = &pre[r * n..(r + 1) * n];
         let orow = &mut out[r * n..(r + 1) * n];
-        for ((o, &v), &m) in orow.iter_mut().zip(prow).zip(mask) {
-            *o = if v > 0.0 { v * m } else { 0.0 };
-        }
+        simd::relu_mask_row(prow, mask, orow);
     }
 }
 
@@ -231,9 +325,10 @@ pub fn softmax_rows(logits: &mut [f32], rows: usize, c: usize) {
             *v = (*v - m).exp();
             z += *v;
         }
-        for v in row.iter_mut() {
-            *v /= z;
-        }
+        // exp and its running sum stay scalar (reordering the z
+        // accumulation would change bits); the normalization is
+        // per-element and dispatches.
+        simd::div_inplace(row, z);
     }
 }
 
@@ -251,9 +346,7 @@ pub fn softmax_xent_grad(logits: &mut [f32], ys: &[i32], rows: usize, c: usize) 
         logits[r * c + yi] -= 1.0;
     }
     let inv_b = 1.0 / rows as f32;
-    for v in logits.iter_mut() {
-        *v *= inv_b;
-    }
+    simd::scale_inplace(logits, inv_b);
     loss * inv_b
 }
 
@@ -329,35 +422,21 @@ fn rank_update_block<const B: usize>(
         let wrow = &mut w[i * n..(i + 1) * n];
         if B == 1 {
             // Exactly the scalar reference's op sequence:
-            // w -= (lr · a) · g, one multiply-chain per element.
+            // w -= (lr · a) · g, one multiply-chain per element
+            // (`w += (-s)·g` — the negation is exact).
             let s = lr * av[0];
             let grow = &g[r0 * n..(r0 + 1) * n];
-            for (wv, &gv) in wrow.iter_mut().zip(grow) {
-                *wv -= s * gv;
-            }
+            simd::axpy_row(wrow, -s, grow);
         } else {
-            for j in 0..n {
-                let mut acc = 0.0f32;
-                for t in 0..B {
-                    acc += av[t] * g[(r0 + t) * n + j];
-                }
-                wrow[j] -= lr * acc;
-            }
+            let gblk = &g[r0 * n..(r0 + B) * n];
+            simd::weighted_colsum_sub(wrow, gblk, &av, lr);
         }
     }
+    let gblk = &g[r0 * n..(r0 + B) * n];
     if B == 1 {
-        let grow = &g[r0 * n..(r0 + 1) * n];
-        for (bv, &gv) in bias.iter_mut().zip(grow) {
-            *bv -= lr * gv;
-        }
+        simd::axpy_row(bias, -lr, gblk);
     } else {
-        for j in 0..n {
-            let mut acc = 0.0f32;
-            for t in 0..B {
-                acc += g[(r0 + t) * n + j];
-            }
-            bias[j] -= lr * acc;
-        }
+        simd::colsum_sub(bias, gblk, lr);
     }
 }
 
@@ -424,6 +503,61 @@ mod tests {
         assert!(b.iter().all(|&v| v == 0.0));
         ws.give(b);
         assert_eq!(ws.free_buffers(), 1);
+    }
+
+    #[test]
+    fn workspace_codec_pools_recycle() {
+        let mut ws = Workspace::new();
+        // Byte sink: capacity survives the round-trip, length resets.
+        let mut b = ws.take_bytes();
+        b.extend_from_slice(&[1, 2, 3]);
+        let cap = b.capacity();
+        let ptr = b.as_ptr();
+        ws.give_bytes(b);
+        let b2 = ws.take_bytes();
+        assert_eq!(b2.len(), 0);
+        assert_eq!(b2.as_ptr(), ptr);
+        assert!(b2.capacity() >= cap.min(3));
+        ws.give_bytes(b2);
+        // u32 sink: same contract.
+        let mut u = ws.take_u32();
+        u.push(7);
+        let uptr = u.as_ptr();
+        ws.give_u32(u);
+        let u2 = ws.take_u32();
+        assert_eq!(u2.len(), 0);
+        assert_eq!(u2.as_ptr(), uptr);
+        ws.give_u32(u2);
+        // Bool mask: comes back all-false at the requested length.
+        let mut m = ws.take_bool(10);
+        m[3] = true;
+        let mptr = m.as_ptr();
+        ws.give_bool(m);
+        let m2 = ws.take_bool(8);
+        assert_eq!(m2.len(), 8);
+        assert_eq!(m2.as_ptr(), mptr);
+        assert!(m2.iter().all(|&x| !x));
+    }
+
+    #[test]
+    fn workspace_give_caps_retained_buffers() {
+        let mut ws = Workspace::new();
+        for _ in 0..(Workspace::MAX_FREE_PER_POOL + 10) {
+            ws.give(vec![0.0; 4]);
+        }
+        assert_eq!(ws.free_buffers(), Workspace::MAX_FREE_PER_POOL);
+        // The sink pools honour the same cap.
+        for _ in 0..(Workspace::MAX_FREE_PER_POOL + 10) {
+            ws.give_bytes(Vec::new());
+            ws.give_u32(Vec::new());
+            ws.give_bool(Vec::new());
+        }
+        for _ in 0..Workspace::MAX_FREE_PER_POOL {
+            ws.take_bytes();
+        }
+        // All retained byte sinks drained; the next take allocates
+        // fresh (empty) rather than popping beyond the cap.
+        assert_eq!(ws.take_bytes().capacity(), 0);
     }
 
     #[test]

@@ -8,10 +8,14 @@
 //!
 //! The compute-heavy training kernels (blocked GEMM, fused epilogues,
 //! SGD rank updates) and the zero-allocation [`kernels::Workspace`]
-//! arena live in [`kernels`]; see `rust/src/tensor/README.md` for the
-//! layer's design notes.
+//! arena live in [`kernels`]; their inner loops dispatch through the
+//! runtime-selected SIMD layer in [`simd`] (AVX2 behind the `simd`
+//! cargo feature, scalar reference always available, bit-identical
+//! either way). See `rust/src/tensor/README.md` for the layer's
+//! design notes.
 
 pub mod kernels;
+pub mod simd;
 
 /// Shaped view metadata (shapes live in the manifest; data stays flat).
 #[derive(Clone, Debug, PartialEq)]

@@ -1,0 +1,848 @@
+//! Runtime-dispatched SIMD layer for the compute and codec hot loops.
+//!
+//! Every operation here exists twice: a scalar implementation
+//! ([`scalar`], always compiled — it *is* the numerical reference) and
+//! an AVX2 implementation behind the `simd` cargo feature, selected
+//! once per process via `is_x86_feature_detected!` (cached in an
+//! atomic; [`init`] is called at workspace/pool construction so the
+//! probe never sits on a hot path). Without the feature — or on a CPU
+//! without AVX2, or on a non-x86 target — every call resolves to the
+//! scalar path. NEON (aarch64) is a stub: [`detect`] documents where
+//! its probe goes; until implementations are written aarch64 falls
+//! back to scalar.
+//!
+//! ## Bit-identity contract
+//!
+//! The SIMD implementations are **bit-identical** to their scalar
+//! references, not merely close:
+//!
+//! * no FMA contraction — every `a*b + c` is a rounded multiply
+//!   followed by a rounded add, exactly like the scalar code;
+//! * no reassociation — reductions that the scalar code accumulates in
+//!   ascending order (`weighted_colsum_sub`'s per-column sums, the
+//!   FWHT butterflies) keep that order per output element and only
+//!   vectorize across independent elements;
+//! * order-insensitive reductions ([`absmax`]) are the one exception:
+//!   `max` over non-negative values is the same for any grouping, and
+//!   the lane ordering matches scalar `f32::max`'s NaN-ignoring
+//!   semantics (`maxps(x, acc)` keeps `acc` when `x` is NaN);
+//! * integer/byte ops ([`quantize_block`], [`dequantize_block`],
+//!   [`gather_extend`]) are exact by construction, so codec bytes are
+//!   identical between paths.
+//!
+//! Rounding in [`quantize_block`] is ties-to-even via the shared
+//! [`quantize_unit`] helper (the `1.5·2²³` magic-constant trick, exact
+//! for `|t| ≤ 127`), which both paths — and the vectorized
+//! `_mm256_add_ps`/`_mm256_sub_ps` sequence — compute identically.
+//! `rust/tests/simd_conformance.rs` enforces all of this
+//! property-style against [`scalar`]; the `--features simd` CI job
+//! runs the whole suite under the feature.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Instruction set the dispatcher resolved to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// Portable scalar loops (the reference; always available).
+    Scalar,
+    /// AVX2 256-bit paths (x86-64, `simd` feature, runtime-detected).
+    Avx2,
+}
+
+const UNPROBED: u8 = 0;
+const LVL_SCALAR: u8 = 1;
+const LVL_AVX2: u8 = 2;
+
+static LEVEL: AtomicU8 = AtomicU8::new(UNPROBED);
+
+/// Probe the CPU once and cache the dispatch level. Called from
+/// `Workspace`/`WorkspacePool` construction and `Experiment::build`;
+/// safe to call repeatedly.
+pub fn init() -> SimdLevel {
+    let lvl = detect();
+    let code = match lvl {
+        SimdLevel::Avx2 => LVL_AVX2,
+        SimdLevel::Scalar => LVL_SCALAR,
+    };
+    LEVEL.store(code, Ordering::Relaxed);
+    lvl
+}
+
+/// The cached dispatch level (probing on first use if [`init`] has not
+/// run yet).
+#[inline]
+pub fn level() -> SimdLevel {
+    match LEVEL.load(Ordering::Relaxed) {
+        LVL_AVX2 => SimdLevel::Avx2,
+        LVL_SCALAR => SimdLevel::Scalar,
+        _ => init(),
+    }
+}
+
+fn detect() -> SimdLevel {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return SimdLevel::Avx2;
+        }
+    }
+    // NEON stub: an aarch64 probe (`is_aarch64_feature_detected!`)
+    // slots in here once NEON implementations exist; until then
+    // aarch64 dispatches to scalar.
+    SimdLevel::Scalar
+}
+
+/// Name of the active dispatch path (bench metadata).
+pub fn active_name() -> &'static str {
+    match level() {
+        SimdLevel::Avx2 => "avx2",
+        SimdLevel::Scalar => "scalar",
+    }
+}
+
+/// CPU feature set detected on this machine, independent of the
+/// `simd` feature gate and of the dispatch decision — recorded in the
+/// bench JSON schemas so measured numbers carry their hardware
+/// context.
+pub fn cpu_features() -> Vec<&'static str> {
+    let mut out = Vec::new();
+    #[cfg(target_arch = "x86_64")]
+    {
+        for (name, have) in [
+            ("sse2", std::arch::is_x86_feature_detected!("sse2")),
+            ("sse4.2", std::arch::is_x86_feature_detected!("sse4.2")),
+            ("avx", std::arch::is_x86_feature_detected!("avx")),
+            ("avx2", std::arch::is_x86_feature_detected!("avx2")),
+            ("fma", std::arch::is_x86_feature_detected!("fma")),
+            ("avx512f", std::arch::is_x86_feature_detected!("avx512f")),
+        ] {
+            if have {
+                out.push(name);
+            }
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        out.push("neon");
+    }
+    out
+}
+
+/// `1.5·2²³`: adding then subtracting this constant rounds an f32 with
+/// `|t| < 2²²` to the nearest integer, ties to even — two IEEE adds
+/// that the scalar and AVX2 paths perform identically.
+pub const ROUND_MAGIC: f32 = 12_582_912.0;
+
+/// Quantize one rotated coordinate: round `t` ties-to-even, clamp to
+/// `[-127, 127]` in the float domain, cast. `|t| ≤ 127` by
+/// construction (`t = v·127/max|v|`); non-finite `t` degrades the same
+/// way on both paths (`min`/`max` ignore NaN identically).
+#[inline]
+pub fn quantize_unit(t: f32) -> u8 {
+    let r = (t + ROUND_MAGIC) - ROUND_MAGIC;
+    let c = r.min(127.0).max(-127.0);
+    (c as i8) as u8
+}
+
+/// Scalar reference implementations — always compiled; the conformance
+/// suite compares the dispatched entry points against these.
+pub mod scalar {
+    /// `out[j] += x · w[j]`.
+    #[inline]
+    pub fn axpy_row(out: &mut [f32], x: f32, w: &[f32]) {
+        for (o, &wv) in out.iter_mut().zip(w) {
+            *o += x * wv;
+        }
+    }
+
+    /// `out[j] = pre[j] > 0 ? pre[j]·mask[j] : 0`.
+    #[inline]
+    pub fn relu_mask_row(pre: &[f32], mask: &[f32], out: &mut [f32]) {
+        for ((o, &v), &m) in out.iter_mut().zip(pre).zip(mask) {
+            *o = if v > 0.0 { v * m } else { 0.0 };
+        }
+    }
+
+    /// `v[i] /= z` (kept a true division: `·(1/z)` rounds differently).
+    #[inline]
+    pub fn div_inplace(v: &mut [f32], z: f32) {
+        for x in v.iter_mut() {
+            *x /= z;
+        }
+    }
+
+    /// `v[i] *= a`.
+    #[inline]
+    pub fn scale_inplace(v: &mut [f32], a: f32) {
+        for x in v.iter_mut() {
+            *x *= a;
+        }
+    }
+
+    /// `v[i] *= s[i]` (Rademacher diagonal application).
+    #[inline]
+    pub fn mul_inplace(v: &mut [f32], s: &[f32]) {
+        for (x, &sv) in v.iter_mut().zip(s) {
+            *x *= sv;
+        }
+    }
+
+    /// `w[j] -= lr · Σ_t av[t]·g[t·n + j]`, `t` ascending, accumulator
+    /// starting at 0.0 (the blocked SGD rank update's inner loops).
+    pub fn weighted_colsum_sub(w: &mut [f32], g: &[f32], av: &[f32], lr: f32) {
+        let n = w.len();
+        debug_assert_eq!(g.len(), av.len() * n);
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for (t, &a) in av.iter().enumerate() {
+                acc += a * g[t * n + j];
+            }
+            w[j] -= lr * acc;
+        }
+    }
+
+    /// `bias[j] -= lr · Σ_t g[t·n + j]`, `t` ascending.
+    pub fn colsum_sub(bias: &mut [f32], g: &[f32], lr: f32) {
+        let n = bias.len();
+        if n == 0 {
+            return;
+        }
+        debug_assert_eq!(g.len() % n, 0);
+        let rows = g.len() / n;
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for t in 0..rows {
+                acc += g[t * n + j];
+            }
+            bias[j] -= lr * acc;
+        }
+    }
+
+    /// In-place unnormalized fast Walsh–Hadamard transform.
+    pub fn fwht(v: &mut [f32]) {
+        let n = v.len();
+        debug_assert!(n.is_power_of_two());
+        let mut h = 1;
+        while h < n {
+            let stride = h * 2;
+            let mut base = 0;
+            while base < n {
+                for i in base..base + h {
+                    let a = v[i];
+                    let b = v[i + h];
+                    v[i] = a + b;
+                    v[i + h] = a - b;
+                }
+                base += stride;
+            }
+            h = stride;
+        }
+    }
+
+    /// `max_i |v[i]|`, NaN-ignoring exactly like sequential
+    /// `f32::max` (a NaN element leaves the running max unchanged).
+    pub fn absmax(v: &[f32]) -> f32 {
+        let mut m = 0.0f32;
+        for &x in v {
+            m = m.max(x.abs());
+        }
+        m
+    }
+
+    /// `out[i] = quantize_unit(v[i] · qs)`.
+    pub fn quantize_block(v: &[f32], qs: f32, out: &mut [u8]) {
+        debug_assert_eq!(v.len(), out.len());
+        for (o, &x) in out.iter_mut().zip(v) {
+            *o = super::quantize_unit(x * qs);
+        }
+    }
+
+    /// `out[i] = (q[i] as i8 as f32) / 127 · scale`.
+    pub fn dequantize_block(q: &[u8], scale: f32, out: &mut [f32]) {
+        debug_assert_eq!(q.len(), out.len());
+        for (o, &b) in out.iter_mut().zip(q) {
+            *o = (b as i8) as f32 / 127.0 * scale;
+        }
+    }
+
+    /// `out[i] = src[i] · inv_sqrt · signs[i]` (quant8 decode tail).
+    pub fn scaled_signed_mul(src: &[f32], signs: &[f32], inv_sqrt: f32, out: &mut [f32]) {
+        debug_assert_eq!(src.len(), out.len());
+        debug_assert_eq!(signs.len(), out.len());
+        for i in 0..out.len() {
+            out[i] = src[i] * inv_sqrt * signs[i];
+        }
+    }
+
+    /// DGC momentum-correction scan:
+    /// `u[i] = m·u[i] + delta[i]·scale; v[i] += u[i]`.
+    pub fn dgc_scan(u: &mut [f32], v: &mut [f32], delta: &[f32], m: f32, scale: f32) {
+        debug_assert_eq!(u.len(), delta.len());
+        debug_assert_eq!(v.len(), delta.len());
+        for i in 0..delta.len() {
+            u[i] = m * u[i] + delta[i] * scale;
+            v[i] += u[i];
+        }
+    }
+
+    /// Append `src[idx[k]]` for each index (DGC top-k value gather).
+    pub fn gather_extend(out: &mut Vec<f32>, src: &[f32], idx: &[u32]) {
+        out.extend(idx.iter().map(|&i| src[i as usize]));
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod avx2 {
+    //! AVX2 twins of [`super::scalar`]. Every function is
+    //! bit-identical to its scalar reference (module docs); tails
+    //! shorter than one 8-lane vector delegate to the scalar code.
+    //!
+    //! Safety: every function in this module requires AVX2; callers
+    //! dispatch through [`super::level`], which only selects these
+    //! after `is_x86_feature_detected!("avx2")` succeeded.
+
+    use super::scalar;
+    use std::arch::x86_64::*;
+
+    /// # Safety
+    /// Requires AVX2 (guaranteed by the dispatcher).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy_row(out: &mut [f32], x: f32, w: &[f32]) {
+        debug_assert_eq!(out.len(), w.len());
+        let n = out.len();
+        let xv = _mm256_set1_ps(x);
+        let mut j = 0;
+        while j + 8 <= n {
+            let wv = _mm256_loadu_ps(w.as_ptr().add(j));
+            let ov = _mm256_loadu_ps(out.as_ptr().add(j));
+            let r = _mm256_add_ps(ov, _mm256_mul_ps(xv, wv));
+            _mm256_storeu_ps(out.as_mut_ptr().add(j), r);
+            j += 8;
+        }
+        scalar::axpy_row(&mut out[j..], x, &w[j..]);
+    }
+
+    /// # Safety
+    /// Requires AVX2 (guaranteed by the dispatcher).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn relu_mask_row(pre: &[f32], mask: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(pre.len(), out.len());
+        debug_assert_eq!(mask.len(), out.len());
+        let n = out.len();
+        let zero = _mm256_setzero_ps();
+        let mut j = 0;
+        while j + 8 <= n {
+            let p = _mm256_loadu_ps(pre.as_ptr().add(j));
+            let m = _mm256_loadu_ps(mask.as_ptr().add(j));
+            let prod = _mm256_mul_ps(p, m);
+            let gt = _mm256_cmp_ps::<_CMP_GT_OQ>(p, zero);
+            _mm256_storeu_ps(out.as_mut_ptr().add(j), _mm256_and_ps(prod, gt));
+            j += 8;
+        }
+        scalar::relu_mask_row(&pre[j..], &mask[j..], &mut out[j..]);
+    }
+
+    /// # Safety
+    /// Requires AVX2 (guaranteed by the dispatcher).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn div_inplace(v: &mut [f32], z: f32) {
+        let n = v.len();
+        let zv = _mm256_set1_ps(z);
+        let mut j = 0;
+        while j + 8 <= n {
+            let x = _mm256_loadu_ps(v.as_ptr().add(j));
+            _mm256_storeu_ps(v.as_mut_ptr().add(j), _mm256_div_ps(x, zv));
+            j += 8;
+        }
+        scalar::div_inplace(&mut v[j..], z);
+    }
+
+    /// # Safety
+    /// Requires AVX2 (guaranteed by the dispatcher).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scale_inplace(v: &mut [f32], a: f32) {
+        let n = v.len();
+        let av = _mm256_set1_ps(a);
+        let mut j = 0;
+        while j + 8 <= n {
+            let x = _mm256_loadu_ps(v.as_ptr().add(j));
+            _mm256_storeu_ps(v.as_mut_ptr().add(j), _mm256_mul_ps(x, av));
+            j += 8;
+        }
+        scalar::scale_inplace(&mut v[j..], a);
+    }
+
+    /// # Safety
+    /// Requires AVX2 (guaranteed by the dispatcher).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn mul_inplace(v: &mut [f32], s: &[f32]) {
+        debug_assert_eq!(v.len(), s.len());
+        let n = v.len();
+        let mut j = 0;
+        while j + 8 <= n {
+            let x = _mm256_loadu_ps(v.as_ptr().add(j));
+            let sv = _mm256_loadu_ps(s.as_ptr().add(j));
+            _mm256_storeu_ps(v.as_mut_ptr().add(j), _mm256_mul_ps(x, sv));
+            j += 8;
+        }
+        scalar::mul_inplace(&mut v[j..], &s[j..]);
+    }
+
+    /// # Safety
+    /// Requires AVX2 (guaranteed by the dispatcher).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn weighted_colsum_sub(w: &mut [f32], g: &[f32], av: &[f32], lr: f32) {
+        let n = w.len();
+        debug_assert_eq!(g.len(), av.len() * n);
+        let lrv = _mm256_set1_ps(lr);
+        let mut j = 0;
+        while j + 8 <= n {
+            let mut acc = _mm256_setzero_ps();
+            for (t, &a) in av.iter().enumerate() {
+                let gv = _mm256_loadu_ps(g.as_ptr().add(t * n + j));
+                acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_set1_ps(a), gv));
+            }
+            let wv = _mm256_loadu_ps(w.as_ptr().add(j));
+            let r = _mm256_sub_ps(wv, _mm256_mul_ps(lrv, acc));
+            _mm256_storeu_ps(w.as_mut_ptr().add(j), r);
+            j += 8;
+        }
+        // Scalar tail: re-slice g by column range.
+        for jj in j..n {
+            let mut acc = 0.0f32;
+            for (t, &a) in av.iter().enumerate() {
+                acc += a * g[t * n + jj];
+            }
+            w[jj] -= lr * acc;
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2 (guaranteed by the dispatcher).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn colsum_sub(bias: &mut [f32], g: &[f32], lr: f32) {
+        let n = bias.len();
+        if n == 0 {
+            return;
+        }
+        debug_assert_eq!(g.len() % n, 0);
+        let rows = g.len() / n;
+        let lrv = _mm256_set1_ps(lr);
+        let mut j = 0;
+        while j + 8 <= n {
+            let mut acc = _mm256_setzero_ps();
+            for t in 0..rows {
+                acc = _mm256_add_ps(acc, _mm256_loadu_ps(g.as_ptr().add(t * n + j)));
+            }
+            let bv = _mm256_loadu_ps(bias.as_ptr().add(j));
+            let r = _mm256_sub_ps(bv, _mm256_mul_ps(lrv, acc));
+            _mm256_storeu_ps(bias.as_mut_ptr().add(j), r);
+            j += 8;
+        }
+        for jj in j..n {
+            let mut acc = 0.0f32;
+            for t in 0..rows {
+                acc += g[t * n + jj];
+            }
+            bias[jj] -= lr * acc;
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2 (guaranteed by the dispatcher).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn fwht(v: &mut [f32]) {
+        let n = v.len();
+        debug_assert!(n.is_power_of_two());
+        if n < 16 {
+            scalar::fwht(v);
+            return;
+        }
+        // Scalar butterflies while the half-width is below one vector;
+        // identical pairing and op order to the scalar reference.
+        let mut h = 1;
+        while h < 8 {
+            let stride = h * 2;
+            let mut base = 0;
+            while base < n {
+                for i in base..base + h {
+                    let a = v[i];
+                    let b = v[i + h];
+                    v[i] = a + b;
+                    v[i + h] = a - b;
+                }
+                base += stride;
+            }
+            h = stride;
+        }
+        // h ≥ 8: both butterfly operands are full 8-lane vectors.
+        while h < n {
+            let stride = h * 2;
+            let mut base = 0;
+            while base < n {
+                let mut i = base;
+                while i < base + h {
+                    let a = _mm256_loadu_ps(v.as_ptr().add(i));
+                    let b = _mm256_loadu_ps(v.as_ptr().add(i + h));
+                    _mm256_storeu_ps(v.as_mut_ptr().add(i), _mm256_add_ps(a, b));
+                    _mm256_storeu_ps(v.as_mut_ptr().add(i + h), _mm256_sub_ps(a, b));
+                    i += 8;
+                }
+                base += stride;
+            }
+            h = stride;
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2 (guaranteed by the dispatcher).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn absmax(v: &[f32]) -> f32 {
+        let n = v.len();
+        let sign = _mm256_set1_ps(-0.0);
+        let mut acc = _mm256_setzero_ps();
+        let mut j = 0;
+        while j + 8 <= n {
+            let x = _mm256_andnot_ps(sign, _mm256_loadu_ps(v.as_ptr().add(j)));
+            // maxps(x, acc) keeps acc when x is NaN — the scalar
+            // f32::max NaN-ignoring semantics.
+            acc = _mm256_max_ps(x, acc);
+            j += 8;
+        }
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        let mut m = lanes.iter().fold(0.0f32, |a, &b| a.max(b));
+        for &x in &v[j..] {
+            m = m.max(x.abs());
+        }
+        m
+    }
+
+    /// # Safety
+    /// Requires AVX2 (guaranteed by the dispatcher).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn quantize_block(v: &[f32], qs: f32, out: &mut [u8]) {
+        debug_assert_eq!(v.len(), out.len());
+        let n = v.len();
+        let qsv = _mm256_set1_ps(qs);
+        let magic = _mm256_set1_ps(super::ROUND_MAGIC);
+        let hi = _mm256_set1_ps(127.0);
+        let lo = _mm256_set1_ps(-127.0);
+        let mut lanes = [0i32; 8];
+        let mut j = 0;
+        while j + 8 <= n {
+            let x = _mm256_loadu_ps(v.as_ptr().add(j));
+            let t = _mm256_mul_ps(x, qsv);
+            let r = _mm256_sub_ps(_mm256_add_ps(t, magic), magic);
+            // minps/maxps return the second operand on NaN — exactly
+            // Rust's `f32::min`/`f32::max` with the operands in this
+            // order, so non-finite inputs quantize identically.
+            let c = _mm256_max_ps(_mm256_min_ps(r, hi), lo);
+            let q = _mm256_cvtps_epi32(c);
+            _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, q);
+            for (k, &l) in lanes.iter().enumerate() {
+                out[j + k] = l as u8;
+            }
+            j += 8;
+        }
+        scalar::quantize_block(&v[j..], qs, &mut out[j..]);
+    }
+
+    /// # Safety
+    /// Requires AVX2 (guaranteed by the dispatcher).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dequantize_block(q: &[u8], scale: f32, out: &mut [f32]) {
+        debug_assert_eq!(q.len(), out.len());
+        let n = out.len();
+        let sv = _mm256_set1_ps(scale);
+        let d127 = _mm256_set1_ps(127.0);
+        let mut j = 0;
+        while j + 8 <= n {
+            let b = _mm_loadl_epi64(q.as_ptr().add(j) as *const __m128i);
+            let w = _mm256_cvtepi8_epi32(b);
+            let f = _mm256_cvtepi32_ps(w);
+            let r = _mm256_mul_ps(_mm256_div_ps(f, d127), sv);
+            _mm256_storeu_ps(out.as_mut_ptr().add(j), r);
+            j += 8;
+        }
+        scalar::dequantize_block(&q[j..], scale, &mut out[j..]);
+    }
+
+    /// # Safety
+    /// Requires AVX2 (guaranteed by the dispatcher).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scaled_signed_mul(src: &[f32], signs: &[f32], inv_sqrt: f32, out: &mut [f32]) {
+        debug_assert_eq!(src.len(), out.len());
+        debug_assert_eq!(signs.len(), out.len());
+        let n = out.len();
+        let iv = _mm256_set1_ps(inv_sqrt);
+        let mut j = 0;
+        while j + 8 <= n {
+            let x = _mm256_loadu_ps(src.as_ptr().add(j));
+            let s = _mm256_loadu_ps(signs.as_ptr().add(j));
+            let r = _mm256_mul_ps(_mm256_mul_ps(x, iv), s);
+            _mm256_storeu_ps(out.as_mut_ptr().add(j), r);
+            j += 8;
+        }
+        scalar::scaled_signed_mul(&src[j..], &signs[j..], inv_sqrt, &mut out[j..]);
+    }
+
+    /// # Safety
+    /// Requires AVX2 (guaranteed by the dispatcher).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dgc_scan(u: &mut [f32], v: &mut [f32], delta: &[f32], m: f32, scale: f32) {
+        debug_assert_eq!(u.len(), delta.len());
+        debug_assert_eq!(v.len(), delta.len());
+        let n = delta.len();
+        let mv = _mm256_set1_ps(m);
+        let sc = _mm256_set1_ps(scale);
+        let mut j = 0;
+        while j + 8 <= n {
+            let uv = _mm256_loadu_ps(u.as_ptr().add(j));
+            let dv = _mm256_loadu_ps(delta.as_ptr().add(j));
+            let un = _mm256_add_ps(_mm256_mul_ps(mv, uv), _mm256_mul_ps(dv, sc));
+            _mm256_storeu_ps(u.as_mut_ptr().add(j), un);
+            let vv = _mm256_loadu_ps(v.as_ptr().add(j));
+            _mm256_storeu_ps(v.as_mut_ptr().add(j), _mm256_add_ps(vv, un));
+            j += 8;
+        }
+        scalar::dgc_scan(&mut u[j..], &mut v[j..], &delta[j..], m, scale);
+    }
+
+    /// # Safety
+    /// Requires AVX2, every `idx` in-bounds for `src`, and
+    /// `src.len() ≤ i32::MAX` (the dispatcher checks the length; the
+    /// caller guarantees the indices, as in the scalar path).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn gather_extend(out: &mut Vec<f32>, src: &[f32], idx: &[u32]) {
+        let k = idx.len();
+        out.reserve(k);
+        let mut lanes = [0.0f32; 8];
+        let mut j = 0;
+        while j + 8 <= k {
+            let iv = _mm256_loadu_si256(idx.as_ptr().add(j) as *const __m256i);
+            let g = _mm256_i32gather_ps::<4>(src.as_ptr(), iv);
+            _mm256_storeu_ps(lanes.as_mut_ptr(), g);
+            out.extend_from_slice(&lanes);
+            j += 8;
+        }
+        scalar::gather_extend(out, src, &idx[j..]);
+    }
+}
+
+// Dispatch helper: with the feature compiled in, branch on the cached
+// level (the AVX2 arm is only reachable after a successful probe —
+// that is the safety argument for the `unsafe` call); without it, the
+// scalar expression is the whole expansion and the AVX2 tokens are
+// never name-resolved.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+macro_rules! dispatch {
+    ($scalar:expr, $avx2:expr) => {
+        match level() {
+            SimdLevel::Avx2 => unsafe { $avx2 },
+            SimdLevel::Scalar => $scalar,
+        }
+    };
+}
+
+#[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+macro_rules! dispatch {
+    ($scalar:expr, $avx2:expr) => {
+        $scalar
+    };
+}
+
+/// `out[j] += x · w[j]` — the GEMM/rank-1 inner row op.
+#[inline]
+pub fn axpy_row(out: &mut [f32], x: f32, w: &[f32]) {
+    dispatch!(scalar::axpy_row(out, x, w), avx2::axpy_row(out, x, w))
+}
+
+/// Fused ReLU + unit-mask row: `out[j] = pre[j] > 0 ? pre[j]·mask[j] : 0`.
+#[inline]
+pub fn relu_mask_row(pre: &[f32], mask: &[f32], out: &mut [f32]) {
+    dispatch!(
+        scalar::relu_mask_row(pre, mask, out),
+        avx2::relu_mask_row(pre, mask, out)
+    )
+}
+
+/// `v[i] /= z` (softmax normalization; stays a true division).
+#[inline]
+pub fn div_inplace(v: &mut [f32], z: f32) {
+    dispatch!(scalar::div_inplace(v, z), avx2::div_inplace(v, z))
+}
+
+/// `v[i] *= a`.
+#[inline]
+pub fn scale_inplace(v: &mut [f32], a: f32) {
+    dispatch!(scalar::scale_inplace(v, a), avx2::scale_inplace(v, a))
+}
+
+/// `v[i] *= s[i]`.
+#[inline]
+pub fn mul_inplace(v: &mut [f32], s: &[f32]) {
+    dispatch!(scalar::mul_inplace(v, s), avx2::mul_inplace(v, s))
+}
+
+/// `w[j] -= lr · Σ_t av[t]·g[t·n + j]` (blocked SGD weight update; the
+/// per-column sum keeps `t` ascending on both paths).
+#[inline]
+pub fn weighted_colsum_sub(w: &mut [f32], g: &[f32], av: &[f32], lr: f32) {
+    dispatch!(
+        scalar::weighted_colsum_sub(w, g, av, lr),
+        avx2::weighted_colsum_sub(w, g, av, lr)
+    )
+}
+
+/// `bias[j] -= lr · Σ_t g[t·n + j]` (blocked SGD bias update).
+#[inline]
+pub fn colsum_sub(bias: &mut [f32], g: &[f32], lr: f32) {
+    dispatch!(scalar::colsum_sub(bias, g, lr), avx2::colsum_sub(bias, g, lr))
+}
+
+/// In-place unnormalized FWHT (identical butterfly order on both
+/// paths; callers apply the `1/√B` normalization).
+#[inline]
+pub fn fwht(v: &mut [f32]) {
+    dispatch!(scalar::fwht(v), avx2::fwht(v))
+}
+
+/// `max_i |v[i]|`, NaN-ignoring (quant8 scale scan).
+#[inline]
+pub fn absmax(v: &[f32]) -> f32 {
+    dispatch!(scalar::absmax(v), avx2::absmax(v))
+}
+
+/// Quantize a rotated block: `out[i] = quantize_unit(v[i]·qs)`.
+#[inline]
+pub fn quantize_block(v: &[f32], qs: f32, out: &mut [u8]) {
+    dispatch!(
+        scalar::quantize_block(v, qs, out),
+        avx2::quantize_block(v, qs, out)
+    )
+}
+
+/// Dequantize a block: `out[i] = (q[i] as i8 as f32)/127 · scale`.
+#[inline]
+pub fn dequantize_block(q: &[u8], scale: f32, out: &mut [f32]) {
+    dispatch!(
+        scalar::dequantize_block(q, scale, out),
+        avx2::dequantize_block(q, scale, out)
+    )
+}
+
+/// `out[i] = src[i] · inv_sqrt · signs[i]` (quant8 decode tail).
+#[inline]
+pub fn scaled_signed_mul(src: &[f32], signs: &[f32], inv_sqrt: f32, out: &mut [f32]) {
+    dispatch!(
+        scalar::scaled_signed_mul(src, signs, inv_sqrt, out),
+        avx2::scaled_signed_mul(src, signs, inv_sqrt, out)
+    )
+}
+
+/// DGC momentum scan: `u = m·u + delta·scale; v += u` (elementwise, no
+/// reassociation — bit-identical on both paths).
+#[inline]
+pub fn dgc_scan(u: &mut [f32], v: &mut [f32], delta: &[f32], m: f32, scale: f32) {
+    dispatch!(
+        scalar::dgc_scan(u, v, delta, m, scale),
+        avx2::dgc_scan(u, v, delta, m, scale)
+    )
+}
+
+/// Append `src[idx[k]]` for each index (DGC value gather; every index
+/// must be in-bounds for `src`). Sources larger than `i32::MAX`
+/// elements always take the scalar path (AVX2 gathers index with i32).
+#[inline]
+pub fn gather_extend(out: &mut Vec<f32>, src: &[f32], idx: &[u32]) {
+    debug_assert!(idx.iter().all(|&i| (i as usize) < src.len()));
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if level() == SimdLevel::Avx2 && src.len() <= i32::MAX as usize {
+        unsafe { avx2::gather_extend(out, src, idx) };
+        return;
+    }
+    scalar::gather_extend(out, src, idx);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn gauss(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::new(seed);
+        (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn init_is_idempotent_and_names_the_level() {
+        let a = init();
+        let b = level();
+        assert_eq!(a, b);
+        match a {
+            SimdLevel::Avx2 => assert_eq!(active_name(), "avx2"),
+            SimdLevel::Scalar => assert_eq!(active_name(), "scalar"),
+        }
+        // cpu_features never lies about the dispatch prerequisites.
+        if a == SimdLevel::Avx2 {
+            assert!(cpu_features().contains(&"avx2"));
+        }
+    }
+
+    #[test]
+    fn quantize_unit_rounds_ties_to_even_and_clamps() {
+        assert_eq!(quantize_unit(0.0) as i8, 0);
+        assert_eq!(quantize_unit(1.4) as i8, 1);
+        assert_eq!(quantize_unit(1.5) as i8, 2);
+        assert_eq!(quantize_unit(2.5) as i8, 2, "ties to even");
+        assert_eq!(quantize_unit(-2.5) as i8, -2, "ties to even");
+        assert_eq!(quantize_unit(-1.6) as i8, -2);
+        assert_eq!(quantize_unit(127.0) as i8, 127);
+        assert_eq!(quantize_unit(-127.0) as i8, -127);
+        assert_eq!(quantize_unit(f32::INFINITY) as i8, 127);
+        assert_eq!(quantize_unit(f32::NEG_INFINITY) as i8, -127);
+    }
+
+    #[test]
+    fn dispatched_ops_match_scalar_bitwise() {
+        // Trivially true without AVX2; the real check runs under
+        // `--features simd` on an AVX2 machine (and exhaustively in
+        // rust/tests/simd_conformance.rs).
+        for n in [0usize, 1, 7, 8, 9, 64, 100] {
+            let w = gauss(n, 1);
+            let mut a = gauss(n, 2);
+            let mut b = a.clone();
+            axpy_row(&mut a, 0.37, &w);
+            scalar::axpy_row(&mut b, 0.37, &w);
+            assert_eq!(
+                a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                b.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn absmax_ignores_nan_like_sequential_max() {
+        let mut v = gauss(33, 3);
+        v[7] = f32::NAN;
+        v[20] = f32::NAN;
+        let got = absmax(&v);
+        let want = scalar::absmax(&v);
+        assert_eq!(got.to_bits(), want.to_bits());
+        assert!(got.is_finite());
+        assert_eq!(absmax(&[]), 0.0);
+        assert_eq!(absmax(&[f32::NAN; 9]), 0.0);
+    }
+
+    #[test]
+    fn gather_matches_indexing() {
+        let src = gauss(500, 4);
+        let idx: Vec<u32> = (0..137).map(|i| (i * 3) % 500).collect();
+        let mut out = Vec::new();
+        gather_extend(&mut out, &src, &idx);
+        let want: Vec<f32> = idx.iter().map(|&i| src[i as usize]).collect();
+        assert_eq!(out, want);
+    }
+}

@@ -154,9 +154,18 @@ impl Pcg64 {
     /// the downlink encoder and client decoder derive the same signs from
     /// the round seed instead of shipping them.
     pub fn rademacher(&mut self, n: usize) -> Vec<f32> {
-        (0..n)
-            .map(|_| if self.next_u64() & 1 == 0 { 1.0 } else { -1.0 })
-            .collect()
+        let mut out = vec![0.0; n];
+        self.rademacher_fill(&mut out);
+        out
+    }
+
+    /// Fill `out` with Rademacher signs — the same draw sequence as
+    /// [`Pcg64::rademacher`], into a caller-provided buffer (the
+    /// allocation-free codec paths stream signs block by block).
+    pub fn rademacher_fill(&mut self, out: &mut [f32]) {
+        for v in out.iter_mut() {
+            *v = if self.next_u64() & 1 == 0 { 1.0 } else { -1.0 };
+        }
     }
 }
 

@@ -10,7 +10,7 @@
 
 use std::sync::Arc;
 
-use afd::aggregation::{FedAvg, ShardedFedAvg};
+use afd::aggregation::{AddOp, FedAvg, ShardedFedAvg};
 use afd::model::packing::{coordinate_mask, PackPlan};
 use afd::model::submodel::SubModel;
 use afd::prop::{check, Gen};
@@ -158,6 +158,54 @@ fn sharded_is_bit_identical_to_reference_across_shard_counts() {
             let (again, cov_again) = apply_sharded(&mut agg, s);
             if again != want || cov_again != want_cov {
                 return Err(format!("shards={shards}: reset+replay diverges"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Persistent fan-out conformance (one pool dispatch per round): the
+/// batched path — `aggregate_batch` replaying reset, every add and the
+/// finalize on pinned shard workers — is bit-identical to the per-add
+/// dispatch path (and therefore to the `FedAvg` reference) on random
+/// mixed rounds, every shard count, with the output buffer reused
+/// across rounds.
+#[test]
+fn batched_round_is_bit_identical_to_per_add_dispatch() {
+    let pool = Arc::new(LazyPool::new(4));
+    check("aggregate_batch conformance", &ScenarioGen, 48, |s| {
+        let (want, _) = apply_reference(s);
+        for shards in [1usize, 2, 7, pool.size(), s.num_params + 5] {
+            let mut per_add = ShardedFedAvg::new(s.num_params, shards, Arc::clone(&pool));
+            let (via_adds, _) = apply_sharded(&mut per_add, s);
+            let mut batched = ShardedFedAvg::new(s.num_params, shards, Arc::clone(&pool));
+            let ops: Vec<AddOp> = s
+                .adds
+                .iter()
+                .map(|add| match add {
+                    Add::Masked { values, mask, n_c } => AddOp::Masked {
+                        values,
+                        coord_mask: mask,
+                        n_c: *n_c,
+                    },
+                    Add::Full { values, n_c } => AddOp::Full {
+                        values,
+                        n_c: *n_c,
+                    },
+                })
+                .collect();
+            let mut out = Vec::new();
+            batched.aggregate_batch(&ops, &s.base, &mut out);
+            if bits(&out) != via_adds || bits(&out) != want {
+                return Err(format!(
+                    "shards={shards}: batched round diverges from per-add dispatch"
+                ));
+            }
+            // Replay into the same (now warm) output buffer: the batch
+            // resets internally, so bits must not change.
+            batched.aggregate_batch(&ops, &s.base, &mut out);
+            if bits(&out) != want {
+                return Err(format!("shards={shards}: batched replay diverges"));
             }
         }
         Ok(())

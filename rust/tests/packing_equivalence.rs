@@ -129,7 +129,7 @@ fn packed_size_monotone_in_kept_units() {
         if let Some(pos) = keep[0].iter().position(|&k| !k) {
             keep[0][pos] = true;
         }
-        let sm_big = SubModel { keep };
+        let sm_big = SubModel::from_keep(keep);
         let small = packing::packed_model_elems(&spec, &sm_small);
         let big = packing::packed_model_elems(&spec, &sm_big);
         if big >= small {

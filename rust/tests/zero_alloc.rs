@@ -1,25 +1,42 @@
 //! Zero-allocation proof for the hot paths: with a warmed
-//! [`Workspace`], a full `train_epoch` and the plan-based
-//! pack/unpack/mask perform **no heap allocations** — counted by a
-//! real `GlobalAlloc` wrapper, not inferred.
+//! [`Workspace`], a full `train_epoch`, the plan-based
+//! pack/unpack/mask — and the **entire client round** (epoch assembly
+//! → pack → encode → decode → train → DGC compress/decode → batched
+//! aggregate) — perform **no heap allocations**, counted by a real
+//! `GlobalAlloc` wrapper, not inferred.
 //!
-//! This test lives alone in its own integration-test binary because
+//! These tests live alone in their own integration-test binary because
 //! the counting allocator is process-global: nothing else may allocate
-//! while the counter is armed.
+//! while the counter is armed (`cargo test` runs tests in one binary
+//! on multiple threads — each test arms the counter only around its
+//! own quiesced region, so they must not run concurrently; the
+//! `serial` mutex below enforces that).
 
+use std::sync::{Arc, Mutex};
+
+use afd::aggregation::{AddOp, ShardedFedAvg};
+use afd::compression::dgc::{DgcConfig, DgcState};
+use afd::compression::quant::HadamardQuant8;
+use afd::compression::{sparse, DenseCodec, Encoded};
+use afd::data::{ClientDataset, Samples};
 use afd::model::packing::PackPlan;
 use afd::model::submodel::SubModel;
 use afd::runtime::native::{mlp_spec, NativeMlp};
 use afd::runtime::{BatchInput, EpochData, ModelRuntime};
 use afd::tensor::kernels::Workspace;
 use afd::util::alloc_count::{self, CountingAllocator};
+use afd::util::pool::LazyPool;
 use afd::util::rng::Pcg64;
 
 #[global_allocator]
 static ALLOC: CountingAllocator = CountingAllocator;
 
+/// The counting allocator is process-global; serialize the tests.
+static SERIAL: Mutex<()> = Mutex::new(());
+
 #[test]
 fn train_epoch_and_plan_packing_allocate_nothing_after_warmup() {
+    let _guard = SERIAL.lock().unwrap();
     // ---- setup (allocates freely) -----------------------------------
     let spec = mlp_spec("z", 24, 16, 6, 8, 3, 0.1);
     let mlp = NativeMlp::new(spec.clone());
@@ -74,4 +91,171 @@ fn train_epoch_and_plan_packing_allocate_nothing_after_warmup() {
     let observed = alloc_count::disarm();
     drop(v);
     assert!(observed >= 1, "counter failed to observe an allocation");
+}
+
+/// The tentpole contract: one whole warm client round — epoch
+/// assembly, downlink pack → quant8 encode → decode → unpack, local
+/// training, DGC compress → sparse decode → reconstruction, and the
+/// batched FedAvg aggregate (single shard ⇒ inline, no pool) — makes
+/// zero heap allocations. Every buffer is drawn from the Workspace
+/// arena's f32/byte/u32/bool pools or from per-client recycled state,
+/// mirroring exactly what `run_client_round` + the engine's batched
+/// aggregation do per round.
+#[test]
+fn full_client_round_pipeline_allocates_nothing_after_warmup() {
+    let _guard = SERIAL.lock().unwrap();
+    // ---- setup (allocates freely) -----------------------------------
+    let (d, h, c) = (24usize, 16usize, 6usize);
+    let spec = mlp_spec("round", d, h, c, 8, 3, 0.1);
+    let n = spec.num_params;
+    let mlp = NativeMlp::new(spec.clone());
+    let mut global = mlp.init_params(1);
+
+    // A client dataset large enough for one epoch without cycling.
+    let mut rng = Pcg64::new(2);
+    let samples = 30usize;
+    let xs: Vec<f32> = (0..samples * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let ys: Vec<i32> = (0..samples).map(|_| rng.below(c as u64) as i32).collect();
+    let dataset = ClientDataset {
+        xs: Samples::F32(xs),
+        ys,
+        per_sample: d,
+    };
+
+    let sm = SubModel::from_kept_indices(&spec, &[vec![0, 2, 3, 5, 8, 9, 11, 14, 15]]);
+    let plan = PackPlan::build(&spec, &sm);
+    let codec = HadamardQuant8::default();
+    let mut dgc_state = DgcState::new(DgcConfig::default());
+    // Single shard: adds/finalize run inline on the caller thread (the
+    // fan-out's per-dispatch control structures are the one part of a
+    // round that inherently allocates; satellite-1's batching bounds
+    // that to one dispatch per round).
+    let mut agg = ShardedFedAvg::new(n, 1, Arc::new(LazyPool::new(1)));
+    let mut agg_out: Vec<f32> = Vec::new();
+
+    let mut ws = Workspace::new();
+    let mut client_rng = Pcg64::with_stream(3, 1);
+    let mut order: Vec<u32> = Vec::new();
+    let mut data = EpochData {
+        xs: BatchInput::F32(Vec::new()),
+        ys: Vec::new(),
+    };
+
+    // Generous pre-reserve for the byte/u32 sinks so per-round wire
+    // size jitter (varint index coding) can't force a warm realloc.
+    let mut byte_bufs = Vec::new();
+    for _ in 0..3 {
+        let mut b = ws.take_bytes();
+        b.reserve(4 * n + 1024);
+        byte_bufs.push(b);
+    }
+    for b in byte_bufs {
+        ws.give_bytes(b);
+    }
+    let mut u = ws.take_u32();
+    u.reserve(n);
+    ws.give_u32(u);
+
+    let mut round = |ws: &mut Workspace,
+                     client_rng: &mut Pcg64,
+                     order: &mut Vec<u32>,
+                     data: &mut EpochData,
+                     dgc_state: &mut DgcState,
+                     agg: &mut ShardedFedAvg,
+                     global: &mut Vec<f32>,
+                     agg_out: &mut Vec<f32>| {
+        // Epoch assembly into recycled buffers.
+        dataset.epoch_data_into(&spec, client_rng, order, data);
+        // Downlink: pack → encode → decode → unpack.
+        let mut packed = ws.take_uncleared(plan.packed_len());
+        plan.pack_into(global, &mut packed);
+        let mut enc = Encoded {
+            bytes: ws.take_bytes(),
+        };
+        codec.encode_into(&packed, 7, ws, &mut enc);
+        let mut decoded = ws.take_uncleared(plan.packed_len());
+        codec.decode_into(&enc, 7, ws, &mut decoded);
+        ws.give_bytes(enc.bytes);
+        let mut start = ws.take_uncleared(n);
+        start.copy_from_slice(global);
+        plan.unpack_from(&decoded, &mut start);
+        ws.give(decoded);
+        // Local training.
+        let mut model = ws.take_uncleared(n);
+        model.copy_from_slice(&start);
+        mlp.train_epoch_in(ws, &mut model, sm.masks_f32(), data, 0.1)
+            .unwrap();
+        // Uplink: DGC compress → sparse decode → reconstruction.
+        let mut coord_mask = ws.take_bool(n);
+        plan.mark_coord_mask(&mut coord_mask);
+        let mut delta = ws.take_uncleared(n);
+        afd::tensor::sub(&model, &start, &mut delta);
+        let mut scratch = ws.take_bytes();
+        let mut msg = ws.take_bytes();
+        dgc_state.compress_into(&delta, &mut scratch, &mut msg);
+        ws.give(delta);
+        ws.give_bytes(scratch);
+        let mut idx = ws.take_u32();
+        let mut vals = ws.take_uncleared(0);
+        sparse::decode_sparse_into(&msg, &mut idx, &mut vals);
+        ws.give_bytes(msg);
+        let mut recon = ws.take_uncleared(n);
+        recon.copy_from_slice(&start);
+        for (&i, &v) in idx.iter().zip(vals.iter()) {
+            if v != 0.0 {
+                recon[i as usize] += v;
+                coord_mask[i as usize] = true;
+            }
+        }
+        ws.give_u32(idx);
+        ws.give(vals);
+        // Aggregate: the round's adds + finalize in one batch.
+        let ops = [AddOp::Masked {
+            values: &recon,
+            coord_mask: &coord_mask,
+            n_c: 20.0,
+        }];
+        agg.aggregate_batch(&ops, global, agg_out);
+        std::mem::swap(global, agg_out);
+        ws.give(packed);
+        ws.give(start);
+        ws.give(model);
+        ws.give(recon);
+        ws.give_bool(coord_mask);
+    };
+
+    // Two warm-up rounds (the first sizes the DGC accumulators and the
+    // arena; the second settles sink-to-call-site pairing).
+    for _ in 0..2 {
+        round(
+            &mut ws,
+            &mut client_rng,
+            &mut order,
+            &mut data,
+            &mut dgc_state,
+            &mut agg,
+            &mut global,
+            &mut agg_out,
+        );
+    }
+
+    alloc_count::arm();
+    round(
+        &mut ws,
+        &mut client_rng,
+        &mut order,
+        &mut data,
+        &mut dgc_state,
+        &mut agg,
+        &mut global,
+        &mut agg_out,
+    );
+    let allocs = alloc_count::disarm();
+    assert_eq!(
+        allocs, 0,
+        "a full warm client round made {allocs} heap allocations"
+    );
+
+    // The pipeline still computes something sensible.
+    assert!(global.iter().all(|v| v.is_finite()));
 }
