@@ -20,6 +20,7 @@ use afd::runtime::native::{mlp_spec, NativeMlp};
 use afd::runtime::{BatchInput, EpochData, ModelRuntime};
 use afd::tensor::kernels::Workspace;
 use afd::tensor::simd::{self, scalar};
+use afd::transport::frame;
 use afd::util::alloc_count::{self, CountingAllocator};
 use afd::util::json::Json;
 use afd::util::rng::Pcg64;
@@ -212,6 +213,31 @@ fn main() {
         std::hint::black_box(&dv);
     });
 
+    // ---- transport framing ------------------------------------------
+    // The wire layer must be noise next to the codecs it frames: one
+    // header+CRC pass over the payload per frame.
+    println!(
+        "\n-- transport frames ({} quant8 payload) --",
+        afd::util::human_bytes(enc.wire_bytes())
+    );
+    let offer_sm = SubModel::from_kept_indices(&tspec, &[rng.sample_indices(256, 192)]);
+    let mut fbuf = Vec::new();
+    let r_offer_enc = b.run("encode RoundOffer (256-unit bitmap)", None, || {
+        fbuf.clear();
+        frame::encode_round_offer(&mut fbuf, 1, 2, 3, 0.05, f64::NAN, &offer_sm);
+        std::hint::black_box(&fbuf);
+    });
+    let mut mbuf = Vec::new();
+    let r_model_enc = b.run("encode ModelDown frame", Some(enc.wire_bytes()), || {
+        mbuf.clear();
+        frame::encode_model_down(&mut mbuf, 1, 2, 1, &enc.bytes);
+        std::hint::black_box(&mbuf);
+    });
+    let r_frame_parse = b.run("parse ModelDown frame (CRC)", Some(enc.wire_bytes()), || {
+        let (view, _) = frame::parse_frame(&mbuf).unwrap();
+        std::hint::black_box(frame::parse_model_down(&view).unwrap());
+    });
+
     println!("\n-- selection (2048-unit score map) --");
     let mut map = ScoreMap::zeros(&spec);
     map.credit(&sm, 0.5);
@@ -324,6 +350,15 @@ fn main() {
     );
     simd_j.set("primitive_speedup", prim);
     doc.set("simd", simd_j);
+    let mut transport_j = Json::obj();
+    transport_j.set("offer_encode_ns", Json::Num(r_offer_enc.median_ns));
+    transport_j.set("model_frame_encode_ns", Json::Num(r_model_enc.median_ns));
+    transport_j.set("frame_parse_crc_ns", Json::Num(r_frame_parse.median_ns));
+    transport_j.set(
+        "frame_overhead_bytes",
+        Json::Num(frame::FRAME_OVERHEAD as f64),
+    );
+    doc.set("transport", transport_j);
     doc.set("all_results", b.to_json());
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
         .join("..")

@@ -65,8 +65,21 @@ pub trait DenseCodec: Send + Sync {
     /// without shipping it; `ws` supplies internal scratch.
     fn encode_into(&self, values: &[f32], seed: u64, ws: &mut Workspace, out: &mut Encoded);
 
+    /// Decode a raw wire-byte slice into `out` (cleared first; capacity
+    /// reused). The slice form is the primitive so transports can
+    /// decode borrowed frame payloads zero-copy.
+    fn decode_slice_into(&self, bytes: &[u8], seed: u64, ws: &mut Workspace, out: &mut Vec<f32>);
+
     /// Decode into `out` (cleared first; capacity reused).
-    fn decode_into(&self, enc: &Encoded, seed: u64, ws: &mut Workspace, out: &mut Vec<f32>);
+    fn decode_into(&self, enc: &Encoded, seed: u64, ws: &mut Workspace, out: &mut Vec<f32>) {
+        self.decode_slice_into(&enc.bytes, seed, ws, out);
+    }
+
+    /// Exact wire length (bytes) of an encoding of `n` values — lets a
+    /// receiver validate a payload's length *before* decoding it, so a
+    /// mismatched stream errors diagnosably instead of panicking in
+    /// the decoder.
+    fn wire_len(&self, n: usize) -> u64;
 
     /// Allocating wrapper around [`DenseCodec::encode_into`].
     fn encode(&self, values: &[f32], seed: u64) -> Encoded {
@@ -103,20 +116,24 @@ impl DenseCodec for RawF32 {
         }
     }
 
-    fn decode_into(&self, enc: &Encoded, _seed: u64, _ws: &mut Workspace, out: &mut Vec<f32>) {
-        let n = u32::from_le_bytes(enc.bytes[0..4].try_into().unwrap()) as usize;
+    fn decode_slice_into(&self, bytes: &[u8], _seed: u64, _ws: &mut Workspace, out: &mut Vec<f32>) {
+        let n = u32::from_le_bytes(bytes[0..4].try_into().unwrap()) as usize;
         assert!(
-            enc.bytes.len() >= 4 + 4 * n,
+            bytes.len() >= 4 + 4 * n,
             "raw_f32 decode: encoded buffer holds {} bytes but its header claims \
              {n} f32 values ({} bytes) — truncated or corrupt message",
-            enc.bytes.len(),
+            bytes.len(),
             4 + 4 * n
         );
         out.clear();
         out.reserve(n);
-        for c in enc.bytes[4..4 + 4 * n].chunks_exact(4) {
+        for c in bytes[4..4 + 4 * n].chunks_exact(4) {
             out.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
         }
+    }
+
+    fn wire_len(&self, n: usize) -> u64 {
+        4 + 4 * n as u64
     }
 }
 
@@ -139,6 +156,7 @@ mod tests {
         let c = RawF32;
         let enc = c.encode(&xs, 1);
         assert_eq!(enc.wire_bytes(), 4 + 37 * 4);
+        assert_eq!(c.wire_len(37), enc.wire_bytes());
         assert_eq!(c.decode(&enc, 1), xs);
     }
 

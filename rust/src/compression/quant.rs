@@ -15,12 +15,13 @@
 //! the codec is stateless and allocation-free against a warm
 //! [`Workspace`] (the sign *values* are identical to generating the
 //! whole padded vector up front, because the stream is consumed in
-//! block order). Trade-off vs the deleted coordinator-side sign
-//! cache: an encode-then-decode of the same payload now generates the
-//! stream twice (one `next_u64` per coordinate each) instead of once —
-//! accepted for statelessness and zero allocation; batching the draw
-//! (e.g. 64 signs per `next_u64`) would change the seed-derived sign
-//! sequence and is left as a ROADMAP follow-on.
+//! block order — `Pcg64::rademacher_fill` draws **64 signs per
+//! `next_u64`**, so per-block streaming chains exactly like one long
+//! draw as long as the block size is a multiple of 64, which every
+//! supported block is). Encode and decode each stream the diagonal
+//! once; at one PRNG step per 64 coordinates the doubled generation
+//! the deleted coordinator-side sign cache used to avoid is now noise
+//! rather than a hot-path cost.
 //!
 //! Rounding is ties-to-even via [`simd::quantize_unit`] (the
 //! magic-constant trick), computed identically by the scalar and AVX2
@@ -53,6 +54,13 @@ pub struct HadamardQuant8 {
 
 impl HadamardQuant8 {
     pub fn new(block: usize) -> HadamardQuant8 {
+        // Power of two for the FWHT; ≥ 64 so the batched Rademacher
+        // draw (64 signs per PRNG word) streams block-by-block exactly
+        // like one whole-vector draw (module docs).
+        assert!(
+            block.is_power_of_two() && block >= 64,
+            "quant8 block must be a power of two ≥ 64, got {block}"
+        );
         HadamardQuant8 { block }
     }
 }
@@ -111,9 +119,9 @@ impl DenseCodec for HadamardQuant8 {
         ws.give(signs);
     }
 
-    fn decode_into(&self, enc: &Encoded, seed: u64, ws: &mut Workspace, out: &mut Vec<f32>) {
+    fn decode_slice_into(&self, bytes: &[u8], seed: u64, ws: &mut Workspace, out: &mut Vec<f32>) {
         let b = self.block;
-        let n = u32::from_le_bytes(enc.bytes[0..4].try_into().unwrap()) as usize;
+        let n = u32::from_le_bytes(bytes[0..4].try_into().unwrap()) as usize;
         let nblocks = n.div_ceil(b);
         let inv_sqrt = 1.0 / (b as f32).sqrt();
         let mut signs_rng = sign_stream(seed);
@@ -124,9 +132,9 @@ impl DenseCodec for HadamardQuant8 {
         let mut signs = ws.take_uncleared(b);
         let mut off = 4;
         for blk in 0..nblocks {
-            let scale = f32::from_le_bytes(enc.bytes[off..off + 4].try_into().unwrap());
+            let scale = f32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
             off += 4;
-            simd::dequantize_block(&enc.bytes[off..off + b], scale, &mut buf);
+            simd::dequantize_block(&bytes[off..off + b], scale, &mut buf);
             off += b;
             // H is self-inverse under the 1/√B normalization: applying the
             // unnormalized FWHT then multiplying by 1/√B inverts encode.
@@ -140,6 +148,10 @@ impl DenseCodec for HadamardQuant8 {
         }
         ws.give(buf);
         ws.give(signs);
+    }
+
+    fn wire_len(&self, n: usize) -> u64 {
+        4 + (n.div_ceil(self.block) as u64) * (4 + self.block as u64)
     }
 }
 
@@ -192,6 +204,8 @@ mod tests {
         let enc = c.encode(&xs, 3);
         let raw = 4 * 4096u64;
         assert_eq!(enc.wire_bytes(), 4 + 16 * (4 + 256));
+        assert_eq!(c.wire_len(4096), enc.wire_bytes());
+        assert_eq!(c.wire_len(1), 4 + 4 + 256);
         assert!(enc.wire_bytes() * 3 < raw, "must be ≳ 3.9× smaller than f32");
     }
 

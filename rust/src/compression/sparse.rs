@@ -180,19 +180,123 @@ pub fn encode_sparse(indices: &[u32], values: &[f32], n: usize) -> Vec<u8> {
     out
 }
 
+/// Fully-checked decode of a sparse message into caller-provided
+/// index/value sinks (cleared first; capacity reused); returns the
+/// dense length `n`, or a diagnosable error on any malformed input —
+/// truncated headers/payloads, oversized counts, overflowing varints —
+/// without panicking and without reserving more memory than the
+/// message's own length can justify (every `reserve` is preceded by a
+/// remaining-bytes check, so a hostile count cannot force a huge
+/// allocation). The transport layer decodes remote `UpdateUp` bodies
+/// through this.
+pub fn try_decode_sparse_into(
+    bytes: &[u8],
+    indices: &mut Vec<u32>,
+    values: &mut Vec<f32>,
+) -> Result<usize, &'static str> {
+    if bytes.len() < 4 {
+        return Err("message shorter than its length header");
+    }
+    let n = u32::from_le_bytes(bytes[0..4].try_into().unwrap()) as usize;
+    let rest = &bytes[4..];
+    if rest.len() < 5 {
+        return Err("truncated index header");
+    }
+    let scheme = rest[0];
+    let k = u32::from_le_bytes(rest[1..5].try_into().unwrap()) as usize;
+    if k > n {
+        return Err("more indices than coordinates");
+    }
+    let mut pos = 5usize;
+    indices.clear();
+    match scheme {
+        0 => {
+            let bm = n.div_ceil(8);
+            if rest.len() - pos < bm {
+                return Err("truncated index bitmap");
+            }
+            indices.reserve(k);
+            for i in 0..n {
+                if rest[pos + i / 8] & (1 << (i % 8)) != 0 {
+                    indices.push(i as u32);
+                }
+            }
+            pos += bm;
+        }
+        1 => {
+            if rest.len() - pos < 4 * k {
+                return Err("truncated u32 indices");
+            }
+            indices.reserve(k);
+            for _ in 0..k {
+                let idx = u32::from_le_bytes(rest[pos..pos + 4].try_into().unwrap());
+                indices.push(idx);
+                pos += 4;
+            }
+        }
+        2 => {
+            // Each varint is at least one byte, so k is bounded by the
+            // remaining message length before anything is reserved.
+            if rest.len() - pos < k {
+                return Err("truncated varint indices");
+            }
+            indices.reserve(k);
+            let mut prev = 0u32;
+            for i in 0..k {
+                let mut v = 0u64;
+                let mut shift = 0u32;
+                loop {
+                    if pos >= rest.len() {
+                        return Err("truncated varint index");
+                    }
+                    let b = rest[pos];
+                    pos += 1;
+                    v |= ((b & 0x7f) as u64) << shift;
+                    if b & 0x80 == 0 {
+                        break;
+                    }
+                    shift += 7;
+                    if shift > 63 {
+                        return Err("varint index overflows 64 bits");
+                    }
+                }
+                let gap = u32::try_from(v).map_err(|_| "index gap overflows u32")?;
+                let idx = if i == 0 {
+                    gap
+                } else {
+                    prev
+                        .checked_add(1)
+                        .and_then(|p| p.checked_add(gap))
+                        .ok_or("index overflows u32")?
+                };
+                indices.push(idx);
+                prev = idx;
+            }
+        }
+        _ => return Err("unknown index scheme"),
+    }
+    if indices.len() != k {
+        return Err("index count disagrees with header");
+    }
+    if rest.len() - pos < 4 * k {
+        return Err("truncated values");
+    }
+    values.clear();
+    values.reserve(k);
+    for c in rest[pos..pos + 4 * k].chunks_exact(4) {
+        values.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+    }
+    Ok(n)
+}
+
 /// Decode a sparse message into caller-provided index/value sinks
 /// (cleared first; capacity reused); returns the dense length `n`.
+/// Panics with the defect name on malformed input (trusted-input
+/// callers — the server decodes untrusted remote bodies through
+/// [`try_decode_sparse_into`] instead).
 pub fn decode_sparse_into(bytes: &[u8], indices: &mut Vec<u32>, values: &mut Vec<f32>) -> usize {
-    let n = u32::from_le_bytes(bytes[0..4].try_into().unwrap()) as usize;
-    let used = decode_indices_into(&bytes[4..], n, indices);
-    let mut pos = 4 + used;
-    values.clear();
-    values.reserve(indices.len());
-    for _ in 0..indices.len() {
-        values.push(f32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()));
-        pos += 4;
-    }
-    n
+    try_decode_sparse_into(bytes, indices, values)
+        .unwrap_or_else(|e| panic!("sparse decode: {e}"))
 }
 
 /// Allocating wrapper around [`decode_sparse_into`].
@@ -278,6 +382,39 @@ mod tests {
         encode_indices(&idx, n, &mut buf);
         assert_eq!(buf[0], 2, "varint should win at 0.05% density");
         assert!(buf.len() < 5 + 4 * 500, "varint must beat u32 here");
+    }
+
+    #[test]
+    fn try_decode_rejects_malformed_without_panicking() {
+        let n = 5000;
+        let idx = random_indices(n, 50, 4);
+        let vals: Vec<f32> = idx.iter().map(|&i| i as f32).collect();
+        let msg = encode_sparse(&idx, &vals, n);
+        let mut gi = Vec::new();
+        let mut gv = Vec::new();
+        // Well-formed round-trips through the checked path.
+        assert_eq!(try_decode_sparse_into(&msg, &mut gi, &mut gv), Ok(n));
+        assert_eq!(gi, idx);
+        assert_eq!(gv, vals);
+        // Truncation at every byte is an Err, never a panic.
+        for cut in 0..msg.len() {
+            assert!(
+                try_decode_sparse_into(&msg[..cut], &mut gi, &mut gv).is_err(),
+                "prefix {cut}"
+            );
+        }
+        // A hostile count cannot force a huge reserve: claim u32::MAX
+        // indices in a tiny message.
+        let mut hostile = msg.clone();
+        hostile[5..9].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(try_decode_sparse_into(&hostile, &mut gi, &mut gv).is_err());
+        // Unknown scheme byte.
+        let mut bad = msg.clone();
+        bad[4] = 9;
+        assert_eq!(
+            try_decode_sparse_into(&bad, &mut gi, &mut gv),
+            Err("unknown index scheme")
+        );
     }
 
     #[test]

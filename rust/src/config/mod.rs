@@ -241,6 +241,51 @@ impl ExperimentConfig {
                 .unwrap_or(Json::Null),
         );
         j.set("iid", Json::Bool(self.data.iid));
+        j.set(
+            "data_samples_per_client",
+            Json::Arr(vec![
+                Json::Num(self.data.samples_per_client.0 as f64),
+                Json::Num(self.data.samples_per_client.1 as f64),
+            ]),
+        );
+        j.set("data_test_fraction", Json::Num(self.data.test_fraction));
+        j.set(
+            "native_dims",
+            Json::Arr(vec![
+                Json::Num(self.native_dims.0 as f64),
+                Json::Num(self.native_dims.1 as f64),
+                Json::Num(self.native_dims.2 as f64),
+            ]),
+        );
+        j.set(
+            "lr_override",
+            self.lr_override
+                .map(|v| Json::Num(v as f64))
+                .unwrap_or(Json::Null),
+        );
+        j.set(
+            "link_down_mbps",
+            Json::Arr(vec![
+                Json::Num(self.link.down_mbps.0),
+                Json::Num(self.link.down_mbps.1),
+            ]),
+        );
+        j.set(
+            "link_up_mbps",
+            Json::Arr(vec![
+                Json::Num(self.link.up_mbps.0),
+                Json::Num(self.link.up_mbps.1),
+            ]),
+        );
+        j.set(
+            "link_device_gflops",
+            Json::Arr(vec![
+                Json::Num(self.link.device_gflops.0),
+                Json::Num(self.link.device_gflops.1),
+            ]),
+        );
+        j.set("link_rtt_latency_s", Json::Num(self.link.rtt_latency_s));
+        j.set("link_log_uniform", Json::Bool(self.link.log_uniform));
         j.set("sched_policy", Json::Str(self.sched.policy.clone()));
         j.set("sched_over_fraction", Json::Num(self.sched.over_fraction));
         j.set(
@@ -315,8 +360,64 @@ impl ExperimentConfig {
         if let Some(v) = j.get("dgc_sparsity").and_then(|v| v.as_f64()) {
             self.dgc.sparsity = v;
         }
+        if let Some(v) = j.get("dgc_momentum").and_then(|v| v.as_f64()) {
+            self.dgc.momentum = v as f32;
+        }
+        match j.get("dgc_clip") {
+            Some(Json::Null) => self.dgc.clip_norm = None,
+            Some(v) => {
+                if let Some(c) = v.as_f64() {
+                    self.dgc.clip_norm = Some(c as f32);
+                }
+            }
+            None => {}
+        }
         if let Some(v) = j.get("iid").and_then(|v| v.as_bool()) {
             self.data.iid = v;
+        }
+        fn pair_usize(j: &Json, key: &str) -> Option<(usize, usize)> {
+            let arr = j.get(key)?.as_arr()?;
+            match arr {
+                [a, b] => Some((a.as_usize()?, b.as_usize()?)),
+                _ => None,
+            }
+        }
+        fn pair_f64(j: &Json, key: &str) -> Option<(f64, f64)> {
+            let arr = j.get(key)?.as_arr()?;
+            match arr {
+                [a, b] => Some((a.as_f64()?, b.as_f64()?)),
+                _ => None,
+            }
+        }
+        if let Some(v) = pair_usize(j, "data_samples_per_client") {
+            self.data.samples_per_client = v;
+        }
+        if let Some(v) = j.get("data_test_fraction").and_then(|v| v.as_f64()) {
+            self.data.test_fraction = v;
+        }
+        if let Some([d, h, c]) = j.get("native_dims").and_then(|v| v.as_arr()) {
+            let dims = (d.as_usize(), h.as_usize(), c.as_usize());
+            if let (Some(d), Some(h), Some(c)) = dims {
+                self.native_dims = (d, h, c);
+            }
+        }
+        if let Some(v) = j.get("lr_override").and_then(|v| v.as_f64()) {
+            self.lr_override = Some(v as f32);
+        }
+        if let Some(v) = pair_f64(j, "link_down_mbps") {
+            self.link.down_mbps = v;
+        }
+        if let Some(v) = pair_f64(j, "link_up_mbps") {
+            self.link.up_mbps = v;
+        }
+        if let Some(v) = pair_f64(j, "link_device_gflops") {
+            self.link.device_gflops = v;
+        }
+        if let Some(v) = j.get("link_rtt_latency_s").and_then(|v| v.as_f64()) {
+            self.link.rtt_latency_s = v;
+        }
+        if let Some(v) = j.get("link_log_uniform").and_then(|v| v.as_bool()) {
+            self.link.log_uniform = v;
         }
         if let Some(v) = j.get("sched_policy").and_then(|v| v.as_str()) {
             self.sched.policy = v.to_string();
@@ -500,6 +601,41 @@ mod tests {
         let mut c = ExperimentConfig::default();
         c.apply_json(&partial).unwrap();
         assert_eq!(c.sharding.shard_count, 0);
+    }
+
+    #[test]
+    fn json_roundtrip_covers_remote_client_fields() {
+        // The transport handshake rebuilds a client environment from
+        // the config JSON alone — every field that environment depends
+        // on (model dims, data geometry, link profile, lr) must
+        // survive the round-trip.
+        let mut src = ExperimentConfig::preset(Preset::NativeSmoke);
+        src.native_dims = (48, 32, 7);
+        src.lr_override = Some(0.05);
+        src.data.samples_per_client = (80, 200);
+        src.data.test_fraction = 0.25;
+        src.link = LinkConfig::straggler_heavy();
+        src.dgc.momentum = 0.75;
+        src.dgc.clip_norm = None;
+        let j = src.to_json();
+        let mut dst = ExperimentConfig::default();
+        dst.apply_json(&j).unwrap();
+        assert_eq!(dst.backend, Backend::Native);
+        assert_eq!(dst.native_dims, (48, 32, 7));
+        assert_eq!(dst.lr_override, Some(0.05));
+        assert_eq!(dst.data.samples_per_client, (80, 200));
+        assert_eq!(dst.data.test_fraction, 0.25);
+        assert_eq!(dst.link.down_mbps, src.link.down_mbps);
+        assert_eq!(dst.link.up_mbps, src.link.up_mbps);
+        assert_eq!(dst.link.device_gflops, src.link.device_gflops);
+        assert!(dst.link.log_uniform);
+        assert_eq!(dst.dgc.momentum, 0.75);
+        assert_eq!(dst.dgc.clip_norm, None, "explicit null must clear the clip");
+        // Partial configs leave the new fields untouched.
+        let partial = crate::util::json::parse(r#"{"rounds": 3}"#).unwrap();
+        let mut c = ExperimentConfig::default();
+        c.apply_json(&partial).unwrap();
+        assert_eq!(c.native_dims, ExperimentConfig::default().native_dims);
     }
 
     #[test]

@@ -24,10 +24,11 @@ use crate::metrics::{ExperimentReport, RoundRecord};
 use crate::model::manifest::{Manifest, VariantSpec};
 use crate::model::packing::PlanCache;
 use crate::network::{Availability, NetworkSim};
-use crate::runtime::native::{mlp_spec, NativeMlp};
+use crate::runtime::native::mlp_from_config;
 use crate::runtime::{EvalOutput, ModelRuntime, RuntimeHost};
-use crate::sched::{make_policy, Engine, RoundCtx};
+use crate::sched::{make_policy, Engine, RoundCtx, RoundSummary};
 use crate::tensor::kernels::WorkspacePool;
+use crate::transport::{Loopback, Transport};
 use crate::util::pool::LazyPool;
 use crate::util::rng::Pcg64;
 
@@ -60,10 +61,24 @@ pub struct Experiment {
     /// (`Arc` so the engine can hand it to pool workers, which check
     /// one out only while a job executes).
     workspaces: Arc<WorkspacePool>,
+    /// The transport the federation conversation's frames travel
+    /// through: in-process [`Loopback`] by default, a real
+    /// [`crate::transport::tcp::TcpTransport`] under `afd serve`.
+    /// The transport never changes results, only where the client
+    /// half runs (`rust/tests/transport_e2e.rs`).
+    transport: Arc<dyn Transport>,
 }
 
 impl Experiment {
+    /// Build with the default in-process loopback transport.
     pub fn build(cfg: &ExperimentConfig) -> Result<Experiment> {
+        Experiment::build_with_transport(cfg, Arc::new(Loopback))
+    }
+
+    pub fn build_with_transport(
+        cfg: &ExperimentConfig,
+        transport: Arc<dyn Transport>,
+    ) -> Result<Experiment> {
         // Resolve the SIMD dispatch level once, before any kernel or
         // codec runs (workspace construction re-checks the cached
         // probe; this keeps even the first client round off the
@@ -88,9 +103,11 @@ impl Experiment {
                     (RuntimeHost::Serial(Box::new(rt)), spec, init)
                 }
                 Backend::Native => {
-                    let (d, h, c) = cfg.native_dims;
-                    let spec = mlp_spec(&cfg.variant, d, h, c, 10, 5, 0.1);
-                    let mlp = NativeMlp::new(spec.clone());
+                    // Shared construction point with the remote
+                    // transport client (`afd client` rebuilds the same
+                    // runtime from the shipped config — they can never
+                    // drift on model geometry).
+                    let (mlp, spec) = mlp_from_config(cfg);
                     let init = mlp.init_params(cfg.seed);
                     // Pure-Rust model: share it across pool workers.
                     (RuntimeHost::Parallel(Arc::new(mlp)), spec, init)
@@ -146,6 +163,7 @@ impl Experiment {
             lr,
             plans: PlanCache::default(),
             workspaces: Arc::new(WorkspacePool::new()),
+            transport,
         })
     }
 
@@ -168,20 +186,11 @@ impl Experiment {
             cum_s: self.cum_s,
             plans: &self.plans,
             workspaces: &self.workspaces,
+            transport: &self.transport,
         };
         let s = self.engine.step(round, &mut ctx)?;
         self.cum_s += s.round_s;
-        self.finish_round(
-            round,
-            s.round_s,
-            s.train_loss,
-            s.keep_fraction,
-            s.down_bytes,
-            s.up_bytes,
-            s.arrived,
-            s.cut,
-            s.dropped,
-        )
+        self.finish_round(round, &s)
     }
 
     /// The pre-scheduler serial round loop, kept as the bit-exactness
@@ -198,6 +207,7 @@ impl Experiment {
         for &c in &cohort {
             let sm = self.strategy.select(round, c, &mut self.rng);
             let plan = self.plans.get(&self.spec, &sm);
+            let num_samples = self.fleet[c].num_samples;
             let data = {
                 let st = &mut self.fleet[c];
                 st.participations += 1;
@@ -219,8 +229,12 @@ impl Experiment {
                 self.lr,
                 self.downlink.as_ref(),
                 dgc_state,
+                round,
                 self.cfg.seed ^ (round as u64) << 20,
                 c,
+                num_samples,
+                None,
+                self.transport.as_ref(),
                 &mut ws,
             )?;
             self.workspaces.restore(ws);
@@ -234,41 +248,35 @@ impl Experiment {
             aggregate_round(&self.global, &outcomes, &sizes, agg_ref, &self.net);
         self.global = new_global;
         feed_strategy(self.strategy.as_mut(), round, &outcomes);
+        // Every serial-reference update is aggregated: Ack them all
+        // (the engine's sync policy does exactly the same).
+        for o in &outcomes {
+            self.transport.finish(o.client, round as u32, true)?;
+        }
 
         self.cum_s += timing.round_s;
-        let train_loss = outcomes.iter().map(|o| o.train_loss as f64).sum::<f64>()
-            / outcomes.len().max(1) as f64;
-        let keep_fraction = outcomes
-            .iter()
-            .map(|o| o.submodel.keep_fraction())
-            .sum::<f64>()
-            / outcomes.len().max(1) as f64;
-        self.finish_round(
-            round,
-            timing.round_s,
-            train_loss,
-            keep_fraction,
-            timing.down_bytes,
-            timing.up_bytes,
-            outcomes.len(),
-            0,
-            0,
-        )
+        let count = outcomes.len().max(1) as f64;
+        let s = RoundSummary {
+            round_s: timing.round_s,
+            down_bytes: timing.down_bytes,
+            up_bytes: timing.up_bytes,
+            down_payload_bytes: outcomes.iter().map(|o| o.down_payload_bytes).sum(),
+            up_payload_bytes: outcomes.iter().map(|o| o.up_payload_bytes).sum(),
+            train_loss: outcomes.iter().map(|o| o.train_loss as f64).sum::<f64>() / count,
+            keep_fraction: outcomes
+                .iter()
+                .map(|o| o.submodel.keep_fraction())
+                .sum::<f64>()
+                / count,
+            arrived: outcomes.len(),
+            cut: 0,
+            dropped: 0,
+        };
+        self.finish_round(round, &s)
     }
 
     /// Shared record assembly + (simulation-free) periodic evaluation.
-    fn finish_round(
-        &mut self,
-        round: usize,
-        round_s: f64,
-        train_loss: f64,
-        keep_fraction: f64,
-        down_bytes: u64,
-        up_bytes: u64,
-        arrived: usize,
-        cut: usize,
-        dropped: usize,
-    ) -> Result<RoundRecord> {
+    fn finish_round(&mut self, round: usize, s: &RoundSummary) -> Result<RoundRecord> {
         let (eval_acc, eval_loss) = if round % self.cfg.eval_every == 0
             || round == self.cfg.rounds
         {
@@ -280,17 +288,19 @@ impl Experiment {
 
         let rec = RoundRecord {
             round,
-            round_s,
+            round_s: s.round_s,
             cum_s: self.cum_s,
-            train_loss,
+            train_loss: s.train_loss,
             eval_acc,
             eval_loss,
-            down_bytes,
-            up_bytes,
-            keep_fraction,
-            arrived,
-            cut,
-            dropped,
+            down_bytes: s.down_bytes,
+            up_bytes: s.up_bytes,
+            down_payload_bytes: s.down_payload_bytes,
+            up_payload_bytes: s.up_payload_bytes,
+            keep_fraction: s.keep_fraction,
+            arrived: s.arrived,
+            cut: s.cut,
+            dropped: s.dropped,
         };
         self.records.push(rec.clone());
         Ok(rec)
@@ -333,6 +343,9 @@ impl Experiment {
                 );
             }
         }
+        // End the session cleanly (`Bye` to remote clients; no-op on
+        // the loopback transport).
+        self.transport.shutdown()?;
         Ok(ExperimentReport {
             method: self.cfg.method_label(),
             variant: self.cfg.variant.clone(),

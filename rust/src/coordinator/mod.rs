@@ -5,19 +5,23 @@
 //! 1. sample the cohort S_t (m = ⌈fraction·n⌉ clients);
 //! 2. per client: strategy selects a sub-model (score-map logic for
 //!    AFD), the packed sub-model is **encoded with the downlink codec**
-//!    (8-bit Hadamard quantization) — the client starts from exactly
-//!    what the wire delivered;
+//!    (8-bit Hadamard quantization) and *framed* — the `RoundOffer` and
+//!    `ModelDown` frames travel through the experiment's
+//!    [`Transport`] (in-process loopback or real TCP; the client
+//!    starts from exactly what the wire delivered);
 //! 3. the client runs one local epoch through the [`ModelRuntime`]
 //!    (PJRT artifact or native MLP) under the sub-model's masks;
-//! 4. the uplink ships either DGC-compressed deltas or the raw packed
-//!    sub-model; the server reconstructs each client's model;
+//! 4. the uplink ships the `UpdateUp` frame (DGC-compressed delta or
+//!    the raw packed sub-model); the server reconstructs each client's
+//!    model from the frame;
 //! 5. FedAvg aggregates per coordinate (sample-count weighted),
 //!    coordinates nobody held keep their old value — on the engine
 //!    path this runs sharded across the worker pool
 //!    ([`crate::aggregation::ShardedFedAvg`], bit-identical to the
 //!    retained [`FedAvg`] reference);
 //! 6. the network simulator charges the round's wall-clock time
-//!    (max over the cohort of down + compute + up);
+//!    (max over the cohort of down + compute + up) on **measured wire
+//!    bytes** — framed lengths, control frames included;
 //! 7. losses are reported back to the strategy (score-map updates).
 //!
 //! Steps 1 and 6 are owned by the event-driven scheduler
@@ -26,6 +30,8 @@
 //! `async_buffered` relax it for straggler tolerance. The helpers in
 //! this module ([`run_client_round`], [`aggregate_round`],
 //! [`feed_strategy`]) stay policy-agnostic.
+//!
+//! [`Transport`]: crate::transport::Transport
 
 pub mod experiment;
 
@@ -42,15 +48,26 @@ use crate::model::submodel::SubModel;
 use crate::network::{NetworkSim, RoundTiming};
 use crate::runtime::{EpochData, ModelRuntime};
 use crate::tensor::kernels::Workspace;
+use crate::transport::{client_round::ClientEnv, codec_id, frame, Transport};
 
-/// Everything exchanged for one client in one round (the simulated
-/// wire + the server-side bookkeeping needed to reconstruct it).
+/// Everything exchanged for one client in one round (the framed wire +
+/// the server-side bookkeeping needed to reconstruct it).
 pub struct ClientRoundOutcome {
     pub client: usize,
     pub submodel: SubModel,
     pub train_loss: f32,
+    /// Measured downlink wire bytes: `RoundOffer` + `ModelDown` +
+    /// round-close (`Ack`/`Cut`) frame lengths.
     pub down_bytes: u64,
+    /// Measured uplink wire bytes: the `UpdateUp` frame length.
     pub up_bytes: u64,
+    /// Codec payload alone on the downlink (the encoded sub-model
+    /// stream) — `down_bytes - down_payload_bytes` is protocol
+    /// overhead (framing, bitmaps, control).
+    pub down_payload_bytes: u64,
+    /// Update body alone on the uplink (DGC message or raw packed
+    /// values).
+    pub up_payload_bytes: u64,
     pub epoch_flops: f64,
     /// Server-side reconstruction of the client's post-training model
     /// (full coordinate space) + which coordinates it speaks for.
@@ -68,13 +85,17 @@ pub struct ClientRoundOutcome {
     pub agg_plan: Option<Arc<PackPlan>>,
 }
 
-/// Run one client's round: downlink → local train → uplink.
+/// Run one client's round through the transport:
+/// frame (offer + model) → round-trip → decode the update frame →
+/// reconstruct server-side.
 ///
-/// `global` is W_t; returns the outcome to aggregate. This is the hot
-/// path of the whole system: packing runs through the precomputed
-/// `plan` (resolved from the coordinator's [`PlanCache`] at dispatch),
-/// big temporaries come from the job's [`Workspace`], and training
-/// runs in place via [`ModelRuntime::train_epoch_in`].
+/// This is the hot path of the whole system: packing runs through the
+/// precomputed `plan` (resolved from the coordinator's [`PlanCache`]
+/// at dispatch), frames and big temporaries come from the job's
+/// [`Workspace`], and — on the loopback transport — the client half
+/// executes on this thread via the same
+/// [`crate::transport::client_execute`] a remote process runs, so
+/// where the client lives never changes the bytes.
 ///
 /// [`PlanCache`]: crate::model::packing::PlanCache
 #[allow(clippy::too_many_arguments)]
@@ -88,78 +109,153 @@ pub fn run_client_round(
     lr: f32,
     downlink: &dyn DenseCodec,
     dgc_state: Option<&mut dgc::DgcState>,
+    round: usize,
     round_seed: u64,
     client: usize,
+    num_samples: usize,
+    deadline_s: Option<f64>,
+    transport: &dyn Transport,
     ws: &mut Workspace,
 ) -> anyhow::Result<ClientRoundOutcome> {
     let n = spec.num_params;
-    // ---- Downlink: pack → encode → (wire) → decode → unpack ---------
-    // `take_uncleared` everywhere below: each buffer is fully
-    // overwritten before its first read (pack_into clears, the model
-    // buffers are copy_from_slice'd, the delta is written by `sub`).
-    // Codec wire/scratch buffers come from the arena's byte/u32 sinks,
-    // so the whole pipeline allocates nothing once `ws` is warm
+    let seed = round_seed ^ (client as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    let round_u = round as u32;
+    let client_u = client as u32;
+    let expect_dgc = dgc_state.is_some();
+
+    // ---- Frame the downlink -----------------------------------------
+    // Buffers come from the arena's byte/f32 sinks; the whole framed
+    // exchange allocates nothing once `ws` is warm
     // (`rust/tests/zero_alloc.rs`).
+    let mut offer = ws.take_bytes();
+    frame::encode_round_offer(
+        &mut offer,
+        round_u,
+        client_u,
+        seed,
+        lr,
+        deadline_s.unwrap_or(f64::NAN),
+        submodel,
+    );
     let mut packed = ws.take_uncleared(plan.packed_len());
     plan.pack_into(global, &mut packed);
-    let seed = round_seed ^ (client as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
     let mut enc = Encoded {
         bytes: ws.take_bytes(),
     };
     downlink.encode_into(&packed, seed, ws, &mut enc);
-    // Kept-unit bitmaps ride along uncompressed (the client must know
-    // which units it received).
-    let bitmap_bytes = plan.bitmap_bytes();
-    let down_bytes = enc.wire_bytes() + bitmap_bytes;
-    let mut decoded = ws.take_uncleared(plan.packed_len());
-    downlink.decode_into(&enc, seed, ws, &mut decoded);
-    ws.give_bytes(enc.bytes);
+    ws.give(packed);
+    let down_payload_bytes = enc.wire_bytes();
+    let mut model_frame = ws.take_bytes();
+    frame::encode_model_down(
+        &mut model_frame,
+        round_u,
+        client_u,
+        codec_id(downlink.name()),
+        &enc.bytes,
+    );
+    // Wire accounting: both downlink frames plus the round-closing
+    // Ack/Cut control frame (same fixed size either way, so it can be
+    // charged at dispatch).
+    let down_bytes = offer.len() as u64 + model_frame.len() as u64 + frame::ROUND_CLOSE_WIRE;
 
-    // The client's starting point: the global model with the sub-model
-    // coordinates replaced by what the wire delivered. Coordinates
-    // outside the sub-model exist only server-side; masked training
-    // never touches them.
-    let mut client_start = ws.take_uncleared(n);
-    client_start.copy_from_slice(global);
-    plan.unpack_from(&decoded, &mut client_start);
-    ws.give(decoded);
+    // ---- Exchange ----------------------------------------------------
+    let mut reply = ws.take_bytes();
+    {
+        let mut env = ClientEnv {
+            spec,
+            runtime,
+            codec: downlink,
+            base_params: global,
+            data,
+            dgc: dgc_state,
+            submodel,
+            plan,
+            num_samples: num_samples as u32,
+            ws: &mut *ws,
+        };
+        transport.round_trip(client, &offer, &model_frame, &mut env, &mut reply)?;
+    }
+    ws.give_bytes(offer);
+    ws.give_bytes(model_frame);
 
-    // ---- Local training (one epoch, in place on the model buffer) ---
-    let mut model = ws.take_uncleared(n);
-    model.copy_from_slice(&client_start);
-    let mean_loss = runtime.train_epoch_in(ws, &mut model, submodel.masks_f32(), data, lr)?;
+    // ---- Decode the update frame ------------------------------------
+    let (view, used) = frame::parse_frame(&reply)
+        .map_err(|e| anyhow::anyhow!("client {client} round {round}: {e}"))?;
+    anyhow::ensure!(
+        used == reply.len(),
+        "client {client} round {round}: trailing bytes after update frame"
+    );
+    let upd = frame::parse_update_up(&view)
+        .map_err(|e| anyhow::anyhow!("client {client} round {round}: {e}"))?;
+    anyhow::ensure!(
+        upd.client == client_u && upd.round == round_u,
+        "update frame addresses client {} round {}, expected client {client} \
+         round {round}",
+        upd.client,
+        upd.round
+    );
+    // The uplink encoding must match what this round dispatched with —
+    // a config-diverged remote must fail loudly, not silently change
+    // results (the fingerprint handshake only covers model geometry).
+    let want_kind = if expect_dgc {
+        frame::UPDATE_DGC
+    } else {
+        frame::UPDATE_RAW
+    };
+    anyhow::ensure!(
+        upd.update_kind == want_kind,
+        "client {client} round {round}: update kind {} but the round was \
+         dispatched expecting {} — uplink codec config mismatch",
+        upd.update_kind,
+        want_kind
+    );
+    let up_bytes = reply.len() as u64;
+    let up_payload_bytes = upd.payload.len() as u64;
+    let train_loss = upd.loss;
 
-    // ---- Uplink ------------------------------------------------------
+    // ---- Server-side reconstruction ---------------------------------
     // `coord_mask` and `reconstructed` escape with the outcome (the
     // engine returns them to the workspace pool after aggregation).
     let mut coord_mask = ws.take_bool(n);
     plan.mark_coord_mask(&mut coord_mask);
-    let (up_bytes, reconstructed, coord_mask, agg_plan) = match dgc_state {
-        Some(st) => {
-            // Delta in full coordinate space (zero off-sub-model, so
-            // top-k naturally selects sub-model coordinates; residuals
-            // from earlier rounds may surface too — genuine DGC
-            // accumulation behaviour).
-            let mut delta = ws.take_uncleared(n);
-            crate::tensor::sub(&model, &client_start, &mut delta);
-            let mut varint_scratch = ws.take_bytes();
-            let mut msg = ws.take_bytes();
-            st.compress_into(&delta, &mut varint_scratch, &mut msg);
-            ws.give(delta);
-            ws.give_bytes(varint_scratch);
-            let up_bytes = msg.len() as u64;
-            // Server side: scatter the sparse delta straight onto the
-            // client's starting point (no dense intermediate).
+    let (reconstructed, coord_mask, agg_plan) = match upd.update_kind {
+        frame::UPDATE_DGC => {
+            // The client's starting point: the global model with the
+            // sub-model coordinates replaced by what the wire
+            // delivered. The server decodes its own downlink stream —
+            // deterministic, same seed. (On loopback this is a second
+            // decode of bytes the in-process client also decoded; the
+            // price of the client half behaving exactly like a remote
+            // receiver. The raw branch needs no server-side decode.)
+            let mut decoded = ws.take_uncleared(plan.packed_len());
+            downlink.decode_slice_into(&enc.bytes, seed, ws, &mut decoded);
+            let mut recon = ws.take_uncleared(n);
+            recon.copy_from_slice(global);
+            plan.unpack_from(&decoded, &mut recon);
+            ws.give(decoded);
+            // Scatter the sparse delta straight onto it; the client
+            // speaks for its sub-model coords plus any residual coords
+            // DGC shipped. Checked decode: a malformed remote body is a
+            // diagnosable error, never a panic or a hostile-sized
+            // allocation.
             let mut idx = ws.take_u32();
             let mut vals = ws.take_uncleared(0);
-            sparse::decode_sparse_into(&msg, &mut idx, &mut vals);
-            ws.give_bytes(msg);
-            let mut recon = ws.take_uncleared(n);
-            recon.copy_from_slice(&client_start);
-            // The client speaks for its sub-model coords plus any
-            // residual coords DGC shipped.
+            let dn = sparse::try_decode_sparse_into(upd.payload, &mut idx, &mut vals)
+                .map_err(|e| {
+                    anyhow::anyhow!("client {client} round {round}: DGC update body: {e}")
+                })?;
+            anyhow::ensure!(
+                dn == n,
+                "client {client} round {round}: DGC update covers {dn} coordinates, \
+                 model has {n}"
+            );
             let mut cm = coord_mask;
             for (&i, &v) in idx.iter().zip(vals.iter()) {
+                anyhow::ensure!(
+                    (i as usize) < n,
+                    "client {client} round {round}: DGC index {i} out of range \
+                     ({n} params)"
+                );
                 if v != 0.0 {
                     recon[i as usize] += v;
                     cm[i as usize] = true;
@@ -167,27 +263,35 @@ pub fn run_client_round(
             }
             ws.give_u32(idx);
             ws.give(vals);
-            (up_bytes, recon, cm, None)
+            (recon, cm, None)
         }
-        None => {
-            // Raw packed sub-model values (reusing the downlink's pack
-            // buffer).
-            plan.pack_into(&model, &mut packed);
-            let up_bytes = 4 * packed.len() as u64 + bitmap_bytes;
+        _ => {
+            // Raw packed sub-model values: `u32 count ‖ count × f32`.
+            anyhow::ensure!(
+                upd.payload.len() == 4 + 4 * plan.packed_len()
+                    && u32::from_le_bytes(upd.payload[0..4].try_into().unwrap()) as usize
+                        == plan.packed_len(),
+                "client {client} round {round}: raw update body is {} bytes, \
+                 plan packs {} values",
+                upd.payload.len(),
+                plan.packed_len()
+            );
+            let mut up_vals = ws.take_uncleared(plan.packed_len());
+            for (o, c) in up_vals.iter_mut().zip(upd.payload[4..].chunks_exact(4)) {
+                *o = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            }
             let mut recon = ws.take_uncleared(n);
-            recon.copy_from_slice(&client_start);
-            plan.unpack_from(&packed, &mut recon);
-            (up_bytes, recon, coord_mask, Some(Arc::clone(plan)))
+            recon.copy_from_slice(global);
+            plan.unpack_from(&up_vals, &mut recon);
+            ws.give(up_vals);
+            (recon, coord_mask, Some(Arc::clone(plan)))
         }
     };
+    ws.give_bytes(enc.bytes);
+    ws.give_bytes(reply);
 
     // Compute cost of the sub-model epoch: fwd + bwd ≈ 3× fwd FLOPs.
     let epoch_flops = 3.0 * plan.flops_per_sample() * spec.samples_per_round() as f64;
-
-    let train_loss = mean_loss;
-    ws.give(packed);
-    ws.give(client_start);
-    ws.give(model);
 
     Ok(ClientRoundOutcome {
         client,
@@ -195,6 +299,8 @@ pub fn run_client_round(
         train_loss,
         down_bytes,
         up_bytes,
+        down_payload_bytes,
+        up_payload_bytes,
         epoch_flops,
         reconstructed,
         coord_mask,

@@ -26,11 +26,16 @@
 //! Module map (coordinator side): [`config`] assembles an experiment;
 //! [`coordinator`] owns the round loop and drives it through
 //! [`sched`]'s virtual-clock engine; per-client work flows through
-//! [`dropout`] → [`compression`] → [`runtime`] → [`aggregation`]
-//! (client training and the sharded server-side average share one
-//! worker pool; whole rounds aggregate in a single batched dispatch),
-//! with [`network`] charging simulated time and [`metrics`] keeping
-//! the books. [`tensor`] holds the flat-array ops, the blocked
+//! [`dropout`] → [`compression`] → [`transport`] → [`runtime`] →
+//! [`aggregation`] (client training and the sharded server-side
+//! average share one worker pool; whole rounds aggregate in a single
+//! batched dispatch), with [`network`] charging simulated time on
+//! measured wire bytes and [`metrics`] keeping the books.
+//! [`transport`] frames the whole conversation (versioned,
+//! CRC32-checked, length-prefixed — `RoundOffer`/`ModelDown`/
+//! `UpdateUp`/`Ack`/`Cut`) and runs it over an in-process loopback or
+//! real TCP sockets (`afd serve` / `afd client`), bit-identically
+//! either way (see `rust/src/transport/README.md`). [`tensor`] holds the flat-array ops, the blocked
 //! training kernels, the runtime-dispatched SIMD layer
 //! (`tensor::simd`, cargo feature `simd`: AVX2 with a scalar
 //! reference that is bit-identical either way) and the zero-allocation
@@ -64,4 +69,5 @@ pub mod prop;
 pub mod runtime;
 pub mod sched;
 pub mod tensor;
+pub mod transport;
 pub mod util;

@@ -3,6 +3,9 @@
 //! Subcommands:
 //!   train     run one federated experiment (preset + overrides)
 //!   compare   run the paper's 4-method grid on one preset
+//!   serve     run the coordinator over a real transport (TCP or
+//!             in-process loopback) and print the final model hash
+//!   client    join a coordinator as a remote client process
 //!   inspect   print the artifacts manifest summary
 //!   selftest  artifact-free native end-to-end smoke
 //!
@@ -10,13 +13,20 @@
 //!   afd train --preset femnist_noniid --rounds 120 --seeds 3
 //!   afd train --preset native --dropout afd_single
 //!   afd compare --preset femnist_noniid --rounds 80 --target 0.70
+//!   afd serve --preset native --rounds 10 --conns 2 --addr 127.0.0.1:4777
+//!   afd client --connect 127.0.0.1:4777        # run one (or more) of these
+//!   afd serve --preset native --rounds 10 --conns 0   # same run, loopback
 //!   afd inspect
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
-use afd::config::ExperimentConfig;
-use afd::coordinator::experiment::{artifacts_dir, run_experiment};
-use afd::metrics::{render_table, summarize};
+use afd::config::{Backend, ExperimentConfig};
+use afd::coordinator::experiment::{artifacts_dir, run_experiment, Experiment};
+use afd::metrics::{render_table, summarize, ExperimentReport};
+use afd::transport::tcp::{run_client_loop, TcpServer};
+use afd::transport::{Loopback, Transport};
 use afd::util::cli::ArgSpec;
 use afd::util::json::Json;
 use afd::util::logging;
@@ -32,6 +42,8 @@ fn main() {
     let result = match cmd.as_str() {
         "train" => cmd_train(argv),
         "compare" => cmd_compare(argv),
+        "serve" => cmd_serve(argv),
+        "client" => cmd_client(argv),
         "inspect" => cmd_inspect(),
         "selftest" => cmd_selftest(),
         "help" | "--help" | "-h" => {
@@ -57,6 +69,12 @@ fn print_help() {
          Commands:\n\
            train     run one federated experiment\n\
            compare   run the paper's No-Compression/DGC/FD+DGC/AFD+DGC grid\n\
+           serve     coordinator over a real transport: accept --conns TCP\n\
+                     client processes (0 = in-process loopback) and print\n\
+                     the final model hash for bit-identity checks\n\
+           client    join an `afd serve` coordinator over TCP; the server\n\
+                     ships the config, this process rebuilds the fleet and\n\
+                     trains the rounds it is offered\n\
            inspect   summarize artifacts/manifest.json\n\
            selftest  artifact-free native end-to-end smoke\n\n\
          Run `afd <command> --help` for flags."
@@ -229,6 +247,111 @@ fn cmd_compare(argv: Vec<String>) -> Result<()> {
             &rows
         )
     );
+    Ok(())
+}
+
+fn cmd_serve(argv: Vec<String>) -> Result<()> {
+    let spec = experiment_spec()
+        .opt("addr", "127.0.0.1:4777", "listen address for TCP clients")
+        .opt(
+            "conns",
+            "0",
+            "client connections to accept (0 = in-process loopback transport)",
+        );
+    let args = spec
+        .parse("afd serve", argv)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let cfg = parse_experiment(&args)?;
+    let conns: usize = args.usize("conns").map_err(|e| anyhow::anyhow!(e))?;
+    let transport: Arc<dyn Transport> = if conns == 0 {
+        Arc::new(Loopback)
+    } else {
+        anyhow::ensure!(
+            cfg.backend == Backend::Native,
+            "TCP clients rebuild the model from the shipped config and support \
+             the native backend only; run PJRT in-process (--conns 0)"
+        );
+        let (_, model_spec) = afd::runtime::native::mlp_from_config(&cfg);
+        let server = TcpServer::bind(args.get("addr").unwrap())?;
+        println!(
+            "[afd] serving on {} — waiting for {conns} client process(es)...",
+            server.local_addr()?
+        );
+        let t = server.accept_clients(
+            conns,
+            &cfg.to_json().to_string_compact(),
+            model_spec.layout_fingerprint(),
+        )?;
+        println!("[afd] {conns} client process(es) connected");
+        Arc::new(t)
+    };
+    println!(
+        "[afd] {} over {} transport: rounds={} clients={} (seed {})",
+        cfg.method_label(),
+        transport.name(),
+        cfg.rounds,
+        cfg.num_clients,
+        cfg.seed
+    );
+    let mut exp = Experiment::build_with_transport(&cfg, Arc::clone(&transport))?;
+    let mut records = Vec::new();
+    for round in 1..=cfg.rounds {
+        let rec = exp.step(round)?;
+        if let Some(acc) = rec.eval_acc {
+            println!(
+                "  round {:>4}  t={:>9}  loss {:.4}  acc {:.3}",
+                rec.round,
+                afd::util::human_duration(rec.cum_s),
+                rec.train_loss,
+                acc
+            );
+        }
+        records.push(rec);
+    }
+    let report = ExperimentReport {
+        method: cfg.method_label(),
+        variant: cfg.variant.clone(),
+        seed: cfg.seed,
+        records,
+        converged: None,
+    };
+    println!(
+        "  final acc {:.3}  sim time {}  down {} wire / {} payload  \
+         up {} wire / {} payload  framing {:.2}%",
+        report.final_accuracy(),
+        afd::util::human_duration(report.total_sim_seconds()),
+        afd::util::human_bytes(report.total_down_bytes()),
+        afd::util::human_bytes(report.total_down_payload_bytes()),
+        afd::util::human_bytes(report.total_up_bytes()),
+        afd::util::human_bytes(report.total_up_payload_bytes()),
+        report.framing_overhead_fraction() * 100.0,
+    );
+    // The bit-identity handle: a TCP run and a loopback run of the
+    // same seed must print the same hash (CI's socket smoke greps it).
+    println!("model_hash={:016x}", afd::util::model_hash(&exp.global));
+    if let Some(path) = args.get("out") {
+        let sink = afd::util::logging::JsonlSink::create(std::path::Path::new(path))?;
+        for r in &report.records {
+            sink.write(&r.to_json());
+        }
+        println!("  wrote records to {path}");
+    }
+    transport.shutdown()?;
+    Ok(())
+}
+
+fn cmd_client(argv: Vec<String>) -> Result<()> {
+    let spec = ArgSpec::new("Join an `afd serve` coordinator as a remote client process")
+        .opt("connect", "127.0.0.1:4777", "coordinator address")
+        .opt("retry-s", "30", "seconds to keep retrying the initial connect");
+    let args = spec
+        .parse("afd client", argv)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let addr = args.get("connect").unwrap();
+    let retry = args.f64("retry-s").map_err(|e| anyhow::anyhow!(e))?;
+    println!("[afd] joining coordinator at {addr}");
+    run_client_loop(addr, retry)?;
+    println!("[afd] coordinator said Bye — exiting");
     Ok(())
 }
 

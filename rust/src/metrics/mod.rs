@@ -16,8 +16,16 @@ pub struct RoundRecord {
     /// Global-model test accuracy (if this round evaluated).
     pub eval_acc: Option<f64>,
     pub eval_loss: Option<f64>,
+    /// Measured downlink wire bytes: framed lengths as a socket would
+    /// carry them (offer + model + round-close control frames).
     pub down_bytes: u64,
+    /// Measured uplink wire bytes (the framed update).
     pub up_bytes: u64,
+    /// Codec payload alone on the downlink; `down_bytes -
+    /// down_payload_bytes` is the protocol's framing overhead.
+    pub down_payload_bytes: u64,
+    /// Update body alone on the uplink.
+    pub up_payload_bytes: u64,
     /// Mean keep fraction of the round's sub-models.
     pub keep_fraction: f64,
     /// Clients whose updates were aggregated this round.
@@ -45,6 +53,8 @@ impl RoundRecord {
         );
         j.set("down_bytes", Json::Num(self.down_bytes as f64));
         j.set("up_bytes", Json::Num(self.up_bytes as f64));
+        j.set("down_payload_bytes", Json::Num(self.down_payload_bytes as f64));
+        j.set("up_payload_bytes", Json::Num(self.up_payload_bytes as f64));
         j.set("keep_fraction", Json::Num(self.keep_fraction));
         j.set("arrived", Json::Num(self.arrived as f64));
         j.set("cut", Json::Num(self.cut as f64));
@@ -92,6 +102,25 @@ impl ExperimentReport {
 
     pub fn total_up_bytes(&self) -> u64 {
         self.records.iter().map(|r| r.up_bytes).sum()
+    }
+
+    pub fn total_down_payload_bytes(&self) -> u64 {
+        self.records.iter().map(|r| r.down_payload_bytes).sum()
+    }
+
+    pub fn total_up_payload_bytes(&self) -> u64 {
+        self.records.iter().map(|r| r.up_payload_bytes).sum()
+    }
+
+    /// Fraction of all wire bytes that is protocol overhead rather
+    /// than codec payload: `1 − payload/wire` over both directions.
+    pub fn framing_overhead_fraction(&self) -> f64 {
+        let wire = (self.total_down_bytes() + self.total_up_bytes()) as f64;
+        if wire == 0.0 {
+            return 0.0;
+        }
+        let payload = (self.total_down_payload_bytes() + self.total_up_payload_bytes()) as f64;
+        1.0 - payload / wire
     }
 
     /// Accuracy curve as (cum simulated seconds, accuracy) points.
@@ -155,6 +184,11 @@ pub struct MethodSummary {
     pub accuracy_mean: f64,
     pub accuracy_std: f64,
     pub time_mean_s: f64,
+    /// Mean fraction of wire bytes that is protocol overhead (framing
+    /// + control frames + sub-model bitmaps) rather than codec payload
+    /// — the table's Framing column, so protocol cost sits next to
+    /// codec savings.
+    pub overhead_frac: f64,
     pub reached: usize,
     pub total: usize,
 }
@@ -172,23 +206,29 @@ pub fn summarize(
             .collect(),
         None => reports.iter().map(|r| r.total_sim_seconds()).collect(),
     };
+    let overheads: Vec<f64> = reports
+        .iter()
+        .map(|r| r.framing_overhead_fraction())
+        .collect();
     MethodSummary {
         method: method.to_string(),
         accuracy_mean: stats::mean(&accs),
         accuracy_std: stats::std(&accs),
         time_mean_s: stats::mean(&times),
+        overhead_frac: stats::mean(&overheads),
         reached: times.len(),
         total: reports.len(),
     }
 }
 
 /// Render a paper-style table (method / accuracy / convergence time /
-/// speedup vs the first row).
+/// speedup vs the first row / framing overhead as a share of wire
+/// bytes — the protocol's cost next to the codec's savings).
 pub fn render_table(title: &str, rows: &[MethodSummary]) -> String {
     let mut s = format!("\n== {title} ==\n");
     s.push_str(&format!(
-        "{:<18} {:>18} {:>22} {:>10}\n",
-        "Method", "Accuracy", "Convergence Time", "Speedup"
+        "{:<18} {:>18} {:>22} {:>10} {:>9}\n",
+        "Method", "Accuracy", "Convergence Time", "Speedup", "Framing"
     ));
     let base = rows.first().map(|r| r.time_mean_s).unwrap_or(0.0);
     for r in rows {
@@ -212,9 +252,10 @@ pub fn render_table(title: &str, rows: &[MethodSummary]) -> String {
         } else {
             "-".to_string()
         };
+        let framing = format!("{:.2}%", r.overhead_frac * 100.0);
         s.push_str(&format!(
-            "{:<18} {:>18} {:>22} {:>10}\n",
-            r.method, acc, time, speedup
+            "{:<18} {:>18} {:>22} {:>10} {:>9}\n",
+            r.method, acc, time, speedup, framing
         ));
     }
     s
@@ -240,6 +281,8 @@ mod tests {
                     eval_loss: Some(1.0 - a),
                     down_bytes: 1000,
                     up_bytes: 500,
+                    down_payload_bytes: 900,
+                    up_payload_bytes: 450,
                     keep_fraction: 0.75,
                     arrived: 5,
                     cut: 0,
@@ -291,6 +334,7 @@ mod tests {
             accuracy_mean: 0.9,
             accuracy_std: 0.01,
             time_mean_s: 300.0,
+            overhead_frac: 0.003,
             reached: 2,
             total: 2,
         };
@@ -298,6 +342,27 @@ mod tests {
         assert!(table.contains("No Compression"));
         assert!(table.contains("AFD + DGC"));
         assert!(table.contains('x'), "speedup column should render: {table}");
+        assert!(table.contains("Framing"), "overhead column: {table}");
+        // fake_report: payload 1350 of 1500 wire per round ⇒ 10%.
+        assert!(table.contains("10.00%"), "overhead value: {table}");
+    }
+
+    #[test]
+    fn framing_overhead_fraction_reads_wire_vs_payload() {
+        let r = fake_report(&[0.5], 1.0);
+        assert_eq!(r.total_down_payload_bytes(), 900);
+        assert_eq!(r.total_up_payload_bytes(), 450);
+        let f = r.framing_overhead_fraction();
+        assert!((f - 0.1).abs() < 1e-12, "fraction {f}");
+        // An empty report divides nothing.
+        let empty = ExperimentReport {
+            method: "m".into(),
+            variant: "v".into(),
+            seed: 0,
+            records: Vec::new(),
+            converged: None,
+        };
+        assert_eq!(empty.framing_overhead_fraction(), 0.0);
     }
 
     #[test]

@@ -135,6 +135,48 @@ impl VariantSpec {
             .map(|p| 4 * p.size as u64)
             .sum()
     }
+
+    /// Order-sensitive FNV-1a fold of everything that determines the
+    /// packed wire layout and the training geometry: parameter
+    /// offsets/extents/flags, axis packs, mask-group sizes, batch
+    /// shape. The transport handshake compares fingerprints so a
+    /// coordinator and a remote client built from diverged configs
+    /// fail loudly before the first round instead of decoding each
+    /// other's payloads into garbage.
+    pub fn layout_fingerprint(&self) -> u64 {
+        fn axis_vals(spec: &VariantSpec, ap: &Option<AxisPack>, vals: &mut Vec<u64>) {
+            match ap {
+                None => vals.push(u64::MAX),
+                Some(a) => {
+                    vals.push(a.count as u64);
+                    vals.push(a.repeat as u64);
+                    vals.push(a.fixed as u64);
+                    vals.push(spec.group_index(&a.group).unwrap_or(usize::MAX) as u64);
+                }
+            }
+        }
+        let mut vals: Vec<u64> = vec![
+            self.num_params as u64,
+            self.batch_size as u64,
+            self.num_batches as u64,
+            self.classes as u64,
+            self.params.len() as u64,
+        ];
+        for seg in &self.params {
+            vals.push(seg.offset as u64);
+            vals.push(seg.size as u64);
+            vals.push(seg.rows_extent() as u64);
+            vals.push(seg.cols_extent() as u64);
+            vals.push((seg.transmit as u64) | ((seg.trainable as u64) << 1));
+            axis_vals(self, &seg.rows, &mut vals);
+            axis_vals(self, &seg.cols, &mut vals);
+        }
+        vals.push(self.mask_groups.len() as u64);
+        for g in &self.mask_groups {
+            vals.push(g.size as u64);
+        }
+        crate::util::fnv1a_u64s(vals)
+    }
 }
 
 /// Standalone kernel artifacts (L1 exercised directly from Rust).
@@ -450,6 +492,22 @@ pub(crate) mod tests {
         assert_eq!(spec.transmit_bytes_full(), 4 * 33);
         assert_eq!(spec.samples_per_round(), 6);
         assert_eq!(spec.total_units(), 4);
+    }
+
+    #[test]
+    fn layout_fingerprint_is_stable_and_layout_sensitive() {
+        let a = tiny_spec();
+        assert_eq!(a.layout_fingerprint(), tiny_spec().layout_fingerprint());
+        // A flipped transmit flag changes the wire layout — and the
+        // fingerprint.
+        let mut b = tiny_spec();
+        let i = b.params.iter().position(|p| p.transmit).unwrap();
+        b.params[i].transmit = false;
+        assert_ne!(a.layout_fingerprint(), b.layout_fingerprint());
+        // Different batch geometry also moves it (epoch draws differ).
+        let mut c = tiny_spec();
+        c.batch_size += 1;
+        assert_ne!(a.layout_fingerprint(), c.layout_fingerprint());
     }
 
     #[test]

@@ -16,6 +16,12 @@
 //! with `t_compute = epoch_flops / device_flops` scaled by the
 //! *sub-model's* effective FLOPs (AFD's computation saving).
 //!
+//! The byte counts charged here are **measured wire bytes** from the
+//! transport layer ([`crate::transport`]): framed lengths exactly as a
+//! socket carries them (payload + header/CRC + round-close control
+//! frames), not estimated payload sizes — so simulated link time
+//! includes the protocol's real overhead.
+//!
 //! Beyond the paper's synchronous model, [`Availability`] adds
 //! per-client availability churn (deterministic on/off windows sampled
 //! per seed) so the event-driven scheduler ([`crate::sched`]) can treat

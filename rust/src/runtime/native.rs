@@ -127,6 +127,17 @@ pub fn mlp_spec(
     }
 }
 
+/// Build the native runtime + spec exactly as `Experiment::build`
+/// does. Single construction point shared with the remote transport
+/// client (`afd client` rebuilds its environment from the shipped
+/// config), so the coordinator and a remote process can never drift on
+/// model geometry.
+pub fn mlp_from_config(cfg: &crate::config::ExperimentConfig) -> (NativeMlp, VariantSpec) {
+    let (d, h, c) = cfg.native_dims;
+    let spec = mlp_spec(&cfg.variant, d, h, c, 10, 5, 0.1);
+    (NativeMlp::new(spec.clone()), spec)
+}
+
 pub struct NativeMlp {
     spec: VariantSpec,
     d: usize,

@@ -56,6 +56,7 @@ use crate::network::{Availability, NetworkSim};
 use crate::runtime::{EpochData, RuntimeHost};
 use crate::sched::policy::SchedulerPolicy;
 use crate::tensor::kernels::WorkspacePool;
+use crate::transport::Transport;
 use crate::util::pool::LazyPool;
 use crate::util::rng::Pcg64;
 
@@ -88,6 +89,12 @@ pub struct RoundCtx<'a> {
     /// execute, so peak scratch scales with worker-pool width, not
     /// cohort size.
     pub workspaces: &'a Arc<WorkspacePool>,
+    /// The transport every client round's frames travel through —
+    /// in-process loopback by default, real TCP under `afd serve`.
+    /// Round-trips run inside the per-client jobs (parallel across the
+    /// pool); the round-closing `Ack`/`Cut` control frames go out on
+    /// the coordinator thread once inclusion is decided.
+    pub transport: &'a Arc<dyn Transport>,
 }
 
 /// One aggregation's accounting, produced by [`Engine::step`].
@@ -95,8 +102,12 @@ pub struct RoundCtx<'a> {
 pub struct RoundSummary {
     /// Simulated duration of this round / aggregation window.
     pub round_s: f64,
+    /// Measured wire bytes (framed lengths, control frames included).
     pub down_bytes: u64,
     pub up_bytes: u64,
+    /// Codec payload bytes alone (wire − payload = framing overhead).
+    pub down_payload_bytes: u64,
+    pub up_payload_bytes: u64,
     /// Mean local training loss over aggregated clients.
     pub train_loss: f64,
     /// Mean keep fraction over aggregated clients' sub-models.
@@ -119,6 +130,8 @@ struct ClientJob {
     plan: Arc<PackPlan>,
     data: EpochData,
     dgc: Option<DgcState>,
+    /// FedAvg weight, reported on the client's uplink frame.
+    num_samples: usize,
 }
 
 struct JobResult {
@@ -136,6 +149,9 @@ struct InFlight {
     arrival: f64,
     seq: u64,
     version: u64,
+    /// Round id this client was dispatched in (`Ack`/`Cut` frames echo
+    /// it back to the device).
+    round: u32,
     outcome: ClientRoundOutcome,
     /// Pre-round DGC snapshot, restored if this client is dropped
     /// before its upload lands (see [`Engine::prepare_jobs`]).
@@ -196,6 +212,9 @@ pub struct Engine {
     /// Downlink bytes charged at dispatch, reported at the next
     /// aggregation (continuous policies).
     pending_down: u64,
+    /// Codec-payload share of `pending_down` (framing-overhead
+    /// accounting).
+    pending_down_payload: u64,
     /// Reused output buffer for the batched aggregation: the new
     /// global is built here in one pool dispatch, then swapped with
     /// `ctx.global` (last round's vector becomes next round's
@@ -221,6 +240,7 @@ impl Engine {
             heap: BinaryHeap::new(),
             in_flight: Vec::new(),
             pending_down: 0,
+            pending_down_payload: 0,
             global_scratch: Vec::new(),
             epoch_order: Vec::new(),
         }
@@ -280,6 +300,7 @@ impl Engine {
                 let plan = ctx.plans.get(ctx.spec, &submodel);
                 let st = &mut ctx.fleet[c];
                 st.participations += 1;
+                let num_samples = st.num_samples;
                 // Assemble the epoch into the client's recycled buffer
                 // (returned by `execute_jobs` after the round; same
                 // RNG draw sequence as the allocating `epoch_data`).
@@ -304,6 +325,7 @@ impl Engine {
                     plan,
                     data,
                     dgc,
+                    num_samples,
                 }
             })
             .collect();
@@ -321,6 +343,7 @@ impl Engine {
         jobs: Vec<ClientJob>,
     ) -> Result<Vec<JobResult>> {
         let seed = round_seed(ctx.cfg.seed, round);
+        let deadline = self.policy.deadline_s();
         let parallel = match ctx.runtime {
             RuntimeHost::Parallel(rt) if jobs.len() > 1 => Some(rt.clone()),
             _ => None,
@@ -332,6 +355,7 @@ impl Engine {
                 let global: Arc<Vec<f32>> = Arc::new(ctx.global.clone());
                 let lr = ctx.lr;
                 let wsp = Arc::clone(ctx.workspaces);
+                let transport = Arc::clone(ctx.transport);
                 self.pool.get().map(jobs, move |mut job: ClientJob| {
                     let mut dgc = job.dgc.take();
                     // Checked out only for the job's execution window:
@@ -348,8 +372,12 @@ impl Engine {
                         lr,
                         codec.as_ref(),
                         dgc.as_mut(),
+                        round,
                         seed,
                         job.client,
+                        job.num_samples,
+                        deadline,
+                        transport.as_ref(),
                         &mut ws,
                     );
                     wsp.restore(ws);
@@ -378,8 +406,12 @@ impl Engine {
                         ctx.lr,
                         ctx.downlink.as_ref(),
                         dgc.as_mut(),
+                        round,
                         seed,
                         job.client,
+                        job.num_samples,
+                        deadline,
+                        ctx.transport.as_ref(),
                         &mut ws,
                     );
                     ctx.workspaces.restore(ws);
@@ -512,6 +544,12 @@ impl Engine {
         summary.arrived = arrived;
         summary.cut = cut;
         summary.dropped = dropped;
+        // Round-closing control frames: Ack commits the device-side
+        // codec state, Cut rolls it back (the loops above did the same
+        // to the host-side shadow).
+        for (i, r) in results.iter().enumerate() {
+            ctx.transport.finish(r.outcome.client, round as u32, included[i])?;
+        }
         Self::recycle_outcomes(ctx, results.into_iter().map(|r| r.outcome));
         self.version += 1;
         Ok(summary)
@@ -545,10 +583,13 @@ impl Engine {
                     if !self.avail.is_online(f.outcome.client, f.arrival) {
                         dropped += 1;
                         // The upload never landed: undo the round's DGC
-                        // accumulator mutation.
+                        // accumulator mutation, host-side and (Cut
+                        // frame) device-side — before any refill can
+                        // re-dispatch this client.
                         if let Some(b) = f.dgc_backup.take() {
                             ctx.fleet[f.outcome.client].put_dgc(b);
                         }
+                        ctx.transport.finish(f.outcome.client, f.round, false)?;
                         continue;
                     }
                     let full = self.policy.close_after(m, buffer.len() + 1, self.heap.len());
@@ -578,6 +619,7 @@ impl Engine {
                             // later aggregation (or losing them if the
                             // run ends idle).
                             down_bytes: std::mem::take(&mut self.pending_down),
+                            down_payload_bytes: std::mem::take(&mut self.pending_down_payload),
                             ..RoundSummary::default()
                         });
                     }
@@ -602,6 +644,12 @@ impl Engine {
         summary.arrived = buffer.len();
         summary.dropped = dropped;
         summary.down_bytes = std::mem::take(&mut self.pending_down);
+        summary.down_payload_bytes = std::mem::take(&mut self.pending_down_payload);
+        // Every buffered update was aggregated: commit device-side
+        // codec state before the next refill re-dispatches anyone.
+        for f in &buffer {
+            ctx.transport.finish(f.outcome.client, f.round, true)?;
+        }
         Self::recycle_outcomes(ctx, buffer.into_iter().map(|f| f.outcome));
         Ok(summary)
     }
@@ -629,12 +677,14 @@ impl Engine {
             let o = r.outcome;
             let dt = Self::flight_time(ctx, &o);
             self.pending_down += o.down_bytes;
+            self.pending_down_payload += o.down_payload_bytes;
             self.seq += 1;
             self.in_flight[o.client] = true;
             self.heap.push(InFlight {
                 arrival: now + dt,
                 seq: self.seq,
                 version: self.version,
+                round: round as u32,
                 outcome: o,
                 dgc_backup,
             });
@@ -691,6 +741,8 @@ impl Engine {
             });
             summary.down_bytes += o.down_bytes;
             summary.up_bytes += o.up_bytes;
+            summary.down_payload_bytes += o.down_payload_bytes;
+            summary.up_payload_bytes += o.up_payload_bytes;
             loss_sum += o.train_loss as f64;
             keep_sum += o.submodel.keep_fraction();
             count += 1;

@@ -1,0 +1,171 @@
+//! The client side of one federation round, as a pure function of
+//! frames: decode what the wire delivered, train locally, encode the
+//! update. Both transports run exactly this code — the loopback
+//! in-process path calls it directly and the remote `afd client`
+//! process calls it from its socket loop — which is what makes the two
+//! bit-identical.
+//!
+//! ## Off-sub-model independence
+//!
+//! [`ClientEnv::base_params`] is the device-resident full parameter
+//! vector the offered sub-model lands on. Its off-sub-model values
+//! never influence the update: masked training leaves dropped
+//! coordinates bit-untouched, the raw uplink packs only sub-model
+//! coordinates, and the DGC delta is exactly zero wherever
+//! `model == start`. So the loopback hands the server's global in
+//! (matching the pre-transport pipeline bit-for-bit) while a remote
+//! client keeps a zeros vector — and both produce identical update
+//! frames (`rust/tests/transport_e2e.rs::client_base_params_do_not_
+//! affect_update`).
+//!
+//! ## Scratch
+//!
+//! Every buffer is drawn from the [`Workspace`] arena (f32 scratch,
+//! byte sinks), so a warm client execution allocates nothing — the
+//! transport layer extends the PR 4 zero-alloc contract instead of
+//! breaking it.
+
+use anyhow::Result;
+
+use crate::compression::dgc::DgcState;
+use crate::compression::DenseCodec;
+use crate::model::manifest::VariantSpec;
+use crate::model::packing::PackPlan;
+use crate::model::submodel::SubModel;
+use crate::runtime::{EpochData, ModelRuntime};
+use crate::tensor::kernels::Workspace;
+use crate::transport::frame;
+
+/// Everything the client half of a round needs, supplied by whichever
+/// process hosts the device state (the engine job in-process, the
+/// `afd client` loop remotely).
+pub struct ClientEnv<'a> {
+    pub spec: &'a VariantSpec,
+    pub runtime: &'a dyn ModelRuntime,
+    pub codec: &'a dyn DenseCodec,
+    /// Device-resident full parameter vector (see module docs: its
+    /// off-sub-model values cannot influence the update).
+    pub base_params: &'a [f32],
+    pub data: &'a EpochData,
+    /// Persistent DGC accumulators (`None` ⇒ raw packed uplink).
+    pub dgc: Option<&'a mut DgcState>,
+    /// The offered sub-model + its pack plan, resolved by the host
+    /// (the coordinator's cache in-process, the client's own cache
+    /// remotely — plans are pure functions of `(spec, submodel)`).
+    pub submodel: &'a SubModel,
+    pub plan: &'a PackPlan,
+    /// Local sample count reported on the uplink (the FedAvg weight).
+    pub num_samples: u32,
+    pub ws: &'a mut Workspace,
+}
+
+/// Execute the client half of one round: decode the `ModelDown` codec
+/// payload, train one local epoch, and write the complete `UpdateUp`
+/// frame into `reply` (cleared first; capacity reused).
+///
+/// `round`/`client`/`seed`/`lr` come from the parsed `RoundOffer`;
+/// `model_payload` is the parsed `ModelDown` codec body.
+pub fn client_execute(
+    round: u32,
+    client: u32,
+    seed: u64,
+    lr: f32,
+    model_payload: &[u8],
+    env: &mut ClientEnv<'_>,
+    reply: &mut Vec<u8>,
+) -> Result<()> {
+    let n = env.spec.num_params;
+    anyhow::ensure!(
+        env.base_params.len() == n,
+        "client {client}: base params hold {} values, spec has {n}",
+        env.base_params.len()
+    );
+    // Validate the codec body's self-declared geometry before decoding
+    // so a mis-matched (but CRC-valid) payload errors instead of
+    // panicking inside the codec.
+    anyhow::ensure!(
+        model_payload.len() >= 4,
+        "client {client} round {round}: ModelDown body is {} bytes (needs ≥ 4)",
+        model_payload.len()
+    );
+    let declared = u32::from_le_bytes(model_payload[0..4].try_into().unwrap()) as usize;
+    anyhow::ensure!(
+        declared == env.plan.packed_len(),
+        "client {client} round {round}: downlink payload declares {declared} values, \
+         the offered sub-model packs {} — config/codec mismatch",
+        env.plan.packed_len()
+    );
+    let want_len = env.codec.wire_len(declared);
+    anyhow::ensure!(
+        model_payload.len() as u64 == want_len,
+        "client {client} round {round}: ModelDown body is {} bytes, codec {} \
+         needs {want_len} for {declared} values",
+        model_payload.len(),
+        env.codec.name()
+    );
+
+    let ws = &mut *env.ws;
+
+    // ---- Downlink: decode → land on the device parameter vector -----
+    let mut decoded = ws.take_uncleared(env.plan.packed_len());
+    env.codec.decode_slice_into(model_payload, seed, ws, &mut decoded);
+    let mut start = ws.take_uncleared(n);
+    start.copy_from_slice(env.base_params);
+    env.plan.unpack_from(&decoded, &mut start);
+    ws.give(decoded);
+
+    // ---- Local training (one epoch, in place) ------------------------
+    let mut model = ws.take_uncleared(n);
+    model.copy_from_slice(&start);
+    let masks = env.submodel.masks_f32();
+    let loss = env.runtime.train_epoch_in(ws, &mut model, masks, env.data, lr)?;
+
+    // ---- Uplink: encode the update frame -----------------------------
+    reply.clear();
+    match env.dgc.as_deref_mut() {
+        Some(st) => {
+            // Full-coordinate delta (zero off-sub-model; residuals
+            // from earlier rounds may surface — genuine DGC
+            // accumulation behaviour).
+            let mut delta = ws.take_uncleared(n);
+            crate::tensor::sub(&model, &start, &mut delta);
+            let mut varint = ws.take_bytes();
+            let mut msg = ws.take_bytes();
+            st.compress_into(&delta, &mut varint, &mut msg);
+            ws.give(delta);
+            ws.give_bytes(varint);
+            let base = frame::begin_update_up(
+                reply,
+                round,
+                client,
+                env.num_samples,
+                loss,
+                frame::UPDATE_DGC,
+            );
+            reply.extend_from_slice(&msg);
+            frame::end_frame(reply, base);
+            ws.give_bytes(msg);
+        }
+        None => {
+            let mut packed = ws.take_uncleared(env.plan.packed_len());
+            env.plan.pack_into(&model, &mut packed);
+            let base = frame::begin_update_up(
+                reply,
+                round,
+                client,
+                env.num_samples,
+                loss,
+                frame::UPDATE_RAW,
+            );
+            reply.extend_from_slice(&(packed.len() as u32).to_le_bytes());
+            for v in packed.iter() {
+                reply.extend_from_slice(&v.to_le_bytes());
+            }
+            frame::end_frame(reply, base);
+            ws.give(packed);
+        }
+    }
+    ws.give(start);
+    ws.give(model);
+    Ok(())
+}

@@ -1,0 +1,752 @@
+//! The wire frame format: versioned, CRC32-checked, length-prefixed.
+//!
+//! Every message of the federation conversation travels as one frame:
+//!
+//! ```text
+//! offset  size  field
+//! 0       2     magic      b"AF"
+//! 2       1     version    WIRE_VERSION (= 1)
+//! 3       1     kind       FrameKind as u8
+//! 4       4     len        u32 LE, payload length in bytes
+//! 8       len   payload    kind-specific (see the message structs)
+//! 8+len   4     crc32      u32 LE, IEEE CRC-32 over bytes [0, 8+len)
+//! ```
+//!
+//! The CRC covers the header *and* the payload, so a corrupted kind,
+//! length or payload byte is always detected (CRC-32 catches every
+//! single-bit error outright); the length prefix is capped at
+//! [`MAX_PAYLOAD`] so a corrupt prefix fails fast as
+//! [`FrameError::Oversized`] instead of stalling a reader. Decoding is
+//! fully checked — every malformed input maps to a [`FrameError`]
+//! variant naming what broke; no input panics and no parse loops
+//! unboundedly (`rust/tests/transport_frames.rs`).
+//!
+//! ## Zero-allocation contract
+//!
+//! Encoders append to a caller-provided `Vec<u8>` sink (the
+//! [`Workspace`] byte pool on the hot path), so a warm sink frames a
+//! message with zero heap allocations; [`parse_frame`] and the payload
+//! readers borrow from the input buffer and never copy
+//! (`rust/tests/zero_alloc.rs`).
+//!
+//! [`Workspace`]: crate::tensor::kernels::Workspace
+
+use crate::model::submodel::SubModel;
+
+pub const MAGIC: [u8; 2] = *b"AF";
+pub const WIRE_VERSION: u8 = 1;
+pub const HEADER_LEN: usize = 8;
+pub const CRC_LEN: usize = 4;
+/// Fixed per-frame overhead: header + trailing CRC.
+pub const FRAME_OVERHEAD: u64 = (HEADER_LEN + CRC_LEN) as u64;
+/// Upper bound on a frame payload (256 MiB): a corrupt or hostile
+/// length prefix is rejected before any reader tries to honor it.
+pub const MAX_PAYLOAD: usize = 1 << 28;
+
+/// Frame type tags (the protocol's message vocabulary).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum FrameKind {
+    /// Client process → server: opens a connection.
+    Hello = 1,
+    /// Server → client process: full experiment config (JSON) + the
+    /// server's model layout fingerprint.
+    Config = 2,
+    /// Client process → server: config applied, fingerprints agree.
+    Ready = 3,
+    /// Server → client: one round's dispatch (round id, seed,
+    /// deadline, learning rate, kept-unit bitmaps per mask group).
+    RoundOffer = 4,
+    /// Server → client: the codec-encoded global sub-model payload.
+    ModelDown = 5,
+    /// Client → server: the encoded update (DGC sparse message or raw
+    /// packed values) + local loss and sample count.
+    UpdateUp = 6,
+    /// Server → client: the update was aggregated — commit local
+    /// codec state (DGC accumulators).
+    Ack = 7,
+    /// Server → client: the update was discarded (straggler cut or
+    /// churn drop) — roll local codec state back.
+    Cut = 8,
+    /// Server → client: the experiment is over.
+    Bye = 9,
+}
+
+impl FrameKind {
+    pub fn from_u8(v: u8) -> Option<FrameKind> {
+        Some(match v {
+            1 => FrameKind::Hello,
+            2 => FrameKind::Config,
+            3 => FrameKind::Ready,
+            4 => FrameKind::RoundOffer,
+            5 => FrameKind::ModelDown,
+            6 => FrameKind::UpdateUp,
+            7 => FrameKind::Ack,
+            8 => FrameKind::Cut,
+            9 => FrameKind::Bye,
+            _ => return None,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// CRC-32 (IEEE 802.3 polynomial, reflected), table built at compile time
+// ---------------------------------------------------------------------
+
+const fn build_crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 {
+                0xedb8_8320 ^ (c >> 1)
+            } else {
+                c >> 1
+            };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+const CRC_TABLE: [u32; 256] = build_crc_table();
+
+/// IEEE CRC-32 (the zlib/Ethernet polynomial).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = !0u32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xff) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+// ---------------------------------------------------------------------
+// Errors
+// ---------------------------------------------------------------------
+
+/// Every way a frame can fail to decode, with the numbers needed to
+/// diagnose it. Malformed input is *always* one of these — never a
+/// panic, never an unbounded loop.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FrameError {
+    /// Fewer bytes than the frame claims (or than a header needs).
+    Truncated { need: usize, have: usize },
+    BadMagic { got: [u8; 2] },
+    BadVersion { got: u8, want: u8 },
+    UnknownKind { got: u8 },
+    /// Length prefix exceeds [`MAX_PAYLOAD`].
+    Oversized { len: usize, max: usize },
+    BadCrc { got: u32, want: u32 },
+    /// The frame decoded but its payload is malformed; `what` names
+    /// the field that broke.
+    BadPayload { kind: FrameKind, what: &'static str },
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Truncated { need, have } => {
+                write!(f, "truncated frame: need {need} bytes, have {have}")
+            }
+            FrameError::BadMagic { got } => {
+                write!(f, "bad frame magic {got:02x?} (want {MAGIC:02x?})")
+            }
+            FrameError::BadVersion { got, want } => {
+                write!(f, "wire version mismatch: got {got}, want {want}")
+            }
+            FrameError::UnknownKind { got } => write!(f, "unknown frame kind {got}"),
+            FrameError::Oversized { len, max } => {
+                write!(f, "oversized length prefix: {len} bytes (cap {max})")
+            }
+            FrameError::BadCrc { got, want } => {
+                write!(f, "frame CRC mismatch: got {got:#010x}, want {want:#010x}")
+            }
+            FrameError::BadPayload { kind, what } => {
+                write!(f, "malformed {kind:?} payload: {what}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+// ---------------------------------------------------------------------
+// Frame encode / decode
+// ---------------------------------------------------------------------
+
+/// Append a frame header for `kind` to `out` with a placeholder length;
+/// returns the frame's base offset for [`end_frame`].
+pub fn begin_frame(out: &mut Vec<u8>, kind: FrameKind) -> usize {
+    let base = out.len();
+    out.extend_from_slice(&MAGIC);
+    out.push(WIRE_VERSION);
+    out.push(kind as u8);
+    out.extend_from_slice(&0u32.to_le_bytes());
+    base
+}
+
+/// Patch the length prefix and append the CRC; the frame occupies
+/// `out[base..]` afterwards.
+pub fn end_frame(out: &mut Vec<u8>, base: usize) {
+    let payload_len = out.len() - base - HEADER_LEN;
+    assert!(
+        payload_len <= MAX_PAYLOAD,
+        "frame payload {payload_len} exceeds MAX_PAYLOAD ({MAX_PAYLOAD})"
+    );
+    let len = (payload_len as u32).to_le_bytes();
+    out[base + 4..base + 8].copy_from_slice(&len);
+    let crc = crc32(&out[base..]);
+    out.extend_from_slice(&crc.to_le_bytes());
+}
+
+/// A decoded frame borrowing its payload from the input buffer.
+#[derive(Clone, Copy, Debug)]
+pub struct FrameView<'a> {
+    pub kind: FrameKind,
+    pub payload: &'a [u8],
+}
+
+/// Parse one frame from the head of `buf`; returns the view and the
+/// byte count consumed. Zero-copy: the view borrows `buf`.
+pub fn parse_frame(buf: &[u8]) -> Result<(FrameView<'_>, usize), FrameError> {
+    let min = HEADER_LEN + CRC_LEN;
+    if buf.len() < min {
+        return Err(FrameError::Truncated {
+            need: min,
+            have: buf.len(),
+        });
+    }
+    if buf[0..2] != MAGIC {
+        return Err(FrameError::BadMagic {
+            got: [buf[0], buf[1]],
+        });
+    }
+    if buf[2] != WIRE_VERSION {
+        return Err(FrameError::BadVersion {
+            got: buf[2],
+            want: WIRE_VERSION,
+        });
+    }
+    let kind = FrameKind::from_u8(buf[3]).ok_or(FrameError::UnknownKind { got: buf[3] })?;
+    let len = u32::from_le_bytes(buf[4..8].try_into().unwrap()) as usize;
+    if len > MAX_PAYLOAD {
+        return Err(FrameError::Oversized {
+            len,
+            max: MAX_PAYLOAD,
+        });
+    }
+    let total = HEADER_LEN + len + CRC_LEN;
+    if buf.len() < total {
+        return Err(FrameError::Truncated {
+            need: total,
+            have: buf.len(),
+        });
+    }
+    let want = crc32(&buf[..HEADER_LEN + len]);
+    let got = u32::from_le_bytes(buf[HEADER_LEN + len..total].try_into().unwrap());
+    if got != want {
+        return Err(FrameError::BadCrc { got, want });
+    }
+    let payload = &buf[HEADER_LEN..HEADER_LEN + len];
+    Ok((FrameView { kind, payload }, total))
+}
+
+// ---------------------------------------------------------------------
+// Payload cursor
+// ---------------------------------------------------------------------
+
+/// Checked cursor over a frame payload; every read names its field so
+/// a short payload produces a diagnosable [`FrameError::BadPayload`].
+pub struct PayloadReader<'a> {
+    kind: FrameKind,
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> PayloadReader<'a> {
+    pub fn new(view: &FrameView<'a>) -> PayloadReader<'a> {
+        PayloadReader {
+            kind: view.kind,
+            buf: view.payload,
+            pos: 0,
+        }
+    }
+
+    fn take(&mut self, n: usize, what: &'static str) -> Result<&'a [u8], FrameError> {
+        if self.buf.len() - self.pos < n {
+            return Err(FrameError::BadPayload {
+                kind: self.kind,
+                what,
+            });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self, what: &'static str) -> Result<u8, FrameError> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    pub fn u16(&mut self, what: &'static str) -> Result<u16, FrameError> {
+        Ok(u16::from_le_bytes(self.take(2, what)?.try_into().unwrap()))
+    }
+
+    pub fn u32(&mut self, what: &'static str) -> Result<u32, FrameError> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self, what: &'static str) -> Result<u64, FrameError> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self, what: &'static str) -> Result<f32, FrameError> {
+        Ok(f32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self, what: &'static str) -> Result<f64, FrameError> {
+        Ok(f64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
+    pub fn bytes(&mut self, n: usize, what: &'static str) -> Result<&'a [u8], FrameError> {
+        self.take(n, what)
+    }
+
+    /// Everything not yet consumed (trailing variable-length body).
+    pub fn rest(self) -> &'a [u8] {
+        &self.buf[self.pos..]
+    }
+}
+
+// ---------------------------------------------------------------------
+// Protocol messages
+// ---------------------------------------------------------------------
+
+/// `RoundOffer` payload:
+/// `u32 round ‖ u32 client ‖ u64 seed ‖ f32 lr ‖ f64 deadline_s (NaN =
+/// none) ‖ u16 group count ‖ per group: u32 unit count ‖ ⌈count/8⌉
+/// kept-unit bitmap bytes (bit i of byte i/8 = unit i kept)`.
+#[derive(Clone, Copy, Debug)]
+pub struct RoundOfferMsg<'a> {
+    pub round: u32,
+    pub client: u32,
+    pub seed: u64,
+    pub lr: f32,
+    pub deadline_s: f64,
+    /// Raw per-group `u32 count ‖ bitmap` region (zero-copy; walk with
+    /// [`RoundOfferMsg::for_each_group`] or materialize with
+    /// [`RoundOfferMsg::submodel`]).
+    groups: &'a [u8],
+    group_count: u16,
+}
+
+pub fn encode_round_offer(
+    out: &mut Vec<u8>,
+    round: u32,
+    client: u32,
+    seed: u64,
+    lr: f32,
+    deadline_s: f64,
+    submodel: &SubModel,
+) {
+    let base = begin_frame(out, FrameKind::RoundOffer);
+    out.extend_from_slice(&round.to_le_bytes());
+    out.extend_from_slice(&client.to_le_bytes());
+    out.extend_from_slice(&seed.to_le_bytes());
+    out.extend_from_slice(&lr.to_le_bytes());
+    out.extend_from_slice(&deadline_s.to_le_bytes());
+    let groups = &submodel.keep;
+    assert!(groups.len() <= u16::MAX as usize, "too many mask groups");
+    out.extend_from_slice(&(groups.len() as u16).to_le_bytes());
+    for keep in groups {
+        assert!(keep.len() <= u32::MAX as usize);
+        out.extend_from_slice(&(keep.len() as u32).to_le_bytes());
+        let start = out.len();
+        out.resize(start + keep.len().div_ceil(8), 0);
+        for (i, &k) in keep.iter().enumerate() {
+            if k {
+                out[start + i / 8] |= 1 << (i % 8);
+            }
+        }
+    }
+    end_frame(out, base);
+}
+
+pub fn parse_round_offer<'a>(view: &FrameView<'a>) -> Result<RoundOfferMsg<'a>, FrameError> {
+    if view.kind != FrameKind::RoundOffer {
+        return Err(FrameError::BadPayload {
+            kind: view.kind,
+            what: "expected RoundOffer",
+        });
+    }
+    let mut r = PayloadReader::new(view);
+    let round = r.u32("round")?;
+    let client = r.u32("client")?;
+    let seed = r.u64("seed")?;
+    let lr = r.f32("lr")?;
+    let deadline_s = r.f64("deadline_s")?;
+    let group_count = r.u16("group count")?;
+    let groups = r.rest();
+    // Validate the group region up front so later walks can't run off
+    // the end.
+    let mut pos = 0usize;
+    for _ in 0..group_count {
+        if groups.len() - pos < 4 {
+            return Err(FrameError::BadPayload {
+                kind: FrameKind::RoundOffer,
+                what: "group count header",
+            });
+        }
+        let count = u32::from_le_bytes(groups[pos..pos + 4].try_into().unwrap()) as usize;
+        pos += 4;
+        let bm = count.div_ceil(8);
+        if groups.len() - pos < bm {
+            return Err(FrameError::BadPayload {
+                kind: FrameKind::RoundOffer,
+                what: "group bitmap",
+            });
+        }
+        pos += bm;
+    }
+    if pos != groups.len() {
+        return Err(FrameError::BadPayload {
+            kind: FrameKind::RoundOffer,
+            what: "trailing bytes after groups",
+        });
+    }
+    Ok(RoundOfferMsg {
+        round,
+        client,
+        seed,
+        lr,
+        deadline_s,
+        groups,
+        group_count,
+    })
+}
+
+impl<'a> RoundOfferMsg<'a> {
+    pub fn group_count(&self) -> usize {
+        self.group_count as usize
+    }
+
+    /// Walk the kept-unit bitmaps without materializing them:
+    /// `f(group index, unit count, bitmap bytes)`. The region was
+    /// validated at parse time.
+    pub fn for_each_group(&self, mut f: impl FnMut(usize, usize, &'a [u8])) {
+        let mut pos = 0usize;
+        for g in 0..self.group_count as usize {
+            let head = self.groups[pos..pos + 4].try_into().unwrap();
+            let count = u32::from_le_bytes(head) as usize;
+            pos += 4;
+            let bm = count.div_ceil(8);
+            f(g, count, &self.groups[pos..pos + bm]);
+            pos += bm;
+        }
+    }
+
+    /// Materialize the offered sub-model (allocates; remote clients
+    /// only — the loopback path reuses the coordinator's `SubModel`).
+    pub fn submodel(&self) -> SubModel {
+        let mut keep: Vec<Vec<bool>> = Vec::with_capacity(self.group_count as usize);
+        self.for_each_group(|_, count, bitmap| {
+            keep.push((0..count).map(|i| bitmap[i / 8] & (1 << (i % 8)) != 0).collect());
+        });
+        SubModel::from_keep(keep)
+    }
+
+    /// Does the offered bitmap equal this sub-model's kept sets?
+    /// (Loopback sanity check: the frame must describe exactly the
+    /// sub-model the coordinator dispatched.)
+    pub fn matches_submodel(&self, sm: &SubModel) -> bool {
+        if self.group_count as usize != sm.keep.len() {
+            return false;
+        }
+        let mut ok = true;
+        self.for_each_group(|g, count, bitmap| {
+            if count != sm.keep[g].len() {
+                ok = false;
+                return;
+            }
+            for (i, &k) in sm.keep[g].iter().enumerate() {
+                if (bitmap[i / 8] & (1 << (i % 8)) != 0) != k {
+                    ok = false;
+                    return;
+                }
+            }
+        });
+        ok
+    }
+}
+
+/// `ModelDown` payload: `u32 round ‖ u32 client ‖ u8 codec id ‖ codec
+/// wire bytes`.
+#[derive(Clone, Copy, Debug)]
+pub struct ModelDownMsg<'a> {
+    pub round: u32,
+    pub client: u32,
+    pub codec: u8,
+    pub payload: &'a [u8],
+}
+
+pub fn encode_model_down(out: &mut Vec<u8>, round: u32, client: u32, codec: u8, payload: &[u8]) {
+    let base = begin_frame(out, FrameKind::ModelDown);
+    out.extend_from_slice(&round.to_le_bytes());
+    out.extend_from_slice(&client.to_le_bytes());
+    out.push(codec);
+    out.extend_from_slice(payload);
+    end_frame(out, base);
+}
+
+pub fn parse_model_down<'a>(view: &FrameView<'a>) -> Result<ModelDownMsg<'a>, FrameError> {
+    if view.kind != FrameKind::ModelDown {
+        return Err(FrameError::BadPayload {
+            kind: view.kind,
+            what: "expected ModelDown",
+        });
+    }
+    let mut r = PayloadReader::new(view);
+    let round = r.u32("round")?;
+    let client = r.u32("client")?;
+    let codec = r.u8("codec id")?;
+    Ok(ModelDownMsg {
+        round,
+        client,
+        codec,
+        payload: r.rest(),
+    })
+}
+
+/// Uplink payload encodings.
+pub const UPDATE_RAW: u8 = 0;
+pub const UPDATE_DGC: u8 = 1;
+
+/// `UpdateUp` payload: `u32 round ‖ u32 client ‖ u32 sample count ‖
+/// f32 local loss ‖ u8 update kind (UPDATE_RAW | UPDATE_DGC) ‖ body`.
+/// Raw body: `u32 packed count ‖ count × f32 LE`; DGC body: one
+/// `sparse::encode_sparse` message.
+#[derive(Clone, Copy, Debug)]
+pub struct UpdateUpMsg<'a> {
+    pub round: u32,
+    pub client: u32,
+    pub samples: u32,
+    pub loss: f32,
+    pub update_kind: u8,
+    pub payload: &'a [u8],
+}
+
+/// Begin an `UpdateUp` frame through the fixed fields; the caller
+/// appends the body and calls [`end_frame`] with the returned base.
+pub fn begin_update_up(
+    out: &mut Vec<u8>,
+    round: u32,
+    client: u32,
+    samples: u32,
+    loss: f32,
+    update_kind: u8,
+) -> usize {
+    let base = begin_frame(out, FrameKind::UpdateUp);
+    out.extend_from_slice(&round.to_le_bytes());
+    out.extend_from_slice(&client.to_le_bytes());
+    out.extend_from_slice(&samples.to_le_bytes());
+    out.extend_from_slice(&loss.to_le_bytes());
+    out.push(update_kind);
+    base
+}
+
+pub fn parse_update_up<'a>(view: &FrameView<'a>) -> Result<UpdateUpMsg<'a>, FrameError> {
+    if view.kind != FrameKind::UpdateUp {
+        return Err(FrameError::BadPayload {
+            kind: view.kind,
+            what: "expected UpdateUp",
+        });
+    }
+    let mut r = PayloadReader::new(view);
+    let round = r.u32("round")?;
+    let client = r.u32("client")?;
+    let samples = r.u32("samples")?;
+    let loss = r.f32("loss")?;
+    let update_kind = r.u8("update kind")?;
+    if update_kind != UPDATE_RAW && update_kind != UPDATE_DGC {
+        return Err(FrameError::BadPayload {
+            kind: FrameKind::UpdateUp,
+            what: "unknown update kind",
+        });
+    }
+    Ok(UpdateUpMsg {
+        round,
+        client,
+        samples,
+        loss,
+        update_kind,
+        payload: r.rest(),
+    })
+}
+
+/// `Ack` / `Cut` payload: `u32 round ‖ u32 client`.
+#[derive(Clone, Copy, Debug)]
+pub struct RoundCloseMsg {
+    pub round: u32,
+    pub client: u32,
+}
+
+pub fn encode_round_close(out: &mut Vec<u8>, included: bool, round: u32, client: u32) {
+    let kind = if included { FrameKind::Ack } else { FrameKind::Cut };
+    let base = begin_frame(out, kind);
+    out.extend_from_slice(&round.to_le_bytes());
+    out.extend_from_slice(&client.to_le_bytes());
+    end_frame(out, base);
+}
+
+pub fn parse_round_close(view: &FrameView<'_>) -> Result<RoundCloseMsg, FrameError> {
+    if view.kind != FrameKind::Ack && view.kind != FrameKind::Cut {
+        return Err(FrameError::BadPayload {
+            kind: view.kind,
+            what: "expected Ack or Cut",
+        });
+    }
+    let mut r = PayloadReader::new(view);
+    Ok(RoundCloseMsg {
+        round: r.u32("round")?,
+        client: r.u32("client")?,
+    })
+}
+
+/// Wire length of an `Ack`/`Cut` frame (fixed: 8-byte payload).
+pub const ROUND_CLOSE_WIRE: u64 = FRAME_OVERHEAD + 8;
+
+/// `Config` payload: `u64 layout fingerprint ‖ UTF-8 config JSON`.
+pub fn encode_config(out: &mut Vec<u8>, fingerprint: u64, json: &str) {
+    let base = begin_frame(out, FrameKind::Config);
+    out.extend_from_slice(&fingerprint.to_le_bytes());
+    out.extend_from_slice(json.as_bytes());
+    end_frame(out, base);
+}
+
+pub fn parse_config<'a>(view: &FrameView<'a>) -> Result<(u64, &'a str), FrameError> {
+    if view.kind != FrameKind::Config {
+        return Err(FrameError::BadPayload {
+            kind: view.kind,
+            what: "expected Config",
+        });
+    }
+    let mut r = PayloadReader::new(view);
+    let fp = r.u64("fingerprint")?;
+    let json = std::str::from_utf8(r.rest()).map_err(|_| FrameError::BadPayload {
+        kind: FrameKind::Config,
+        what: "config JSON is not UTF-8",
+    })?;
+    Ok((fp, json))
+}
+
+/// `Hello` (client → server) / `Ready` (fingerprint echo) / `Bye`.
+pub fn encode_hello(out: &mut Vec<u8>) {
+    let base = begin_frame(out, FrameKind::Hello);
+    end_frame(out, base);
+}
+
+pub fn encode_ready(out: &mut Vec<u8>, fingerprint: u64) {
+    let base = begin_frame(out, FrameKind::Ready);
+    out.extend_from_slice(&fingerprint.to_le_bytes());
+    end_frame(out, base);
+}
+
+pub fn parse_ready(view: &FrameView<'_>) -> Result<u64, FrameError> {
+    if view.kind != FrameKind::Ready {
+        return Err(FrameError::BadPayload {
+            kind: view.kind,
+            what: "expected Ready",
+        });
+    }
+    PayloadReader::new(view).u64("fingerprint")
+}
+
+pub fn encode_bye(out: &mut Vec<u8>) {
+    let base = begin_frame(out, FrameKind::Bye);
+    end_frame(out, base);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_matches_reference_vectors() {
+        // The canonical IEEE CRC-32 check value.
+        assert_eq!(crc32(b"123456789"), 0xcbf4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"a"), 0xe8b7_be43);
+    }
+
+    #[test]
+    fn frame_roundtrip_and_overhead() {
+        let mut out = Vec::new();
+        let base = begin_frame(&mut out, FrameKind::Hello);
+        out.extend_from_slice(b"xyz");
+        end_frame(&mut out, base);
+        assert_eq!(out.len() as u64, FRAME_OVERHEAD + 3);
+        let (view, used) = parse_frame(&out).unwrap();
+        assert_eq!(used, out.len());
+        assert_eq!(view.kind, FrameKind::Hello);
+        assert_eq!(view.payload, b"xyz");
+    }
+
+    #[test]
+    fn frames_concatenate() {
+        let mut out = Vec::new();
+        encode_hello(&mut out);
+        encode_ready(&mut out, 7);
+        encode_bye(&mut out);
+        let (a, ua) = parse_frame(&out).unwrap();
+        assert_eq!(a.kind, FrameKind::Hello);
+        let (b, ub) = parse_frame(&out[ua..]).unwrap();
+        assert_eq!(b.kind, FrameKind::Ready);
+        assert_eq!(parse_ready(&b).unwrap(), 7);
+        let (c, uc) = parse_frame(&out[ua + ub..]).unwrap();
+        assert_eq!(c.kind, FrameKind::Bye);
+        assert_eq!(ua + ub + uc, out.len());
+    }
+
+    #[test]
+    fn version_and_kind_rejection() {
+        let mut out = Vec::new();
+        encode_hello(&mut out);
+        let mut v = out.clone();
+        v[2] = WIRE_VERSION + 1;
+        // Re-seal so only the version differs from a valid frame.
+        let crc = crc32(&v[..HEADER_LEN]).to_le_bytes();
+        let n = v.len();
+        v[n - 4..].copy_from_slice(&crc);
+        assert!(matches!(
+            parse_frame(&v),
+            Err(FrameError::BadVersion { got, .. }) if got == WIRE_VERSION + 1
+        ));
+        let mut k = out.clone();
+        k[3] = 0xee;
+        let crc = crc32(&k[..HEADER_LEN]).to_le_bytes();
+        let n = k.len();
+        k[n - 4..].copy_from_slice(&crc);
+        assert!(matches!(
+            parse_frame(&k),
+            Err(FrameError::UnknownKind { got: 0xee })
+        ));
+    }
+
+    #[test]
+    fn oversized_length_prefix_fails_fast() {
+        let mut out = Vec::new();
+        encode_hello(&mut out);
+        out[4..8].copy_from_slice(&(u32::MAX).to_le_bytes());
+        match parse_frame(&out) {
+            Err(FrameError::Oversized { len, max }) => {
+                assert_eq!(len, u32::MAX as usize);
+                assert_eq!(max, MAX_PAYLOAD);
+            }
+            other => panic!("want Oversized, got {other:?}"),
+        }
+    }
+}

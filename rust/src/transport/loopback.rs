@@ -1,0 +1,84 @@
+//! In-process transport: the engine path the experiments always ran,
+//! now speaking frames.
+//!
+//! [`Loopback`] executes the client half of a round on the calling
+//! thread, against the host-side [`ClientEnv`] the engine job carries
+//! — but it consumes the *frames*, not the job's structures: the offer
+//! and model frames are fully parsed (magic, version, CRC, payload
+//! grammar) exactly as a remote receiver would parse them, and the
+//! update comes back as a framed reply. The transport layer therefore
+//! exercises the real wire format on every round of every test, while
+//! adding zero threads, zero sockets and zero copies beyond the frames
+//! themselves.
+//!
+//! `finish`/`shutdown` are no-ops: the device state lives host-side,
+//! where the engine already performs the Ack/Cut commit-or-rollback on
+//! its own fleet structures.
+
+use anyhow::{Context, Result};
+
+use crate::transport::client_round::{client_execute, ClientEnv};
+use crate::transport::frame;
+use crate::transport::Transport;
+
+/// The in-process [`Transport`] (default for every experiment).
+pub struct Loopback;
+
+impl Transport for Loopback {
+    fn name(&self) -> &'static str {
+        "loopback"
+    }
+
+    fn round_trip(
+        &self,
+        client: usize,
+        offer: &[u8],
+        model: &[u8],
+        env: &mut ClientEnv<'_>,
+        reply: &mut Vec<u8>,
+    ) -> Result<()> {
+        // Parse both frames with full integrity checks — the loopback
+        // is a real receiver, not a shortcut around the protocol.
+        let (offer_view, used) = frame::parse_frame(offer)
+            .with_context(|| format!("loopback: offer frame for client {client}"))?;
+        anyhow::ensure!(used == offer.len(), "loopback: trailing bytes after offer frame");
+        let offer_msg = frame::parse_round_offer(&offer_view)?;
+        let (model_view, used) = frame::parse_frame(model)
+            .with_context(|| format!("loopback: model frame for client {client}"))?;
+        anyhow::ensure!(used == model.len(), "loopback: trailing bytes after model frame");
+        let model_msg = frame::parse_model_down(&model_view)?;
+
+        anyhow::ensure!(
+            offer_msg.client as usize == client && model_msg.client as usize == client,
+            "loopback: frames address client {}/{} but were routed to {client}",
+            offer_msg.client,
+            model_msg.client
+        );
+        anyhow::ensure!(
+            offer_msg.round == model_msg.round,
+            "loopback: offer round {} but model round {}",
+            offer_msg.round,
+            model_msg.round
+        );
+        // The frame must describe exactly the sub-model the host
+        // resolved the plan for (cheap bitmap compare, no allocation).
+        debug_assert!(
+            offer_msg.matches_submodel(env.submodel),
+            "loopback: offer bitmap does not match the dispatched sub-model"
+        );
+
+        client_execute(
+            offer_msg.round,
+            offer_msg.client,
+            offer_msg.seed,
+            offer_msg.lr,
+            model_msg.payload,
+            env,
+            reply,
+        )
+    }
+
+    fn finish(&self, _client: usize, _round: u32, _included: bool) -> Result<()> {
+        Ok(())
+    }
+}

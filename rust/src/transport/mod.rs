@@ -1,0 +1,126 @@
+//! Wire protocol + transport layer: the federation conversation as
+//! framed bytes, runnable in-process or over real sockets.
+//!
+//! Until this layer existed the repo's codecs produced real payloads
+//! but nothing ever *framed* them: there was no message format, no
+//! transport, and no way to split the coordinator from its clients
+//! across processes. This module closes that gap:
+//!
+//! * [`frame`] — the versioned, CRC32-checked, length-prefixed binary
+//!   frame format for the whole conversation (`RoundOffer`,
+//!   `ModelDown`, `UpdateUp`, `Ack`/`Cut`, plus the
+//!   `Hello`/`Config`/`Ready`/`Bye` session envelope);
+//! * [`client_round`] — the client side of one round as a pure
+//!   function of frames ([`client_round::client_execute`]): decode the
+//!   offered sub-model and payload, train locally, encode the update.
+//!   Shared verbatim by the in-process and remote paths, which is what
+//!   makes them bit-identical;
+//! * [`loopback`] — the in-process [`Transport`]: the engine path the
+//!   experiments always ran, now speaking frames;
+//! * [`tcp`] — the real `std::net` transport: a coordinator process
+//!   (`afd serve`) drives a swarm of client processes (`afd client`)
+//!   over TCP, one framed request/response conversation per logical
+//!   client.
+//!
+//! ## The conversation
+//!
+//! ```text
+//! session:   client ── Hello ─▶ server ── Config ─▶ client ── Ready ─▶ server
+//! per round: server ── RoundOffer ‖ ModelDown ─▶ client
+//!            client ── UpdateUp ─▶ server
+//!            server ── Ack (aggregated) | Cut (discarded) ─▶ client
+//! shutdown:  server ── Bye ─▶ client
+//! ```
+//!
+//! `Ack`/`Cut` carry the round-closing decision to the device: a DGC
+//! client clears sent coordinates from its accumulators when it
+//! uploads, which is only correct if the upload is aggregated — `Cut`
+//! tells it to roll the snapshot back (the engine performs the same
+//! rollback on its host-side state).
+//!
+//! ## Bit-identity contract
+//!
+//! The transport can never change results, only where they run: a
+//! fixed-seed experiment produces byte-identical model parameters,
+//! losses and per-round byte counts over [`loopback::Loopback`] and
+//! over [`tcp::TcpTransport`] (`rust/tests/transport_e2e.rs`, plus the
+//! CI socket smoke). This holds because both ends of the conversation
+//! run [`client_round::client_execute`] on identical frame bytes, all
+//! RNG is derived from the config seed on both sides, and a client's
+//! update is independent of its off-sub-model parameter values
+//! (masked training leaves them untouched and deltas are zero there —
+//! asserted by `client_base_params_do_not_affect_update`).
+//!
+//! ## Byte accounting
+//!
+//! `RoundRecord::{down,up}_bytes` are **measured wire bytes** — the
+//! exact framed lengths a socket carries, control frames included —
+//! and `{down,up}_payload_bytes` are the codec payloads alone, so the
+//! protocol's framing overhead is visible next to the codec savings
+//! (`metrics::render_table`'s Framing column). The network simulator
+//! charges link time on the wire numbers.
+//!
+//! See `rust/src/transport/README.md` for the frame grammar and the
+//! zero-allocation scratch contract.
+
+pub mod client_round;
+pub mod frame;
+pub mod loopback;
+pub mod tcp;
+
+pub use client_round::{client_execute, ClientEnv};
+pub use loopback::Loopback;
+
+use anyhow::Result;
+
+/// One federation transport: delivers a round's frames to a logical
+/// client and returns its update frame. Implementations decide *where*
+/// the client computation happens — in-process on the calling thread
+/// ([`Loopback`]) or in a remote process over a socket
+/// ([`tcp::TcpTransport`]).
+///
+/// `Send + Sync` because the engine fans round-trips for different
+/// clients out across its worker pool.
+pub trait Transport: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Exchange one client round: deliver the `RoundOffer` and
+    /// `ModelDown` frames, obtain the `UpdateUp` frame into `reply`
+    /// (cleared first; capacity reused).
+    ///
+    /// `env` is the host-side client context. The loopback transport
+    /// executes the client with it; a socket transport ignores it (the
+    /// remote process owns the real device state, which evolves
+    /// identically — see the module docs' bit-identity contract).
+    fn round_trip(
+        &self,
+        client: usize,
+        offer: &[u8],
+        model: &[u8],
+        env: &mut ClientEnv<'_>,
+        reply: &mut Vec<u8>,
+    ) -> Result<()>;
+
+    /// Deliver the round-closing decision for one exchanged round:
+    /// `included` sends `Ack` (commit device-side codec state), else
+    /// `Cut` (roll it back). The engine performs the same
+    /// commit/rollback on its host-side state, so loopback needs no
+    /// wire action.
+    fn finish(&self, client: usize, round: u32, included: bool) -> Result<()>;
+
+    /// End the session (`Bye` to every remote client; no-op in
+    /// process).
+    fn shutdown(&self) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Codec id byte carried in `ModelDown` so an endpoint configured with
+/// the wrong downlink codec fails loudly instead of decoding garbage.
+pub fn codec_id(name: &str) -> u8 {
+    match name {
+        "raw_f32" => 0,
+        "quant8" => 1,
+        _ => 0xff,
+    }
+}

@@ -1,0 +1,431 @@
+//! Real socket transport: the coordinator (`afd serve`) drives a swarm
+//! of client processes (`afd client`) over `std::net` TCP.
+//!
+//! ## Topology
+//!
+//! The coordinator accepts a fixed number of connections; each client
+//! process builds the *full* deterministic client fleet from the
+//! config the server ships in the handshake (datasets, per-client RNG
+//! streams, DGC accumulators are all pure functions of the seed), and
+//! logical client `c` is routed to connection `c % conns`. Any
+//! connection could therefore serve any logical client — the static
+//! routing just pins each client's state evolution to one process.
+//!
+//! ## Handshake
+//!
+//! `Hello` (client) → `Config` (server: experiment JSON + the model
+//! layout fingerprint) → `Ready` (client echoes the fingerprint it
+//! derived from the config). A client whose rebuilt spec fingerprints
+//! differently — diverged binaries, wrong config — is rejected before
+//! the first round with both fingerprints in the error.
+//!
+//! ## Rounds
+//!
+//! [`TcpTransport::round_trip`] locks the client's connection, writes
+//! the `RoundOffer` + `ModelDown` frames, and blocks for the `UpdateUp`
+//! reply; the per-connection mutex serializes logical clients that
+//! share a connection (the remote loop is strictly request/response),
+//! while different connections proceed in parallel under the engine's
+//! worker pool. `finish` delivers `Ack`/`Cut` so the remote commits or
+//! rolls back its DGC snapshot exactly when the engine does the same
+//! to its host-side shadow; `shutdown` sends `Bye`.
+//!
+//! The host-side [`ClientEnv`] is ignored here — the remote process
+//! owns the real device state. Both evolve identically (same frames,
+//! same seeds, same code: [`client_execute`]), which is what the
+//! TCP-vs-loopback bit-identity test and the CI socket smoke pin.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::config::{Backend, ExperimentConfig};
+use crate::data;
+use crate::model::packing::PlanCache;
+use crate::model::submodel::SubModel;
+use crate::runtime::native::mlp_from_config;
+use crate::transport::client_round::{client_execute, ClientEnv};
+use crate::transport::frame::{self, FrameKind};
+use crate::transport::{codec_id, Transport};
+
+/// Socket read timeout: generous enough for a slow remote epoch, small
+/// enough that a dead peer surfaces as an error instead of a hang.
+const IO_TIMEOUT: Duration = Duration::from_secs(600);
+
+/// Read one whole frame (header + payload + CRC) from a stream into
+/// `buf` (cleared; capacity reused). Validates the magic and the
+/// length cap *before* trusting the prefix, so a corrupt peer cannot
+/// make the reader allocate unboundedly or stall on a bogus length;
+/// CRC/version are verified by the caller's `parse_frame`.
+fn read_frame_into(stream: &mut TcpStream, buf: &mut Vec<u8>) -> Result<()> {
+    buf.clear();
+    buf.resize(frame::HEADER_LEN, 0);
+    stream.read_exact(&mut buf[..]).context("reading frame header")?;
+    anyhow::ensure!(
+        buf[0..2] == frame::MAGIC,
+        "bad frame magic from peer: {:02x?}",
+        &buf[0..2]
+    );
+    let len = u32::from_le_bytes(buf[4..8].try_into().unwrap()) as usize;
+    anyhow::ensure!(
+        len <= frame::MAX_PAYLOAD,
+        "oversized frame from peer: {len}-byte payload (cap {})",
+        frame::MAX_PAYLOAD
+    );
+    let total = frame::HEADER_LEN + len + frame::CRC_LEN;
+    buf.resize(total, 0);
+    let body = &mut buf[frame::HEADER_LEN..];
+    stream.read_exact(body).context("reading frame body")?;
+    Ok(())
+}
+
+/// A bound listener that has not accepted its clients yet (split from
+/// [`TcpTransport`] so callers can learn the ephemeral port — tests
+/// bind `127.0.0.1:0` — before any client connects).
+pub struct TcpServer {
+    listener: TcpListener,
+}
+
+impl TcpServer {
+    pub fn bind(addr: &str) -> Result<TcpServer> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        Ok(TcpServer { listener })
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Accept `conns` client connections and run the handshake with
+    /// each: read `Hello`, send `Config` (the experiment JSON +
+    /// `fingerprint`), require a `Ready` echoing the same fingerprint.
+    pub fn accept_clients(
+        self,
+        conns: usize,
+        cfg_json: &str,
+        fingerprint: u64,
+    ) -> Result<TcpTransport> {
+        anyhow::ensure!(conns > 0, "a TCP transport needs at least one connection");
+        let mut accepted = Vec::with_capacity(conns);
+        let mut buf = Vec::new();
+        let mut out = Vec::new();
+        for i in 0..conns {
+            let (mut stream, peer) = self
+                .listener
+                .accept()
+                .with_context(|| format!("accepting client connection {i}"))?;
+            stream.set_nodelay(true)?;
+            stream.set_read_timeout(Some(IO_TIMEOUT))?;
+            read_frame_into(&mut stream, &mut buf)
+                .with_context(|| format!("handshake with {peer}"))?;
+            let (view, _) = frame::parse_frame(&buf)
+                .with_context(|| format!("handshake frame from {peer}"))?;
+            anyhow::ensure!(
+                view.kind == FrameKind::Hello,
+                "peer {peer} opened with {:?}, expected Hello",
+                view.kind
+            );
+            out.clear();
+            frame::encode_config(&mut out, fingerprint, cfg_json);
+            stream.write_all(&out).context("sending Config")?;
+            read_frame_into(&mut stream, &mut buf)
+                .with_context(|| format!("waiting for Ready from {peer}"))?;
+            let (view, _) = frame::parse_frame(&buf)?;
+            let theirs = frame::parse_ready(&view)?;
+            anyhow::ensure!(
+                theirs == fingerprint,
+                "peer {peer} derived layout fingerprint {theirs:#018x}, server has \
+                 {fingerprint:#018x} — mismatched configs or binaries"
+            );
+            accepted.push(Mutex::new(stream));
+        }
+        Ok(TcpTransport { conns: accepted })
+    }
+}
+
+/// The server side of the socket transport: one framed request/response
+/// channel per accepted connection, logical clients routed statically.
+pub struct TcpTransport {
+    conns: Vec<Mutex<TcpStream>>,
+}
+
+impl TcpTransport {
+    fn conn(&self, client: usize) -> &Mutex<TcpStream> {
+        &self.conns[client % self.conns.len()]
+    }
+}
+
+impl Transport for TcpTransport {
+    fn name(&self) -> &'static str {
+        "tcp"
+    }
+
+    fn round_trip(
+        &self,
+        client: usize,
+        offer: &[u8],
+        model: &[u8],
+        _env: &mut ClientEnv<'_>,
+        reply: &mut Vec<u8>,
+    ) -> Result<()> {
+        let mut stream = self.conn(client).lock().unwrap();
+        stream
+            .write_all(offer)
+            .with_context(|| format!("sending RoundOffer to client {client}"))?;
+        stream
+            .write_all(model)
+            .with_context(|| format!("sending ModelDown to client {client}"))?;
+        // No parse here: `read_frame_into` validated magic and length,
+        // and the caller (`run_client_round`) runs the one full parse —
+        // CRC, kind, payload grammar — over the reply. Parsing twice
+        // would double the largest CRC pass of the conversation.
+        read_frame_into(&mut stream, reply)
+            .with_context(|| format!("waiting for UpdateUp from client {client}"))?;
+        Ok(())
+    }
+
+    fn finish(&self, client: usize, round: u32, included: bool) -> Result<()> {
+        let mut out = Vec::with_capacity(frame::ROUND_CLOSE_WIRE as usize);
+        frame::encode_round_close(&mut out, included, round, client as u32);
+        let mut stream = self.conn(client).lock().unwrap();
+        stream
+            .write_all(&out)
+            .with_context(|| format!("sending round close to client {client}"))
+    }
+
+    fn shutdown(&self) -> Result<()> {
+        let mut out = Vec::new();
+        frame::encode_bye(&mut out);
+        for conn in &self.conns {
+            // Best effort: a client that already vanished must not turn
+            // a finished experiment into an error.
+            let _ = conn.lock().unwrap().write_all(&out);
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Remote client process
+// ---------------------------------------------------------------------
+
+struct PendingOffer {
+    round: u32,
+    client: u32,
+    seed: u64,
+    lr: f32,
+    submodel: SubModel,
+}
+
+/// The `afd client` main loop: connect (retrying while the server
+/// comes up), handshake, then serve rounds until `Bye`.
+///
+/// The process rebuilds the whole deterministic environment from the
+/// config the server ships — native runtime, dataset shards, fleet
+/// RNG/DGC state — and executes each offered round through the same
+/// [`client_execute`] the loopback path runs. DGC state is snapshotted
+/// per round and committed on `Ack` / rolled back on `Cut`, mirroring
+/// the engine's host-side bookkeeping exactly.
+pub fn run_client_loop(addr: &str, connect_retry_s: f64) -> Result<()> {
+    // ---- connect (the server may still be binding) -------------------
+    let deadline = Instant::now() + Duration::from_secs_f64(connect_retry_s.max(0.0));
+    let mut stream = loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => break s,
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(e).with_context(|| format!("connecting to {addr}"));
+                }
+                std::thread::sleep(Duration::from_millis(200));
+            }
+        }
+    };
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(IO_TIMEOUT))?;
+
+    // ---- handshake ---------------------------------------------------
+    let mut buf = Vec::new();
+    let mut out = Vec::new();
+    frame::encode_hello(&mut out);
+    stream.write_all(&out).context("sending Hello")?;
+    read_frame_into(&mut stream, &mut buf).context("waiting for Config")?;
+    let (view, _) = frame::parse_frame(&buf).context("Config frame")?;
+    let (server_fp, json_text) = frame::parse_config(&view)?;
+    let json = crate::util::json::parse(json_text)
+        .map_err(|e| anyhow::anyhow!("config JSON from server: {e}"))?;
+    let mut cfg = ExperimentConfig::default();
+    cfg.apply_json(&json)?;
+    anyhow::ensure!(
+        cfg.backend == Backend::Native,
+        "remote clients support the native backend only (PJRT artifacts \
+         execute in the coordinator process)"
+    );
+
+    // ---- deterministic environment (pure function of the config) ----
+    let (mlp, spec) = mlp_from_config(&cfg);
+    let fp = spec.layout_fingerprint();
+    anyhow::ensure!(
+        fp == server_fp,
+        "layout fingerprint mismatch: server {server_fp:#018x}, local {fp:#018x} \
+         — diverged configs or binaries"
+    );
+    anyhow::ensure!(
+        spec.params.iter().all(|p| p.transmit),
+        "remote execution needs every parameter transmissible (non-transmit \
+         parameters would be untrained zeros on the device)"
+    );
+    let mut data_cfg = cfg.data.clone();
+    data_cfg.num_clients = cfg.num_clients;
+    data_cfg.seed = cfg.seed;
+    let dataset = data::generate(&spec, &data_cfg);
+    anyhow::ensure!(
+        dataset.num_clients() == cfg.num_clients,
+        "dataset generator returned wrong client count"
+    );
+    let sizes: Vec<usize> = dataset.clients.iter().map(|c| c.len()).collect();
+    let mut fleet = crate::clients::build_fleet(&sizes, &cfg.dgc, cfg.seed);
+    let codec = crate::compression::make_dense_codec(&cfg.downlink)?;
+    let my_codec_id = codec_id(codec.name());
+    let plans = PlanCache::default();
+    let mut ws = crate::tensor::kernels::Workspace::new();
+    let base = vec![0.0f32; spec.num_params];
+    let mut order: Vec<u32> = Vec::new();
+    let mut reply = Vec::new();
+    let mut pending_offer: Option<PendingOffer> = None;
+    let mut pending_dgc: Vec<Option<crate::compression::dgc::DgcState>> =
+        (0..fleet.len()).map(|_| None).collect();
+
+    out.clear();
+    frame::encode_ready(&mut out, fp);
+    stream.write_all(&out).context("sending Ready")?;
+
+    // ---- round service loop ------------------------------------------
+    loop {
+        read_frame_into(&mut stream, &mut buf).context("waiting for next frame")?;
+        let (view, used) = frame::parse_frame(&buf).context("frame from server")?;
+        anyhow::ensure!(used == buf.len(), "trailing bytes after frame");
+        match view.kind {
+            FrameKind::RoundOffer => {
+                anyhow::ensure!(
+                    pending_offer.is_none(),
+                    "interleaved RoundOffer before the previous ModelDown"
+                );
+                let o = frame::parse_round_offer(&view)?;
+                anyhow::ensure!(
+                    o.group_count() == spec.mask_groups.len(),
+                    "offer carries {} mask groups, spec has {}",
+                    o.group_count(),
+                    spec.mask_groups.len()
+                );
+                let submodel = o.submodel();
+                for (g, keep) in submodel.keep.iter().enumerate() {
+                    anyhow::ensure!(
+                        keep.len() == spec.mask_groups[g].size,
+                        "offer group {g} has {} units, spec has {}",
+                        keep.len(),
+                        spec.mask_groups[g].size
+                    );
+                }
+                pending_offer = Some(PendingOffer {
+                    round: o.round,
+                    client: o.client,
+                    seed: o.seed,
+                    lr: o.lr,
+                    submodel,
+                });
+            }
+            FrameKind::ModelDown => {
+                let offer = pending_offer
+                    .take()
+                    .context("ModelDown without a preceding RoundOffer")?;
+                let md = frame::parse_model_down(&view)?;
+                anyhow::ensure!(
+                    md.client == offer.client && md.round == offer.round,
+                    "ModelDown for client {} round {} after offer for client {} \
+                     round {}",
+                    md.client,
+                    md.round,
+                    offer.client,
+                    offer.round
+                );
+                anyhow::ensure!(
+                    md.codec == my_codec_id,
+                    "server encodes with codec id {}, this client is configured \
+                     for {} ({})",
+                    md.codec,
+                    my_codec_id,
+                    codec.name()
+                );
+                let c = md.client as usize;
+                anyhow::ensure!(c < fleet.len(), "client id {c} out of range");
+                // Mirror the coordinator's dispatch-time bookkeeping:
+                // same epoch RNG draw, same DGC snapshot discipline.
+                let plan = plans.get(&spec, &offer.submodel);
+                let num_samples = fleet[c].num_samples as u32;
+                fleet[c].participations += 1;
+                let mut epoch = fleet[c].take_epoch_buf();
+                dataset.clients[c].epoch_data_into(
+                    &spec,
+                    &mut fleet[c].rng,
+                    &mut order,
+                    &mut epoch,
+                );
+                if cfg.uplink_dgc {
+                    pending_dgc[c] = Some(fleet[c].dgc.clone());
+                }
+                let mut env = ClientEnv {
+                    spec: &spec,
+                    runtime: &mlp,
+                    codec: codec.as_ref(),
+                    base_params: &base,
+                    data: &epoch,
+                    dgc: if cfg.uplink_dgc {
+                        Some(&mut fleet[c].dgc)
+                    } else {
+                        None
+                    },
+                    submodel: &offer.submodel,
+                    plan: &plan,
+                    num_samples,
+                    ws: &mut ws,
+                };
+                client_execute(
+                    offer.round,
+                    md.client,
+                    offer.seed,
+                    offer.lr,
+                    md.payload,
+                    &mut env,
+                    &mut reply,
+                )?;
+                stream.write_all(&reply).context("sending UpdateUp")?;
+                fleet[c].put_epoch_buf(epoch);
+            }
+            FrameKind::Ack | FrameKind::Cut => {
+                let close = frame::parse_round_close(&view)?;
+                let c = close.client as usize;
+                anyhow::ensure!(c < fleet.len(), "round close for unknown client {c}");
+                match view.kind {
+                    // Aggregated: the post-upload accumulators are now
+                    // the truth — drop the snapshot.
+                    FrameKind::Ack => {
+                        pending_dgc[c] = None;
+                    }
+                    // Discarded: the upload never landed — restore the
+                    // pre-round accumulators (DGC keeps its
+                    // no-information-loss invariant).
+                    _ => {
+                        if let Some(snap) = pending_dgc[c].take() {
+                            fleet[c].dgc = snap;
+                        }
+                    }
+                }
+            }
+            FrameKind::Bye => return Ok(()),
+            other => anyhow::bail!("unexpected {other:?} frame mid-session"),
+        }
+    }
+}

@@ -27,6 +27,28 @@ pub fn human_bytes(n: u64) -> String {
     }
 }
 
+/// FNV-1a 64 over the little-endian bytes of a `u64` stream — the one
+/// fold shared by [`model_hash`] and the manifest layout fingerprint,
+/// so the two can never quietly diverge in hashing behavior.
+pub fn fnv1a_u64s(vals: impl IntoIterator<Item = u64>) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for v in vals {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// Hash of a parameter vector's exact bit patterns — the cheap
+/// fingerprint `afd serve` prints so a TCP run and a loopback run can
+/// be compared for bit-identity from their logs (and the CI socket
+/// smoke does exactly that).
+pub fn model_hash(params: &[f32]) -> u64 {
+    fnv1a_u64s(params.iter().map(|v| v.to_bits() as u64))
+}
+
 /// Format seconds as h/m/s for convergence-time tables.
 pub fn human_duration(secs: f64) -> String {
     if secs < 60.0 {
@@ -47,6 +69,18 @@ mod tests {
         assert_eq!(human_bytes(512), "512 B");
         assert_eq!(human_bytes(2048), "2.00 KiB");
         assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn model_hash_is_bit_sensitive() {
+        let a = vec![0.5f32, -1.25, 3.0];
+        let mut b = a.clone();
+        assert_eq!(model_hash(&a), model_hash(&b));
+        b[1] = f32::from_bits(b[1].to_bits() ^ 1); // one ULP
+        assert_ne!(model_hash(&a), model_hash(&b));
+        // Signed zero differs from zero at the bit level — the hash
+        // must see it (bit-identity, not numeric equality).
+        assert_ne!(model_hash(&[0.0]), model_hash(&[-0.0]));
     }
 
     #[test]

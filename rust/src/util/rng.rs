@@ -162,9 +162,22 @@ impl Pcg64 {
     /// Fill `out` with Rademacher signs — the same draw sequence as
     /// [`Pcg64::rademacher`], into a caller-provided buffer (the
     /// allocation-free codec paths stream signs block by block).
+    ///
+    /// The draw is **batched**: one `next_u64` yields up to 64 signs
+    /// (bit `i` of the word is sign `i` of the chunk, `1` ⇒ `-1.0`),
+    /// so a quant8 block costs `B/64` PRNG steps instead of `B`. A
+    /// partial tail chunk still consumes one whole word and discards
+    /// the unused bits — therefore two fills chain identically to one
+    /// longer fill exactly when every fill length is a multiple of 64
+    /// (the quant8 block sizes are), which is the invariant that lets
+    /// encode and decode stream the diagonal independently.
     pub fn rademacher_fill(&mut self, out: &mut [f32]) {
-        for v in out.iter_mut() {
-            *v = if self.next_u64() & 1 == 0 { 1.0 } else { -1.0 };
+        for chunk in out.chunks_mut(64) {
+            let mut word = self.next_u64();
+            for v in chunk.iter_mut() {
+                *v = if word & 1 == 0 { 1.0 } else { -1.0 };
+                word >>= 1;
+            }
         }
     }
 }
@@ -285,5 +298,42 @@ mod tests {
         let pos = signs.iter().filter(|&&s| s > 0.0).count();
         assert!((pos as i64 - 5000).abs() < 300, "pos={pos}");
         assert!(signs.iter().all(|&s| s == 1.0 || s == -1.0));
+    }
+
+    #[test]
+    fn rademacher_batches_64_signs_per_word() {
+        // The batched draw is pinned to the PRNG word stream: sign i of
+        // a 64-chunk is bit i of one `next_u64` (1 ⇒ -1.0), and a
+        // partial tail chunk consumes exactly one word.
+        let mut words = Pcg64::new(11);
+        let (w0, w1) = (words.next_u64(), words.next_u64());
+        let mut rng = Pcg64::new(11);
+        let signs = rng.rademacher(64 + 7);
+        for i in 0..64 {
+            let want = if (w0 >> i) & 1 == 0 { 1.0 } else { -1.0 };
+            assert_eq!(signs[i], want, "bit {i}");
+        }
+        for i in 0..7 {
+            let want = if (w1 >> i) & 1 == 0 { 1.0 } else { -1.0 };
+            assert_eq!(signs[64 + i], want, "tail bit {i}");
+        }
+        // The tail discarded the rest of w1: the next draw starts on a
+        // fresh word.
+        let mut cont = Pcg64::new(11);
+        let _ = cont.rademacher(64 + 7);
+        assert_eq!(cont.next_u64(), words.next_u64());
+    }
+
+    #[test]
+    fn rademacher_fills_chain_at_multiples_of_64() {
+        // Per-block streaming == one whole-vector draw when every block
+        // length is a multiple of 64 (the quant8 invariant).
+        let whole = Pcg64::new(12).rademacher(4 * 128);
+        let mut rng = Pcg64::new(12);
+        let mut streamed = vec![0.0f32; 4 * 128];
+        for blk in streamed.chunks_mut(128) {
+            rng.rademacher_fill(blk);
+        }
+        assert_eq!(whole, streamed);
     }
 }

@@ -38,6 +38,12 @@ fn assert_bit_identical(a: &RoundRecord, b: &RoundRecord) {
     assert_eq!(a.down_bytes, b.down_bytes, "round {}", a.round);
     assert_eq!(a.up_bytes, b.up_bytes, "round {}", a.round);
     assert_eq!(
+        a.down_payload_bytes, b.down_payload_bytes,
+        "round {}",
+        a.round
+    );
+    assert_eq!(a.up_payload_bytes, b.up_payload_bytes, "round {}", a.round);
+    assert_eq!(
         a.keep_fraction.to_bits(),
         b.keep_fraction.to_bits(),
         "round {}",

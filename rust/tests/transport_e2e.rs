@@ -1,0 +1,221 @@
+//! Transport end-to-end contracts:
+//!
+//! 1. **Base-params independence** — a client's update frame is a pure
+//!    function of the wire (and its codec state), not of its
+//!    off-sub-model parameter values. This is the invariant that lets
+//!    a remote process (zeros base) reproduce the loopback path
+//!    (global base) bit-for-bit.
+//! 2. **TCP ≡ loopback** — a fixed-seed experiment over real sockets
+//!    (in-process client threads running the actual `afd client`
+//!    loop) produces byte-identical records and an identical final
+//!    model hash to the loopback transport, for every scheduler
+//!    policy. The transport never changes results, only where they
+//!    run.
+
+use std::sync::Arc;
+
+use afd::compression::dgc::{DgcConfig, DgcState};
+use afd::compression::quant::HadamardQuant8;
+use afd::compression::DenseCodec;
+use afd::config::{ExperimentConfig, Preset};
+use afd::coordinator::experiment::Experiment;
+use afd::metrics::RoundRecord;
+use afd::model::packing::PackPlan;
+use afd::model::submodel::SubModel;
+use afd::runtime::native::{mlp_from_config, mlp_spec, NativeMlp};
+use afd::runtime::{BatchInput, EpochData};
+use afd::tensor::kernels::Workspace;
+use afd::transport::tcp::{run_client_loop, TcpServer};
+use afd::transport::{client_execute, ClientEnv, Transport};
+use afd::util::model_hash;
+use afd::util::rng::Pcg64;
+
+fn assert_records_equal(a: &RoundRecord, b: &RoundRecord, what: &str) {
+    assert_eq!(a.round, b.round, "{what}");
+    assert_eq!(a.round_s.to_bits(), b.round_s.to_bits(), "{what} round {}", a.round);
+    assert_eq!(a.cum_s.to_bits(), b.cum_s.to_bits(), "{what} round {}", a.round);
+    assert_eq!(
+        a.train_loss.to_bits(),
+        b.train_loss.to_bits(),
+        "{what} round {}",
+        a.round
+    );
+    assert_eq!(
+        a.eval_acc.map(f64::to_bits),
+        b.eval_acc.map(f64::to_bits),
+        "{what} round {}",
+        a.round
+    );
+    assert_eq!(a.down_bytes, b.down_bytes, "{what} round {}", a.round);
+    assert_eq!(a.up_bytes, b.up_bytes, "{what} round {}", a.round);
+    assert_eq!(
+        a.down_payload_bytes, b.down_payload_bytes,
+        "{what} round {}",
+        a.round
+    );
+    assert_eq!(
+        a.up_payload_bytes, b.up_payload_bytes,
+        "{what} round {}",
+        a.round
+    );
+    assert_eq!(a.arrived, b.arrived, "{what} round {}", a.round);
+    assert_eq!(a.cut, b.cut, "{what} round {}", a.round);
+    assert_eq!(a.dropped, b.dropped, "{what} round {}", a.round);
+}
+
+#[test]
+fn client_base_params_do_not_affect_update() {
+    let spec = mlp_spec("t", 12, 8, 4, 4, 2, 0.1);
+    let mlp = NativeMlp::new(spec.clone());
+    let global = mlp.init_params(3);
+    let zeros = vec![0.0f32; spec.num_params];
+    let sm = SubModel::from_kept_indices(&spec, &[vec![0, 2, 3, 5, 6]]);
+    let plan = PackPlan::build(&spec, &sm);
+    let codec = HadamardQuant8::default();
+
+    // One fixed epoch (both executions must see identical data).
+    let mut rng = Pcg64::new(5);
+    let ns = spec.samples_per_round();
+    let xs: Vec<f32> = (0..ns * 12).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let ys: Vec<i32> = (0..ns).map(|_| rng.below(4) as i32).collect();
+    let data = EpochData {
+        xs: BatchInput::F32(xs),
+        ys,
+    };
+
+    // The downlink payload the server would ship.
+    let mut packed = Vec::new();
+    plan.pack_into(&global, &mut packed);
+    let enc = codec.encode(&packed, 42);
+
+    let mut ws = Workspace::new();
+    for dgc_on in [true, false] {
+        let mut d1 = DgcState::new(DgcConfig::default());
+        let mut d2 = DgcState::new(DgcConfig::default());
+        let mut r1 = Vec::new();
+        let mut r2 = Vec::new();
+        {
+            let mut env = ClientEnv {
+                spec: &spec,
+                runtime: &mlp,
+                codec: &codec,
+                base_params: &global,
+                data: &data,
+                dgc: dgc_on.then_some(&mut d1),
+                submodel: &sm,
+                plan: &plan,
+                num_samples: ns as u32,
+                ws: &mut ws,
+            };
+            client_execute(1, 0, 42, 0.1, &enc.bytes, &mut env, &mut r1).unwrap();
+        }
+        {
+            let mut env = ClientEnv {
+                spec: &spec,
+                runtime: &mlp,
+                codec: &codec,
+                base_params: &zeros,
+                data: &data,
+                dgc: dgc_on.then_some(&mut d2),
+                submodel: &sm,
+                plan: &plan,
+                num_samples: ns as u32,
+                ws: &mut ws,
+            };
+            client_execute(1, 0, 42, 0.1, &enc.bytes, &mut env, &mut r2).unwrap();
+        }
+        assert_eq!(r1, r2, "dgc={dgc_on}: update frames must be byte-identical");
+        assert!(!r1.is_empty());
+    }
+}
+
+fn run_loopback(cfg: &ExperimentConfig) -> (Vec<RoundRecord>, u64) {
+    let mut exp = Experiment::build(cfg).unwrap();
+    let mut records = Vec::new();
+    for round in 1..=cfg.rounds {
+        records.push(exp.step(round).unwrap());
+    }
+    (records, model_hash(&exp.global))
+}
+
+fn run_tcp(cfg: &ExperimentConfig, conns: usize) -> (Vec<RoundRecord>, u64) {
+    let (_, spec) = mlp_from_config(cfg);
+    let server = TcpServer::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let handles: Vec<_> = (0..conns)
+        .map(|_| {
+            let a = addr.clone();
+            std::thread::spawn(move || run_client_loop(&a, 10.0))
+        })
+        .collect();
+    let transport = server
+        .accept_clients(
+            conns,
+            &cfg.to_json().to_string_compact(),
+            spec.layout_fingerprint(),
+        )
+        .unwrap();
+    let transport: Arc<dyn Transport> = Arc::new(transport);
+    let mut exp = Experiment::build_with_transport(cfg, Arc::clone(&transport)).unwrap();
+    let mut records = Vec::new();
+    for round in 1..=cfg.rounds {
+        records.push(exp.step(round).unwrap());
+    }
+    let hash = model_hash(&exp.global);
+    transport.shutdown().unwrap();
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+    (records, hash)
+}
+
+/// The acceptance bar: real sockets reproduce the loopback run
+/// byte-for-byte — records, byte counts, final model hash — under the
+/// synchronous policy (all-Ack), the overselecting policy (real Cut
+/// frames: remote DGC rollback must mirror the host shadow), and
+/// buffered asynchrony (Ack ordering across aggregation windows).
+#[test]
+fn tcp_run_is_bit_identical_to_loopback_for_every_policy() {
+    for policy in ["sync", "overselect", "async_buffered"] {
+        let mut cfg = ExperimentConfig::preset(Preset::NativeSmoke);
+        cfg.rounds = 4;
+        cfg.eval_every = 2;
+        cfg.sched.policy = policy.into();
+        let (loop_records, loop_hash) = run_loopback(&cfg);
+        let (tcp_records, tcp_hash) = run_tcp(&cfg, 2);
+        assert_eq!(loop_records.len(), tcp_records.len(), "{policy}");
+        for (a, b) in loop_records.iter().zip(&tcp_records) {
+            assert_records_equal(a, b, policy);
+        }
+        assert_eq!(
+            loop_hash, tcp_hash,
+            "{policy}: final model must hash identically over TCP"
+        );
+        // Wire accounting is live: frames cost real overhead beyond
+        // the codec payload.
+        for r in &tcp_records {
+            if r.arrived > 0 {
+                assert!(r.down_bytes > r.down_payload_bytes, "{policy}");
+                assert!(r.up_bytes > r.up_payload_bytes, "{policy}");
+            }
+        }
+    }
+}
+
+/// A lone client process can carry the whole fleet (routing is
+/// `client % conns`), and raw-uplink (no DGC) runs frame correctly
+/// too.
+#[test]
+fn single_connection_raw_uplink_matches_loopback() {
+    let mut cfg = ExperimentConfig::preset(Preset::NativeSmoke);
+    cfg.rounds = 3;
+    cfg.eval_every = 3;
+    cfg.uplink_dgc = false;
+    cfg.downlink = "raw".into();
+    let (loop_records, loop_hash) = run_loopback(&cfg);
+    let (tcp_records, tcp_hash) = run_tcp(&cfg, 1);
+    for (a, b) in loop_records.iter().zip(&tcp_records) {
+        assert_records_equal(a, b, "raw/1conn");
+    }
+    assert_eq!(loop_hash, tcp_hash);
+}

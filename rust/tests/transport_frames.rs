@@ -1,0 +1,217 @@
+//! Frame robustness: every malformed input — truncation at any byte,
+//! any single-bit flip, version mismatches, oversized length prefixes,
+//! garbage — must decode to a diagnosable [`FrameError`], never a
+//! panic and never an unbounded loop. Well-formed frames round-trip
+//! every message type bit-exactly.
+
+use afd::model::submodel::SubModel;
+use afd::prop::UsizeIn;
+use afd::transport::frame::{self, FrameError, FrameKind};
+use afd::util::rng::Pcg64;
+
+fn sample_submodel(rng: &mut Pcg64, groups: usize, max_units: usize) -> SubModel {
+    let keep = (0..groups)
+        .map(|_| {
+            let n = 1 + rng.below(max_units as u64) as usize;
+            (0..n).map(|_| rng.next_f64() < 0.6).collect()
+        })
+        .collect();
+    SubModel::from_keep(keep)
+}
+
+/// A corpus covering every frame kind with varied payload sizes.
+fn frame_corpus(seed: u64) -> Vec<Vec<u8>> {
+    let mut rng = Pcg64::new(seed);
+    let mut frames = Vec::new();
+    let mut buf = Vec::new();
+
+    frame::encode_hello(&mut buf);
+    frames.push(std::mem::take(&mut buf));
+    frame::encode_ready(&mut buf, rng.next_u64());
+    frames.push(std::mem::take(&mut buf));
+    frame::encode_bye(&mut buf);
+    frames.push(std::mem::take(&mut buf));
+    frame::encode_config(&mut buf, rng.next_u64(), "{\"rounds\": 3}");
+    frames.push(std::mem::take(&mut buf));
+    frame::encode_round_close(&mut buf, true, 7, 3);
+    frames.push(std::mem::take(&mut buf));
+    frame::encode_round_close(&mut buf, false, 8, 4);
+    frames.push(std::mem::take(&mut buf));
+
+    for i in 0..6 {
+        let sm = sample_submodel(&mut rng, 1 + (i % 3), 40);
+        frame::encode_round_offer(
+            &mut buf,
+            i as u32,
+            rng.below(100) as u32,
+            rng.next_u64(),
+            0.1,
+            if i % 2 == 0 { f64::NAN } else { 12.5 },
+            &sm,
+        );
+        frames.push(std::mem::take(&mut buf));
+
+        let payload: Vec<u8> = (0..rng.below(300)).map(|_| rng.next_u64() as u8).collect();
+        frame::encode_model_down(&mut buf, i as u32, i as u32, 1, &payload);
+        frames.push(std::mem::take(&mut buf));
+
+        let base = frame::begin_update_up(&mut buf, i as u32, i as u32, 50, 0.3, frame::UPDATE_DGC);
+        buf.extend((0..rng.below(200)).map(|_| rng.next_u64() as u8));
+        frame::end_frame(&mut buf, base);
+        frames.push(std::mem::take(&mut buf));
+    }
+    frames
+}
+
+#[test]
+fn well_formed_frames_parse_and_roundtrip() {
+    for f in frame_corpus(1) {
+        let (view, used) = frame::parse_frame(&f).expect("well-formed frame must parse");
+        assert_eq!(used, f.len());
+        assert_eq!(
+            f.len() as u64,
+            frame::FRAME_OVERHEAD + view.payload.len() as u64
+        );
+    }
+}
+
+#[test]
+fn round_offer_roundtrips_submodel_exactly() {
+    let mut rng = Pcg64::new(2);
+    for case in 0..30 {
+        let sm = sample_submodel(&mut rng, 1 + (case % 4), 70);
+        let mut buf = Vec::new();
+        frame::encode_round_offer(&mut buf, case as u32, 9, 0xdead_beef, 0.25, f64::NAN, &sm);
+        let (view, _) = frame::parse_frame(&buf).unwrap();
+        let offer = frame::parse_round_offer(&view).unwrap();
+        assert_eq!(offer.round, case as u32);
+        assert_eq!(offer.client, 9);
+        assert_eq!(offer.seed, 0xdead_beef);
+        assert_eq!(offer.lr, 0.25);
+        assert!(offer.deadline_s.is_nan());
+        assert!(offer.matches_submodel(&sm), "case {case}");
+        assert_eq!(offer.submodel().keep, sm.keep, "case {case}");
+        // A flipped unit must no longer match.
+        let mut other = sm.keep.clone();
+        other[0][0] = !other[0][0];
+        assert!(!offer.matches_submodel(&SubModel::from_keep(other)));
+    }
+}
+
+#[test]
+fn update_up_roundtrips_fields() {
+    let mut buf = Vec::new();
+    let body = [1u8, 2, 3, 4, 5];
+    let base = frame::begin_update_up(&mut buf, 11, 4, 123, -0.75, frame::UPDATE_RAW);
+    buf.extend_from_slice(&body);
+    frame::end_frame(&mut buf, base);
+    let (view, _) = frame::parse_frame(&buf).unwrap();
+    let upd = frame::parse_update_up(&view).unwrap();
+    assert_eq!(
+        (upd.round, upd.client, upd.samples, upd.update_kind),
+        (11, 4, 123, frame::UPDATE_RAW)
+    );
+    assert_eq!(upd.loss, -0.75);
+    assert_eq!(upd.payload, body);
+}
+
+/// Truncation at EVERY prefix length must be a `FrameError` (almost
+/// always `Truncated`; a cut inside the header can also surface as a
+/// magic/version error on garbage) — never a panic.
+#[test]
+fn truncation_at_every_byte_is_an_error() {
+    for f in frame_corpus(3) {
+        for cut in 0..f.len() {
+            let r = frame::parse_frame(&f[..cut]);
+            assert!(r.is_err(), "prefix of {cut}/{} bytes parsed", f.len());
+        }
+    }
+}
+
+/// CRC-32 detects every single-bit error, and the length/magic/version
+/// checks cover the prefix fields — so flipping ANY single bit of a
+/// valid frame must yield an error, never a panic and never a clean
+/// parse.
+#[test]
+fn any_single_bit_flip_is_detected() {
+    for f in frame_corpus(4) {
+        for byte in 0..f.len() {
+            for bit in 0..8u8 {
+                let mut corrupt = f.clone();
+                corrupt[byte] ^= 1 << bit;
+                let r = frame::parse_frame(&corrupt);
+                assert!(
+                    r.is_err(),
+                    "flip byte {byte} bit {bit} of a {}-byte frame parsed cleanly",
+                    f.len()
+                );
+            }
+        }
+    }
+}
+
+/// Random garbage (arbitrary bytes, arbitrary lengths) never panics
+/// the parser.
+#[test]
+fn random_garbage_never_panics() {
+    let gen = UsizeIn(0, 4096);
+    afd::prop::check("garbage frames", &gen, 60, |&n| {
+        let mut rng = Pcg64::new(n as u64 + 99);
+        let bytes: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+        // Any Result is fine — the property is "no panic, no hang".
+        let _ = frame::parse_frame(&bytes);
+        // Also exercise the typed parsers on whatever view survives.
+        if let Ok((view, _)) = frame::parse_frame(&bytes) {
+            let _ = frame::parse_round_offer(&view);
+            let _ = frame::parse_update_up(&view);
+            let _ = frame::parse_model_down(&view);
+            let _ = frame::parse_round_close(&view);
+            let _ = frame::parse_config(&view);
+            let _ = frame::parse_ready(&view);
+        }
+        Ok(())
+    });
+}
+
+/// Payload-level malformation (valid frame envelope, short payload)
+/// errors with the field name, never panics.
+#[test]
+fn short_payloads_error_diagnosably() {
+    // An Ack frame whose payload is 3 bytes instead of 8.
+    let mut buf = Vec::new();
+    let base = frame::begin_frame(&mut buf, FrameKind::Ack);
+    buf.extend_from_slice(&[1, 2, 3]);
+    frame::end_frame(&mut buf, base);
+    let (view, _) = frame::parse_frame(&buf).unwrap();
+    match frame::parse_round_close(&view) {
+        Err(FrameError::BadPayload { kind, .. }) => assert_eq!(kind, FrameKind::Ack),
+        other => panic!("want BadPayload, got {other:?}"),
+    }
+
+    // A RoundOffer whose group region is cut mid-bitmap.
+    let sm = SubModel::from_keep(vec![vec![true; 20]]);
+    let mut full = Vec::new();
+    frame::encode_round_offer(&mut full, 1, 2, 3, 0.1, f64::NAN, &sm);
+    let (view, _) = frame::parse_frame(&full).unwrap();
+    let payload = view.payload;
+    let mut cut = Vec::new();
+    let base = frame::begin_frame(&mut cut, FrameKind::RoundOffer);
+    cut.extend_from_slice(&payload[..payload.len() - 1]);
+    frame::end_frame(&mut cut, base);
+    let (view, _) = frame::parse_frame(&cut).unwrap();
+    assert!(matches!(
+        frame::parse_round_offer(&view),
+        Err(FrameError::BadPayload { .. })
+    ));
+}
+
+#[test]
+fn wrong_kind_routing_is_an_error() {
+    let mut buf = Vec::new();
+    frame::encode_hello(&mut buf);
+    let (view, _) = frame::parse_frame(&buf).unwrap();
+    assert!(frame::parse_round_offer(&view).is_err());
+    assert!(frame::parse_update_up(&view).is_err());
+    assert!(frame::parse_model_down(&view).is_err());
+    assert!(frame::parse_config(&view).is_err());
+}

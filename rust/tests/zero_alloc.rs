@@ -34,6 +34,59 @@ static ALLOC: CountingAllocator = CountingAllocator;
 /// The counting allocator is process-global; serialize the tests.
 static SERIAL: Mutex<()> = Mutex::new(());
 
+/// Transport contract: framing a full round's conversation into warm
+/// sinks — offer, model, update, round-close — and parsing every frame
+/// back (header, CRC, payload grammar, bitmap compare) performs zero
+/// heap allocations. Frames extend the PR 4 zero-alloc contract
+/// instead of breaking it.
+#[test]
+fn frame_encode_parse_allocates_nothing_after_warmup() {
+    let _guard = SERIAL.lock().unwrap();
+    use afd::transport::frame;
+
+    let sm = SubModel::from_keep(vec![(0..64).map(|i| i % 3 != 0).collect()]);
+    let payload: Vec<u8> = (0..512).map(|i| i as u8).collect();
+    let mut offer = Vec::new();
+    let mut model = Vec::new();
+    let mut upd = Vec::new();
+    let mut close = Vec::new();
+
+    let mut round = |offer: &mut Vec<u8>,
+                     model: &mut Vec<u8>,
+                     upd: &mut Vec<u8>,
+                     close: &mut Vec<u8>| {
+        offer.clear();
+        frame::encode_round_offer(offer, 3, 7, 0xfeed, 0.1, f64::NAN, &sm);
+        model.clear();
+        frame::encode_model_down(model, 3, 7, 1, &payload);
+        upd.clear();
+        let base = frame::begin_update_up(upd, 3, 7, 40, 0.25, frame::UPDATE_DGC);
+        upd.extend_from_slice(&payload[..100]);
+        frame::end_frame(upd, base);
+        close.clear();
+        frame::encode_round_close(close, true, 3, 7);
+
+        let (v, _) = frame::parse_frame(offer).unwrap();
+        let o = frame::parse_round_offer(&v).unwrap();
+        assert!(o.matches_submodel(&sm));
+        let (v, _) = frame::parse_frame(model).unwrap();
+        let m = frame::parse_model_down(&v).unwrap();
+        assert_eq!(m.payload.len(), payload.len());
+        let (v, _) = frame::parse_frame(upd).unwrap();
+        let u = frame::parse_update_up(&v).unwrap();
+        assert_eq!(u.payload.len(), 100);
+        let (v, _) = frame::parse_frame(close).unwrap();
+        frame::parse_round_close(&v).unwrap();
+    };
+
+    // Warm-up sizes the sinks; the armed pass must not touch the heap.
+    round(&mut offer, &mut model, &mut upd, &mut close);
+    alloc_count::arm();
+    round(&mut offer, &mut model, &mut upd, &mut close);
+    let allocs = alloc_count::disarm();
+    assert_eq!(allocs, 0, "framing a warm round made {allocs} allocations");
+}
+
 #[test]
 fn train_epoch_and_plan_packing_allocate_nothing_after_warmup() {
     let _guard = SERIAL.lock().unwrap();
