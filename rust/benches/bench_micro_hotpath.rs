@@ -259,6 +259,38 @@ fn main() {
         std::hint::black_box(agg.finalize(&params));
     });
 
+    // ---- observability overhead -------------------------------------
+    // The obs contract (rust/src/obs/): a disabled span site is a
+    // relaxed load + branch; an enabled one is two Instant reads plus
+    // relaxed atomic stores into a preallocated per-thread ring. The
+    // traced-vs-untraced rows below re-measure the two hottest real
+    // sites (train epoch, frame parse) with recording fully live so
+    // the overhead is a measured ratio, not a claim.
+    println!(
+        "\n-- observability (trace feature {}) --",
+        if cfg!(feature = "trace") { "on" } else { "off" }
+    );
+    afd::obs::register_thread();
+    let r_span_off = b.run("span open+drop (disabled)", None, || {
+        std::hint::black_box(afd::obs::span(afd::obs::Stage::Pack));
+    });
+    afd::obs::set_enabled(true);
+    let r_span_on = b.run("span open+drop (enabled)", None, || {
+        std::hint::black_box(afd::obs::span(afd::obs::Stage::Pack));
+    });
+    let r_mark_on = b.run("mark (enabled)", None, || {
+        afd::obs::mark(afd::obs::Stage::RoundMark, 1, 2);
+    });
+    let r_kernel_traced = b.run("train_epoch kernels (tracing on)", None, || {
+        p.copy_from_slice(&init);
+        std::hint::black_box(mlp.train_epoch_in(&mut ws, &mut p, &masks, &data, 0.05).unwrap());
+    });
+    let r_parse_traced = b.run("parse ModelDown frame (tracing on)", Some(enc.wire_bytes()), || {
+        let (view, _) = frame::parse_frame(&mbuf).unwrap();
+        std::hint::black_box(frame::parse_model_down(&view).unwrap());
+    });
+    afd::obs::set_enabled(false);
+
     // ---- tracked baseline: BENCH_hotpath.json -----------------------
     let mut baseline = Json::obj();
     baseline.set("train_epoch_scalar_ns", Json::Num(r_scalar.median_ns));
@@ -292,7 +324,9 @@ fn main() {
              reference and the legacy one-shot packing; `kernels` is the blocked \
              kernel + workspace path and PackPlan; `simd` records the detected CPU \
              features, the active dispatch level and dispatched-vs-scalar primitive \
-             ratios — all measured in the same run on the same machine. Regenerate \
+             ratios; `obs` records the raw span-site cost (enabled vs disabled) and \
+             tracing-on/off ratios for the two hottest instrumented sites — all \
+             measured in the same run on the same machine. Regenerate \
              with `cargo bench --bench bench_micro_hotpath` (add `--features simd` \
              to measure the AVX2 dispatch)."
                 .into(),
@@ -359,6 +393,20 @@ fn main() {
         Json::Num(frame::FRAME_OVERHEAD as f64),
     );
     doc.set("transport", transport_j);
+    let mut obs_j = Json::obj();
+    obs_j.set("trace_feature", Json::Bool(cfg!(feature = "trace")));
+    obs_j.set("span_disabled_ns", Json::Num(r_span_off.median_ns));
+    obs_j.set("span_enabled_ns", Json::Num(r_span_on.median_ns));
+    obs_j.set("mark_enabled_ns", Json::Num(r_mark_on.median_ns));
+    obs_j.set(
+        "train_epoch_tracing_ratio",
+        Json::Num(r_kernel_traced.median_ns / r_kernel.median_ns),
+    );
+    obs_j.set(
+        "frame_parse_tracing_ratio",
+        Json::Num(r_parse_traced.median_ns / r_frame_parse.median_ns),
+    );
+    doc.set("obs", obs_j);
     doc.set("all_results", b.to_json());
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
         .join("..")

@@ -446,6 +446,11 @@ impl ShardedFedAvg {
     /// operation sequence changes (enforced by
     /// `rust/tests/agg_sharding.rs`).
     pub fn aggregate_batch(&mut self, ops: &[AddOp], base: &[f32], out: &mut Vec<f32>) {
+        let _sp = crate::obs::span_ab(
+            crate::obs::Stage::ShardAggregate,
+            ops.len() as u64,
+            self.shards.len() as u64,
+        );
         assert_eq!(
             base.len(),
             self.num_params,

@@ -110,6 +110,7 @@ impl DgcState {
         varint_scratch: &mut Vec<u8>,
         out: &mut Vec<u8>,
     ) {
+        let _sp = crate::obs::span_ab(crate::obs::Stage::DgcCompress, delta.len() as u64, 0);
         let n = delta.len();
         if n == 0 {
             out.clear();

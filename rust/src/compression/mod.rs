@@ -107,6 +107,7 @@ impl DenseCodec for RawF32 {
     }
 
     fn encode_into(&self, values: &[f32], _seed: u64, _ws: &mut Workspace, out: &mut Encoded) {
+        let _sp = crate::obs::span_ab(crate::obs::Stage::CodecEncode, values.len() as u64, 0);
         let bytes = &mut out.bytes;
         bytes.clear();
         bytes.reserve(4 + values.len() * 4);
@@ -117,6 +118,7 @@ impl DenseCodec for RawF32 {
     }
 
     fn decode_slice_into(&self, bytes: &[u8], _seed: u64, _ws: &mut Workspace, out: &mut Vec<f32>) {
+        let _sp = crate::obs::span_ab(crate::obs::Stage::CodecDecode, bytes.len() as u64, 0);
         let n = u32::from_le_bytes(bytes[0..4].try_into().unwrap()) as usize;
         assert!(
             bytes.len() >= 4 + 4 * n,

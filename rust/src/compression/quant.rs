@@ -84,6 +84,7 @@ impl DenseCodec for HadamardQuant8 {
     }
 
     fn encode_into(&self, values: &[f32], seed: u64, ws: &mut Workspace, out: &mut Encoded) {
+        let _sp = crate::obs::span_ab(crate::obs::Stage::CodecEncode, values.len() as u64, 0);
         let b = self.block;
         let n = values.len();
         let nblocks = n.div_ceil(b);
@@ -120,6 +121,7 @@ impl DenseCodec for HadamardQuant8 {
     }
 
     fn decode_slice_into(&self, bytes: &[u8], seed: u64, ws: &mut Workspace, out: &mut Vec<f32>) {
+        let _sp = crate::obs::span_ab(crate::obs::Stage::CodecDecode, bytes.len() as u64, 0);
         let b = self.block;
         let n = u32::from_le_bytes(bytes[0..4].try_into().unwrap()) as usize;
         let nblocks = n.div_ceil(b);

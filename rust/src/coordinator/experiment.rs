@@ -134,6 +134,9 @@ impl Experiment {
         // (PJRT, the reference path, single-shard small models) never
         // create them; the width is known up front for shard sizing.
         let pool = Arc::new(LazyPool::default_for_machine());
+        if crate::obs::enabled() {
+            crate::obs::metrics::POOL_WIDTH.set(pool.size() as u64);
+        }
         let shard_count = cfg.sharding.resolve(spec.num_params, pool.size());
         let agg = ShardedFedAvg::new(spec.num_params, shard_count, Arc::clone(&pool));
         let lr = cfg.lr_override.unwrap_or(spec.lr);
@@ -281,6 +284,9 @@ impl Experiment {
             || round == self.cfg.rounds
         {
             let ev = self.evaluate()?;
+            if crate::obs::enabled() {
+                crate::obs::metrics::EVALS_RUN.incr();
+            }
             (Some(ev.accuracy()), Some(ev.mean_loss()))
         } else {
             (None, None)

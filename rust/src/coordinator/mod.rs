@@ -128,17 +128,23 @@ pub fn run_client_round(
     // exchange allocates nothing once `ws` is warm
     // (`rust/tests/zero_alloc.rs`).
     let mut offer = ws.take_bytes();
-    frame::encode_round_offer(
-        &mut offer,
-        round_u,
-        client_u,
-        seed,
-        lr,
-        deadline_s.unwrap_or(f64::NAN),
-        submodel,
-    );
+    {
+        let _sp = crate::obs::span_ab(crate::obs::Stage::FrameEncode, round as u64, client as u64);
+        frame::encode_round_offer(
+            &mut offer,
+            round_u,
+            client_u,
+            seed,
+            lr,
+            deadline_s.unwrap_or(f64::NAN),
+            submodel,
+        );
+    }
     let mut packed = ws.take_uncleared(plan.packed_len());
-    plan.pack_into(global, &mut packed);
+    {
+        let _sp = crate::obs::span_ab(crate::obs::Stage::Pack, round as u64, client as u64);
+        plan.pack_into(global, &mut packed);
+    }
     let mut enc = Encoded {
         bytes: ws.take_bytes(),
     };
@@ -146,13 +152,16 @@ pub fn run_client_round(
     ws.give(packed);
     let down_payload_bytes = enc.wire_bytes();
     let mut model_frame = ws.take_bytes();
-    frame::encode_model_down(
-        &mut model_frame,
-        round_u,
-        client_u,
-        codec_id(downlink.name()),
-        &enc.bytes,
-    );
+    {
+        let _sp = crate::obs::span_ab(crate::obs::Stage::FrameEncode, round as u64, client as u64);
+        frame::encode_model_down(
+            &mut model_frame,
+            round_u,
+            client_u,
+            codec_id(downlink.name()),
+            &enc.bytes,
+        );
+    }
     // Wire accounting: both downlink frames plus the round-closing
     // Ack/Cut control frame (same fixed size either way, so it can be
     // charged at dispatch).
@@ -173,12 +182,14 @@ pub fn run_client_round(
             num_samples: num_samples as u32,
             ws: &mut *ws,
         };
+        let _sp = crate::obs::span_ab(crate::obs::Stage::RoundTrip, round as u64, client as u64);
         transport.round_trip(client, &offer, &model_frame, &mut env, &mut reply)?;
     }
     ws.give_bytes(offer);
     ws.give_bytes(model_frame);
 
     // ---- Decode the update frame ------------------------------------
+    let parse_sp = crate::obs::span_ab(crate::obs::Stage::FrameParse, round as u64, client as u64);
     let (view, used) = frame::parse_frame(&reply)
         .map_err(|e| anyhow::anyhow!("client {client} round {round}: {e}"))?;
     anyhow::ensure!(
@@ -187,6 +198,7 @@ pub fn run_client_round(
     );
     let upd = frame::parse_update_up(&view)
         .map_err(|e| anyhow::anyhow!("client {client} round {round}: {e}"))?;
+    drop(parse_sp);
     anyhow::ensure!(
         upd.client == client_u && upd.round == round_u,
         "update frame addresses client {} round {}, expected client {client} \
@@ -231,7 +243,11 @@ pub fn run_client_round(
             downlink.decode_slice_into(&enc.bytes, seed, ws, &mut decoded);
             let mut recon = ws.take_uncleared(n);
             recon.copy_from_slice(global);
-            plan.unpack_from(&decoded, &mut recon);
+            {
+                let _sp =
+                    crate::obs::span_ab(crate::obs::Stage::Unpack, round as u64, client as u64);
+                plan.unpack_from(&decoded, &mut recon);
+            }
             ws.give(decoded);
             // Scatter the sparse delta straight onto it; the client
             // speaks for its sub-model coords plus any residual coords
@@ -282,7 +298,11 @@ pub fn run_client_round(
             }
             let mut recon = ws.take_uncleared(n);
             recon.copy_from_slice(global);
-            plan.unpack_from(&up_vals, &mut recon);
+            {
+                let _sp =
+                    crate::obs::span_ab(crate::obs::Stage::Unpack, round as u64, client as u64);
+                plan.unpack_from(&up_vals, &mut recon);
+            }
             ws.give(up_vals);
             (recon, coord_mask, Some(Arc::clone(plan)))
         }
@@ -292,6 +312,14 @@ pub fn run_client_round(
 
     // Compute cost of the sub-model epoch: fwd + bwd ≈ 3× fwd FLOPs.
     let epoch_flops = 3.0 * plan.flops_per_sample() * spec.samples_per_round() as f64;
+
+    if crate::obs::enabled() {
+        use crate::obs::metrics as om;
+        om::BYTES_DOWN_WIRE.add(down_bytes);
+        om::BYTES_UP_WIRE.add(up_bytes);
+        om::BYTES_DOWN_PAYLOAD.add(down_payload_bytes);
+        om::BYTES_UP_PAYLOAD.add(up_payload_bytes);
+    }
 
     Ok(ClientRoundOutcome {
         client,

@@ -43,7 +43,15 @@
 //! pools that make a whole warm client round allocation-free (see
 //! `rust/src/tensor/README.md` and `rust/src/compression/README.md`).
 //! [`util`] holds the offline substrates (RNG, JSON, CLI, thread
-//! pool, stats, counting allocator).
+//! pool, stats, counting allocator). [`obs`] is the observability
+//! layer threaded through all of the above: an allocation-free span
+//! recorder (per-thread ring buffers), a static counter/histogram
+//! registry, and Chrome-trace / stats exporters (`--trace-out`,
+//! `--stats-out`; cargo feature `trace`, on by default) — recording
+//! never changes results (traced runs are bit-identical to untraced,
+//! `rust/tests/obs_conformance.rs`) and a warm client round stays
+//! allocation-free with tracing on (`rust/tests/zero_alloc.rs`). See
+//! `rust/src/obs/README.md`.
 
 // The offline substrates favor explicit indexed loops over iterator
 // adapters in hot paths; keep clippy's style-only lints from failing
@@ -65,6 +73,7 @@ pub mod dropout;
 pub mod metrics;
 pub mod model;
 pub mod network;
+pub mod obs;
 pub mod prop;
 pub mod runtime;
 pub mod sched;

@@ -33,6 +33,9 @@ use afd::util::logging;
 
 fn main() {
     logging::init_from_env();
+    // Honors AFD_TRACE=1 (remote client processes) and pins the span
+    // clock epoch before any thread can race it.
+    afd::obs::init_from_env();
     let mut argv: Vec<String> = std::env::args().skip(1).collect();
     let cmd = if argv.is_empty() {
         "help".to_string()
@@ -100,6 +103,33 @@ fn experiment_spec() -> ArgSpec {
         .opt("seeds", "1", "number of seeds (mean ± std reporting)")
         .opt_maybe("target", "target accuracy for convergence time")
         .opt_maybe("out", "write per-round records to this JSONL file")
+        .opt_maybe("trace-out", "write a Chrome trace-event JSON (open in Perfetto)")
+        .opt_maybe("stats-out", "write the observability counters/histograms JSON")
+}
+
+/// Enable span/metric recording when an observability output was
+/// requested (`AFD_TRACE=1` may have enabled it already).
+fn init_obs(args: &afd::util::cli::Args) {
+    if args.get("trace-out").is_some() || args.get("stats-out").is_some() {
+        afd::obs::set_enabled(true);
+    }
+}
+
+/// Write the requested trace/stats files and print the per-stage time
+/// breakdown (the table renders only if something was recorded).
+fn finish_obs(args: &afd::util::cli::Args) -> Result<()> {
+    if let Some(path) = args.get("trace-out") {
+        afd::obs::export::write_chrome_trace(std::path::Path::new(path))?;
+        println!("  wrote trace to {path}");
+    }
+    if let Some(path) = args.get("stats-out") {
+        afd::obs::export::write_stats(std::path::Path::new(path))?;
+        println!("  wrote stats to {path}");
+    }
+    if let Some(table) = afd::metrics::render_stage_table() {
+        println!("{table}");
+    }
+    Ok(())
 }
 
 fn parse_experiment(args: &afd::util::cli::Args) -> Result<ExperimentConfig> {
@@ -155,6 +185,7 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
         .map_err(|e| anyhow::anyhow!(e))?;
     let base = parse_experiment(&args)?;
     let seeds: usize = args.usize("seeds").map_err(|e| anyhow::anyhow!(e))?;
+    init_obs(&args);
 
     let mut reports = Vec::new();
     for s in 0..seeds as u64 {
@@ -210,6 +241,7 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
             seeds
         );
     }
+    finish_obs(&args)?;
     Ok(())
 }
 
@@ -222,6 +254,7 @@ fn cmd_compare(argv: Vec<String>) -> Result<()> {
     let seeds: usize = args.usize("seeds").map_err(|e| anyhow::anyhow!(e))?;
     let afd_kind = if base.data.iid { "afd_single" } else { "afd_multi" };
     let target = base.target_accuracy;
+    init_obs(&args);
 
     let grid = ExperimentConfig::paper_method_grid(&base, afd_kind);
     let mut rows = Vec::new();
@@ -247,6 +280,7 @@ fn cmd_compare(argv: Vec<String>) -> Result<()> {
             &rows
         )
     );
+    finish_obs(&args)?;
     Ok(())
 }
 
@@ -263,6 +297,7 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         .map_err(|e| anyhow::anyhow!(e))?;
     let cfg = parse_experiment(&args)?;
     let conns: usize = args.usize("conns").map_err(|e| anyhow::anyhow!(e))?;
+    init_obs(&args);
     let transport: Arc<dyn Transport> = if conns == 0 {
         Arc::new(Loopback)
     } else {
@@ -337,6 +372,7 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         println!("  wrote records to {path}");
     }
     transport.shutdown()?;
+    finish_obs(&args)?;
     Ok(())
 }
 

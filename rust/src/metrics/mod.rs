@@ -261,6 +261,38 @@ pub fn render_table(title: &str, rows: &[MethodSummary]) -> String {
     s
 }
 
+/// Render the observability layer's per-stage time breakdown (host
+/// wall-clock, from the span recorder's histograms) in the same
+/// paper-table style as [`render_table`]. Returns `None` when nothing
+/// was recorded — tracing off, or the `trace` feature compiled out —
+/// so callers can print it only when it says something.
+pub fn render_stage_table() -> Option<String> {
+    let rows = crate::obs::export::stage_rows();
+    if rows.iter().all(|r| r.1 == 0) {
+        return None;
+    }
+    let mut s = String::from("\n== Stage time breakdown (host wall-clock) ==\n");
+    s.push_str(&format!(
+        "{:<18} {:>10} {:>14} {:>12} {:>12} {:>12}\n",
+        "Stage", "Count", "Total", "Mean", "p50", "p99"
+    ));
+    for (name, count, total_ns, mean_ns, p50_ns, p99_ns) in rows {
+        if count == 0 {
+            continue;
+        }
+        s.push_str(&format!(
+            "{:<18} {:>10} {:>14} {:>12} {:>12} {:>12}\n",
+            name,
+            count,
+            crate::util::human_duration(total_ns as f64 * 1e-9),
+            format!("{:.1}us", mean_ns * 1e-3),
+            format!("{:.1}us", p50_ns as f64 * 1e-3),
+            format!("{:.1}us", p99_ns as f64 * 1e-3),
+        ));
+    }
+    Some(s)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,0 +1,360 @@
+//! Exporters: Chrome trace-event JSON and the end-of-run stats dump.
+//!
+//! The trace file is the [trace-event format] consumed by Perfetto and
+//! `chrome://tracing`: one complete (`"ph":"X"`) event per span with
+//! microsecond timestamps, one track (`tid`) per registered thread
+//! plus one synthetic track per TCP connection, and `"ph":"M"`
+//! metadata events naming every track. Round markers become global
+//! instant events carrying the scheduler's virtual clock in `args`.
+//! `scripts/check_trace.py` validates the shape in CI (`obs-smoke`).
+//!
+//! [trace-event format]: https://docs.google.com/document/d/1CvAClvFfyA5R-PhYUmn5OOQtYMH4h6I0nSsKchNAySU
+
+use std::io;
+use std::path::Path;
+
+use super::metrics;
+use super::span::{self, SpanRec, Stage, CONN_TRACK_BASE, STAGE_COUNT};
+use crate::util::json::Json;
+
+fn frame_kind_name(tag: usize) -> Option<&'static str> {
+    Some(match tag {
+        1 => "hello",
+        2 => "config",
+        3 => "ready",
+        4 => "round_offer",
+        5 => "model_down",
+        6 => "update_up",
+        7 => "ack",
+        8 => "cut",
+        9 => "bye",
+        _ => return None,
+    })
+}
+
+fn us(ns: u64) -> Json {
+    Json::Num(ns as f64 / 1000.0)
+}
+
+fn span_event(tid: u32, s: &SpanRec) -> Json {
+    let mut ev = Json::obj();
+    ev.set("pid", Json::Num(1.0));
+    ev.set("tid", Json::Num(tid as f64));
+    ev.set("ts", us(s.start_ns));
+    if s.stage == Stage::RoundMark {
+        ev.set("ph", Json::Str("i".into()));
+        ev.set("s", Json::Str("g".into()));
+        ev.set("name", Json::Str(s.stage.name().into()));
+        let mut args = Json::obj();
+        args.set("round", Json::Num(s.a as f64));
+        args.set("virtual_s", Json::Num(s.b as f64 / 1e9));
+        ev.set("args", args);
+    } else {
+        ev.set("ph", Json::Str("X".into()));
+        ev.set("cat", Json::Str("afd".into()));
+        ev.set("name", Json::Str(s.stage.name().into()));
+        ev.set("dur", us(s.dur_ns));
+        let mut args = Json::obj();
+        args.set("a", Json::Num(s.a as f64));
+        args.set("b", Json::Num(s.b as f64));
+        ev.set("args", args);
+    }
+    ev
+}
+
+fn thread_name_event(tid: u32, name: &str) -> Json {
+    let mut ev = Json::obj();
+    ev.set("ph", Json::Str("M".into()));
+    ev.set("name", Json::Str("thread_name".into()));
+    ev.set("pid", Json::Num(1.0));
+    ev.set("tid", Json::Num(tid as f64));
+    let mut args = Json::obj();
+    args.set("name", Json::Str(name.into()));
+    ev.set("args", args);
+    ev
+}
+
+/// Build the whole Chrome trace document from the current rings and
+/// registry.
+pub fn chrome_trace_json() -> Json {
+    let threads = span::snapshot();
+    let mut events: Vec<Json> = Vec::new();
+    let mut proc_ev = Json::obj();
+    proc_ev.set("ph", Json::Str("M".into()));
+    proc_ev.set("name", Json::Str("process_name".into()));
+    proc_ev.set("pid", Json::Num(1.0));
+    let mut pargs = Json::obj();
+    pargs.set("name", Json::Str("afd".into()));
+    proc_ev.set("args", pargs);
+    events.push(proc_ev);
+
+    // One named track per registered thread, plus one per TCP
+    // connection actually seen in the spans.
+    let mut conn_tracks: Vec<u32> = Vec::new();
+    for t in &threads {
+        events.push(thread_name_event(t.tid, &t.name));
+        for s in &t.spans {
+            if s.track >= CONN_TRACK_BASE && !conn_tracks.contains(&s.track) {
+                conn_tracks.push(s.track);
+            }
+        }
+    }
+    conn_tracks.sort_unstable();
+    for track in &conn_tracks {
+        events.push(thread_name_event(
+            *track,
+            &format!("tcp-conn-{}", track - CONN_TRACK_BASE),
+        ));
+    }
+
+    for t in &threads {
+        for s in &t.spans {
+            let tid = if s.track >= CONN_TRACK_BASE {
+                s.track
+            } else {
+                t.tid
+            };
+            events.push(span_event(tid, s));
+        }
+    }
+
+    let mut doc = Json::obj();
+    doc.set("traceEvents", Json::Arr(events));
+    doc.set("displayTimeUnit", Json::Str("ms".into()));
+    doc.set("afd_stats", stats_json());
+    doc
+}
+
+/// Write the Chrome trace file (`--trace-out`).
+pub fn write_chrome_trace(path: &Path) -> io::Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, chrome_trace_json().to_string_compact())
+}
+
+/// Per-stage latency summary rows: `(stage name, count, total ns,
+/// mean ns, p50 ns, p99 ns)`. Feeds the breakdown table next to
+/// [`crate::metrics::render_table`] and the stats dump.
+pub fn stage_rows() -> Vec<(&'static str, u64, u64, f64, u64, u64)> {
+    let mut rows = Vec::with_capacity(STAGE_COUNT);
+    for stage in Stage::ALL {
+        if stage == Stage::RoundMark {
+            continue; // instants, not durations
+        }
+        let h = &metrics::STAGE_NS[stage as usize];
+        rows.push((
+            stage.name(),
+            h.count(),
+            h.sum(),
+            h.mean(),
+            h.quantile(0.5),
+            h.quantile(0.99),
+        ));
+    }
+    rows
+}
+
+/// The end-of-run stats dump: every counter, gauge and histogram in
+/// the registry, the span-ring accounting, and the logging layer's
+/// dropped-line count.
+pub fn stats_json() -> Json {
+    let mut counters = Json::obj();
+    counters.set(
+        "bytes_down_wire",
+        Json::Num(metrics::BYTES_DOWN_WIRE.get() as f64),
+    );
+    counters.set(
+        "bytes_up_wire",
+        Json::Num(metrics::BYTES_UP_WIRE.get() as f64),
+    );
+    counters.set(
+        "bytes_down_payload",
+        Json::Num(metrics::BYTES_DOWN_PAYLOAD.get() as f64),
+    );
+    counters.set(
+        "bytes_up_payload",
+        Json::Num(metrics::BYTES_UP_PAYLOAD.get() as f64),
+    );
+    counters.set(
+        "crc_failures",
+        Json::Num(metrics::CRC_FAILURES.get() as f64),
+    );
+    counters.set(
+        "stragglers_cut",
+        Json::Num(metrics::STRAGGLERS_CUT.get() as f64),
+    );
+    counters.set(
+        "clients_dropped",
+        Json::Num(metrics::CLIENTS_DROPPED.get() as f64),
+    );
+    counters.set(
+        "rounds_completed",
+        Json::Num(metrics::ROUNDS_COMPLETED.get() as f64),
+    );
+    counters.set("evals_run", Json::Num(metrics::EVALS_RUN.get() as f64));
+
+    let mut gauges = Json::obj();
+    gauges.set(
+        "queue_depth_peak",
+        Json::Num(metrics::QUEUE_DEPTH.get() as f64),
+    );
+    gauges.set("pool_width", Json::Num(metrics::POOL_WIDTH.get() as f64));
+
+    let mut sent = Json::obj();
+    let mut parsed = Json::obj();
+    for tag in 0..metrics::FRAME_KIND_SLOTS {
+        let Some(name) = frame_kind_name(tag) else {
+            continue;
+        };
+        sent.set(name, Json::Num(metrics::FRAMES_SENT[tag].get() as f64));
+        parsed.set(name, Json::Num(metrics::FRAMES_PARSED[tag].get() as f64));
+    }
+    let mut frames = Json::obj();
+    frames.set("sent", sent);
+    frames.set("parsed", parsed);
+    let fb = &metrics::FRAME_BYTES;
+    let mut frame_bytes = Json::obj();
+    frame_bytes.set("count", Json::Num(fb.count() as f64));
+    frame_bytes.set("sum", Json::Num(fb.sum() as f64));
+    frame_bytes.set("p50", Json::Num(fb.quantile(0.5) as f64));
+    frame_bytes.set("p99", Json::Num(fb.quantile(0.99) as f64));
+    frames.set("bytes", frame_bytes);
+
+    let mut conns = Json::obj();
+    for (i, c) in metrics::CONN_ROUND_TRIPS.iter().enumerate() {
+        let n = c.get();
+        if n > 0 {
+            conns.set(&format!("conn_{i}"), Json::Num(n as f64));
+        }
+    }
+
+    let mut stages = Json::obj();
+    for (name, count, total_ns, mean_ns, p50, p99) in stage_rows() {
+        let mut s = Json::obj();
+        s.set("count", Json::Num(count as f64));
+        s.set("total_ns", Json::Num(total_ns as f64));
+        s.set("mean_ns", Json::Num(mean_ns));
+        s.set("p50_ns", Json::Num(p50 as f64));
+        s.set("p99_ns", Json::Num(p99 as f64));
+        stages.set(name, s);
+    }
+
+    let threads = span::snapshot();
+    let mut spans = Json::obj();
+    spans.set("threads", Json::Num(threads.len() as f64));
+    spans.set(
+        "recorded",
+        Json::Num(threads.iter().map(|t| t.spans.len() as u64).sum::<u64>() as f64),
+    );
+    spans.set(
+        "dropped",
+        Json::Num(threads.iter().map(|t| t.dropped).sum::<u64>() as f64),
+    );
+
+    let mut log = Json::obj();
+    log.set(
+        "jsonl_lines_dropped",
+        Json::Num(crate::util::logging::dropped_lines() as f64),
+    );
+
+    let mut doc = Json::obj();
+    doc.set("counters", counters);
+    doc.set("gauges", gauges);
+    doc.set("frames", frames);
+    doc.set("conn_round_trips", conns);
+    doc.set("stages", stages);
+    doc.set("spans", spans);
+    doc.set("log", log);
+    doc
+}
+
+/// Write the stats dump (`--stats-out`) as pretty JSON.
+pub fn write_stats(path: &Path) -> io::Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let mut text = stats_json().to_string_pretty();
+    text.push('\n');
+    std::fs::write(path, text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_json_is_parseable_and_complete() {
+        let doc = stats_json();
+        let text = doc.to_string_pretty();
+        let back = crate::util::json::parse(&text).unwrap();
+        for key in ["counters", "gauges", "frames", "stages", "spans", "log"] {
+            assert!(back.get(key).is_some(), "missing {key}");
+        }
+        // Every duration stage has a row (round marker excluded).
+        let stages = back.get("stages").unwrap();
+        for stage in Stage::ALL {
+            if stage != Stage::RoundMark {
+                assert!(stages.get(stage.name()).is_some(), "{}", stage.name());
+            }
+        }
+        assert!(stages.get("round").is_none());
+    }
+
+    #[test]
+    #[cfg_attr(not(feature = "trace"), ignore = "needs the trace feature")]
+    fn chrome_trace_contains_recorded_spans_and_tracks() {
+        let _l = crate::obs::TEST_FLAG_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        crate::obs::set_enabled(true);
+        {
+            let _g = span::span_ab(Stage::CodecEncode, 1, 2);
+        }
+        {
+            let _g = span::span_on_track(Stage::RoundTrip, CONN_TRACK_BASE + 3, 1, 2);
+        }
+        span::mark(Stage::RoundMark, 4, 2_000_000_000);
+        crate::obs::set_enabled(false);
+
+        let doc = chrome_trace_json();
+        let text = doc.to_string_compact();
+        let back = crate::util::json::parse(&text).unwrap();
+        let events = back.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(!events.is_empty());
+        let names: Vec<&str> = events
+            .iter()
+            .filter_map(|e| e.get("name").and_then(|n| n.as_str()))
+            .collect();
+        assert!(names.contains(&"codec_encode"));
+        assert!(names.contains(&"round_trip"));
+        assert!(names.contains(&"round"));
+        assert!(names.contains(&"thread_name"));
+        // The synthetic connection track got named.
+        let conn_named = events.iter().any(|e| {
+            e.get("name").and_then(|n| n.as_str()) == Some("thread_name")
+                && e.get("args")
+                    .and_then(|a| a.get("name"))
+                    .and_then(|n| n.as_str())
+                    == Some("tcp-conn-3")
+        });
+        assert!(conn_named);
+        // Every X event carries the required fields.
+        for e in events {
+            match e.get("ph").and_then(|p| p.as_str()) {
+                Some("X") => {
+                    for k in ["name", "cat", "ts", "dur", "pid", "tid"] {
+                        assert!(e.get(k).is_some(), "X event missing {k}");
+                    }
+                }
+                Some("M") | Some("i") => {}
+                other => panic!("unexpected ph {other:?}"),
+            }
+        }
+        assert!(back.get("afd_stats").is_some());
+    }
+}

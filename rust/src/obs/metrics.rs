@@ -1,0 +1,330 @@
+//! Static metrics registry: atomic counters/gauges and fixed-size
+//! log-bucketed histograms.
+//!
+//! Everything here is a `static` with const-initialized atomics — no
+//! allocation ever, safe to hammer from any thread. Instrument sites
+//! gate on [`crate::obs::enabled`] *once per site* (cheaper than
+//! per-counter checks when a site updates several metrics together);
+//! the primitives themselves are ungated so unit tests can exercise
+//! local instances without touching the global flag.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::span::{Stage, STAGE_COUNT};
+
+// ---------------------------------------------------------------------
+// Primitives
+// ---------------------------------------------------------------------
+
+/// Monotonic atomic counter.
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub const fn new() -> Counter {
+        Counter {
+            v: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn incr(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.v.store(0, Ordering::Relaxed);
+    }
+}
+
+impl Default for Counter {
+    fn default() -> Counter {
+        Counter::new()
+    }
+}
+
+/// Last-write-wins gauge (queue depths, pool width).
+pub struct Gauge {
+    v: AtomicU64,
+}
+
+impl Gauge {
+    pub const fn new() -> Gauge {
+        Gauge {
+            v: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn set(&self, n: u64) {
+        self.v.store(n, Ordering::Relaxed);
+    }
+
+    /// Track the high-water mark too (`set` forgets peaks).
+    #[inline]
+    pub fn set_max(&self, n: u64) {
+        self.v.fetch_max(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.v.store(0, Ordering::Relaxed);
+    }
+}
+
+impl Default for Gauge {
+    fn default() -> Gauge {
+        Gauge::new()
+    }
+}
+
+/// Number of log₂ buckets: bucket 0 holds value 0, bucket `i ≥ 1`
+/// holds values in `[2^(i-1), 2^i)`, with the top bucket absorbing
+/// everything ≥ 2^62.
+pub const HIST_BUCKETS: usize = 64;
+
+/// Fixed-size log-bucketed histogram (durations in ns, sizes in
+/// bytes). `sum`/`count` ride along so means are exact even though
+/// quantiles are bucket-resolution.
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    sum: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Histogram {
+    pub const fn new() -> Histogram {
+        // Repeat-initializer for the atomic array; never borrowed as
+        // a const, so the interior-mutability footgun doesn't apply.
+        #[allow(clippy::declare_interior_mutable_const)]
+        const Z: AtomicU64 = AtomicU64::new(0);
+        Histogram {
+            buckets: [Z; HIST_BUCKETS],
+            sum: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    fn bucket_of(v: u64) -> usize {
+        (64 - v.leading_zeros() as usize).min(HIST_BUCKETS - 1)
+    }
+
+    #[inline]
+    pub fn observe(&self, v: u64) {
+        self.buckets[Self::bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum() as f64 / c as f64
+        }
+    }
+
+    /// Upper bound of the bucket holding the `q`-quantile observation
+    /// (0 for the zero bucket). Bucket-resolution: within a factor of
+    /// 2 of the true value, which is what a log histogram promises.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= rank {
+                return if i == 0 { 0 } else { 1u64 << i };
+            }
+        }
+        u64::MAX
+    }
+
+    pub fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.sum.store(0, Ordering::Relaxed);
+        self.count.store(0, Ordering::Relaxed);
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+// ---------------------------------------------------------------------
+// The registry
+// ---------------------------------------------------------------------
+
+/// Wire bytes framed for the downlink (offer + model + ack/cut).
+pub static BYTES_DOWN_WIRE: Counter = Counter::new();
+/// Wire bytes received on the uplink (update frames).
+pub static BYTES_UP_WIRE: Counter = Counter::new();
+/// Codec payload bytes inside downlink model frames.
+pub static BYTES_DOWN_PAYLOAD: Counter = Counter::new();
+/// Update payload bytes inside uplink frames.
+pub static BYTES_UP_PAYLOAD: Counter = Counter::new();
+/// Frames that failed CRC validation (see `transport/README.md`).
+pub static CRC_FAILURES: Counter = Counter::new();
+/// Clients cut by a round deadline (straggler policy).
+pub static STRAGGLERS_CUT: Counter = Counter::new();
+/// Clients whose finished work was dropped by churn.
+pub static CLIENTS_DROPPED: Counter = Counter::new();
+/// Rounds the engine completed.
+pub static ROUNDS_COMPLETED: Counter = Counter::new();
+/// Full-model evaluations run by the coordinator.
+pub static EVALS_RUN: Counter = Counter::new();
+
+/// Async engine: in-flight heap depth (high-water mark).
+pub static QUEUE_DEPTH: Gauge = Gauge::new();
+/// Worker pool width the experiment was built with.
+pub static POOL_WIDTH: Gauge = Gauge::new();
+
+/// Frame counts by `FrameKind as u8` (slot 0 unused; kinds are 1-9).
+pub const FRAME_KIND_SLOTS: usize = 16;
+
+// Repeat-initializers for the static arrays below; only ever used in
+// `[X; N]` position, never borrowed as consts.
+#[allow(clippy::declare_interior_mutable_const)]
+const FRAME_SLOT: Counter = Counter::new();
+/// Frames sealed by `end_frame`, per kind.
+pub static FRAMES_SENT: [Counter; FRAME_KIND_SLOTS] = [FRAME_SLOT; FRAME_KIND_SLOTS];
+/// Frames accepted by `parse_frame`, per kind.
+pub static FRAMES_PARSED: [Counter; FRAME_KIND_SLOTS] = [FRAME_SLOT; FRAME_KIND_SLOTS];
+
+/// Per-TCP-connection round-trip counts (connection `c` lands in slot
+/// `c % CONN_SLOTS`; the federation multiplexes clients over a small
+/// connection pool so slots are effectively exact).
+pub const CONN_SLOTS: usize = 64;
+#[allow(clippy::declare_interior_mutable_const)]
+const CONN_SLOT: Counter = Counter::new();
+pub static CONN_ROUND_TRIPS: [Counter; CONN_SLOTS] = [CONN_SLOT; CONN_SLOTS];
+
+/// Per-stage wall-clock duration histograms (ns), fed by span guards.
+#[allow(clippy::declare_interior_mutable_const)]
+const STAGE_HIST: Histogram = Histogram::new();
+pub static STAGE_NS: [Histogram; STAGE_COUNT] = [STAGE_HIST; STAGE_COUNT];
+
+/// Sizes of every sealed frame (bytes).
+pub static FRAME_BYTES: Histogram = Histogram::new();
+
+/// Span-guard hook: one closed span of `stage` lasting `ns`.
+#[inline]
+pub fn stage_observe(stage: Stage, ns: u64) {
+    STAGE_NS[stage as usize].observe(ns);
+}
+
+/// Zero every counter, gauge and histogram (rings are reset
+/// separately by [`crate::obs::reset`]).
+pub fn reset_all() {
+    for c in [
+        &BYTES_DOWN_WIRE,
+        &BYTES_UP_WIRE,
+        &BYTES_DOWN_PAYLOAD,
+        &BYTES_UP_PAYLOAD,
+        &CRC_FAILURES,
+        &STRAGGLERS_CUT,
+        &CLIENTS_DROPPED,
+        &ROUNDS_COMPLETED,
+        &EVALS_RUN,
+    ] {
+        c.reset();
+    }
+    QUEUE_DEPTH.reset();
+    POOL_WIDTH.reset();
+    for c in FRAMES_SENT.iter().chain(FRAMES_PARSED.iter()) {
+        c.reset();
+    }
+    for c in &CONN_ROUND_TRIPS {
+        c.reset();
+    }
+    for h in &STAGE_NS {
+        h.reset();
+    }
+    FRAME_BYTES.reset();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let c = Counter::new();
+        c.add(3);
+        c.incr();
+        assert_eq!(c.get(), 4);
+        c.reset();
+        assert_eq!(c.get(), 0);
+        let g = Gauge::new();
+        g.set(9);
+        g.set(2);
+        assert_eq!(g.get(), 2);
+        g.set_max(7);
+        g.set_max(4);
+        assert_eq!(g.get(), 7);
+    }
+
+    #[test]
+    fn histogram_buckets_by_log2() {
+        assert_eq!(Histogram::bucket_of(0), 0);
+        assert_eq!(Histogram::bucket_of(1), 1);
+        assert_eq!(Histogram::bucket_of(2), 2);
+        assert_eq!(Histogram::bucket_of(3), 2);
+        assert_eq!(Histogram::bucket_of(4), 3);
+        assert_eq!(Histogram::bucket_of(1023), 10);
+        assert_eq!(Histogram::bucket_of(1024), 11);
+        assert_eq!(Histogram::bucket_of(u64::MAX), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn histogram_mean_and_quantiles() {
+        let h = Histogram::new();
+        for v in [0u64, 1, 1, 6, 6, 6, 6, 6, 100, 1000] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 10);
+        assert_eq!(h.sum(), 1132);
+        assert!((h.mean() - 113.2).abs() < 1e-9);
+        // p50 falls in the [4,8) bucket → upper bound 8.
+        assert_eq!(h.quantile(0.5), 8);
+        // p100 falls in the [512,1024) bucket → upper bound 1024.
+        assert_eq!(h.quantile(1.0), 1024);
+        // Empty histogram.
+        let e = Histogram::new();
+        assert_eq!(e.quantile(0.99), 0);
+        assert_eq!(e.mean(), 0.0);
+        h.reset();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.sum(), 0);
+    }
+}

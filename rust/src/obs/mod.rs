@@ -1,0 +1,113 @@
+//! Observability substrate: spans, counters, histograms and trace
+//! export for the whole federation pipeline.
+//!
+//! The repo's per-round [`RoundRecord`](crate::metrics::RoundRecord)
+//! says *what* a round produced; this layer says *where* the time and
+//! bytes went inside it — per stage, per client, per worker thread,
+//! per TCP connection. The upcoming adaptive bandwidth controller
+//! (ROADMAP) reads its signals from here.
+//!
+//! Three pieces:
+//!
+//! * [`span`] — an RAII span recorder writing fixed-size records into
+//!   **preallocated per-thread ring buffers** (no locks, no heap on
+//!   the warm path). Spans carry monotonic wall-clock timestamps;
+//!   round markers additionally carry the scheduler's *virtual* clock
+//!   so simulated time can be lined up with real time.
+//! * [`metrics`] — atomic counters/gauges and fixed-size log-bucketed
+//!   histograms in a static registry (bytes per direction, frames by
+//!   kind, CRC failures, stragglers cut, queue depth, per-connection
+//!   round-trips, per-stage latency).
+//! * [`export`] — Chrome trace-event JSON (`afd … --trace-out
+//!   trace.json`, loadable in Perfetto / `chrome://tracing`; one track
+//!   per worker thread plus one per TCP connection) and a stats JSON
+//!   dump (`--stats-out`), plus the per-stage breakdown table printed
+//!   next to the experiment summary.
+//!
+//! ## The two load-bearing contracts
+//!
+//! 1. **Bit-identity**: instrumentation only *reads and times* — it
+//!    never draws randomness, reorders work, or touches a byte stream
+//!    — so a traced fixed-seed run produces bit-identical
+//!    `RoundRecord`s and final model hash to an untraced one
+//!    (`rust/tests/obs_conformance.rs` pins this for all three
+//!    scheduler policies).
+//! 2. **Zero-alloc**: ring buffers, counters and histogram buckets are
+//!    preallocated, so a warm client round allocates nothing with
+//!    tracing enabled (`rust/tests/zero_alloc.rs`).
+//!
+//! ## Gating
+//!
+//! Recording is compiled in only with the `trace` cargo feature (on by
+//! default; `--no-default-features` compiles every probe down to a
+//! constant-false branch) and must *also* be enabled at runtime via
+//! [`set_enabled`] (the `--trace-out`/`--stats-out` flags or
+//! `AFD_TRACE=1`). Disabled probes cost one relaxed atomic load.
+//!
+//! See `rust/src/obs/README.md` for the span taxonomy and how to open
+//! a trace in Perfetto.
+
+pub mod export;
+pub mod metrics;
+pub mod span;
+
+pub use span::{
+    mark, register_thread, span, span_ab, span_on_track, SpanGuard, Stage, CONN_TRACK_BASE,
+    STAGE_COUNT,
+};
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Is recording active? Compile-time false without the `trace` feature;
+/// otherwise one relaxed atomic load (the whole cost of a disabled
+/// probe site).
+#[inline(always)]
+pub fn enabled() -> bool {
+    cfg!(feature = "trace") && ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn runtime recording on or off (the `trace` feature must be
+/// compiled in for `on = true` to have any effect).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Honor `AFD_TRACE=1|true|on` (remote `afd client` processes have no
+/// `--trace-out` flag of their own) and pin the wall-clock epoch so
+/// early spans don't race its initialization.
+pub fn init_from_env() {
+    if matches!(
+        std::env::var("AFD_TRACE").as_deref(),
+        Ok("1") | Ok("true") | Ok("on")
+    ) {
+        set_enabled(true);
+    }
+    span::pin_epoch();
+}
+
+/// Clear every ring, counter and histogram (tests and back-to-back
+/// runs in one process). Rings stay allocated.
+pub fn reset() {
+    span::reset_rings();
+    metrics::reset_all();
+}
+
+/// Unit tests that toggle the global enable flag serialize on this
+/// (the lib test binary runs tests in parallel).
+#[cfg(test)]
+pub(crate) static TEST_FLAG_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn flag_toggles_only_with_the_feature() {
+        let _l = super::TEST_FLAG_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        super::set_enabled(false);
+        assert!(!super::enabled());
+        super::set_enabled(true);
+        assert_eq!(super::enabled(), cfg!(feature = "trace"));
+        super::set_enabled(false);
+    }
+}

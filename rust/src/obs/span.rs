@@ -1,0 +1,467 @@
+//! Span recorder: RAII guards writing fixed-size records into
+//! preallocated per-thread ring buffers.
+//!
+//! ## Warm-path cost model
+//!
+//! Recording a span is: one relaxed load (the enable check), one
+//! `Instant::now()` at open and one at close, six relaxed atomic
+//! stores into the thread's ring slot, and a histogram bucket update.
+//! No locks, no allocation — the ring (a fixed
+//! [`RING_CAPACITY`]-slot array of atomics) is allocated once per
+//! thread, on registration ([`register_thread`], called by the worker
+//! pool at spawn) or lazily on the thread's first span. When a ring
+//! wraps, the oldest records are overwritten and counted in
+//! `dropped` — the trace keeps the most recent window, the
+//! [`metrics`](super::metrics) totals keep the full run.
+//!
+//! ## Slot layout
+//!
+//! Each slot is five `AtomicU64`s (`meta` packs the stage tag and the
+//! track override): single-writer (the owning thread), read by the
+//! exporter after the run quiesces. Relaxed atomics keep the slots
+//! safely shareable without a lock; torn *logical* records across the
+//! wrap boundary are impossible for the exporter's post-run snapshot
+//! because `head` is published with `Release` after the slot stores.
+//!
+//! ## Tracks
+//!
+//! A span normally lands on its recording thread's track (one Chrome
+//! trace `tid` per registered thread). A nonzero `track` override
+//! (≥ [`CONN_TRACK_BASE`]) pins it to a synthetic track instead — the
+//! TCP transport uses one per connection, so per-connection
+//! round-trips render as their own rows in Perfetto.
+
+use std::cell::OnceCell;
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Slots per thread ring (~640 KiB of atomics per thread). Power of
+/// two so the wrap modulo is a mask.
+pub const RING_CAPACITY: usize = 16384;
+
+/// Track ids at or above this are synthetic per-connection tracks
+/// (`CONN_TRACK_BASE + conn_index`), not thread tracks.
+pub const CONN_TRACK_BASE: u32 = 1_000_000;
+
+/// Every instrumented pipeline stage. The wire-stable `u8` tag is the
+/// ring-slot encoding; [`Stage::name`] is the Chrome trace event name.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Stage {
+    /// Coordinator slices a client's epoch from the dataset.
+    EpochAssembly = 0,
+    /// Sub-model gather (`PackPlan::pack_into`) or raw uplink pack.
+    Pack = 1,
+    /// Sub-model scatter back onto a full vector (both directions).
+    Unpack = 2,
+    /// Dense downlink codec encode (`raw_f32` / `quant8`).
+    CodecEncode = 3,
+    /// Dense downlink codec decode.
+    CodecDecode = 4,
+    /// One local training epoch on a client.
+    Train = 5,
+    /// DGC momentum scan + top-k + sparse encode (uplink).
+    DgcCompress = 6,
+    /// One round's sharded FedAvg batch (reset + adds + finalize).
+    ShardAggregate = 7,
+    /// Framing a protocol message (header + payload + CRC).
+    FrameEncode = 8,
+    /// Parsing + validating a received frame.
+    FrameParse = 9,
+    /// One client's offer→update exchange through a `Transport`.
+    RoundTrip = 10,
+    /// Instant marker closing a round; `a` = round index, `b` = the
+    /// scheduler's *virtual* clock in ns (simulated seconds × 1e9).
+    RoundMark = 11,
+}
+
+pub const STAGE_COUNT: usize = 12;
+
+impl Stage {
+    pub const ALL: [Stage; STAGE_COUNT] = [
+        Stage::EpochAssembly,
+        Stage::Pack,
+        Stage::Unpack,
+        Stage::CodecEncode,
+        Stage::CodecDecode,
+        Stage::Train,
+        Stage::DgcCompress,
+        Stage::ShardAggregate,
+        Stage::FrameEncode,
+        Stage::FrameParse,
+        Stage::RoundTrip,
+        Stage::RoundMark,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::EpochAssembly => "epoch_assembly",
+            Stage::Pack => "pack",
+            Stage::Unpack => "unpack",
+            Stage::CodecEncode => "codec_encode",
+            Stage::CodecDecode => "codec_decode",
+            Stage::Train => "train",
+            Stage::DgcCompress => "dgc_compress",
+            Stage::ShardAggregate => "shard_aggregate",
+            Stage::FrameEncode => "frame_encode",
+            Stage::FrameParse => "frame_parse",
+            Stage::RoundTrip => "round_trip",
+            Stage::RoundMark => "round",
+        }
+    }
+
+    pub fn from_u8(v: u8) -> Option<Stage> {
+        Stage::ALL.get(v as usize).copied()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Wall clock
+// ---------------------------------------------------------------------
+
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// Pin the trace epoch now (idempotent). `main` calls this early so
+/// timestamps start near zero; otherwise the first span pins it.
+pub fn pin_epoch() {
+    let _ = EPOCH.get_or_init(Instant::now);
+}
+
+#[inline]
+fn now_ns() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+// ---------------------------------------------------------------------
+// Per-thread rings
+// ---------------------------------------------------------------------
+
+struct SpanSlot {
+    /// `(track as u64) << 8 | stage as u64`.
+    meta: AtomicU64,
+    start_ns: AtomicU64,
+    dur_ns: AtomicU64,
+    a: AtomicU64,
+    b: AtomicU64,
+}
+
+impl SpanSlot {
+    const fn new() -> SpanSlot {
+        SpanSlot {
+            meta: AtomicU64::new(0),
+            start_ns: AtomicU64::new(0),
+            dur_ns: AtomicU64::new(0),
+            a: AtomicU64::new(0),
+            b: AtomicU64::new(0),
+        }
+    }
+}
+
+/// One thread's preallocated span ring. Single writer (the owning
+/// thread); the exporter reads it through the shared registry after
+/// the run quiesces.
+pub struct ThreadRing {
+    name: String,
+    tid: u32,
+    slots: Vec<SpanSlot>,
+    /// Total records ever written (wraps the ring at `RING_CAPACITY`).
+    head: AtomicUsize,
+}
+
+impl ThreadRing {
+    #[inline]
+    fn record(&self, stage: Stage, track: u32, start_ns: u64, dur_ns: u64, a: u64, b: u64) {
+        let h = self.head.load(Ordering::Relaxed);
+        let slot = &self.slots[h & (RING_CAPACITY - 1)];
+        slot.meta
+            .store(((track as u64) << 8) | stage as u64, Ordering::Relaxed);
+        slot.start_ns.store(start_ns, Ordering::Relaxed);
+        slot.dur_ns.store(dur_ns, Ordering::Relaxed);
+        slot.a.store(a, Ordering::Relaxed);
+        slot.b.store(b, Ordering::Relaxed);
+        self.head.store(h + 1, Ordering::Release);
+    }
+}
+
+static REGISTRY: Mutex<Vec<Arc<ThreadRing>>> = Mutex::new(Vec::new());
+static NEXT_TID: AtomicU32 = AtomicU32::new(0);
+
+thread_local! {
+    static LOCAL: OnceCell<Arc<ThreadRing>> = const { OnceCell::new() };
+}
+
+fn new_ring() -> Arc<ThreadRing> {
+    let name = std::thread::current()
+        .name()
+        .unwrap_or("unnamed")
+        .to_string();
+    let mut slots = Vec::with_capacity(RING_CAPACITY);
+    for _ in 0..RING_CAPACITY {
+        slots.push(SpanSlot::new());
+    }
+    let ring = Arc::new(ThreadRing {
+        name,
+        tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
+        slots,
+        head: AtomicUsize::new(0),
+    });
+    REGISTRY
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .push(ring.clone());
+    ring
+}
+
+/// Preallocate and register the calling thread's ring. The worker pool
+/// calls this at spawn so even a worker's *first* span is
+/// allocation-free; any unregistered thread self-registers on its
+/// first span instead.
+pub fn register_thread() {
+    LOCAL.with(|c| {
+        let _ = c.get_or_init(new_ring);
+    });
+}
+
+#[inline]
+fn record(stage: Stage, track: u32, start_ns: u64, dur_ns: u64, a: u64, b: u64) {
+    LOCAL.with(|c| {
+        c.get_or_init(new_ring)
+            .record(stage, track, start_ns, dur_ns, a, b)
+    });
+}
+
+// ---------------------------------------------------------------------
+// RAII guards
+// ---------------------------------------------------------------------
+
+/// An open span; records on drop. Unarmed (free) when tracing is off.
+pub struct SpanGuard {
+    stage: Stage,
+    track: u32,
+    a: u64,
+    b: u64,
+    start_ns: u64,
+    armed: bool,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        let dur = now_ns().saturating_sub(self.start_ns);
+        record(self.stage, self.track, self.start_ns, dur, self.a, self.b);
+        super::metrics::stage_observe(self.stage, dur);
+    }
+}
+
+#[inline]
+fn open(stage: Stage, track: u32, a: u64, b: u64) -> SpanGuard {
+    if !super::enabled() {
+        return SpanGuard {
+            stage,
+            track: 0,
+            a: 0,
+            b: 0,
+            start_ns: 0,
+            armed: false,
+        };
+    }
+    SpanGuard {
+        stage,
+        track,
+        a,
+        b,
+        start_ns: now_ns(),
+        armed: true,
+    }
+}
+
+/// Open a span on the calling thread's track.
+#[inline]
+pub fn span(stage: Stage) -> SpanGuard {
+    open(stage, 0, 0, 0)
+}
+
+/// Open a span carrying two stage-specific arguments (by convention
+/// `a` = round, `b` = client, unless the stage says otherwise).
+#[inline]
+pub fn span_ab(stage: Stage, a: u64, b: u64) -> SpanGuard {
+    open(stage, 0, a, b)
+}
+
+/// Open a span pinned to a synthetic track (per-TCP-connection rows;
+/// pass `CONN_TRACK_BASE + conn_index`).
+#[inline]
+pub fn span_on_track(stage: Stage, track: u32, a: u64, b: u64) -> SpanGuard {
+    open(stage, track, a, b)
+}
+
+/// Record an instant event (zero-duration span), e.g. a round marker.
+#[inline]
+pub fn mark(stage: Stage, a: u64, b: u64) {
+    if !super::enabled() {
+        return;
+    }
+    record(stage, 0, now_ns(), 0, a, b);
+}
+
+// ---------------------------------------------------------------------
+// Snapshot (exporter side)
+// ---------------------------------------------------------------------
+
+/// One decoded span record.
+#[derive(Clone, Debug)]
+pub struct SpanRec {
+    pub stage: Stage,
+    /// 0 = the recording thread's track; ≥ [`CONN_TRACK_BASE`] = a
+    /// synthetic per-connection track.
+    pub track: u32,
+    pub start_ns: u64,
+    pub dur_ns: u64,
+    pub a: u64,
+    pub b: u64,
+}
+
+/// One thread's snapshot: its spans in chronological order (oldest
+/// surviving record first) plus how many older records the ring
+/// overwrote.
+pub struct ThreadSpans {
+    pub tid: u32,
+    pub name: String,
+    pub dropped: u64,
+    pub spans: Vec<SpanRec>,
+}
+
+/// Copy every registered ring out. Meant for after the run quiesces
+/// (the engine joins all fan-outs before the exporter runs); a record
+/// being written concurrently could at worst read torn, never unsafe.
+pub fn snapshot() -> Vec<ThreadSpans> {
+    let rings: Vec<Arc<ThreadRing>> = REGISTRY
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .iter()
+        .cloned()
+        .collect();
+    let mut out = Vec::with_capacity(rings.len());
+    for ring in rings {
+        let head = ring.head.load(Ordering::Acquire);
+        let kept = head.min(RING_CAPACITY);
+        let first = head - kept; // oldest surviving record index
+        let mut spans = Vec::with_capacity(kept);
+        for i in first..head {
+            let slot = &ring.slots[i & (RING_CAPACITY - 1)];
+            let meta = slot.meta.load(Ordering::Relaxed);
+            let Some(stage) = Stage::from_u8((meta & 0xff) as u8) else {
+                continue;
+            };
+            spans.push(SpanRec {
+                stage,
+                track: (meta >> 8) as u32,
+                start_ns: slot.start_ns.load(Ordering::Relaxed),
+                dur_ns: slot.dur_ns.load(Ordering::Relaxed),
+                a: slot.a.load(Ordering::Relaxed),
+                b: slot.b.load(Ordering::Relaxed),
+            });
+        }
+        out.push(ThreadSpans {
+            tid: ring.tid,
+            name: ring.name.clone(),
+            dropped: (head - kept) as u64,
+            spans,
+        });
+    }
+    out.sort_by_key(|t| t.tid);
+    out
+}
+
+/// Rewind every ring (slots stay allocated; old records become
+/// unreachable). Tests and back-to-back runs.
+pub fn reset_rings() {
+    for ring in REGISTRY.lock().unwrap_or_else(|e| e.into_inner()).iter() {
+        ring.head.store(0, Ordering::Release);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_tags_roundtrip_and_names_are_unique() {
+        for (i, s) in Stage::ALL.iter().enumerate() {
+            assert_eq!(*s as usize, i);
+            assert_eq!(Stage::from_u8(*s as u8), Some(*s));
+        }
+        assert_eq!(Stage::from_u8(STAGE_COUNT as u8), None);
+        let mut names: Vec<&str> = Stage::ALL.iter().map(|s| s.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), STAGE_COUNT);
+    }
+
+    #[test]
+    #[cfg_attr(not(feature = "trace"), ignore = "needs the trace feature")]
+    fn guard_records_into_this_threads_ring() {
+        let _l = crate::obs::TEST_FLAG_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        crate::obs::set_enabled(true);
+        register_thread();
+        let my_tid = LOCAL.with(|c| c.get_or_init(new_ring).tid);
+        let before = snapshot()
+            .into_iter()
+            .find(|t| t.tid == my_tid)
+            .map(|t| t.spans.len())
+            .unwrap_or(0);
+        {
+            let _g = span_ab(Stage::Train, 3, 9);
+        }
+        mark(Stage::RoundMark, 7, 1_500_000_000);
+        let mine = snapshot().into_iter().find(|t| t.tid == my_tid).unwrap();
+        crate::obs::set_enabled(false);
+        assert_eq!(mine.spans.len(), before + 2);
+        let tr = &mine.spans[before];
+        assert_eq!(tr.stage, Stage::Train);
+        assert_eq!((tr.a, tr.b), (3, 9));
+        let rm = &mine.spans[before + 1];
+        assert_eq!(rm.stage, Stage::RoundMark);
+        assert_eq!(rm.dur_ns, 0);
+        assert!(rm.start_ns >= tr.start_ns);
+    }
+
+    #[test]
+    #[cfg_attr(not(feature = "trace"), ignore = "needs the trace feature")]
+    fn ring_wraps_and_counts_dropped() {
+        let _l = crate::obs::TEST_FLAG_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        crate::obs::set_enabled(true);
+        register_thread();
+        let my_tid = LOCAL.with(|c| c.get_or_init(new_ring).tid);
+        // This test owns its thread's ring outright, so rewinding it
+        // here cannot race another test.
+        LOCAL.with(|c| c.get_or_init(new_ring).head.store(0, Ordering::Release));
+        for i in 0..(RING_CAPACITY + 10) {
+            mark(Stage::Pack, i as u64, 0);
+        }
+        crate::obs::set_enabled(false);
+        let mine = snapshot().into_iter().find(|t| t.tid == my_tid).unwrap();
+        assert_eq!(mine.spans.len(), RING_CAPACITY);
+        assert_eq!(mine.dropped, 10);
+        // Oldest surviving record is the 11th ever written.
+        assert_eq!(mine.spans[0].a, 10);
+        assert_eq!(mine.spans.last().unwrap().a, (RING_CAPACITY + 9) as u64);
+    }
+
+    #[test]
+    fn disabled_guard_is_inert() {
+        let _l = crate::obs::TEST_FLAG_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        crate::obs::set_enabled(false);
+        let g = span(Stage::Train);
+        assert!(!g.armed);
+    }
+}

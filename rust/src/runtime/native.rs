@@ -484,6 +484,11 @@ impl ModelRuntime for NativeMlp {
         data: &EpochData,
         lr: f32,
     ) -> Result<f32> {
+        let _sp = crate::obs::span_ab(
+            crate::obs::Stage::Train,
+            params.len() as u64,
+            self.spec.num_batches as u64,
+        );
         self.train_epoch_with_block(ws, params, masks, data, lr, kernels::DEFAULT_BATCH_BLOCK)
     }
 

@@ -305,12 +305,19 @@ impl Engine {
                 // (returned by `execute_jobs` after the round; same
                 // RNG draw sequence as the allocating `epoch_data`).
                 let mut data = st.take_epoch_buf();
-                ctx.dataset.clients[c].epoch_data_into(
-                    ctx.spec,
-                    &mut st.rng,
-                    epoch_order,
-                    &mut data,
-                );
+                {
+                    let _sp = crate::obs::span_ab(
+                        crate::obs::Stage::EpochAssembly,
+                        round as u64,
+                        c as u64,
+                    );
+                    ctx.dataset.clients[c].epoch_data_into(
+                        ctx.spec,
+                        &mut st.rng,
+                        epoch_order,
+                        &mut data,
+                    );
+                }
                 let dgc = if ctx.cfg.uplink_dgc {
                     let taken = st.take_dgc();
                     backups.push(snapshot_dgc.then(|| taken.clone()));
@@ -552,6 +559,18 @@ impl Engine {
         }
         Self::recycle_outcomes(ctx, results.into_iter().map(|r| r.outcome));
         self.version += 1;
+        if crate::obs::enabled() {
+            use crate::obs::metrics as om;
+            om::STRAGGLERS_CUT.add(cut as u64);
+            om::CLIENTS_DROPPED.add(dropped as u64);
+            om::ROUNDS_COMPLETED.incr();
+            // Round boundary on the virtual clock (`b` = virtual ns).
+            crate::obs::mark(
+                crate::obs::Stage::RoundMark,
+                round as u64,
+                ((ctx.cum_s + summary.round_s) * 1e9) as u64,
+            );
+        }
         Ok(summary)
     }
 
@@ -572,6 +591,9 @@ impl Engine {
         // consistent: its `select`s for round R always precede round
         // R's `report_loss`es.
         self.refill(ctx, round, target)?;
+        if crate::obs::enabled() {
+            crate::obs::metrics::QUEUE_DEPTH.set_max(self.heap.len() as u64);
+        }
 
         // Drain arrivals until the buffer fills (or the sky empties).
         let mut buffer: Vec<InFlight> = Vec::new();
@@ -651,6 +673,16 @@ impl Engine {
             ctx.transport.finish(f.outcome.client, f.round, true)?;
         }
         Self::recycle_outcomes(ctx, buffer.into_iter().map(|f| f.outcome));
+        if crate::obs::enabled() {
+            use crate::obs::metrics as om;
+            om::CLIENTS_DROPPED.add(dropped as u64);
+            om::ROUNDS_COMPLETED.incr();
+            crate::obs::mark(
+                crate::obs::Stage::RoundMark,
+                round as u64,
+                (self.now * 1e9) as u64,
+            );
+        }
         Ok(summary)
     }
 

@@ -111,7 +111,10 @@ pub fn client_execute(
     env.codec.decode_slice_into(model_payload, seed, ws, &mut decoded);
     let mut start = ws.take_uncleared(n);
     start.copy_from_slice(env.base_params);
-    env.plan.unpack_from(&decoded, &mut start);
+    {
+        let _sp = crate::obs::span_ab(crate::obs::Stage::Unpack, round as u64, client as u64);
+        env.plan.unpack_from(&decoded, &mut start);
+    }
     ws.give(decoded);
 
     // ---- Local training (one epoch, in place) ------------------------
@@ -134,6 +137,8 @@ pub fn client_execute(
             st.compress_into(&delta, &mut varint, &mut msg);
             ws.give(delta);
             ws.give_bytes(varint);
+            let enc_sp =
+                crate::obs::span_ab(crate::obs::Stage::FrameEncode, round as u64, client as u64);
             let base = frame::begin_update_up(
                 reply,
                 round,
@@ -144,11 +149,17 @@ pub fn client_execute(
             );
             reply.extend_from_slice(&msg);
             frame::end_frame(reply, base);
+            drop(enc_sp);
             ws.give_bytes(msg);
         }
         None => {
             let mut packed = ws.take_uncleared(env.plan.packed_len());
-            env.plan.pack_into(&model, &mut packed);
+            {
+                let _sp = crate::obs::span_ab(crate::obs::Stage::Pack, round as u64, client as u64);
+                env.plan.pack_into(&model, &mut packed);
+            }
+            let enc_sp =
+                crate::obs::span_ab(crate::obs::Stage::FrameEncode, round as u64, client as u64);
             let base = frame::begin_update_up(
                 reply,
                 round,
@@ -162,6 +173,7 @@ pub fn client_execute(
                 reply.extend_from_slice(&v.to_le_bytes());
             }
             frame::end_frame(reply, base);
+            drop(enc_sp);
             ws.give(packed);
         }
     }

@@ -201,6 +201,12 @@ pub fn end_frame(out: &mut Vec<u8>, base: usize) {
     out[base + 4..base + 8].copy_from_slice(&len);
     let crc = crc32(&out[base..]);
     out.extend_from_slice(&crc.to_le_bytes());
+    if crate::obs::enabled() {
+        // The kind byte sits at header offset 3 (see module docs).
+        let kind = out[base + 3] as usize % crate::obs::metrics::FRAME_KIND_SLOTS;
+        crate::obs::metrics::FRAMES_SENT[kind].incr();
+        crate::obs::metrics::FRAME_BYTES.observe((out.len() - base) as u64);
+    }
 }
 
 /// A decoded frame borrowing its payload from the input buffer.
@@ -249,9 +255,16 @@ pub fn parse_frame(buf: &[u8]) -> Result<(FrameView<'_>, usize), FrameError> {
     let want = crc32(&buf[..HEADER_LEN + len]);
     let got = u32::from_le_bytes(buf[HEADER_LEN + len..total].try_into().unwrap());
     if got != want {
+        if crate::obs::enabled() {
+            crate::obs::metrics::CRC_FAILURES.incr();
+        }
         return Err(FrameError::BadCrc { got, want });
     }
     let payload = &buf[HEADER_LEN..HEADER_LEN + len];
+    if crate::obs::enabled() {
+        crate::obs::metrics::FRAMES_PARSED[kind as usize % crate::obs::metrics::FRAME_KIND_SLOTS]
+            .incr();
+    }
     Ok((FrameView { kind, payload }, total))
 }
 

@@ -39,6 +39,7 @@ impl Transport for Loopback {
     ) -> Result<()> {
         // Parse both frames with full integrity checks — the loopback
         // is a real receiver, not a shortcut around the protocol.
+        let parse_sp = crate::obs::span_ab(crate::obs::Stage::FrameParse, client as u64, 0);
         let (offer_view, used) = frame::parse_frame(offer)
             .with_context(|| format!("loopback: offer frame for client {client}"))?;
         anyhow::ensure!(used == offer.len(), "loopback: trailing bytes after offer frame");
@@ -47,6 +48,7 @@ impl Transport for Loopback {
             .with_context(|| format!("loopback: model frame for client {client}"))?;
         anyhow::ensure!(used == model.len(), "loopback: trailing bytes after model frame");
         let model_msg = frame::parse_model_down(&model_view)?;
+        drop(parse_sp);
 
         anyhow::ensure!(
             offer_msg.client as usize == client && model_msg.client as usize == client,

@@ -171,7 +171,20 @@ impl Transport for TcpTransport {
         _env: &mut ClientEnv<'_>,
         reply: &mut Vec<u8>,
     ) -> Result<()> {
-        let mut stream = self.conn(client).lock().unwrap();
+        let idx = client % self.conns.len();
+        // One span per connection on a synthetic track: Perfetto shows
+        // each TCP connection as its own lane, so serialization of
+        // logical clients sharing a connection is visible at a glance.
+        let _sp = crate::obs::span_on_track(
+            crate::obs::Stage::RoundTrip,
+            crate::obs::CONN_TRACK_BASE + idx as u32,
+            client as u64,
+            idx as u64,
+        );
+        if crate::obs::enabled() {
+            crate::obs::metrics::CONN_ROUND_TRIPS[idx % crate::obs::metrics::CONN_SLOTS].incr();
+        }
+        let mut stream = self.conns[idx].lock().unwrap();
         stream
             .write_all(offer)
             .with_context(|| format!("sending RoundOffer to client {client}"))?;

@@ -3,10 +3,23 @@
 //! `AFD_LOG=debug|info|warn|error` controls verbosity (default info).
 //! The coordinator also appends machine-readable JSON-lines round records
 //! through `JsonlSink` for post-hoc analysis (EXPERIMENTS.md plots).
+//!
+//! Two reliability properties, both pinned by tests:
+//!
+//! * **Timestamps never start at zero.** The epoch is a lazy
+//!   [`OnceLock`]: the first `log()` call pins it if `init_from_env`
+//!   has not run yet, so early messages measure from first use instead
+//!   of printing `0.000s` forever.
+//! * **Lines are never torn.** Every record — human log line or JSONL
+//!   record — is formatted into a buffer first and written through one
+//!   locked writer, so concurrent threads cannot interleave fragments.
+//!   JSONL write *failures* are not silently swallowed either: they
+//!   are counted in an atomic ([`dropped_lines`]) and surfaced in the
+//!   end-of-run observability stats dump.
 
 use std::io::Write;
-use std::sync::atomic::{AtomicU8, Ordering};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicU8, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
 use std::time::Instant;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
@@ -18,7 +31,19 @@ pub enum Level {
 }
 
 static LEVEL: AtomicU8 = AtomicU8::new(1);
-static START: Mutex<Option<Instant>> = Mutex::new(None);
+/// Lazily pinned epoch: first use wins, whether that is
+/// `init_from_env` or an early `log()` call.
+static START: OnceLock<Instant> = OnceLock::new();
+/// Serializes whole log lines across threads (stderr's own lock is
+/// per-`write` call, which is not enough once a line is assembled from
+/// several pieces).
+static LOG_WRITER: Mutex<()> = Mutex::new(());
+/// JSONL records whose write failed (disk full, closed pipe, …).
+static DROPPED_JSONL: AtomicU64 = AtomicU64::new(0);
+
+fn start() -> Instant {
+    *START.get_or_init(Instant::now)
+}
 
 pub fn init_from_env() {
     let lvl = match std::env::var("AFD_LOG").as_deref() {
@@ -28,7 +53,7 @@ pub fn init_from_env() {
         _ => Level::Info,
     };
     set_level(lvl);
-    *START.lock().unwrap() = Some(Instant::now());
+    start();
 }
 
 pub fn set_level(lvl: Level) {
@@ -39,22 +64,30 @@ pub fn enabled(lvl: Level) -> bool {
     lvl as u8 >= LEVEL.load(Ordering::Relaxed)
 }
 
+/// JSONL lines dropped because their write failed (see
+/// [`JsonlSink::write`]). Exposed in the observability stats dump.
+pub fn dropped_lines() -> u64 {
+    DROPPED_JSONL.load(Ordering::Relaxed)
+}
+
 pub fn log(lvl: Level, msg: &str) {
     if !enabled(lvl) {
         return;
     }
-    let t = START
-        .lock()
-        .unwrap()
-        .map(|s| s.elapsed().as_secs_f64())
-        .unwrap_or(0.0);
+    let t = start().elapsed().as_secs_f64();
     let tag = match lvl {
         Level::Debug => "DBG",
         Level::Info => "INF",
         Level::Warn => "WRN",
         Level::Error => "ERR",
     };
-    eprintln!("[{t:9.3}s {tag}] {msg}");
+    let line = format!("[{t:9.3}s {tag}] {msg}\n");
+    // One locked write of the whole line: concurrent loggers cannot
+    // interleave fragments. Poisoning is harmless here (the guard
+    // protects no data), so a panicking logger does not mute the rest
+    // of the process.
+    let _guard = LOG_WRITER.lock().unwrap_or_else(|e| e.into_inner());
+    let _ = std::io::stderr().write_all(line.as_bytes());
 }
 
 #[macro_export]
@@ -89,10 +122,15 @@ impl JsonlSink {
         })
     }
 
+    /// Append one record as a single line. A failed write cannot abort
+    /// an experiment mid-run, but it is not silent either: the drop is
+    /// counted and reported at the end of the run.
     pub fn write(&self, record: &crate::util::json::Json) {
         let line = record.to_string_compact();
-        let mut f = self.file.lock().unwrap();
-        let _ = writeln!(f, "{line}");
+        let mut f = self.file.lock().unwrap_or_else(|e| e.into_inner());
+        if writeln!(f, "{line}").is_err() {
+            DROPPED_JSONL.fetch_add(1, Ordering::Relaxed);
+        }
     }
 }
 
@@ -122,5 +160,17 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         assert_eq!(text.lines().count(), 2);
         assert!(text.contains("\"round\":3"));
+    }
+
+    #[test]
+    fn epoch_pins_lazily_before_init() {
+        // Any `start()` path — here via `log` gating — must yield a
+        // usable epoch without `init_from_env` having run.
+        let t0 = start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(t0.elapsed().as_secs_f64() > 0.0);
+        // The epoch is pinned once: later calls return the same instant
+        // (`init_from_env` goes through the same `start()`).
+        assert_eq!(start(), t0);
     }
 }

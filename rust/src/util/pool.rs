@@ -47,11 +47,16 @@ impl Pool {
                 let rx = Arc::clone(&rx_shared);
                 thread::Builder::new()
                     .name(format!("afd-worker-{i}"))
-                    .spawn(move || loop {
-                        let msg = { rx.lock().unwrap().recv() };
-                        match msg {
-                            Ok(Msg::Run(job)) => job(),
-                            Ok(Msg::Shutdown) | Err(_) => break,
+                    .spawn(move || {
+                        // Pre-register this worker's span ring so the
+                        // first traced job records allocation-free.
+                        crate::obs::register_thread();
+                        loop {
+                            let msg = { rx.lock().unwrap().recv() };
+                            match msg {
+                                Ok(Msg::Run(job)) => job(),
+                                Ok(Msg::Shutdown) | Err(_) => break,
+                            }
                         }
                     })
                     .expect("spawn worker")

@@ -1,0 +1,135 @@
+//! Multi-thread stress for the observability + logging substrate:
+//!
+//! * the JSONL sink never tears a line under contention (satellite:
+//!   every record goes through one locked writer);
+//! * counter and histogram totals equal the sum of per-thread
+//!   contributions (relaxed atomics lose nothing);
+//! * span rings are strictly per-thread: each stress thread's ring
+//!   holds exactly the records that thread wrote.
+
+use std::sync::Arc;
+use std::thread;
+
+use afd::obs::metrics::{Counter, Histogram};
+use afd::util::json::Json;
+
+const THREADS: usize = 8;
+
+#[test]
+fn jsonl_sink_never_tears_lines_under_contention() {
+    const PER_THREAD: usize = 250;
+    let dir = std::env::temp_dir().join("afd_obs_stress");
+    let path = dir.join("stress.jsonl");
+    let sink = Arc::new(afd::util::logging::JsonlSink::create(&path).unwrap());
+
+    let mut handles = Vec::new();
+    for t in 0..THREADS {
+        let sink = Arc::clone(&sink);
+        handles.push(thread::spawn(move || {
+            for i in 0..PER_THREAD {
+                let mut rec = Json::obj();
+                rec.set("thread", Json::Num(t as f64));
+                rec.set("i", Json::Num(i as f64));
+                // Long enough that a non-atomic write would interleave.
+                rec.set("pad", Json::Str("x".repeat(256)));
+                sink.write(&rec);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    drop(sink);
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), THREADS * PER_THREAD, "lines lost or split");
+    let mut per_thread = vec![0usize; THREADS];
+    for (n, line) in lines.iter().enumerate() {
+        let j = afd::util::json::parse(line)
+            .unwrap_or_else(|e| panic!("line {n} torn: {e}\n{line}"));
+        let t = j.get("thread").unwrap().as_f64().unwrap() as usize;
+        assert_eq!(
+            j.get("pad").unwrap().as_str().unwrap().len(),
+            256,
+            "line {n} truncated"
+        );
+        per_thread[t] += 1;
+    }
+    assert!(per_thread.iter().all(|&c| c == PER_THREAD));
+    // Nothing failed to write, so nothing was counted as dropped.
+    assert_eq!(afd::util::logging::dropped_lines(), 0);
+}
+
+#[test]
+fn counter_and_histogram_totals_match_per_thread_sums() {
+    const PER_THREAD: u64 = 10_000;
+    static HITS: Counter = Counter::new();
+    static BYTES: Counter = Counter::new();
+    static SIZES: Histogram = Histogram::new();
+
+    let mut handles = Vec::new();
+    for t in 0..THREADS as u64 {
+        handles.push(thread::spawn(move || {
+            for i in 0..PER_THREAD {
+                HITS.incr();
+                BYTES.add(t + 1);
+                SIZES.observe(i % 1000);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    let n = THREADS as u64;
+    assert_eq!(HITS.get(), n * PER_THREAD);
+    // Thread t adds (t+1) per iteration: Σ(t+1) = n(n+1)/2 per pass.
+    assert_eq!(BYTES.get(), PER_THREAD * n * (n + 1) / 2);
+    assert_eq!(SIZES.count(), n * PER_THREAD);
+    // Σ (i % 1000) over 10_000 iterations = 10 full cycles of 0..999.
+    let cycle: u64 = (0..1000).sum();
+    assert_eq!(SIZES.sum(), n * (PER_THREAD / 1000) * cycle);
+}
+
+#[test]
+#[cfg_attr(not(feature = "trace"), ignore = "needs the trace feature")]
+fn span_rings_stay_per_thread_under_contention() {
+    const PER_THREAD: usize = 1000;
+    afd::obs::set_enabled(true);
+    let mut handles = Vec::new();
+    for t in 0..THREADS {
+        handles.push(
+            thread::Builder::new()
+                .name(format!("obs-stress-{t}"))
+                .spawn(move || {
+                    afd::obs::register_thread();
+                    for i in 0..PER_THREAD {
+                        afd::obs::mark(afd::obs::Stage::Pack, i as u64, t as u64);
+                    }
+                })
+                .unwrap(),
+        );
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    afd::obs::set_enabled(false);
+
+    let snap = afd::obs::span::snapshot();
+    for t in 0..THREADS {
+        let name = format!("obs-stress-{t}");
+        let ring = snap
+            .iter()
+            .find(|r| r.name == name)
+            .unwrap_or_else(|| panic!("no ring registered for {name}"));
+        assert_eq!(ring.dropped, 0);
+        assert_eq!(ring.spans.len(), PER_THREAD, "{name}");
+        // Single-writer rings: this thread's records, in its order.
+        for (i, s) in ring.spans.iter().enumerate() {
+            assert_eq!(s.stage, afd::obs::Stage::Pack);
+            assert_eq!(s.a, i as u64, "{name} record {i}");
+            assert_eq!(s.b, t as u64);
+        }
+    }
+}

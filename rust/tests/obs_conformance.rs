@@ -1,0 +1,104 @@
+//! Observability conformance: tracing must be *invisible* in results.
+//!
+//! The contract (see `rust/src/obs/`): instrumentation only reads and
+//! times — it never draws randomness, reorders work, or touches a byte
+//! stream. So a fixed-seed run with span/metric recording fully live
+//! must produce bit-identical per-round records (every field, compared
+//! through the exact JSONL serialization the CLI writes) and a
+//! bit-identical final global model, for every scheduler policy.
+//!
+//! One test function drives all three policies back-to-back: the
+//! enable flag and the metrics registry are process-global, so the
+//! traced/untraced pairs must not interleave with each other.
+
+use afd::config::{ExperimentConfig, Preset};
+use afd::coordinator::experiment::Experiment;
+use afd::obs::Stage;
+
+/// Run one experiment, returning each round's record exactly as the
+/// CLI would serialize it to JSONL, plus the final model hash.
+fn run_records(cfg: &ExperimentConfig) -> (Vec<String>, u64) {
+    let mut exp = Experiment::build(cfg).unwrap();
+    let mut lines = Vec::with_capacity(cfg.rounds);
+    for round in 1..=cfg.rounds {
+        let rec = exp.step(round).unwrap();
+        lines.push(rec.to_json().to_string_compact());
+    }
+    (lines, afd::util::model_hash(&exp.global))
+}
+
+#[test]
+fn traced_run_is_bit_identical_to_untraced_for_every_policy() {
+    for policy in ["sync", "overselect", "async_buffered"] {
+        let mut cfg = ExperimentConfig::preset(Preset::NativeSmoke);
+        cfg.rounds = 5;
+        cfg.eval_every = 2;
+        cfg.uplink_dgc = true;
+        cfg.sched.policy = policy.into();
+
+        afd::obs::reset();
+        afd::obs::set_enabled(false);
+        let (plain, plain_hash) = run_records(&cfg);
+
+        afd::obs::reset();
+        afd::obs::set_enabled(true);
+        let (traced, traced_hash) = run_records(&cfg);
+        let was_live = afd::obs::enabled();
+        afd::obs::set_enabled(false);
+
+        assert_eq!(plain.len(), traced.len(), "{policy}: round count diverged");
+        for (a, b) in plain.iter().zip(&traced) {
+            assert_eq!(a, b, "{policy}: a round record diverged under tracing");
+        }
+        assert_eq!(
+            plain_hash, traced_hash,
+            "{policy}: final model hash diverged under tracing"
+        );
+
+        // With the trace feature compiled in, the traced run really
+        // recorded every pipeline stage (otherwise the identity claim
+        // above would be vacuous) — and the trace/stats exporters
+        // produce parseable documents from real data.
+        if was_live {
+            for stage in [
+                Stage::EpochAssembly,
+                Stage::Pack,
+                Stage::Unpack,
+                Stage::CodecEncode,
+                Stage::CodecDecode,
+                Stage::Train,
+                Stage::DgcCompress,
+                Stage::ShardAggregate,
+                Stage::FrameEncode,
+                Stage::FrameParse,
+                Stage::RoundTrip,
+            ] {
+                assert!(
+                    afd::obs::metrics::STAGE_NS[stage as usize].count() > 0,
+                    "{policy}: traced run recorded no {} span",
+                    stage.name()
+                );
+            }
+            assert!(
+                afd::obs::metrics::ROUNDS_COMPLETED.get() >= cfg.rounds as u64,
+                "{policy}: rounds_completed counter did not advance"
+            );
+            assert!(afd::obs::metrics::BYTES_DOWN_WIRE.get() > 0, "{policy}");
+            assert!(afd::obs::metrics::BYTES_UP_WIRE.get() > 0, "{policy}");
+
+            let trace = afd::obs::export::chrome_trace_json().to_string_compact();
+            let doc = afd::util::json::parse(&trace).unwrap();
+            let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+            let has = |name: &str| {
+                events
+                    .iter()
+                    .any(|e| e.get("name").and_then(|n| n.as_str()) == Some(name))
+            };
+            for name in ["train", "codec_encode", "frame_parse", "shard_aggregate", "round"] {
+                assert!(has(name), "{policy}: trace export lost {name} events");
+            }
+            let stats = afd::obs::export::stats_json().to_string_pretty();
+            afd::util::json::parse(&stats).unwrap();
+        }
+    }
+}

@@ -43,6 +43,10 @@ static SERIAL: Mutex<()> = Mutex::new(());
 fn frame_encode_parse_allocates_nothing_after_warmup() {
     let _guard = SERIAL.lock().unwrap();
     use afd::transport::frame;
+    // Tracing active: `end_frame`/`parse_frame` now tick frame
+    // counters and byte histograms, which must stay alloc-free too.
+    afd::obs::set_enabled(true);
+    afd::obs::register_thread();
 
     let sm = SubModel::from_keep(vec![(0..64).map(|i| i % 3 != 0).collect()]);
     let payload: Vec<u8> = (0..512).map(|i| i as u8).collect();
@@ -84,6 +88,7 @@ fn frame_encode_parse_allocates_nothing_after_warmup() {
     alloc_count::arm();
     round(&mut offer, &mut model, &mut upd, &mut close);
     let allocs = alloc_count::disarm();
+    afd::obs::set_enabled(false);
     assert_eq!(allocs, 0, "framing a warm round made {allocs} allocations");
 }
 
@@ -154,9 +159,16 @@ fn train_epoch_and_plan_packing_allocate_nothing_after_warmup() {
 /// arena's f32/byte/u32/bool pools or from per-client recycled state,
 /// mirroring exactly what `run_client_round` + the engine's batched
 /// aggregation do per round.
+///
+/// Tracing is **enabled** for the armed pass: the span recorder's
+/// per-thread ring, the stage histograms and the frame counters all
+/// run live, extending the zero-alloc contract to the observability
+/// layer (its ring is preallocated at `register_thread`).
 #[test]
 fn full_client_round_pipeline_allocates_nothing_after_warmup() {
     let _guard = SERIAL.lock().unwrap();
+    afd::obs::set_enabled(true);
+    afd::obs::register_thread();
     // ---- setup (allocates freely) -----------------------------------
     let (d, h, c) = (24usize, 16usize, 6usize);
     let spec = mlp_spec("round", d, h, c, 8, 3, 0.1);
@@ -292,6 +304,7 @@ fn full_client_round_pipeline_allocates_nothing_after_warmup() {
         );
     }
 
+    let train_spans_before = afd::obs::metrics::STAGE_NS[afd::obs::Stage::Train as usize].count();
     alloc_count::arm();
     round(
         &mut ws,
@@ -304,10 +317,22 @@ fn full_client_round_pipeline_allocates_nothing_after_warmup() {
         &mut agg_out,
     );
     let allocs = alloc_count::disarm();
+    let tracing_was_live = afd::obs::enabled();
+    afd::obs::set_enabled(false);
     assert_eq!(
         allocs, 0,
-        "a full warm client round made {allocs} heap allocations"
+        "a full warm client round made {allocs} heap allocations (tracing on)"
     );
+    // With the trace feature compiled in, the armed pass really did
+    // record spans — the zero-alloc result covers live tracing, not a
+    // disabled recorder.
+    if tracing_was_live {
+        let after = afd::obs::metrics::STAGE_NS[afd::obs::Stage::Train as usize].count();
+        assert!(
+            after > train_spans_before,
+            "tracing was enabled but the armed round recorded no train span"
+        );
+    }
 
     // The pipeline still computes something sensible.
     assert!(global.iter().all(|v| v.is_finite()));

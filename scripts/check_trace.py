@@ -1,0 +1,116 @@
+#!/usr/bin/env python3
+"""Validate an `afd --trace-out` Chrome trace-event JSON file.
+
+Checks the shape Perfetto / chrome://tracing require plus the afd
+contract: complete ("X") events carry name/cat/ts/dur/pid/tid, every
+track is named by a thread_name metadata event, the core pipeline
+stages all appear, and the embedded afd_stats dump is present and
+consistent. Stdlib only; exits non-zero with a message on any failure.
+
+Usage: check_trace.py TRACE.json [--require-stage NAME ...]
+"""
+
+import json
+import sys
+
+REQUIRED_STAGES = {
+    "train",
+    "codec_encode",
+    "codec_decode",
+    "frame_encode",
+    "frame_parse",
+    "shard_aggregate",
+}
+
+VALID_PH = {"X", "M", "i"}
+
+
+def fail(msg):
+    print(f"check_trace: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main():
+    args = sys.argv[1:]
+    if not args:
+        fail("usage: check_trace.py TRACE.json [--require-stage NAME ...]")
+    path = args[0]
+    required = set(REQUIRED_STAGES)
+    it = iter(args[1:])
+    for a in it:
+        if a == "--require-stage":
+            required.add(next(it, "") or fail("--require-stage needs a name"))
+        else:
+            fail(f"unknown argument {a!r}")
+
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        fail(f"{path}: {e}")
+
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        fail("traceEvents missing, not a list, or empty")
+
+    named_tracks = set()
+    used_tracks = set()
+    span_names = set()
+    x_events = 0
+    for n, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            fail(f"event {n} is not an object")
+        ph = ev.get("ph")
+        if ph not in VALID_PH:
+            fail(f"event {n}: unexpected ph {ph!r}")
+        if ph == "M":
+            if ev.get("name") == "thread_name":
+                if "tid" not in ev:
+                    fail(f"event {n}: thread_name without tid")
+                if not ev.get("args", {}).get("name"):
+                    fail(f"event {n}: thread_name without args.name")
+                named_tracks.add(ev["tid"])
+            continue
+        if ph == "X":
+            x_events += 1
+            for k in ("name", "cat", "ts", "dur", "pid", "tid"):
+                if k not in ev:
+                    fail(f"event {n}: X event missing {k!r}")
+            if not isinstance(ev["ts"], (int, float)) or ev["ts"] < 0:
+                fail(f"event {n}: bad ts {ev['ts']!r}")
+            if not isinstance(ev["dur"], (int, float)) or ev["dur"] < 0:
+                fail(f"event {n}: bad dur {ev['dur']!r}")
+            span_names.add(ev["name"])
+            used_tracks.add(ev["tid"])
+        elif ph == "i":
+            if "name" not in ev or "ts" not in ev:
+                fail(f"event {n}: instant event missing name/ts")
+            span_names.add(ev["name"])
+
+    if x_events == 0:
+        fail("no complete (ph=X) span events recorded")
+    missing = required - span_names
+    if missing:
+        fail(f"required stages absent from trace: {sorted(missing)}")
+    unnamed = used_tracks - named_tracks
+    if unnamed:
+        fail(f"tracks used by spans but never named: {sorted(unnamed)}")
+
+    stats = doc.get("afd_stats")
+    if not isinstance(stats, dict):
+        fail("afd_stats missing from trace document")
+    for key in ("counters", "frames", "stages", "spans"):
+        if key not in stats:
+            fail(f"afd_stats missing {key!r}")
+    recorded = stats["spans"].get("recorded", 0)
+    if recorded <= 0:
+        fail("afd_stats.spans.recorded is zero in a traced run")
+
+    print(
+        f"check_trace: OK — {x_events} spans over {len(used_tracks)} tracks, "
+        f"{len(span_names)} distinct names, stats embedded"
+    )
+
+
+if __name__ == "__main__":
+    main()
