@@ -10,7 +10,7 @@
 
 use std::sync::Arc;
 
-use afd::aggregation::{AddOp, FedAvg, ShardedFedAvg};
+use afd::aggregation::{AddOp, FedAvg, HierarchicalFedAvg, ShardedFedAvg};
 use afd::bench::Bencher;
 use afd::model::packing::{coordinate_mask, PackPlan};
 use afd::model::submodel::SubModel;
@@ -121,6 +121,42 @@ fn main() {
         sharded_rows.push(row);
     }
 
+    // Hierarchical topology sweep at the same fixed cohort: flat (the
+    // best sharded row above) vs 2-level and 3-level trees. The tree is
+    // a coordinate-space topology knob — bit-identical to flat
+    // (rust/tests/agg_hierarchy.rs) — so these rows measure pure
+    // orchestration overhead/benefit of the extra merge level.
+    let ops: Vec<AddOp> = (0..clients)
+        .map(|_| AddOp::Planned {
+            values: &values,
+            plan: &plan,
+            n_c: 50.0,
+        })
+        .collect();
+    let mut hierarchy_rows = Vec::new();
+    for (levels, fanout) in [(2usize, 4usize), (2, 8), (3, 2), (3, 4)] {
+        let mut tree = HierarchicalFedAvg::new(n, levels, fanout, Arc::clone(&pool));
+        let mut out = Vec::new();
+        let r_tree = b.run(
+            &format!("tree {levels}x{fanout}: aggregate_batch x16 (1 dispatch)"),
+            Some(bytes),
+            || {
+                tree.aggregate_batch(&ops, &base, &mut out);
+                std::hint::black_box(&out);
+            },
+        );
+        let mut row = Json::obj();
+        row.set("levels", Json::Num(levels as f64));
+        row.set("fanout", Json::Num(fanout as f64));
+        row.set("leaves", Json::Num(tree.leaf_count() as f64));
+        row.set("aggregate_batch_ns", Json::Num(r_tree.median_ns));
+        row.set(
+            "vs_best_flat_batched",
+            Json::Num(best_batched / r_tree.median_ns),
+        );
+        hierarchy_rows.push(row);
+    }
+
     let mut doc = Json::obj();
     doc.set("bench", Json::Str("bench_sharded_agg".into()));
     doc.set(
@@ -128,8 +164,10 @@ fn main() {
         Json::Str(
             "Before/after harness: `reference` is the retained single-threaded FedAvg \
              (add_masked x16 + finalize); `sharded` is ShardedFedAvg at each shard \
-             count, mask-based and pack-plan (contiguous-run) adds, same machine, \
-             same run. Regenerate with `cargo bench --bench bench_sharded_agg`."
+             count, mask-based and pack-plan (contiguous-run) adds; `hierarchy` is \
+             HierarchicalFedAvg at each (levels, fanout) tree shape on the same \
+             batched round — same machine, same run. Regenerate with \
+             `cargo bench --bench bench_sharded_agg`."
                 .into(),
         ),
     );
@@ -145,6 +183,7 @@ fn main() {
     reference_j.set("add_masked_finalize_ns", Json::Num(r_ref.median_ns));
     doc.set("reference", reference_j);
     doc.set("sharded", Json::Arr(sharded_rows));
+    doc.set("hierarchy", Json::Arr(hierarchy_rows));
     let mut speedup = Json::obj();
     speedup.set("best_masked", Json::Num(r_ref.median_ns / best_masked));
     speedup.set("best_planned", Json::Num(r_ref.median_ns / best_planned));

@@ -1,0 +1,345 @@
+//! Hierarchical (edge-aggregated) FedAvg: a tree of aggregators
+//! merging partial `(accum, weight)` sums upward, bit-identical to the
+//! flat [`ShardedFedAvg`](super::ShardedFedAvg) at **every** tree
+//! shape.
+//!
+//! ## Why the tree partitions coordinates, not clients
+//!
+//! The obvious hierarchy — each edge aggregator sums *its* clients,
+//! parents add children's partial sums — is **not** bit-identical to
+//! flat aggregation: f64 addition is non-associative, so
+//! `(a + b) + (c + d)` can differ in the last ulp from
+//! `((a + b) + c) + d`, and the result would depend on the tree shape.
+//! That would break the repo's load-bearing conformance ladder
+//! (serial ≡ Sync ≡ sharded ≡ traced).
+//!
+//! Instead, every level of this tree partitions the **coordinate
+//! space**. Edge aggregators (the leaves) are exactly the flat
+//! aggregator's shards: each owns a contiguous coordinate range and
+//! replays *all* client ops over it in caller order. An internal node
+//! owns the union of its children's (disjoint, adjacent) ranges, so
+//! the upward merge is a pure copy of the children's `(accum, weight)`
+//! buffers into the parent's — **zero floating-point arithmetic on the
+//! way up**. Per coordinate, the op sequence is identical to flat
+//! aggregation, hence bit-identical output regardless of depth or
+//! fanout.
+//!
+//! This models the communication pattern of a real edge hierarchy
+//! (bounded-degree merges, partial-sum records flowing upward, the
+//! root finalizing) while keeping determinism. What it deliberately
+//! does *not* model is client-axis partial summation — see the
+//! "Hierarchical merge" section of `aggregation/README.md` for the
+//! full honesty note.
+
+use std::sync::Arc;
+
+use crate::util::pool::LazyPool;
+
+use super::sharded::{stage_ops, AddOp, OpView, Shard, SliceView, SliceViewMut};
+
+/// Hard cap on edge aggregators: `fanout^(levels-1)` grows fast and
+/// leaves below ~16k coordinates are pure overhead (cf.
+/// `ShardingConfig::min_shard_params`).
+const MAX_LEAVES: usize = 1024;
+
+/// A coordinate-partitioned aggregation tree. `levels ≥ 2`: level 0 is
+/// the edge (leaf) level, the last level is the single root. Node `i`
+/// at level `l + 1` absorbs children `[i·fanout, (i+1)·fanout)` of
+/// level `l`.
+pub struct HierarchicalFedAvg {
+    num_params: usize,
+    fanout: usize,
+    /// `tiers[0]` = leaves … `tiers.last()` = `[root]`. Every tier
+    /// partitions `[0, num_params)` into contiguous ranges.
+    tiers: Vec<Vec<Shard>>,
+    op_scratch: Vec<OpView>,
+    pool: Arc<LazyPool>,
+}
+
+impl HierarchicalFedAvg {
+    /// Build a tree of `levels` tiers with the given fanout. The leaf
+    /// count is `fanout^(levels-1)`, clamped to `MAX_LEAVES` and to the
+    /// parameter count; each upper tier has `ceil(below / fanout)`
+    /// nodes, ending in a single root.
+    pub fn new(
+        num_params: usize,
+        levels: usize,
+        fanout: usize,
+        pool: Arc<LazyPool>,
+    ) -> HierarchicalFedAvg {
+        let levels = levels.max(2);
+        let fanout = fanout.max(2);
+        let mut leaves: usize = 1;
+        for _ in 0..levels - 1 {
+            leaves = leaves.saturating_mul(fanout).min(MAX_LEAVES);
+        }
+        let leaves = leaves.min(num_params.max(1));
+        // Leaf tier: the flat aggregator's balanced contiguous split.
+        let mut tiers = vec![(0..leaves)
+            .map(|i| {
+                let start = i * num_params / leaves;
+                let end = (i + 1) * num_params / leaves;
+                Shard::new(start, end - start)
+            })
+            .collect::<Vec<_>>()];
+        // Upper tiers: each node spans its children's union. Built
+        // until a single root remains (clamping can make the tree
+        // shallower than `levels`, never deeper).
+        while tiers.last().unwrap().len() > 1 {
+            let below = tiers.last().unwrap();
+            let tier: Vec<Shard> = below
+                .chunks(fanout)
+                .map(|kids| {
+                    let start = kids[0].start;
+                    let len: usize = kids.iter().map(Shard::len).sum();
+                    Shard::new(start, len)
+                })
+                .collect();
+            tiers.push(tier);
+        }
+        HierarchicalFedAvg {
+            num_params,
+            fanout,
+            tiers,
+            op_scratch: Vec::new(),
+            pool,
+        }
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.num_params
+    }
+
+    /// Tiers in the tree (≥ 1; 1 only for degenerate single-leaf
+    /// trees, where the leaf is the root).
+    pub fn depth(&self) -> usize {
+        self.tiers.len()
+    }
+
+    pub fn leaf_count(&self) -> usize {
+        self.tiers[0].len()
+    }
+
+    fn root(&self) -> &Shard {
+        &self.tiers.last().unwrap()[0]
+    }
+
+    /// One round in a single edge-parallel fan-out plus the upward
+    /// merge: leaves reset and replay `ops` in caller order over their
+    /// own coordinates; each upper tier copies its children's
+    /// `(accum, weight)` partial sums into place; the root finalizes
+    /// into `out` (resized to `num_params`; capacity reused).
+    /// Bit-identical to the flat path — enforced by
+    /// `rust/tests/agg_hierarchy.rs`.
+    pub fn aggregate_batch(&mut self, ops: &[AddOp], base: &[f32], out: &mut Vec<f32>) {
+        let _sp = crate::obs::span_ab(
+            crate::obs::Stage::ShardAggregate,
+            ops.len() as u64,
+            self.tiers[0].len() as u64,
+        );
+        assert_eq!(
+            base.len(),
+            self.num_params,
+            "aggregate_batch: base buffer length != aggregator num_params"
+        );
+        let mut staged = std::mem::take(&mut self.op_scratch);
+        stage_ops(ops, self.num_params, &mut staged);
+        let ops_v = SliceView::new(&staged);
+        // Edge tier: the only tier that sees client updates. Same
+        // pinned-worker fan-out as the flat aggregator.
+        if self.tiers[0].len() == 1 {
+            let leaf = &mut self.tiers[0][0];
+            leaf.reset();
+            // SAFETY: staged views are dereferenced only inside this
+            // call, and `staged` outlives it.
+            unsafe { leaf.replay(ops_v.get()) };
+        } else {
+            let leaves = std::mem::take(&mut self.tiers[0]);
+            // SAFETY: `Pool::map` joins every job before returning, so
+            // the `staged`/caller borrows behind the views outlive
+            // every dereference (the SliceView contract).
+            let leaves = self.pool.get().map(leaves, move |mut s: Shard| {
+                s.reset();
+                unsafe { s.replay(ops_v.get()) };
+                s
+            });
+            self.tiers[0] = leaves;
+        }
+        // Upward merge: tier l+1 absorbs tier l. Pure copies of
+        // disjoint ranges — no FP arithmetic, so tree shape cannot
+        // perturb any sum.
+        for l in 0..self.tiers.len() - 1 {
+            let (below, above) = self.tiers.split_at_mut(l + 1);
+            let below = &below[l];
+            for (i, node) in above[0].iter_mut().enumerate() {
+                for child in below
+                    .iter()
+                    .skip(i * self.fanout)
+                    .take(self.fanout)
+                {
+                    node.merge_child(child);
+                }
+            }
+        }
+        // Root finalize: one pass over the merged accumulators.
+        out.clear();
+        out.resize(self.num_params, 0.0);
+        if self.tiers.len() == 1 {
+            // Degenerate single-leaf tree: the leaf is the root.
+            self.tiers[0][0].finalize_into(base, out);
+        } else if self.tiers[0].len() == 1 {
+            self.root().finalize_into(base, out);
+        } else {
+            // Finalize is per-coordinate too, so it can fan out over
+            // the *leaf* partition of the root's buffers without
+            // changing any arithmetic.
+            let root_v = SliceView::new(std::slice::from_ref(self.root()));
+            let base_v = SliceView::new(base);
+            let out_v = SliceViewMut::new(out);
+            let spans: Vec<(usize, usize)> = self.tiers[0]
+                .iter()
+                .map(|s| (s.start, s.len()))
+                .collect();
+            // SAFETY: views dereferenced only inside this fan-out;
+            // output/finalize ranges are the leaf partition — pairwise
+            // disjoint; the root shard is only read.
+            self.pool.get().map(spans, move |(start, len)| {
+                let root = unsafe { &root_v.get()[0] };
+                let b = unsafe { base_v.get() };
+                let o = unsafe { out_v.range_mut(start, len) };
+                for (j, oj) in o.iter_mut().enumerate() {
+                    let i = start + j; // absolute coordinate
+                    oj_write(root, b, i, oj);
+                }
+            });
+        }
+        self.op_scratch = staged;
+    }
+
+    /// Fraction of coordinates updated in the last batch, computed at
+    /// the root (valid after [`HierarchicalFedAvg::aggregate_batch`]).
+    /// Same count and division as the flat aggregator's coverage.
+    pub fn coverage(&self) -> f64 {
+        self.root().covered() as f64 / self.num_params.max(1) as f64
+    }
+}
+
+/// One coordinate of the root finalize — factored out so the
+/// fanned-out finalize is textually the same arithmetic as
+/// `Shard::finalize_into` (divide when covered, else keep base).
+#[inline]
+fn oj_write(root: &Shard, base: &[f32], i: usize, out: &mut f32) {
+    let k = i - root.start; // root.start is 0, kept for symmetry
+    *out = if root.weight[k] > 0.0 {
+        (root.accum[k] / root.weight[k]) as f32
+    } else {
+        base[i]
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aggregation::ShardedFedAvg;
+
+    fn pool() -> Arc<LazyPool> {
+        Arc::new(LazyPool::new(3))
+    }
+
+    fn ops_for<'a>(
+        vals_a: &'a [f32],
+        vals_b: &'a [f32],
+        mask: &'a [bool],
+    ) -> Vec<AddOp<'a>> {
+        vec![
+            AddOp::Masked {
+                values: vals_a,
+                coord_mask: mask,
+                n_c: 10.0,
+            },
+            AddOp::Full {
+                values: vals_b,
+                n_c: 3.0,
+            },
+            AddOp::Masked {
+                values: vals_b,
+                coord_mask: mask,
+                n_c: 0.5,
+            },
+        ]
+    }
+
+    #[test]
+    fn tree_shape_tiles_and_terminates_at_a_root() {
+        for (n, levels, fanout) in
+            [(1000usize, 2usize, 4usize), (1000, 3, 3), (7, 4, 2), (0, 2, 2), (1, 5, 8)]
+        {
+            let t = HierarchicalFedAvg::new(n, levels, fanout, pool());
+            assert_eq!(t.tiers.last().unwrap().len(), 1, "single root");
+            for tier in &t.tiers {
+                let mut next = 0usize;
+                for s in tier {
+                    assert_eq!(s.start, next, "tiers tile contiguously");
+                    next += s.len();
+                }
+                assert_eq!(next, n, "every tier covers the vector");
+            }
+            assert!(t.leaf_count() <= n.max(1));
+        }
+    }
+
+    #[test]
+    fn every_tree_shape_matches_flat_bitwise() {
+        let n = 777;
+        let vals_a: Vec<f32> = (0..n).map(|i| (i as f32).sin()).collect();
+        let vals_b: Vec<f32> = (0..n).map(|i| (i as f32) * 0.013 - 2.0).collect();
+        let mask: Vec<bool> = (0..n).map(|i| i % 3 != 1).collect();
+        let base: Vec<f32> = (0..n).map(|i| (i as f32).cos()).collect();
+        let ops = ops_for(&vals_a, &vals_b, &mask);
+
+        let mut flat = ShardedFedAvg::new(n, 4, pool());
+        let mut want = Vec::new();
+        flat.aggregate_batch(&ops, &base, &mut want);
+
+        for (levels, fanout) in [(2usize, 2usize), (2, 8), (3, 2), (3, 4), (4, 3), (6, 2)] {
+            let mut tree = HierarchicalFedAvg::new(n, levels, fanout, pool());
+            let mut out = Vec::new();
+            tree.aggregate_batch(&ops, &base, &mut out);
+            assert_eq!(out.len(), want.len());
+            for (i, (a, b)) in out.iter().zip(&want).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "levels={levels} fanout={fanout} coord {i}"
+                );
+            }
+            assert_eq!(
+                tree.coverage().to_bits(),
+                flat.coverage().to_bits(),
+                "levels={levels} fanout={fanout}"
+            );
+            // Replay on the same tree (reused buffers) stays identical.
+            tree.aggregate_batch(&ops, &base, &mut out);
+            for (a, b) in out.iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn empty_batch_returns_base() {
+        let base: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        let mut tree = HierarchicalFedAvg::new(100, 3, 2, pool());
+        let mut out = Vec::new();
+        tree.aggregate_batch(&[], &base, &mut out);
+        assert_eq!(out, base);
+        assert_eq!(tree.coverage(), 0.0);
+    }
+
+    #[test]
+    fn leaf_count_is_capped() {
+        let t = HierarchicalFedAvg::new(2_000_000, 12, 8, pool());
+        assert!(t.leaf_count() <= MAX_LEAVES);
+        assert_eq!(t.tiers.last().unwrap().len(), 1);
+    }
+}

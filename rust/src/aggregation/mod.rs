@@ -7,19 +7,88 @@
 //! in its original shape ... aggregated"); coordinates no selected
 //! client held keep their previous global value.
 //!
-//! Two aggregators coexist (see `README.md` in this directory):
+//! Three aggregators coexist (see `README.md` in this directory):
 //!
 //! * [`FedAvg`] — the original single-threaded pass over the flat
 //!   parameter vector, retained as the bit-exactness **reference** (it
 //!   also still serves `Experiment::step_serial_reference`);
-//! * [`ShardedFedAvg`] — the production path: the vector partitioned
-//!   into contiguous shards, adds and finalize fanned out across the
-//!   worker pool, output bit-identical to [`FedAvg`] for every shard
-//!   count (enforced by `rust/tests/agg_sharding.rs`).
+//! * [`ShardedFedAvg`] — the flat production path: the vector
+//!   partitioned into contiguous shards, adds and finalize fanned out
+//!   across the worker pool, output bit-identical to [`FedAvg`] for
+//!   every shard count (enforced by `rust/tests/agg_sharding.rs`);
+//! * [`HierarchicalFedAvg`] — the tree production path for
+//!   population-scale rounds: edge aggregators merging partial
+//!   `(accum, weight)` sums upward, bit-identical to both of the above
+//!   at every tree shape (enforced by `rust/tests/agg_hierarchy.rs`).
+//!
+//! The engine holds whichever production path the config selects
+//! behind the [`Aggregator`] enum.
 
+pub mod hierarchy;
 pub mod sharded;
 
+pub use hierarchy::HierarchicalFedAvg;
 pub use sharded::{AddOp, ShardedFedAvg, ShardingConfig};
+
+use std::sync::Arc;
+
+use crate::util::pool::LazyPool;
+
+/// The engine's aggregation path: flat sharded (the default) or a
+/// hierarchical tree (`tree_levels ≥ 2` in [`ShardingConfig`]). Both
+/// expose the same batched round entry point and are bit-identical to
+/// each other and to the [`FedAvg`] reference, so the choice is purely
+/// a throughput/topology knob.
+pub enum Aggregator {
+    Flat(ShardedFedAvg),
+    Tree(HierarchicalFedAvg),
+}
+
+impl Aggregator {
+    /// Build the path [`ShardingConfig`] selects: a flat aggregator
+    /// with the resolved shard count, or a tree when `tree_levels ≥ 2`.
+    pub fn from_config(
+        cfg: &ShardingConfig,
+        num_params: usize,
+        pool: Arc<LazyPool>,
+    ) -> Aggregator {
+        if cfg.tree_levels >= 2 {
+            Aggregator::Tree(HierarchicalFedAvg::new(
+                num_params,
+                cfg.tree_levels,
+                cfg.tree_fanout,
+                pool,
+            ))
+        } else {
+            let shards = cfg.resolve(num_params, pool.size());
+            Aggregator::Flat(ShardedFedAvg::new(num_params, shards, pool))
+        }
+    }
+
+    pub fn num_params(&self) -> usize {
+        match self {
+            Aggregator::Flat(a) => a.num_params(),
+            Aggregator::Tree(a) => a.num_params(),
+        }
+    }
+
+    /// One round in one dispatch: reset, every add in `ops` order,
+    /// finalize into `out`. See the variants' own docs.
+    pub fn aggregate_batch(&mut self, ops: &[AddOp], base: &[f32], out: &mut Vec<f32>) {
+        match self {
+            Aggregator::Flat(a) => a.aggregate_batch(ops, base, out),
+            Aggregator::Tree(a) => a.aggregate_batch(ops, base, out),
+        }
+    }
+
+    /// Fraction of coordinates updated in the last batch.
+    pub fn coverage(&self) -> f64 {
+        match self {
+            Aggregator::Flat(a) => a.coverage(),
+            Aggregator::Tree(a) => a.coverage(),
+        }
+    }
+}
 
 /// Accumulates one round of client updates.
 pub struct FedAvg {

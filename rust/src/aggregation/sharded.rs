@@ -50,6 +50,13 @@ pub struct ShardingConfig {
     /// Auto mode: lower bound on coordinates per shard (below this the
     /// fan-out overhead dominates the per-coordinate work).
     pub min_shard_params: usize,
+    /// Aggregation-tree depth: `1` = flat [`ShardedFedAvg`]; `L ≥ 2` =
+    /// a hierarchical tree with `L − 1` merge levels above the edge
+    /// aggregators (see [`super::hierarchy`]).
+    pub tree_levels: usize,
+    /// Children per internal tree node (≥ 2; only meaningful when
+    /// `tree_levels ≥ 2`).
+    pub tree_fanout: usize,
 }
 
 impl Default for ShardingConfig {
@@ -57,6 +64,8 @@ impl Default for ShardingConfig {
         ShardingConfig {
             shard_count: 0,
             min_shard_params: 16_384,
+            tree_levels: 1,
+            tree_fanout: 4,
         }
     }
 }
@@ -85,7 +94,7 @@ impl ShardingConfig {
 /// panics), so the borrow the view was created from strictly outlives
 /// every dereference — the classic scoped-threads argument, done by
 /// hand because the offline `Pool` requires `'static` jobs.
-struct SliceView<T> {
+pub(crate) struct SliceView<T> {
     ptr: *const T,
     len: usize,
 }
@@ -105,7 +114,7 @@ unsafe impl<T: Sync> Send for SliceView<T> {}
 unsafe impl<T: Sync> Sync for SliceView<T> {}
 
 impl<T> SliceView<T> {
-    fn new(s: &[T]) -> SliceView<T> {
+    pub(crate) fn new(s: &[T]) -> SliceView<T> {
         SliceView {
             ptr: s.as_ptr(),
             len: s.len(),
@@ -114,14 +123,14 @@ impl<T> SliceView<T> {
 
     /// SAFETY: callers must uphold the view's soundness contract (only
     /// dereference inside the fan-out the view was built for).
-    unsafe fn get<'a>(self) -> &'a [T] {
+    pub(crate) unsafe fn get<'a>(self) -> &'a [T] {
         std::slice::from_raw_parts(self.ptr, self.len)
     }
 }
 
 /// Lifetime-erased mutable view; each shard materializes only its own
 /// disjoint sub-range, so no two `&mut` slices ever overlap.
-struct SliceViewMut<T> {
+pub(crate) struct SliceViewMut<T> {
     ptr: *mut T,
     len: usize,
 }
@@ -140,7 +149,7 @@ unsafe impl<T: Send> Send for SliceViewMut<T> {}
 unsafe impl<T: Send> Sync for SliceViewMut<T> {}
 
 impl<T> SliceViewMut<T> {
-    fn new(s: &mut [T]) -> SliceViewMut<T> {
+    pub(crate) fn new(s: &mut [T]) -> SliceViewMut<T> {
         SliceViewMut {
             ptr: s.as_mut_ptr(),
             len: s.len(),
@@ -149,7 +158,7 @@ impl<T> SliceViewMut<T> {
 
     /// SAFETY: callers must uphold the view's soundness contract and
     /// must never materialize overlapping ranges across live jobs.
-    unsafe fn range_mut<'a>(self, start: usize, len: usize) -> &'a mut [T] {
+    pub(crate) unsafe fn range_mut<'a>(self, start: usize, len: usize) -> &'a mut [T] {
         debug_assert!(start + len <= self.len);
         std::slice::from_raw_parts_mut(self.ptr.add(start), len)
     }
@@ -159,19 +168,32 @@ impl<T> SliceViewMut<T> {
 /// accumulator/weight slices. All methods read full-length input
 /// buffers and index them by absolute coordinate, writing only the
 /// shard's own state.
-struct Shard {
+///
+/// `pub(crate)` so [`super::hierarchy`] can reuse it as the edge
+/// aggregator / tree-node state: a hierarchy node is exactly a shard
+/// whose `(accum, weight)` pair covers the union of its children's
+/// coordinate ranges.
+pub(crate) struct Shard {
     /// First flat coordinate this shard owns.
-    start: usize,
-    accum: Vec<f64>,
-    weight: Vec<f64>,
+    pub(crate) start: usize,
+    pub(crate) accum: Vec<f64>,
+    pub(crate) weight: Vec<f64>,
 }
 
 impl Shard {
-    fn len(&self) -> usize {
+    pub(crate) fn new(start: usize, len: usize) -> Shard {
+        Shard {
+            start,
+            accum: vec![0.0; len],
+            weight: vec![0.0; len],
+        }
+    }
+
+    pub(crate) fn len(&self) -> usize {
         self.accum.len()
     }
 
-    fn reset(&mut self) {
+    pub(crate) fn reset(&mut self) {
         self.accum.fill(0.0);
         self.weight.fill(0.0);
     }
@@ -213,9 +235,48 @@ impl Shard {
         }
     }
 
+    /// Replay a staged op list over this shard's coordinates in caller
+    /// order — the shared inner loop of the flat and hierarchical
+    /// batched rounds.
+    ///
+    /// SAFETY: every view in `ops` must satisfy the [`SliceView`]
+    /// contract — this is only called from inside the fan-out the
+    /// views were staged for.
+    pub(crate) unsafe fn replay(&mut self, ops: &[OpView]) {
+        for op in ops {
+            match *op {
+                OpView::Masked(values, mask, n_c) => {
+                    let (v, m) = (values.get(), mask.get());
+                    self.add_masked(v, m, n_c);
+                }
+                OpView::Planned(values, runs, n_c) => {
+                    let (v, r) = (values.get(), runs.get());
+                    self.add_runs(v, r, n_c);
+                }
+                OpView::Full(values, n_c) => {
+                    let v = values.get();
+                    self.add_full(v, n_c);
+                }
+            }
+        }
+    }
+
+    /// Absorb a child node's partial sums: a pure copy of the child's
+    /// `(accum, weight)` into this shard's matching sub-range. The
+    /// child's coordinate range must lie inside this shard's. No
+    /// floating-point arithmetic happens here — coordinate ranges in
+    /// the hierarchy are disjoint, so the upward "merge" is
+    /// concatenation, which is what keeps the tree bit-identical to
+    /// flat aggregation (see `aggregation/README.md`).
+    pub(crate) fn merge_child(&mut self, child: &Shard) {
+        let off = child.start - self.start;
+        self.accum[off..off + child.len()].copy_from_slice(&child.accum);
+        self.weight[off..off + child.len()].copy_from_slice(&child.weight);
+    }
+
     /// Write this shard's averaged coordinates into `out` (the shard's
     /// own range of the full output, `out.len() == self.len()`).
-    fn finalize_into(&self, base: &[f32], out: &mut [f32]) {
+    pub(crate) fn finalize_into(&self, base: &[f32], out: &mut [f32]) {
         let s = self.start;
         for i in 0..self.len() {
             out[i] = if self.weight[i] > 0.0 {
@@ -226,7 +287,7 @@ impl Shard {
         }
     }
 
-    fn covered(&self) -> usize {
+    pub(crate) fn covered(&self) -> usize {
         self.weight.iter().filter(|&&w| w > 0.0).count()
     }
 }
@@ -255,10 +316,62 @@ pub enum AddOp<'a> {
 /// Lifetime-erased twin of [`AddOp`], safe to move into the pool's
 /// `'static` jobs under the [`SliceView`] soundness contract.
 #[derive(Clone, Copy)]
-enum OpView {
+pub(crate) enum OpView {
     Masked(SliceView<f32>, SliceView<bool>, f64),
     Planned(SliceView<f32>, SliceView<(u32, u32)>, f64),
     Full(SliceView<f32>, f64),
+}
+
+/// Validate a batch's ops against `num_params` and stage their
+/// lifetime-erased twins into `staged` (cleared first; capacity
+/// reused). Shared by the flat and hierarchical batched rounds so both
+/// enforce identical input contracts.
+pub(crate) fn stage_ops(ops: &[AddOp], num_params: usize, staged: &mut Vec<OpView>) {
+    for op in ops {
+        match op {
+            AddOp::Masked { values, coord_mask, .. } => {
+                assert_eq!(
+                    values.len(),
+                    num_params,
+                    "aggregate_batch: values buffer length != aggregator num_params"
+                );
+                assert_eq!(
+                    coord_mask.len(),
+                    num_params,
+                    "aggregate_batch: coord_mask buffer length != aggregator num_params"
+                );
+            }
+            AddOp::Planned { values, plan, .. } => {
+                assert_eq!(
+                    values.len(),
+                    num_params,
+                    "aggregate_batch: values buffer length != aggregator num_params"
+                );
+                assert_eq!(
+                    plan.num_params(),
+                    num_params,
+                    "aggregate_batch: plan num_params != aggregator num_params"
+                );
+            }
+            AddOp::Full { values, .. } => {
+                assert_eq!(
+                    values.len(),
+                    num_params,
+                    "aggregate_batch: values buffer length != aggregator num_params"
+                );
+            }
+        }
+    }
+    staged.clear();
+    staged.extend(ops.iter().map(|op| match op {
+        AddOp::Masked { values, coord_mask, n_c } => {
+            OpView::Masked(SliceView::new(values), SliceView::new(coord_mask), *n_c)
+        }
+        AddOp::Planned { values, plan, n_c } => {
+            OpView::Planned(SliceView::new(values), SliceView::new(plan.runs()), *n_c)
+        }
+        AddOp::Full { values, n_c } => OpView::Full(SliceView::new(values), *n_c),
+    }));
 }
 
 /// Sharded parallel FedAvg accumulator: the drop-in replacement for
@@ -289,11 +402,7 @@ impl ShardedFedAvg {
             .map(|i| {
                 let start = i * num_params / k;
                 let end = (i + 1) * num_params / k;
-                Shard {
-                    start,
-                    accum: vec![0.0; end - start],
-                    weight: vec![0.0; end - start],
-                }
+                Shard::new(start, end - start)
             })
             .collect();
         ShardedFedAvg {
@@ -456,56 +565,12 @@ impl ShardedFedAvg {
             self.num_params,
             "aggregate_batch: base buffer length != aggregator num_params"
         );
-        for op in ops {
-            match op {
-                AddOp::Masked { values, coord_mask, .. } => {
-                    assert_eq!(
-                        values.len(),
-                        self.num_params,
-                        "aggregate_batch: values buffer length != aggregator num_params"
-                    );
-                    assert_eq!(
-                        coord_mask.len(),
-                        self.num_params,
-                        "aggregate_batch: coord_mask buffer length != aggregator num_params"
-                    );
-                }
-                AddOp::Planned { values, plan, .. } => {
-                    assert_eq!(
-                        values.len(),
-                        self.num_params,
-                        "aggregate_batch: values buffer length != aggregator num_params"
-                    );
-                    assert_eq!(
-                        plan.num_params(),
-                        self.num_params,
-                        "aggregate_batch: plan num_params != aggregator num_params"
-                    );
-                }
-                AddOp::Full { values, .. } => {
-                    assert_eq!(
-                        values.len(),
-                        self.num_params,
-                        "aggregate_batch: values buffer length != aggregator num_params"
-                    );
-                }
-            }
-        }
         // Stage the lifetime-erased op list in a local (its heap
         // buffer is recycled through `op_scratch` across rounds, but
         // the Vec itself is moved out so the fan-out's view never
         // aliases the `&mut self` borrow `for_each_shard` takes).
         let mut staged = std::mem::take(&mut self.op_scratch);
-        staged.clear();
-        staged.extend(ops.iter().map(|op| match op {
-            AddOp::Masked { values, coord_mask, n_c } => {
-                OpView::Masked(SliceView::new(values), SliceView::new(coord_mask), *n_c)
-            }
-            AddOp::Planned { values, plan, n_c } => {
-                OpView::Planned(SliceView::new(values), SliceView::new(plan.runs()), *n_c)
-            }
-            AddOp::Full { values, n_c } => OpView::Full(SliceView::new(values), *n_c),
-        }));
+        stage_ops(ops, self.num_params, &mut staged);
         out.clear();
         out.resize(self.num_params, 0.0);
         let ops_v = SliceView::new(&staged);
@@ -517,23 +582,7 @@ impl ShardedFedAvg {
         // ranges are pairwise disjoint.
         self.for_each_shard(move |s| {
             s.reset();
-            let ops = unsafe { ops_v.get() };
-            for op in ops {
-                match *op {
-                    OpView::Masked(values, mask, n_c) => {
-                        let (v, m) = unsafe { (values.get(), mask.get()) };
-                        s.add_masked(v, m, n_c);
-                    }
-                    OpView::Planned(values, runs, n_c) => {
-                        let (v, r) = unsafe { (values.get(), runs.get()) };
-                        s.add_runs(v, r, n_c);
-                    }
-                    OpView::Full(values, n_c) => {
-                        let v = unsafe { values.get() };
-                        s.add_full(v, n_c);
-                    }
-                }
-            }
+            unsafe { s.replay(ops_v.get()) };
             let b = unsafe { base_v.get() };
             let o = unsafe { out_v.range_mut(s.start, s.len()) };
             s.finalize_into(b, o);

@@ -4,10 +4,30 @@
 //! simulation the coordinator owns it: the client's local dataset
 //! handle, its DGC accumulation buffers (which must persist across the
 //! rounds it participates in) and its private RNG stream.
+//!
+//! At population scale the coordinator no longer keeps a
+//! `Vec<ClientState>` — the [`Population`] type (see `population.rs`
+//! and `README.md` in this directory) derives immutable per-client
+//! parameters purely from `(seed, client_id)` and pages the mutable
+//! state through a bounded [`ResidualStore`].
 
 use crate::compression::dgc::{DgcConfig, DgcState};
+use crate::data::ClientDataset;
 use crate::runtime::{BatchInput, EpochData};
 use crate::util::rng::Pcg64;
+
+pub mod population;
+
+pub use population::{Population, PopulationConfig, ResidualStore};
+
+/// Pure per-client RNG derivation: the client's private stream is a
+/// function of `(seed, id)` alone — any client's generator can be
+/// rebuilt in isolation, in any order, bit-identically. This is the
+/// derivation every path uses (eager fleets, the lazy population, the
+/// TCP remote-client environment), so they all agree by construction.
+pub fn client_rng(seed: u64, id: usize) -> Pcg64 {
+    Pcg64::with_stream(seed ^ 0xc11e, id as u64 + 1)
+}
 
 pub struct ClientState {
     pub id: usize,
@@ -23,9 +43,14 @@ pub struct ClientState {
     /// each dispatch, so a client's epoch assembly allocates nothing
     /// after its first participation.
     pub epoch_buf: EpochData,
+    /// Lazily-derived local dataset (population mode only; `None` when
+    /// the experiment shares one eager [`crate::data::FederatedDataset`]).
+    pub dataset: Option<ClientDataset>,
 }
 
-fn empty_epoch() -> EpochData {
+/// A non-allocating placeholder epoch buffer (`Vec::new` holds no
+/// heap), used for the warm-path take/put exchange.
+pub(crate) fn empty_epoch() -> EpochData {
     EpochData {
         xs: BatchInput::F32(Vec::new()),
         ys: Vec::new(),
@@ -38,15 +63,19 @@ impl ClientState {
             id,
             num_samples,
             dgc: DgcState::new(dgc_cfg),
-            rng: Pcg64::with_stream(seed ^ 0xc11e, id as u64 + 1),
+            rng: client_rng(seed, id),
             participations: 0,
             epoch_buf: empty_epoch(),
+            dataset: None,
         }
     }
 
     /// Move the epoch buffer out for a dispatched round (the job owns
     /// its training data on the worker thread), leaving an empty
-    /// placeholder behind.
+    /// placeholder behind. The placeholder's `Vec::new` buffers hold no
+    /// heap, so the exchange itself never allocates — including when
+    /// the residual store has just rehydrated this client with a
+    /// pooled warm buffer (proved by `tests/zero_alloc.rs`).
     pub fn take_epoch_buf(&mut self) -> EpochData {
         std::mem::replace(&mut self.epoch_buf, empty_epoch())
     }
@@ -69,6 +98,26 @@ impl ClientState {
     /// persist across the rounds a client participates in).
     pub fn put_dgc(&mut self, st: DgcState) {
         self.dgc = st;
+    }
+
+    /// Heap bytes this client's state currently holds (residual-store
+    /// budget accounting).
+    pub fn resident_bytes(&self) -> usize {
+        let epoch = match &self.epoch_buf.xs {
+            BatchInput::F32(v) => v.capacity() * 4,
+            BatchInput::I32(v) => v.capacity() * 4,
+        } + self.epoch_buf.ys.capacity() * 4;
+        let data = self
+            .dataset
+            .as_ref()
+            .map(|d| {
+                (match &d.xs {
+                    crate::data::Samples::F32(v) => v.capacity() * 4,
+                    crate::data::Samples::I32(v) => v.capacity() * 4,
+                }) + d.ys.capacity() * 4
+            })
+            .unwrap_or(0);
+        std::mem::size_of::<ClientState>() + self.dgc.resident_bytes() + epoch + data
     }
 }
 
@@ -104,5 +153,14 @@ mod tests {
         let mut f1 = build_fleet(&[5], &DgcConfig::default(), 3);
         let mut f2 = build_fleet(&[5], &DgcConfig::default(), 3);
         assert_eq!(f1[0].rng.next_u64(), f2[0].rng.next_u64());
+    }
+
+    #[test]
+    fn client_rng_is_the_fleet_derivation() {
+        let mut fleet = build_fleet(&[5, 5, 5], &DgcConfig::default(), 11);
+        for id in 0..3 {
+            let mut derived = client_rng(11, id);
+            assert_eq!(fleet[id].rng.next_u64(), derived.next_u64());
+        }
     }
 }

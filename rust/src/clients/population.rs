@@ -1,0 +1,721 @@
+//! Lazily-materialized client population + bounded residual store.
+//!
+//! The coordinator used to own an eager `Vec<ClientState>` — one heap
+//! struct per client, fatal at cross-device scale. [`Population`]
+//! replaces it with two layers:
+//!
+//! 1. **Pure derivation** — everything immutable about a client is a
+//!    function of `(seed, client_id)` alone: its RNG stream
+//!    ([`super::client_rng`]), its dataset partition
+//!    ([`crate::data::lazy`]), its link parameters
+//!    ([`crate::network::ClientLink::derive`]) and its churn windows
+//!    (the stateless hash in [`crate::network::Availability`]). A
+//!    million-client population costs no per-client memory until a
+//!    client is actually sampled.
+//! 2. **A bounded [`ResidualStore`]** for the mutable remainder (DGC
+//!    residuals, participation counts, the advanced RNG position,
+//!    recycled epoch buffers): an LRU-ordered resident map under a
+//!    configurable byte budget. Cold clients are evicted — their exact
+//!    state (RNG raw words, participations, DGC `u`/`v`) written to a
+//!    spill file — and rehydrated bit-identically when sampled again.
+//!    Reusable heap (epoch buffers, DGC shells, lazy dataset buffers)
+//!    is harvested into small free pools on eviction so the warm
+//!    sample→rehydrate→train→evict cycle stays allocation-free
+//!    (proved by `tests/zero_alloc.rs`).
+//!
+//! ## Spill record format (little-endian, one record per client)
+//!
+//! | bytes     | field                                   |
+//! |-----------|-----------------------------------------|
+//! | 0..16     | RNG state (u128)                        |
+//! | 16..32    | RNG inc (u128)                          |
+//! | 32..40    | participations (u64)                    |
+//! | 40..48    | DGC residual length `L` (u64, f32 count)|
+//! | 48..48+4L | DGC `u` buffer                          |
+//! | ..  +8L   | DGC `v` buffer                          |
+//!
+//! Records live in a temp file (deleted on drop) indexed by client id;
+//! a client's slot is reused in place when its record fits, otherwise
+//! the record is appended. The byte budget applies to **resident**
+//! state and is enforced at round boundaries ([`Population::end_round`])
+//! — within a step the in-flight cohort is materialized, so the
+//! transient peak is cohort-proportional by design.
+//!
+//! ## Store metrics
+//!
+//! `RESIDUAL_STORE_HITS` counts materializations served from retained
+//! state (resident or spill), `RESIDUAL_STORE_MISSES` first-ever
+//! materializations, `RESIDUAL_STORE_EVICTIONS` budget evictions,
+//! `RESIDUAL_STORE_SPILLED_BYTES` bytes written to the spill file, and
+//! `RESIDENT_BYTES_PEAK` the resident high-water mark.
+
+use std::collections::HashMap;
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::compression::dgc::{DgcConfig, DgcState};
+use crate::data::lazy::{self, Centres};
+use crate::data::{ClientDataset, DataConfig, FederatedDataset, Samples};
+use crate::model::manifest::VariantSpec;
+use crate::runtime::EpochData;
+use crate::util::rng::Pcg64;
+
+use super::{client_rng, empty_epoch, ClientState};
+
+/// Experiment-config subtree for the population engine.
+#[derive(Clone, Debug)]
+pub struct PopulationConfig {
+    /// Lazy mode: derive client datasets/links on materialization
+    /// instead of generating the whole fleet up front. Requires the
+    /// native backend's dense-synthetic dataset family.
+    pub lazy: bool,
+    /// Resident-state byte budget for the residual store; `0` keeps
+    /// every touched client resident (no spill file is ever created).
+    pub store_budget_bytes: u64,
+    /// Directory for the spill file; empty ⇒ the system temp dir.
+    pub spill_dir: String,
+}
+
+impl Default for PopulationConfig {
+    fn default() -> Self {
+        PopulationConfig {
+            lazy: false,
+            store_budget_bytes: 0,
+            spill_dir: String::new(),
+        }
+    }
+}
+
+/// Cap on each recycled-shell free pool. Pools exist to keep the warm
+/// eviction/rehydration cycle allocation-free, not to cache the fleet:
+/// anything beyond the cap is genuinely freed, which is what the byte
+/// budget promises.
+const POOL_CAP: usize = 64;
+
+struct Entry {
+    st: ClientState,
+    last_use: u64,
+}
+
+/// Offset + capacity of a client's slot in the spill file.
+struct Slot {
+    offset: u64,
+    cap: u64,
+}
+
+const SPILL_HEADER: usize = 48;
+
+static SPILL_FILE_SEQ: AtomicU64 = AtomicU64::new(0);
+
+struct Spill {
+    file: File,
+    path: PathBuf,
+    slots: HashMap<usize, Slot>,
+    end: u64,
+}
+
+impl Spill {
+    fn create(dir: &PathBuf) -> Spill {
+        let seq = SPILL_FILE_SEQ.fetch_add(1, Ordering::Relaxed);
+        let path = dir.join(format!(
+            "afd-residual-store-{}-{}.spill",
+            std::process::id(),
+            seq
+        ));
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(&path)
+            .unwrap_or_else(|e| panic!("residual store: cannot create spill file {path:?}: {e}"));
+        Spill {
+            file,
+            path,
+            slots: HashMap::new(),
+            end: 0,
+        }
+    }
+}
+
+impl Drop for Spill {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+/// Bounded LRU store for mutable per-client state. See the module doc
+/// for the contract and spill format.
+pub struct ResidualStore {
+    budget: u64,
+    spill_dir: PathBuf,
+    resident: HashMap<usize, Entry>,
+    tick: u64,
+    spill: Option<Spill>,
+    // Recycled-shell pools (capacity carriers, capped at POOL_CAP).
+    epoch_pool: Vec<EpochData>,
+    dgc_pool: Vec<DgcState>,
+    dataset_pool: Vec<ClientDataset>,
+    // Reusable I/O scratch.
+    byte_scratch: Vec<u8>,
+    u_scratch: Vec<f32>,
+    v_scratch: Vec<f32>,
+    lru_scratch: Vec<(u64, usize)>,
+}
+
+impl ResidualStore {
+    pub fn new(cfg: &PopulationConfig) -> ResidualStore {
+        let spill_dir = if cfg.spill_dir.is_empty() {
+            std::env::temp_dir()
+        } else {
+            PathBuf::from(&cfg.spill_dir)
+        };
+        ResidualStore {
+            budget: cfg.store_budget_bytes,
+            spill_dir,
+            resident: HashMap::new(),
+            tick: 0,
+            spill: None,
+            epoch_pool: Vec::new(),
+            dgc_pool: Vec::new(),
+            dataset_pool: Vec::new(),
+            byte_scratch: Vec::new(),
+            u_scratch: Vec::new(),
+            v_scratch: Vec::new(),
+            lru_scratch: Vec::new(),
+        }
+    }
+
+    pub fn budget_bytes(&self) -> u64 {
+        self.budget
+    }
+
+    pub fn resident_len(&self) -> usize {
+        self.resident.len()
+    }
+
+    /// Clients currently paged out to the spill file.
+    pub fn spilled_len(&self) -> usize {
+        self.spill.as_ref().map(|s| s.slots.len()).unwrap_or(0)
+    }
+
+    /// Sum of resident clients' heap bytes (recomputed on demand —
+    /// client state grows in place as DGC buffers size lazily).
+    pub fn resident_bytes(&self) -> u64 {
+        self.resident
+            .values()
+            .map(|e| e.st.resident_bytes() as u64)
+            .sum()
+    }
+
+    fn is_resident(&self, id: usize) -> bool {
+        self.resident.contains_key(&id)
+    }
+
+    fn touch(&mut self, id: usize) -> &mut ClientState {
+        self.tick += 1;
+        let e = self
+            .resident
+            .get_mut(&id)
+            .expect("residual store: touch of non-resident client");
+        e.last_use = self.tick;
+        &mut e.st
+    }
+
+    fn pooled_epoch(&mut self) -> EpochData {
+        self.epoch_pool.pop().unwrap_or_else(empty_epoch)
+    }
+
+    fn pooled_dgc(&mut self, cfg: &DgcConfig) -> DgcState {
+        match self.dgc_pool.pop() {
+            Some(mut shell) => {
+                shell.restore_residuals(&[], &[]);
+                // The pooled shell keeps its buffer capacity but must
+                // carry the caller's config.
+                if shell.config().sparsity != cfg.sparsity
+                    || shell.config().momentum != cfg.momentum
+                    || shell.config().clip_norm != cfg.clip_norm
+                {
+                    return DgcState::new(cfg.clone());
+                }
+                shell
+            }
+            None => DgcState::new(cfg.clone()),
+        }
+    }
+
+    fn pooled_dataset(&mut self) -> ClientDataset {
+        self.dataset_pool.pop().unwrap_or(ClientDataset {
+            xs: Samples::F32(Vec::new()),
+            ys: Vec::new(),
+            per_sample: 0,
+        })
+    }
+
+    /// Admit a freshly-built shell: if a spill record exists the saved
+    /// state is loaded into it (a HIT), otherwise it stays fresh (a
+    /// MISS). The entry becomes resident and most-recently used.
+    fn admit(&mut self, id: usize, mut st: ClientState) {
+        let rehydrated = self.load_spilled(id, &mut st);
+        if crate::obs::enabled() {
+            if rehydrated {
+                crate::obs::metrics::RESIDUAL_STORE_HITS.incr();
+            } else {
+                crate::obs::metrics::RESIDUAL_STORE_MISSES.incr();
+            }
+        }
+        self.tick += 1;
+        self.resident.insert(
+            id,
+            Entry {
+                st,
+                last_use: self.tick,
+            },
+        );
+    }
+
+    /// Read `id`'s spill record into `st`, returning whether one
+    /// existed. Reuses the I/O scratch buffers — allocation-free once
+    /// they are warm.
+    fn load_spilled(&mut self, id: usize, st: &mut ClientState) -> bool {
+        let Some(spill) = &mut self.spill else {
+            return false;
+        };
+        let Some(slot) = spill.slots.get(&id) else {
+            return false;
+        };
+        let buf = &mut self.byte_scratch;
+        buf.clear();
+        buf.resize(SPILL_HEADER, 0);
+        spill
+            .file
+            .seek(SeekFrom::Start(slot.offset))
+            .and_then(|_| spill.file.read_exact(buf))
+            .expect("residual store: spill header read failed");
+        let u128_at = |b: &[u8], o: usize| {
+            u128::from_le_bytes(b[o..o + 16].try_into().unwrap())
+        };
+        let u64_at =
+            |b: &[u8], o: usize| u64::from_le_bytes(b[o..o + 8].try_into().unwrap());
+        let state = u128_at(buf, 0);
+        let inc = u128_at(buf, 16);
+        let participations = u64_at(buf, 32) as usize;
+        let dgc_len = u64_at(buf, 40) as usize;
+        st.rng = Pcg64::from_raw(state, inc);
+        st.participations = participations;
+        buf.clear();
+        buf.resize(dgc_len * 8, 0);
+        spill
+            .file
+            .read_exact(buf)
+            .expect("residual store: spill body read failed");
+        self.u_scratch.clear();
+        self.v_scratch.clear();
+        self.u_scratch.extend(
+            buf[..dgc_len * 4]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap())),
+        );
+        self.v_scratch.extend(
+            buf[dgc_len * 4..]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap())),
+        );
+        st.dgc.restore_residuals(&self.u_scratch, &self.v_scratch);
+        true
+    }
+
+    /// Evict `id`: write its exact mutable state to the spill file,
+    /// harvest its reusable heap into the free pools, and drop it from
+    /// the resident map. Returns the resident bytes released.
+    fn evict(&mut self, id: usize) -> u64 {
+        let Entry { mut st, .. } = self
+            .resident
+            .remove(&id)
+            .expect("residual store: evicting non-resident client");
+        let released = st.resident_bytes() as u64;
+        // Serialize the record.
+        let (u, v) = st.dgc.residuals();
+        let dgc_len = u.len();
+        let (state, inc) = st.rng.to_raw();
+        let buf = &mut self.byte_scratch;
+        buf.clear();
+        buf.extend_from_slice(&state.to_le_bytes());
+        buf.extend_from_slice(&inc.to_le_bytes());
+        buf.extend_from_slice(&(st.participations as u64).to_le_bytes());
+        buf.extend_from_slice(&(dgc_len as u64).to_le_bytes());
+        for &x in u {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        for &x in v {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        let need = buf.len() as u64;
+        let spill = self
+            .spill
+            .get_or_insert_with(|| Spill::create(&self.spill_dir));
+        let offset = match spill.slots.get_mut(&id) {
+            Some(slot) if slot.cap >= need => slot.offset,
+            Some(slot) => {
+                let off = spill.end;
+                spill.end += need;
+                *slot = Slot { offset: off, cap: need };
+                off
+            }
+            None => {
+                let off = spill.end;
+                spill.end += need;
+                spill.slots.insert(id, Slot { offset: off, cap: need });
+                off
+            }
+        };
+        spill
+            .file
+            .seek(SeekFrom::Start(offset))
+            .and_then(|_| spill.file.write_all(buf))
+            .expect("residual store: spill write failed");
+        if crate::obs::enabled() {
+            crate::obs::metrics::RESIDUAL_STORE_EVICTIONS.incr();
+            crate::obs::metrics::RESIDUAL_STORE_SPILLED_BYTES.add(need);
+        }
+        // Harvest capacity carriers into the (capped) pools.
+        if self.epoch_pool.len() < POOL_CAP {
+            self.epoch_pool.push(st.take_epoch_buf());
+        }
+        if let Some(mut ds) = st.dataset.take() {
+            if self.dataset_pool.len() < POOL_CAP {
+                ds.ys.clear();
+                match &mut ds.xs {
+                    Samples::F32(v) => v.clear(),
+                    Samples::I32(v) => v.clear(),
+                }
+                self.dataset_pool.push(ds);
+            }
+        }
+        if self.dgc_pool.len() < POOL_CAP {
+            self.dgc_pool.push(st.take_dgc());
+        }
+        released
+    }
+
+    /// Enforce the byte budget: evict least-recently-used residents
+    /// until the resident set fits. No-op when the budget is 0.
+    fn enforce_budget(&mut self) {
+        let mut total = self.resident_bytes();
+        if crate::obs::enabled() {
+            crate::obs::metrics::RESIDENT_BYTES_PEAK.set_max(total);
+        }
+        if self.budget == 0 || total <= self.budget {
+            return;
+        }
+        let mut lru = std::mem::take(&mut self.lru_scratch);
+        lru.clear();
+        lru.extend(self.resident.iter().map(|(&id, e)| (e.last_use, id)));
+        lru.sort_unstable();
+        for &(_, id) in lru.iter() {
+            if total <= self.budget {
+                break;
+            }
+            total = total.saturating_sub(self.evict(id));
+        }
+        self.lru_scratch = lru;
+    }
+}
+
+/// How client datasets are sourced.
+enum Source {
+    /// One eagerly-generated dataset shared by every materialization
+    /// (the classic small-fleet mode; also what the TCP remote-client
+    /// environment uses).
+    Shared {
+        sizes: Vec<usize>,
+        dataset: Arc<FederatedDataset>,
+    },
+    /// Population mode: datasets derived per client from
+    /// [`crate::data::lazy`]'s pure functions.
+    Lazy {
+        spec: VariantSpec,
+        data_cfg: DataConfig,
+        centres: Centres,
+    },
+}
+
+/// The coordinator's client population: pure `(seed, id)` derivation
+/// for immutable parameters, a bounded [`ResidualStore`] for mutable
+/// state. Drop-in replacement for the old eager `Vec<ClientState>` —
+/// materializing a client yields exactly the state the eager fleet
+/// entry would hold (pinned by `tests/population.rs`).
+pub struct Population {
+    seed: u64,
+    num_clients: usize,
+    dgc_cfg: DgcConfig,
+    source: Source,
+    store: ResidualStore,
+}
+
+impl Population {
+    /// Eager-data population: per-client datasets come from a shared
+    /// [`FederatedDataset`]; the store still pages mutable state under
+    /// the configured budget.
+    pub fn eager(
+        dataset: Arc<FederatedDataset>,
+        dgc_cfg: DgcConfig,
+        seed: u64,
+        pop_cfg: &PopulationConfig,
+    ) -> Population {
+        let sizes: Vec<usize> = dataset.clients.iter().map(|c| c.len()).collect();
+        Population {
+            seed,
+            num_clients: sizes.len(),
+            dgc_cfg,
+            source: Source::Shared { sizes, dataset },
+            store: ResidualStore::new(pop_cfg),
+        }
+    }
+
+    /// Lazy population: nothing per-client exists until sampled.
+    pub fn lazy(
+        spec: VariantSpec,
+        data_cfg: DataConfig,
+        dgc_cfg: DgcConfig,
+        seed: u64,
+        pop_cfg: &PopulationConfig,
+    ) -> Population {
+        let per: usize = spec.input_shape.iter().product();
+        let centres = Centres::build(data_cfg.seed, spec.classes, per);
+        Population {
+            seed,
+            num_clients: data_cfg.num_clients,
+            dgc_cfg,
+            source: Source::Lazy {
+                spec,
+                data_cfg,
+                centres,
+            },
+            store: ResidualStore::new(pop_cfg),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.num_clients
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.num_clients == 0
+    }
+
+    pub fn is_lazy(&self) -> bool {
+        matches!(self.source, Source::Lazy { .. })
+    }
+
+    pub fn store(&self) -> &ResidualStore {
+        &self.store
+    }
+
+    /// Pure: client `c`'s sample count (no materialization).
+    pub fn num_samples(&self, c: usize) -> usize {
+        match &self.source {
+            Source::Shared { sizes, .. } => sizes[c],
+            Source::Lazy { data_cfg, .. } => lazy::client_num_samples(data_cfg, c),
+        }
+    }
+
+    /// Materialize client `c` (resident hit, spill rehydration, or
+    /// fresh derivation) and return its mutable state.
+    pub fn client(&mut self, c: usize) -> &mut ClientState {
+        assert!(c < self.num_clients, "client {c} out of population range");
+        if !self.store.is_resident(c) {
+            let st = self.build_shell(c);
+            self.store.admit(c, st);
+        }
+        self.store.touch(c)
+    }
+
+    /// A fresh shell for client `c`: pure-derived immutable parameters
+    /// plus pooled capacity carriers. Mutable state is the birth state
+    /// — [`ResidualStore::admit`] overwrites it from the spill file
+    /// when a saved record exists.
+    fn build_shell(&mut self, c: usize) -> ClientState {
+        let mut st = ClientState {
+            id: c,
+            num_samples: self.num_samples(c),
+            dgc: self.store.pooled_dgc(&self.dgc_cfg),
+            rng: client_rng(self.seed, c),
+            participations: 0,
+            epoch_buf: self.store.pooled_epoch(),
+            dataset: None,
+        };
+        if let Source::Lazy {
+            spec,
+            data_cfg,
+            centres,
+        } = &self.source
+        {
+            let mut ds = self.store.pooled_dataset();
+            lazy::client_dataset_into(spec, data_cfg, centres, c, &mut ds);
+            st.dataset = Some(ds);
+        }
+        st
+    }
+
+    /// Assemble one epoch for client `c` into recycled buffers, drawing
+    /// from the client's private RNG — identical draw sequence whether
+    /// the data is shared or lazily derived.
+    pub fn assemble_epoch(
+        &mut self,
+        c: usize,
+        spec: &VariantSpec,
+        order: &mut Vec<u32>,
+        out: &mut EpochData,
+    ) {
+        assert!(c < self.num_clients, "client {c} out of population range");
+        if !self.store.is_resident(c) {
+            let st = self.build_shell(c);
+            self.store.admit(c, st);
+        }
+        match &self.source {
+            Source::Shared { dataset, .. } => {
+                let st = self.store.touch(c);
+                dataset.clients[c].epoch_data_into(spec, &mut st.rng, order, out);
+            }
+            Source::Lazy { .. } => {
+                let st = self.store.touch(c);
+                let ClientState { dataset, rng, .. } = st;
+                dataset
+                    .as_ref()
+                    .expect("lazy client materialized without dataset")
+                    .epoch_data_into(spec, rng, order, out);
+            }
+        }
+    }
+
+    /// Allocating epoch assembly (the serial reference path, which
+    /// deliberately mirrors the pre-store coordinator loop).
+    pub fn epoch_data(&mut self, c: usize, spec: &VariantSpec) -> EpochData {
+        let mut order = Vec::new();
+        let mut out = empty_epoch();
+        self.assemble_epoch(c, spec, &mut order, &mut out);
+        out
+    }
+
+    /// Round boundary: enforce the store budget (and record the
+    /// resident high-water mark).
+    pub fn end_round(&mut self) {
+        self.store.enforce_budget();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native::mlp_spec;
+
+    fn data_cfg(seed: u64, n: usize) -> DataConfig {
+        DataConfig {
+            num_clients: n,
+            samples_per_client: (12, 20),
+            iid: false,
+            test_fraction: 0.2,
+            seed,
+        }
+    }
+
+    fn lazy_pop(seed: u64, n: usize, budget: u64) -> Population {
+        let spec = mlp_spec("pop", 16, 8, 4, 4, 2, 0.1);
+        Population::lazy(
+            spec,
+            data_cfg(seed, n),
+            DgcConfig::default(),
+            seed,
+            &PopulationConfig {
+                lazy: true,
+                store_budget_bytes: budget,
+                spill_dir: String::new(),
+            },
+        )
+    }
+
+    #[test]
+    fn materialization_is_pure_per_client() {
+        let mut a = lazy_pop(5, 100, 0);
+        let mut b = lazy_pop(5, 100, 0);
+        // Touch clients in different orders; state must agree.
+        for &c in &[7usize, 99, 0, 7] {
+            let _ = a.client(c);
+        }
+        for &c in &[0usize, 7, 99] {
+            let _ = b.client(c);
+        }
+        for &c in &[0usize, 7, 99] {
+            let (sa, sb) = (a.client(c), b.client(c));
+            assert_eq!(sa.num_samples, sb.num_samples);
+            assert_eq!(sa.rng.to_raw(), sb.rng.to_raw());
+            let (da, db) = (sa.dataset.as_ref().unwrap(), sb.dataset.as_ref().unwrap());
+            assert_eq!(da.ys, db.ys);
+        }
+    }
+
+    #[test]
+    fn budget_evicts_and_rehydrates_bit_identically() {
+        let mut pop = lazy_pop(9, 50, 1); // 1-byte budget: evict everything
+        // Mutate client 3's state: advance RNG, accumulate DGC.
+        let delta: Vec<f32> = (0..64).map(|i| (i as f32).sin()).collect();
+        {
+            let st = pop.client(3);
+            st.participations = 5;
+            for _ in 0..10 {
+                st.rng.next_u64();
+            }
+            let _ = st.dgc.compress(&delta);
+        }
+        let (want_raw, want_u, want_v) = {
+            let st = pop.client(3);
+            let (u, v) = st.dgc.residuals();
+            (st.rng.to_raw(), u.to_vec(), v.to_vec())
+        };
+        pop.end_round();
+        assert_eq!(pop.store().resident_len(), 0, "budget must evict all");
+        assert!(pop.store().spilled_len() >= 1);
+        // Rehydrate: exact state back.
+        let st = pop.client(3);
+        assert_eq!(st.participations, 5);
+        assert_eq!(st.rng.to_raw(), want_raw);
+        let (u, v) = st.dgc.residuals();
+        assert_eq!(u, &want_u[..]);
+        assert_eq!(v, &want_v[..]);
+    }
+
+    #[test]
+    fn unbudgeted_store_never_spills() {
+        let mut pop = lazy_pop(2, 10, 0);
+        for c in 0..10 {
+            let _ = pop.client(c);
+        }
+        pop.end_round();
+        assert_eq!(pop.store().resident_len(), 10);
+        assert_eq!(pop.store().spilled_len(), 0);
+    }
+
+    #[test]
+    fn eager_population_matches_fleet_entries() {
+        use crate::data::lazy::generate_lazy;
+        let spec = mlp_spec("pop", 16, 8, 4, 4, 2, 0.1);
+        let ds = Arc::new(generate_lazy(&spec, &data_cfg(4, 8)));
+        let sizes: Vec<usize> = ds.clients.iter().map(|c| c.len()).collect();
+        let fleet = super::super::build_fleet(&sizes, &DgcConfig::default(), 4);
+        let mut pop = Population::eager(
+            ds,
+            DgcConfig::default(),
+            4,
+            &PopulationConfig::default(),
+        );
+        assert_eq!(pop.len(), 8);
+        for c in 0..8 {
+            assert_eq!(pop.num_samples(c), fleet[c].num_samples);
+            assert_eq!(pop.client(c).rng.to_raw(), fleet[c].rng.to_raw());
+        }
+    }
+}

@@ -94,6 +94,34 @@ impl DgcState {
         &self.cfg
     }
 
+    /// Residual buffers `(u, v)` — momentum and velocity accumulation.
+    /// Both are empty until the first compress. The residual store's
+    /// spill path persists exactly these two vectors (plus the RNG and
+    /// participation count); the scratch buffers carry no round state.
+    pub fn residuals(&self) -> (&[f32], &[f32]) {
+        (&self.u, &self.v)
+    }
+
+    /// Restore residual buffers from a spill record, reusing existing
+    /// capacity (no allocation when the shell previously held buffers
+    /// of at least this length). `u` and `v` must be the same length.
+    pub fn restore_residuals(&mut self, u: &[f32], v: &[f32]) {
+        assert_eq!(u.len(), v.len(), "restore_residuals: u/v length mismatch");
+        self.u.clear();
+        self.u.extend_from_slice(u);
+        self.v.clear();
+        self.v.extend_from_slice(v);
+    }
+
+    /// Heap bytes currently held by this state (residuals + scratch
+    /// capacity) — the residual store's budget accounting.
+    pub fn resident_bytes(&self) -> usize {
+        self.u.capacity() * 4
+            + self.v.capacity() * 4
+            + self.idx_scratch.capacity() * 4
+            + self.val_scratch.capacity() * 4
+    }
+
     /// Residual mass currently held back (diagnostics).
     pub fn residual_l2(&self) -> f32 {
         crate::tensor::l2_norm(&self.v)
@@ -118,8 +146,13 @@ impl DgcState {
             return;
         }
         if self.u.len() != n {
-            self.u = vec![0.0; n];
-            self.v = vec![0.0; n];
+            // Resize-in-place keeps capacity when a pooled shell is
+            // reused for the same model size (the residual store's
+            // zero-alloc rehydration path).
+            self.u.clear();
+            self.u.resize(n, 0.0);
+            self.v.clear();
+            self.v.resize(n, 0.0);
         }
 
         // (3) gradient clipping on the incoming delta.
@@ -347,6 +380,22 @@ mod tests {
         }
         assert_eq!(a.v, b.v);
         assert_eq!(a.u, b.u);
+    }
+
+    #[test]
+    fn residual_export_restore_roundtrips_exactly() {
+        let mut st = DgcState::new(DgcConfig::default());
+        let _ = st.compress(&gauss(300, 21));
+        let (u, v) = st.residuals();
+        let (u, v) = (u.to_vec(), v.to_vec());
+        let mut shell = DgcState::new(DgcConfig::default());
+        let _ = shell.compress(&gauss(300, 22)); // warm the shell's buffers
+        shell.restore_residuals(&u, &v);
+        // The restored state continues bit-identically to the original.
+        let d = gauss(300, 23);
+        assert_eq!(st.compress(&d), shell.compress(&d));
+        assert_eq!(st.u, shell.u);
+        assert_eq!(st.v, shell.v);
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //! provenance.
 
 use crate::aggregation::ShardingConfig;
+use crate::clients::PopulationConfig;
 use crate::compression::dgc::DgcConfig;
 use crate::data::DataConfig;
 use crate::network::LinkConfig;
@@ -47,8 +48,12 @@ pub struct ExperimentConfig {
     /// availability churn (see [`crate::sched`]).
     pub sched: SchedConfig,
     /// Server-side aggregation sharding: shard count = auto (0, sized
-    /// to the worker pool) or explicit (see [`crate::aggregation`]).
+    /// to the worker pool) or explicit, plus the aggregation-tree
+    /// shape (see [`crate::aggregation`]).
     pub sharding: ShardingConfig,
+    /// Client-population engine: lazy `(seed, id)` materialization and
+    /// the residual-store byte budget (see [`crate::clients`]).
+    pub population: PopulationConfig,
     pub seed: u64,
     /// Evaluate the global model every k rounds (simulation-side only —
     /// evaluation costs no simulated network time).
@@ -80,6 +85,7 @@ impl Default for ExperimentConfig {
             link: LinkConfig::default(),
             sched: SchedConfig::default(),
             sharding: ShardingConfig::default(),
+            population: PopulationConfig::default(),
             seed: 0,
             eval_every: 5,
             eval_batch_limit: Some(12),
@@ -108,6 +114,10 @@ pub enum Preset {
     NativeSmokeOverselect,
     /// NativeSmoke driven by FedBuff-style buffered async aggregation.
     NativeSmokeAsync,
+    /// Cross-device population smoke: a lazily-materialized 100k-client
+    /// population with a 256-client cohort, a bounded residual store and
+    /// 2-level hierarchical aggregation.
+    NativePopulation,
 }
 
 impl ExperimentConfig {
@@ -168,6 +178,16 @@ impl ExperimentConfig {
                 c = ExperimentConfig::preset(Preset::NativeSmoke);
                 c.sched.policy = "async_buffered".into();
             }
+            Preset::NativePopulation => {
+                c = ExperimentConfig::preset(Preset::NativeSmoke);
+                c.rounds = 6;
+                c.num_clients = 100_000;
+                c.client_fraction = 256.0 / 100_000.0;
+                c.population.lazy = true;
+                c.population.store_budget_bytes = 8 << 20;
+                c.sharding.tree_levels = 2;
+                c.eval_every = 3;
+            }
         }
         c
     }
@@ -183,6 +203,7 @@ impl ExperimentConfig {
             "native" => Preset::NativeSmoke,
             "native_overselect" => Preset::NativeSmokeOverselect,
             "native_async" => Preset::NativeSmokeAsync,
+            "native_population" => Preset::NativePopulation,
             other => anyhow::bail!("unknown preset {other:?}"),
         };
         Ok(ExperimentConfig::preset(p))
@@ -308,6 +329,23 @@ impl ExperimentConfig {
         j.set(
             "sharding_min_shard_params",
             Json::Num(self.sharding.min_shard_params as f64),
+        );
+        j.set(
+            "sharding_tree_levels",
+            Json::Num(self.sharding.tree_levels as f64),
+        );
+        j.set(
+            "sharding_tree_fanout",
+            Json::Num(self.sharding.tree_fanout as f64),
+        );
+        j.set("population_lazy", Json::Bool(self.population.lazy));
+        j.set(
+            "population_store_budget_bytes",
+            Json::Num(self.population.store_budget_bytes as f64),
+        );
+        j.set(
+            "population_spill_dir",
+            Json::Str(self.population.spill_dir.clone()),
         );
         j.set("churn_enabled", Json::Bool(self.sched.churn.enabled));
         j.set(
@@ -442,6 +480,24 @@ impl ExperimentConfig {
         }
         if let Some(v) = j.get("sharding_min_shard_params").and_then(|v| v.as_usize()) {
             self.sharding.min_shard_params = v;
+        }
+        if let Some(v) = j.get("sharding_tree_levels").and_then(|v| v.as_usize()) {
+            self.sharding.tree_levels = v;
+        }
+        if let Some(v) = j.get("sharding_tree_fanout").and_then(|v| v.as_usize()) {
+            self.sharding.tree_fanout = v;
+        }
+        if let Some(v) = j.get("population_lazy").and_then(|v| v.as_bool()) {
+            self.population.lazy = v;
+        }
+        if let Some(v) = j
+            .get("population_store_budget_bytes")
+            .and_then(|v| v.as_f64())
+        {
+            self.population.store_budget_bytes = v as u64;
+        }
+        if let Some(v) = j.get("population_spill_dir").and_then(|v| v.as_str()) {
+            self.population.spill_dir = v.to_string();
         }
         if let Some(v) = j.get("churn_enabled").and_then(|v| v.as_bool()) {
             self.sched.churn.enabled = v;
@@ -601,6 +657,41 @@ mod tests {
         let mut c = ExperimentConfig::default();
         c.apply_json(&partial).unwrap();
         assert_eq!(c.sharding.shard_count, 0);
+    }
+
+    #[test]
+    fn population_and_tree_json_roundtrip() {
+        let mut src = ExperimentConfig::default();
+        assert!(!src.population.lazy, "default is the eager fleet");
+        assert_eq!(src.sharding.tree_levels, 1, "default is flat aggregation");
+        src.population.lazy = true;
+        src.population.store_budget_bytes = 1 << 20;
+        src.population.spill_dir = "/tmp/afd-spill".into();
+        src.sharding.tree_levels = 3;
+        src.sharding.tree_fanout = 8;
+        let j = src.to_json();
+        let mut dst = ExperimentConfig::default();
+        dst.apply_json(&j).unwrap();
+        assert!(dst.population.lazy);
+        assert_eq!(dst.population.store_budget_bytes, 1 << 20);
+        assert_eq!(dst.population.spill_dir, "/tmp/afd-spill");
+        assert_eq!(dst.sharding.tree_levels, 3);
+        assert_eq!(dst.sharding.tree_fanout, 8);
+
+        // Partial configs leave the subtree untouched.
+        let partial = crate::util::json::parse(r#"{"rounds": 3}"#).unwrap();
+        let mut c = ExperimentConfig::default();
+        c.apply_json(&partial).unwrap();
+        assert!(!c.population.lazy);
+        assert_eq!(c.sharding.tree_levels, 1);
+
+        // The population preset wires the whole engine together.
+        let p = ExperimentConfig::preset_by_name("native_population").unwrap();
+        assert!(p.population.lazy);
+        assert_eq!(p.num_clients, 100_000);
+        assert_eq!(p.cohort_size(), 256);
+        assert!(p.population.store_budget_bytes > 0);
+        assert_eq!(p.sharding.tree_levels, 2);
     }
 
     #[test]

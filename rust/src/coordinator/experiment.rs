@@ -13,12 +13,12 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use crate::aggregation::{FedAvg, ShardedFedAvg};
-use crate::clients::{build_fleet, ClientState};
+use crate::aggregation::{Aggregator, FedAvg};
+use crate::clients::Population;
 use crate::compression::{make_dense_codec, DenseCodec};
 use crate::config::{Backend, ExperimentConfig};
 use crate::coordinator::{aggregate_round, feed_strategy, run_client_round};
-use crate::data::{self, FederatedDataset};
+use crate::data::{self, lazy, FederatedDataset};
 use crate::dropout::{make_strategy, SubmodelStrategy};
 use crate::metrics::{ExperimentReport, RoundRecord};
 use crate::model::manifest::{Manifest, VariantSpec};
@@ -37,14 +37,22 @@ pub struct Experiment {
     pub cfg: ExperimentConfig,
     pub spec: VariantSpec,
     runtime: RuntimeHost,
-    dataset: FederatedDataset,
+    /// Eval-side dataset handle. In eager mode the `Arc` is shared
+    /// with the population's dataset source; in lazy-population mode
+    /// `clients` is empty (per-client data is derived on demand) and
+    /// only the derived pooled test set is held.
+    dataset: Arc<FederatedDataset>,
     strategy: Box<dyn SubmodelStrategy>,
     downlink: Arc<dyn DenseCodec>,
-    fleet: Vec<ClientState>,
+    /// The client population: pure `(seed, id)` derivation for
+    /// immutable parameters, a bounded residual store for mutable
+    /// state. Replaces the eager `Vec<ClientState>` fleet.
+    fleet: Population,
     net: NetworkSim,
-    /// Sharded parallel aggregator driven by the engine path (shard
-    /// count resolved from `cfg.sharding` against the pool width).
-    agg: ShardedFedAvg,
+    /// The engine's aggregation path: flat sharded or a hierarchical
+    /// tree, per `cfg.sharding` (both bit-identical to the `FedAvg`
+    /// reference).
+    agg: Aggregator,
     /// Retained single-threaded reference aggregator, built lazily the
     /// first time [`Experiment::step_serial_reference`] runs (test /
     /// debug path only — production rounds never pay for it).
@@ -117,17 +125,53 @@ impl Experiment {
         let mut data_cfg = cfg.data.clone();
         data_cfg.num_clients = cfg.num_clients;
         data_cfg.seed = cfg.seed;
-        let dataset = data::generate(&spec, &data_cfg);
-        anyhow::ensure!(
-            dataset.num_clients() == cfg.num_clients,
-            "dataset generator returned wrong client count"
-        );
+        let (dataset, fleet, net) = if cfg.population.lazy {
+            // Lazy populations derive everything from `(seed, id)` at
+            // sampling time, which only the synthetic generator and the
+            // pure native runtime support.
+            anyhow::ensure!(
+                matches!(cfg.backend, Backend::Native) && spec.dataset == "synthetic",
+                "population.lazy requires the native backend with the \
+                 synthetic dataset (got backend {:?}, dataset {:?})",
+                cfg.backend,
+                spec.dataset
+            );
+            let per: usize = spec.input_shape.iter().product();
+            let centres = lazy::Centres::build(data_cfg.seed, spec.classes, per);
+            // Eval-only dataset shell: no per-client shards are ever
+            // materialized here, just the pooled test set (identical to
+            // the eager generator's — same derivation streams).
+            let dataset = Arc::new(FederatedDataset {
+                clients: Vec::new(),
+                test: lazy::test_dataset(&spec, &data_cfg, &centres),
+            });
+            let fleet = Population::lazy(
+                spec.clone(),
+                data_cfg.clone(),
+                cfg.dgc.clone(),
+                cfg.seed,
+                &cfg.population,
+            );
+            let net = NetworkSim::lazy(cfg.link.clone(), cfg.seed);
+            (dataset, fleet, net)
+        } else {
+            let dataset = Arc::new(data::generate(&spec, &data_cfg));
+            anyhow::ensure!(
+                dataset.num_clients() == cfg.num_clients,
+                "dataset generator returned wrong client count"
+            );
+            let fleet = Population::eager(
+                Arc::clone(&dataset),
+                cfg.dgc.clone(),
+                cfg.seed,
+                &cfg.population,
+            );
+            let net = NetworkSim::new(cfg.link.clone(), cfg.num_clients, cfg.seed);
+            (dataset, fleet, net)
+        };
 
         let strategy = make_strategy(&cfg.dropout, &spec, cfg.num_clients, cfg.fdr)?;
         let downlink: Arc<dyn DenseCodec> = Arc::from(make_dense_codec(&cfg.downlink)?);
-        let sizes: Vec<usize> = dataset.clients.iter().map(|c| c.len()).collect();
-        let fleet = build_fleet(&sizes, &cfg.dgc, cfg.seed);
-        let net = NetworkSim::new(cfg.link.clone(), cfg.num_clients, cfg.seed);
         // One worker pool serves both parallel local training (engine)
         // and sharded aggregation — they never overlap in time. Lazy:
         // its threads spawn on the first fan-out, so serial-only runs
@@ -137,8 +181,7 @@ impl Experiment {
         if crate::obs::enabled() {
             crate::obs::metrics::POOL_WIDTH.set(pool.size() as u64);
         }
-        let shard_count = cfg.sharding.resolve(spec.num_params, pool.size());
-        let agg = ShardedFedAvg::new(spec.num_params, shard_count, Arc::clone(&pool));
+        let agg = Aggregator::from_config(&cfg.sharding, spec.num_params, Arc::clone(&pool));
         let lr = cfg.lr_override.unwrap_or(spec.lr);
         let policy = make_policy(&cfg.sched, cfg.cohort_size(), cfg.num_clients)?;
         let engine = Engine::new(
@@ -170,6 +213,12 @@ impl Experiment {
         })
     }
 
+    /// Read-only view of the client population (integration tests and
+    /// tools inspect the residual store through it).
+    pub fn population(&self) -> &Population {
+        &self.fleet
+    }
+
     /// Execute one federated round through the scheduler; returns the
     /// round's record.
     pub fn step(&mut self, round: usize) -> Result<RoundRecord> {
@@ -179,7 +228,6 @@ impl Experiment {
             runtime: &self.runtime,
             strategy: self.strategy.as_mut(),
             downlink: &self.downlink,
-            dataset: &self.dataset,
             fleet: &mut self.fleet,
             net: &self.net,
             agg: &mut self.agg,
@@ -210,14 +258,14 @@ impl Experiment {
         for &c in &cohort {
             let sm = self.strategy.select(round, c, &mut self.rng);
             let plan = self.plans.get(&self.spec, &sm);
-            let num_samples = self.fleet[c].num_samples;
-            let data = {
-                let st = &mut self.fleet[c];
-                st.participations += 1;
-                self.dataset.clients[c].epoch_data(&self.spec, &mut st.rng)
-            };
+            let num_samples = self.fleet.num_samples(c);
+            // Same per-client call order as the engine: bump
+            // participations, then draw the epoch from the client's
+            // own RNG stream.
+            self.fleet.client(c).participations += 1;
+            let data = self.fleet.epoch_data(c, &self.spec);
             let dgc_state = if self.cfg.uplink_dgc {
-                Some(&mut self.fleet[c].dgc)
+                Some(&mut self.fleet.client(c).dgc)
             } else {
                 None
             };
@@ -244,7 +292,9 @@ impl Experiment {
             outcomes.push(outcome);
         }
 
-        let sizes: Vec<usize> = self.fleet.iter().map(|c| c.num_samples).collect();
+        let sizes: Vec<usize> = (0..self.cfg.num_clients)
+            .map(|c| self.fleet.num_samples(c))
+            .collect();
         let num_params = self.spec.num_params;
         let agg_ref = self.agg_ref.get_or_insert_with(|| FedAvg::new(num_params));
         let (new_global, timing) =
@@ -256,6 +306,9 @@ impl Experiment {
         for o in &outcomes {
             self.transport.finish(o.client, round as u32, true)?;
         }
+        // Same round boundary as the engine path: enforce the residual
+        // store's byte budget (no-op for unbudgeted populations).
+        self.fleet.end_round();
 
         self.cum_s += timing.round_s;
         let count = outcomes.len().max(1) as f64;
@@ -485,6 +538,82 @@ mod tests {
                 r.records.iter().all(|rec| rec.arrived > 0),
                 "{} must aggregate someone every round",
                 cfg.sched.policy
+            );
+        }
+    }
+
+    /// The tentpole contract: a lazily-materialized population (pure
+    /// `(seed, id)` derivation + residual store) reproduces the eager
+    /// fleet bit-for-bit through whole runs, with and without a byte
+    /// budget forcing evictions mid-run.
+    #[test]
+    fn lazy_population_matches_eager_bitwise() {
+        let mut eager = ExperimentConfig::preset(Preset::NativeSmoke);
+        eager.rounds = 6;
+        eager.eval_every = 3;
+        eager.uplink_dgc = true;
+        let mut lazy_cfg = eager.clone();
+        lazy_cfg.population.lazy = true;
+        let mut budgeted = lazy_cfg.clone();
+        budgeted.population.store_budget_bytes = 16 << 10; // forces spills
+        let a = run_experiment(&eager).unwrap();
+        for cfg in [&lazy_cfg, &budgeted] {
+            let b = run_experiment(cfg).unwrap();
+            for (x, y) in a.records.iter().zip(&b.records) {
+                assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits());
+                assert_eq!(
+                    x.eval_acc.map(f64::to_bits),
+                    y.eval_acc.map(f64::to_bits)
+                );
+                assert_eq!(x.down_bytes, y.down_bytes);
+                assert_eq!(x.round_s.to_bits(), y.round_s.to_bits());
+            }
+        }
+    }
+
+    /// Hierarchical aggregation is a pure topology knob: tree rounds
+    /// must match flat rounds bit-for-bit through a whole run.
+    #[test]
+    fn tree_aggregation_matches_flat_bitwise() {
+        let mut flat = ExperimentConfig::preset(Preset::NativeSmoke);
+        flat.rounds = 5;
+        flat.eval_every = 2;
+        let a = run_experiment(&flat).unwrap();
+        for (levels, fanout) in [(2, 4), (3, 2)] {
+            let mut tree = flat.clone();
+            tree.sharding.tree_levels = levels;
+            tree.sharding.tree_fanout = fanout;
+            let b = run_experiment(&tree).unwrap();
+            for (x, y) in a.records.iter().zip(&b.records) {
+                assert_eq!(
+                    x.train_loss.to_bits(),
+                    y.train_loss.to_bits(),
+                    "levels={levels} fanout={fanout}"
+                );
+                assert_eq!(x.eval_acc.map(f64::to_bits), y.eval_acc.map(f64::to_bits));
+            }
+        }
+    }
+
+    /// The shipped population preset must run end-to-end: 100k-client
+    /// lazy population, 256-client cohorts, tree aggregation, bounded
+    /// residual store.
+    #[test]
+    fn native_population_preset_runs_bounded() {
+        let mut cfg = ExperimentConfig::preset(Preset::NativePopulation);
+        cfg.rounds = 2;
+        cfg.eval_every = 2;
+        let mut exp = Experiment::build(&cfg).unwrap();
+        assert!(exp.fleet.is_lazy());
+        let budget = exp.fleet.store().budget_bytes();
+        assert!(budget > 0, "population preset must set a store budget");
+        for round in 1..=2 {
+            let rec = exp.step(round).unwrap();
+            assert!(rec.arrived > 0);
+            assert!(
+                exp.fleet.store().resident_bytes() <= budget,
+                "round {round}: resident {} > budget {budget}",
+                exp.fleet.store().resident_bytes()
             );
         }
     }

@@ -1,0 +1,274 @@
+//! Pure per-client dataset derivation for the lazy population engine.
+//!
+//! The eager generators in this directory draw every client from one
+//! sequential RNG stream (`rng.fork(w)` advances the parent), so client
+//! `w`'s data depends on every client before it — fine when the whole
+//! fleet is materialized once, fatal when a million-client population
+//! must materialize only the sampled cohort. This module re-derives the
+//! dense-synthetic family (class-centred gaussian blobs, the native
+//! MLP's `"synthetic"` dataset) as **pure functions of
+//! `(data_seed, client_id)`**: any client can be built in isolation, in
+//! any order, any number of times, and the result is bit-identical
+//! every time.
+//!
+//! Stream map (all `Pcg64::with_stream(seed ^ X, id + 1)`, one stream
+//! per concern so adding draws to one never perturbs another):
+//!
+//! | XOR          | concern                                   |
+//! |--------------|-------------------------------------------|
+//! | `0x512e`     | client size, then non-IID class subset    |
+//! | `0xda7a`     | client sample classes + feature noise     |
+//! | `0xce`       | per-class centres (shared with the eager  |
+//! |              | generator — already pure per class)       |
+//! | `0x7e57`     | the derived pooled test set               |
+//!
+//! [`generate_lazy`] loops the same pure functions into an ordinary
+//! [`FederatedDataset`], which is what the equivalence property test
+//! compares against: lazy ≡ eager holds by construction, and the test
+//! pins the derivation against accidental stream changes.
+
+use crate::data::{ClientDataset, DataConfig, FederatedDataset, Samples};
+use crate::model::manifest::VariantSpec;
+use crate::util::rng::Pcg64;
+
+const SIZE_STREAM: u64 = 0x512e;
+const SAMPLE_STREAM: u64 = 0xda7a;
+const CENTRE_STREAM: u64 = 0xce;
+const TEST_STREAM: u64 = 0x7e57;
+
+/// Per-class blob centres, identical draw to the eager
+/// `femnist::generate_dense` centres (pure per class already). Built
+/// once and shared across client materializations.
+pub struct Centres {
+    per: usize,
+    flat: Vec<f32>,
+}
+
+impl Centres {
+    pub fn build(seed: u64, classes: usize, per: usize) -> Centres {
+        let mut flat = Vec::with_capacity(classes * per);
+        for c in 0..classes {
+            let mut crng = Pcg64::with_stream(seed ^ CENTRE_STREAM, c as u64 + 1);
+            flat.extend((0..per).map(|_| crng.normal_f32(0.0, 1.5)));
+        }
+        Centres { per, flat }
+    }
+
+    fn class(&self, c: usize) -> &[f32] {
+        &self.flat[c * self.per..(c + 1) * self.per]
+    }
+}
+
+/// Pure: client `id`'s local sample count (uniform in the configured
+/// inclusive range). One `below` draw from the size stream.
+pub fn client_num_samples(cfg: &DataConfig, id: usize) -> usize {
+    let (lo, hi) = cfg.samples_per_client;
+    let mut rng = Pcg64::with_stream(cfg.seed ^ SIZE_STREAM, id as u64 + 1);
+    lo + rng.below((hi - lo + 1) as u64) as usize
+}
+
+/// Pure: client `id`'s class subset — every class when IID, otherwise
+/// `max(classes/2, 2)` distinct classes (the eager generator's non-IID
+/// skew), drawn from the size stream *after* the size draw so the two
+/// derivations stay consistent.
+fn client_classes(cfg: &DataConfig, classes: usize, id: usize) -> Vec<usize> {
+    if cfg.iid {
+        return (0..classes).collect();
+    }
+    let (lo, hi) = cfg.samples_per_client;
+    let mut rng = Pcg64::with_stream(cfg.seed ^ SIZE_STREAM, id as u64 + 1);
+    let _ = rng.below((hi - lo + 1) as u64); // the size draw
+    let k = (classes / 2).max(2).min(classes);
+    rng.sample_indices(classes, k)
+}
+
+/// Pure: client `id`'s full local dataset. Unlike the eager generator,
+/// no per-client test fraction is withheld — the lazy test set is
+/// derived independently by [`test_dataset`].
+pub fn client_dataset(
+    spec: &VariantSpec,
+    cfg: &DataConfig,
+    centres: &Centres,
+    id: usize,
+) -> ClientDataset {
+    let per: usize = spec.input_shape.iter().product();
+    let mut out = ClientDataset {
+        xs: Samples::F32(Vec::new()),
+        ys: Vec::new(),
+        per_sample: per,
+    };
+    client_dataset_into(spec, cfg, centres, id, &mut out);
+    out
+}
+
+/// [`client_dataset`] into a recycled buffer (cleared first; capacity
+/// reused) — the residual store rematerializes evicted lazy clients
+/// through pooled buffers so rehydration doesn't churn the heap.
+pub fn client_dataset_into(
+    spec: &VariantSpec,
+    cfg: &DataConfig,
+    centres: &Centres,
+    id: usize,
+    out: &mut ClientDataset,
+) {
+    let per: usize = spec.input_shape.iter().product();
+    assert_eq!(per, centres.per, "client_dataset: centre width mismatch");
+    let n = client_num_samples(cfg, id);
+    let subset = client_classes(cfg, spec.classes, id);
+    let mut wrng = Pcg64::with_stream(cfg.seed ^ SAMPLE_STREAM, id as u64 + 1);
+    out.per_sample = per;
+    out.ys.clear();
+    out.ys.reserve(n);
+    if !matches!(out.xs, Samples::F32(_)) {
+        out.xs = Samples::F32(Vec::new());
+    }
+    let Samples::F32(xs) = &mut out.xs else {
+        unreachable!()
+    };
+    xs.clear();
+    xs.reserve(n * per);
+    for _ in 0..n {
+        let class = subset[wrng.below(subset.len() as u64) as usize];
+        let centre = centres.class(class);
+        xs.extend(centre.iter().map(|&c| c + wrng.normal_f32(0.0, 0.8)));
+        out.ys.push(class as i32);
+    }
+}
+
+/// Deterministic pooled-test size for lazy mode: the eager generators
+/// withhold `test_fraction` of every client's data, which is O(n) —
+/// unbounded at population scale. Lazy mode derives an independent
+/// test set sized like the eager one but clamped to `[64, 4096]`
+/// samples (eval cost is already capped by `eval_batch_limit`).
+pub fn test_count(cfg: &DataConfig) -> usize {
+    let (lo, hi) = cfg.samples_per_client;
+    let avg = (lo + hi) as f64 / 2.0;
+    let want = (avg * cfg.num_clients as f64 * cfg.test_fraction).round() as usize;
+    want.clamp(64, 4096)
+}
+
+/// Pure: the pooled test set — uniformly random classes, same blob
+/// model as the clients, own stream.
+pub fn test_dataset(spec: &VariantSpec, cfg: &DataConfig, centres: &Centres) -> ClientDataset {
+    let per: usize = spec.input_shape.iter().product();
+    let n = test_count(cfg);
+    let mut rng = Pcg64::with_stream(cfg.seed ^ TEST_STREAM, 1);
+    let mut xs = Vec::with_capacity(n * per);
+    let mut ys = Vec::with_capacity(n);
+    for _ in 0..n {
+        let class = rng.below(spec.classes as u64) as usize;
+        let centre = centres.class(class);
+        xs.extend(centre.iter().map(|&c| c + rng.normal_f32(0.0, 0.8)));
+        ys.push(class as i32);
+    }
+    ClientDataset {
+        xs: Samples::F32(xs),
+        ys,
+        per_sample: per,
+    }
+}
+
+/// Materialize the whole population eagerly by looping the pure
+/// per-client functions — the reference the lazy path is compared
+/// against, and a drop-in dataset for small lazy-config runs.
+pub fn generate_lazy(spec: &VariantSpec, cfg: &DataConfig) -> FederatedDataset {
+    let per: usize = spec.input_shape.iter().product();
+    let centres = Centres::build(cfg.seed, spec.classes, per);
+    let clients = (0..cfg.num_clients)
+        .map(|id| client_dataset(spec, cfg, &centres, id))
+        .collect();
+    FederatedDataset {
+        clients,
+        test: test_dataset(spec, cfg, &centres),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native::mlp_spec;
+
+    fn cfg(seed: u64, iid: bool) -> DataConfig {
+        DataConfig {
+            num_clients: 12,
+            samples_per_client: (20, 40),
+            iid,
+            test_fraction: 0.2,
+            seed,
+        }
+    }
+
+    #[test]
+    fn derivation_is_pure_and_order_independent() {
+        let spec = mlp_spec("lazy", 16, 8, 4, 5, 2, 0.1);
+        let c = cfg(7, false);
+        let centres = Centres::build(c.seed, spec.classes, 16);
+        // Deriving client 5 twice, and after other clients, is
+        // bit-identical.
+        let a = client_dataset(&spec, &c, &centres, 5);
+        let _ = client_dataset(&spec, &c, &centres, 0);
+        let _ = client_dataset(&spec, &c, &centres, 11);
+        let b = client_dataset(&spec, &c, &centres, 5);
+        assert_eq!(a.ys, b.ys);
+        match (&a.xs, &b.xs) {
+            (Samples::F32(x), Samples::F32(y)) => assert_eq!(x, y),
+            _ => panic!("dtype"),
+        }
+        assert_eq!(a.len(), client_num_samples(&c, 5));
+    }
+
+    #[test]
+    fn generate_lazy_matches_per_client_derivation() {
+        let spec = mlp_spec("lazy", 16, 8, 4, 5, 2, 0.1);
+        for iid in [false, true] {
+            let c = cfg(3, iid);
+            let ds = generate_lazy(&spec, &c);
+            assert_eq!(ds.num_clients(), c.num_clients);
+            let centres = Centres::build(c.seed, spec.classes, 16);
+            for id in [0usize, 4, 11] {
+                let want = client_dataset(&spec, &c, &centres, id);
+                assert_eq!(ds.clients[id].ys, want.ys, "iid={iid} id={id}");
+                match (&ds.clients[id].xs, &want.xs) {
+                    (Samples::F32(x), Samples::F32(y)) => assert_eq!(x, y),
+                    _ => panic!("dtype"),
+                }
+            }
+            assert_eq!(ds.test.len(), test_count(&c));
+            assert!(ds.test.ys.iter().all(|&y| (y as usize) < spec.classes));
+        }
+    }
+
+    #[test]
+    fn noniid_clients_skip_classes_iid_cover_all() {
+        let spec = mlp_spec("lazy", 16, 8, 6, 5, 2, 0.1);
+        let centres = Centres::build(11, spec.classes, 16);
+        let noniid = client_dataset(&spec, &cfg(11, false), &centres, 2);
+        let mut seen = vec![false; 6];
+        for &y in &noniid.ys {
+            seen[y as usize] = true;
+        }
+        assert!(seen.iter().any(|&s| !s), "non-IID client covers all classes");
+        // Different clients get different subsets (statistically).
+        let classes_of = |id: usize| {
+            let mut s: Vec<i32> = client_dataset(&spec, &cfg(11, false), &centres, id)
+                .ys
+                .clone();
+            s.sort_unstable();
+            s.dedup();
+            s
+        };
+        assert!(
+            (0..8).map(classes_of).collect::<std::collections::HashSet<_>>().len() > 1,
+            "all clients drew the same class subset"
+        );
+    }
+
+    #[test]
+    fn test_count_is_bounded() {
+        let mut c = cfg(0, false);
+        c.num_clients = 1_000_000;
+        assert_eq!(test_count(&c), 4096);
+        c.num_clients = 1;
+        assert_eq!(test_count(&c), 64);
+    }
+}

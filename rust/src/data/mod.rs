@@ -15,6 +15,7 @@
 //!   with an own vocabulary bias.
 
 pub mod femnist;
+pub mod lazy;
 pub mod partition;
 pub mod sent140;
 pub mod shakespeare;
@@ -222,7 +223,11 @@ pub fn generate(spec: &VariantSpec, cfg: &DataConfig) -> FederatedDataset {
         "femnist" => femnist::generate(spec, cfg),
         "shakespeare" => shakespeare::generate(spec, cfg),
         "sent140" => sent140::generate(spec, cfg),
-        "synthetic" => femnist::generate_dense(spec, cfg),
+        // Pure per-client derivation (same blob model as the legacy
+        // `femnist::generate_dense`): keeps eager runs bit-identical
+        // to lazy-population runs, which derive the same clients on
+        // demand instead of materializing the whole fleet.
+        "synthetic" => lazy::generate_lazy(spec, cfg),
         other => panic!("unknown dataset family {other:?}"),
     }
 }

@@ -8,8 +8,9 @@
 //! * **Layer 3 (this crate)** — the federated-learning coordinator:
 //!   client selection, activation score maps, sub-model construction
 //!   ([`dropout`]), downlink/uplink compression ([`compression`]),
-//!   FedAvg aggregation — sharded across the worker pool, with a
-//!   retained single-threaded reference it must match bit-for-bit
+//!   FedAvg aggregation — sharded across the worker pool, optionally
+//!   through a hierarchical edge-aggregation tree, with a retained
+//!   single-threaded reference both must match bit-for-bit
 //!   ([`aggregation`], see `rust/src/aggregation/README.md`) —
 //!   wireless link simulation + availability churn ([`network`]), the
 //!   event-driven round scheduler with sync/overselect/async-buffered
@@ -25,7 +26,13 @@
 //!
 //! Module map (coordinator side): [`config`] assembles an experiment;
 //! [`coordinator`] owns the round loop and drives it through
-//! [`sched`]'s virtual-clock engine; per-client work flows through
+//! [`sched`]'s virtual-clock engine; [`clients`] holds the fleet as a
+//! lazily-materialized `Population` — per-client state derived purely
+//! from `(seed, id)` at sampling time, mutable remainders (DGC
+//! residuals, RNG position) paged through a byte-budgeted
+//! `ResidualStore` with an exact-round-trip spill file, so a
+//! million-client run holds only cohort-proportional resident state
+//! (see `rust/src/clients/README.md`); per-client work flows through
 //! [`dropout`] → [`compression`] → [`transport`] → [`runtime`] →
 //! [`aggregation`] (client training and the sharded server-side
 //! average share one worker pool; whole rounds aggregate in a single

@@ -87,7 +87,7 @@ fn print_help() {
 fn experiment_spec() -> ArgSpec {
     ArgSpec::new("Run a federated AFD experiment")
         .opt("preset", "femnist_noniid",
-             "femnist_noniid|shakespeare_noniid|sent140_noniid|femnist_iid|shakespeare_iid|sent140_iid|native")
+             "femnist_noniid|shakespeare_noniid|sent140_noniid|femnist_iid|shakespeare_iid|sent140_iid|native|native_population")
         .opt_maybe("rounds", "total federated rounds")
         .opt_maybe("clients", "client population size")
         .opt_maybe("fraction", "fraction of clients per round")
@@ -98,6 +98,11 @@ fn experiment_spec() -> ArgSpec {
         .opt_maybe("sched", "sync|overselect|async_buffered: round scheduler policy")
         .opt_maybe("churn", "client availability in (0,1]: enables on/off churn")
         .opt_maybe("shards", "aggregation shards (0 = auto: pool width, >=16k params/shard)")
+        .opt_maybe("agg-tree-levels", "hierarchical aggregation depth (1 = flat, >=2 = tree)")
+        .opt_maybe("agg-tree-fanout", "children per hierarchical aggregation node")
+        .opt_maybe("population-lazy", "true|false: derive clients lazily from (seed, id)")
+        .opt_maybe("store-budget-bytes", "residual-store byte budget (0 = unbounded)")
+        .opt_maybe("spill-dir", "directory for the residual-store spill file")
         .opt_maybe("lr", "override the manifest learning rate")
         .opt_maybe("seed", "base RNG seed")
         .opt("seeds", "1", "number of seeds (mean ± std reporting)")
@@ -165,6 +170,21 @@ fn parse_experiment(args: &afd::util::cli::Args) -> Result<ExperimentConfig> {
     }
     if let Some(v) = args.get("shards") {
         cfg.sharding.shard_count = v.parse()?;
+    }
+    if let Some(v) = args.get("agg-tree-levels") {
+        cfg.sharding.tree_levels = v.parse()?;
+    }
+    if let Some(v) = args.get("agg-tree-fanout") {
+        cfg.sharding.tree_fanout = v.parse()?;
+    }
+    if let Some(v) = args.get("population-lazy") {
+        cfg.population.lazy = v == "true" || v == "1";
+    }
+    if let Some(v) = args.get("store-budget-bytes") {
+        cfg.population.store_budget_bytes = v.parse()?;
+    }
+    if let Some(v) = args.get("spill-dir") {
+        cfg.population.spill_dir = v.to_string();
     }
     if let Some(v) = args.get("lr") {
         cfg.lr_override = Some(v.parse()?);

@@ -290,6 +290,22 @@ pub fn render_stage_table() -> Option<String> {
             format!("{:.1}us", p99_ns as f64 * 1e-3),
         ));
     }
+    // Residual-store traffic, when a population actually paged state.
+    let m = &crate::obs::metrics::RESIDUAL_STORE_MISSES;
+    let h = &crate::obs::metrics::RESIDUAL_STORE_HITS;
+    if m.get() + h.get() > 0 {
+        s.push_str(&format!(
+            "residual store: {} hits, {} misses, {} evictions, {} spilled, \
+             resident peak {}\n",
+            h.get(),
+            m.get(),
+            crate::obs::metrics::RESIDUAL_STORE_EVICTIONS.get(),
+            crate::util::human_bytes(
+                crate::obs::metrics::RESIDUAL_STORE_SPILLED_BYTES.get()
+            ),
+            crate::util::human_bytes(crate::obs::metrics::RESIDENT_BYTES_PEAK.get()),
+        ));
+    }
     Some(s)
 }
 

@@ -83,7 +83,7 @@ impl LinkConfig {
 }
 
 /// One client's sampled network + device characteristics.
-#[derive(Clone, Debug)]
+#[derive(Clone, Copy, Debug)]
 pub struct ClientLink {
     pub down_bps: f64,
     pub up_bps: f64,
@@ -107,6 +107,18 @@ impl ClientLink {
         }
     }
 
+    /// Pure per-client derivation: client `id`'s link drawn from its
+    /// own RNG stream (`Pcg64::with_stream(seed ^ 0x11e7, id + 1)`,
+    /// then the three [`ClientLink::sample`] draws in order). Any
+    /// client's link can be derived in isolation, in any order, and is
+    /// bit-identical every time — the population engine's lazy path
+    /// and the eagerly-cached [`NetworkSim::new`] table both call
+    /// exactly this function, so the two agree by construction.
+    pub fn derive(cfg: &LinkConfig, seed: u64, id: usize) -> ClientLink {
+        let mut rng = Pcg64::with_stream(seed ^ 0x11e7, id as u64 + 1);
+        ClientLink::sample(cfg, &mut rng)
+    }
+
     pub fn down_time(&self, bytes: u64, cfg: &LinkConfig) -> f64 {
         cfg.rtt_latency_s + bytes as f64 / self.down_bps
     }
@@ -120,11 +132,16 @@ impl ClientLink {
     }
 }
 
-/// Simulated network: per-client links, sampled once.
+/// Simulated network. Eager mode caches every client's link in
+/// `links`; lazy mode ([`NetworkSim::lazy`]) keeps the table empty and
+/// [`NetworkSim::link`] derives on demand — both paths go through the
+/// pure [`ClientLink::derive`], so they are bit-identical.
 #[derive(Clone, Debug)]
 pub struct NetworkSim {
     pub cfg: LinkConfig,
+    /// Per-client link cache (empty in lazy mode).
     pub links: Vec<ClientLink>,
+    seed: u64,
 }
 
 #[derive(Clone, Debug, Default)]
@@ -151,11 +168,28 @@ pub struct RoundTiming {
 
 impl NetworkSim {
     pub fn new(cfg: LinkConfig, num_clients: usize, seed: u64) -> NetworkSim {
-        let mut rng = Pcg64::with_stream(seed, 0x11e7);
         let links = (0..num_clients)
-            .map(|_| ClientLink::sample(&cfg, &mut rng))
+            .map(|c| ClientLink::derive(&cfg, seed, c))
             .collect();
-        NetworkSim { cfg, links }
+        NetworkSim { cfg, links, seed }
+    }
+
+    /// No per-client table: links are derived on every
+    /// [`NetworkSim::link`] call — O(1) memory for any population size.
+    pub fn lazy(cfg: LinkConfig, seed: u64) -> NetworkSim {
+        NetworkSim {
+            cfg,
+            links: Vec::new(),
+            seed,
+        }
+    }
+
+    /// Client `c`'s link: cached when eager, derived when lazy.
+    pub fn link(&self, c: usize) -> ClientLink {
+        self.links
+            .get(c)
+            .copied()
+            .unwrap_or_else(|| ClientLink::derive(&self.cfg, self.seed, c))
     }
 
     /// Account one synchronous round. `per_client`: (client id,
@@ -163,7 +197,7 @@ impl NetworkSim {
     pub fn round(&self, per_client: &[(usize, u64, f64, u64)]) -> RoundTiming {
         let mut timing = RoundTiming::default();
         for &(c, down_b, flops, up_b) in per_client {
-            let link = &self.links[c];
+            let link = self.link(c);
             let t = ClientTiming {
                 down_s: link.down_time(down_b, &self.cfg),
                 compute_s: link.compute_time(flops),
@@ -283,6 +317,26 @@ mod tests {
         }
         let c = NetworkSim::new(LinkConfig::default(), 10, 8);
         assert!(a.links[0].down_bps != c.links[0].down_bps);
+    }
+
+    #[test]
+    fn lazy_links_match_eager_table_bitwise() {
+        let cfg = LinkConfig::straggler_heavy();
+        let eager = NetworkSim::new(cfg.clone(), 64, 17);
+        let lazy = NetworkSim::lazy(cfg, 17);
+        assert!(lazy.links.is_empty());
+        // Any order, repeated derivation: bit-identical to the table.
+        for c in [63usize, 0, 31, 31, 7] {
+            let l = lazy.link(c);
+            let e = eager.link(c);
+            assert_eq!(l.down_bps.to_bits(), e.down_bps.to_bits(), "client {c}");
+            assert_eq!(l.up_bps.to_bits(), e.up_bps.to_bits(), "client {c}");
+            assert_eq!(
+                l.device_flops.to_bits(),
+                e.device_flops.to_bits(),
+                "client {c}"
+            );
+        }
     }
 
     #[test]

@@ -195,6 +195,22 @@ pub fn stats_json() -> Json {
         Json::Num(metrics::ROUNDS_COMPLETED.get() as f64),
     );
     counters.set("evals_run", Json::Num(metrics::EVALS_RUN.get() as f64));
+    counters.set(
+        "residual_store_hits",
+        Json::Num(metrics::RESIDUAL_STORE_HITS.get() as f64),
+    );
+    counters.set(
+        "residual_store_misses",
+        Json::Num(metrics::RESIDUAL_STORE_MISSES.get() as f64),
+    );
+    counters.set(
+        "residual_store_evictions",
+        Json::Num(metrics::RESIDUAL_STORE_EVICTIONS.get() as f64),
+    );
+    counters.set(
+        "residual_store_spilled_bytes",
+        Json::Num(metrics::RESIDUAL_STORE_SPILLED_BYTES.get() as f64),
+    );
 
     let mut gauges = Json::obj();
     gauges.set(
@@ -202,6 +218,10 @@ pub fn stats_json() -> Json {
         Json::Num(metrics::QUEUE_DEPTH.get() as f64),
     );
     gauges.set("pool_width", Json::Num(metrics::POOL_WIDTH.get() as f64));
+    gauges.set(
+        "resident_bytes_peak",
+        Json::Num(metrics::RESIDENT_BYTES_PEAK.get() as f64),
+    );
 
     let mut sent = Json::obj();
     let mut parsed = Json::obj();

@@ -203,11 +203,21 @@ pub static CLIENTS_DROPPED: Counter = Counter::new();
 pub static ROUNDS_COMPLETED: Counter = Counter::new();
 /// Full-model evaluations run by the coordinator.
 pub static EVALS_RUN: Counter = Counter::new();
+/// Residual-store lookups served from saved state (resident or spill).
+pub static RESIDUAL_STORE_HITS: Counter = Counter::new();
+/// Residual-store lookups that materialized a fresh client.
+pub static RESIDUAL_STORE_MISSES: Counter = Counter::new();
+/// Clients evicted from the resident set by the byte budget.
+pub static RESIDUAL_STORE_EVICTIONS: Counter = Counter::new();
+/// Bytes written to the residual-store spill file.
+pub static RESIDUAL_STORE_SPILLED_BYTES: Counter = Counter::new();
 
 /// Async engine: in-flight heap depth (high-water mark).
 pub static QUEUE_DEPTH: Gauge = Gauge::new();
 /// Worker pool width the experiment was built with.
 pub static POOL_WIDTH: Gauge = Gauge::new();
+/// Residual store: resident client-state bytes (high-water mark).
+pub static RESIDENT_BYTES_PEAK: Gauge = Gauge::new();
 
 /// Frame counts by `FrameKind as u8` (slot 0 unused; kinds are 1-9).
 pub const FRAME_KIND_SLOTS: usize = 16;
@@ -256,11 +266,16 @@ pub fn reset_all() {
         &CLIENTS_DROPPED,
         &ROUNDS_COMPLETED,
         &EVALS_RUN,
+        &RESIDUAL_STORE_HITS,
+        &RESIDUAL_STORE_MISSES,
+        &RESIDUAL_STORE_EVICTIONS,
+        &RESIDUAL_STORE_SPILLED_BYTES,
     ] {
         c.reset();
     }
     QUEUE_DEPTH.reset();
     POOL_WIDTH.reset();
+    RESIDENT_BYTES_PEAK.reset();
     for c in FRAMES_SENT.iter().chain(FRAMES_PARSED.iter()) {
         c.reset();
     }

@@ -41,13 +41,12 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::aggregation::{AddOp, ShardedFedAvg};
-use crate::clients::ClientState;
+use crate::aggregation::{AddOp, Aggregator};
+use crate::clients::Population;
 use crate::compression::dgc::DgcState;
 use crate::compression::DenseCodec;
 use crate::config::ExperimentConfig;
 use crate::coordinator::{run_client_round, ClientRoundOutcome};
-use crate::data::FederatedDataset;
 use crate::dropout::SubmodelStrategy;
 use crate::model::manifest::VariantSpec;
 use crate::model::packing::{PackPlan, PlanCache};
@@ -69,13 +68,17 @@ pub struct RoundCtx<'a> {
     pub runtime: &'a RuntimeHost,
     pub strategy: &'a mut dyn SubmodelStrategy,
     pub downlink: &'a Arc<dyn DenseCodec>,
-    pub dataset: &'a FederatedDataset,
-    pub fleet: &'a mut Vec<ClientState>,
+    /// The client population: datasets, RNG streams and mutable
+    /// per-client state, lazily materialized and paged through the
+    /// bounded residual store (see [`crate::clients::Population`]).
+    /// Replaces the old eager `Vec<ClientState>` fleet + shared
+    /// dataset pair.
+    pub fleet: &'a mut Population,
     pub net: &'a NetworkSim,
-    /// Sharded parallel aggregator (bit-identical to the retained
-    /// `FedAvg` reference for every shard count; it shares the
-    /// engine's worker pool).
-    pub agg: &'a mut ShardedFedAvg,
+    /// The aggregation path (flat sharded or hierarchical tree — both
+    /// bit-identical to the retained `FedAvg` reference; they share
+    /// the engine's worker pool).
+    pub agg: &'a mut Aggregator,
     pub rng: &'a mut Pcg64,
     pub global: &'a mut Vec<f32>,
     pub lr: f32,
@@ -252,11 +255,18 @@ impl Engine {
 
     /// Execute one round / aggregation window.
     pub fn step(&mut self, round: usize, ctx: &mut RoundCtx) -> Result<RoundSummary> {
-        if self.policy.continuous() {
+        let summary = if self.policy.continuous() {
             self.step_continuous(round, ctx)
         } else {
             self.step_round(round, ctx)
-        }
+        }?;
+        // Round boundary: enforce the residual-store byte budget. Every
+        // buffer a job borrowed is back in the store by now (execute_
+        // jobs returns DGC/epoch state before any policy decision), so
+        // evicting here is always safe — an in-flight async client that
+        // gets evicted simply rehydrates when its arrival is processed.
+        ctx.fleet.end_round();
+        Ok(summary)
     }
 
     // ---- shared machinery -------------------------------------------
@@ -298,7 +308,10 @@ impl Engine {
             .map(|&c| {
                 let submodel = ctx.strategy.select(round, c, ctx.rng);
                 let plan = ctx.plans.get(ctx.spec, &submodel);
-                let st = &mut ctx.fleet[c];
+                // Materialize the client (resident hit, spill
+                // rehydration, or fresh pure derivation) — identical
+                // state and RNG position to the old eager fleet entry.
+                let st = ctx.fleet.client(c);
                 st.participations += 1;
                 let num_samples = st.num_samples;
                 // Assemble the epoch into the client's recycled buffer
@@ -311,15 +324,10 @@ impl Engine {
                         round as u64,
                         c as u64,
                     );
-                    ctx.dataset.clients[c].epoch_data_into(
-                        ctx.spec,
-                        &mut st.rng,
-                        epoch_order,
-                        &mut data,
-                    );
+                    ctx.fleet.assemble_epoch(c, ctx.spec, epoch_order, &mut data);
                 }
                 let dgc = if ctx.cfg.uplink_dgc {
-                    let taken = st.take_dgc();
+                    let taken = ctx.fleet.client(c).take_dgc();
                     backups.push(snapshot_dgc.then(|| taken.clone()));
                     Some(taken)
                 } else {
@@ -432,19 +440,22 @@ impl Engine {
             }
         };
         for r in &mut results {
+            let client = ctx.fleet.client(r.outcome.client);
             if let Some(st) = r.dgc.take() {
-                ctx.fleet[r.outcome.client].put_dgc(st);
+                client.put_dgc(st);
             }
             if let Some(d) = r.data.take() {
-                ctx.fleet[r.outcome.client].put_epoch_buf(d);
+                client.put_epoch_buf(d);
             }
         }
         Ok(results)
     }
 
-    /// A client's simulated `down + compute + up` duration.
+    /// A client's simulated `down + compute + up` duration. The link
+    /// comes from the pure `(seed, id)` derivation in lazy-population
+    /// mode (no table exists for a million clients).
     fn flight_time(ctx: &RoundCtx, o: &ClientRoundOutcome) -> f64 {
-        let link = &ctx.net.links[o.client];
+        let link = ctx.net.link(o.client);
         link.down_time(o.down_bytes, &ctx.net.cfg)
             + link.compute_time(o.epoch_flops)
             + link.up_time(o.up_bytes, &ctx.net.cfg)
@@ -535,7 +546,7 @@ impl Engine {
                 continue;
             }
             if let Some(b) = dgc_backups[i].take() {
-                ctx.fleet[r.outcome.client].put_dgc(b);
+                ctx.fleet.client(r.outcome.client).put_dgc(b);
             }
         }
 
@@ -609,7 +620,7 @@ impl Engine {
                         // frame) device-side — before any refill can
                         // re-dispatch this client.
                         if let Some(b) = f.dgc_backup.take() {
-                            ctx.fleet[f.outcome.client].put_dgc(b);
+                            ctx.fleet.client(f.outcome.client).put_dgc(b);
                         }
                         ctx.transport.finish(f.outcome.client, f.round, false)?;
                         continue;
@@ -755,7 +766,9 @@ impl Engine {
             if !included[i] {
                 continue;
             }
-            let n_c = ctx.fleet[o.client].num_samples as f64;
+            // Pure lookup — never materializes (an async client may
+            // already be evicted by the time its update aggregates).
+            let n_c = ctx.fleet.num_samples(o.client) as f64;
             let w = weight_of(i);
             // `n_c * 1.0 == n_c` exactly, so unit weights stay bit-
             // compatible with the serial reference.

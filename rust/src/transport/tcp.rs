@@ -293,13 +293,35 @@ pub fn run_client_loop(addr: &str, connect_retry_s: f64) -> Result<()> {
     let mut data_cfg = cfg.data.clone();
     data_cfg.num_clients = cfg.num_clients;
     data_cfg.seed = cfg.seed;
-    let dataset = data::generate(&spec, &data_cfg);
-    anyhow::ensure!(
-        dataset.num_clients() == cfg.num_clients,
-        "dataset generator returned wrong client count"
-    );
-    let sizes: Vec<usize> = dataset.clients.iter().map(|c| c.len()).collect();
-    let mut fleet = crate::clients::build_fleet(&sizes, &cfg.dgc, cfg.seed);
+    // Same population the coordinator holds: lazy mode derives each
+    // client on demand (a remote peer of a million-client federation
+    // must not eagerly build the whole fleet), eager mode shares one
+    // generated dataset.
+    let mut fleet = if cfg.population.lazy {
+        anyhow::ensure!(
+            spec.dataset == "synthetic",
+            "population.lazy requires the synthetic dataset"
+        );
+        crate::clients::Population::lazy(
+            spec.clone(),
+            data_cfg.clone(),
+            cfg.dgc.clone(),
+            cfg.seed,
+            &cfg.population,
+        )
+    } else {
+        let dataset = data::generate(&spec, &data_cfg);
+        anyhow::ensure!(
+            dataset.num_clients() == cfg.num_clients,
+            "dataset generator returned wrong client count"
+        );
+        crate::clients::Population::eager(
+            std::sync::Arc::new(dataset),
+            cfg.dgc.clone(),
+            cfg.seed,
+            &cfg.population,
+        )
+    };
     let codec = crate::compression::make_dense_codec(&cfg.downlink)?;
     let my_codec_id = codec_id(codec.name());
     let plans = PlanCache::default();
@@ -377,17 +399,12 @@ pub fn run_client_loop(addr: &str, connect_retry_s: f64) -> Result<()> {
                 // Mirror the coordinator's dispatch-time bookkeeping:
                 // same epoch RNG draw, same DGC snapshot discipline.
                 let plan = plans.get(&spec, &offer.submodel);
-                let num_samples = fleet[c].num_samples as u32;
-                fleet[c].participations += 1;
-                let mut epoch = fleet[c].take_epoch_buf();
-                dataset.clients[c].epoch_data_into(
-                    &spec,
-                    &mut fleet[c].rng,
-                    &mut order,
-                    &mut epoch,
-                );
+                let num_samples = fleet.num_samples(c) as u32;
+                fleet.client(c).participations += 1;
+                let mut epoch = fleet.client(c).take_epoch_buf();
+                fleet.assemble_epoch(c, &spec, &mut order, &mut epoch);
                 if cfg.uplink_dgc {
-                    pending_dgc[c] = Some(fleet[c].dgc.clone());
+                    pending_dgc[c] = Some(fleet.client(c).dgc.clone());
                 }
                 let mut env = ClientEnv {
                     spec: &spec,
@@ -396,7 +413,7 @@ pub fn run_client_loop(addr: &str, connect_retry_s: f64) -> Result<()> {
                     base_params: &base,
                     data: &epoch,
                     dgc: if cfg.uplink_dgc {
-                        Some(&mut fleet[c].dgc)
+                        Some(&mut fleet.client(c).dgc)
                     } else {
                         None
                     },
@@ -415,7 +432,10 @@ pub fn run_client_loop(addr: &str, connect_retry_s: f64) -> Result<()> {
                     &mut reply,
                 )?;
                 stream.write_all(&reply).context("sending UpdateUp")?;
-                fleet[c].put_epoch_buf(epoch);
+                fleet.client(c).put_epoch_buf(epoch);
+                // Dispatch boundary: keep the resident set inside the
+                // byte budget (no-op for unbudgeted populations).
+                fleet.end_round();
             }
             FrameKind::Ack | FrameKind::Cut => {
                 let close = frame::parse_round_close(&view)?;
@@ -432,7 +452,7 @@ pub fn run_client_loop(addr: &str, connect_retry_s: f64) -> Result<()> {
                     // no-information-loss invariant).
                     _ => {
                         if let Some(snap) = pending_dgc[c].take() {
-                            fleet[c].dgc = snap;
+                            fleet.client(c).dgc = snap;
                         }
                     }
                 }

@@ -39,6 +39,20 @@ impl Pcg64 {
         Pcg64::with_stream(a ^ tag.wrapping_mul(0x9e37_79b9_7f4a_7c15), tag | 1)
     }
 
+    /// Export the raw `(state, inc)` pair. Together with
+    /// [`Pcg64::from_raw`] this gives an exact serialization of the
+    /// generator position — the residual store's spill file persists
+    /// evicted clients' RNGs this way so rehydration resumes the
+    /// stream bit-for-bit.
+    pub fn to_raw(&self) -> (u128, u128) {
+        (self.state, self.inc)
+    }
+
+    /// Rebuild a generator from a [`Pcg64::to_raw`] export.
+    pub fn from_raw(state: u128, inc: u128) -> Pcg64 {
+        Pcg64 { state, inc }
+    }
+
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
@@ -280,6 +294,19 @@ mod tests {
         let mut s = xs.clone();
         s.sort_unstable();
         assert_eq!(s, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn raw_roundtrip_resumes_the_stream_exactly() {
+        let mut rng = Pcg64::with_stream(99, 7);
+        for _ in 0..13 {
+            rng.next_u64();
+        }
+        let (state, inc) = rng.to_raw();
+        let mut resumed = Pcg64::from_raw(state, inc);
+        for _ in 0..64 {
+            assert_eq!(rng.next_u64(), resumed.next_u64());
+        }
     }
 
     #[test]

@@ -1,0 +1,155 @@
+//! Hierarchical aggregation conformance: a tree of edge aggregators
+//! must be a pure topology knob — bit-identical to the flat
+//! [`ShardedFedAvg`] and to the single-threaded [`FedAvg`] reference at
+//! every tree shape, through direct batched rounds and through whole
+//! experiments under all three scheduler policies.
+
+use std::sync::Arc;
+
+use afd::aggregation::{AddOp, FedAvg, HierarchicalFedAvg, ShardedFedAvg};
+use afd::config::{ExperimentConfig, Preset};
+use afd::coordinator::experiment::{run_experiment, Experiment};
+use afd::metrics::RoundRecord;
+use afd::model::packing::PackPlan;
+use afd::model::submodel::SubModel;
+use afd::runtime::native::mlp_spec;
+use afd::util::pool::LazyPool;
+use afd::util::rng::Pcg64;
+
+fn assert_bit_identical(a: &RoundRecord, b: &RoundRecord, what: &str) {
+    assert_eq!(a.round, b.round, "{what}");
+    assert_eq!(a.round_s.to_bits(), b.round_s.to_bits(), "{what} round {}", a.round);
+    assert_eq!(
+        a.train_loss.to_bits(),
+        b.train_loss.to_bits(),
+        "{what} round {}",
+        a.round
+    );
+    assert_eq!(
+        a.eval_acc.map(f64::to_bits),
+        b.eval_acc.map(f64::to_bits),
+        "{what} round {}",
+        a.round
+    );
+    assert_eq!(a.down_bytes, b.down_bytes, "{what} round {}", a.round);
+    assert_eq!(a.up_bytes, b.up_bytes, "{what} round {}", a.round);
+    assert_eq!(a.arrived, b.arrived, "{what} round {}", a.round);
+    assert_eq!(a.cut, b.cut, "{what}");
+    assert_eq!(a.dropped, b.dropped, "{what}");
+}
+
+/// Direct three-way check: a mixed batch of masked/planned/full ops
+/// through [`FedAvg`] (reference), [`ShardedFedAvg`] (flat) and
+/// [`HierarchicalFedAvg`] at several tree shapes yields bitwise the
+/// same output vector.
+#[test]
+fn tree_matches_flat_and_reference_on_mixed_batches() {
+    let spec = mlp_spec("h", 24, 16, 6, 8, 3, 0.1);
+    let n = spec.num_params;
+    let mut rng = Pcg64::new(5);
+    let base: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+
+    // Three clients: one masked, one planned, one full.
+    let vals: Vec<Vec<f32>> = (0..3)
+        .map(|_| (0..n).map(|_| rng.normal_f32(0.0, 0.5)).collect())
+        .collect();
+    let mask: Vec<bool> = (0..n).map(|i| i % 3 != 0).collect();
+    let sm = SubModel::from_kept_indices(&spec, &[vec![0, 2, 5, 7, 9, 12, 14]]);
+    let plan = PackPlan::build(&spec, &sm);
+
+    // Reference result through the serial FedAvg.
+    let mut reference = FedAvg::new(n);
+    reference.add_masked(&vals[0], &mask, 10.0);
+    let mut cmask = vec![false; n];
+    plan.mark_coord_mask(&mut cmask);
+    reference.add_masked(&vals[1], &cmask, 25.0);
+    reference.add_full(&vals[2], 5.0);
+    let want = reference.finalize(&base);
+
+    let ops = [
+        AddOp::Masked {
+            values: &vals[0],
+            coord_mask: &mask,
+            n_c: 10.0,
+        },
+        AddOp::Planned {
+            values: &vals[1],
+            plan: &plan,
+            n_c: 25.0,
+        },
+        AddOp::Full {
+            values: &vals[2],
+            n_c: 5.0,
+        },
+    ];
+
+    let pool = Arc::new(LazyPool::new(4));
+    for shards in [1usize, 3, 8] {
+        let mut flat = ShardedFedAvg::new(n, shards, Arc::clone(&pool));
+        let mut out = Vec::new();
+        flat.aggregate_batch(&ops, &base, &mut out);
+        assert_eq!(out.len(), want.len());
+        for (x, y) in out.iter().zip(&want) {
+            assert_eq!(x.to_bits(), y.to_bits(), "flat shards={shards}");
+        }
+    }
+    for (levels, fanout) in [(2usize, 2usize), (2, 8), (3, 2), (3, 4), (5, 3)] {
+        let mut tree = HierarchicalFedAvg::new(n, levels, fanout, Arc::clone(&pool));
+        let mut out = Vec::new();
+        tree.aggregate_batch(&ops, &base, &mut out);
+        assert_eq!(out.len(), want.len());
+        for (x, y) in out.iter().zip(&want) {
+            assert_eq!(x.to_bits(), y.to_bits(), "tree {levels}x{fanout}");
+        }
+    }
+}
+
+/// Whole-experiment invariance: for every scheduler policy, a run with
+/// tree aggregation (several shapes) is record-for-record bit-identical
+/// to the same run with flat sharded aggregation.
+#[test]
+fn every_policy_is_tree_shape_invariant() {
+    for policy in ["sync", "overselect", "async_buffered"] {
+        let mut cfg = ExperimentConfig::preset(Preset::NativeSmoke);
+        cfg.rounds = 5;
+        cfg.eval_every = 2;
+        cfg.sched.policy = policy.into();
+        cfg.sched.buffer_k = 2;
+        let flat = run_experiment(&cfg).unwrap();
+        for (levels, fanout) in [(2usize, 4usize), (3, 2)] {
+            let mut tree_cfg = cfg.clone();
+            tree_cfg.sharding.tree_levels = levels;
+            tree_cfg.sharding.tree_fanout = fanout;
+            let tree = run_experiment(&tree_cfg).unwrap();
+            assert_eq!(flat.records.len(), tree.records.len());
+            for (x, y) in flat.records.iter().zip(&tree.records) {
+                assert_bit_identical(x, y, &format!("{policy} {levels}x{fanout}"));
+            }
+        }
+    }
+}
+
+/// The tree path against the retained serial [`FedAvg`] loop: the sync
+/// engine with hierarchical aggregation must still reproduce
+/// `step_serial_reference` byte-for-byte, global model included.
+#[test]
+fn tree_sync_engine_matches_fedavg_serial_reference() {
+    let mut cfg = ExperimentConfig::preset(Preset::NativeSmoke);
+    cfg.rounds = 6;
+    cfg.eval_every = 3;
+    cfg.uplink_dgc = true;
+    cfg.sharding.tree_levels = 3;
+    cfg.sharding.tree_fanout = 3;
+    assert_eq!(cfg.sched.policy, "sync");
+
+    let mut engine = Experiment::build(&cfg).unwrap();
+    let mut serial = Experiment::build(&cfg).unwrap();
+    for round in 1..=cfg.rounds {
+        let a = engine.step(round).unwrap();
+        let b = serial.step_serial_reference(round).unwrap();
+        assert_bit_identical(&a, &b, "tree-vs-serial");
+    }
+    for (x, y) in engine.global.iter().zip(&serial.global) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+}

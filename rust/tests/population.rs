@@ -1,0 +1,193 @@
+//! Population-engine conformance: lazy `(seed, id)` derivation must
+//! reproduce the eager fleet bitwise, the residual store must round-trip
+//! evicted state exactly, and a 100k-client / 10k-cohort round must
+//! complete with resident state bounded by the configured byte budget.
+
+use std::sync::Arc;
+
+use afd::clients::{client_rng, Population, PopulationConfig};
+use afd::compression::dgc::DgcConfig;
+use afd::config::{ExperimentConfig, Preset};
+use afd::coordinator::experiment::Experiment;
+use afd::data::{lazy, DataConfig};
+use afd::network::{LinkConfig, NetworkSim};
+use afd::runtime::native::mlp_spec;
+use afd::runtime::BatchInput;
+use afd::util::rng::Pcg64;
+
+fn data_cfg(seed: u64, n: usize, iid: bool) -> DataConfig {
+    DataConfig {
+        num_clients: n,
+        samples_per_client: (12, 20),
+        iid,
+        test_fraction: 0.2,
+        seed,
+    }
+}
+
+/// Property: for random `(seed, id)` pairs probed in random order, a
+/// lazily-derived client is indistinguishable — bitwise — from the
+/// corresponding entry of an eager fleet built over the same derivation:
+/// same sample count, same RNG stream, same epoch draws, same link
+/// parameters.
+#[test]
+fn lazy_client_matches_eager_fleet_entry_bitwise() {
+    for (seed, n, iid) in [(0u64, 64usize, false), (9, 33, true), (1234, 17, false)] {
+        let spec = mlp_spec("p", 12, 8, 4, 6, 2, 0.1);
+        let dc = data_cfg(seed, n, iid);
+        let dataset = Arc::new(lazy::generate_lazy(&spec, &dc));
+        let mut eager = Population::eager(
+            Arc::clone(&dataset),
+            DgcConfig::default(),
+            seed,
+            &PopulationConfig::default(),
+        );
+        let mut lazy_pop = Population::lazy(
+            spec.clone(),
+            dc.clone(),
+            DgcConfig::default(),
+            seed,
+            &PopulationConfig::default(),
+        );
+        assert!(lazy_pop.is_lazy() && !eager.is_lazy());
+
+        let mut probe = Pcg64::new(seed ^ 0x9e37);
+        for _ in 0..24 {
+            let c = probe.below(n as u64) as usize;
+            assert_eq!(eager.num_samples(c), lazy_pop.num_samples(c), "id {c}");
+            // Epoch draws advance both private RNG streams in lockstep
+            // and must produce bit-identical batches.
+            let a = eager.epoch_data(c, &spec);
+            let b = lazy_pop.epoch_data(c, &spec);
+            assert_eq!(a.ys, b.ys, "seed {seed} id {c}");
+            match (&a.xs, &b.xs) {
+                (BatchInput::F32(x), BatchInput::F32(y)) => {
+                    assert_eq!(x.len(), y.len());
+                    for (p, q) in x.iter().zip(y) {
+                        assert_eq!(p.to_bits(), q.to_bits(), "seed {seed} id {c}");
+                    }
+                }
+                _ => panic!("synthetic epochs must be dense f32"),
+            }
+            // The advanced RNG positions still agree, and both equal
+            // the pure derivation's stream.
+            let x = eager.client(c).rng.next_u64();
+            let y = lazy_pop.client(c).rng.next_u64();
+            assert_eq!(x, y, "seed {seed} id {c}");
+        }
+        // A never-sampled client's stream equals the pure derivation.
+        let fresh = n - 1;
+        let mut derived = client_rng(seed, fresh);
+        assert_eq!(lazy_pop.client(fresh).rng.next_u64(), derived.next_u64());
+
+        // Link parameters: the lazy table-free sim derives the same
+        // links the eager table caches.
+        let net_e = NetworkSim::new(LinkConfig::default(), n, seed);
+        let net_l = NetworkSim::lazy(LinkConfig::default(), seed);
+        for c in 0..n {
+            let (a, b) = (net_e.link(c), net_l.link(c));
+            assert_eq!(a.down_bps.to_bits(), b.down_bps.to_bits(), "id {c}");
+            assert_eq!(a.up_bps.to_bits(), b.up_bps.to_bits(), "id {c}");
+            assert_eq!(a.device_flops.to_bits(), b.device_flops.to_bits(), "id {c}");
+        }
+    }
+}
+
+/// Property: eviction + rehydration round-trips a client's mutable
+/// state exactly — live DGC residuals (from real compress calls), the
+/// advanced RNG position, and the participation count all come back
+/// bit-identical after the budget pages the client out to the spill
+/// file.
+#[test]
+fn eviction_rehydration_roundtrips_state_exactly() {
+    let spec = mlp_spec("e", 12, 8, 4, 6, 2, 0.1);
+    let n_params = spec.num_params;
+    for seed in [0u64, 7, 42] {
+        let dc = data_cfg(seed, 8, false);
+        // A 1-byte budget evicts every resident at each end_round.
+        let mut pop = Population::lazy(
+            spec.clone(),
+            dc,
+            DgcConfig::default(),
+            seed,
+            &PopulationConfig {
+                lazy: true,
+                store_budget_bytes: 1,
+                spill_dir: String::new(),
+            },
+        );
+
+        let mut rng = Pcg64::new(seed ^ 0xd6c);
+        let mut snapshots = Vec::new();
+        for c in 0..8usize {
+            let delta: Vec<f32> = (0..n_params).map(|_| rng.normal_f32(0.0, 0.3)).collect();
+            let st = pop.client(c);
+            st.participations += 3 + c;
+            let _ = st.rng.next_u64(); // advance the stream mid-run
+            let (mut scratch, mut msg) = (Vec::new(), Vec::new());
+            st.dgc.compress_into(&delta, &mut scratch, &mut msg);
+            let (u, v) = st.dgc.residuals();
+            snapshots.push((
+                st.participations,
+                u.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                v.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            ));
+        }
+        pop.end_round();
+        assert_eq!(pop.store().resident_len(), 0, "budget must evict everyone");
+        assert_eq!(pop.store().spilled_len(), 8);
+
+        // Rehydrate in a different order than eviction.
+        for c in (0..8usize).rev() {
+            let st = pop.client(c);
+            let (participations, u_bits, v_bits) = &snapshots[c];
+            assert_eq!(st.participations, *participations, "seed {seed} id {c}");
+            let (u, v) = st.dgc.residuals();
+            assert_eq!(u.len(), u_bits.len());
+            for (x, want) in u.iter().zip(u_bits) {
+                assert_eq!(x.to_bits(), *want, "seed {seed} id {c} u");
+            }
+            for (x, want) in v.iter().zip(v_bits) {
+                assert_eq!(x.to_bits(), *want, "seed {seed} id {c} v");
+            }
+        }
+    }
+}
+
+/// The scale acceptance bar: a fixed-seed run over a 100 000-client
+/// lazy population with a 10 000-client cohort completes, learns
+/// something, and ends every round with resident store state under the
+/// byte budget while the overflow lives in the spill file.
+#[test]
+fn hundred_k_clients_ten_k_cohort_stays_within_budget() {
+    let mut cfg = ExperimentConfig::preset(Preset::NativePopulation);
+    cfg.rounds = 2;
+    cfg.eval_every = 3; // final round still evaluates
+    cfg.client_fraction = 0.1; // 10k-client cohort
+    cfg.native_dims = (12, 8, 4); // keep per-client work tiny
+    cfg.data.samples_per_client = (8, 16);
+    cfg.population.store_budget_bytes = 2 << 20;
+    assert_eq!(cfg.num_clients, 100_000);
+    assert_eq!(cfg.cohort_size(), 10_000);
+
+    let mut exp = Experiment::build(&cfg).unwrap();
+    assert!(exp.population().is_lazy());
+    for round in 1..=cfg.rounds {
+        let rec = exp.step(round).unwrap();
+        assert!(rec.arrived > 0, "round {round}");
+        assert!(rec.train_loss.is_finite());
+        let resident = exp.population().store().resident_bytes();
+        assert!(
+            resident <= cfg.population.store_budget_bytes,
+            "round {round}: resident {resident} > budget {}",
+            cfg.population.store_budget_bytes
+        );
+    }
+    // The cohort outgrew the budget: most of it was paged out.
+    assert!(
+        exp.population().store().spilled_len() > 5_000,
+        "spilled only {}",
+        exp.population().store().spilled_len()
+    );
+    assert!(exp.global.iter().all(|v| v.is_finite()));
+}

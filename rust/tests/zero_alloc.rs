@@ -15,10 +15,11 @@
 use std::sync::{Arc, Mutex};
 
 use afd::aggregation::{AddOp, ShardedFedAvg};
+use afd::clients::{Population, PopulationConfig};
 use afd::compression::dgc::{DgcConfig, DgcState};
 use afd::compression::quant::HadamardQuant8;
 use afd::compression::{sparse, DenseCodec, Encoded};
-use afd::data::{ClientDataset, Samples};
+use afd::data::{ClientDataset, FederatedDataset, Samples};
 use afd::model::packing::PackPlan;
 use afd::model::submodel::SubModel;
 use afd::runtime::native::{mlp_spec, NativeMlp};
@@ -336,4 +337,99 @@ fn full_client_round_pipeline_allocates_nothing_after_warmup() {
 
     // The pipeline still computes something sensible.
     assert!(global.iter().all(|v| v.is_finite()));
+}
+
+/// Population-store contract: a warm sample → rehydrate → train →
+/// evict cycle through the [`Population`] + `ResidualStore` makes zero
+/// heap allocations. Every cycle forces the full paging machinery —
+/// the 1-byte budget evicts (spills) both clients at `end_round`, so
+/// the armed pass rebuilds each client's shell from the free pools,
+/// rehydrates its RNG/participations/DGC residuals from the spill
+/// file, assembles an epoch into recycled buffers, trains, and spills
+/// again.
+#[test]
+fn population_evict_rehydrate_train_cycle_allocates_nothing_after_warmup() {
+    let _guard = SERIAL.lock().unwrap();
+    // ---- setup (allocates freely) -----------------------------------
+    let (d, h, c) = (24usize, 16usize, 6usize);
+    let spec = mlp_spec("pop", d, h, c, 8, 3, 0.1);
+    let n = spec.num_params;
+    let mlp = NativeMlp::new(spec.clone());
+    let global = mlp.init_params(1);
+
+    let mut rng = Pcg64::new(9);
+    let mut make_client = |samples: usize| {
+        let xs: Vec<f32> = (0..samples * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let ys: Vec<i32> = (0..samples).map(|_| rng.below(c as u64) as i32).collect();
+        ClientDataset {
+            xs: Samples::F32(xs),
+            ys,
+            per_sample: d,
+        }
+    };
+    let dataset = Arc::new(FederatedDataset {
+        clients: vec![make_client(30), make_client(26)],
+        test: make_client(8),
+    });
+    // A 1-byte budget: `end_round` always evicts every resident, so
+    // every materialization after warm-up is a spill rehydration.
+    let mut pop = Population::eager(
+        dataset,
+        DgcConfig::default(),
+        7,
+        &PopulationConfig {
+            lazy: false,
+            store_budget_bytes: 1,
+            spill_dir: String::new(),
+        },
+    );
+
+    let sm = SubModel::from_kept_indices(&spec, &[vec![0, 2, 3, 5, 8, 9, 11, 14, 15]]);
+    let mut ws = Workspace::new();
+    let mut order: Vec<u32> = Vec::new();
+
+    let mut cycle = |pop: &mut Population, ws: &mut Workspace, order: &mut Vec<u32>| {
+        for client in 0..2usize {
+            // Sample: materialize (rehydrating from spill when a record
+            // exists) and run the engine's dispatch-time sequence.
+            pop.client(client).participations += 1;
+            let mut data = pop.client(client).take_epoch_buf();
+            pop.assemble_epoch(client, &spec, order, &mut data);
+            let mut dgc = pop.client(client).take_dgc();
+            // Train + DGC compress so the spilled residuals are live.
+            let mut model = ws.take_uncleared(n);
+            model.copy_from_slice(&global);
+            mlp.train_epoch_in(ws, &mut model, sm.masks_f32(), &data, 0.1)
+                .unwrap();
+            let mut delta = ws.take_uncleared(n);
+            afd::tensor::sub(&model, &global, &mut delta);
+            let mut scratch = ws.take_bytes();
+            let mut msg = ws.take_bytes();
+            dgc.compress_into(&delta, &mut scratch, &mut msg);
+            ws.give(delta);
+            ws.give(model);
+            ws.give_bytes(scratch);
+            ws.give_bytes(msg);
+            let st = pop.client(client);
+            st.put_dgc(dgc);
+            st.put_epoch_buf(data);
+        }
+        // Round boundary: both clients evicted and spilled.
+        pop.end_round();
+    };
+
+    // Two warm-ups: the first creates the spill file/slots and sizes
+    // the scratch and pools, the second settles capacities.
+    cycle(&mut pop, &mut ws, &mut order);
+    cycle(&mut pop, &mut ws, &mut order);
+    assert_eq!(pop.store().resident_len(), 0, "budget must evict everyone");
+    assert_eq!(pop.store().spilled_len(), 2);
+
+    alloc_count::arm();
+    cycle(&mut pop, &mut ws, &mut order);
+    let allocs = alloc_count::disarm();
+    assert_eq!(
+        allocs, 0,
+        "a warm sample→rehydrate→train→evict cycle made {allocs} allocations"
+    );
 }
