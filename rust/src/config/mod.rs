@@ -22,6 +22,30 @@ pub enum Backend {
     Native,
 }
 
+/// Socket-transport tuning for `afd serve`'s TCP coordinator (the
+/// loopback transport ignores it).
+#[derive(Clone, Debug)]
+pub struct TransportConfig {
+    /// Per-exchange I/O budget in seconds: an exchange (or a pending
+    /// reconnect) still open after this long declares its connection
+    /// dead and converts the in-flight clients into losses.
+    pub io_timeout_s: f64,
+    /// Session resume: replay open rounds (behind a `StateSync`
+    /// preamble) to a client process that reconnects with its session
+    /// token. When off, a dead connection loses its in-flight clients
+    /// immediately.
+    pub resume: bool,
+}
+
+impl Default for TransportConfig {
+    fn default() -> Self {
+        TransportConfig {
+            io_timeout_s: 600.0,
+            resume: true,
+        }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
     /// Manifest variant name (Pjrt) or a label (Native).
@@ -54,6 +78,9 @@ pub struct ExperimentConfig {
     /// Client-population engine: lazy `(seed, id)` materialization and
     /// the residual-store byte budget (see [`crate::clients`]).
     pub population: PopulationConfig,
+    /// Socket-transport timeouts and session-resume behaviour (see
+    /// [`crate::transport::tcp`]).
+    pub transport: TransportConfig,
     pub seed: u64,
     /// Evaluate the global model every k rounds (simulation-side only —
     /// evaluation costs no simulated network time).
@@ -86,6 +113,7 @@ impl Default for ExperimentConfig {
             sched: SchedConfig::default(),
             sharding: ShardingConfig::default(),
             population: PopulationConfig::default(),
+            transport: TransportConfig::default(),
             seed: 0,
             eval_every: 5,
             eval_batch_limit: Some(12),
@@ -347,6 +375,11 @@ impl ExperimentConfig {
             "population_spill_dir",
             Json::Str(self.population.spill_dir.clone()),
         );
+        j.set(
+            "transport_io_timeout_s",
+            Json::Num(self.transport.io_timeout_s),
+        );
+        j.set("transport_resume", Json::Bool(self.transport.resume));
         j.set("churn_enabled", Json::Bool(self.sched.churn.enabled));
         j.set(
             "churn_availability",
@@ -498,6 +531,12 @@ impl ExperimentConfig {
         }
         if let Some(v) = j.get("population_spill_dir").and_then(|v| v.as_str()) {
             self.population.spill_dir = v.to_string();
+        }
+        if let Some(v) = j.get("transport_io_timeout_s").and_then(|v| v.as_f64()) {
+            self.transport.io_timeout_s = v;
+        }
+        if let Some(v) = j.get("transport_resume").and_then(|v| v.as_bool()) {
+            self.transport.resume = v;
         }
         if let Some(v) = j.get("churn_enabled").and_then(|v| v.as_bool()) {
             self.sched.churn.enabled = v;
@@ -727,6 +766,27 @@ mod tests {
         let mut c = ExperimentConfig::default();
         c.apply_json(&partial).unwrap();
         assert_eq!(c.native_dims, ExperimentConfig::default().native_dims);
+    }
+
+    #[test]
+    fn transport_json_roundtrip() {
+        let mut src = ExperimentConfig::default();
+        assert_eq!(src.transport.io_timeout_s, 600.0);
+        assert!(src.transport.resume, "resume is the default");
+        src.transport.io_timeout_s = 2.5;
+        src.transport.resume = false;
+        let j = src.to_json();
+        let mut dst = ExperimentConfig::default();
+        dst.apply_json(&j).unwrap();
+        assert_eq!(dst.transport.io_timeout_s, 2.5);
+        assert!(!dst.transport.resume);
+
+        // Partial configs leave the subtree untouched.
+        let partial = crate::util::json::parse(r#"{"rounds": 3}"#).unwrap();
+        let mut c = ExperimentConfig::default();
+        c.apply_json(&partial).unwrap();
+        assert_eq!(c.transport.io_timeout_s, 600.0);
+        assert!(c.transport.resume);
     }
 
     #[test]

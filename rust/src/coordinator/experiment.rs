@@ -285,6 +285,7 @@ impl Experiment {
                 c,
                 num_samples,
                 None,
+                None,
                 self.transport.as_ref(),
                 &mut ws,
             )?;
@@ -327,6 +328,7 @@ impl Experiment {
             arrived: outcomes.len(),
             cut: 0,
             dropped: 0,
+            lost: 0,
         };
         self.finish_round(round, &s)
     }
@@ -360,6 +362,7 @@ impl Experiment {
             arrived: s.arrived,
             cut: s.cut,
             dropped: s.dropped,
+            lost: s.lost,
         };
         self.records.push(rec.clone());
         Ok(rec)

@@ -48,7 +48,10 @@ use crate::model::submodel::SubModel;
 use crate::network::{NetworkSim, RoundTiming};
 use crate::runtime::{EpochData, ModelRuntime};
 use crate::tensor::kernels::Workspace;
-use crate::transport::{client_round::ClientEnv, codec_id, frame, Transport};
+use crate::transport::{
+    client_round::ClientEnv, codec_id, frame, LossReason, RoundTripStatus, StateSyncSnapshot,
+    Transport,
+};
 
 /// Everything exchanged for one client in one round (the framed wire +
 /// the server-side bookkeeping needed to reconstruct it).
@@ -83,6 +86,11 @@ pub struct ClientRoundOutcome {
     /// aggregator memcpy-scan contiguous kept runs instead of testing
     /// the mask per coordinate.
     pub agg_plan: Option<Arc<PackPlan>>,
+    /// `Some(reason)` when the transport lost this client mid-exchange
+    /// (connection death or timeout). A lost outcome carries no bytes,
+    /// no loss and no reconstruction — the scheduler excludes it from
+    /// aggregation and reports it in `RoundRecord::lost`.
+    pub lost: Option<LossReason>,
 }
 
 /// Run one client's round through the transport:
@@ -114,6 +122,7 @@ pub fn run_client_round(
     client: usize,
     num_samples: usize,
     deadline_s: Option<f64>,
+    sync: Option<&StateSyncSnapshot>,
     transport: &dyn Transport,
     ws: &mut Workspace,
 ) -> anyhow::Result<ClientRoundOutcome> {
@@ -169,7 +178,7 @@ pub fn run_client_round(
 
     // ---- Exchange ----------------------------------------------------
     let mut reply = ws.take_bytes();
-    {
+    let status = {
         let mut env = ClientEnv {
             spec,
             runtime,
@@ -183,10 +192,34 @@ pub fn run_client_round(
             ws: &mut *ws,
         };
         let _sp = crate::obs::span_ab(crate::obs::Stage::RoundTrip, round as u64, client as u64);
-        transport.round_trip(client, &offer, &model_frame, &mut env, &mut reply)?;
-    }
+        transport.round_trip(client, &offer, &model_frame, sync, &mut env, &mut reply)?
+    };
     ws.give_bytes(offer);
     ws.give_bytes(model_frame);
+
+    if let RoundTripStatus::Lost(reason) = status {
+        // The exchange died with its connection. Give every buffer
+        // back and return a loss marker: no bytes are charged (the
+        // update never contributed), no reconstruction exists, and the
+        // scheduler rolls the host-side DGC snapshot back exactly as
+        // it does for a straggler cut.
+        ws.give_bytes(enc.bytes);
+        ws.give_bytes(reply);
+        return Ok(ClientRoundOutcome {
+            client,
+            submodel: submodel.clone(),
+            train_loss: 0.0,
+            down_bytes: 0,
+            up_bytes: 0,
+            down_payload_bytes: 0,
+            up_payload_bytes: 0,
+            epoch_flops: 0.0,
+            reconstructed: Vec::new(),
+            coord_mask: Vec::new(),
+            agg_plan: None,
+            lost: Some(reason),
+        });
+    }
 
     // ---- Decode the update frame ------------------------------------
     let parse_sp = crate::obs::span_ab(crate::obs::Stage::FrameParse, round as u64, client as u64);
@@ -333,6 +366,7 @@ pub fn run_client_round(
         reconstructed,
         coord_mask,
         agg_plan,
+        lost: None,
     })
 }
 

@@ -40,9 +40,14 @@
 //! measured wire bytes and [`metrics`] keeping the books.
 //! [`transport`] frames the whole conversation (versioned,
 //! CRC32-checked, length-prefixed — `RoundOffer`/`ModelDown`/
-//! `UpdateUp`/`Ack`/`Cut`) and runs it over an in-process loopback or
-//! real TCP sockets (`afd serve` / `afd client`), bit-identically
-//! either way (see `rust/src/transport/README.md`). [`tensor`] holds the flat-array ops, the blocked
+//! `UpdateUp`/`Ack`/`Cut`/`StateSync`, keep masks RLE-compressed when
+//! that wins) and runs it over an in-process loopback or real TCP
+//! sockets (`afd serve` / `afd client`): one event-loop thread
+//! multiplexes all client sockets with non-blocking I/O, rounds
+//! pipeline per connection, crashed clients reconnect and resume via
+//! exact state replay, and connections that stay dead degrade into
+//! policy-visible losses — bit-identical to loopback either way, churn
+//! included (see `rust/src/transport/README.md`). [`tensor`] holds the flat-array ops, the blocked
 //! training kernels, the runtime-dispatched SIMD layer
 //! (`tensor::simd`, cargo feature `simd`: AVX2 with a scalar
 //! reference that is bit-identical either way) and the zero-allocation

@@ -25,7 +25,7 @@ use anyhow::Result;
 use afd::config::{Backend, ExperimentConfig};
 use afd::coordinator::experiment::{artifacts_dir, run_experiment, Experiment};
 use afd::metrics::{render_table, summarize, ExperimentReport};
-use afd::transport::tcp::{run_client_loop, TcpServer};
+use afd::transport::tcp::{run_client_loop, ClientEnd, ClientOptions, TcpServer};
 use afd::transport::{Loopback, Transport};
 use afd::util::cli::ArgSpec;
 use afd::util::json::Json;
@@ -311,11 +311,27 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
             "conns",
             "0",
             "client connections to accept (0 = in-process loopback transport)",
+        )
+        .opt_maybe(
+            "io-timeout-s",
+            "seconds before an unanswered round fails its connection",
+        )
+        .opt_maybe(
+            "resume",
+            "true|false: replay open rounds to reconnecting clients",
         );
     let args = spec
         .parse("afd serve", argv)
         .map_err(|e| anyhow::anyhow!(e))?;
-    let cfg = parse_experiment(&args)?;
+    let mut cfg = parse_experiment(&args)?;
+    // Before `to_json` below: the clients take their socket timeouts
+    // from the shipped config.
+    if let Some(v) = args.get("io-timeout-s") {
+        cfg.transport.io_timeout_s = v.parse()?;
+    }
+    if let Some(v) = args.get("resume") {
+        cfg.transport.resume = v == "true" || v == "1";
+    }
     let conns: usize = args.usize("conns").map_err(|e| anyhow::anyhow!(e))?;
     init_obs(&args);
     let transport: Arc<dyn Transport> = if conns == 0 {
@@ -336,6 +352,7 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
             conns,
             &cfg.to_json().to_string_compact(),
             model_spec.layout_fingerprint(),
+            &cfg.transport,
         )?;
         println!("[afd] {conns} client process(es) connected");
         Arc::new(t)
@@ -399,15 +416,33 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
 fn cmd_client(argv: Vec<String>) -> Result<()> {
     let spec = ArgSpec::new("Join an `afd serve` coordinator as a remote client process")
         .opt("connect", "127.0.0.1:4777", "coordinator address")
-        .opt("retry-s", "30", "seconds to keep retrying the initial connect");
+        .opt("retry-s", "30", "seconds to keep retrying the initial connect")
+        .opt(
+            "reconnect-s",
+            "30",
+            "seconds to keep redialing after a dropped connection (0 = give up)",
+        )
+        .opt_maybe(
+            "exit-after",
+            "exit abruptly after serving N rounds (churn-test crash hook)",
+        );
     let args = spec
         .parse("afd client", argv)
         .map_err(|e| anyhow::anyhow!(e))?;
     let addr = args.get("connect").unwrap();
-    let retry = args.f64("retry-s").map_err(|e| anyhow::anyhow!(e))?;
+    let opts = ClientOptions {
+        connect_retry_s: args.f64("retry-s").map_err(|e| anyhow::anyhow!(e))?,
+        reconnect_s: args.f64("reconnect-s").map_err(|e| anyhow::anyhow!(e))?,
+        exit_after: match args.get("exit-after") {
+            Some(v) => Some(v.parse()?),
+            None => None,
+        },
+    };
     println!("[afd] joining coordinator at {addr}");
-    run_client_loop(addr, retry)?;
-    println!("[afd] coordinator said Bye — exiting");
+    match run_client_loop(addr, &opts)? {
+        ClientEnd::Bye => println!("[afd] coordinator said Bye — exiting"),
+        ClientEnd::ExitAfter => println!("[afd] --exit-after reached — exiting"),
+    }
     Ok(())
 }
 

@@ -34,6 +34,10 @@ pub struct RoundRecord {
     pub cut: usize,
     /// Clients lost to availability churn before arrival.
     pub dropped: usize,
+    /// Clients lost in transit by the transport (dead or timed-out
+    /// connection); the engine converts them into cuts instead of
+    /// failing the run.
+    pub lost: usize,
 }
 
 impl RoundRecord {
@@ -59,6 +63,7 @@ impl RoundRecord {
         j.set("arrived", Json::Num(self.arrived as f64));
         j.set("cut", Json::Num(self.cut as f64));
         j.set("dropped", Json::Num(self.dropped as f64));
+        j.set("lost", Json::Num(self.lost as f64));
         j
     }
 }
@@ -335,6 +340,7 @@ mod tests {
                     arrived: 5,
                     cut: 0,
                     dropped: 0,
+                    lost: 0,
                 }
             })
             .collect();

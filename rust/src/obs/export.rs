@@ -28,6 +28,7 @@ fn frame_kind_name(tag: usize) -> Option<&'static str> {
         7 => "ack",
         8 => "cut",
         9 => "bye",
+        10 => "state_sync",
         _ => return None,
     })
 }
@@ -191,6 +192,22 @@ pub fn stats_json() -> Json {
         Json::Num(metrics::CLIENTS_DROPPED.get() as f64),
     );
     counters.set(
+        "clients_lost",
+        Json::Num(metrics::CLIENTS_LOST.get() as f64),
+    );
+    counters.set(
+        "transport_timeouts",
+        Json::Num(metrics::TRANSPORT_TIMEOUTS.get() as f64),
+    );
+    counters.set(
+        "conn_reconnects",
+        Json::Num(metrics::CONN_RECONNECTS.get() as f64),
+    );
+    counters.set(
+        "resync_bytes",
+        Json::Num(metrics::RESYNC_BYTES.get() as f64),
+    );
+    counters.set(
         "rounds_completed",
         Json::Num(metrics::ROUNDS_COMPLETED.get() as f64),
     );
@@ -221,6 +238,10 @@ pub fn stats_json() -> Json {
     gauges.set(
         "resident_bytes_peak",
         Json::Num(metrics::RESIDENT_BYTES_PEAK.get() as f64),
+    );
+    gauges.set(
+        "pipeline_depth_peak",
+        Json::Num(metrics::PIPELINE_DEPTH.get() as f64),
     );
 
     let mut sent = Json::obj();

@@ -199,6 +199,16 @@ pub static CRC_FAILURES: Counter = Counter::new();
 pub static STRAGGLERS_CUT: Counter = Counter::new();
 /// Clients whose finished work was dropped by churn.
 pub static CLIENTS_DROPPED: Counter = Counter::new();
+/// Clients lost in transit by the transport (dead/timed-out
+/// connection); the scheduler converts these into cuts.
+pub static CLIENTS_LOST: Counter = Counter::new();
+/// Connections that timed out waiting on socket I/O.
+pub static TRANSPORT_TIMEOUTS: Counter = Counter::new();
+/// Client sessions re-accepted after a disconnect (session resume).
+pub static CONN_RECONNECTS: Counter = Counter::new();
+/// `StateSync` wire bytes sent to resuming clients (excluded from the
+/// round records so TCP and loopback accounting compare equal).
+pub static RESYNC_BYTES: Counter = Counter::new();
 /// Rounds the engine completed.
 pub static ROUNDS_COMPLETED: Counter = Counter::new();
 /// Full-model evaluations run by the coordinator.
@@ -218,8 +228,11 @@ pub static QUEUE_DEPTH: Gauge = Gauge::new();
 pub static POOL_WIDTH: Gauge = Gauge::new();
 /// Residual store: resident client-state bytes (high-water mark).
 pub static RESIDENT_BYTES_PEAK: Gauge = Gauge::new();
+/// TCP coordinator: pipelined offers in flight on one connection
+/// (high-water mark across all connections).
+pub static PIPELINE_DEPTH: Gauge = Gauge::new();
 
-/// Frame counts by `FrameKind as u8` (slot 0 unused; kinds are 1-9).
+/// Frame counts by `FrameKind as u8` (slot 0 unused; kinds are 1-10).
 pub const FRAME_KIND_SLOTS: usize = 16;
 
 // Repeat-initializers for the static arrays below; only ever used in
@@ -264,6 +277,10 @@ pub fn reset_all() {
         &CRC_FAILURES,
         &STRAGGLERS_CUT,
         &CLIENTS_DROPPED,
+        &CLIENTS_LOST,
+        &TRANSPORT_TIMEOUTS,
+        &CONN_RECONNECTS,
+        &RESYNC_BYTES,
         &ROUNDS_COMPLETED,
         &EVALS_RUN,
         &RESIDUAL_STORE_HITS,
@@ -276,6 +293,7 @@ pub fn reset_all() {
     QUEUE_DEPTH.reset();
     POOL_WIDTH.reset();
     RESIDENT_BYTES_PEAK.reset();
+    PIPELINE_DEPTH.reset();
     for c in FRAMES_SENT.iter().chain(FRAMES_PARSED.iter()) {
         c.reset();
     }

@@ -55,7 +55,7 @@ use crate::network::{Availability, NetworkSim};
 use crate::runtime::{EpochData, RuntimeHost};
 use crate::sched::policy::SchedulerPolicy;
 use crate::tensor::kernels::WorkspacePool;
-use crate::transport::Transport;
+use crate::transport::{StateSyncSnapshot, Transport};
 use crate::util::pool::LazyPool;
 use crate::util::rng::Pcg64;
 
@@ -122,6 +122,11 @@ pub struct RoundSummary {
     pub cut: usize,
     /// Clients lost to availability churn before arrival.
     pub dropped: usize,
+    /// Clients lost by the transport mid-exchange (connection death or
+    /// I/O timeout) — the graceful-degradation path: their DGC state
+    /// is rolled back like a cut and no bytes are charged, but the
+    /// record says exactly what the network took.
+    pub lost: usize,
 }
 
 /// A prepared per-client job: everything the (possibly worker-thread)
@@ -135,6 +140,9 @@ struct ClientJob {
     dgc: Option<DgcState>,
     /// FedAvg weight, reported on the client's uplink frame.
     num_samples: usize,
+    /// Pre-round client state captured for session resume (only when
+    /// the transport asks; see [`Transport::wants_state_sync`]).
+    sync: Option<StateSyncSnapshot>,
 }
 
 struct JobResult {
@@ -218,6 +226,9 @@ pub struct Engine {
     /// Codec-payload share of `pending_down` (framing-overhead
     /// accounting).
     pending_down_payload: u64,
+    /// Transport losses accumulated since the last summary (continuous
+    /// policies lose clients at refill time, between aggregations).
+    pending_lost: usize,
     /// Reused output buffer for the batched aggregation: the new
     /// global is built here in one pool dispatch, then swapped with
     /// `ctx.global` (last round's vector becomes next round's
@@ -244,6 +255,7 @@ impl Engine {
             in_flight: Vec::new(),
             pending_down: 0,
             pending_down_payload: 0,
+            pending_lost: 0,
             global_scratch: Vec::new(),
             epoch_order: Vec::new(),
         }
@@ -303,6 +315,7 @@ impl Engine {
         epoch_order: &mut Vec<u32>,
     ) -> (Vec<ClientJob>, Vec<Option<DgcState>>) {
         let mut backups = Vec::with_capacity(cohort.len());
+        let want_sync = ctx.transport.wants_state_sync();
         let jobs = cohort
             .iter()
             .map(|&c| {
@@ -312,6 +325,25 @@ impl Engine {
                 // rehydration, or fresh pure derivation) — identical
                 // state and RNG position to the old eager fleet entry.
                 let st = ctx.fleet.client(c);
+                // Session-resume snapshot: the client's complete
+                // mutable remainder (RNG position, participation
+                // count, DGC residuals), captured *before* this round
+                // mutates any of it — a resuming transport replays it
+                // to a restarted process ahead of the dispatch.
+                let sync = if want_sync {
+                    let (rng_state, rng_inc) = st.rng.to_raw();
+                    let (u, v) = st.dgc.residuals();
+                    Some(StateSyncSnapshot {
+                        client: c as u32,
+                        participations: st.participations as u64,
+                        rng_state,
+                        rng_inc,
+                        dgc_u: u.to_vec(),
+                        dgc_v: v.to_vec(),
+                    })
+                } else {
+                    None
+                };
                 st.participations += 1;
                 let num_samples = st.num_samples;
                 // Assemble the epoch into the client's recycled buffer
@@ -341,6 +373,7 @@ impl Engine {
                     data,
                     dgc,
                     num_samples,
+                    sync,
                 }
             })
             .collect();
@@ -392,6 +425,7 @@ impl Engine {
                         job.client,
                         job.num_samples,
                         deadline,
+                        job.sync.as_ref(),
                         transport.as_ref(),
                         &mut ws,
                     );
@@ -426,6 +460,7 @@ impl Engine {
                         job.client,
                         job.num_samples,
                         deadline,
+                        job.sync.as_ref(),
                         ctx.transport.as_ref(),
                         &mut ws,
                     );
@@ -474,21 +509,30 @@ impl Engine {
         };
         let cohort = Self::sample_from(ctx.rng, &cands, want);
         // Rollback snapshots (2×num_params f32 per client) are only
-        // taken when a client can actually end up excluded.
-        let snapshot = self.policy.may_cut() || self.avail.config().enabled;
+        // taken when a client can actually end up excluded — a policy
+        // that cuts, churn, or a transport that can lose connections.
+        let snapshot =
+            self.policy.may_cut() || self.avail.config().enabled || ctx.transport.may_lose();
         let (jobs, mut dgc_backups) =
             Self::prepare_jobs(ctx, round, &cohort, snapshot, &mut self.epoch_order);
         let results = self.execute_jobs(ctx, round, jobs)?;
 
-        // Arrival offsets (seconds after dispatch) + churn drops.
+        // Arrival offsets (seconds after dispatch) + churn drops +
+        // transport losses (a connection died or timed out with this
+        // client's exchange in flight — the update never existed, so
+        // it can't arrive).
         let k = results.len();
         let mut offsets = Vec::with_capacity(k);
-        let mut dropped_flag = vec![false; k];
+        let mut excluded_flag = vec![false; k];
         let mut dropped = 0usize;
+        let mut lost = 0usize;
         for (i, r) in results.iter().enumerate() {
             let off = Self::flight_time(ctx, &r.outcome);
-            if !self.avail.is_online(r.outcome.client, ctx.cum_s + off) {
-                dropped_flag[i] = true;
+            if r.outcome.lost.is_some() {
+                excluded_flag[i] = true;
+                lost += 1;
+            } else if !self.avail.is_online(r.outcome.client, ctx.cum_s + off) {
+                excluded_flag[i] = true;
                 dropped += 1;
             }
             offsets.push(off);
@@ -496,7 +540,7 @@ impl Engine {
 
         // Replay arrivals in virtual-time order until the policy (or a
         // deadline, or an empty sky) closes the round.
-        let mut order: Vec<usize> = (0..k).filter(|&i| !dropped_flag[i]).collect();
+        let mut order: Vec<usize> = (0..k).filter(|&i| !excluded_flag[i]).collect();
         order.sort_by(|&a, &b| offsets[a].total_cmp(&offsets[b]).then(a.cmp(&b)));
         let deadline = self.policy.deadline_s();
         let mut included = vec![false; k];
@@ -562,6 +606,7 @@ impl Engine {
         summary.arrived = arrived;
         summary.cut = cut;
         summary.dropped = dropped;
+        summary.lost = lost;
         // Round-closing control frames: Ack commits the device-side
         // codec state, Cut rolls it back (the loops above did the same
         // to the host-side shadow).
@@ -574,6 +619,7 @@ impl Engine {
             use crate::obs::metrics as om;
             om::STRAGGLERS_CUT.add(cut as u64);
             om::CLIENTS_DROPPED.add(dropped as u64);
+            om::CLIENTS_LOST.add(lost as u64);
             om::ROUNDS_COMPLETED.incr();
             // Round boundary on the virtual clock (`b` = virtual ns).
             crate::obs::mark(
@@ -646,6 +692,7 @@ impl Engine {
                         return Ok(RoundSummary {
                             round_s: idle,
                             dropped,
+                            lost: std::mem::take(&mut self.pending_lost),
                             // Bytes were charged at dispatch for clients
                             // that have since all dropped — report them
                             // here rather than misattributing them to a
@@ -676,6 +723,7 @@ impl Engine {
         summary.round_s = self.now - window_start;
         summary.arrived = buffer.len();
         summary.dropped = dropped;
+        summary.lost = std::mem::take(&mut self.pending_lost);
         summary.down_bytes = std::mem::take(&mut self.pending_down);
         summary.down_payload_bytes = std::mem::take(&mut self.pending_down_payload);
         // Every buffered update was aggregated: commit device-side
@@ -687,6 +735,7 @@ impl Engine {
         if crate::obs::enabled() {
             use crate::obs::metrics as om;
             om::CLIENTS_DROPPED.add(dropped as u64);
+            om::CLIENTS_LOST.add(summary.lost as u64);
             om::ROUNDS_COMPLETED.incr();
             crate::obs::mark(
                 crate::obs::Stage::RoundMark,
@@ -711,13 +760,30 @@ impl Engine {
             return Ok(());
         }
         let picked = Self::sample_from(ctx.rng, &cands, target - self.heap.len());
-        // Continuous policies only exclude via churn drops.
-        let snapshot = self.avail.config().enabled;
+        // Continuous policies exclude via churn drops — or via
+        // transport losses, handled below.
+        let snapshot = self.avail.config().enabled || ctx.transport.may_lose();
         let (jobs, dgc_backups) =
             Self::prepare_jobs(ctx, round, &picked, snapshot, &mut self.epoch_order);
         let results = self.execute_jobs(ctx, round, jobs)?;
+        let mut lost_outcomes = Vec::new();
         for (r, dgc_backup) in results.into_iter().zip(dgc_backups) {
             let o = r.outcome;
+            if o.lost.is_some() {
+                // The exchange died with its connection before the
+                // update existed: roll the host-side DGC snapshot
+                // back, tell the device (best-effort Cut), and report
+                // the loss with the next aggregation's summary. The
+                // client is not in flight — it can be re-dispatched by
+                // a later refill.
+                if let Some(b) = dgc_backup {
+                    ctx.fleet.client(o.client).put_dgc(b);
+                }
+                ctx.transport.finish(o.client, round as u32, false)?;
+                self.pending_lost += 1;
+                lost_outcomes.push(o);
+                continue;
+            }
             let dt = Self::flight_time(ctx, &o);
             self.pending_down += o.down_bytes;
             self.pending_down_payload += o.down_payload_bytes;
@@ -731,6 +797,9 @@ impl Engine {
                 outcome: o,
                 dgc_backup,
             });
+        }
+        if !lost_outcomes.is_empty() {
+            Self::recycle_outcomes(ctx, lost_outcomes.into_iter());
         }
         Ok(())
     }

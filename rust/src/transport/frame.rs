@@ -5,7 +5,7 @@
 //! ```text
 //! offset  size  field
 //! 0       2     magic      b"AF"
-//! 2       1     version    WIRE_VERSION (= 1)
+//! 2       1     version    WIRE_VERSION (= 2)
 //! 3       1     kind       FrameKind as u8
 //! 4       4     len        u32 LE, payload length in bytes
 //! 8       len   payload    kind-specific (see the message structs)
@@ -34,7 +34,10 @@
 use crate::model::submodel::SubModel;
 
 pub const MAGIC: [u8; 2] = *b"AF";
-pub const WIRE_VERSION: u8 = 1;
+/// v2: `Hello` carries a session token, `Config` echoes the assigned
+/// token, `StateSync` exists, and `RoundOffer` kept-unit bitmaps may be
+/// run-length encoded (see [`encode_round_offer`]).
+pub const WIRE_VERSION: u8 = 2;
 pub const HEADER_LEN: usize = 8;
 pub const CRC_LEN: usize = 4;
 /// Fixed per-frame overhead: header + trailing CRC.
@@ -70,6 +73,12 @@ pub enum FrameKind {
     Cut = 8,
     /// Server → client: the experiment is over.
     Bye = 9,
+    /// Server → client: authoritative pre-round client state (RNG
+    /// position, participation count, DGC residuals) pushed before a
+    /// replayed or post-reconnect dispatch, so a restarted client
+    /// process resumes bit-exactly where the coordinator's host-side
+    /// shadow fleet says it should.
+    StateSync = 10,
 }
 
 impl FrameKind {
@@ -84,6 +93,7 @@ impl FrameKind {
             7 => FrameKind::Ack,
             8 => FrameKind::Cut,
             9 => FrameKind::Bye,
+            10 => FrameKind::StateSync,
             _ => return None,
         })
     }
@@ -339,10 +349,110 @@ impl<'a> PayloadReader<'a> {
 // Protocol messages
 // ---------------------------------------------------------------------
 
+/// Group body encodings for `RoundOffer` kept-unit sets.
+///
+/// Keep decisions are per *unit*, and units inside a mask group are
+/// kept or dropped in long stretches whenever the dropout policy keeps
+/// contiguous score ranges — so the wire carries whichever of two
+/// encodings is smaller for that group, chosen deterministically by
+/// the encoder (ties go to the raw bitmap):
+pub const GROUP_BITMAP: u8 = 0;
+pub const GROUP_RLE: u8 = 1;
+
+fn varint_len(mut v: u64) -> usize {
+    let mut n = 1;
+    while v >= 0x80 {
+        v >>= 7;
+        n += 1;
+    }
+    n
+}
+
+fn push_varint(out: &mut Vec<u8>, mut v: u64) {
+    while v >= 0x80 {
+        out.push((v as u8 & 0x7f) | 0x80);
+        v >>= 7;
+    }
+    out.push(v as u8);
+}
+
+/// Read one LEB128 varint from `buf[pos..]`; advances `pos`. Errors if
+/// the region ends mid-varint or the value exceeds 32 bits (run
+/// lengths can never exceed a group's `u32` unit count).
+fn read_varint(buf: &[u8], pos: &mut usize, what: &'static str) -> Result<u64, FrameError> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        if *pos >= buf.len() || shift > 28 {
+            return Err(FrameError::BadPayload {
+                kind: FrameKind::RoundOffer,
+                what,
+            });
+        }
+        let b = buf[*pos];
+        *pos += 1;
+        v |= ((b & 0x7f) as u64) << shift;
+        if b & 0x80 == 0 {
+            if v > u32::MAX as u64 {
+                return Err(FrameError::BadPayload {
+                    kind: FrameKind::RoundOffer,
+                    what,
+                });
+            }
+            return Ok(v);
+        }
+        shift += 7;
+    }
+}
+
+/// Byte length of the RLE body for one kept-set: alternating run
+/// lengths (kept first; a leading zero run means unit 0 is dropped).
+fn rle_body_len(keep: &[bool]) -> usize {
+    let mut n = 0usize;
+    let mut cur = true;
+    let mut run = 0u64;
+    for &k in keep {
+        if k == cur {
+            run += 1;
+        } else {
+            n += varint_len(run);
+            cur = k;
+            run = 1;
+        }
+    }
+    if !keep.is_empty() {
+        n += varint_len(run);
+    }
+    n
+}
+
+fn push_rle_body(out: &mut Vec<u8>, keep: &[bool]) {
+    let mut cur = true;
+    let mut run = 0u64;
+    for &k in keep {
+        if k == cur {
+            run += 1;
+        } else {
+            push_varint(out, run);
+            cur = k;
+            run = 1;
+        }
+    }
+    if !keep.is_empty() {
+        push_varint(out, run);
+    }
+}
+
 /// `RoundOffer` payload:
 /// `u32 round ‖ u32 client ‖ u64 seed ‖ f32 lr ‖ f64 deadline_s (NaN =
-/// none) ‖ u16 group count ‖ per group: u32 unit count ‖ ⌈count/8⌉
-/// kept-unit bitmap bytes (bit i of byte i/8 = unit i kept)`.
+/// none) ‖ u16 group count ‖ per group: u32 unit count ‖ u8 tag ‖
+/// body`. Tag [`GROUP_BITMAP`]: `⌈count/8⌉` bitmap bytes (bit i of
+/// byte i/8 = unit i kept). Tag [`GROUP_RLE`]: LEB128 run lengths
+/// alternating kept/dropped, kept first (a leading zero run means unit
+/// 0 is dropped); runs sum to exactly `count` and the body ends with
+/// the last run. The encoder emits whichever body is shorter, so
+/// dense contiguous keep patterns cost bytes proportional to their
+/// run count instead of the unit count.
 #[derive(Clone, Copy, Debug)]
 pub struct RoundOfferMsg<'a> {
     pub round: u32,
@@ -350,8 +460,8 @@ pub struct RoundOfferMsg<'a> {
     pub seed: u64,
     pub lr: f32,
     pub deadline_s: f64,
-    /// Raw per-group `u32 count ‖ bitmap` region (zero-copy; walk with
-    /// [`RoundOfferMsg::for_each_group`] or materialize with
+    /// Raw per-group `u32 count ‖ u8 tag ‖ body` region (zero-copy;
+    /// walk with [`RoundOfferMsg::for_each_group`] or materialize with
     /// [`RoundOfferMsg::submodel`]).
     groups: &'a [u8],
     group_count: u16,
@@ -378,15 +488,67 @@ pub fn encode_round_offer(
     for keep in groups {
         assert!(keep.len() <= u32::MAX as usize);
         out.extend_from_slice(&(keep.len() as u32).to_le_bytes());
-        let start = out.len();
-        out.resize(start + keep.len().div_ceil(8), 0);
-        for (i, &k) in keep.iter().enumerate() {
-            if k {
-                out[start + i / 8] |= 1 << (i % 8);
+        let raw = keep.len().div_ceil(8);
+        let rle = rle_body_len(keep);
+        if rle < raw {
+            out.push(GROUP_RLE);
+            push_rle_body(out, keep);
+        } else {
+            out.push(GROUP_BITMAP);
+            let start = out.len();
+            out.resize(start + raw, 0);
+            for (i, &k) in keep.iter().enumerate() {
+                if k {
+                    out[start + i / 8] |= 1 << (i % 8);
+                }
             }
         }
     }
     end_frame(out, base);
+}
+
+/// Validate (or re-walk) one group body starting at `groups[*pos]`,
+/// which must already sit past the count header. Returns the tag.
+fn walk_group_body(groups: &[u8], pos: &mut usize, count: usize) -> Result<u8, FrameError> {
+    if *pos >= groups.len() {
+        return Err(FrameError::BadPayload {
+            kind: FrameKind::RoundOffer,
+            what: "group encoding tag",
+        });
+    }
+    let tag = groups[*pos];
+    *pos += 1;
+    match tag {
+        GROUP_BITMAP => {
+            let bm = count.div_ceil(8);
+            if groups.len() - *pos < bm {
+                return Err(FrameError::BadPayload {
+                    kind: FrameKind::RoundOffer,
+                    what: "group bitmap",
+                });
+            }
+            *pos += bm;
+        }
+        GROUP_RLE => {
+            let mut total = 0u64;
+            while total < count as u64 {
+                total += read_varint(groups, pos, "group run length")?;
+            }
+            if total != count as u64 {
+                return Err(FrameError::BadPayload {
+                    kind: FrameKind::RoundOffer,
+                    what: "group runs exceed unit count",
+                });
+            }
+        }
+        _ => {
+            return Err(FrameError::BadPayload {
+                kind: FrameKind::RoundOffer,
+                what: "unknown group encoding tag",
+            });
+        }
+    }
+    Ok(tag)
 }
 
 pub fn parse_round_offer<'a>(view: &FrameView<'a>) -> Result<RoundOfferMsg<'a>, FrameError> {
@@ -416,14 +578,7 @@ pub fn parse_round_offer<'a>(view: &FrameView<'a>) -> Result<RoundOfferMsg<'a>, 
         }
         let count = u32::from_le_bytes(groups[pos..pos + 4].try_into().unwrap()) as usize;
         pos += 4;
-        let bm = count.div_ceil(8);
-        if groups.len() - pos < bm {
-            return Err(FrameError::BadPayload {
-                kind: FrameKind::RoundOffer,
-                what: "group bitmap",
-            });
-        }
-        pos += bm;
+        walk_group_body(groups, &mut pos, count)?;
     }
     if pos != groups.len() {
         return Err(FrameError::BadPayload {
@@ -442,23 +597,66 @@ pub fn parse_round_offer<'a>(view: &FrameView<'a>) -> Result<RoundOfferMsg<'a>, 
     })
 }
 
+/// One group's kept-unit set, borrowing its encoded body (raw bitmap
+/// or RLE); walk it with [`GroupBits::for_each_bit`] — no allocation
+/// either way. The body was validated at parse time.
+#[derive(Clone, Copy, Debug)]
+pub struct GroupBits<'a> {
+    count: usize,
+    tag: u8,
+    body: &'a [u8],
+}
+
+impl GroupBits<'_> {
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// Call `f(unit index, kept)` for every unit in order.
+    pub fn for_each_bit(&self, mut f: impl FnMut(usize, bool)) {
+        if self.tag == GROUP_BITMAP {
+            for i in 0..self.count {
+                f(i, self.body[i / 8] & (1 << (i % 8)) != 0);
+            }
+        } else {
+            let mut pos = 0usize;
+            let mut kept = true;
+            let mut i = 0usize;
+            while i < self.count {
+                let run = read_varint(self.body, &mut pos, "validated run").unwrap() as usize;
+                for _ in 0..run {
+                    f(i, kept);
+                    i += 1;
+                }
+                kept = !kept;
+            }
+        }
+    }
+}
+
 impl<'a> RoundOfferMsg<'a> {
     pub fn group_count(&self) -> usize {
         self.group_count as usize
     }
 
-    /// Walk the kept-unit bitmaps without materializing them:
-    /// `f(group index, unit count, bitmap bytes)`. The region was
-    /// validated at parse time.
-    pub fn for_each_group(&self, mut f: impl FnMut(usize, usize, &'a [u8])) {
+    /// Walk the kept-unit sets without materializing them:
+    /// `f(group index, bits)`. The region was validated at parse time.
+    pub fn for_each_group(&self, mut f: impl FnMut(usize, GroupBits<'a>)) {
         let mut pos = 0usize;
         for g in 0..self.group_count as usize {
             let head = self.groups[pos..pos + 4].try_into().unwrap();
             let count = u32::from_le_bytes(head) as usize;
             pos += 4;
-            let bm = count.div_ceil(8);
-            f(g, count, &self.groups[pos..pos + bm]);
-            pos += bm;
+            let body_start = pos + 1;
+            let tag = walk_group_body(self.groups, &mut pos, count).unwrap();
+            f(
+                g,
+                GroupBits {
+                    count,
+                    tag,
+                    body: &self.groups[body_start..pos],
+                },
+            );
         }
     }
 
@@ -466,8 +664,10 @@ impl<'a> RoundOfferMsg<'a> {
     /// only — the loopback path reuses the coordinator's `SubModel`).
     pub fn submodel(&self) -> SubModel {
         let mut keep: Vec<Vec<bool>> = Vec::with_capacity(self.group_count as usize);
-        self.for_each_group(|_, count, bitmap| {
-            keep.push((0..count).map(|i| bitmap[i / 8] & (1 << (i % 8)) != 0).collect());
+        self.for_each_group(|_, bits| {
+            let mut units = vec![false; bits.count()];
+            bits.for_each_bit(|i, k| units[i] = k);
+            keep.push(units);
         });
         SubModel::from_keep(keep)
     }
@@ -480,17 +680,16 @@ impl<'a> RoundOfferMsg<'a> {
             return false;
         }
         let mut ok = true;
-        self.for_each_group(|g, count, bitmap| {
-            if count != sm.keep[g].len() {
+        self.for_each_group(|g, bits| {
+            if bits.count() != sm.keep[g].len() {
                 ok = false;
                 return;
             }
-            for (i, &k) in sm.keep[g].iter().enumerate() {
-                if (bitmap[i / 8] & (1 << (i % 8)) != 0) != k {
+            bits.for_each_bit(|i, k| {
+                if k != sm.keep[g][i] {
                     ok = false;
-                    return;
                 }
-            }
+            });
         });
         ok
     }
@@ -632,15 +831,19 @@ pub fn parse_round_close(view: &FrameView<'_>) -> Result<RoundCloseMsg, FrameErr
 /// Wire length of an `Ack`/`Cut` frame (fixed: 8-byte payload).
 pub const ROUND_CLOSE_WIRE: u64 = FRAME_OVERHEAD + 8;
 
-/// `Config` payload: `u64 layout fingerprint ‖ UTF-8 config JSON`.
-pub fn encode_config(out: &mut Vec<u8>, fingerprint: u64, json: &str) {
+/// `Config` payload: `u64 layout fingerprint ‖ u64 session token ‖
+/// UTF-8 config JSON`. The token is the coordinator-assigned session
+/// identity the client presents in `Hello` to resume after a
+/// reconnect (never zero).
+pub fn encode_config(out: &mut Vec<u8>, fingerprint: u64, token: u64, json: &str) {
     let base = begin_frame(out, FrameKind::Config);
     out.extend_from_slice(&fingerprint.to_le_bytes());
+    out.extend_from_slice(&token.to_le_bytes());
     out.extend_from_slice(json.as_bytes());
     end_frame(out, base);
 }
 
-pub fn parse_config<'a>(view: &FrameView<'a>) -> Result<(u64, &'a str), FrameError> {
+pub fn parse_config<'a>(view: &FrameView<'a>) -> Result<(u64, u64, &'a str), FrameError> {
     if view.kind != FrameKind::Config {
         return Err(FrameError::BadPayload {
             kind: view.kind,
@@ -649,17 +852,31 @@ pub fn parse_config<'a>(view: &FrameView<'a>) -> Result<(u64, &'a str), FrameErr
     }
     let mut r = PayloadReader::new(view);
     let fp = r.u64("fingerprint")?;
+    let token = r.u64("session token")?;
     let json = std::str::from_utf8(r.rest()).map_err(|_| FrameError::BadPayload {
         kind: FrameKind::Config,
         what: "config JSON is not UTF-8",
     })?;
-    Ok((fp, json))
+    Ok((fp, token, json))
 }
 
-/// `Hello` (client → server) / `Ready` (fingerprint echo) / `Bye`.
-pub fn encode_hello(out: &mut Vec<u8>) {
+/// `Hello` payload: `u64 session token` — zero for a brand-new client
+/// process, or the token a previous `Config` assigned to resume that
+/// session's open rounds after a reconnect.
+pub fn encode_hello(out: &mut Vec<u8>, token: u64) {
     let base = begin_frame(out, FrameKind::Hello);
+    out.extend_from_slice(&token.to_le_bytes());
     end_frame(out, base);
+}
+
+pub fn parse_hello(view: &FrameView<'_>) -> Result<u64, FrameError> {
+    if view.kind != FrameKind::Hello {
+        return Err(FrameError::BadPayload {
+            kind: view.kind,
+            what: "expected Hello",
+        });
+    }
+    PayloadReader::new(view).u64("session token")
 }
 
 pub fn encode_ready(out: &mut Vec<u8>, fingerprint: u64) {
@@ -681,6 +898,106 @@ pub fn parse_ready(view: &FrameView<'_>) -> Result<u64, FrameError> {
 pub fn encode_bye(out: &mut Vec<u8>) {
     let base = begin_frame(out, FrameKind::Bye);
     end_frame(out, base);
+}
+
+/// `StateSync` payload: `u32 client ‖ u64 participations ‖ 16-byte
+/// u128 LE RNG state ‖ 16-byte u128 LE RNG stream ‖ u32 residual len ‖
+/// len × f32 LE momentum (u) ‖ len × f32 LE velocity (v)`.
+///
+/// This is exactly the residual store's spill record for one logical
+/// client — the complete mutable remainder of its state (everything
+/// not derivable from `(seed, id)`), captured by the coordinator
+/// before the round mutates it. A restarted client process that
+/// applies a `StateSync` before the dispatch that follows it is
+/// bit-identical to one that lived through every prior round.
+#[derive(Clone, Copy, Debug)]
+pub struct StateSyncMsg<'a> {
+    pub client: u32,
+    pub participations: u64,
+    pub rng_state: u128,
+    pub rng_inc: u128,
+    residual_len: usize,
+    body: &'a [u8],
+}
+
+pub fn encode_state_sync(
+    out: &mut Vec<u8>,
+    client: u32,
+    participations: u64,
+    rng_state: u128,
+    rng_inc: u128,
+    u: &[f32],
+    v: &[f32],
+) {
+    assert_eq!(u.len(), v.len(), "state sync: u/v length mismatch");
+    assert!(u.len() <= u32::MAX as usize);
+    let base = begin_frame(out, FrameKind::StateSync);
+    out.extend_from_slice(&client.to_le_bytes());
+    out.extend_from_slice(&participations.to_le_bytes());
+    out.extend_from_slice(&rng_state.to_le_bytes());
+    out.extend_from_slice(&rng_inc.to_le_bytes());
+    out.extend_from_slice(&(u.len() as u32).to_le_bytes());
+    for &x in u {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    for &x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    end_frame(out, base);
+}
+
+pub fn parse_state_sync<'a>(view: &FrameView<'a>) -> Result<StateSyncMsg<'a>, FrameError> {
+    if view.kind != FrameKind::StateSync {
+        return Err(FrameError::BadPayload {
+            kind: view.kind,
+            what: "expected StateSync",
+        });
+    }
+    let mut r = PayloadReader::new(view);
+    let client = r.u32("client")?;
+    let participations = r.u64("participations")?;
+    let rng_state = u128::from_le_bytes(r.bytes(16, "rng state")?.try_into().unwrap());
+    let rng_inc = u128::from_le_bytes(r.bytes(16, "rng stream")?.try_into().unwrap());
+    let residual_len = r.u32("residual len")? as usize;
+    let body = r.rest();
+    if body.len() != residual_len.saturating_mul(8) {
+        return Err(FrameError::BadPayload {
+            kind: FrameKind::StateSync,
+            what: "residual body length",
+        });
+    }
+    Ok(StateSyncMsg {
+        client,
+        participations,
+        rng_state,
+        rng_inc,
+        residual_len,
+        body,
+    })
+}
+
+impl StateSyncMsg<'_> {
+    pub fn residual_len(&self) -> usize {
+        self.residual_len
+    }
+
+    /// Decode the momentum (`u`) and velocity (`v`) residual vectors
+    /// into the caller's buffers (cleared first; capacity reused).
+    pub fn read_residuals(&self, u: &mut Vec<f32>, v: &mut Vec<f32>) {
+        u.clear();
+        v.clear();
+        u.reserve(self.residual_len);
+        v.reserve(self.residual_len);
+        for i in 0..self.residual_len {
+            let at = i * 4;
+            u.push(f32::from_le_bytes(self.body[at..at + 4].try_into().unwrap()));
+        }
+        let voff = self.residual_len * 4;
+        for i in 0..self.residual_len {
+            let at = voff + i * 4;
+            v.push(f32::from_le_bytes(self.body[at..at + 4].try_into().unwrap()));
+        }
+    }
 }
 
 #[cfg(test)]
@@ -711,11 +1028,12 @@ mod tests {
     #[test]
     fn frames_concatenate() {
         let mut out = Vec::new();
-        encode_hello(&mut out);
+        encode_hello(&mut out, 0);
         encode_ready(&mut out, 7);
         encode_bye(&mut out);
         let (a, ua) = parse_frame(&out).unwrap();
         assert_eq!(a.kind, FrameKind::Hello);
+        assert_eq!(parse_hello(&a).unwrap(), 0);
         let (b, ub) = parse_frame(&out[ua..]).unwrap();
         assert_eq!(b.kind, FrameKind::Ready);
         assert_eq!(parse_ready(&b).unwrap(), 7);
@@ -727,12 +1045,13 @@ mod tests {
     #[test]
     fn version_and_kind_rejection() {
         let mut out = Vec::new();
-        encode_hello(&mut out);
+        encode_hello(&mut out, 0);
         let mut v = out.clone();
         v[2] = WIRE_VERSION + 1;
-        // Re-seal so only the version differs from a valid frame.
-        let crc = crc32(&v[..HEADER_LEN]).to_le_bytes();
+        // Re-seal (CRC covers header + payload) so only the version
+        // differs from a valid frame.
         let n = v.len();
+        let crc = crc32(&v[..n - CRC_LEN]).to_le_bytes();
         v[n - 4..].copy_from_slice(&crc);
         assert!(matches!(
             parse_frame(&v),
@@ -740,8 +1059,8 @@ mod tests {
         ));
         let mut k = out.clone();
         k[3] = 0xee;
-        let crc = crc32(&k[..HEADER_LEN]).to_le_bytes();
         let n = k.len();
+        let crc = crc32(&k[..n - CRC_LEN]).to_le_bytes();
         k[n - 4..].copy_from_slice(&crc);
         assert!(matches!(
             parse_frame(&k),
@@ -752,7 +1071,7 @@ mod tests {
     #[test]
     fn oversized_length_prefix_fails_fast() {
         let mut out = Vec::new();
-        encode_hello(&mut out);
+        encode_hello(&mut out, 0);
         out[4..8].copy_from_slice(&(u32::MAX).to_le_bytes());
         match parse_frame(&out) {
             Err(FrameError::Oversized { len, max }) => {
@@ -761,5 +1080,122 @@ mod tests {
             }
             other => panic!("want Oversized, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn hello_and_config_roundtrip_session_tokens() {
+        let mut out = Vec::new();
+        encode_hello(&mut out, 0xdead_beef_cafe_f00d);
+        let (h, _) = parse_frame(&out).unwrap();
+        assert_eq!(parse_hello(&h).unwrap(), 0xdead_beef_cafe_f00d);
+
+        let mut out = Vec::new();
+        encode_config(&mut out, 42, 3, "{\"rounds\": 1}");
+        let (c, _) = parse_frame(&out).unwrap();
+        let (fp, token, json) = parse_config(&c).unwrap();
+        assert_eq!((fp, token), (42, 3));
+        assert_eq!(json, "{\"rounds\": 1}");
+    }
+
+    #[test]
+    fn state_sync_roundtrips() {
+        let u = [1.0f32, -2.5, 0.0, 3.25];
+        let v = [0.5f32, 0.0, -1.0, 8.0];
+        let mut out = Vec::new();
+        encode_state_sync(&mut out, 9, 17, (0x0123_4567_89ab_cdef_u128 << 64) | 7, 99, &u, &v);
+        let (view, used) = parse_frame(&out).unwrap();
+        assert_eq!(used, out.len());
+        let msg = parse_state_sync(&view).unwrap();
+        assert_eq!(msg.client, 9);
+        assert_eq!(msg.participations, 17);
+        assert_eq!(msg.rng_state, (0x0123_4567_89ab_cdef_u128 << 64) | 7);
+        assert_eq!(msg.rng_inc, 99);
+        assert_eq!(msg.residual_len(), 4);
+        let (mut ru, mut rv) = (Vec::new(), Vec::new());
+        msg.read_residuals(&mut ru, &mut rv);
+        assert_eq!(ru, u);
+        assert_eq!(rv, v);
+    }
+
+    #[test]
+    fn state_sync_rejects_short_residual_body() {
+        let mut out = Vec::new();
+        encode_state_sync(&mut out, 1, 0, 0, 0, &[1.0; 3], &[2.0; 3]);
+        // Claim one more residual than the body carries, re-seal.
+        let at = HEADER_LEN + 4 + 8 + 16 + 16;
+        out[at..at + 4].copy_from_slice(&4u32.to_le_bytes());
+        let n = out.len();
+        let crc = crc32(&out[..n - CRC_LEN]).to_le_bytes();
+        out[n - 4..].copy_from_slice(&crc);
+        let (view, _) = parse_frame(&out).unwrap();
+        assert!(matches!(
+            parse_state_sync(&view),
+            Err(FrameError::BadPayload { what: "residual body length", .. })
+        ));
+    }
+
+    fn offer_for(keep: Vec<Vec<bool>>) -> Vec<u8> {
+        let sm = SubModel::from_keep(keep);
+        let mut out = Vec::new();
+        encode_round_offer(&mut out, 3, 5, 11, 0.1, f64::NAN, &sm);
+        out
+    }
+
+    fn decode_keep(buf: &[u8]) -> Vec<Vec<bool>> {
+        let (view, used) = parse_frame(buf).unwrap();
+        assert_eq!(used, buf.len());
+        parse_round_offer(&view).unwrap().submodel().keep
+    }
+
+    #[test]
+    fn run_heavy_bitmaps_compress_and_roundtrip() {
+        // 512 units kept in two long stretches: RLE wins by a wide
+        // margin over the 64-byte raw bitmap, and decodes identically.
+        let mut long = vec![true; 512];
+        for k in long.iter_mut().take(300).skip(40) {
+            *k = false;
+        }
+        let all = vec![true; 257];
+        let none = vec![false; 63];
+        let cases = vec![long, all, none, vec![], vec![false], vec![true]];
+        for keep in cases {
+            let buf = offer_for(vec![keep.clone()]);
+            assert_eq!(decode_keep(&buf), vec![keep]);
+        }
+    }
+
+    #[test]
+    fn alternating_bitmaps_fall_back_to_raw() {
+        // Worst case for RLE (every unit is its own run): the encoder
+        // must pick the raw bitmap, which costs ⌈n/8⌉ bytes.
+        let keep: Vec<bool> = (0..256).map(|i| i % 2 == 0).collect();
+        let buf = offer_for(vec![keep.clone()]);
+        assert_eq!(decode_keep(&buf), vec![keep]);
+        // Frame size: fixed fields + one group header + tag + 32 bitmap
+        // bytes (RLE would need 256 varints).
+        assert_eq!(buf.len() as u64, FRAME_OVERHEAD + 30 + 4 + 1 + 32);
+    }
+
+    #[test]
+    fn rle_runs_must_sum_to_unit_count() {
+        // Hand-build a group whose runs overshoot the declared count.
+        let mut out = Vec::new();
+        let base = begin_frame(&mut out, FrameKind::RoundOffer);
+        out.extend_from_slice(&0u32.to_le_bytes()); // round
+        out.extend_from_slice(&0u32.to_le_bytes()); // client
+        out.extend_from_slice(&0u64.to_le_bytes()); // seed
+        out.extend_from_slice(&0.1f32.to_le_bytes()); // lr
+        out.extend_from_slice(&f64::NAN.to_le_bytes()); // deadline
+        out.extend_from_slice(&1u16.to_le_bytes()); // group count
+        out.extend_from_slice(&10u32.to_le_bytes()); // unit count
+        out.push(GROUP_RLE);
+        out.push(7); // kept run
+        out.push(7); // dropped run: 14 > 10
+        end_frame(&mut out, base);
+        let (view, _) = parse_frame(&out).unwrap();
+        assert!(matches!(
+            parse_round_offer(&view),
+            Err(FrameError::BadPayload { what: "group runs exceed unit count", .. })
+        ));
     }
 }

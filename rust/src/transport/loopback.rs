@@ -19,7 +19,7 @@ use anyhow::{Context, Result};
 
 use crate::transport::client_round::{client_execute, ClientEnv};
 use crate::transport::frame;
-use crate::transport::Transport;
+use crate::transport::{RoundTripStatus, StateSyncSnapshot, Transport};
 
 /// The in-process [`Transport`] (default for every experiment).
 pub struct Loopback;
@@ -34,9 +34,10 @@ impl Transport for Loopback {
         client: usize,
         offer: &[u8],
         model: &[u8],
+        _sync: Option<&StateSyncSnapshot>,
         env: &mut ClientEnv<'_>,
         reply: &mut Vec<u8>,
-    ) -> Result<()> {
+    ) -> Result<RoundTripStatus> {
         // Parse both frames with full integrity checks — the loopback
         // is a real receiver, not a shortcut around the protocol.
         let parse_sp = crate::obs::span_ab(crate::obs::Stage::FrameParse, client as u64, 0);
@@ -77,7 +78,8 @@ impl Transport for Loopback {
             model_msg.payload,
             env,
             reply,
-        )
+        )?;
+        Ok(RoundTripStatus::Delivered)
     }
 
     fn finish(&self, _client: usize, _round: u32, _included: bool) -> Result<()> {

@@ -19,14 +19,19 @@
 //!   experiments always ran, now speaking frames;
 //! * [`tcp`] — the real `std::net` transport: a coordinator process
 //!   (`afd serve`) drives a swarm of client processes (`afd client`)
-//!   over TCP, one framed request/response conversation per logical
-//!   client.
+//!   over TCP. One coordinator thread multiplexes every socket with
+//!   readiness-based non-blocking I/O; offers pipeline (several
+//!   in-flight rounds per connection, matched by `(round, client)`);
+//!   `Hello` carries a session token so a restarted client process
+//!   resumes its open rounds; and a dead or timed-out connection
+//!   converts its in-flight clients into policy-visible losses
+//!   ([`RoundTripStatus::Lost`]) instead of ending the run.
 //!
 //! ## The conversation
 //!
 //! ```text
-//! session:   client ── Hello ─▶ server ── Config ─▶ client ── Ready ─▶ server
-//! per round: server ── RoundOffer ‖ ModelDown ─▶ client
+//! session:   client ── Hello(token) ─▶ server ── Config(token) ─▶ client ── Ready ─▶ server
+//! per round: server ── [StateSync] ‖ RoundOffer ‖ ModelDown ─▶ client
 //!            client ── UpdateUp ─▶ server
 //!            server ── Ack (aggregated) | Cut (discarded) ─▶ client
 //! shutdown:  server ── Bye ─▶ client
@@ -73,6 +78,42 @@ pub use loopback::Loopback;
 
 use anyhow::Result;
 
+/// Why a round trip failed to complete.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LossReason {
+    /// The connection (or a pending reconnect) exceeded the configured
+    /// I/O timeout.
+    Timeout,
+    /// The connection died and session resume was off (or the client
+    /// was dispatched to a connection that is currently vacant).
+    Disconnected,
+}
+
+/// Outcome of [`Transport::round_trip`]: either the update frame
+/// arrived in `reply`, or the client was lost in transit and the
+/// scheduler should treat it as a cut.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoundTripStatus {
+    Delivered,
+    Lost(LossReason),
+}
+
+/// The complete mutable remainder of one logical client's state,
+/// captured by the engine *before* a round mutates it — exactly the
+/// residual store's spill record (RNG position, participation count,
+/// DGC residuals; everything else derives from `(seed, id)`). A
+/// resuming transport ships this as a `StateSync` frame so a restarted
+/// client process rejoins bit-exactly.
+#[derive(Clone, Debug, Default)]
+pub struct StateSyncSnapshot {
+    pub client: u32,
+    pub participations: u64,
+    pub rng_state: u128,
+    pub rng_inc: u128,
+    pub dgc_u: Vec<f32>,
+    pub dgc_v: Vec<f32>,
+}
+
 /// One federation transport: delivers a round's frames to a logical
 /// client and returns its update frame. Implementations decide *where*
 /// the client computation happens — in-process on the calling thread
@@ -84,6 +125,22 @@ use anyhow::Result;
 pub trait Transport: Send + Sync {
     fn name(&self) -> &'static str;
 
+    /// Can this transport lose a dispatched client mid-exchange
+    /// (return [`RoundTripStatus::Lost`])? When true the engine always
+    /// takes pre-round DGC rollback snapshots, exactly as it does when
+    /// a policy can cut stragglers. Loopback can't lose anyone.
+    fn may_lose(&self) -> bool {
+        false
+    }
+
+    /// Should the engine capture a pre-round [`StateSyncSnapshot`] for
+    /// every dispatched client? Only transports that replay rounds to
+    /// restarted processes need one; the default (and loopback) answer
+    /// is no, keeping the host path free of the capture cost.
+    fn wants_state_sync(&self) -> bool {
+        false
+    }
+
     /// Exchange one client round: deliver the `RoundOffer` and
     /// `ModelDown` frames, obtain the `UpdateUp` frame into `reply`
     /// (cleared first; capacity reused).
@@ -92,20 +149,33 @@ pub trait Transport: Send + Sync {
     /// executes the client with it; a socket transport ignores it (the
     /// remote process owns the real device state, which evolves
     /// identically — see the module docs' bit-identity contract).
+    /// `sync` is the pre-round snapshot captured when
+    /// [`Transport::wants_state_sync`] asked for one; a socket
+    /// transport ships it ahead of a dispatch that follows a
+    /// reconnect.
+    ///
+    /// I/O failure is not an error: a transport that loses the client
+    /// mid-exchange returns `Ok(RoundTripStatus::Lost(_))` and the
+    /// scheduler converts the loss into a policy-visible cut
+    /// (`RoundRecord::lost`). `Err` is reserved for protocol
+    /// violations that indicate a broken build, not a broken network.
     fn round_trip(
         &self,
         client: usize,
         offer: &[u8],
         model: &[u8],
+        sync: Option<&StateSyncSnapshot>,
         env: &mut ClientEnv<'_>,
         reply: &mut Vec<u8>,
-    ) -> Result<()>;
+    ) -> Result<RoundTripStatus>;
 
     /// Deliver the round-closing decision for one exchanged round:
     /// `included` sends `Ack` (commit device-side codec state), else
     /// `Cut` (roll it back). The engine performs the same
     /// commit/rollback on its host-side state, so loopback needs no
-    /// wire action.
+    /// wire action. Best-effort on sockets: a decision addressed to a
+    /// dead connection is dropped (the next dispatch to that session
+    /// carries a `StateSync` that supersedes it).
     fn finish(&self, client: usize, round: u32, included: bool) -> Result<()>;
 
     /// End the session (`Bye` to every remote client; no-op in

@@ -1,59 +1,104 @@
-//! Real socket transport: the coordinator (`afd serve`) drives a swarm
-//! of client processes (`afd client`) over `std::net` TCP.
+//! Real socket transport, v2: the coordinator (`afd serve`) drives a
+//! swarm of client processes (`afd client`) over `std::net` TCP with
+//! non-blocking multiplexed I/O, pipelined rounds, and session resume.
 //!
 //! ## Topology
 //!
-//! The coordinator accepts a fixed number of connections; each client
-//! process builds the *full* deterministic client fleet from the
+//! The coordinator serves a fixed number of connection *slots*; each
+//! client process builds the *full* deterministic client fleet from the
 //! config the server ships in the handshake (datasets, per-client RNG
 //! streams, DGC accumulators are all pure functions of the seed), and
-//! logical client `c` is routed to connection `c % conns`. Any
-//! connection could therefore serve any logical client — the static
-//! routing just pins each client's state evolution to one process.
+//! logical client `c` is routed to slot `c % conns`. Any client
+//! process can therefore adopt any slot — a restarted process that
+//! takes a dead slot resumes its open rounds bit-exactly.
 //!
-//! ## Handshake
+//! ## Coordinator threads
 //!
-//! `Hello` (client) → `Config` (server: experiment JSON + the model
-//! layout fingerprint) → `Ready` (client echoes the fingerprint it
-//! derived from the config). A client whose rebuilt spec fingerprints
-//! differently — diverged binaries, wrong config — is rejected before
-//! the first round with both fingerprints in the error.
+//! Two background threads own all socket I/O:
 //!
-//! ## Rounds
+//! * the **acceptor** keeps listening for the lifetime of the run: it
+//!   handshakes each connection (blocking, with read *and* write
+//!   timeouts) and installs it into a slot — `Hello(0)` takes the
+//!   lowest vacant slot, `Hello(token)` reclaims slot `token - 1`
+//!   (taking it over if an old socket still occupies it);
+//! * the **event loop** multiplexes every installed socket with
+//!   non-blocking reads/writes (readiness via `poll(2)` on Linux, a
+//!   short tick elsewhere), matches `UpdateUp` replies to open rounds,
+//!   and enforces per-round deadlines.
 //!
-//! [`TcpTransport::round_trip`] locks the client's connection, writes
-//! the `RoundOffer` + `ModelDown` frames, and blocks for the `UpdateUp`
-//! reply; the per-connection mutex serializes logical clients that
-//! share a connection (the remote loop is strictly request/response),
-//! while different connections proceed in parallel under the engine's
-//! worker pool. `finish` delivers `Ack`/`Cut` so the remote commits or
-//! rolls back its DGC snapshot exactly when the engine does the same
-//! to its host-side shadow; `shutdown` sends `Bye`.
+//! Engine worker threads never touch a socket: [`TcpTransport::round_trip`]
+//! enqueues the round's frames under the shared lock and waits on a
+//! condvar, so many rounds pipeline over one connection — the
+//! per-connection `Mutex<TcpStream>` of v1 (one blocked thread per
+//! in-flight round, head-of-line blocking across slots) is gone.
 //!
-//! The host-side [`ClientEnv`] is ignored here — the remote process
-//! owns the real device state. Both evolve identically (same frames,
-//! same seeds, same code: [`client_execute`]), which is what the
-//! TCP-vs-loopback bit-identity test and the CI socket smoke pin.
+//! ## Session resume
+//!
+//! The `Config` frame carries a session token (`slot + 1`). A client
+//! that reconnects — same process after a TCP reset, or a restarted
+//! process taking the vacant slot — gets every still-open round
+//! replayed in `(round, client)` order, each preceded (once per
+//! reconnect generation) by a `StateSync` frame holding the engine's
+//! pre-round snapshot of that logical client, so the remote fleet
+//! state rejoins bit-exactly. `StateSync` bytes are *excluded* from
+//! `RoundRecord` byte accounting (they are recovery traffic, tracked
+//! by the `resync_bytes` counter), which keeps a fixed-seed run over
+//! flaky-but-recovering TCP byte-identical to loopback.
+//!
+//! ## Loss conversion
+//!
+//! A dead connection no longer ends the run. With resume off (or past
+//! the per-round deadline even with resume on), the in-flight rounds
+//! of the dead connection resolve as [`RoundTripStatus::Lost`] and the
+//! engine converts them into policy-visible cuts (`RoundRecord::lost`);
+//! `Err` from this transport means a protocol violation, not a broken
+//! network. See `rust/src/transport/README.md` for the full contract.
 
-use std::io::{Read, Write};
+use std::cell::RefCell;
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::io::{ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::Mutex;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::config::{Backend, ExperimentConfig};
+use crate::config::{Backend, ExperimentConfig, TransportConfig};
 use crate::data;
 use crate::model::packing::PlanCache;
 use crate::model::submodel::SubModel;
 use crate::runtime::native::mlp_from_config;
 use crate::transport::client_round::{client_execute, ClientEnv};
 use crate::transport::frame::{self, FrameKind};
-use crate::transport::{codec_id, Transport};
+use crate::transport::{codec_id, LossReason, RoundTripStatus, StateSyncSnapshot, Transport};
+use crate::util::rng::Pcg64;
 
-/// Socket read timeout: generous enough for a slow remote epoch, small
-/// enough that a dead peer surfaces as an error instead of a hang.
-const IO_TIMEOUT: Duration = Duration::from_secs(600);
+/// Most in-flight rounds either side tracks per connection: the
+/// server's open-round map and the remote's offer queue / rollback
+/// snapshots are all bounded by it, so a runaway peer cannot grow
+/// either process without bound.
+pub const MAX_PIPELINE: usize = 64;
+
+/// Socket timeout for the handshake phase (before the config's
+/// `transport.io_timeout_s` is known on the client side).
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(600);
+
+/// How long the acceptor sleeps between non-blocking accept attempts.
+const ACCEPT_PAUSE: Duration = Duration::from_millis(50);
+
+/// Event-loop readiness wait (poll(2) timeout on Linux; the
+/// no-readiness fallback ticks at half this).
+#[cfg(target_os = "linux")]
+const EVENT_TICK_MS: i32 = 10;
+
+/// Lock that survives a poisoned mutex: a panicking engine worker must
+/// not wedge the event loop (or vice versa) — the shared state is a
+/// message board whose entries are individually complete, so the data
+/// is consistent regardless of where the panicker died.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 /// Read one whole frame (header + payload + CRC) from a stream into
 /// `buf` (cleared; capacity reused). Validates the magic and the
@@ -82,7 +127,472 @@ fn read_frame_into(stream: &mut TcpStream, buf: &mut Vec<u8>) -> Result<()> {
     Ok(())
 }
 
-/// A bound listener that has not accepted its clients yet (split from
+// ---------------------------------------------------------------------
+// Shared coordinator state
+// ---------------------------------------------------------------------
+
+/// One in-flight round on a connection slot. The waiting engine thread
+/// owns removal; the event loop and acceptor only ever set `done`.
+struct OpenEntry {
+    /// Encoded `StateSync` frame to precede the offer after a
+    /// reconnect (present iff the engine captured a snapshot).
+    sync: Option<Vec<u8>>,
+    /// `RoundOffer` ‖ `ModelDown`, kept whole for replay.
+    msg: Vec<u8>,
+    /// Enqueue time + io_timeout; refreshed when a reconnect replays
+    /// the entry. Outliving it fails the whole connection.
+    deadline: Instant,
+    /// Set exactly once: the reply frame, or the loss that ate it.
+    done: Option<Result<Vec<u8>, LossReason>>,
+}
+
+/// One connection slot: the socket (if currently connected) plus its
+/// I/O buffers, open rounds, and resume bookkeeping.
+struct ConnState {
+    stream: Option<TcpStream>,
+    /// Reconnect count for this slot; bumps on every re-install.
+    generation: u64,
+    /// Whether any client ever completed a handshake into this slot
+    /// (distinguishes "first connect" from "reconnect").
+    ever_connected: bool,
+    /// Outgoing bytes not yet written; `wpos` marks the partial-write
+    /// offset so a short non-blocking write resumes mid-buffer.
+    out: Vec<u8>,
+    wpos: usize,
+    /// Incoming bytes not yet assembled into a whole frame.
+    rbuf: Vec<u8>,
+    /// In-flight rounds keyed by `(round, client)`; BTreeMap so replay
+    /// order is deterministic.
+    open: BTreeMap<(u32, u32), OpenEntry>,
+    /// Send order of open entries — TCP preserves order and the remote
+    /// serves offers in arrival order, so replies match FIFO.
+    sent: VecDeque<(u32, u32)>,
+    /// Generation at which each logical client last received a
+    /// `StateSync`, so one reconnect syncs each client exactly once.
+    last_synced: HashMap<u32, u64>,
+}
+
+impl ConnState {
+    fn new() -> ConnState {
+        ConnState {
+            stream: None,
+            generation: 0,
+            ever_connected: false,
+            out: Vec::new(),
+            wpos: 0,
+            rbuf: Vec::new(),
+            open: BTreeMap::new(),
+            sent: VecDeque::new(),
+            last_synced: HashMap::new(),
+        }
+    }
+}
+
+struct Shared {
+    conns: Vec<ConnState>,
+    stopping: bool,
+}
+
+/// Drain `conn.out` with non-blocking writes. Returns false when the
+/// connection died mid-write.
+fn flush_conn(conn: &mut ConnState) -> bool {
+    let Some(stream) = conn.stream.as_mut() else {
+        return true;
+    };
+    while conn.wpos < conn.out.len() {
+        match stream.write(&conn.out[conn.wpos..]) {
+            Ok(0) => return false,
+            Ok(n) => conn.wpos += n,
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => return false,
+        }
+    }
+    if conn.wpos == conn.out.len() {
+        conn.out.clear();
+        conn.wpos = 0;
+    }
+    true
+}
+
+/// Pull whatever the socket has into `conn.rbuf` without blocking.
+/// Returns false on EOF or a hard error.
+fn read_conn(conn: &mut ConnState, scratch: &mut [u8]) -> bool {
+    let Some(stream) = conn.stream.as_mut() else {
+        return true;
+    };
+    loop {
+        match stream.read(scratch) {
+            Ok(0) => return false,
+            Ok(n) => conn.rbuf.extend_from_slice(&scratch[..n]),
+            Err(e) if e.kind() == ErrorKind::WouldBlock => return true,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => return false,
+        }
+    }
+}
+
+/// Extract every complete frame from `conn.rbuf` and resolve the open
+/// rounds they answer. Returns whether any waiter should be woken;
+/// `Err(())` means the peer broke protocol and the connection must die.
+fn drain_frames(conn: &mut ConnState) -> Result<bool, ()> {
+    let mut off = 0;
+    let mut notify = false;
+    loop {
+        let avail = conn.rbuf.len() - off;
+        if avail < frame::HEADER_LEN {
+            break;
+        }
+        let h = &conn.rbuf[off..off + frame::HEADER_LEN];
+        if h[0..2] != frame::MAGIC {
+            return Err(());
+        }
+        let len = u32::from_le_bytes(h[4..8].try_into().unwrap()) as usize;
+        if len > frame::MAX_PAYLOAD {
+            return Err(());
+        }
+        let kind = h[3];
+        let total = frame::HEADER_LEN + len + frame::CRC_LEN;
+        if avail < total {
+            break;
+        }
+        if FrameKind::from_u8(kind) != Some(FrameKind::UpdateUp) {
+            return Err(());
+        }
+        // FIFO matching: the oldest sent-and-still-open entry owns this
+        // reply. (Entries a waiter already collected, or that a prior
+        // generation failed, linger in `sent` — skip them.)
+        let key = loop {
+            match conn.sent.pop_front() {
+                Some(k) => {
+                    if conn.open.get(&k).is_some_and(|e| e.done.is_none()) {
+                        break Some(k);
+                    }
+                }
+                None => break None,
+            }
+        };
+        let Some(k) = key else {
+            return Err(());
+        };
+        // No parse here beyond the header: `run_client_round` runs the
+        // one full parse — CRC, kind, payload grammar — over the reply.
+        let bytes = conn.rbuf[off..off + total].to_vec();
+        conn.open.get_mut(&k).expect("matched entry").done = Some(Ok(bytes));
+        notify = true;
+        off += total;
+    }
+    if off > 0 {
+        conn.rbuf.drain(..off);
+    }
+    Ok(notify)
+}
+
+/// The connection died (EOF, I/O error, protocol violation). With
+/// resume on, open rounds stay pending for a reconnect replay (their
+/// original deadlines still bound the wait); with resume off they
+/// become immediate `Disconnected` losses.
+fn kill_conn(conn: &mut ConnState, resume: bool) {
+    conn.stream = None;
+    conn.out.clear();
+    conn.wpos = 0;
+    conn.rbuf.clear();
+    conn.sent.clear();
+    if !resume {
+        for e in conn.open.values_mut() {
+            if e.done.is_none() {
+                e.done = Some(Err(LossReason::Disconnected));
+            }
+        }
+    }
+}
+
+/// An open round outlived its deadline: resume or not, the transport
+/// gives up on the whole connection and fails every pending round.
+fn expire_conn(conn: &mut ConnState) {
+    conn.stream = None;
+    conn.out.clear();
+    conn.wpos = 0;
+    conn.rbuf.clear();
+    conn.sent.clear();
+    for e in conn.open.values_mut() {
+        if e.done.is_none() {
+            e.done = Some(Err(LossReason::Timeout));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Readiness wait
+// ---------------------------------------------------------------------
+
+#[cfg(target_os = "linux")]
+fn raw_fds(sh: &Shared) -> Vec<i32> {
+    use std::os::unix::io::AsRawFd;
+    sh.conns
+        .iter()
+        .filter_map(|c| c.stream.as_ref().map(|s| s.as_raw_fd()))
+        .collect()
+}
+
+/// Block until any of `fds` is readable or `timeout_ms` passes —
+/// poll(2) via FFI, so the event loop wakes the moment a reply lands
+/// instead of always paying the full tick.
+#[cfg(target_os = "linux")]
+fn poll_readable(fds: &[i32], timeout_ms: i32) {
+    #[repr(C)]
+    struct PollFd {
+        fd: i32,
+        events: i16,
+        revents: i16,
+    }
+    const POLLIN: i16 = 0x001;
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: u64, timeout: i32) -> i32;
+    }
+    if fds.is_empty() {
+        std::thread::sleep(Duration::from_millis(timeout_ms.max(0) as u64));
+        return;
+    }
+    let mut pfds: Vec<PollFd> = fds
+        .iter()
+        .map(|&fd| PollFd {
+            fd,
+            events: POLLIN,
+            revents: 0,
+        })
+        .collect();
+    // SAFETY: `pfds` is a valid exclusively-borrowed pollfd array whose
+    // length is passed as nfds; poll(2) writes only within it and keeps
+    // no reference past the call. Readiness is a hint — the sweep does
+    // non-blocking I/O on every socket regardless — so a failing or
+    // racing poll (even against a concurrently closed fd) only costs a
+    // tick of latency, never correctness.
+    unsafe {
+        let _ = poll(pfds.as_mut_ptr(), pfds.len() as u64, timeout_ms);
+    }
+}
+
+/// The coordinator event loop: one thread, every socket, non-blocking.
+/// Each tick flushes pending writes, ingests replies, resolves open
+/// rounds, and enforces deadlines; it exits once `stopping` is set and
+/// the goodbye bytes have drained (or a short grace period passes).
+fn event_loop(shared: Arc<(Mutex<Shared>, Condvar)>, resume: bool) {
+    let (m, cvar) = &*shared;
+    let mut scratch = vec![0u8; 64 * 1024];
+    let mut stop_deadline: Option<Instant> = None;
+    loop {
+        {
+            let mut sh = lock(m);
+            let mut notify = false;
+            for conn in sh.conns.iter_mut() {
+                if conn.stream.is_none() {
+                    continue;
+                }
+                let mut alive = flush_conn(conn);
+                if alive {
+                    alive = read_conn(conn, &mut scratch);
+                }
+                // Frames buffered before the death still count — a
+                // reply that made it out of the peer is a valid reply.
+                match drain_frames(conn) {
+                    Ok(n) => notify |= n,
+                    Err(()) => alive = false,
+                }
+                if !alive {
+                    kill_conn(conn, resume);
+                    notify = true;
+                }
+            }
+            let now = Instant::now();
+            for conn in sh.conns.iter_mut() {
+                if conn
+                    .open
+                    .values()
+                    .any(|e| e.done.is_none() && e.deadline <= now)
+                {
+                    expire_conn(conn);
+                    if crate::obs::enabled() {
+                        crate::obs::metrics::TRANSPORT_TIMEOUTS.incr();
+                    }
+                    notify = true;
+                }
+            }
+            if notify {
+                cvar.notify_all();
+            }
+            if sh.stopping {
+                let flushed = sh
+                    .conns
+                    .iter()
+                    .all(|c| c.stream.is_none() || c.out.is_empty());
+                let dl = *stop_deadline.get_or_insert(now + Duration::from_secs(1));
+                if flushed || now >= dl {
+                    break;
+                }
+            }
+        }
+        #[cfg(target_os = "linux")]
+        {
+            let fds = {
+                let sh = lock(m);
+                raw_fds(&sh)
+            };
+            poll_readable(&fds, EVENT_TICK_MS);
+        }
+        #[cfg(not(target_os = "linux"))]
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+// ---------------------------------------------------------------------
+// Acceptor
+// ---------------------------------------------------------------------
+
+/// Handshake one accepted socket and install it into a slot. Failure
+/// drops the socket; the acceptor keeps serving.
+fn handshake_and_install(
+    mut stream: TcpStream,
+    shared: &Arc<(Mutex<Shared>, Condvar)>,
+    cfg_json: &str,
+    fingerprint: u64,
+    io_timeout: Duration,
+    resume: bool,
+) -> Result<()> {
+    stream.set_nodelay(true)?;
+    stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(io_timeout))?;
+    stream.set_write_timeout(Some(io_timeout))?;
+    let mut buf = Vec::new();
+    read_frame_into(&mut stream, &mut buf).context("reading Hello")?;
+    let (view, _) = frame::parse_frame(&buf).context("Hello frame")?;
+    let token = frame::parse_hello(&view)?;
+    let slot = {
+        let sh = lock(&shared.0);
+        if token == 0 {
+            // Fresh client: lowest vacant slot. A restarted process
+            // (no token — it died with the old one) lands on its
+            // predecessor's slot this way and resumes it.
+            sh.conns
+                .iter()
+                .position(|c| c.stream.is_none())
+                .context("no vacant connection slot for a new client")?
+        } else {
+            let slot = (token - 1) as usize;
+            anyhow::ensure!(slot < sh.conns.len(), "Hello token {token} out of range");
+            slot
+        }
+    };
+    let mut out = Vec::new();
+    frame::encode_config(&mut out, fingerprint, (slot + 1) as u64, cfg_json);
+    stream.write_all(&out).context("sending Config")?;
+    read_frame_into(&mut stream, &mut buf).context("waiting for Ready")?;
+    let (view, _) = frame::parse_frame(&buf)?;
+    let theirs = frame::parse_ready(&view)?;
+    anyhow::ensure!(
+        theirs == fingerprint,
+        "peer derived layout fingerprint {theirs:#018x}, server has \
+         {fingerprint:#018x} — mismatched configs or binaries"
+    );
+    stream.set_nonblocking(true)?;
+
+    let mut sh = lock(&shared.0);
+    if sh.stopping {
+        return Ok(());
+    }
+    let conn = &mut sh.conns[slot];
+    // Takeover: a token reconnect may beat the event loop to a half-dead
+    // socket — drop whatever occupied the slot and start its I/O fresh.
+    conn.stream = None;
+    conn.out.clear();
+    conn.wpos = 0;
+    conn.rbuf.clear();
+    conn.sent.clear();
+    if conn.ever_connected {
+        conn.generation += 1;
+        if crate::obs::enabled() {
+            crate::obs::metrics::CONN_RECONNECTS.incr();
+        }
+        if resume {
+            // Replay every still-open round in deterministic key order,
+            // each client's first entry preceded by its StateSync.
+            let gen = conn.generation;
+            let now = Instant::now();
+            let mut resync = 0u64;
+            for (key, e) in conn.open.iter_mut() {
+                if e.done.is_some() {
+                    continue;
+                }
+                e.deadline = now + io_timeout;
+                if let Some(sf) = e.sync.as_deref() {
+                    if conn.last_synced.get(&key.1) != Some(&gen) {
+                        conn.out.extend_from_slice(sf);
+                        conn.last_synced.insert(key.1, gen);
+                        resync += sf.len() as u64;
+                    }
+                }
+                conn.out.extend_from_slice(&e.msg);
+                conn.sent.push_back(*key);
+            }
+            if resync > 0 && crate::obs::enabled() {
+                crate::obs::metrics::RESYNC_BYTES.add(resync);
+            }
+        } else {
+            // Without resume the rounds written to the dead socket are
+            // unrecoverable — fail any the event loop hasn't already.
+            for e in conn.open.values_mut() {
+                if e.done.is_none() {
+                    e.done = Some(Err(LossReason::Disconnected));
+                }
+            }
+        }
+    } else {
+        conn.ever_connected = true;
+    }
+    conn.stream = Some(stream);
+    drop(sh);
+    shared.1.notify_all();
+    Ok(())
+}
+
+/// Accept loop: non-blocking accepts for the lifetime of the run, so
+/// clients can join, die, and rejoin at any point.
+fn acceptor_loop(
+    listener: TcpListener,
+    shared: Arc<(Mutex<Shared>, Condvar)>,
+    cfg_json: String,
+    fingerprint: u64,
+    io_timeout: Duration,
+    resume: bool,
+) {
+    let _ = listener.set_nonblocking(true);
+    loop {
+        if lock(&shared.0).stopping {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                // A failed handshake must not kill the acceptor: drop
+                // the socket and serve the next connection attempt.
+                let _ = handshake_and_install(
+                    stream,
+                    &shared,
+                    &cfg_json,
+                    fingerprint,
+                    io_timeout,
+                    resume,
+                );
+            }
+            Err(_) => std::thread::sleep(ACCEPT_PAUSE),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Server
+// ---------------------------------------------------------------------
+
+/// A bound listener that has not started serving yet (split from
 /// [`TcpTransport`] so callers can learn the ephemeral port — tests
 /// bind `127.0.0.1:0` — before any client connects).
 pub struct TcpServer {
@@ -99,62 +609,210 @@ impl TcpServer {
         Ok(self.listener.local_addr()?)
     }
 
-    /// Accept `conns` client connections and run the handshake with
-    /// each: read `Hello`, send `Config` (the experiment JSON +
-    /// `fingerprint`), require a `Ready` echoing the same fingerprint.
+    /// Start the acceptor and event-loop threads, then block until all
+    /// `conns` slots have completed a first handshake (each: read
+    /// `Hello`, send `Config` with the experiment JSON, `fingerprint`
+    /// and the slot's session token, require a `Ready` echoing the
+    /// fingerprint). The acceptor keeps running afterwards so dead
+    /// clients can reconnect mid-run.
     pub fn accept_clients(
         self,
         conns: usize,
         cfg_json: &str,
         fingerprint: u64,
+        tcfg: &TransportConfig,
     ) -> Result<TcpTransport> {
         anyhow::ensure!(conns > 0, "a TCP transport needs at least one connection");
-        let mut accepted = Vec::with_capacity(conns);
-        let mut buf = Vec::new();
-        let mut out = Vec::new();
-        for i in 0..conns {
-            let (mut stream, peer) = self
-                .listener
-                .accept()
-                .with_context(|| format!("accepting client connection {i}"))?;
-            stream.set_nodelay(true)?;
-            stream.set_read_timeout(Some(IO_TIMEOUT))?;
-            read_frame_into(&mut stream, &mut buf)
-                .with_context(|| format!("handshake with {peer}"))?;
-            let (view, _) = frame::parse_frame(&buf)
-                .with_context(|| format!("handshake frame from {peer}"))?;
-            anyhow::ensure!(
-                view.kind == FrameKind::Hello,
-                "peer {peer} opened with {:?}, expected Hello",
-                view.kind
-            );
-            out.clear();
-            frame::encode_config(&mut out, fingerprint, cfg_json);
-            stream.write_all(&out).context("sending Config")?;
-            read_frame_into(&mut stream, &mut buf)
-                .with_context(|| format!("waiting for Ready from {peer}"))?;
-            let (view, _) = frame::parse_frame(&buf)?;
-            let theirs = frame::parse_ready(&view)?;
-            anyhow::ensure!(
-                theirs == fingerprint,
-                "peer {peer} derived layout fingerprint {theirs:#018x}, server has \
-                 {fingerprint:#018x} — mismatched configs or binaries"
-            );
-            accepted.push(Mutex::new(stream));
+        anyhow::ensure!(
+            tcfg.io_timeout_s > 0.0,
+            "transport.io_timeout_s must be positive"
+        );
+        let io_timeout = Duration::from_secs_f64(tcfg.io_timeout_s);
+        let shared = Arc::new((
+            Mutex::new(Shared {
+                conns: (0..conns).map(|_| ConnState::new()).collect(),
+                stopping: false,
+            }),
+            Condvar::new(),
+        ));
+        let acceptor = std::thread::Builder::new()
+            .name("afd-acceptor".into())
+            .spawn({
+                let shared = shared.clone();
+                let cfg_json = cfg_json.to_string();
+                let resume = tcfg.resume;
+                let listener = self.listener;
+                move || acceptor_loop(listener, shared, cfg_json, fingerprint, io_timeout, resume)
+            })
+            .context("spawning acceptor thread")?;
+        let events = std::thread::Builder::new()
+            .name("afd-transport".into())
+            .spawn({
+                let shared = shared.clone();
+                let resume = tcfg.resume;
+                move || event_loop(shared, resume)
+            })
+            .context("spawning transport event loop")?;
+        // Same startup contract as v1: the experiment begins only once
+        // the whole fleet has said hello.
+        {
+            let (m, cvar) = &*shared;
+            let mut sh = lock(m);
+            while !sh.conns.iter().all(|c| c.ever_connected) {
+                let r = cvar
+                    .wait_timeout(sh, Duration::from_millis(100))
+                    .unwrap_or_else(|e| e.into_inner());
+                sh = r.0;
+            }
         }
-        Ok(TcpTransport { conns: accepted })
+        Ok(TcpTransport {
+            shared,
+            nconns: conns,
+            io_timeout,
+            resume: tcfg.resume,
+            acceptor: Mutex::new(Some(acceptor)),
+            events: Mutex::new(Some(events)),
+        })
     }
 }
 
-/// The server side of the socket transport: one framed request/response
-/// channel per accepted connection, logical clients routed statically.
+/// The server side of the socket transport: engine threads enqueue
+/// framed rounds into per-slot buffers and wait; the background event
+/// loop owns every socket.
 pub struct TcpTransport {
-    conns: Vec<Mutex<TcpStream>>,
+    shared: Arc<(Mutex<Shared>, Condvar)>,
+    nconns: usize,
+    io_timeout: Duration,
+    resume: bool,
+    acceptor: Mutex<Option<JoinHandle<()>>>,
+    events: Mutex<Option<JoinHandle<()>>>,
 }
 
 impl TcpTransport {
-    fn conn(&self, client: usize) -> &Mutex<TcpStream> {
-        &self.conns[client % self.conns.len()]
+    /// Enqueue one round on slot `idx` and wait for its resolution.
+    /// Split from [`Transport::round_trip`] so tests can drive the
+    /// pipeline without building a full `ClientEnv`.
+    fn exchange(
+        &self,
+        idx: usize,
+        round: u32,
+        client: u32,
+        offer: &[u8],
+        model: &[u8],
+        sync: Option<&StateSyncSnapshot>,
+        reply: &mut Vec<u8>,
+    ) -> Result<RoundTripStatus> {
+        let key = (round, client);
+        let sync_frame = sync.map(|s| {
+            let mut b = Vec::new();
+            frame::encode_state_sync(
+                &mut b,
+                s.client,
+                s.participations,
+                s.rng_state,
+                s.rng_inc,
+                &s.dgc_u,
+                &s.dgc_v,
+            );
+            b
+        });
+        let (m, cvar) = &*self.shared;
+        let mut sh = lock(m);
+        anyhow::ensure!(!sh.stopping, "round trip after shutdown");
+        {
+            let conn = &mut sh.conns[idx];
+            anyhow::ensure!(
+                !conn.open.contains_key(&key),
+                "duplicate in-flight exchange for round {round} client {client}"
+            );
+            anyhow::ensure!(
+                conn.open.len() < MAX_PIPELINE,
+                "pipeline depth cap hit on slot {idx} ({MAX_PIPELINE} open rounds)"
+            );
+            if conn.stream.is_none() && !self.resume {
+                // Nothing to write to and nobody will replay it.
+                return Ok(RoundTripStatus::Lost(LossReason::Disconnected));
+            }
+            let mut msg = Vec::with_capacity(offer.len() + model.len());
+            msg.extend_from_slice(offer);
+            msg.extend_from_slice(model);
+            if conn.stream.is_some() {
+                if let Some(sf) = sync_frame.as_deref() {
+                    // First dispatch to this client since the slot's
+                    // last reconnect carries its state snapshot.
+                    if conn.generation > 0 && conn.last_synced.get(&client) != Some(&conn.generation)
+                    {
+                        conn.out.extend_from_slice(sf);
+                        conn.last_synced.insert(client, conn.generation);
+                        if crate::obs::enabled() {
+                            crate::obs::metrics::RESYNC_BYTES.add(sf.len() as u64);
+                        }
+                    }
+                }
+                conn.out.extend_from_slice(&msg);
+                conn.sent.push_back(key);
+            }
+            // Slot vacant with resume on: the entry waits — a reconnect
+            // replays it, or the deadline scan converts it to a loss.
+            conn.open.insert(
+                key,
+                OpenEntry {
+                    sync: sync_frame,
+                    msg,
+                    deadline: Instant::now() + self.io_timeout,
+                    done: None,
+                },
+            );
+            if crate::obs::enabled() {
+                crate::obs::metrics::PIPELINE_DEPTH.set_max(conn.open.len() as u64);
+            }
+        }
+        loop {
+            let ready = match sh.conns[idx].open.get(&key) {
+                Some(e) => e.done.is_some(),
+                None => anyhow::bail!("in-flight exchange entry vanished"),
+            };
+            if ready {
+                let e = sh.conns[idx].open.remove(&key).unwrap();
+                return Ok(match e.done.unwrap() {
+                    Ok(bytes) => {
+                        reply.clear();
+                        reply.extend_from_slice(&bytes);
+                        RoundTripStatus::Delivered
+                    }
+                    Err(reason) => RoundTripStatus::Lost(reason),
+                });
+            }
+            if sh.stopping {
+                sh.conns[idx].open.remove(&key);
+                return Ok(RoundTripStatus::Lost(LossReason::Disconnected));
+            }
+            let r = cvar
+                .wait_timeout(sh, Duration::from_millis(100))
+                .unwrap_or_else(|e| e.into_inner());
+            sh = r.0;
+        }
+    }
+
+    /// Stop both background threads and wait for them. Idempotent.
+    fn halt(&self) {
+        {
+            let mut sh = lock(&self.shared.0);
+            sh.stopping = true;
+        }
+        self.shared.1.notify_all();
+        for slot in [&self.acceptor, &self.events] {
+            let handle = lock(slot).take();
+            if let Some(h) = handle {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+impl Drop for TcpTransport {
+    fn drop(&mut self) {
+        self.halt();
     }
 }
 
@@ -163,18 +821,27 @@ impl Transport for TcpTransport {
         "tcp"
     }
 
+    fn may_lose(&self) -> bool {
+        true
+    }
+
+    fn wants_state_sync(&self) -> bool {
+        self.resume
+    }
+
     fn round_trip(
         &self,
         client: usize,
         offer: &[u8],
         model: &[u8],
+        sync: Option<&StateSyncSnapshot>,
         _env: &mut ClientEnv<'_>,
         reply: &mut Vec<u8>,
-    ) -> Result<()> {
-        let idx = client % self.conns.len();
-        // One span per connection on a synthetic track: Perfetto shows
-        // each TCP connection as its own lane, so serialization of
-        // logical clients sharing a connection is visible at a glance.
+    ) -> Result<RoundTripStatus> {
+        let idx = client % self.nconns;
+        // One span per slot on a synthetic track: Perfetto shows each
+        // TCP connection as its own lane, so pipelining depth per slot
+        // is visible at a glance.
         let _sp = crate::obs::span_on_track(
             crate::obs::Stage::RoundTrip,
             crate::obs::CONN_TRACK_BASE + idx as u32,
@@ -184,39 +851,55 @@ impl Transport for TcpTransport {
         if crate::obs::enabled() {
             crate::obs::metrics::CONN_ROUND_TRIPS[idx % crate::obs::metrics::CONN_SLOTS].incr();
         }
-        let mut stream = self.conns[idx].lock().unwrap();
-        stream
-            .write_all(offer)
-            .with_context(|| format!("sending RoundOffer to client {client}"))?;
-        stream
-            .write_all(model)
-            .with_context(|| format!("sending ModelDown to client {client}"))?;
-        // No parse here: `read_frame_into` validated magic and length,
-        // and the caller (`run_client_round`) runs the one full parse —
-        // CRC, kind, payload grammar — over the reply. Parsing twice
-        // would double the largest CRC pass of the conversation.
-        read_frame_into(&mut stream, reply)
-            .with_context(|| format!("waiting for UpdateUp from client {client}"))?;
-        Ok(())
+        // The trait ships opaque frames; recover the (round, client)
+        // pipeline key from the offer itself (cheap — offers are tiny
+        // next to the model payload).
+        let (view, _) = frame::parse_frame(offer).context("round_trip offer frame")?;
+        let o = frame::parse_round_offer(&view)?;
+        anyhow::ensure!(
+            o.client as usize == client,
+            "offer frame addresses client {}, round_trip called for {client}",
+            o.client
+        );
+        self.exchange(idx, o.round, o.client, offer, model, sync, reply)
     }
 
     fn finish(&self, client: usize, round: u32, included: bool) -> Result<()> {
-        let mut out = Vec::with_capacity(frame::ROUND_CLOSE_WIRE as usize);
-        frame::encode_round_close(&mut out, included, round, client as u32);
-        let mut stream = self.conn(client).lock().unwrap();
-        stream
-            .write_all(&out)
-            .with_context(|| format!("sending round close to client {client}"))
+        thread_local! {
+            /// Reused close-frame buffer: `finish` runs once per
+            /// exchanged round, hot enough that a fresh Vec per call
+            /// showed up in allocation profiles.
+            static CLOSE_BUF: RefCell<Vec<u8>> = RefCell::new(Vec::new());
+        }
+        CLOSE_BUF.with(|b| {
+            let out = &mut *b.borrow_mut();
+            out.clear();
+            frame::encode_round_close(out, included, round, client as u32);
+            let idx = client % self.nconns;
+            let mut sh = lock(&self.shared.0);
+            let conn = &mut sh.conns[idx];
+            // Best effort: a decision addressed to a vacant slot is
+            // dropped — the next dispatch to that session carries a
+            // StateSync that supersedes it.
+            if conn.stream.is_some() {
+                conn.out.extend_from_slice(out);
+            }
+        });
+        Ok(())
     }
 
     fn shutdown(&self) -> Result<()> {
-        let mut out = Vec::new();
-        frame::encode_bye(&mut out);
-        for conn in &self.conns {
-            // Best effort: a client that already vanished must not turn
-            // a finished experiment into an error.
-            let _ = conn.lock().unwrap().write_all(&out);
+        {
+            let mut sh = lock(&self.shared.0);
+            let mut bye = Vec::new();
+            frame::encode_bye(&mut bye);
+            for conn in sh.conns.iter_mut() {
+                if conn.stream.is_some() {
+                    conn.out.extend_from_slice(&bye);
+                }
+            }
         }
+        self.halt();
         Ok(())
     }
 }
@@ -224,6 +907,39 @@ impl Transport for TcpTransport {
 // ---------------------------------------------------------------------
 // Remote client process
 // ---------------------------------------------------------------------
+
+/// Knobs for [`run_client_loop`].
+#[derive(Clone, Debug)]
+pub struct ClientOptions {
+    /// How long to keep retrying the initial connect while the server
+    /// comes up.
+    pub connect_retry_s: f64,
+    /// Reconnect window after a dropped connection; `<= 0` disables
+    /// resume and the drop becomes the process's error.
+    pub reconnect_s: f64,
+    /// Exit (abruptly, without `Bye` — simulating a crash) after
+    /// serving this many `ModelDown` rounds. Test/chaos hook.
+    pub exit_after: Option<u64>,
+}
+
+impl Default for ClientOptions {
+    fn default() -> Self {
+        ClientOptions {
+            connect_retry_s: 10.0,
+            reconnect_s: 30.0,
+            exit_after: None,
+        }
+    }
+}
+
+/// Why [`run_client_loop`] returned successfully.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ClientEnd {
+    /// The server said `Bye`: the experiment finished.
+    Bye,
+    /// The `exit_after` crash hook fired.
+    ExitAfter,
+}
 
 struct PendingOffer {
     round: u32,
@@ -233,21 +949,12 @@ struct PendingOffer {
     submodel: SubModel,
 }
 
-/// The `afd client` main loop: connect (retrying while the server
-/// comes up), handshake, then serve rounds until `Bye`.
-///
-/// The process rebuilds the whole deterministic environment from the
-/// config the server ships — native runtime, dataset shards, fleet
-/// RNG/DGC state — and executes each offered round through the same
-/// [`client_execute`] the loopback path runs. DGC state is snapshotted
-/// per round and committed on `Ack` / rolled back on `Cut`, mirroring
-/// the engine's host-side bookkeeping exactly.
-pub fn run_client_loop(addr: &str, connect_retry_s: f64) -> Result<()> {
-    // ---- connect (the server may still be binding) -------------------
-    let deadline = Instant::now() + Duration::from_secs_f64(connect_retry_s.max(0.0));
-    let mut stream = loop {
+/// Dial `addr`, retrying while the window lasts.
+fn connect_within(addr: &str, window_s: f64) -> Result<TcpStream> {
+    let deadline = Instant::now() + Duration::from_secs_f64(window_s.max(0.0));
+    loop {
         match TcpStream::connect(addr) {
-            Ok(s) => break s,
+            Ok(s) => return Ok(s),
             Err(e) => {
                 if Instant::now() >= deadline {
                     return Err(e).with_context(|| format!("connecting to {addr}"));
@@ -255,19 +962,56 @@ pub fn run_client_loop(addr: &str, connect_retry_s: f64) -> Result<()> {
                 std::thread::sleep(Duration::from_millis(200));
             }
         }
-    };
-    stream.set_nodelay(true)?;
-    stream.set_read_timeout(Some(IO_TIMEOUT))?;
+    }
+}
 
-    // ---- handshake ---------------------------------------------------
+/// `Hello(token)` → `Config`; returns the server's fingerprint, the
+/// (possibly newly assigned) session token, and the config JSON.
+/// `Ready` is sent by the caller once it has validated the config.
+fn client_handshake(
+    stream: &mut TcpStream,
+    token: u64,
+    io_timeout: Duration,
+    buf: &mut Vec<u8>,
+    out: &mut Vec<u8>,
+) -> Result<(u64, u64, String)> {
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(io_timeout))?;
+    stream.set_write_timeout(Some(io_timeout))?;
+    out.clear();
+    frame::encode_hello(out, token);
+    stream.write_all(out).context("sending Hello")?;
+    read_frame_into(stream, buf).context("waiting for Config")?;
+    let (view, _) = frame::parse_frame(buf).context("Config frame")?;
+    let (fp, tok, json) = frame::parse_config(&view)?;
+    Ok((fp, tok, json.to_string()))
+}
+
+/// The `afd client` main loop: connect (retrying while the server
+/// comes up), handshake, then serve rounds until `Bye`.
+///
+/// The process rebuilds the whole deterministic environment from the
+/// config the server ships — native runtime, dataset shards, fleet
+/// RNG/DGC state — and executes each offered round through the same
+/// [`client_execute`] the loopback path runs. Offers queue (the server
+/// pipelines several rounds per connection) and are matched to their
+/// `ModelDown` by `(round, client)`; DGC residuals are snapshotted per
+/// round — bounded by [`MAX_PIPELINE`], never fleet-sized — and
+/// committed on `Ack` / rolled back on `Cut`, mirroring the engine's
+/// host-side bookkeeping exactly.
+///
+/// A dropped connection is not fatal while `reconnect_s` allows: the
+/// loop redials with its session token, the server replays the open
+/// rounds, and the `StateSync` frames it prefixes restore any state
+/// this process mutated for rounds whose outcome it missed.
+pub fn run_client_loop(addr: &str, opts: &ClientOptions) -> Result<ClientEnd> {
+    // ---- connect + first handshake -----------------------------------
     let mut buf = Vec::new();
     let mut out = Vec::new();
-    frame::encode_hello(&mut out);
-    stream.write_all(&out).context("sending Hello")?;
-    read_frame_into(&mut stream, &mut buf).context("waiting for Config")?;
-    let (view, _) = frame::parse_frame(&buf).context("Config frame")?;
-    let (server_fp, json_text) = frame::parse_config(&view)?;
-    let json = crate::util::json::parse(json_text)
+    let mut stream = connect_within(addr, opts.connect_retry_s)?;
+    let (server_fp, mut token, json_text) =
+        client_handshake(&mut stream, 0, HANDSHAKE_TIMEOUT, &mut buf, &mut out)?;
+    let json = crate::util::json::parse(&json_text)
         .map_err(|e| anyhow::anyhow!("config JSON from server: {e}"))?;
     let mut cfg = ExperimentConfig::default();
     cfg.apply_json(&json)?;
@@ -329,136 +1073,436 @@ pub fn run_client_loop(addr: &str, connect_retry_s: f64) -> Result<()> {
     let base = vec![0.0f32; spec.num_params];
     let mut order: Vec<u32> = Vec::new();
     let mut reply = Vec::new();
-    let mut pending_offer: Option<PendingOffer> = None;
-    let mut pending_dgc: Vec<Option<crate::compression::dgc::DgcState>> =
-        (0..fleet.len()).map(|_| None).collect();
 
+    // Both directions time out: a stalled reader on the far side must
+    // surface as an error here, not a hang (the session loop then
+    // treats it like any other drop).
+    let io_timeout = Duration::from_secs_f64(cfg.transport.io_timeout_s.max(1.0));
+    stream.set_read_timeout(Some(io_timeout))?;
+    stream.set_write_timeout(Some(io_timeout))?;
     out.clear();
     frame::encode_ready(&mut out, fp);
     stream.write_all(&out).context("sending Ready")?;
 
+    // ---- session state -----------------------------------------------
+    let mut offers: VecDeque<PendingOffer> = VecDeque::new();
+    // Rollback snapshots are residuals-only and capped: v1 cloned whole
+    // `DgcState`s into a fleet-sized table, which at million-client
+    // scale dwarfed the ResidualStore byte budget.
+    let mut pending: HashMap<u32, (Vec<f32>, Vec<f32>)> = HashMap::new();
+    let (mut sync_u, mut sync_v) = (Vec::new(), Vec::new());
+    let mut served: u64 = 0;
+
     // ---- round service loop ------------------------------------------
-    loop {
-        read_frame_into(&mut stream, &mut buf).context("waiting for next frame")?;
-        let (view, used) = frame::parse_frame(&buf).context("frame from server")?;
-        anyhow::ensure!(used == buf.len(), "trailing bytes after frame");
-        match view.kind {
-            FrameKind::RoundOffer => {
-                anyhow::ensure!(
-                    pending_offer.is_none(),
-                    "interleaved RoundOffer before the previous ModelDown"
-                );
-                let o = frame::parse_round_offer(&view)?;
-                anyhow::ensure!(
-                    o.group_count() == spec.mask_groups.len(),
-                    "offer carries {} mask groups, spec has {}",
-                    o.group_count(),
-                    spec.mask_groups.len()
-                );
-                let submodel = o.submodel();
-                for (g, keep) in submodel.keep.iter().enumerate() {
+    let end = 'session: loop {
+        let drop_err: anyhow::Error = 'serve: loop {
+            if let Some(n) = opts.exit_after {
+                if served >= n {
+                    break 'session ClientEnd::ExitAfter;
+                }
+            }
+            if let Err(e) = read_frame_into(&mut stream, &mut buf) {
+                break 'serve e;
+            }
+            let (view, used) = frame::parse_frame(&buf).context("frame from server")?;
+            anyhow::ensure!(used == buf.len(), "trailing bytes after frame");
+            match view.kind {
+                FrameKind::StateSync => {
+                    let s = frame::parse_state_sync(&view)?;
+                    let c = s.client as usize;
+                    anyhow::ensure!(c < fleet.len(), "StateSync for unknown client {c}");
+                    s.read_residuals(&mut sync_u, &mut sync_v);
+                    let st = fleet.client(c);
+                    st.participations = s.participations as usize;
+                    st.rng = Pcg64::from_raw(s.rng_state, s.rng_inc);
+                    st.dgc.restore_residuals(&sync_u, &sync_v);
+                    // Whatever round the snapshot predates supersedes
+                    // any rollback point this process was holding.
+                    pending.remove(&s.client);
+                }
+                FrameKind::RoundOffer => {
                     anyhow::ensure!(
-                        keep.len() == spec.mask_groups[g].size,
-                        "offer group {g} has {} units, spec has {}",
-                        keep.len(),
-                        spec.mask_groups[g].size
+                        offers.len() < MAX_PIPELINE,
+                        "offer queue overflow: {} offers pending (cap {MAX_PIPELINE})",
+                        offers.len()
                     );
-                }
-                pending_offer = Some(PendingOffer {
-                    round: o.round,
-                    client: o.client,
-                    seed: o.seed,
-                    lr: o.lr,
-                    submodel,
-                });
-            }
-            FrameKind::ModelDown => {
-                let offer = pending_offer
-                    .take()
-                    .context("ModelDown without a preceding RoundOffer")?;
-                let md = frame::parse_model_down(&view)?;
-                anyhow::ensure!(
-                    md.client == offer.client && md.round == offer.round,
-                    "ModelDown for client {} round {} after offer for client {} \
-                     round {}",
-                    md.client,
-                    md.round,
-                    offer.client,
-                    offer.round
-                );
-                anyhow::ensure!(
-                    md.codec == my_codec_id,
-                    "server encodes with codec id {}, this client is configured \
-                     for {} ({})",
-                    md.codec,
-                    my_codec_id,
-                    codec.name()
-                );
-                let c = md.client as usize;
-                anyhow::ensure!(c < fleet.len(), "client id {c} out of range");
-                // Mirror the coordinator's dispatch-time bookkeeping:
-                // same epoch RNG draw, same DGC snapshot discipline.
-                let plan = plans.get(&spec, &offer.submodel);
-                let num_samples = fleet.num_samples(c) as u32;
-                fleet.client(c).participations += 1;
-                let mut epoch = fleet.client(c).take_epoch_buf();
-                fleet.assemble_epoch(c, &spec, &mut order, &mut epoch);
-                if cfg.uplink_dgc {
-                    pending_dgc[c] = Some(fleet.client(c).dgc.clone());
-                }
-                let mut env = ClientEnv {
-                    spec: &spec,
-                    runtime: &mlp,
-                    codec: codec.as_ref(),
-                    base_params: &base,
-                    data: &epoch,
-                    dgc: if cfg.uplink_dgc {
-                        Some(&mut fleet.client(c).dgc)
-                    } else {
-                        None
-                    },
-                    submodel: &offer.submodel,
-                    plan: &plan,
-                    num_samples,
-                    ws: &mut ws,
-                };
-                client_execute(
-                    offer.round,
-                    md.client,
-                    offer.seed,
-                    offer.lr,
-                    md.payload,
-                    &mut env,
-                    &mut reply,
-                )?;
-                stream.write_all(&reply).context("sending UpdateUp")?;
-                fleet.client(c).put_epoch_buf(epoch);
-                // Dispatch boundary: keep the resident set inside the
-                // byte budget (no-op for unbudgeted populations).
-                fleet.end_round();
-            }
-            FrameKind::Ack | FrameKind::Cut => {
-                let close = frame::parse_round_close(&view)?;
-                let c = close.client as usize;
-                anyhow::ensure!(c < fleet.len(), "round close for unknown client {c}");
-                match view.kind {
-                    // Aggregated: the post-upload accumulators are now
-                    // the truth — drop the snapshot.
-                    FrameKind::Ack => {
-                        pending_dgc[c] = None;
+                    let o = frame::parse_round_offer(&view)?;
+                    anyhow::ensure!(
+                        o.group_count() == spec.mask_groups.len(),
+                        "offer carries {} mask groups, spec has {}",
+                        o.group_count(),
+                        spec.mask_groups.len()
+                    );
+                    let submodel = o.submodel();
+                    for (g, keep) in submodel.keep.iter().enumerate() {
+                        anyhow::ensure!(
+                            keep.len() == spec.mask_groups[g].size,
+                            "offer group {g} has {} units, spec has {}",
+                            keep.len(),
+                            spec.mask_groups[g].size
+                        );
                     }
-                    // Discarded: the upload never landed — restore the
-                    // pre-round accumulators (DGC keeps its
-                    // no-information-loss invariant).
-                    _ => {
-                        if let Some(snap) = pending_dgc[c].take() {
-                            fleet.client(c).dgc = snap;
+                    anyhow::ensure!(
+                        !offers.iter().any(|p| p.round == o.round && p.client == o.client),
+                        "duplicate RoundOffer for round {} client {}",
+                        o.round,
+                        o.client
+                    );
+                    offers.push_back(PendingOffer {
+                        round: o.round,
+                        client: o.client,
+                        seed: o.seed,
+                        lr: o.lr,
+                        submodel,
+                    });
+                }
+                FrameKind::ModelDown => {
+                    let md = frame::parse_model_down(&view)?;
+                    let pos = offers
+                        .iter()
+                        .position(|o| o.round == md.round && o.client == md.client)
+                        .with_context(|| {
+                            format!(
+                                "ModelDown for round {} client {} without a matching RoundOffer",
+                                md.round, md.client
+                            )
+                        })?;
+                    let offer = offers.remove(pos).expect("indexed offer");
+                    anyhow::ensure!(
+                        md.codec == my_codec_id,
+                        "server encodes with codec id {}, this client is configured \
+                         for {} ({})",
+                        md.codec,
+                        my_codec_id,
+                        codec.name()
+                    );
+                    let c = md.client as usize;
+                    anyhow::ensure!(c < fleet.len(), "client id {c} out of range");
+                    // Mirror the coordinator's dispatch-time bookkeeping:
+                    // same epoch RNG draw, same DGC snapshot discipline.
+                    let plan = plans.get(&spec, &offer.submodel);
+                    let num_samples = fleet.num_samples(c) as u32;
+                    fleet.client(c).participations += 1;
+                    let mut epoch = fleet.client(c).take_epoch_buf();
+                    fleet.assemble_epoch(c, &spec, &mut order, &mut epoch);
+                    if cfg.uplink_dgc {
+                        anyhow::ensure!(
+                            pending.len() < MAX_PIPELINE,
+                            "rollback snapshot budget exceeded (cap {MAX_PIPELINE})"
+                        );
+                        let (u, v) = fleet.client(c).dgc.residuals();
+                        pending.insert(md.client, (u.to_vec(), v.to_vec()));
+                    }
+                    let mut env = ClientEnv {
+                        spec: &spec,
+                        runtime: &mlp,
+                        codec: codec.as_ref(),
+                        base_params: &base,
+                        data: &epoch,
+                        dgc: if cfg.uplink_dgc {
+                            Some(&mut fleet.client(c).dgc)
+                        } else {
+                            None
+                        },
+                        submodel: &offer.submodel,
+                        plan: &plan,
+                        num_samples,
+                        ws: &mut ws,
+                    };
+                    client_execute(
+                        offer.round,
+                        md.client,
+                        offer.seed,
+                        offer.lr,
+                        md.payload,
+                        &mut env,
+                        &mut reply,
+                    )?;
+                    let write_res = stream.write_all(&reply);
+                    fleet.client(c).put_epoch_buf(epoch);
+                    // Dispatch boundary: keep the resident set inside
+                    // the byte budget (no-op for unbudgeted populations).
+                    fleet.end_round();
+                    served += 1;
+                    if let Err(e) = write_res {
+                        break 'serve anyhow::anyhow!("sending UpdateUp: {e}");
+                    }
+                }
+                FrameKind::Ack | FrameKind::Cut => {
+                    let close = frame::parse_round_close(&view)?;
+                    let c = close.client as usize;
+                    anyhow::ensure!(c < fleet.len(), "round close for unknown client {c}");
+                    match view.kind {
+                        // Aggregated: the post-upload accumulators are
+                        // now the truth — drop the rollback point.
+                        FrameKind::Ack => {
+                            pending.remove(&close.client);
+                        }
+                        // Discarded: the upload never landed — restore
+                        // the pre-round residuals (DGC keeps its
+                        // no-information-loss invariant).
+                        _ => {
+                            if let Some((u, v)) = pending.remove(&close.client) {
+                                fleet.client(c).dgc.restore_residuals(&u, &v);
+                            }
                         }
                     }
                 }
+                FrameKind::Bye => break 'session ClientEnd::Bye,
+                other => anyhow::bail!("unexpected {other:?} frame mid-session"),
             }
-            FrameKind::Bye => return Ok(()),
-            other => anyhow::bail!("unexpected {other:?} frame mid-session"),
+        };
+        // ---- dropped: resume the session or give up ------------------
+        anyhow::ensure!(
+            opts.reconnect_s > 0.0,
+            "connection to coordinator lost (reconnect disabled): {drop_err:#}"
+        );
+        offers.clear();
+        // Safe to forget rollback points: the server syncs every client
+        // it touches after a reconnect before its next round.
+        pending.clear();
+        stream = connect_within(addr, opts.reconnect_s)
+            .with_context(|| format!("reconnecting after: {drop_err:#}"))?;
+        let (sfp, tok, _json) =
+            client_handshake(&mut stream, token, io_timeout, &mut buf, &mut out)?;
+        anyhow::ensure!(sfp == fp, "server fingerprint changed across reconnect");
+        token = tok;
+        out.clear();
+        frame::encode_ready(&mut out, fp);
+        stream.write_all(&out).context("sending Ready after reconnect")?;
+    };
+    Ok(end)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FP: u64 = 0xfeed_beef_cafe_0001;
+
+    fn test_cfg(io_timeout_s: f64, resume: bool) -> TransportConfig {
+        TransportConfig {
+            io_timeout_s,
+            resume,
         }
+    }
+
+    /// Minimal fake remote: handshake only, leaving the socket in the
+    /// caller's hands. Returns the stream and the session token.
+    fn fake_client(addr: &str, token: u64) -> (TcpStream, u64) {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let mut out = Vec::new();
+        frame::encode_hello(&mut out, token);
+        s.write_all(&out).unwrap();
+        let mut buf = Vec::new();
+        read_frame_into(&mut s, &mut buf).unwrap();
+        let (view, _) = frame::parse_frame(&buf).unwrap();
+        let (fp, tok, _json) = frame::parse_config(&view).unwrap();
+        assert_eq!(fp, FP);
+        out.clear();
+        frame::encode_ready(&mut out, fp);
+        s.write_all(&out).unwrap();
+        (s, tok)
+    }
+
+    fn serve_one(io_timeout_s: f64, resume: bool) -> (TcpTransport, TcpStream, u64) {
+        let server = TcpServer::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let tcfg = test_cfg(io_timeout_s, resume);
+        let h = std::thread::spawn(move || server.accept_clients(1, "{}", FP, &tcfg));
+        let (stream, token) = fake_client(&addr, 0);
+        let transport = h.join().unwrap().unwrap();
+        (transport, stream, token)
+    }
+
+    fn offer_frame(round: u32, client: u32) -> Vec<u8> {
+        let sm = SubModel::from_keep(vec![vec![true, false, true]]);
+        let mut out = Vec::new();
+        frame::encode_round_offer(&mut out, round, client, 99, 0.1, 0.0, &sm);
+        out
+    }
+
+    fn model_frame(round: u32, client: u32) -> Vec<u8> {
+        let mut out = Vec::new();
+        frame::encode_model_down(&mut out, round, client, 0, &[1, 2, 3]);
+        out
+    }
+
+    fn update_up_frame(round: u32, client: u32) -> Vec<u8> {
+        let mut out = Vec::new();
+        let base = frame::begin_frame(&mut out, FrameKind::UpdateUp);
+        out.extend_from_slice(&round.to_le_bytes());
+        out.extend_from_slice(&client.to_le_bytes());
+        frame::end_frame(&mut out, base);
+        out
+    }
+
+    /// Read `RoundOffer` ‖ `ModelDown` off a fake client socket and
+    /// return the offer's pipeline key.
+    fn read_round(s: &mut TcpStream, buf: &mut Vec<u8>) -> (u32, u32) {
+        read_frame_into(s, buf).unwrap();
+        let (view, _) = frame::parse_frame(buf).unwrap();
+        assert_eq!(view.kind, FrameKind::RoundOffer);
+        let o = frame::parse_round_offer(&view).unwrap();
+        let key = (o.round, o.client);
+        read_frame_into(s, buf).unwrap();
+        let (view, _) = frame::parse_frame(buf).unwrap();
+        assert_eq!(view.kind, FrameKind::ModelDown);
+        key
+    }
+
+    #[test]
+    fn shared_lock_recovers_from_poison() {
+        let m = Mutex::new(5i32);
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = m.lock().unwrap();
+            panic!("poison the lock");
+        }));
+        assert!(m.is_poisoned());
+        // The old `.lock().unwrap()` would propagate the panic here.
+        assert_eq!(*lock(&m), 5);
+    }
+
+    #[test]
+    fn stalled_connection_surfaces_as_timeout_loss() {
+        let (transport, stream, _token) = serve_one(0.3, true);
+        // The fake never reads nor replies: the round must resolve as
+        // a timeout loss, not hang the caller.
+        let mut reply = Vec::new();
+        let st = transport
+            .exchange(0, 0, 0, &offer_frame(0, 0), &model_frame(0, 0), None, &mut reply)
+            .unwrap();
+        assert_eq!(st, RoundTripStatus::Lost(LossReason::Timeout));
+        drop(stream);
+        transport.shutdown().unwrap();
+    }
+
+    #[test]
+    fn dead_connection_without_resume_is_a_disconnect_loss() {
+        let (transport, stream, _token) = serve_one(10.0, false);
+        drop(stream); // client crashes
+        std::thread::sleep(Duration::from_millis(300)); // event loop notices EOF
+        let mut reply = Vec::new();
+        let st = transport
+            .exchange(0, 0, 0, &offer_frame(0, 0), &model_frame(0, 0), None, &mut reply)
+            .unwrap();
+        assert_eq!(st, RoundTripStatus::Lost(LossReason::Disconnected));
+        transport.shutdown().unwrap();
+    }
+
+    #[test]
+    fn pipelined_rounds_match_replies_to_their_exchange() {
+        let (transport, mut stream, _token) = serve_one(10.0, true);
+        let transport = Arc::new(transport);
+        // Fake remote: read two full rounds first (so both are in
+        // flight simultaneously), then answer them in arrival order.
+        let remote = std::thread::spawn(move || {
+            let mut buf = Vec::new();
+            let keys = [read_round(&mut stream, &mut buf), read_round(&mut stream, &mut buf)];
+            for (r, c) in keys {
+                stream.write_all(&update_up_frame(r, c)).unwrap();
+            }
+            stream
+        });
+        let spawn_exchange = |round: u32, client: u32| {
+            let t = transport.clone();
+            std::thread::spawn(move || {
+                let mut reply = Vec::new();
+                let st = t
+                    .exchange(
+                        0,
+                        round,
+                        client,
+                        &offer_frame(round, client),
+                        &model_frame(round, client),
+                        None,
+                        &mut reply,
+                    )
+                    .unwrap();
+                (st, reply)
+            })
+        };
+        let e1 = spawn_exchange(7, 0);
+        let e2 = spawn_exchange(7, 1);
+        for (handle, want) in [(e1, (7u32, 0u32)), (e2, (7u32, 1u32))] {
+            let (st, reply) = handle.join().unwrap();
+            assert_eq!(st, RoundTripStatus::Delivered);
+            let (view, _) = frame::parse_frame(&reply).unwrap();
+            assert_eq!(view.kind, FrameKind::UpdateUp);
+            let r = u32::from_le_bytes(view.payload[0..4].try_into().unwrap());
+            let c = u32::from_le_bytes(view.payload[4..8].try_into().unwrap());
+            // FIFO matching must hand each exchange its own reply no
+            // matter which thread enqueued first.
+            assert_eq!((r, c), want);
+        }
+        drop(remote.join().unwrap());
+        transport.shutdown().unwrap();
+    }
+
+    #[test]
+    fn reconnect_replays_open_round_with_state_sync() {
+        let server = TcpServer::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let tcfg = test_cfg(10.0, true);
+        let h = std::thread::spawn(move || server.accept_clients(1, "{}", FP, &tcfg));
+        let (mut a, token) = fake_client(&addr, 0);
+        let transport = Arc::new(h.join().unwrap().unwrap());
+        assert_eq!(token, 1);
+
+        let snap = StateSyncSnapshot {
+            client: 0,
+            participations: 5,
+            rng_state: 11,
+            rng_inc: 13,
+            dgc_u: vec![1.5],
+            dgc_v: vec![-2.5],
+        };
+        let t = transport.clone();
+        let s2 = snap.clone();
+        let ex = std::thread::spawn(move || {
+            let mut reply = Vec::new();
+            let st = t
+                .exchange(
+                    0,
+                    3,
+                    0,
+                    &offer_frame(3, 0),
+                    &model_frame(3, 0),
+                    Some(&s2),
+                    &mut reply,
+                )
+                .unwrap();
+            (st, reply)
+        });
+        // First connection receives the round plainly (generation 0 ⇒
+        // no StateSync), then dies without answering.
+        let mut buf = Vec::new();
+        assert_eq!(read_round(&mut a, &mut buf), (3, 0));
+        drop(a);
+
+        // Reconnect with the session token: the replay must lead with
+        // the snapshot, then repeat the round.
+        let (mut b, token2) = fake_client(&addr, token);
+        assert_eq!(token2, token);
+        read_frame_into(&mut b, &mut buf).unwrap();
+        let (view, _) = frame::parse_frame(&buf).unwrap();
+        assert_eq!(view.kind, FrameKind::StateSync);
+        let s = frame::parse_state_sync(&view).unwrap();
+        assert_eq!(s.client, snap.client);
+        assert_eq!(s.participations, snap.participations);
+        assert_eq!(s.rng_state, snap.rng_state);
+        assert_eq!(s.rng_inc, snap.rng_inc);
+        let (mut u, mut v) = (Vec::new(), Vec::new());
+        s.read_residuals(&mut u, &mut v);
+        assert_eq!((u, v), (snap.dgc_u.clone(), snap.dgc_v.clone()));
+        assert_eq!(read_round(&mut b, &mut buf), (3, 0));
+        b.write_all(&update_up_frame(3, 0)).unwrap();
+
+        let (st, reply) = ex.join().unwrap();
+        assert_eq!(st, RoundTripStatus::Delivered);
+        assert!(!reply.is_empty());
+        drop(b);
+        transport.shutdown().unwrap();
     }
 }

@@ -1,0 +1,178 @@
+//! Client churn: processes die mid-run and the run survives.
+//!
+//! 1. **Resume** — a client that crashes after serving a few rounds
+//!    and is restarted (fresh process, no token) adopts its dead slot,
+//!    receives a `StateSync` plus every still-open `RoundOffer`, and
+//!    the run finishes **bit-identical** to loopback: same records,
+//!    same byte counts, same final model hash. Churn is invisible to
+//!    the learning trajectory.
+//! 2. **No resume** — with `transport.resume = false` a dead client's
+//!    in-flight rounds convert into policy-visible losses (`lost` in
+//!    the round records) and the run still completes instead of
+//!    returning `Err`.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use afd::config::{ExperimentConfig, Preset};
+use afd::coordinator::experiment::Experiment;
+use afd::metrics::RoundRecord;
+use afd::runtime::native::mlp_from_config;
+use afd::transport::tcp::{run_client_loop, ClientEnd, ClientOptions, TcpServer};
+use afd::transport::Transport;
+use afd::util::model_hash;
+
+fn assert_records_equal(a: &RoundRecord, b: &RoundRecord, what: &str) {
+    assert_eq!(a.round, b.round, "{what}");
+    assert_eq!(a.round_s.to_bits(), b.round_s.to_bits(), "{what} round {}", a.round);
+    assert_eq!(
+        a.train_loss.to_bits(),
+        b.train_loss.to_bits(),
+        "{what} round {}",
+        a.round
+    );
+    assert_eq!(
+        a.eval_acc.map(f64::to_bits),
+        b.eval_acc.map(f64::to_bits),
+        "{what} round {}",
+        a.round
+    );
+    assert_eq!(a.down_bytes, b.down_bytes, "{what} round {}", a.round);
+    assert_eq!(a.up_bytes, b.up_bytes, "{what} round {}", a.round);
+    assert_eq!(a.arrived, b.arrived, "{what} round {}", a.round);
+    assert_eq!(a.cut, b.cut, "{what} round {}", a.round);
+    assert_eq!(a.dropped, b.dropped, "{what} round {}", a.round);
+    assert_eq!(a.lost, b.lost, "{what} round {}", a.round);
+}
+
+fn run_loopback(cfg: &ExperimentConfig) -> (Vec<RoundRecord>, u64) {
+    let mut exp = Experiment::build(cfg).unwrap();
+    let mut records = Vec::new();
+    for round in 1..=cfg.rounds {
+        records.push(exp.step(round).unwrap());
+    }
+    (records, model_hash(&exp.global))
+}
+
+/// A client "process" that crashes after serving `crash_after` rounds,
+/// then (if `restart`) is started again as a fresh process — token 0,
+/// so it adopts the lowest dead slot and resumes that session.
+fn churny_client(
+    addr: String,
+    crash_after: u64,
+    restart: bool,
+) -> std::thread::JoinHandle<anyhow::Result<()>> {
+    std::thread::spawn(move || {
+        let crash = ClientOptions {
+            connect_retry_s: 30.0,
+            exit_after: Some(crash_after),
+            ..ClientOptions::default()
+        };
+        match run_client_loop(&addr, &crash)? {
+            ClientEnd::Bye => return Ok(()),
+            ClientEnd::ExitAfter => {}
+        }
+        if !restart {
+            return Ok(());
+        }
+        let fresh = ClientOptions {
+            connect_retry_s: 30.0,
+            ..ClientOptions::default()
+        };
+        let mut last = anyhow::anyhow!("restart never attempted");
+        for _ in 0..200 {
+            // The replacement can beat the coordinator's EOF detection
+            // of the crashed socket, in which case no slot is vacant
+            // yet and the handshake is refused — retry briefly, like a
+            // process supervisor would.
+            match run_client_loop(&addr, &fresh) {
+                Ok(ClientEnd::Bye) => return Ok(()),
+                Ok(ClientEnd::ExitAfter) => unreachable!("no exit_after on restart"),
+                Err(e) => last = e,
+            }
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        Err(anyhow::anyhow!("restarted client never re-joined: {last}"))
+    })
+}
+
+fn run_tcp_with_churn(
+    cfg: &ExperimentConfig,
+    conns: usize,
+    crash_after: u64,
+    restart: bool,
+) -> (Vec<RoundRecord>, u64) {
+    let (_, spec) = mlp_from_config(cfg);
+    let server = TcpServer::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let mut handles = vec![churny_client(addr.clone(), crash_after, restart)];
+    for _ in 1..conns {
+        let a = addr.clone();
+        let opts = ClientOptions {
+            connect_retry_s: 30.0,
+            ..ClientOptions::default()
+        };
+        handles.push(std::thread::spawn(move || {
+            run_client_loop(&a, &opts).map(|_| ())
+        }));
+    }
+    let transport = server
+        .accept_clients(
+            conns,
+            &cfg.to_json().to_string_compact(),
+            spec.layout_fingerprint(),
+            &cfg.transport,
+        )
+        .unwrap();
+    let transport: Arc<dyn Transport> = Arc::new(transport);
+    let mut exp = Experiment::build_with_transport(cfg, Arc::clone(&transport)).unwrap();
+    let mut records = Vec::new();
+    for round in 1..=cfg.rounds {
+        records.push(exp.step(round).unwrap());
+    }
+    let hash = model_hash(&exp.global);
+    transport.shutdown().unwrap();
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+    (records, hash)
+}
+
+/// The PR-8 acceptance bar: kill a client mid-run, restart it, and the
+/// session-resume path (slot adoption + StateSync + offer replay)
+/// keeps the whole run bit-identical to loopback.
+#[test]
+fn killed_and_restarted_client_resumes_bit_identically() {
+    let mut cfg = ExperimentConfig::preset(Preset::NativeSmoke);
+    cfg.rounds = 5;
+    cfg.eval_every = 5;
+    let (loop_records, loop_hash) = run_loopback(&cfg);
+    let (tcp_records, tcp_hash) = run_tcp_with_churn(&cfg, 2, 2, true);
+    assert_eq!(loop_records.len(), tcp_records.len());
+    for (a, b) in loop_records.iter().zip(&tcp_records) {
+        assert_records_equal(a, b, "churn+resume");
+    }
+    // Nothing was lost: the crash window was bridged by replay.
+    assert!(tcp_records.iter().all(|r| r.lost == 0));
+    assert_eq!(
+        loop_hash, tcp_hash,
+        "resumed run must converge to the identical model"
+    );
+}
+
+/// With resume disabled a permanent client death degrades gracefully:
+/// every round still returns a record, and the dead connection's
+/// in-flight clients show up as `lost` instead of erroring the run.
+#[test]
+fn dead_client_without_resume_converts_to_losses() {
+    let mut cfg = ExperimentConfig::preset(Preset::NativeSmoke);
+    cfg.rounds = 5;
+    cfg.eval_every = 5;
+    cfg.transport.resume = false;
+    let (records, _hash) = run_tcp_with_churn(&cfg, 2, 1, false);
+    assert_eq!(records.len(), cfg.rounds);
+    let lost: usize = records.iter().map(|r| r.lost).sum();
+    assert!(lost > 0, "the dead connection's rounds must surface as losses");
+    // The surviving connection keeps delivering updates.
+    assert!(records.iter().map(|r| r.arrived).sum::<usize>() > 0);
+}

@@ -25,7 +25,7 @@ use afd::model::submodel::SubModel;
 use afd::runtime::native::{mlp_from_config, mlp_spec, NativeMlp};
 use afd::runtime::{BatchInput, EpochData};
 use afd::tensor::kernels::Workspace;
-use afd::transport::tcp::{run_client_loop, TcpServer};
+use afd::transport::tcp::{run_client_loop, ClientOptions, TcpServer};
 use afd::transport::{client_execute, ClientEnv, Transport};
 use afd::util::model_hash;
 use afd::util::rng::Pcg64;
@@ -61,6 +61,7 @@ fn assert_records_equal(a: &RoundRecord, b: &RoundRecord, what: &str) {
     assert_eq!(a.arrived, b.arrived, "{what} round {}", a.round);
     assert_eq!(a.cut, b.cut, "{what} round {}", a.round);
     assert_eq!(a.dropped, b.dropped, "{what} round {}", a.round);
+    assert_eq!(a.lost, b.lost, "{what} round {}", a.round);
 }
 
 #[test]
@@ -145,7 +146,11 @@ fn run_tcp(cfg: &ExperimentConfig, conns: usize) -> (Vec<RoundRecord>, u64) {
     let handles: Vec<_> = (0..conns)
         .map(|_| {
             let a = addr.clone();
-            std::thread::spawn(move || run_client_loop(&a, 10.0))
+            let opts = ClientOptions {
+                connect_retry_s: 10.0,
+                ..ClientOptions::default()
+            };
+            std::thread::spawn(move || run_client_loop(&a, &opts))
         })
         .collect();
     let transport = server
@@ -153,6 +158,7 @@ fn run_tcp(cfg: &ExperimentConfig, conns: usize) -> (Vec<RoundRecord>, u64) {
             conns,
             &cfg.to_json().to_string_compact(),
             spec.layout_fingerprint(),
+            &cfg.transport,
         )
         .unwrap();
     let transport: Arc<dyn Transport> = Arc::new(transport);

@@ -19,19 +19,55 @@ fn sample_submodel(rng: &mut Pcg64, groups: usize, max_units: usize) -> SubModel
     SubModel::from_keep(keep)
 }
 
+/// Run-structured masks: long kept/dropped stretches, the shape the
+/// RLE group encoding exists for.
+fn runny_submodel(rng: &mut Pcg64, groups: usize, max_units: usize) -> SubModel {
+    let keep = (0..groups)
+        .map(|_| {
+            let n = 1 + rng.below(max_units as u64) as usize;
+            let mut bits = Vec::with_capacity(n);
+            let mut cur = rng.next_f64() < 0.5;
+            while bits.len() < n {
+                let run = 1 + rng.below(48) as usize;
+                for _ in 0..run.min(n - bits.len()) {
+                    bits.push(cur);
+                }
+                cur = !cur;
+            }
+            bits
+        })
+        .collect();
+    SubModel::from_keep(keep)
+}
+
 /// A corpus covering every frame kind with varied payload sizes.
 fn frame_corpus(seed: u64) -> Vec<Vec<u8>> {
     let mut rng = Pcg64::new(seed);
     let mut frames = Vec::new();
     let mut buf = Vec::new();
 
-    frame::encode_hello(&mut buf);
+    frame::encode_hello(&mut buf, 0);
+    frames.push(std::mem::take(&mut buf));
+    frame::encode_hello(&mut buf, rng.next_u64());
     frames.push(std::mem::take(&mut buf));
     frame::encode_ready(&mut buf, rng.next_u64());
     frames.push(std::mem::take(&mut buf));
     frame::encode_bye(&mut buf);
     frames.push(std::mem::take(&mut buf));
-    frame::encode_config(&mut buf, rng.next_u64(), "{\"rounds\": 3}");
+    frame::encode_config(&mut buf, rng.next_u64(), rng.below(9), "{\"rounds\": 3}");
+    frames.push(std::mem::take(&mut buf));
+    frame::encode_state_sync(&mut buf, 3, 17, rng.next_u64() as u128, rng.next_u64() as u128, &[], &[]);
+    frames.push(std::mem::take(&mut buf));
+    let res: Vec<f32> = (0..33).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    frame::encode_state_sync(
+        &mut buf,
+        9,
+        1 << 40,
+        u128::MAX,
+        (1u128 << 64) | 7,
+        &res,
+        &res,
+    );
     frames.push(std::mem::take(&mut buf));
     frame::encode_round_close(&mut buf, true, 7, 3);
     frames.push(std::mem::take(&mut buf));
@@ -60,6 +96,18 @@ fn frame_corpus(seed: u64) -> Vec<Vec<u8>> {
         frame::end_frame(&mut buf, base);
         frames.push(std::mem::take(&mut buf));
     }
+
+    // Run-structured offers so the truncation / bit-flip sweeps cover
+    // the RLE group encoding, not just raw bitmaps.
+    for i in 0..4 {
+        let sm = runny_submodel(&mut rng, 1 + (i % 2), 220);
+        frame::encode_round_offer(&mut buf, 100 + i as u32, i as u32, 1, 0.05, f64::NAN, &sm);
+        frames.push(std::mem::take(&mut buf));
+    }
+    let uniform = SubModel::from_keep(vec![vec![true; 200], vec![false; 177], vec![true; 64]]);
+    frame::encode_round_offer(&mut buf, 200, 0, 2, 0.05, 1.0, &uniform);
+    frames.push(std::mem::take(&mut buf));
+
     frames
 }
 
@@ -95,6 +143,71 @@ fn round_offer_roundtrips_submodel_exactly() {
         let mut other = sm.keep.clone();
         other[0][0] = !other[0][0];
         assert!(!offer.matches_submodel(&SubModel::from_keep(other)));
+    }
+}
+
+/// Run-structured and uniform masks round-trip exactly through the
+/// RLE group encoding, and a long uniform run genuinely compresses:
+/// the whole frame is smaller than the raw bitmap for the same mask
+/// would be.
+#[test]
+fn rle_keep_masks_roundtrip_and_compress() {
+    let mut rng = Pcg64::new(6);
+    for case in 0..30 {
+        let sm = runny_submodel(&mut rng, 1 + (case % 3), 300);
+        let mut buf = Vec::new();
+        frame::encode_round_offer(&mut buf, case as u32, 1, 7, 0.5, f64::NAN, &sm);
+        let (view, _) = frame::parse_frame(&buf).unwrap();
+        let offer = frame::parse_round_offer(&view).unwrap();
+        assert_eq!(offer.submodel().keep, sm.keep, "case {case}");
+        assert!(offer.matches_submodel(&sm), "case {case}");
+    }
+
+    // 4096 uniformly-kept units: raw bitmap needs 512 bytes of mask;
+    // the RLE path must beat that by an order of magnitude.
+    let sm = SubModel::from_keep(vec![vec![true; 4096]]);
+    let mut buf = Vec::new();
+    frame::encode_round_offer(&mut buf, 0, 0, 0, 0.1, f64::NAN, &sm);
+    assert!(
+        buf.len() < 4096 / 8,
+        "uniform 4096-unit mask should RLE-compress, frame is {} bytes",
+        buf.len()
+    );
+    let (view, _) = frame::parse_frame(&buf).unwrap();
+    assert_eq!(frame::parse_round_offer(&view).unwrap().submodel().keep, sm.keep);
+
+    // Worst case for RLE (strict alternation) must still round-trip —
+    // the encoder falls back to the bitmap tag rather than inflating.
+    let alternating: Vec<bool> = (0..777).map(|i| i % 2 == 0).collect();
+    let sm = SubModel::from_keep(vec![alternating]);
+    let mut buf = Vec::new();
+    frame::encode_round_offer(&mut buf, 0, 0, 0, 0.1, f64::NAN, &sm);
+    let (view, _) = frame::parse_frame(&buf).unwrap();
+    assert_eq!(frame::parse_round_offer(&view).unwrap().submodel().keep, sm.keep);
+}
+
+/// StateSync frames carry a client's full resume state — RNG raw
+/// state, participation count, DGC residuals — bit-exactly.
+#[test]
+fn state_sync_roundtrips_fields_and_residuals() {
+    let mut rng = Pcg64::new(7);
+    for len in [0usize, 1, 33, 512] {
+        let u: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+        let v: Vec<f32> = (0..len).map(|_| rng.normal_f32(-1.0, 0.5)).collect();
+        let (state, inc) = (rng.next_u64() as u128 | (1 << 100), rng.next_u64() as u128 | 1);
+        let mut buf = Vec::new();
+        frame::encode_state_sync(&mut buf, 42, 9000, state, inc, &u, &v);
+        let (view, _) = frame::parse_frame(&buf).unwrap();
+        let sync = frame::parse_state_sync(&view).unwrap();
+        assert_eq!(sync.client, 42);
+        assert_eq!(sync.participations, 9000);
+        assert_eq!(sync.rng_state, state);
+        assert_eq!(sync.rng_inc, inc);
+        assert_eq!(sync.residual_len(), len);
+        let (mut ru, mut rv) = (Vec::new(), Vec::new());
+        sync.read_residuals(&mut ru, &mut rv);
+        assert_eq!(ru, u, "len {len}");
+        assert_eq!(rv, v, "len {len}");
     }
 }
 
@@ -168,6 +281,8 @@ fn random_garbage_never_panics() {
             let _ = frame::parse_round_close(&view);
             let _ = frame::parse_config(&view);
             let _ = frame::parse_ready(&view);
+            let _ = frame::parse_hello(&view);
+            let _ = frame::parse_state_sync(&view);
         }
         Ok(())
     });
@@ -208,10 +323,11 @@ fn short_payloads_error_diagnosably() {
 #[test]
 fn wrong_kind_routing_is_an_error() {
     let mut buf = Vec::new();
-    frame::encode_hello(&mut buf);
+    frame::encode_hello(&mut buf, 1);
     let (view, _) = frame::parse_frame(&buf).unwrap();
     assert!(frame::parse_round_offer(&view).is_err());
     assert!(frame::parse_update_up(&view).is_err());
     assert!(frame::parse_model_down(&view).is_err());
     assert!(frame::parse_config(&view).is_err());
+    assert!(frame::parse_state_sync(&view).is_err());
 }
