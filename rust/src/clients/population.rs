@@ -33,10 +33,14 @@
 //! | 40..48    | DGC residual length `L` (u64, f32 count)|
 //! | 48..48+4L | DGC `u` buffer                          |
 //! | ..  +8L   | DGC `v` buffer                          |
+//! | ..  +4    | CRC32 of bytes 0..48+8L (IEEE, as frames)|
 //!
 //! Records live in a temp file (deleted on drop) indexed by client id;
 //! a client's slot is reused in place when its record fits, otherwise
-//! the record is appended. The byte budget applies to **resident**
+//! the record is appended. Rehydration verifies the CRC trailer before
+//! touching any client state: a truncated or corrupted record surfaces
+//! as a typed [`SpillError`] (never garbage residuals), which the
+//! scheduler converts into a per-round loss. The byte budget applies to **resident**
 //! state and is enforced at round boundaries ([`Population::end_round`])
 //! — within a step the in-flight cohort is materialized, so the
 //! transient peak is cohort-proportional by design.
@@ -107,6 +111,38 @@ struct Slot {
 }
 
 const SPILL_HEADER: usize = 48;
+const SPILL_TRAILER: usize = 4;
+
+/// A spill record failed validation at rehydration: truncated write,
+/// on-disk corruption, or an injected storage fault. The client's
+/// saved state is unusable; the scheduler reports the client lost for
+/// the round instead of training on garbage residuals.
+#[derive(Debug, Clone)]
+pub struct SpillError {
+    pub client: usize,
+    pub detail: String,
+}
+
+impl SpillError {
+    fn new(client: usize, detail: impl Into<String>) -> SpillError {
+        SpillError {
+            client,
+            detail: detail.into(),
+        }
+    }
+}
+
+impl std::fmt::Display for SpillError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "residual store: client {} spill record invalid: {}",
+            self.client, self.detail
+        )
+    }
+}
+
+impl std::error::Error for SpillError {}
 
 static SPILL_FILE_SEQ: AtomicU64 = AtomicU64::new(0);
 
@@ -257,9 +293,12 @@ impl ResidualStore {
 
     /// Admit a freshly-built shell: if a spill record exists the saved
     /// state is loaded into it (a HIT), otherwise it stays fresh (a
-    /// MISS). The entry becomes resident and most-recently used.
-    fn admit(&mut self, id: usize, mut st: ClientState) {
-        let rehydrated = self.load_spilled(id, &mut st);
+    /// MISS). The entry becomes resident and most-recently used. An
+    /// invalid spill record surfaces as [`SpillError`] and nothing is
+    /// admitted — the client must not train from reset state while a
+    /// (corrupt) saved record exists, or results silently diverge.
+    fn admit(&mut self, id: usize, mut st: ClientState) -> Result<(), SpillError> {
+        let rehydrated = self.load_spilled(id, &mut st)?;
         if crate::obs::enabled() {
             if rehydrated {
                 crate::obs::metrics::RESIDUAL_STORE_HITS.incr();
@@ -275,17 +314,36 @@ impl ResidualStore {
                 last_use: self.tick,
             },
         );
+        Ok(())
+    }
+
+    /// Insert `st` directly as resident (checkpoint restore: the state
+    /// comes from the checkpoint body, not the spill file; any stale
+    /// spill slot is forgotten so it cannot shadow the restored state).
+    fn admit_raw(&mut self, id: usize, st: ClientState) {
+        if let Some(spill) = &mut self.spill {
+            spill.slots.remove(&id);
+        }
+        self.tick += 1;
+        self.resident.insert(
+            id,
+            Entry {
+                st,
+                last_use: self.tick,
+            },
+        );
     }
 
     /// Read `id`'s spill record into `st`, returning whether one
     /// existed. Reuses the I/O scratch buffers — allocation-free once
-    /// they are warm.
-    fn load_spilled(&mut self, id: usize, st: &mut ClientState) -> bool {
+    /// they are warm. The CRC trailer is verified over the whole
+    /// record before any field is applied.
+    fn load_spilled(&mut self, id: usize, st: &mut ClientState) -> Result<bool, SpillError> {
         let Some(spill) = &mut self.spill else {
-            return false;
+            return Ok(false);
         };
         let Some(slot) = spill.slots.get(&id) else {
-            return false;
+            return Ok(false);
         };
         let buf = &mut self.byte_scratch;
         buf.clear();
@@ -294,38 +352,106 @@ impl ResidualStore {
             .file
             .seek(SeekFrom::Start(slot.offset))
             .and_then(|_| spill.file.read_exact(buf))
-            .expect("residual store: spill header read failed");
+            .map_err(|e| SpillError::new(id, format!("header read failed: {e}")))?;
+        let u64_at =
+            |b: &[u8], o: usize| u64::from_le_bytes(b[o..o + 8].try_into().unwrap());
+        let dgc_len = u64_at(buf, 40) as usize;
+        let total = SPILL_HEADER + dgc_len * 8 + SPILL_TRAILER;
+        if total as u64 > slot.cap {
+            return Err(SpillError::new(
+                id,
+                format!("header corrupt: record {total} B exceeds slot {} B", slot.cap),
+            ));
+        }
+        buf.resize(total, 0);
+        spill
+            .file
+            .read_exact(&mut buf[SPILL_HEADER..])
+            .map_err(|e| SpillError::new(id, format!("body read failed: {e}")))?;
+        // Injected storage fault: corrupt one byte upstream of the CRC
+        // check, exactly where real bit rot would land.
+        if crate::fault::enabled()
+            && crate::fault::should(crate::fault::Site::SpillCorrupt, id as u64, 0)
+        {
+            let pos = crate::fault::derive(crate::fault::Site::SpillCorrupt, id as u64, 1)
+                as usize
+                % (total - SPILL_TRAILER);
+            buf[pos] ^= 0x40;
+        }
+        let body = total - SPILL_TRAILER;
+        let want = u32::from_le_bytes(buf[body..].try_into().unwrap());
+        let got = crate::transport::frame::crc32(&buf[..body]);
+        if want != got {
+            return Err(SpillError::new(
+                id,
+                format!("crc mismatch (stored {want:#010x}, computed {got:#010x})"),
+            ));
+        }
+        Self::apply_record(st, &buf[..body], &mut self.u_scratch, &mut self.v_scratch)
+            .map_err(|d| SpillError::new(id, d))?;
+        Ok(true)
+    }
+
+    /// Parse one CRC-verified spill-format record (header + DGC body,
+    /// no trailer) into `st`.
+    fn apply_record(
+        st: &mut ClientState,
+        rec: &[u8],
+        u_scratch: &mut Vec<f32>,
+        v_scratch: &mut Vec<f32>,
+    ) -> Result<(), String> {
+        if rec.len() < SPILL_HEADER {
+            return Err(format!("record too short ({} B)", rec.len()));
+        }
         let u128_at = |b: &[u8], o: usize| {
             u128::from_le_bytes(b[o..o + 16].try_into().unwrap())
         };
         let u64_at =
             |b: &[u8], o: usize| u64::from_le_bytes(b[o..o + 8].try_into().unwrap());
-        let state = u128_at(buf, 0);
-        let inc = u128_at(buf, 16);
-        let participations = u64_at(buf, 32) as usize;
-        let dgc_len = u64_at(buf, 40) as usize;
+        let state = u128_at(rec, 0);
+        let inc = u128_at(rec, 16);
+        let participations = u64_at(rec, 32) as usize;
+        let dgc_len = u64_at(rec, 40) as usize;
+        if rec.len() != SPILL_HEADER + dgc_len * 8 {
+            return Err(format!(
+                "record length {} B does not match DGC length {dgc_len}",
+                rec.len()
+            ));
+        }
         st.rng = Pcg64::from_raw(state, inc);
         st.participations = participations;
-        buf.clear();
-        buf.resize(dgc_len * 8, 0);
-        spill
-            .file
-            .read_exact(buf)
-            .expect("residual store: spill body read failed");
-        self.u_scratch.clear();
-        self.v_scratch.clear();
-        self.u_scratch.extend(
-            buf[..dgc_len * 4]
+        let body = &rec[SPILL_HEADER..];
+        u_scratch.clear();
+        v_scratch.clear();
+        u_scratch.extend(
+            body[..dgc_len * 4]
                 .chunks_exact(4)
                 .map(|c| f32::from_le_bytes(c.try_into().unwrap())),
         );
-        self.v_scratch.extend(
-            buf[dgc_len * 4..]
+        v_scratch.extend(
+            body[dgc_len * 4..]
                 .chunks_exact(4)
                 .map(|c| f32::from_le_bytes(c.try_into().unwrap())),
         );
-        st.dgc.restore_residuals(&self.u_scratch, &self.v_scratch);
-        true
+        st.dgc.restore_residuals(u_scratch, v_scratch);
+        Ok(())
+    }
+
+    /// Serialize `st`'s mutable state in spill-record layout (header +
+    /// DGC body, no CRC trailer) onto `out`.
+    fn push_record(st: &ClientState, out: &mut Vec<u8>) {
+        let (u, v) = st.dgc.residuals();
+        let (state, inc) = st.rng.to_raw();
+        out.extend_from_slice(&state.to_le_bytes());
+        out.extend_from_slice(&inc.to_le_bytes());
+        out.extend_from_slice(&(st.participations as u64).to_le_bytes());
+        out.extend_from_slice(&(u.len() as u64).to_le_bytes());
+        for &x in u {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        for &x in v {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
     }
 
     /// Evict `id`: write its exact mutable state to the spill file,
@@ -337,22 +463,12 @@ impl ResidualStore {
             .remove(&id)
             .expect("residual store: evicting non-resident client");
         let released = st.resident_bytes() as u64;
-        // Serialize the record.
-        let (u, v) = st.dgc.residuals();
-        let dgc_len = u.len();
-        let (state, inc) = st.rng.to_raw();
+        // Serialize the record and seal it with a CRC trailer.
         let buf = &mut self.byte_scratch;
         buf.clear();
-        buf.extend_from_slice(&state.to_le_bytes());
-        buf.extend_from_slice(&inc.to_le_bytes());
-        buf.extend_from_slice(&(st.participations as u64).to_le_bytes());
-        buf.extend_from_slice(&(dgc_len as u64).to_le_bytes());
-        for &x in u {
-            buf.extend_from_slice(&x.to_le_bytes());
-        }
-        for &x in v {
-            buf.extend_from_slice(&x.to_le_bytes());
-        }
+        Self::push_record(&st, buf);
+        let crc = crate::transport::frame::crc32(buf);
+        buf.extend_from_slice(&crc.to_le_bytes());
         let need = buf.len() as u64;
         let spill = self
             .spill
@@ -372,10 +488,23 @@ impl ResidualStore {
                 off
             }
         };
+        // Injected storage fault: truncate the write short of the CRC
+        // trailer — the record rehydrates as a typed error, never as
+        // garbage residuals.
+        let write_len = if crate::fault::enabled()
+            && crate::fault::should(
+                crate::fault::Site::SpillTruncate,
+                id as u64,
+                st.participations as u64,
+            ) {
+            buf.len() - 3
+        } else {
+            buf.len()
+        };
         spill
             .file
             .seek(SeekFrom::Start(offset))
-            .and_then(|_| spill.file.write_all(buf))
+            .and_then(|_| spill.file.write_all(&buf[..write_len]))
             .expect("residual store: spill write failed");
         if crate::obs::enabled() {
             crate::obs::metrics::RESIDUAL_STORE_EVICTIONS.incr();
@@ -523,15 +652,31 @@ impl Population {
         }
     }
 
-    /// Materialize client `c` (resident hit, spill rehydration, or
-    /// fresh derivation) and return its mutable state.
-    pub fn client(&mut self, c: usize) -> &mut ClientState {
-        assert!(c < self.num_clients, "client {c} out of population range");
+    /// Make client `c` resident: build a shell and admit it (spill
+    /// rehydration or fresh derivation). No-op when already resident.
+    fn ensure_resident(&mut self, c: usize) -> Result<(), SpillError> {
         if !self.store.is_resident(c) {
             let st = self.build_shell(c);
-            self.store.admit(c, st);
+            self.store.admit(c, st)?;
         }
-        self.store.touch(c)
+        Ok(())
+    }
+
+    /// Materialize client `c` (resident hit, spill rehydration, or
+    /// fresh derivation) and return its mutable state. An invalid
+    /// spill record is a typed [`SpillError`]; the scheduler converts
+    /// it into a per-round loss instead of failing the run.
+    pub fn try_client(&mut self, c: usize) -> Result<&mut ClientState, SpillError> {
+        assert!(c < self.num_clients, "client {c} out of population range");
+        self.ensure_resident(c)?;
+        Ok(self.store.touch(c))
+    }
+
+    /// Materialize client `c`, panicking on storage corruption (the
+    /// infallible path for callers with no loss channel; the engine
+    /// uses [`Population::try_client`]).
+    pub fn client(&mut self, c: usize) -> &mut ClientState {
+        self.try_client(c).unwrap_or_else(|e| panic!("{e}"))
     }
 
     /// A fresh shell for client `c`: pure-derived immutable parameters
@@ -572,10 +717,8 @@ impl Population {
         out: &mut EpochData,
     ) {
         assert!(c < self.num_clients, "client {c} out of population range");
-        if !self.store.is_resident(c) {
-            let st = self.build_shell(c);
-            self.store.admit(c, st);
-        }
+        self.ensure_resident(c)
+            .unwrap_or_else(|e| panic!("{e}"));
         match &self.source {
             Source::Shared { dataset, .. } => {
                 let st = self.store.touch(c);
@@ -605,6 +748,84 @@ impl Population {
     /// resident high-water mark).
     pub fn end_round(&mut self) {
         self.store.enforce_budget();
+    }
+
+    /// Serialize every touched client's mutable state (resident or
+    /// spilled) for a coordinator checkpoint: `u64` count, then per
+    /// client `u32` id, `u64` record length, spill-format record —
+    /// ids ascending, so the blob is independent of hash-map iteration
+    /// order and byte-stable across runs. Spilled records are
+    /// CRC-verified on the way through.
+    pub fn save_state(&mut self, out: &mut Vec<u8>) -> Result<(), SpillError> {
+        let mut ids: Vec<usize> = self.store.resident.keys().copied().collect();
+        if let Some(spill) = &self.store.spill {
+            for &id in spill.slots.keys() {
+                if !self.store.resident.contains_key(&id) {
+                    ids.push(id);
+                }
+            }
+        }
+        ids.sort_unstable();
+        out.extend_from_slice(&(ids.len() as u64).to_le_bytes());
+        let mut rec = Vec::new();
+        let mut scratch = ClientState {
+            id: 0,
+            num_samples: 0,
+            dgc: DgcState::new(self.dgc_cfg.clone()),
+            rng: Pcg64::from_raw(0, 0),
+            participations: 0,
+            epoch_buf: empty_epoch(),
+            dataset: None,
+        };
+        for id in ids {
+            rec.clear();
+            if let Some(e) = self.store.resident.get(&id) {
+                ResidualStore::push_record(&e.st, &mut rec);
+            } else {
+                // Paged out: round-trip the spill record through the
+                // CRC check without disturbing residency or LRU order.
+                self.store.load_spilled(id, &mut scratch)?;
+                ResidualStore::push_record(&scratch, &mut rec);
+            }
+            out.extend_from_slice(&(id as u32).to_le_bytes());
+            out.extend_from_slice(&(rec.len() as u64).to_le_bytes());
+            out.extend_from_slice(&rec);
+        }
+        Ok(())
+    }
+
+    /// Restore fleet state written by [`Population::save_state`] into
+    /// this (freshly built) population, then enforce the byte budget.
+    pub fn restore_state(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        let mut off = 0usize;
+        let take = |bytes: &[u8], off: &mut usize, n: usize| -> anyhow::Result<Vec<u8>> {
+            if *off + n > bytes.len() {
+                anyhow::bail!("population restore: truncated fleet blob");
+            }
+            let s = bytes[*off..*off + n].to_vec();
+            *off += n;
+            Ok(s)
+        };
+        let count = u64::from_le_bytes(take(bytes, &mut off, 8)?.try_into().unwrap()) as usize;
+        let mut u_scratch = Vec::new();
+        let mut v_scratch = Vec::new();
+        for _ in 0..count {
+            let id = u32::from_le_bytes(take(bytes, &mut off, 4)?.try_into().unwrap()) as usize;
+            let len = u64::from_le_bytes(take(bytes, &mut off, 8)?.try_into().unwrap()) as usize;
+            let rec = take(bytes, &mut off, len)?;
+            if id >= self.num_clients {
+                anyhow::bail!("population restore: client {id} outside population");
+            }
+            let mut st = self.build_shell(id);
+            ResidualStore::apply_record(&mut st, &rec, &mut u_scratch, &mut v_scratch)
+                .map_err(|d| anyhow::anyhow!("population restore: client {id}: {d}"))?;
+            self.store.admit_raw(id, st);
+        }
+        if off != bytes.len() {
+            anyhow::bail!("population restore: trailing bytes in fleet blob");
+        }
+        self.store.enforce_budget();
+        Ok(())
     }
 }
 
@@ -686,6 +907,87 @@ mod tests {
         let (u, v) = st.dgc.residuals();
         assert_eq!(u, &want_u[..]);
         assert_eq!(v, &want_v[..]);
+    }
+
+    #[test]
+    fn corrupted_spill_record_is_a_typed_error() {
+        let mut pop = lazy_pop(11, 20, 1);
+        {
+            let st = pop.client(3);
+            st.participations = 2;
+            let delta: Vec<f32> = (0..32).map(|i| (i as f32).cos()).collect();
+            let _ = st.dgc.compress(&delta);
+        }
+        pop.end_round(); // 1-byte budget: evict + spill
+        assert!(pop.store().spilled_len() >= 1);
+        // Flip one byte of client 3's record on disk.
+        let (path, offset) = {
+            let spill = pop.store.spill.as_ref().unwrap();
+            (spill.path.clone(), spill.slots[&3].offset)
+        };
+        let mut f = OpenOptions::new().read(true).write(true).open(&path).unwrap();
+        let mut b = [0u8; 1];
+        f.seek(SeekFrom::Start(offset + 5)).unwrap();
+        f.read_exact(&mut b).unwrap();
+        b[0] ^= 0x01;
+        f.seek(SeekFrom::Start(offset + 5)).unwrap();
+        f.write_all(&b).unwrap();
+        let err = pop.try_client(3).unwrap_err();
+        assert_eq!(err.client, 3);
+        assert!(err.detail.contains("crc mismatch"), "{}", err.detail);
+        // An untouched client still materializes fine.
+        assert!(pop.try_client(4).is_ok());
+    }
+
+    #[test]
+    fn truncated_spill_record_is_a_typed_error() {
+        let mut pop = lazy_pop(12, 10, 1);
+        {
+            let st = pop.client(2);
+            st.participations = 1;
+        }
+        pop.end_round();
+        let path = pop.store.spill.as_ref().unwrap().path.clone();
+        let len = std::fs::metadata(&path).unwrap().len();
+        let f = OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len(len - 2).unwrap();
+        let err = pop.try_client(2).unwrap_err();
+        assert_eq!(err.client, 2);
+    }
+
+    #[test]
+    fn fleet_state_roundtrips_through_save_restore() {
+        let mut pop = lazy_pop(13, 30, 1);
+        let delta: Vec<f32> = (0..64).map(|i| (i as f32).sin()).collect();
+        for &c in &[1usize, 4, 9] {
+            let st = pop.client(c);
+            st.participations = c + 1;
+            for _ in 0..c {
+                st.rng.next_u64();
+            }
+            let _ = st.dgc.compress(&delta);
+        }
+        pop.end_round(); // spill everything
+        let _ = pop.client(9); // mixed residency: 9 resident, 1/4 spilled
+        let mut blob = Vec::new();
+        pop.save_state(&mut blob).unwrap();
+        let mut fresh = lazy_pop(13, 30, 1);
+        fresh.restore_state(&blob).unwrap();
+        for &c in &[1usize, 4, 9] {
+            let want = {
+                let st = pop.client(c);
+                let (u, v) = st.dgc.residuals();
+                (st.rng.to_raw(), st.participations, u.to_vec(), v.to_vec())
+            };
+            let got = {
+                let st = fresh.client(c);
+                let (u, v) = st.dgc.residuals();
+                (st.rng.to_raw(), st.participations, u.to_vec(), v.to_vec())
+            };
+            assert_eq!(want, got);
+        }
+        // Garbage blobs are diagnosed, not loaded.
+        assert!(lazy_pop(13, 30, 1).restore_state(&blob[..blob.len() - 3]).is_err());
     }
 
     #[test]

@@ -46,6 +46,32 @@ impl Default for TransportConfig {
     }
 }
 
+/// Deterministic fault injection (see [`crate::fault`]). Off by
+/// default: an empty plan installs nothing and every fault seam stays
+/// a single relaxed atomic load.
+#[derive(Clone, Debug)]
+pub struct FaultConfig {
+    /// Fault plan, `site:prob,...` (e.g. `"sock_read:0.05,all:0.01"`);
+    /// empty = fault injection disabled.
+    pub plan: String,
+    /// Seed for the pure fault-decision function — independent of the
+    /// experiment seed, so the same run can be replayed under
+    /// different fault schedules.
+    pub seed: u64,
+    /// Faults per client before the engine quarantines it.
+    pub quarantine_after: u32,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            plan: String::new(),
+            seed: 0,
+            quarantine_after: 3,
+        }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
     /// Manifest variant name (Pjrt) or a label (Native).
@@ -81,6 +107,8 @@ pub struct ExperimentConfig {
     /// Socket-transport timeouts and session-resume behaviour (see
     /// [`crate::transport::tcp`]).
     pub transport: TransportConfig,
+    /// Deterministic fault-injection plan (see [`crate::fault`]).
+    pub fault: FaultConfig,
     pub seed: u64,
     /// Evaluate the global model every k rounds (simulation-side only —
     /// evaluation costs no simulated network time).
@@ -114,6 +142,7 @@ impl Default for ExperimentConfig {
             sharding: ShardingConfig::default(),
             population: PopulationConfig::default(),
             transport: TransportConfig::default(),
+            fault: FaultConfig::default(),
             seed: 0,
             eval_every: 5,
             eval_batch_limit: Some(12),
@@ -380,6 +409,12 @@ impl ExperimentConfig {
             Json::Num(self.transport.io_timeout_s),
         );
         j.set("transport_resume", Json::Bool(self.transport.resume));
+        j.set("fault_plan", Json::Str(self.fault.plan.clone()));
+        j.set("fault_seed", Json::Num(self.fault.seed as f64));
+        j.set(
+            "fault_quarantine_after",
+            Json::Num(self.fault.quarantine_after as f64),
+        );
         j.set("churn_enabled", Json::Bool(self.sched.churn.enabled));
         j.set(
             "churn_availability",
@@ -537,6 +572,15 @@ impl ExperimentConfig {
         }
         if let Some(v) = j.get("transport_resume").and_then(|v| v.as_bool()) {
             self.transport.resume = v;
+        }
+        if let Some(v) = j.get("fault_plan").and_then(|v| v.as_str()) {
+            self.fault.plan = v.to_string();
+        }
+        if let Some(v) = j.get("fault_seed").and_then(|v| v.as_f64()) {
+            self.fault.seed = v as u64;
+        }
+        if let Some(v) = j.get("fault_quarantine_after").and_then(|v| v.as_usize()) {
+            self.fault.quarantine_after = v as u32;
         }
         if let Some(v) = j.get("churn_enabled").and_then(|v| v.as_bool()) {
             self.sched.churn.enabled = v;
@@ -787,6 +831,29 @@ mod tests {
         c.apply_json(&partial).unwrap();
         assert_eq!(c.transport.io_timeout_s, 600.0);
         assert!(c.transport.resume);
+    }
+
+    #[test]
+    fn fault_json_roundtrip() {
+        let mut src = ExperimentConfig::default();
+        assert!(src.fault.plan.is_empty(), "faults are off by default");
+        assert_eq!(src.fault.quarantine_after, 3);
+        src.fault.plan = "sock_read:0.05,frame_corrupt:0.01".into();
+        src.fault.seed = 42;
+        src.fault.quarantine_after = 5;
+        let j = src.to_json();
+        let mut dst = ExperimentConfig::default();
+        dst.apply_json(&j).unwrap();
+        assert_eq!(dst.fault.plan, src.fault.plan);
+        assert_eq!(dst.fault.seed, 42);
+        assert_eq!(dst.fault.quarantine_after, 5);
+
+        // Partial configs leave the subtree untouched.
+        let partial = crate::util::json::parse(r#"{"rounds": 3}"#).unwrap();
+        let mut c = ExperimentConfig::default();
+        c.apply_json(&partial).unwrap();
+        assert!(c.fault.plan.is_empty());
+        assert_eq!(c.fault.quarantine_after, 3);
     }
 
     #[test]

@@ -1,0 +1,360 @@
+//! Coordinator checkpoint file format: atomic round-boundary
+//! snapshots a restarted `afd serve` resumes from **bit-identically**.
+//!
+//! A checkpoint captures the complete coordinator-side state of a run
+//! at a round boundary — the only quiescent point: no client work is
+//! in flight, every borrowed buffer is back in its pool, and the
+//! residual store has just enforced its byte budget.
+//!
+//! ```text
+//! body  := magic "AFCK" ‖ version u32
+//!        ‖ config_fingerprint u64      (FNV-1a of the compact config JSON)
+//!        ‖ completed_round u64 ‖ cum_s f64 ‖ lr f64
+//!        ‖ rng_state u128 ‖ rng_inc u128
+//!        ‖ global  (u64 len ‖ f32 LE …)
+//!        ‖ strategy blob (u64 len ‖ bytes)   — SubmodelStrategy::save_state
+//!        ‖ engine   blob (u64 len ‖ bytes)   — Engine::save_state
+//!        ‖ records (u64 count ‖ fixed-width fields per RoundRecord)
+//!        ‖ fleet    blob (u64 len ‖ bytes)   — Population::save_state
+//! file  := body ‖ crc32(body) LE
+//! ```
+//!
+//! Everything is little-endian and fixed-width — byte-stable across
+//! platforms, no external serialization dependency. Writes go to a
+//! sibling temp file and land via `rename`, so a crash mid-write
+//! leaves the previous checkpoint intact (readers either see the old
+//! complete file or the new complete file, never a torn one). The
+//! CRC32 trailer turns torn temp files and disk corruption into typed
+//! errors instead of a divergent resume.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::config::ExperimentConfig;
+use crate::metrics::RoundRecord;
+use crate::transport::frame::crc32;
+
+const MAGIC: &[u8; 4] = b"AFCK";
+const VERSION: u32 = 1;
+
+/// The deserialized state a checkpoint carries; the [`super::Experiment`]
+/// methods own moving it in and out of live coordinator state.
+pub struct CheckpointBody {
+    pub config_fingerprint: u64,
+    pub completed_round: u64,
+    pub cum_s: f64,
+    pub lr: f32,
+    pub rng_state: u128,
+    pub rng_inc: u128,
+    pub global: Vec<f32>,
+    pub strategy: Vec<u8>,
+    pub engine: Vec<u8>,
+    pub records: Vec<RoundRecord>,
+    pub fleet: Vec<u8>,
+}
+
+/// FNV-1a over the config's compact JSON: a cheap, dependency-free
+/// fingerprint that changes whenever any config knob does. Restoring
+/// under a different config would diverge silently — the fingerprint
+/// turns that into an immediate typed error.
+pub fn config_fingerprint(cfg: &ExperimentConfig) -> u64 {
+    let json = cfg.to_json().to_string_compact();
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in json.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn push_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_opt_f64(out: &mut Vec<u8>, v: Option<f64>) {
+    out.push(v.is_some() as u8);
+    push_f64(out, v.unwrap_or(0.0));
+}
+
+fn serialize(body: &CheckpointBody) -> Vec<u8> {
+    let mut out = Vec::with_capacity(
+        64 + body.global.len() * 4
+            + body.strategy.len()
+            + body.engine.len()
+            + body.fleet.len()
+            + body.records.len() * 128,
+    );
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    push_u64(&mut out, body.config_fingerprint);
+    push_u64(&mut out, body.completed_round);
+    push_f64(&mut out, body.cum_s);
+    push_f64(&mut out, body.lr as f64);
+    out.extend_from_slice(&body.rng_state.to_le_bytes());
+    out.extend_from_slice(&body.rng_inc.to_le_bytes());
+    push_u64(&mut out, body.global.len() as u64);
+    for &g in &body.global {
+        out.extend_from_slice(&g.to_le_bytes());
+    }
+    push_u64(&mut out, body.strategy.len() as u64);
+    out.extend_from_slice(&body.strategy);
+    push_u64(&mut out, body.engine.len() as u64);
+    out.extend_from_slice(&body.engine);
+    push_u64(&mut out, body.records.len() as u64);
+    for r in &body.records {
+        push_u64(&mut out, r.round as u64);
+        push_f64(&mut out, r.round_s);
+        push_f64(&mut out, r.cum_s);
+        push_f64(&mut out, r.train_loss);
+        push_opt_f64(&mut out, r.eval_acc);
+        push_opt_f64(&mut out, r.eval_loss);
+        push_u64(&mut out, r.down_bytes);
+        push_u64(&mut out, r.up_bytes);
+        push_u64(&mut out, r.down_payload_bytes);
+        push_u64(&mut out, r.up_payload_bytes);
+        push_f64(&mut out, r.keep_fraction);
+        push_u64(&mut out, r.arrived as u64);
+        push_u64(&mut out, r.cut as u64);
+        push_u64(&mut out, r.dropped as u64);
+        push_u64(&mut out, r.lost as u64);
+        push_u64(&mut out, r.quarantined as u64);
+    }
+    push_u64(&mut out, body.fleet.len() as u64);
+    out.extend_from_slice(&body.fleet);
+    out
+}
+
+/// Bounds-checked cursor over a checkpoint body; corruption that
+/// slips past the CRC (or a logic error) diagnoses, never panics.
+struct Rd<'a> {
+    bytes: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if n > self.bytes.len() - self.off {
+            anyhow::bail!("checkpoint: truncated body");
+        }
+        let s = &self.bytes[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn u128(&mut self) -> Result<u128> {
+        Ok(u128::from_le_bytes(self.take(16)?.try_into().unwrap()))
+    }
+
+    fn opt_f64(&mut self) -> Result<Option<f64>> {
+        let some = self.take(1)?[0] != 0;
+        let v = self.f64()?;
+        Ok(some.then_some(v))
+    }
+
+    fn blob(&mut self) -> Result<Vec<u8>> {
+        let len = self.u64()? as usize;
+        Ok(self.take(len)?.to_vec())
+    }
+}
+
+/// Atomically write `body` to `path` (sibling temp file + rename).
+pub fn write(path: &Path, body: &CheckpointBody) -> Result<()> {
+    let mut bytes = serialize(body);
+    let crc = crc32(&bytes);
+    bytes.extend_from_slice(&crc.to_le_bytes());
+    let tmp = path.with_extension("ckpt.tmp");
+    std::fs::write(&tmp, &bytes)
+        .with_context(|| format!("writing checkpoint temp file {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("publishing checkpoint {}", path.display()))?;
+    crate::obs::metrics::CHECKPOINTS_WRITTEN.incr();
+    crate::obs::metrics::CHECKPOINT_BYTES.add(bytes.len() as u64);
+    Ok(())
+}
+
+/// Read and validate a checkpoint: CRC first (whole-file integrity),
+/// then magic/version, then the structured body.
+pub fn read(path: &Path) -> Result<CheckpointBody> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading checkpoint {}", path.display()))?;
+    anyhow::ensure!(bytes.len() >= MAGIC.len() + 8 + 4, "checkpoint: file too short");
+    let (payload, trailer) = bytes.split_at(bytes.len() - 4);
+    let want = u32::from_le_bytes(trailer.try_into().unwrap());
+    let got = crc32(payload);
+    anyhow::ensure!(
+        want == got,
+        "checkpoint: crc mismatch (stored {want:#010x}, computed {got:#010x}) — \
+         file is torn or corrupt"
+    );
+    let mut r = Rd {
+        bytes: payload,
+        off: 0,
+    };
+    let magic = r.take(4)?;
+    anyhow::ensure!(magic == MAGIC, "checkpoint: bad magic (not a checkpoint file?)");
+    let version = u32::from_le_bytes(r.take(4)?.try_into().unwrap());
+    anyhow::ensure!(version == VERSION, "checkpoint: unsupported version {version}");
+    let config_fingerprint = r.u64()?;
+    let completed_round = r.u64()?;
+    let cum_s = r.f64()?;
+    let lr = r.f64()? as f32;
+    let rng_state = r.u128()?;
+    let rng_inc = r.u128()?;
+    let n_global = r.u64()? as usize;
+    anyhow::ensure!(
+        n_global.checked_mul(4).is_some_and(|b| b <= payload.len()),
+        "checkpoint: implausible global length {n_global}"
+    );
+    let mut global = Vec::with_capacity(n_global);
+    for chunk in r.take(n_global * 4)?.chunks_exact(4) {
+        global.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+    }
+    let strategy = r.blob()?;
+    let engine = r.blob()?;
+    let n_records = r.u64()? as usize;
+    anyhow::ensure!(
+        n_records <= payload.len() / 8,
+        "checkpoint: implausible record count {n_records}"
+    );
+    let mut records = Vec::with_capacity(n_records);
+    for _ in 0..n_records {
+        records.push(RoundRecord {
+            round: r.u64()? as usize,
+            round_s: r.f64()?,
+            cum_s: r.f64()?,
+            train_loss: r.f64()?,
+            eval_acc: r.opt_f64()?,
+            eval_loss: r.opt_f64()?,
+            down_bytes: r.u64()?,
+            up_bytes: r.u64()?,
+            down_payload_bytes: r.u64()?,
+            up_payload_bytes: r.u64()?,
+            keep_fraction: r.f64()?,
+            arrived: r.u64()? as usize,
+            cut: r.u64()? as usize,
+            dropped: r.u64()? as usize,
+            lost: r.u64()? as usize,
+            quarantined: r.u64()? as usize,
+        });
+    }
+    let fleet = r.blob()?;
+    anyhow::ensure!(r.off == payload.len(), "checkpoint: trailing bytes");
+    Ok(CheckpointBody {
+        config_fingerprint,
+        completed_round,
+        cum_s,
+        lr,
+        rng_state,
+        rng_inc,
+        global,
+        strategy,
+        engine,
+        records,
+        fleet,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_body() -> CheckpointBody {
+        CheckpointBody {
+            config_fingerprint: 0xfeed_beef,
+            completed_round: 7,
+            cum_s: 123.5,
+            lr: 0.05,
+            rng_state: 0x0123_4567_89ab_cdef_0011_2233_4455_6677,
+            rng_inc: 0x8899_aabb_ccdd_eeff_1122_3344_5566_7789,
+            global: vec![1.5, -2.25, 0.0, f32::MIN_POSITIVE],
+            strategy: vec![1, 2, 3],
+            engine: vec![],
+            records: vec![RoundRecord {
+                round: 7,
+                round_s: 1.25,
+                cum_s: 123.5,
+                train_loss: 0.75,
+                eval_acc: Some(0.9),
+                eval_loss: None,
+                down_bytes: 1000,
+                up_bytes: 900,
+                down_payload_bytes: 800,
+                up_payload_bytes: 700,
+                keep_fraction: 0.5,
+                arrived: 10,
+                cut: 1,
+                dropped: 2,
+                lost: 3,
+                quarantined: 1,
+            }],
+            fleet: vec![9; 33],
+        }
+    }
+
+    #[test]
+    fn body_roundtrips_bitwise() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("afd_ckpt_rt_{}.ckpt", std::process::id()));
+        let body = sample_body();
+        write(&path, &body).unwrap();
+        let back = read(&path).unwrap();
+        assert_eq!(back.config_fingerprint, body.config_fingerprint);
+        assert_eq!(back.completed_round, body.completed_round);
+        assert_eq!(back.cum_s.to_bits(), body.cum_s.to_bits());
+        assert_eq!(back.lr.to_bits(), body.lr.to_bits());
+        assert_eq!(back.rng_state, body.rng_state);
+        assert_eq!(back.rng_inc, body.rng_inc);
+        let a: Vec<u32> = back.global.iter().map(|g| g.to_bits()).collect();
+        let b: Vec<u32> = body.global.iter().map(|g| g.to_bits()).collect();
+        assert_eq!(a, b);
+        assert_eq!(back.strategy, body.strategy);
+        assert_eq!(back.engine, body.engine);
+        assert_eq!(back.fleet, body.fleet);
+        assert_eq!(back.records.len(), 1);
+        let (x, y) = (&back.records[0], &body.records[0]);
+        assert_eq!(x.round, y.round);
+        assert_eq!(x.eval_acc, y.eval_acc);
+        assert_eq!(x.eval_loss, y.eval_loss);
+        assert_eq!(x.quarantined, y.quarantined);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corruption_is_a_typed_error() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("afd_ckpt_bad_{}.ckpt", std::process::id()));
+        write(&path, &sample_body()).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[20] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = read(&path).unwrap_err().to_string();
+        assert!(err.contains("crc mismatch"), "{err}");
+        // Truncation (a torn write that somehow bypassed the rename)
+        // also diagnoses.
+        std::fs::write(&path, &bytes[..10]).unwrap();
+        assert!(read(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn fingerprint_tracks_config_changes() {
+        let a = ExperimentConfig::default();
+        let mut b = ExperimentConfig::default();
+        assert_eq!(config_fingerprint(&a), config_fingerprint(&b));
+        b.seed += 1;
+        assert_ne!(config_fingerprint(&a), config_fingerprint(&b));
+    }
+}

@@ -329,6 +329,7 @@ impl Experiment {
             cut: 0,
             dropped: 0,
             lost: 0,
+            quarantined: 0,
         };
         self.finish_round(round, &s)
     }
@@ -363,9 +364,90 @@ impl Experiment {
             cut: s.cut,
             dropped: s.dropped,
             lost: s.lost,
+            quarantined: s.quarantined,
         };
         self.records.push(rec.clone());
         Ok(rec)
+    }
+
+    /// Round records accumulated so far (checkpointing and tools).
+    pub fn records(&self) -> &[RoundRecord] {
+        &self.records
+    }
+
+    /// Atomically write a coordinator checkpoint capturing everything
+    /// a restored process needs to continue bit-identically: global
+    /// model, strategy / scheduler / policy state, the coordinator RNG
+    /// cursor, per-client mutable state (RNG cursors, participation
+    /// counts, DGC residuals — resident and spilled alike), simulated
+    /// clock and the round records emitted so far. Call at a round
+    /// boundary; `completed_round` is the last round whose record is
+    /// in `self.records`.
+    pub fn save_checkpoint(
+        &mut self,
+        path: &std::path::Path,
+        completed_round: u64,
+    ) -> Result<()> {
+        let mut strategy = Vec::new();
+        self.strategy.save_state(&mut strategy);
+        let mut engine = Vec::new();
+        self.engine.save_state(&mut engine)?;
+        let mut fleet = Vec::new();
+        self.fleet
+            .save_state(&mut fleet)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let (rng_state, rng_inc) = self.rng.to_raw();
+        let body = super::checkpoint::CheckpointBody {
+            config_fingerprint: super::checkpoint::config_fingerprint(&self.cfg),
+            completed_round,
+            cum_s: self.cum_s,
+            lr: self.lr,
+            rng_state,
+            rng_inc,
+            global: std::mem::take(&mut self.global),
+            strategy,
+            engine,
+            records: std::mem::take(&mut self.records),
+            fleet,
+        };
+        let result = super::checkpoint::write(path, &body);
+        // The big buffers were only lent to the body (no model-sized
+        // copy); hand them back whether or not the write succeeded.
+        self.global = body.global;
+        self.records = body.records;
+        result
+    }
+
+    /// Restore state written by [`Experiment::save_checkpoint`] into a
+    /// freshly built experiment with the *same* config; returns the
+    /// last completed round, so driving `step` for rounds
+    /// `completed+1..=cfg.rounds` continues the original run
+    /// bit-identically.
+    pub fn restore_from_checkpoint(&mut self, path: &std::path::Path) -> Result<u64> {
+        let body = super::checkpoint::read(path)?;
+        let want = super::checkpoint::config_fingerprint(&self.cfg);
+        anyhow::ensure!(
+            body.config_fingerprint == want,
+            "checkpoint config fingerprint {:#018x} does not match this run's \
+             {want:#018x} — refusing to resume under a different config",
+            body.config_fingerprint
+        );
+        anyhow::ensure!(
+            body.global.len() == self.spec.num_params,
+            "checkpoint global has {} params, model has {}",
+            body.global.len(),
+            self.spec.num_params
+        );
+        self.strategy.load_state(&body.strategy)?;
+        self.engine.load_state(&body.engine)?;
+        self.fleet.restore_state(&body.fleet)?;
+        self.rng = Pcg64::from_raw(body.rng_state, body.rng_inc);
+        self.global = body.global;
+        self.cum_s = body.cum_s;
+        self.lr = body.lr;
+        self.records = body.records;
+        crate::obs::metrics::RESTORES.incr();
+        Ok(body.completed_round)
     }
 
     /// Evaluate the current global model on the pooled test set.

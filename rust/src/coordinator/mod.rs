@@ -33,6 +33,7 @@
 //!
 //! [`Transport`]: crate::transport::Transport
 
+pub mod checkpoint;
 pub mod experiment;
 
 pub use experiment::{run_experiment, Experiment};

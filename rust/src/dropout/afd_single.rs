@@ -123,6 +123,37 @@ impl SubmodelStrategy for SingleModelAfd {
     fn fdr(&self) -> f64 {
         self.fdr
     }
+
+    fn save_state(&self, out: &mut Vec<u8>) {
+        use crate::dropout::statebytes as sb;
+        sb::push_f64(out, self.last_avg_loss);
+        sb::push_bool(out, self.recorded);
+        sb::push_score_map(out, &self.score_map);
+        sb::push_opt_submodel(out, self.recorded_submodel.as_ref());
+        sb::push_opt_submodel(out, self.current.as_ref());
+        sb::push_u64(out, self.current_round as u64);
+        sb::push_u64(out, self.round_losses.len() as u64);
+        for &l in &self.round_losses {
+            sb::push_f64(out, l);
+        }
+    }
+
+    fn load_state(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        use crate::dropout::statebytes as sb;
+        let mut r = sb::Reader::new(bytes);
+        self.last_avg_loss = r.f64()?;
+        self.recorded = r.boolean()?;
+        r.score_map_into(&mut self.score_map)?;
+        self.recorded_submodel = r.opt_submodel()?;
+        self.current = r.opt_submodel()?;
+        self.current_round = r.u64()? as usize;
+        let n = r.u64()? as usize;
+        self.round_losses.clear();
+        for _ in 0..n {
+            self.round_losses.push(r.f64()?);
+        }
+        r.finish()
+    }
 }
 
 #[cfg(test)]
@@ -191,6 +222,29 @@ mod tests {
         assert!(!s.recorded());
         // avg loss path: 3 → 1 (recorded) → 5 (unrecorded)
         assert!(s.score_map().total() > 0.0);
+    }
+
+    #[test]
+    fn state_roundtrips_through_save_load() {
+        let spec = tiny_spec();
+        let mut s = SingleModelAfd::new(&spec, 0.25);
+        let mut rng = Pcg64::new(5);
+        for (round, losses) in [(1usize, [4.0, 2.0]), (2, [2.0, 1.0]), (3, [1.5, 0.5])] {
+            let _ = s.select(round, 0, &mut rng);
+            for (c, l) in losses.iter().enumerate() {
+                s.report_loss(round, c, *l);
+            }
+            s.end_round(round);
+        }
+        let mut blob = Vec::new();
+        s.save_state(&mut blob);
+        let mut t = SingleModelAfd::new(&spec, 0.25);
+        t.load_state(&blob).unwrap();
+        assert_eq!(t.recorded(), s.recorded());
+        let mut ra = Pcg64::new(11);
+        let mut rb = Pcg64::new(11);
+        assert_eq!(s.select(4, 0, &mut ra), t.select(4, 0, &mut rb));
+        assert!(t.load_state(&blob[..blob.len() - 2]).is_err());
     }
 
     #[test]

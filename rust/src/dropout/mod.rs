@@ -43,6 +43,142 @@ pub trait SubmodelStrategy: Send {
 
     /// Fraction of activations dropped (0 for NoDropout).
     fn fdr(&self) -> f64;
+
+    /// Serialize round-boundary strategy state for a coordinator
+    /// checkpoint ([`crate::coordinator::checkpoint`]). Stateless
+    /// strategies (NoDropout, RandomFd — whose only state is the
+    /// caller's RNG) write nothing.
+    fn save_state(&self, _out: &mut Vec<u8>) {}
+
+    /// Restore state written by [`SubmodelStrategy::save_state`].
+    fn load_state(&mut self, _bytes: &[u8]) -> anyhow::Result<()> {
+        Ok(())
+    }
+}
+
+/// Little-endian byte (de)serialization shared by the AFD strategies'
+/// checkpoint state. Kept deliberately dumb: fixed-width fields,
+/// length prefixes, no varints — byte-stable across platforms.
+pub(crate) mod statebytes {
+    use crate::dropout::score_map::ScoreMap;
+    use crate::model::submodel::SubModel;
+
+    pub fn push_u64(out: &mut Vec<u8>, v: u64) {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn push_f64(out: &mut Vec<u8>, v: f64) {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn push_bool(out: &mut Vec<u8>, v: bool) {
+        out.push(v as u8);
+    }
+
+    pub fn push_score_map(out: &mut Vec<u8>, m: &ScoreMap) {
+        push_u64(out, m.scores.len() as u64);
+        for g in &m.scores {
+            push_u64(out, g.len() as u64);
+            for &s in g {
+                push_f64(out, s);
+            }
+        }
+    }
+
+    /// Sub-models serialize as their keep bitmaps (one byte per unit);
+    /// the derived f32 masks are rebuilt by `SubModel::from_keep`.
+    pub fn push_opt_submodel(out: &mut Vec<u8>, sm: Option<&SubModel>) {
+        match sm {
+            None => push_bool(out, false),
+            Some(sm) => {
+                push_bool(out, true);
+                push_u64(out, sm.keep.len() as u64);
+                for g in &sm.keep {
+                    push_u64(out, g.len() as u64);
+                    for &k in g {
+                        push_bool(out, k);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Cursor over a state blob; every read is bounds-checked so a
+    /// corrupt checkpoint diagnoses instead of panicking.
+    pub struct Reader<'a> {
+        bytes: &'a [u8],
+        off: usize,
+    }
+
+    impl<'a> Reader<'a> {
+        pub fn new(bytes: &'a [u8]) -> Reader<'a> {
+            Reader { bytes, off: 0 }
+        }
+
+        fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+            if self.off + n > self.bytes.len() {
+                anyhow::bail!("strategy state: truncated blob");
+            }
+            let s = &self.bytes[self.off..self.off + n];
+            self.off += n;
+            Ok(s)
+        }
+
+        pub fn u64(&mut self) -> anyhow::Result<u64> {
+            Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        }
+
+        pub fn f64(&mut self) -> anyhow::Result<f64> {
+            Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        }
+
+        pub fn boolean(&mut self) -> anyhow::Result<bool> {
+            Ok(self.take(1)?[0] != 0)
+        }
+
+        /// Read a score map into `m`, which must already have the
+        /// spec's group shape (shape mismatch ⇒ wrong config/spec).
+        pub fn score_map_into(&mut self, m: &mut ScoreMap) -> anyhow::Result<()> {
+            let groups = self.u64()? as usize;
+            if groups != m.scores.len() {
+                anyhow::bail!("strategy state: score map group count mismatch");
+            }
+            for g in m.scores.iter_mut() {
+                let len = self.u64()? as usize;
+                if len != g.len() {
+                    anyhow::bail!("strategy state: score map group size mismatch");
+                }
+                for s in g.iter_mut() {
+                    *s = self.f64()?;
+                }
+            }
+            Ok(())
+        }
+
+        pub fn opt_submodel(&mut self) -> anyhow::Result<Option<SubModel>> {
+            if !self.boolean()? {
+                return Ok(None);
+            }
+            let groups = self.u64()? as usize;
+            let mut keep = Vec::with_capacity(groups);
+            for _ in 0..groups {
+                let len = self.u64()? as usize;
+                let mut g = Vec::with_capacity(len);
+                for _ in 0..len {
+                    g.push(self.boolean()?);
+                }
+                keep.push(g);
+            }
+            Ok(Some(SubModel::from_keep(keep)))
+        }
+
+        pub fn finish(&self) -> anyhow::Result<()> {
+            if self.off != self.bytes.len() {
+                anyhow::bail!("strategy state: trailing bytes");
+            }
+            Ok(())
+        }
+    }
 }
 
 /// Baseline: every client trains the full model.

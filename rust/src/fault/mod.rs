@@ -1,0 +1,351 @@
+//! Deterministic fault injection.
+//!
+//! Failures are a *sweepable input* to the engine, the same way seeds
+//! are: whether a fault fires at a given seam is a pure function of
+//! `(fault_seed, site, a, b)` where `(a, b)` are site-specific keys
+//! (typically round and client, or client and participation count).
+//! Two runs with the same config and the same fault plan inject the
+//! same faults at the same places — so every fault scenario is
+//! reproducible and every fault class can be pinned to one of exactly
+//! two buckets:
+//!
+//! * **masked** — the run is bit-identical to the fault-free run
+//!   (JSONL records + model hash), because a recovery path absorbed
+//!   the fault (partial-write resume, reconnect + `StateSync` replay,
+//!   duplicate-frame drop);
+//! * **typed loss** — the run completes with a nonzero `lost` /
+//!   `quarantined` count or a diagnosable `Err`, never a panic and
+//!   never a silently different result.
+//!
+//! The gate mirrors `obs`: a single relaxed atomic load
+//! ([`enabled`]) guards every site, so with the default empty plan
+//! the fault machinery costs one predictable branch per seam and the
+//! warm client round stays zero-alloc. Unlike `obs` there is no cargo
+//! feature — the plan is a pure runtime input (`--fault-plan` /
+//! `--fault-seed`, or the `fault_*` config keys).
+//!
+//! Clients that keep faulting are quarantined after
+//! `fault_quarantine_after` faulted rounds: the scheduler stops
+//! selecting them and reports the count as the `quarantined` column.
+//!
+//! See `rust/src/fault/README.md` for the site taxonomy and the plan
+//! grammar.
+
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::Once;
+
+/// Named injection seams. The discriminant indexes
+/// `obs::metrics::FAULTS_INJECTED` and the rate table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Site {
+    /// Socket write fails mid-flush (TCP) / dispatch never reaches the
+    /// client (loopback).
+    SockWrite = 0,
+    /// Socket read fails (TCP) / reply is dropped on the way back
+    /// (loopback).
+    SockRead = 1,
+    /// `write(2)` accepts only part of the buffer. Masked: the flush
+    /// loop resumes mid-buffer.
+    PartialWrite = 2,
+    /// A frame is corrupted in flight, upstream of the CRC check.
+    FrameCorrupt = 3,
+    /// A frame is delayed past the round deadline.
+    FrameDelay = 4,
+    /// A frame is delivered twice. Masked: parsing a frame is
+    /// idempotent and the pipeline matcher ignores stale duplicates.
+    FrameDup = 5,
+    /// A `ResidualStore` spill write is truncated short of the record.
+    SpillTruncate = 6,
+    /// A spilled record is corrupted on disk before rehydration.
+    SpillCorrupt = 7,
+    /// A worker-pool training job panics.
+    WorkerPanic = 8,
+    /// A client's clock stalls past the round deadline.
+    ClockStall = 9,
+}
+
+/// Number of fault sites; length of the per-site rate and counter
+/// tables.
+pub const SITE_COUNT: usize = 10;
+
+/// Every site, in discriminant order.
+pub const ALL_SITES: [Site; SITE_COUNT] = [
+    Site::SockWrite,
+    Site::SockRead,
+    Site::PartialWrite,
+    Site::FrameCorrupt,
+    Site::FrameDelay,
+    Site::FrameDup,
+    Site::SpillTruncate,
+    Site::SpillCorrupt,
+    Site::WorkerPanic,
+    Site::ClockStall,
+];
+
+impl Site {
+    /// Stable snake_case name used in the plan grammar and stats keys.
+    pub fn name(self) -> &'static str {
+        match self {
+            Site::SockWrite => "sock_write",
+            Site::SockRead => "sock_read",
+            Site::PartialWrite => "partial_write",
+            Site::FrameCorrupt => "frame_corrupt",
+            Site::FrameDelay => "frame_delay",
+            Site::FrameDup => "frame_dup",
+            Site::SpillTruncate => "spill_truncate",
+            Site::SpillCorrupt => "spill_corrupt",
+            Site::WorkerPanic => "worker_panic",
+            Site::ClockStall => "clock_stall",
+        }
+    }
+
+    /// Inverse of [`Site::name`].
+    pub fn from_name(name: &str) -> Option<Site> {
+        ALL_SITES.iter().copied().find(|s| s.name() == name)
+    }
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static SEED: AtomicU64 = AtomicU64::new(0);
+static QUARANTINE_AFTER: AtomicU32 = AtomicU32::new(3);
+
+// Per-site fire rate in parts-per-million. Repeat-initializer idiom:
+// the const is a template, each array slot gets a fresh atomic.
+#[allow(clippy::declare_interior_mutable_const)]
+const RATE_SLOT: AtomicU32 = AtomicU32::new(0);
+static RATE_PPM: [AtomicU32; SITE_COUNT] = [RATE_SLOT; SITE_COUNT];
+
+/// True when a fault plan with at least one nonzero rate is installed.
+/// One relaxed load; every injection seam checks this first, so the
+/// default (no plan) costs a single predictable branch.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// How many faulted rounds a client survives before quarantine.
+#[inline]
+pub fn quarantine_after() -> u32 {
+    QUARANTINE_AFTER.load(Ordering::Relaxed)
+}
+
+/// splitmix64 finalizer — the pure mixing core of the plan function.
+#[inline]
+fn mix(mut x: u64) -> u64 {
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^= x >> 31;
+    x
+}
+
+/// Pure plan function: does `site` fire at keys `(a, b)` under
+/// `(seed, ppm)`? No global state — unit-testable and stable across
+/// platforms.
+#[inline]
+pub fn decide(seed: u64, ppm: u32, site: Site, a: u64, b: u64) -> bool {
+    if ppm == 0 {
+        return false;
+    }
+    let mut h = mix(seed ^ (0xfa17_0000 + site as u64));
+    h = mix(h ^ a.wrapping_mul(0x9e37_79b9_7f4a_7c15));
+    h = mix(h ^ b.rotate_left(32));
+    (h % 1_000_000) < ppm as u64
+}
+
+/// Deterministic hash of `(seed, site, a, b)` — used by sites that
+/// need a reproducible auxiliary value (e.g. which byte to corrupt).
+#[inline]
+pub fn derive(site: Site, a: u64, b: u64) -> u64 {
+    let seed = SEED.load(Ordering::Relaxed);
+    let mut h = mix(seed ^ (0xfa17_1000 + site as u64));
+    h = mix(h ^ a.wrapping_mul(0x9e37_79b9_7f4a_7c15));
+    mix(h ^ b.rotate_left(32))
+}
+
+/// Does `site` fire at keys `(a, b)` under the installed plan?
+/// Increments the per-site `FAULTS_INJECTED` counter when it does
+/// (unconditionally — fault accounting is part of the run's output,
+/// not of the optional trace).
+#[inline]
+pub fn should(site: Site, a: u64, b: u64) -> bool {
+    if !enabled() {
+        return false;
+    }
+    let seed = SEED.load(Ordering::Relaxed);
+    let ppm = RATE_PPM[site as usize].load(Ordering::Relaxed);
+    let fire = decide(seed, ppm, site, a, b);
+    if fire {
+        crate::obs::metrics::FAULTS_INJECTED[site as usize].incr();
+    }
+    fire
+}
+
+/// Parse a plan string into per-site ppm rates. Grammar:
+/// `site:prob[,site:prob...]` with `prob` in `[0, 1]`, or `all:prob`
+/// to set every site. Empty string → all zeros (disabled).
+fn parse_plan(plan: &str) -> anyhow::Result<[u32; SITE_COUNT]> {
+    let mut rates = [0u32; SITE_COUNT];
+    let plan = plan.trim();
+    if plan.is_empty() {
+        return Ok(rates);
+    }
+    for part in plan.split(',') {
+        let part = part.trim();
+        let (name, prob) = part
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("fault plan entry `{part}`: expected `site:prob`"))?;
+        let p: f64 = prob
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("fault plan entry `{part}`: bad probability"))?;
+        if !(0.0..=1.0).contains(&p) {
+            anyhow::bail!("fault plan entry `{part}`: probability outside [0, 1]");
+        }
+        let ppm = (p * 1_000_000.0).round() as u32;
+        let name = name.trim();
+        if name == "all" {
+            for r in rates.iter_mut() {
+                *r = ppm;
+            }
+        } else {
+            let site = Site::from_name(name).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "fault plan entry `{part}`: unknown site `{name}` (see fault/README.md)"
+                )
+            })?;
+            rates[site as usize] = ppm;
+        }
+    }
+    Ok(rates)
+}
+
+/// Quiet the default panic hook for injected worker panics: they are
+/// expected, caught by the engine, and classified as typed losses —
+/// their backtraces would drown real diagnostics in a chaos run. Any
+/// other panic still prints through the previous hook.
+fn install_panic_filter() {
+    static HOOK: Once = Once::new();
+    HOOK.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let injected = info
+                .payload()
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| info.payload().downcast_ref::<&str>().copied())
+                .is_some_and(|s| s.starts_with("injected fault:"));
+            if !injected {
+                prev(info);
+            }
+        }));
+    });
+}
+
+/// Install a fault plan process-wide. Parses fully before committing
+/// anything, so a bad plan leaves the previous state untouched.
+/// Enables injection iff any rate is nonzero.
+pub fn install(plan: &str, seed: u64, quarantine_after: u32) -> anyhow::Result<()> {
+    let rates = parse_plan(plan)?;
+    if quarantine_after == 0 {
+        anyhow::bail!("fault_quarantine_after must be >= 1");
+    }
+    install_panic_filter();
+    SEED.store(seed, Ordering::Relaxed);
+    QUARANTINE_AFTER.store(quarantine_after, Ordering::Relaxed);
+    let mut any = false;
+    for (slot, &ppm) in RATE_PPM.iter().zip(rates.iter()) {
+        slot.store(ppm, Ordering::Relaxed);
+        any |= ppm > 0;
+    }
+    ENABLED.store(any, Ordering::Relaxed);
+    Ok(())
+}
+
+/// Disable injection and zero all rates. Tests call this in teardown.
+pub fn reset() {
+    ENABLED.store(false, Ordering::Relaxed);
+    SEED.store(0, Ordering::Relaxed);
+    QUARANTINE_AFTER.store(3, Ordering::Relaxed);
+    for slot in RATE_PPM.iter() {
+        slot.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // These tests exercise only the pure functions — they never flip
+    // the global ENABLED flag, because lib unit tests run in parallel
+    // in one process and an active plan would leak into unrelated
+    // tests. Integration tests (`tests/fault_injection.rs`) own the
+    // global state and serialize on a mutex.
+    use super::*;
+
+    #[test]
+    fn site_names_roundtrip() {
+        for s in ALL_SITES {
+            assert_eq!(Site::from_name(s.name()), Some(s));
+        }
+        assert_eq!(Site::from_name("nope"), None);
+    }
+
+    #[test]
+    fn decide_is_deterministic_and_seed_sensitive() {
+        let a = decide(7, 500_000, Site::FrameCorrupt, 3, 11);
+        let b = decide(7, 500_000, Site::FrameCorrupt, 3, 11);
+        assert_eq!(a, b);
+        // Different seeds must disagree somewhere on a small grid.
+        let mut differs = false;
+        for r in 0..16u64 {
+            for c in 0..16u64 {
+                if decide(1, 500_000, Site::SockRead, r, c)
+                    != decide(2, 500_000, Site::SockRead, r, c)
+                {
+                    differs = true;
+                }
+            }
+        }
+        assert!(differs);
+    }
+
+    #[test]
+    fn decide_rate_edges() {
+        for k in 0..64u64 {
+            assert!(!decide(9, 0, Site::WorkerPanic, k, k));
+            assert!(decide(9, 1_000_000, Site::WorkerPanic, k, k));
+        }
+    }
+
+    #[test]
+    fn decide_rate_is_roughly_calibrated() {
+        let mut fired = 0usize;
+        let n = 10_000u64;
+        for k in 0..n {
+            if decide(42, 100_000, Site::SpillCorrupt, k, 0) {
+                fired += 1;
+            }
+        }
+        // 10% nominal; allow a generous band.
+        assert!(fired > 500 && fired < 1500, "fired {fired}/{n}");
+    }
+
+    #[test]
+    fn parse_plan_grammar() {
+        let r = parse_plan("frame_corrupt:0.25, clock_stall:0.5").unwrap();
+        assert_eq!(r[Site::FrameCorrupt as usize], 250_000);
+        assert_eq!(r[Site::ClockStall as usize], 500_000);
+        assert_eq!(r[Site::SockWrite as usize], 0);
+
+        let r = parse_plan("all:0.01").unwrap();
+        for v in r {
+            assert_eq!(v, 10_000);
+        }
+
+        assert_eq!(parse_plan("").unwrap(), [0; SITE_COUNT]);
+        assert!(parse_plan("bogus:0.5").is_err());
+        assert!(parse_plan("sock_read:1.5").is_err());
+        assert!(parse_plan("sock_read").is_err());
+    }
+}

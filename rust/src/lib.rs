@@ -63,7 +63,16 @@
 //! never changes results (traced runs are bit-identical to untraced,
 //! `rust/tests/obs_conformance.rs`) and a warm client round stays
 //! allocation-free with tracing on (`rust/tests/zero_alloc.rs`). See
-//! `rust/src/obs/README.md`.
+//! `rust/src/obs/README.md`. [`fault`] is the robustness mirror of
+//! [`obs`]: a deterministic fault-injection engine (`--fault-plan` /
+//! `--fault-seed`) whose fire decisions are a pure function of
+//! `(fault_seed, site, round, client)`, gated behind the same
+//! one-atomic-load pattern — every injected fault class is either
+//! fully masked (bit-identical to fault-free) or converted to a typed
+//! loss / diagnosable error, never a panic; repeatedly-faulting
+//! clients are quarantined, and `afd serve` checkpoints coordinator
+//! state at round boundaries so `--restore` resumes a killed run
+//! bit-identically (see `rust/src/fault/README.md`).
 
 // The offline substrates favor explicit indexed loops over iterator
 // adapters in hot paths; keep clippy's style-only lints from failing
@@ -82,6 +91,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod dropout;
+pub mod fault;
 pub mod metrics;
 pub mod model;
 pub mod network;

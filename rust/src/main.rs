@@ -25,7 +25,7 @@ use anyhow::Result;
 use afd::config::{Backend, ExperimentConfig};
 use afd::coordinator::experiment::{artifacts_dir, run_experiment, Experiment};
 use afd::metrics::{render_table, summarize, ExperimentReport};
-use afd::transport::tcp::{run_client_loop, ClientEnd, ClientOptions, TcpServer};
+use afd::transport::tcp::{run_client_loop, ClientEnd, ClientOptions, TcpServer, TcpTransport};
 use afd::transport::{Loopback, Transport};
 use afd::util::cli::ArgSpec;
 use afd::util::json::Json;
@@ -107,6 +107,9 @@ fn experiment_spec() -> ArgSpec {
         .opt_maybe("seed", "base RNG seed")
         .opt("seeds", "1", "number of seeds (mean ± std reporting)")
         .opt_maybe("target", "target accuracy for convergence time")
+        .opt_maybe("fault-plan", "deterministic fault plan, e.g. frame_corrupt:0.1,clock_stall:0.05")
+        .opt_maybe("fault-seed", "seed for the fault plan's hash (default 0)")
+        .opt_maybe("fault-quarantine-after", "faulted rounds before a client is quarantined")
         .opt_maybe("out", "write per-round records to this JSONL file")
         .opt_maybe("trace-out", "write a Chrome trace-event JSON (open in Perfetto)")
         .opt_maybe("stats-out", "write the observability counters/histograms JSON")
@@ -195,7 +198,28 @@ fn parse_experiment(args: &afd::util::cli::Args) -> Result<ExperimentConfig> {
     if let Some(v) = args.get("target") {
         cfg.target_accuracy = Some(v.parse()?);
     }
+    if let Some(v) = args.get("fault-plan") {
+        cfg.fault.plan = v.to_string();
+    }
+    if let Some(v) = args.get("fault-seed") {
+        cfg.fault.seed = v.parse()?;
+    }
+    if let Some(v) = args.get("fault-quarantine-after") {
+        cfg.fault.quarantine_after = v.parse()?;
+    }
     Ok(cfg)
+}
+
+/// Arm the process-wide fault plan when the config carries one.
+fn install_faults(cfg: &ExperimentConfig) -> Result<()> {
+    if !cfg.fault.plan.is_empty() {
+        afd::fault::install(&cfg.fault.plan, cfg.fault.seed, cfg.fault.quarantine_after)?;
+        println!(
+            "[afd] fault plan armed: {} (seed {})",
+            cfg.fault.plan, cfg.fault.seed
+        );
+    }
+    Ok(())
 }
 
 fn cmd_train(argv: Vec<String>) -> Result<()> {
@@ -204,6 +228,7 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
         .parse("afd train", argv)
         .map_err(|e| anyhow::anyhow!(e))?;
     let base = parse_experiment(&args)?;
+    install_faults(&base)?;
     let seeds: usize = args.usize("seeds").map_err(|e| anyhow::anyhow!(e))?;
     init_obs(&args);
 
@@ -319,11 +344,29 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         .opt_maybe(
             "resume",
             "true|false: replay open rounds to reconnecting clients",
+        )
+        .opt_maybe(
+            "checkpoint",
+            "write a coordinator checkpoint to this path at round boundaries",
+        )
+        .opt(
+            "checkpoint-every",
+            "1",
+            "rounds between checkpoints (with --checkpoint)",
+        )
+        .opt_maybe(
+            "restore",
+            "resume a run from this checkpoint (bit-identical continuation)",
+        )
+        .opt_maybe(
+            "crash-after",
+            "exit(137) right after checkpointing round N (chaos-test hook)",
         );
     let args = spec
         .parse("afd serve", argv)
         .map_err(|e| anyhow::anyhow!(e))?;
     let mut cfg = parse_experiment(&args)?;
+    install_faults(&cfg)?;
     // Before `to_json` below: the clients take their socket timeouts
     // from the shipped config.
     if let Some(v) = args.get("io-timeout-s") {
@@ -334,6 +377,7 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
     }
     let conns: usize = args.usize("conns").map_err(|e| anyhow::anyhow!(e))?;
     init_obs(&args);
+    let mut tcp_handle: Option<Arc<TcpTransport>> = None;
     let transport: Arc<dyn Transport> = if conns == 0 {
         Arc::new(Loopback)
     } else {
@@ -348,14 +392,15 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
             "[afd] serving on {} — waiting for {conns} client process(es)...",
             server.local_addr()?
         );
-        let t = server.accept_clients(
+        let t = Arc::new(server.accept_clients(
             conns,
             &cfg.to_json().to_string_compact(),
             model_spec.layout_fingerprint(),
             &cfg.transport,
-        )?;
+        )?);
         println!("[afd] {conns} client process(es) connected");
-        Arc::new(t)
+        tcp_handle = Some(Arc::clone(&t));
+        t
     };
     println!(
         "[afd] {} over {} transport: rounds={} clients={} (seed {})",
@@ -366,8 +411,30 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         cfg.seed
     );
     let mut exp = Experiment::build_with_transport(&cfg, Arc::clone(&transport))?;
-    let mut records = Vec::new();
-    for round in 1..=cfg.rounds {
+    let ckpt_path = args.get("checkpoint").map(std::path::PathBuf::from);
+    let ckpt_every: usize = args.usize("checkpoint-every").map_err(|e| anyhow::anyhow!(e))?;
+    anyhow::ensure!(ckpt_every >= 1, "--checkpoint-every must be >= 1");
+    let crash_after: Option<usize> = match args.get("crash-after") {
+        Some(v) => Some(v.parse()?),
+        None => None,
+    };
+    anyhow::ensure!(
+        crash_after.is_none() || ckpt_path.is_some(),
+        "--crash-after without --checkpoint would lose the run"
+    );
+    let mut start = 1usize;
+    if let Some(p) = args.get("restore") {
+        let completed = exp.restore_from_checkpoint(std::path::Path::new(p))?;
+        println!("[afd] restored {p}: {completed} round(s) already complete");
+        // Re-attached clients carry fleet state from the previous
+        // coordinator process; force a StateSync ahead of their first
+        // dispatch so they rejoin the restored run bit-exactly.
+        if let Some(t) = &tcp_handle {
+            t.mark_recovered();
+        }
+        start = completed as usize + 1;
+    }
+    for round in start..=cfg.rounds {
         let rec = exp.step(round)?;
         if let Some(acc) = rec.eval_acc {
             println!(
@@ -378,13 +445,23 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
                 acc
             );
         }
-        records.push(rec);
+        if let Some(path) = &ckpt_path {
+            if round % ckpt_every == 0 || round == cfg.rounds {
+                exp.save_checkpoint(path, round as u64)?;
+            }
+        }
+        if crash_after == Some(round) {
+            // Simulated coordinator crash: no Bye, no shutdown, no
+            // flushing — the checkpoint above is all a successor gets.
+            println!("[afd] --crash-after {round}: exiting without shutdown");
+            std::process::exit(137);
+        }
     }
     let report = ExperimentReport {
         method: cfg.method_label(),
         variant: cfg.variant.clone(),
         seed: cfg.seed,
-        records,
+        records: exp.records().to_vec(),
         converged: None,
     };
     println!(

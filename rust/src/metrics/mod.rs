@@ -38,6 +38,9 @@ pub struct RoundRecord {
     /// connection); the engine converts them into cuts instead of
     /// failing the run.
     pub lost: usize,
+    /// Running total of clients excluded from selection after
+    /// repeatedly faulting (see `rust/src/fault/README.md`).
+    pub quarantined: usize,
 }
 
 impl RoundRecord {
@@ -64,6 +67,7 @@ impl RoundRecord {
         j.set("cut", Json::Num(self.cut as f64));
         j.set("dropped", Json::Num(self.dropped as f64));
         j.set("lost", Json::Num(self.lost as f64));
+        j.set("quarantined", Json::Num(self.quarantined as f64));
         j
     }
 }
@@ -311,6 +315,29 @@ pub fn render_stage_table() -> Option<String> {
             crate::util::human_bytes(crate::obs::metrics::RESIDENT_BYTES_PEAK.get()),
         ));
     }
+    // Fault-injection accounting, when a plan actually fired.
+    let faults: u64 = crate::fault::ALL_SITES
+        .iter()
+        .map(|&site| crate::obs::metrics::FAULTS_INJECTED[site as usize].get())
+        .sum();
+    if faults > 0 {
+        s.push_str(&format!(
+            "faults: {} injected, {} clients quarantined\n",
+            faults,
+            crate::obs::metrics::CLIENTS_QUARANTINED.get(),
+        ));
+    }
+    // Checkpoint traffic, when the coordinator wrote or restored any.
+    let ckpts = crate::obs::metrics::CHECKPOINTS_WRITTEN.get();
+    let restores = crate::obs::metrics::RESTORES.get();
+    if ckpts + restores > 0 {
+        s.push_str(&format!(
+            "checkpoints: {} written ({}), {} restored\n",
+            ckpts,
+            crate::util::human_bytes(crate::obs::metrics::CHECKPOINT_BYTES.get()),
+            restores,
+        ));
+    }
     Some(s)
 }
 
@@ -341,6 +368,7 @@ mod tests {
                     cut: 0,
                     dropped: 0,
                     lost: 0,
+                    quarantined: 0,
                 }
             })
             .collect();

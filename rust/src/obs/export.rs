@@ -228,6 +228,26 @@ pub fn stats_json() -> Json {
         "residual_store_spilled_bytes",
         Json::Num(metrics::RESIDUAL_STORE_SPILLED_BYTES.get() as f64),
     );
+    counters.set(
+        "checkpoints_written",
+        Json::Num(metrics::CHECKPOINTS_WRITTEN.get() as f64),
+    );
+    counters.set(
+        "checkpoint_bytes",
+        Json::Num(metrics::CHECKPOINT_BYTES.get() as f64),
+    );
+    counters.set("restores", Json::Num(metrics::RESTORES.get() as f64));
+    counters.set(
+        "clients_quarantined",
+        Json::Num(metrics::CLIENTS_QUARANTINED.get() as f64),
+    );
+    let mut faults_total = 0u64;
+    for site in crate::fault::ALL_SITES {
+        let n = metrics::FAULTS_INJECTED[site as usize].get();
+        faults_total += n;
+        counters.set(&format!("faults_{}", site.name()), Json::Num(n as f64));
+    }
+    counters.set("faults_injected_total", Json::Num(faults_total as f64));
 
     let mut gauges = Json::obj();
     gauges.set(

@@ -221,6 +221,22 @@ pub static RESIDUAL_STORE_MISSES: Counter = Counter::new();
 pub static RESIDUAL_STORE_EVICTIONS: Counter = Counter::new();
 /// Bytes written to the residual-store spill file.
 pub static RESIDUAL_STORE_SPILLED_BYTES: Counter = Counter::new();
+/// Coordinator checkpoints written (`afd serve --checkpoint`).
+pub static CHECKPOINTS_WRITTEN: Counter = Counter::new();
+/// Total checkpoint bytes written (post-rename file sizes).
+pub static CHECKPOINT_BYTES: Counter = Counter::new();
+/// Coordinator restores performed (`afd serve --restore`).
+pub static RESTORES: Counter = Counter::new();
+/// Clients quarantined after repeated faults (see `fault/README.md`).
+pub static CLIENTS_QUARANTINED: Counter = Counter::new();
+
+/// Injected faults by `fault::Site` discriminant. Incremented by
+/// `fault::should` itself (unconditionally — fault accounting is part
+/// of the run's output, not the optional trace).
+#[allow(clippy::declare_interior_mutable_const)]
+const FAULT_SLOT: Counter = Counter::new();
+pub static FAULTS_INJECTED: [Counter; crate::fault::SITE_COUNT] =
+    [FAULT_SLOT; crate::fault::SITE_COUNT];
 
 /// Async engine: in-flight heap depth (high-water mark).
 pub static QUEUE_DEPTH: Gauge = Gauge::new();
@@ -287,7 +303,14 @@ pub fn reset_all() {
         &RESIDUAL_STORE_MISSES,
         &RESIDUAL_STORE_EVICTIONS,
         &RESIDUAL_STORE_SPILLED_BYTES,
+        &CHECKPOINTS_WRITTEN,
+        &CHECKPOINT_BYTES,
+        &RESTORES,
+        &CLIENTS_QUARANTINED,
     ] {
+        c.reset();
+    }
+    for c in &FAULTS_INJECTED {
         c.reset();
     }
     QUEUE_DEPTH.reset();

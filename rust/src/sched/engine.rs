@@ -55,7 +55,7 @@ use crate::network::{Availability, NetworkSim};
 use crate::runtime::{EpochData, RuntimeHost};
 use crate::sched::policy::SchedulerPolicy;
 use crate::tensor::kernels::WorkspacePool;
-use crate::transport::{StateSyncSnapshot, Transport};
+use crate::transport::{LossReason, StateSyncSnapshot, Transport};
 use crate::util::pool::LazyPool;
 use crate::util::rng::Pcg64;
 
@@ -127,6 +127,10 @@ pub struct RoundSummary {
     /// is rolled back like a cut and no bytes are charged, but the
     /// record says exactly what the network took.
     pub lost: usize,
+    /// Running total of clients excluded from future cohorts after
+    /// repeatedly faulting (see `rust/src/fault/README.md`). Always 0
+    /// in fault-free runs — genuine churn losses never quarantine.
+    pub quarantined: usize,
 }
 
 /// A prepared per-client job: everything the (possibly worker-thread)
@@ -199,6 +203,69 @@ fn round_seed(seed: u64, round: usize) -> u64 {
     seed ^ ((round as u64) << 20)
 }
 
+/// Run one client job under the fault gate. With no fault plan
+/// installed this is a direct call (one relaxed atomic load). With a
+/// plan active the job runs inside `catch_unwind`, so a panicking
+/// worker job — injected or genuine — degrades into the same zeroed
+/// lost outcome a transport loss produces instead of tearing down the
+/// run; an injected clock stall converts a delivered outcome into a
+/// deadline loss after the fact (uniform across policies: the arrival
+/// simply never counts, no bytes are charged).
+fn run_guarded(
+    round: usize,
+    client: usize,
+    submodel: &SubModel,
+    f: impl FnOnce() -> Result<ClientRoundOutcome>,
+) -> Result<ClientRoundOutcome> {
+    use crate::fault::{self, Site};
+    if !fault::enabled() {
+        return f();
+    }
+    let (r, c) = (round as u64, client as u64);
+    let panicking = fault::should(Site::WorkerPanic, r, c);
+    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        if panicking {
+            panic!("injected fault: worker panic (round {round}, client {client})");
+        }
+        f()
+    }));
+    let mut outcome = match caught {
+        Ok(result) => result?,
+        // A panic may leave the job's borrowed scratch (workspace
+        // buffers, DGC accumulators) half-written; the workspace pool
+        // re-allocates lost buffers and the caller rolls DGC back to
+        // its pre-round snapshot (the snapshot condition includes
+        // `fault::enabled()`), so nothing half-written survives.
+        Err(_) => ClientRoundOutcome {
+            client,
+            submodel: submodel.clone(),
+            train_loss: 0.0,
+            down_bytes: 0,
+            up_bytes: 0,
+            down_payload_bytes: 0,
+            up_payload_bytes: 0,
+            epoch_flops: 0.0,
+            reconstructed: Vec::new(),
+            coord_mask: Vec::new(),
+            agg_plan: None,
+            lost: Some(LossReason::Disconnected),
+        },
+    };
+    if outcome.lost.is_none() && fault::should(Site::ClockStall, r, c) {
+        // The device finished but its clock stalled past the deadline:
+        // the update never arrives and no bytes count. Buffers stay
+        // attached — lost outcomes pass through `recycle_outcomes`.
+        outcome.down_bytes = 0;
+        outcome.up_bytes = 0;
+        outcome.down_payload_bytes = 0;
+        outcome.up_payload_bytes = 0;
+        outcome.train_loss = 0.0;
+        outcome.epoch_flops = 0.0;
+        outcome.lost = Some(LossReason::Timeout);
+    }
+    Ok(outcome)
+}
+
 /// The event-driven federation scheduler.
 pub struct Engine {
     policy: Box<dyn SchedulerPolicy>,
@@ -236,6 +303,13 @@ pub struct Engine {
     global_scratch: Vec<f32>,
     /// Reused index scratch for epoch assembly (shuffle order).
     epoch_order: Vec<u32>,
+    /// Per-client fault tallies (lazily sized; empty in fault-free
+    /// runs, so the warm path never touches it).
+    fault_counts: Vec<u32>,
+    /// Clients excluded from selection after reaching the quarantine
+    /// threshold ([`crate::fault::quarantine_after`]).
+    quarantined: Vec<bool>,
+    quarantined_total: usize,
 }
 
 impl Engine {
@@ -258,7 +332,84 @@ impl Engine {
             pending_lost: 0,
             global_scratch: Vec::new(),
             epoch_order: Vec::new(),
+            fault_counts: Vec::new(),
+            quarantined: Vec::new(),
+            quarantined_total: 0,
         }
+    }
+
+    /// Record one fault attributed to `client`; on the
+    /// [`crate::fault::quarantine_after`]-th the client is excluded
+    /// from future cohorts (policy-visible via
+    /// [`RoundSummary::quarantined`]). Transport and worker losses
+    /// only reach here while a fault plan is active — genuine churn
+    /// losses in fault-free runs must not perturb selection (the
+    /// bit-compatibility contract). Spill-record corruption counts
+    /// unconditionally: it only fires on actual data damage.
+    fn note_fault(&mut self, client: usize, n: usize) {
+        if self.fault_counts.len() < n {
+            self.fault_counts.resize(n, 0);
+            self.quarantined.resize(n, false);
+        }
+        self.fault_counts[client] += 1;
+        if !self.quarantined[client]
+            && self.fault_counts[client] >= crate::fault::quarantine_after()
+        {
+            self.quarantined[client] = true;
+            self.quarantined_total += 1;
+            crate::obs::metrics::CLIENTS_QUARANTINED.incr();
+        }
+    }
+
+    fn is_quarantined(&self, c: usize) -> bool {
+        self.quarantined.get(c).copied().unwrap_or(false)
+    }
+
+    /// Serialize the scheduler's round-boundary state for a
+    /// coordinator checkpoint. Only round-scoped policies can
+    /// checkpoint: a continuous policy's in-flight heap spans
+    /// aggregation boundaries, so a round edge is not a quiescent
+    /// point for it.
+    pub fn save_state(&self, out: &mut Vec<u8>) -> Result<()> {
+        use crate::dropout::statebytes as sb;
+        if self.policy.continuous() || !self.heap.is_empty() {
+            anyhow::bail!(
+                "checkpoint: policy {} is continuous (in-flight work crosses round \
+                 boundaries); checkpointing supports round-scoped policies only",
+                self.policy.name()
+            );
+        }
+        sb::push_f64(out, self.now);
+        sb::push_u64(out, self.version);
+        sb::push_u64(out, self.seq);
+        sb::push_u64(out, self.fault_counts.len() as u64);
+        for &c in &self.fault_counts {
+            sb::push_u64(out, c as u64);
+        }
+        for &q in &self.quarantined {
+            sb::push_bool(out, q);
+        }
+        Ok(())
+    }
+
+    /// Restore state written by [`Engine::save_state`].
+    pub fn load_state(&mut self, bytes: &[u8]) -> Result<()> {
+        use crate::dropout::statebytes as sb;
+        let mut r = sb::Reader::new(bytes);
+        self.now = r.f64()?;
+        self.version = r.u64()?;
+        self.seq = r.u64()?;
+        let n = r.u64()? as usize;
+        self.fault_counts.clear();
+        self.quarantined.clear();
+        for _ in 0..n {
+            self.fault_counts.push(r.u64()? as u32);
+        }
+        for _ in 0..n {
+            self.quarantined.push(r.boolean()?);
+        }
+        self.quarantined_total = self.quarantined.iter().filter(|&&q| q).count();
+        r.finish()
     }
 
     pub fn policy_name(&self) -> &'static str {
@@ -307,77 +458,89 @@ impl Engine {
     /// round never happened from the client's perspective). Callers
     /// pass `snapshot_dgc = false` when exclusion is impossible
     /// (`Sync` with churn off) to skip the 2×`num_params` copy.
+    ///
+    /// The third return is the clients whose residual-store spill
+    /// record failed validation (CRC mismatch / truncation): they are
+    /// skipped *before* any RNG draw they would have owned —
+    /// materialization itself never touches `ctx.rng`, so the skip
+    /// leaves every other client's draw sequence untouched — and the
+    /// caller reports them as typed losses instead of panicking.
     fn prepare_jobs(
         ctx: &mut RoundCtx,
         round: usize,
         cohort: &[usize],
         snapshot_dgc: bool,
         epoch_order: &mut Vec<u32>,
-    ) -> (Vec<ClientJob>, Vec<Option<DgcState>>) {
+    ) -> (Vec<ClientJob>, Vec<Option<DgcState>>, Vec<usize>) {
         let mut backups = Vec::with_capacity(cohort.len());
+        let mut jobs = Vec::with_capacity(cohort.len());
+        let mut spill_lost = Vec::new();
         let want_sync = ctx.transport.wants_state_sync();
-        let jobs = cohort
-            .iter()
-            .map(|&c| {
-                let submodel = ctx.strategy.select(round, c, ctx.rng);
-                let plan = ctx.plans.get(ctx.spec, &submodel);
-                // Materialize the client (resident hit, spill
-                // rehydration, or fresh pure derivation) — identical
-                // state and RNG position to the old eager fleet entry.
-                let st = ctx.fleet.client(c);
-                // Session-resume snapshot: the client's complete
-                // mutable remainder (RNG position, participation
-                // count, DGC residuals), captured *before* this round
-                // mutates any of it — a resuming transport replays it
-                // to a restarted process ahead of the dispatch.
-                let sync = if want_sync {
-                    let (rng_state, rng_inc) = st.rng.to_raw();
-                    let (u, v) = st.dgc.residuals();
-                    Some(StateSyncSnapshot {
-                        client: c as u32,
-                        participations: st.participations as u64,
-                        rng_state,
-                        rng_inc,
-                        dgc_u: u.to_vec(),
-                        dgc_v: v.to_vec(),
-                    })
-                } else {
-                    None
-                };
-                st.participations += 1;
-                let num_samples = st.num_samples;
-                // Assemble the epoch into the client's recycled buffer
-                // (returned by `execute_jobs` after the round; same
-                // RNG draw sequence as the allocating `epoch_data`).
-                let mut data = st.take_epoch_buf();
-                {
-                    let _sp = crate::obs::span_ab(
-                        crate::obs::Stage::EpochAssembly,
-                        round as u64,
-                        c as u64,
-                    );
-                    ctx.fleet.assemble_epoch(c, ctx.spec, epoch_order, &mut data);
-                }
-                let dgc = if ctx.cfg.uplink_dgc {
-                    let taken = ctx.fleet.client(c).take_dgc();
-                    backups.push(snapshot_dgc.then(|| taken.clone()));
-                    Some(taken)
-                } else {
-                    backups.push(None);
-                    None
-                };
-                ClientJob {
-                    client: c,
-                    submodel,
-                    plan,
-                    data,
-                    dgc,
-                    num_samples,
-                    sync,
-                }
-            })
-            .collect();
-        (jobs, backups)
+        for &c in cohort {
+            // Materialize the client first (resident hit, spill
+            // rehydration, or fresh pure derivation) — identical state
+            // and RNG position to the old eager fleet entry. A corrupt
+            // spill record is a per-client loss, not a crash.
+            if let Err(e) = ctx.fleet.try_client(c) {
+                eprintln!("warn: {e}; treating client as lost");
+                spill_lost.push(c);
+                continue;
+            }
+            let submodel = ctx.strategy.select(round, c, ctx.rng);
+            let plan = ctx.plans.get(ctx.spec, &submodel);
+            let st = ctx.fleet.client(c);
+            // Session-resume snapshot: the client's complete
+            // mutable remainder (RNG position, participation
+            // count, DGC residuals), captured *before* this round
+            // mutates any of it — a resuming transport replays it
+            // to a restarted process ahead of the dispatch.
+            let sync = if want_sync {
+                let (rng_state, rng_inc) = st.rng.to_raw();
+                let (u, v) = st.dgc.residuals();
+                Some(StateSyncSnapshot {
+                    client: c as u32,
+                    participations: st.participations as u64,
+                    rng_state,
+                    rng_inc,
+                    dgc_u: u.to_vec(),
+                    dgc_v: v.to_vec(),
+                })
+            } else {
+                None
+            };
+            st.participations += 1;
+            let num_samples = st.num_samples;
+            // Assemble the epoch into the client's recycled buffer
+            // (returned by `execute_jobs` after the round; same
+            // RNG draw sequence as the allocating `epoch_data`).
+            let mut data = st.take_epoch_buf();
+            {
+                let _sp = crate::obs::span_ab(
+                    crate::obs::Stage::EpochAssembly,
+                    round as u64,
+                    c as u64,
+                );
+                ctx.fleet.assemble_epoch(c, ctx.spec, epoch_order, &mut data);
+            }
+            let dgc = if ctx.cfg.uplink_dgc {
+                let taken = ctx.fleet.client(c).take_dgc();
+                backups.push(snapshot_dgc.then(|| taken.clone()));
+                Some(taken)
+            } else {
+                backups.push(None);
+                None
+            };
+            jobs.push(ClientJob {
+                client: c,
+                submodel,
+                plan,
+                data,
+                dgc,
+                num_samples,
+                sync,
+            });
+        }
+        (jobs, backups, spill_lost)
     }
 
     /// Run the jobs' local training — in parallel on the worker pool
@@ -410,25 +573,27 @@ impl Engine {
                     // peak scratch = concurrently running jobs (pool
                     // width), not cohort size.
                     let mut ws = wsp.checkout();
-                    let result = run_client_round(
-                        &spec,
-                        rt.as_ref(),
-                        &global,
-                        &job.submodel,
-                        &job.plan,
-                        &job.data,
-                        lr,
-                        codec.as_ref(),
-                        dgc.as_mut(),
-                        round,
-                        seed,
-                        job.client,
-                        job.num_samples,
-                        deadline,
-                        job.sync.as_ref(),
-                        transport.as_ref(),
-                        &mut ws,
-                    );
+                    let result = run_guarded(round, job.client, &job.submodel, || {
+                        run_client_round(
+                            &spec,
+                            rt.as_ref(),
+                            &global,
+                            &job.submodel,
+                            &job.plan,
+                            &job.data,
+                            lr,
+                            codec.as_ref(),
+                            dgc.as_mut(),
+                            round,
+                            seed,
+                            job.client,
+                            job.num_samples,
+                            deadline,
+                            job.sync.as_ref(),
+                            transport.as_ref(),
+                            &mut ws,
+                        )
+                    });
                     wsp.restore(ws);
                     result.map(|outcome| JobResult {
                         outcome,
@@ -445,25 +610,27 @@ impl Engine {
                 for mut job in jobs {
                     let mut dgc = job.dgc.take();
                     let mut ws = ctx.workspaces.checkout();
-                    let result = run_client_round(
-                        ctx.spec,
-                        rt,
-                        ctx.global,
-                        &job.submodel,
-                        &job.plan,
-                        &job.data,
-                        ctx.lr,
-                        ctx.downlink.as_ref(),
-                        dgc.as_mut(),
-                        round,
-                        seed,
-                        job.client,
-                        job.num_samples,
-                        deadline,
-                        job.sync.as_ref(),
-                        ctx.transport.as_ref(),
-                        &mut ws,
-                    );
+                    let result = run_guarded(round, job.client, &job.submodel, || {
+                        run_client_round(
+                            ctx.spec,
+                            rt,
+                            ctx.global,
+                            &job.submodel,
+                            &job.plan,
+                            &job.data,
+                            ctx.lr,
+                            ctx.downlink.as_ref(),
+                            dgc.as_mut(),
+                            round,
+                            seed,
+                            job.client,
+                            job.num_samples,
+                            deadline,
+                            job.sync.as_ref(),
+                            ctx.transport.as_ref(),
+                            &mut ws,
+                        )
+                    });
                     ctx.workspaces.restore(ws);
                     out.push(JobResult {
                         outcome: result?,
@@ -502,20 +669,32 @@ impl Engine {
         let m = ctx.cfg.cohort_size();
         let n = ctx.cfg.num_clients;
         let want = self.policy.dispatch_count(m).min(n);
-        let cands: Vec<usize> = if self.avail.config().enabled {
+        let mut cands: Vec<usize> = if self.avail.config().enabled {
             self.avail.online_at(n, ctx.cum_s)
         } else {
             (0..n).collect()
         };
+        // Quarantined clients leave the candidate pool. The filter only
+        // runs once someone is actually quarantined, so fault-free runs
+        // keep the exact candidate vector (and RNG mapping) of old.
+        if self.quarantined_total > 0 {
+            cands.retain(|&c| !self.is_quarantined(c));
+        }
         let cohort = Self::sample_from(ctx.rng, &cands, want);
         // Rollback snapshots (2×num_params f32 per client) are only
         // taken when a client can actually end up excluded — a policy
-        // that cuts, churn, or a transport that can lose connections.
-        let snapshot =
-            self.policy.may_cut() || self.avail.config().enabled || ctx.transport.may_lose();
-        let (jobs, mut dgc_backups) =
+        // that cuts, churn, a transport that can lose connections, or
+        // an active fault plan (injected panics/stalls lose clients).
+        let snapshot = self.policy.may_cut()
+            || self.avail.config().enabled
+            || ctx.transport.may_lose()
+            || crate::fault::enabled();
+        let (jobs, mut dgc_backups, spill_lost) =
             Self::prepare_jobs(ctx, round, &cohort, snapshot, &mut self.epoch_order);
         let results = self.execute_jobs(ctx, round, jobs)?;
+        for &c in &spill_lost {
+            self.note_fault(c, n);
+        }
 
         // Arrival offsets (seconds after dispatch) + churn drops +
         // transport losses (a connection died or timed out with this
@@ -525,12 +704,15 @@ impl Engine {
         let mut offsets = Vec::with_capacity(k);
         let mut excluded_flag = vec![false; k];
         let mut dropped = 0usize;
-        let mut lost = 0usize;
+        let mut lost = spill_lost.len();
         for (i, r) in results.iter().enumerate() {
             let off = Self::flight_time(ctx, &r.outcome);
             if r.outcome.lost.is_some() {
                 excluded_flag[i] = true;
                 lost += 1;
+                if crate::fault::enabled() {
+                    self.note_fault(r.outcome.client, n);
+                }
             } else if !self.avail.is_online(r.outcome.client, ctx.cum_s + off) {
                 excluded_flag[i] = true;
                 dropped += 1;
@@ -607,6 +789,7 @@ impl Engine {
         summary.cut = cut;
         summary.dropped = dropped;
         summary.lost = lost;
+        summary.quarantined = self.quarantined_total;
         // Round-closing control frames: Ack commits the device-side
         // codec state, Cut rolls it back (the loops above did the same
         // to the host-side shadow).
@@ -693,6 +876,7 @@ impl Engine {
                             round_s: idle,
                             dropped,
                             lost: std::mem::take(&mut self.pending_lost),
+                            quarantined: self.quarantined_total,
                             // Bytes were charged at dispatch for clients
                             // that have since all dropped — report them
                             // here rather than misattributing them to a
@@ -724,6 +908,7 @@ impl Engine {
         summary.arrived = buffer.len();
         summary.dropped = dropped;
         summary.lost = std::mem::take(&mut self.pending_lost);
+        summary.quarantined = self.quarantined_total;
         summary.down_bytes = std::mem::take(&mut self.pending_down);
         summary.down_payload_bytes = std::mem::take(&mut self.pending_down_payload);
         // Every buffered update was aggregated: commit device-side
@@ -754,18 +939,27 @@ impl Engine {
         }
         let now = self.now;
         let cands: Vec<usize> = (0..ctx.cfg.num_clients)
-            .filter(|&c| !self.in_flight[c] && self.avail.is_online(c, now))
+            .filter(|&c| {
+                !self.in_flight[c]
+                    && self.avail.is_online(c, now)
+                    && (self.quarantined_total == 0 || !self.is_quarantined(c))
+            })
             .collect();
         if cands.is_empty() {
             return Ok(());
         }
         let picked = Self::sample_from(ctx.rng, &cands, target - self.heap.len());
         // Continuous policies exclude via churn drops — or via
-        // transport losses, handled below.
-        let snapshot = self.avail.config().enabled || ctx.transport.may_lose();
-        let (jobs, dgc_backups) =
+        // transport losses and injected faults, handled below.
+        let snapshot =
+            self.avail.config().enabled || ctx.transport.may_lose() || crate::fault::enabled();
+        let (jobs, dgc_backups, spill_lost) =
             Self::prepare_jobs(ctx, round, &picked, snapshot, &mut self.epoch_order);
         let results = self.execute_jobs(ctx, round, jobs)?;
+        for &c in &spill_lost {
+            self.pending_lost += 1;
+            self.note_fault(c, ctx.cfg.num_clients);
+        }
         let mut lost_outcomes = Vec::new();
         for (r, dgc_backup) in results.into_iter().zip(dgc_backups) {
             let o = r.outcome;
@@ -781,6 +975,9 @@ impl Engine {
                 }
                 ctx.transport.finish(o.client, round as u32, false)?;
                 self.pending_lost += 1;
+                if crate::fault::enabled() {
+                    self.note_fault(o.client, ctx.cfg.num_clients);
+                }
                 lost_outcomes.push(o);
                 continue;
             }

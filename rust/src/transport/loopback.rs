@@ -17,9 +17,10 @@
 
 use anyhow::{Context, Result};
 
+use crate::fault::{self, Site};
 use crate::transport::client_round::{client_execute, ClientEnv};
 use crate::transport::frame;
-use crate::transport::{RoundTripStatus, StateSyncSnapshot, Transport};
+use crate::transport::{LossReason, RoundTripStatus, StateSyncSnapshot, Transport};
 
 /// The in-process [`Transport`] (default for every experiment).
 pub struct Loopback;
@@ -27,6 +28,13 @@ pub struct Loopback;
 impl Transport for Loopback {
     fn name(&self) -> &'static str {
         "loopback"
+    }
+
+    /// Loopback cannot genuinely lose anyone — but an active fault
+    /// plan injects losses at the same seams the socket transport has,
+    /// so the engine must take its rollback snapshots.
+    fn may_lose(&self) -> bool {
+        fault::enabled()
     }
 
     fn round_trip(
@@ -70,6 +78,25 @@ impl Transport for Loopback {
             "loopback: offer bitmap does not match the dispatched sub-model"
         );
 
+        // Injected faults, keyed `(round, client)` — the loopback
+        // mirrors every seam the socket transport has, so fault plans
+        // exercise the engine's loss handling without sockets. Each
+        // class lands in exactly one bucket: a typed loss or a fully
+        // masked (bit-identical) event — never an `Err`.
+        let (fr, fc) = (offer_msg.round as u64, client as u64);
+        if fault::enabled() {
+            if fault::should(Site::SockWrite, fr, fc) {
+                // The dispatch never reaches the device.
+                reply.clear();
+                return Ok(RoundTripStatus::Lost(LossReason::Disconnected));
+            }
+            if fault::should(Site::FrameDelay, fr, fc) {
+                // Delivered, but past the I/O budget.
+                reply.clear();
+                return Ok(RoundTripStatus::Lost(LossReason::Timeout));
+            }
+        }
+
         client_execute(
             offer_msg.round,
             offer_msg.client,
@@ -79,6 +106,38 @@ impl Transport for Loopback {
             env,
             reply,
         )?;
+
+        if fault::enabled() {
+            if fault::should(Site::SockRead, fr, fc) {
+                // The update was sent but the read side died first.
+                reply.clear();
+                return Ok(RoundTripStatus::Lost(LossReason::Disconnected));
+            }
+            if fault::should(Site::FrameCorrupt, fr, fc) && !reply.is_empty() {
+                // Flip one reply byte pre-CRC-check: the receiver must
+                // reject the frame, converting corruption into the
+                // same typed loss a dead connection produces.
+                let idx =
+                    (fault::derive(Site::FrameCorrupt, fr, fc) as usize) % reply.len();
+                reply[idx] ^= 0x40;
+                debug_assert!(
+                    frame::parse_frame(reply).is_err(),
+                    "CRC must reject a corrupted update frame"
+                );
+                reply.clear();
+                return Ok(RoundTripStatus::Lost(LossReason::Disconnected));
+            }
+            if fault::should(Site::FrameDup, fr, fc) {
+                // Duplicate delivery: the second copy parses fine but
+                // exchanges are matched by (round, client), so it is
+                // discarded — fully masked.
+                let _ = frame::parse_frame(reply);
+            }
+            // Site::PartialWrite needs no action here: the loopback
+            // "writes" in one piece, and the socket transport resumes
+            // short writes from its cursor — fully masked by design.
+            let _ = fault::should(Site::PartialWrite, fr, fc);
+        }
         Ok(RoundTripStatus::Delivered)
     }
 

@@ -66,6 +66,7 @@ use anyhow::{Context, Result};
 
 use crate::config::{Backend, ExperimentConfig, TransportConfig};
 use crate::data;
+use crate::fault::{self, Site};
 use crate::model::packing::PlanCache;
 use crate::model::submodel::SubModel;
 use crate::runtime::native::mlp_from_config;
@@ -199,8 +200,23 @@ fn flush_conn(conn: &mut ConnState) -> bool {
     let Some(stream) = conn.stream.as_mut() else {
         return true;
     };
-    while conn.wpos < conn.out.len() {
-        match stream.write(&conn.out[conn.wpos..]) {
+    let mut limit = conn.out.len();
+    if fault::enabled() && conn.wpos < limit {
+        if fault::should(Site::SockWrite, conn.generation, conn.wpos as u64) {
+            // Injected write error: the connection dies exactly like a
+            // peer reset mid-flush would kill it.
+            return false;
+        }
+        if limit - conn.wpos > 1
+            && fault::should(Site::PartialWrite, conn.generation, conn.wpos as u64)
+        {
+            // Injected short write: stop mid-buffer this tick; `wpos`
+            // resumes from the cut next tick — fully masked.
+            limit = conn.wpos + (limit - conn.wpos) / 2;
+        }
+    }
+    while conn.wpos < limit {
+        match stream.write(&conn.out[conn.wpos..limit]) {
             Ok(0) => return false,
             Ok(n) => conn.wpos += n,
             Err(e) if e.kind() == ErrorKind::WouldBlock => break,
@@ -221,6 +237,10 @@ fn read_conn(conn: &mut ConnState, scratch: &mut [u8]) -> bool {
     let Some(stream) = conn.stream.as_mut() else {
         return true;
     };
+    if fault::should(Site::SockRead, conn.generation, conn.rbuf.len() as u64) {
+        // Injected read error: indistinguishable from EOF / ECONNRESET.
+        return false;
+    }
     loop {
         match stream.read(scratch) {
             Ok(0) => return false,
@@ -275,6 +295,15 @@ fn drain_frames(conn: &mut ConnState) -> Result<bool, ()> {
         let Some(k) = key else {
             return Err(());
         };
+        if fault::should(Site::FrameCorrupt, k.0 as u64, k.1 as u64) {
+            // Injected wire corruption: a real receiver rejects the
+            // frame on CRC and abandons the connection. The matched
+            // round resolves as the same typed loss a dead socket
+            // produces; the protocol-death return kills the rest.
+            conn.open.get_mut(&k).expect("matched entry").done =
+                Some(Err(LossReason::Disconnected));
+            return Err(());
+        }
         // No parse here beyond the header: `run_client_round` runs the
         // one full parse — CRC, kind, payload grammar — over the reply.
         let bytes = conn.rbuf[off..off + total].to_vec();
@@ -599,9 +628,80 @@ pub struct TcpServer {
     listener: TcpListener,
 }
 
+/// Bind with `SO_REUSEADDR` so a restarted coordinator can reclaim its
+/// port immediately: a crash leaves the old connections parked in
+/// `TIME_WAIT`/`FIN_WAIT` for up to a minute, during which a plain
+/// `TcpListener::bind` fails with `EADDRINUSE` — exactly the window a
+/// `--restore` supervisor restarts in. Linux/IPv4 only; anything else
+/// falls back to the std bind (the flag is a restart-latency
+/// optimization, never a correctness requirement).
+#[cfg(target_os = "linux")]
+fn bind_reuseaddr(addr: &str) -> std::io::Result<TcpListener> {
+    use std::net::ToSocketAddrs;
+    use std::os::unix::io::FromRawFd;
+
+    let Some(SocketAddr::V4(v4)) = addr
+        .to_socket_addrs()?
+        .find(|a| matches!(a, SocketAddr::V4(_)))
+    else {
+        return TcpListener::bind(addr);
+    };
+
+    #[repr(C)]
+    struct SockAddrIn {
+        sin_family: u16,
+        sin_port: u16, // network byte order
+        sin_addr: u32, // network byte order
+        sin_zero: [u8; 8],
+    }
+    const AF_INET: i32 = 2;
+    const SOCK_STREAM: i32 = 1;
+    const SOL_SOCKET: i32 = 1;
+    const SO_REUSEADDR: i32 = 2;
+    extern "C" {
+        fn socket(domain: i32, ty: i32, protocol: i32) -> i32;
+        fn setsockopt(fd: i32, level: i32, name: i32, value: *const i32, len: u32) -> i32;
+        fn bind(fd: i32, addr: *const SockAddrIn, len: u32) -> i32;
+        fn listen(fd: i32, backlog: i32) -> i32;
+        fn close(fd: i32) -> i32;
+    }
+
+    let sa = SockAddrIn {
+        sin_family: AF_INET as u16,
+        sin_port: v4.port().to_be(),
+        sin_addr: u32::from(*v4.ip()).to_be(),
+        sin_zero: [0; 8],
+    };
+    // SAFETY: plain syscalls on an fd this function owns until the
+    // `from_raw_fd` handoff; `sa` outlives the `bind` call. Every
+    // failure reads `last_os_error` before anything can overwrite
+    // errno, then closes the fd.
+    unsafe {
+        let fd = socket(AF_INET, SOCK_STREAM, 0);
+        if fd < 0 {
+            return Err(std::io::Error::last_os_error());
+        }
+        let one: i32 = 1;
+        if setsockopt(fd, SOL_SOCKET, SO_REUSEADDR, &one, 4) != 0
+            || bind(fd, &sa, std::mem::size_of::<SockAddrIn>() as u32) != 0
+            || listen(fd, 128) != 0
+        {
+            let err = std::io::Error::last_os_error();
+            let _ = close(fd);
+            return Err(err);
+        }
+        Ok(TcpListener::from_raw_fd(fd))
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+fn bind_reuseaddr(addr: &str) -> std::io::Result<TcpListener> {
+    TcpListener::bind(addr)
+}
+
 impl TcpServer {
     pub fn bind(addr: &str) -> Result<TcpServer> {
-        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let listener = bind_reuseaddr(addr).with_context(|| format!("binding {addr}"))?;
         Ok(TcpServer { listener })
     }
 
@@ -794,6 +894,22 @@ impl TcpTransport {
         }
     }
 
+    /// Force a `StateSync` ahead of the first dispatch to every client.
+    /// Called after a coordinator restart (`afd serve --restore`): the
+    /// clients re-attaching to the new process carry fleet state from
+    /// whatever round their previous coordinator last closed, which the
+    /// restored engine must overwrite before reusing them — exactly the
+    /// reconnect-generation machinery, applied to generation-0 slots.
+    pub fn mark_recovered(&self) {
+        let mut sh = lock(&self.shared.0);
+        for conn in sh.conns.iter_mut() {
+            if conn.generation == 0 {
+                conn.generation = 1;
+            }
+            conn.last_synced.clear();
+        }
+    }
+
     /// Stop both background threads and wait for them. Idempotent.
     fn halt(&self) {
         {
@@ -949,17 +1065,41 @@ struct PendingOffer {
     submodel: SubModel,
 }
 
-/// Dial `addr`, retrying while the window lasts.
-fn connect_within(addr: &str, window_s: f64) -> Result<TcpStream> {
+/// Deterministic capped exponential backoff for redial attempts: base
+/// 100 ms doubling to a 5 s ceiling, with seed-derived jitter in
+/// `[cap/2, cap]` so a restarted fleet does not dial in lockstep — yet
+/// the same `(seed, attempt)` always sleeps the same, keeping chaos
+/// runs reproducible.
+pub fn backoff_delay(seed: u64, attempt: u32) -> Duration {
+    const BASE_MS: u64 = 100;
+    const CAP_MS: u64 = 5_000;
+    let cap = (BASE_MS << attempt.min(6)).min(CAP_MS);
+    // splitmix64 over (seed, attempt): cheap, stateless, deterministic.
+    let mut z = seed ^ (attempt as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^= z >> 31;
+    Duration::from_millis(cap / 2 + z % (cap / 2 + 1))
+}
+
+/// Dial `addr`, retrying with capped exponential backoff while the
+/// window lasts. `seed` derives the jitter: the initial connect uses
+/// the process id (fleet members spread out), a reconnect uses the
+/// session token (deterministic per logical slot).
+fn connect_within(addr: &str, window_s: f64, seed: u64) -> Result<TcpStream> {
     let deadline = Instant::now() + Duration::from_secs_f64(window_s.max(0.0));
+    let mut attempt = 0u32;
     loop {
         match TcpStream::connect(addr) {
             Ok(s) => return Ok(s),
             Err(e) => {
-                if Instant::now() >= deadline {
+                let now = Instant::now();
+                if now >= deadline {
                     return Err(e).with_context(|| format!("connecting to {addr}"));
                 }
-                std::thread::sleep(Duration::from_millis(200));
+                let delay = backoff_delay(seed, attempt).min(deadline - now);
+                attempt = attempt.saturating_add(1);
+                std::thread::sleep(delay);
             }
         }
     }
@@ -1008,7 +1148,7 @@ pub fn run_client_loop(addr: &str, opts: &ClientOptions) -> Result<ClientEnd> {
     // ---- connect + first handshake -----------------------------------
     let mut buf = Vec::new();
     let mut out = Vec::new();
-    let mut stream = connect_within(addr, opts.connect_retry_s)?;
+    let mut stream = connect_within(addr, opts.connect_retry_s, std::process::id() as u64)?;
     let (server_fp, mut token, json_text) =
         client_handshake(&mut stream, 0, HANDSHAKE_TIMEOUT, &mut buf, &mut out)?;
     let json = crate::util::json::parse(&json_text)
@@ -1261,7 +1401,7 @@ pub fn run_client_loop(addr: &str, opts: &ClientOptions) -> Result<ClientEnd> {
         // Safe to forget rollback points: the server syncs every client
         // it touches after a reconnect before its next round.
         pending.clear();
-        stream = connect_within(addr, opts.reconnect_s)
+        stream = connect_within(addr, opts.reconnect_s, token)
             .with_context(|| format!("reconnecting after: {drop_err:#}"))?;
         let (sfp, tok, _json) =
             client_handshake(&mut stream, token, io_timeout, &mut buf, &mut out)?;
@@ -1350,6 +1490,27 @@ mod tests {
         let (view, _) = frame::parse_frame(buf).unwrap();
         assert_eq!(view.kind, FrameKind::ModelDown);
         key
+    }
+
+    #[test]
+    fn backoff_is_deterministic_capped_and_jittered() {
+        for attempt in 0..12u32 {
+            let d = backoff_delay(42, attempt);
+            assert_eq!(
+                d,
+                backoff_delay(42, attempt),
+                "same (seed, attempt) must sleep the same"
+            );
+            let cap = (100u64 << attempt.min(6)).min(5_000);
+            let ms = d.as_millis() as u64;
+            assert!(
+                ms >= cap / 2 && ms <= cap,
+                "attempt {attempt}: {ms} ms outside [{}, {cap}]",
+                cap / 2
+            );
+        }
+        // Different seeds must not redial in lockstep on every attempt.
+        assert!((0..12u32).any(|a| backoff_delay(1, a) != backoff_delay(2, a)));
     }
 
     #[test]

@@ -1,0 +1,165 @@
+//! Coordinator checkpoint/restore: a run interrupted at a round
+//! boundary and resumed in a fresh process-equivalent (new `Experiment`
+//! from the same config) must be bit-identical to the uninterrupted
+//! run — JSONL records and final model hash — and every way a
+//! checkpoint can be unusable (corruption, truncation, config drift,
+//! continuous policy) must be a typed error, never a wrong result.
+
+use afd::config::{ExperimentConfig, Preset};
+use afd::coordinator::experiment::Experiment;
+use afd::metrics::RoundRecord;
+use afd::util::model_hash;
+
+fn smoke_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::preset(Preset::NativeSmoke);
+    cfg.rounds = 6;
+    cfg.eval_every = 2;
+    cfg
+}
+
+fn tmp_path(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("afd_{}_{name}.ckpt", std::process::id()))
+}
+
+fn jsonl(recs: &[RoundRecord]) -> Vec<String> {
+    recs.iter().map(|r| r.to_json().to_string_compact()).collect()
+}
+
+fn run_uninterrupted(cfg: &ExperimentConfig) -> (Vec<String>, u64) {
+    let mut exp = Experiment::build(cfg).unwrap();
+    for round in 1..=cfg.rounds {
+        exp.step(round).unwrap();
+    }
+    (jsonl(exp.records()), model_hash(&exp.global))
+}
+
+/// The acceptance bar: save at round 3, throw the experiment away,
+/// rebuild from config, restore, continue — records and model hash
+/// must match the uninterrupted run bit-for-bit.
+#[test]
+fn restore_continues_bit_identically() {
+    for policy in ["sync", "overselect"] {
+        let mut cfg = smoke_cfg();
+        cfg.sched.policy = policy.into();
+        let (full_recs, full_hash) = run_uninterrupted(&cfg);
+
+        let path = tmp_path(&format!("resume_{policy}"));
+        {
+            let mut exp = Experiment::build(&cfg).unwrap();
+            for round in 1..=3 {
+                exp.step(round).unwrap();
+            }
+            exp.save_checkpoint(&path, 3).unwrap();
+            // The "crash": drop the whole experiment on the floor.
+        }
+        let mut exp = Experiment::build(&cfg).unwrap();
+        let completed = exp.restore_from_checkpoint(&path).unwrap();
+        assert_eq!(completed, 3, "{policy}");
+        for round in (completed as usize + 1)..=cfg.rounds {
+            exp.step(round).unwrap();
+        }
+        assert_eq!(jsonl(exp.records()), full_recs, "{policy}");
+        assert_eq!(model_hash(&exp.global), full_hash, "{policy}");
+        let _ = std::fs::remove_file(&path);
+    }
+}
+
+/// Checkpoints survive their own serialization: saving again right
+/// after a restore reproduces the same file byte-for-byte (nothing is
+/// lost or reordered by a round-trip through disk).
+#[test]
+fn save_restore_save_is_byte_stable() {
+    let cfg = smoke_cfg();
+    let p1 = tmp_path("stable1");
+    let p2 = tmp_path("stable2");
+    {
+        let mut exp = Experiment::build(&cfg).unwrap();
+        for round in 1..=2 {
+            exp.step(round).unwrap();
+        }
+        exp.save_checkpoint(&p1, 2).unwrap();
+    }
+    let mut exp = Experiment::build(&cfg).unwrap();
+    exp.restore_from_checkpoint(&p1).unwrap();
+    exp.save_checkpoint(&p2, 2).unwrap();
+    let a = std::fs::read(&p1).unwrap();
+    let b = std::fs::read(&p2).unwrap();
+    assert_eq!(a, b, "restore must reconstruct the exact checkpointed state");
+    let _ = std::fs::remove_file(&p1);
+    let _ = std::fs::remove_file(&p2);
+}
+
+/// Corruption anywhere in the file is a typed error on read — the CRC
+/// trailer rejects it before any field is trusted.
+#[test]
+fn corrupt_or_truncated_checkpoint_is_a_typed_error() {
+    let cfg = smoke_cfg();
+    let path = tmp_path("corrupt");
+    {
+        let mut exp = Experiment::build(&cfg).unwrap();
+        exp.step(1).unwrap();
+        exp.save_checkpoint(&path, 1).unwrap();
+    }
+    let clean = std::fs::read(&path).unwrap();
+
+    let mut flipped = clean.clone();
+    let mid = flipped.len() / 2;
+    flipped[mid] ^= 0x01;
+    std::fs::write(&path, &flipped).unwrap();
+    let mut exp = Experiment::build(&cfg).unwrap();
+    let err = exp.restore_from_checkpoint(&path).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("checkpoint"),
+        "corruption error should name the checkpoint: {err:#}"
+    );
+
+    std::fs::write(&path, &clean[..clean.len() - 7]).unwrap();
+    assert!(exp.restore_from_checkpoint(&path).is_err(), "truncated file must fail");
+
+    // The experiment is still usable after failed restores.
+    std::fs::write(&path, &clean).unwrap();
+    assert_eq!(exp.restore_from_checkpoint(&path).unwrap(), 1);
+    exp.step(2).unwrap();
+    let _ = std::fs::remove_file(&path);
+}
+
+/// A checkpoint from a different config must be refused up front: the
+/// fingerprint check catches drift before any state is loaded.
+#[test]
+fn config_drift_is_refused() {
+    let cfg = smoke_cfg();
+    let path = tmp_path("drift");
+    {
+        let mut exp = Experiment::build(&cfg).unwrap();
+        exp.step(1).unwrap();
+        exp.save_checkpoint(&path, 1).unwrap();
+    }
+    let mut other = cfg.clone();
+    other.seed += 1;
+    let mut exp = Experiment::build(&other).unwrap();
+    let err = exp.restore_from_checkpoint(&path).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("fingerprint"),
+        "drift error should mention the fingerprint: {err:#}"
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Continuous policies carry in-flight work across round boundaries;
+/// checkpointing them would need heap serialization the format does
+/// not promise — refusing is the contract.
+#[test]
+fn continuous_policy_refuses_to_checkpoint() {
+    let mut cfg = smoke_cfg();
+    cfg.sched.policy = "async_buffered".into();
+    let path = tmp_path("async");
+    let mut exp = Experiment::build(&cfg).unwrap();
+    exp.step(1).unwrap();
+    let err = exp.save_checkpoint(&path, 1).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("continuous"),
+        "refusal should explain itself: {err:#}"
+    );
+    assert!(!path.exists(), "a refused checkpoint must not leave a file");
+    let _ = std::fs::remove_file(&path);
+}

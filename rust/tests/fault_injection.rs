@@ -1,0 +1,171 @@
+//! Property sweep for the deterministic fault-injection engine.
+//!
+//! The contract under test (see `rust/src/fault/README.md`): for every
+//! injection site and every fault seed, a faulted run either
+//!
+//! * is **bit-identical** to the fault-free run (the fault was masked
+//!   by a recovery path), or
+//! * completes with a **nonzero typed loss / quarantine count** —
+//!
+//! and it never panics, never hangs, and never silently diverges.
+//!
+//! Fault state is process-global, so every test here serializes on one
+//! mutex and resets the plan on the way out. Unit tests inside the
+//! library never arm the global plan for the same reason.
+
+use std::sync::{Mutex, MutexGuard};
+
+use afd::config::{ExperimentConfig, Preset};
+use afd::coordinator::experiment::Experiment;
+use afd::fault::{self, Site, ALL_SITES};
+use afd::metrics::RoundRecord;
+use afd::util::model_hash;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+/// Take the global-fault-state lock (surviving another test's panic)
+/// and guarantee a clean slate on both edges.
+fn exclusive() -> MutexGuard<'static, ()> {
+    let guard = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    fault::reset();
+    guard
+}
+
+fn smoke_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::preset(Preset::NativeSmoke);
+    cfg.rounds = 4;
+    cfg.eval_every = 2;
+    cfg
+}
+
+/// Run over the loopback transport; return the per-round records and
+/// the final model hash (the bit-identity handle CI greps).
+fn run(cfg: &ExperimentConfig) -> (Vec<RoundRecord>, u64) {
+    let mut exp = Experiment::build(cfg).unwrap();
+    let mut recs = Vec::new();
+    for round in 1..=cfg.rounds {
+        recs.push(exp.step(round).unwrap());
+    }
+    (recs, model_hash(&exp.global))
+}
+
+/// Serialized record lines — the same bytes a `--out` JSONL would
+/// hold, so "bit-identical" here means what it means in CI.
+fn jsonl(recs: &[RoundRecord]) -> Vec<String> {
+    recs.iter().map(|r| r.to_json().to_string_compact()).collect()
+}
+
+#[test]
+fn every_site_and_seed_masks_or_converts_to_typed_loss() {
+    let _guard = exclusive();
+    let cfg = smoke_cfg();
+    let (base_recs, base_hash) = run(&cfg);
+    let base_jsonl = jsonl(&base_recs);
+    assert!(base_recs.iter().all(|r| r.lost == 0 && r.quarantined == 0));
+
+    for site in ALL_SITES {
+        for fseed in [1u64, 2, 3] {
+            fault::install(&format!("{}:0.2", site.name()), fseed, 3).unwrap();
+            let (recs, hash) = run(&cfg);
+            fault::reset();
+
+            let what = format!("site {} seed {fseed}", site.name());
+            let identical = jsonl(&recs) == base_jsonl && hash == base_hash;
+            let losses: usize = recs.iter().map(|r| r.lost).sum();
+            let quarantined = recs.last().unwrap().quarantined;
+            if matches!(site, Site::PartialWrite | Site::FrameDup) {
+                // Masked by construction: short writes resume from the
+                // cursor, duplicate frames are dropped by the matcher.
+                assert!(identical, "{what}: a masked site must be bit-identical");
+            } else {
+                assert!(
+                    identical || losses + quarantined > 0,
+                    "{what}: diverged from baseline without a typed loss"
+                );
+            }
+        }
+    }
+}
+
+/// A plan made only of masked sites, at a high rate, must not move a
+/// single bit — even though the fault machinery is armed and the
+/// engine runs its may-lose paths (rollback snapshots and all).
+#[test]
+fn masked_only_plan_is_bit_identical_at_high_rate() {
+    let _guard = exclusive();
+    let cfg = smoke_cfg();
+    let (base_recs, base_hash) = run(&cfg);
+    fault::install("partial_write:0.9,frame_dup:0.9", 7, 3).unwrap();
+    let (recs, hash) = run(&cfg);
+    fault::reset();
+    assert_eq!(jsonl(&recs), jsonl(&base_recs));
+    assert_eq!(hash, base_hash);
+}
+
+/// Tracing must stay an observer even while faults fire: a traced
+/// faulted run and an untraced faulted run produce identical records.
+#[test]
+fn tracing_is_bit_identical_under_an_active_plan() {
+    let _guard = exclusive();
+    let cfg = smoke_cfg();
+    fault::install("sock_read:0.3,worker_panic:0.1", 11, 3).unwrap();
+    let (plain_recs, plain_hash) = run(&cfg);
+    afd::obs::set_enabled(true);
+    let (traced_recs, traced_hash) = run(&cfg);
+    afd::obs::set_enabled(false);
+    fault::reset();
+    assert_eq!(jsonl(&traced_recs), jsonl(&plain_recs));
+    assert_eq!(traced_hash, plain_hash);
+}
+
+/// Clients that fault round after round end up quarantined: the
+/// scheduler stops selecting them, the count is policy-visible in the
+/// records, and the run still completes cleanly.
+#[test]
+fn repeat_offenders_are_quarantined() {
+    let _guard = exclusive();
+    let mut cfg = smoke_cfg();
+    cfg.rounds = 6;
+    cfg.client_fraction = 0.5; // big cohorts: clients repeat quickly
+    let mut saw_quarantine = false;
+    for fseed in 1u64..=4 {
+        fault::install("sock_write:0.9", fseed, 2).unwrap();
+        let (recs, _hash) = run(&cfg);
+        fault::reset();
+        let losses: usize = recs.iter().map(|r| r.lost).sum();
+        assert!(losses > 0, "seed {fseed}: a 90% write-fault rate must lose rounds");
+        // Quarantine counts are monotone.
+        for w in recs.windows(2) {
+            assert!(w[1].quarantined >= w[0].quarantined);
+        }
+        if recs.last().unwrap().quarantined > 0 {
+            saw_quarantine = true;
+            break;
+        }
+    }
+    assert!(saw_quarantine, "no fault seed quarantined anyone");
+}
+
+/// The fault plan works under every scheduler policy — including the
+/// continuous one, whose loss handling runs through `refill` rather
+/// than the round loop.
+#[test]
+fn all_policies_survive_an_aggressive_mixed_plan() {
+    let _guard = exclusive();
+    for policy in ["sync", "overselect", "async_buffered"] {
+        let mut cfg = smoke_cfg();
+        cfg.sched.policy = policy.into();
+        fault::install(
+            "sock_write:0.2,sock_read:0.2,frame_corrupt:0.2,frame_delay:0.2,\
+             worker_panic:0.1,clock_stall:0.1",
+            3,
+            3,
+        )
+        .unwrap();
+        let (recs, _hash) = run(&cfg);
+        fault::reset();
+        assert_eq!(recs.len(), cfg.rounds, "{policy}: run must complete");
+        let losses: usize = recs.iter().map(|r| r.lost).sum();
+        assert!(losses > 0, "{policy}: this plan fires on a 4-round smoke");
+    }
+}
