@@ -289,6 +289,29 @@ fn main() {
         let (view, _) = frame::parse_frame(&mbuf).unwrap();
         std::hint::black_box(frame::parse_model_down(&view).unwrap());
     });
+
+    // ---- distributed telemetry --------------------------------------
+    // The per-round cost a remote client pays to ship its telemetry
+    // home (PR 10): after the first iteration drains the rings, every
+    // encode is the quiet-process snapshot (four zero counts, 40 wire
+    // bytes) — the steady-state floor of the side channel. The parse
+    // row is the coordinator's cost to accept it.
+    println!("\n-- distributed telemetry --");
+    let mut shipper = afd::obs::remote::Shipper::new();
+    let mut tele_buf: Vec<u8> = Vec::with_capacity(64 * 1024);
+    shipper.encode_into(&mut tele_buf, 1); // drain backlog, warm the sink
+    tele_buf.clear();
+    shipper.encode_into(&mut tele_buf, 2);
+    let r_tele_enc = b.run("telemetry snapshot encode (warm, quiet)", None, || {
+        tele_buf.clear();
+        shipper.encode_into(&mut tele_buf, 3);
+        std::hint::black_box(tele_buf.len());
+    });
+    let tele_quiet_bytes = tele_buf.len();
+    let r_tele_parse = b.run("telemetry frame parse (quiet)", None, || {
+        let (view, _) = frame::parse_frame(&tele_buf).unwrap();
+        std::hint::black_box(frame::parse_telemetry(&view).unwrap());
+    });
     afd::obs::set_enabled(false);
 
     // ---- tracked baseline: BENCH_hotpath.json -----------------------
@@ -325,7 +348,9 @@ fn main() {
              kernel + workspace path and PackPlan; `simd` records the detected CPU \
              features, the active dispatch level and dispatched-vs-scalar primitive \
              ratios; `obs` records the raw span-site cost (enabled vs disabled) and \
-             tracing-on/off ratios for the two hottest instrumented sites — all \
+             tracing-on/off ratios for the two hottest instrumented sites; \
+             `telemetry` records the steady-state cost of the distributed \
+             telemetry side channel (warm quiet-snapshot encode + parse) — all \
              measured in the same run on the same machine. Regenerate \
              with `cargo bench --bench bench_micro_hotpath` (add `--features simd` \
              to measure the AVX2 dispatch)."
@@ -407,6 +432,14 @@ fn main() {
         Json::Num(r_parse_traced.median_ns / r_frame_parse.median_ns),
     );
     doc.set("obs", obs_j);
+    let mut tele_j = Json::obj();
+    tele_j.set(
+        "snapshot_encode_quiet_ns",
+        Json::Num(r_tele_enc.median_ns),
+    );
+    tele_j.set("frame_parse_quiet_ns", Json::Num(r_tele_parse.median_ns));
+    tele_j.set("quiet_frame_bytes", Json::Num(tele_quiet_bytes as f64));
+    doc.set("telemetry", tele_j);
     doc.set("all_results", b.to_json());
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
         .join("..")

@@ -182,6 +182,11 @@ pub fn write(path: &Path, body: &CheckpointBody) -> Result<()> {
         .with_context(|| format!("publishing checkpoint {}", path.display()))?;
     crate::obs::metrics::CHECKPOINTS_WRITTEN.incr();
     crate::obs::metrics::CHECKPOINT_BYTES.add(bytes.len() as u64);
+    crate::obs::span::mark(
+        crate::obs::Stage::CheckpointMark,
+        body.completed_round,
+        bytes.len() as u64,
+    );
     Ok(())
 }
 

@@ -80,7 +80,7 @@ pub struct Experiment {
 impl Experiment {
     /// Build with the default in-process loopback transport.
     pub fn build(cfg: &ExperimentConfig) -> Result<Experiment> {
-        Experiment::build_with_transport(cfg, Arc::new(Loopback))
+        Experiment::build_with_transport(cfg, Arc::new(Loopback::default()))
     }
 
     pub fn build_with_transport(
@@ -222,6 +222,7 @@ impl Experiment {
     /// Execute one federated round through the scheduler; returns the
     /// round's record.
     pub fn step(&mut self, round: usize) -> Result<RoundRecord> {
+        crate::obs::metrics::CURRENT_ROUND.set(round as u64);
         let mut ctx = RoundCtx {
             cfg: &self.cfg,
             spec: &self.spec,
@@ -447,6 +448,7 @@ impl Experiment {
         self.lr = body.lr;
         self.records = body.records;
         crate::obs::metrics::RESTORES.incr();
+        crate::obs::span::mark(crate::obs::Stage::RestoreMark, body.completed_round, 0);
         Ok(body.completed_round)
     }
 

@@ -179,6 +179,9 @@ pub fn should(site: Site, a: u64, b: u64) -> bool {
     let fire = decide(seed, ppm, site, a, b);
     if fire {
         crate::obs::metrics::FAULTS_INJECTED[site as usize].incr();
+        // Instant on the merged timeline (no-op unless tracing is on);
+        // carries the site discriminant and the first plan key.
+        crate::obs::span::mark(crate::obs::Stage::FaultMark, site as u64, a);
     }
     fire
 }

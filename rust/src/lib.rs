@@ -59,9 +59,15 @@
 //! layer threaded through all of the above: an allocation-free span
 //! recorder (per-thread ring buffers), a static counter/histogram
 //! registry, and Chrome-trace / stats exporters (`--trace-out`,
-//! `--stats-out`; cargo feature `trace`, on by default) — recording
-//! never changes results (traced runs are bit-identical to untraced,
-//! `rust/tests/obs_conformance.rs`) and a warm client round stays
+//! `--stats-out`; cargo feature `trace`, on by default), plus the
+//! distributed telemetry plane (`obs::remote`): remote client
+//! processes ship span/counter snapshots home in `Telemetry` wire
+//! frames, the coordinator merges them — clock-aligned, one trace
+//! process group per federation member — and `--metrics-addr` serves
+//! live Prometheus/JSON stats mid-run. Recording never changes
+//! results (traced runs are bit-identical to untraced,
+//! `rust/tests/obs_conformance.rs`; telemetry-armed runs too,
+//! `rust/tests/obs_distributed.rs`) and a warm client round stays
 //! allocation-free with tracing on (`rust/tests/zero_alloc.rs`). See
 //! `rust/src/obs/README.md`. [`fault`] is the robustness mirror of
 //! [`obs`]: a deterministic fault-injection engine (`--fault-plan` /

@@ -113,14 +113,27 @@ fn experiment_spec() -> ArgSpec {
         .opt_maybe("out", "write per-round records to this JSONL file")
         .opt_maybe("trace-out", "write a Chrome trace-event JSON (open in Perfetto)")
         .opt_maybe("stats-out", "write the observability counters/histograms JSON")
+        .opt_maybe(
+            "metrics-addr",
+            "serve live stats over HTTP (/metrics Prometheus text, /snapshot JSON)",
+        )
 }
 
 /// Enable span/metric recording when an observability output was
-/// requested (`AFD_TRACE=1` may have enabled it already).
-fn init_obs(args: &afd::util::cli::Args) {
-    if args.get("trace-out").is_some() || args.get("stats-out").is_some() {
+/// requested (`AFD_TRACE=1` may have enabled it already), and start
+/// the live stats endpoint if one was asked for.
+fn init_obs(args: &afd::util::cli::Args) -> Result<()> {
+    if args.get("trace-out").is_some()
+        || args.get("stats-out").is_some()
+        || args.get("metrics-addr").is_some()
+    {
         afd::obs::set_enabled(true);
     }
+    if let Some(addr) = args.get("metrics-addr") {
+        let bound = afd::obs::remote::spawn_metrics_server(addr)?;
+        println!("[afd] metrics endpoint on http://{bound}/metrics");
+    }
+    Ok(())
 }
 
 /// Write the requested trace/stats files and print the per-stage time
@@ -230,7 +243,7 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
     let base = parse_experiment(&args)?;
     install_faults(&base)?;
     let seeds: usize = args.usize("seeds").map_err(|e| anyhow::anyhow!(e))?;
-    init_obs(&args);
+    init_obs(&args)?;
 
     let mut reports = Vec::new();
     for s in 0..seeds as u64 {
@@ -299,7 +312,7 @@ fn cmd_compare(argv: Vec<String>) -> Result<()> {
     let seeds: usize = args.usize("seeds").map_err(|e| anyhow::anyhow!(e))?;
     let afd_kind = if base.data.iid { "afd_single" } else { "afd_multi" };
     let target = base.target_accuracy;
-    init_obs(&args);
+    init_obs(&args)?;
 
     let grid = ExperimentConfig::paper_method_grid(&base, afd_kind);
     let mut rows = Vec::new();
@@ -376,10 +389,10 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         cfg.transport.resume = v == "true" || v == "1";
     }
     let conns: usize = args.usize("conns").map_err(|e| anyhow::anyhow!(e))?;
-    init_obs(&args);
+    init_obs(&args)?;
     let mut tcp_handle: Option<Arc<TcpTransport>> = None;
     let transport: Arc<dyn Transport> = if conns == 0 {
-        Arc::new(Loopback)
+        Arc::new(Loopback::default())
     } else {
         anyhow::ensure!(
             cfg.backend == Backend::Native,

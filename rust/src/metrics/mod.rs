@@ -338,6 +338,25 @@ pub fn render_stage_table() -> Option<String> {
             restores,
         ));
     }
+    // Span-ring pressure: overwritten records mean the trace (and any
+    // shipped telemetry) is missing the oldest spans of a busy thread.
+    let (_, ring_dropped) = crate::obs::span::ring_totals();
+    if ring_dropped > 0 {
+        s.push_str(&format!(
+            "span rings: {ring_dropped} record(s) overwritten before export \
+             (raise RING_CAPACITY or trace a shorter run)\n"
+        ));
+    }
+    // Telemetry side-channel traffic, when remote processes shipped any.
+    let tf = crate::obs::metrics::TELEMETRY_FRAMES.get();
+    if tf > 0 {
+        s.push_str(&format!(
+            "telemetry: {} frame(s), {} on the wire, {} remote span(s) dropped\n",
+            tf,
+            crate::util::human_bytes(crate::obs::metrics::TELEMETRY_BYTES.get()),
+            crate::obs::metrics::TELEMETRY_SPANS_DROPPED.get(),
+        ));
+    }
     Some(s)
 }
 

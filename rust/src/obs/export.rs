@@ -14,6 +14,7 @@ use std::io;
 use std::path::Path;
 
 use super::metrics;
+use super::remote;
 use super::span::{self, SpanRec, Stage, CONN_TRACK_BASE, STAGE_COUNT};
 use crate::util::json::Json;
 
@@ -29,6 +30,7 @@ fn frame_kind_name(tag: usize) -> Option<&'static str> {
         8 => "cut",
         9 => "bye",
         10 => "state_sync",
+        11 => "telemetry",
         _ => return None,
     })
 }
@@ -37,18 +39,23 @@ fn us(ns: u64) -> Json {
     Json::Num(ns as f64 / 1000.0)
 }
 
-fn span_event(tid: u32, s: &SpanRec) -> Json {
+fn span_event(pid: u32, tid: u32, s: &SpanRec) -> Json {
     let mut ev = Json::obj();
-    ev.set("pid", Json::Num(1.0));
+    ev.set("pid", Json::Num(pid as f64));
     ev.set("tid", Json::Num(tid as f64));
     ev.set("ts", us(s.start_ns));
-    if s.stage == Stage::RoundMark {
+    if s.stage.is_instant() {
         ev.set("ph", Json::Str("i".into()));
         ev.set("s", Json::Str("g".into()));
         ev.set("name", Json::Str(s.stage.name().into()));
         let mut args = Json::obj();
-        args.set("round", Json::Num(s.a as f64));
-        args.set("virtual_s", Json::Num(s.b as f64 / 1e9));
+        if s.stage == Stage::RoundMark {
+            args.set("round", Json::Num(s.a as f64));
+            args.set("virtual_s", Json::Num(s.b as f64 / 1e9));
+        } else {
+            args.set("a", Json::Num(s.a as f64));
+            args.set("b", Json::Num(s.b as f64));
+        }
         ev.set("args", args);
     } else {
         ev.set("ph", Json::Str("X".into()));
@@ -63,11 +70,11 @@ fn span_event(tid: u32, s: &SpanRec) -> Json {
     ev
 }
 
-fn thread_name_event(tid: u32, name: &str) -> Json {
+fn thread_name_event(pid: u32, tid: u32, name: &str) -> Json {
     let mut ev = Json::obj();
     ev.set("ph", Json::Str("M".into()));
     ev.set("name", Json::Str("thread_name".into()));
-    ev.set("pid", Json::Num(1.0));
+    ev.set("pid", Json::Num(pid as f64));
     ev.set("tid", Json::Num(tid as f64));
     let mut args = Json::obj();
     args.set("name", Json::Str(name.into()));
@@ -75,25 +82,31 @@ fn thread_name_event(tid: u32, name: &str) -> Json {
     ev
 }
 
-/// Build the whole Chrome trace document from the current rings and
-/// registry.
+fn process_name_event(pid: u32, name: &str) -> Json {
+    let mut ev = Json::obj();
+    ev.set("ph", Json::Str("M".into()));
+    ev.set("name", Json::Str("process_name".into()));
+    ev.set("pid", Json::Num(pid as f64));
+    let mut args = Json::obj();
+    args.set("name", Json::Str(name.into()));
+    ev.set("args", args);
+    ev
+}
+
+/// Build the whole Chrome trace document: the coordinator's own rings
+/// (pid [`remote::COORDINATOR_PID`]) merged with every remote
+/// process's shipped spans, each on its own named `pid` track group
+/// with timestamps realigned onto the coordinator clock.
 pub fn chrome_trace_json() -> Json {
     let threads = span::snapshot();
     let mut events: Vec<Json> = Vec::new();
-    let mut proc_ev = Json::obj();
-    proc_ev.set("ph", Json::Str("M".into()));
-    proc_ev.set("name", Json::Str("process_name".into()));
-    proc_ev.set("pid", Json::Num(1.0));
-    let mut pargs = Json::obj();
-    pargs.set("name", Json::Str("afd".into()));
-    proc_ev.set("args", pargs);
-    events.push(proc_ev);
+    events.push(process_name_event(remote::COORDINATOR_PID, "afd"));
 
     // One named track per registered thread, plus one per TCP
     // connection actually seen in the spans.
     let mut conn_tracks: Vec<u32> = Vec::new();
     for t in &threads {
-        events.push(thread_name_event(t.tid, &t.name));
+        events.push(thread_name_event(remote::COORDINATOR_PID, t.tid, &t.name));
         for s in &t.spans {
             if s.track >= CONN_TRACK_BASE && !conn_tracks.contains(&s.track) {
                 conn_tracks.push(s.track);
@@ -103,6 +116,7 @@ pub fn chrome_trace_json() -> Json {
     conn_tracks.sort_unstable();
     for track in &conn_tracks {
         events.push(thread_name_event(
+            remote::COORDINATOR_PID,
             *track,
             &format!("tcp-conn-{}", track - CONN_TRACK_BASE),
         ));
@@ -115,9 +129,52 @@ pub fn chrome_trace_json() -> Json {
             } else {
                 t.tid
             };
-            events.push(span_event(tid, s));
+            events.push(span_event(remote::COORDINATOR_PID, tid, s));
         }
     }
+
+    // Remote processes: one pid per process, threads and synthetic
+    // tracks named inside it, span timestamps shifted by the
+    // process's clock offset.
+    remote::with_remotes(|procs| {
+        for (idx, p) in procs.iter().enumerate() {
+            let pid = remote::RemoteProc::pid_for(idx);
+            events.push(process_name_event(pid, &p.name));
+            for (tid, name, _) in &p.threads {
+                events.push(thread_name_event(pid, *tid, name));
+            }
+            let mut rtracks: Vec<u32> = Vec::new();
+            for s in &p.spans {
+                if s.track >= CONN_TRACK_BASE && !rtracks.contains(&s.track) {
+                    rtracks.push(s.track);
+                }
+            }
+            rtracks.sort_unstable();
+            for track in &rtracks {
+                events.push(thread_name_event(
+                    pid,
+                    *track,
+                    &format!("tcp-conn-{}", track - CONN_TRACK_BASE),
+                ));
+            }
+            for s in &p.spans {
+                let rec = SpanRec {
+                    stage: s.stage,
+                    track: s.track,
+                    start_ns: p.aligned_ns(s.start_ns),
+                    dur_ns: s.dur_ns,
+                    a: s.a,
+                    b: s.b,
+                };
+                let tid = if s.track >= CONN_TRACK_BASE {
+                    s.track
+                } else {
+                    s.tid
+                };
+                events.push(span_event(pid, tid, &rec));
+            }
+        }
+    });
 
     let mut doc = Json::obj();
     doc.set("traceEvents", Json::Arr(events));
@@ -142,7 +199,7 @@ pub fn write_chrome_trace(path: &Path) -> io::Result<()> {
 pub fn stage_rows() -> Vec<(&'static str, u64, u64, f64, u64, u64)> {
     let mut rows = Vec::with_capacity(STAGE_COUNT);
     for stage in Stage::ALL {
-        if stage == Stage::RoundMark {
+        if stage.is_instant() {
             continue; // instants, not durations
         }
         let h = &metrics::STAGE_NS[stage as usize];
@@ -241,6 +298,18 @@ pub fn stats_json() -> Json {
         "clients_quarantined",
         Json::Num(metrics::CLIENTS_QUARANTINED.get() as f64),
     );
+    counters.set(
+        "telemetry_bytes",
+        Json::Num(metrics::TELEMETRY_BYTES.get() as f64),
+    );
+    counters.set(
+        "telemetry_frames",
+        Json::Num(metrics::TELEMETRY_FRAMES.get() as f64),
+    );
+    counters.set(
+        "telemetry_spans_dropped",
+        Json::Num(metrics::TELEMETRY_SPANS_DROPPED.get() as f64),
+    );
     let mut faults_total = 0u64;
     for site in crate::fault::ALL_SITES {
         let n = metrics::FAULTS_INJECTED[site as usize].get();
@@ -263,6 +332,7 @@ pub fn stats_json() -> Json {
         "pipeline_depth_peak",
         Json::Num(metrics::PIPELINE_DEPTH.get() as f64),
     );
+    gauges.set("round", Json::Num(metrics::CURRENT_ROUND.get() as f64));
 
     let mut sent = Json::obj();
     let mut parsed = Json::obj();
@@ -314,6 +384,47 @@ pub fn stats_json() -> Json {
         "dropped",
         Json::Num(threads.iter().map(|t| t.dropped).sum::<u64>() as f64),
     );
+    let (ring_recorded, ring_dropped) = span::ring_totals();
+    spans.set("ring_recorded", Json::Num(ring_recorded as f64));
+    spans.set("ring_dropped", Json::Num(ring_dropped as f64));
+
+    // Remote telemetry: one object per registered remote process with
+    // its shipped counter totals, span accounting and clock offset.
+    let mut remotes = Json::obj();
+    remote::with_remotes(|procs| {
+        for (idx, p) in procs.iter().enumerate() {
+            let mut r = Json::obj();
+            r.set(
+                "pid",
+                Json::Num(remote::RemoteProc::pid_for(idx) as f64),
+            );
+            r.set("frames", Json::Num(p.frames as f64));
+            r.set("spans", Json::Num(p.spans.len() as f64));
+            r.set("spans_dropped", Json::Num(p.spans_dropped as f64));
+            r.set(
+                "ring_dropped",
+                Json::Num(p.threads.iter().map(|(_, _, d)| *d).sum::<u64>() as f64),
+            );
+            r.set("offset_ns", Json::Num(p.offset_ns as f64));
+            let mut rc = Json::obj();
+            for (id, (name, _)) in metrics::WIRE_COUNTERS.iter().enumerate() {
+                let v = p.counters.get(id).copied().unwrap_or(0);
+                if v > 0 {
+                    rc.set(name, Json::Num(v as f64));
+                }
+            }
+            r.set("counters", rc);
+            let mut rg = Json::obj();
+            for (id, (name, _)) in metrics::WIRE_GAUGES.iter().enumerate() {
+                let v = p.gauges.get(id).copied().unwrap_or(0);
+                if v > 0 {
+                    rg.set(name, Json::Num(v as f64));
+                }
+            }
+            r.set("gauges", rg);
+            remotes.set(&p.name, r);
+        }
+    });
 
     let mut log = Json::obj();
     log.set(
@@ -328,6 +439,7 @@ pub fn stats_json() -> Json {
     doc.set("conn_round_trips", conns);
     doc.set("stages", stages);
     doc.set("spans", spans);
+    doc.set("remote", remotes);
     doc.set("log", log);
     doc
 }
@@ -353,17 +465,79 @@ mod tests {
         let doc = stats_json();
         let text = doc.to_string_pretty();
         let back = crate::util::json::parse(&text).unwrap();
-        for key in ["counters", "gauges", "frames", "stages", "spans", "log"] {
+        for key in [
+            "counters", "gauges", "frames", "stages", "spans", "remote", "log",
+        ] {
             assert!(back.get(key).is_some(), "missing {key}");
         }
-        // Every duration stage has a row (round marker excluded).
+        // Every duration stage has a row (instant markers excluded).
         let stages = back.get("stages").unwrap();
         for stage in Stage::ALL {
-            if stage != Stage::RoundMark {
+            if stage.is_instant() {
+                assert!(stages.get(stage.name()).is_none(), "{}", stage.name());
+            } else {
                 assert!(stages.get(stage.name()).is_some(), "{}", stage.name());
             }
         }
         assert!(stages.get("round").is_none());
+        let counters = back.get("counters").unwrap();
+        assert!(counters.get("telemetry_bytes").is_some());
+        assert!(counters.get("telemetry_frames").is_some());
+    }
+
+    #[test]
+    fn merged_trace_gives_each_remote_process_its_own_pid() {
+        let name = format!("export-test-proc-{}", line!());
+        let id = remote::register(&name);
+        remote::anchor_at(id, 1_000, 2_000);
+        let mut payload = Vec::new();
+        {
+            use crate::transport::frame::TelemetryEncoder;
+            let mut enc = TelemetryEncoder::begin(&mut payload, 1, 1_500);
+            enc.begin_threads();
+            enc.begin_thread(0, "worker", 0);
+            enc.span(Stage::Train as u8, 0, 1_100, 50, 7, 8);
+            enc.end_threads();
+            enc.begin_counters();
+            enc.end_counters();
+            enc.begin_gauges();
+            enc.end_gauges();
+            enc.begin_hists();
+            enc.end_hists();
+            enc.finish();
+        }
+        let view = crate::transport::frame::parse_frame(&payload).unwrap().0;
+        let msg = crate::transport::frame::parse_telemetry(&view).unwrap();
+        remote::ingest_at(id, &msg, 2_500);
+
+        let doc = chrome_trace_json();
+        let back = crate::util::json::parse(&doc.to_string_compact()).unwrap();
+        let events = back.get("traceEvents").unwrap().as_arr().unwrap();
+        // The remote process got a process_name metadata event with a
+        // pid other than the coordinator's.
+        let named = events.iter().any(|e| {
+            e.get("name").and_then(|n| n.as_str()) == Some("process_name")
+                && e.get("args")
+                    .and_then(|a| a.get("name"))
+                    .and_then(|n| n.as_str())
+                    == Some(name.as_str())
+                && e.get("pid").and_then(|p| p.as_f64())
+                    != Some(remote::COORDINATOR_PID as f64)
+        });
+        assert!(named, "remote process_name event missing");
+        // Its train span landed on the same pid, clock-aligned
+        // (offset 1000ns => start 2100ns => ts 2.1us).
+        let span_ok = events.iter().any(|e| {
+            e.get("name").and_then(|n| n.as_str()) == Some("train")
+                && e.get("pid").and_then(|p| p.as_f64())
+                    != Some(remote::COORDINATOR_PID as f64)
+                && e.get("ts").and_then(|t| t.as_f64()) == Some(2.1)
+        });
+        assert!(span_ok, "aligned remote span missing");
+        // And the stats dump carries its counter totals.
+        let stats = back.get("afd_stats").unwrap();
+        let rem = stats.get("remote").unwrap().get(&name).unwrap();
+        assert_eq!(rem.get("spans").and_then(|s| s.as_f64()), Some(1.0));
     }
 
     #[test]

@@ -166,6 +166,12 @@ impl Histogram {
         u64::MAX
     }
 
+    /// Raw occupancy of bucket `i` — the telemetry shipper reads every
+    /// bucket to compute per-round deltas.
+    pub fn bucket_count(&self, i: usize) -> u64 {
+        self.buckets[i].load(Ordering::Relaxed)
+    }
+
     pub fn reset(&self) {
         for b in &self.buckets {
             b.store(0, Ordering::Relaxed);
@@ -229,6 +235,15 @@ pub static CHECKPOINT_BYTES: Counter = Counter::new();
 pub static RESTORES: Counter = Counter::new();
 /// Clients quarantined after repeated faults (see `fault/README.md`).
 pub static CLIENTS_QUARANTINED: Counter = Counter::new();
+/// `Telemetry` frame wire bytes received by the coordinator. Like
+/// [`RESYNC_BYTES`], a side channel excluded from `RoundRecord`
+/// accounting so telemetry-on runs stay byte-identical.
+pub static TELEMETRY_BYTES: Counter = Counter::new();
+/// `Telemetry` frames merged by the coordinator.
+pub static TELEMETRY_FRAMES: Counter = Counter::new();
+/// Remote spans discarded because a remote process hit its merge-side
+/// storage cap (`obs::remote::REMOTE_SPAN_CAP`).
+pub static TELEMETRY_SPANS_DROPPED: Counter = Counter::new();
 
 /// Injected faults by `fault::Site` discriminant. Incremented by
 /// `fault::should` itself (unconditionally — fault accounting is part
@@ -247,8 +262,56 @@ pub static RESIDENT_BYTES_PEAK: Gauge = Gauge::new();
 /// TCP coordinator: pipelined offers in flight on one connection
 /// (high-water mark across all connections).
 pub static PIPELINE_DEPTH: Gauge = Gauge::new();
+/// Round the coordinator is currently driving (live stats endpoint).
+pub static CURRENT_ROUND: Gauge = Gauge::new();
 
-/// Frame counts by `FrameKind as u8` (slot 0 unused; kinds are 1-10).
+/// Stable wire ids for the counters a `Telemetry` frame ships: the
+/// array index is the id byte on the wire, the name is the stats key.
+/// Append-only — reordering entries would silently misattribute
+/// remote totals between binaries of different ages.
+pub static WIRE_COUNTERS: [(&str, &Counter); 31] = [
+    ("bytes_down_wire", &BYTES_DOWN_WIRE),
+    ("bytes_up_wire", &BYTES_UP_WIRE),
+    ("bytes_down_payload", &BYTES_DOWN_PAYLOAD),
+    ("bytes_up_payload", &BYTES_UP_PAYLOAD),
+    ("crc_failures", &CRC_FAILURES),
+    ("stragglers_cut", &STRAGGLERS_CUT),
+    ("clients_dropped", &CLIENTS_DROPPED),
+    ("clients_lost", &CLIENTS_LOST),
+    ("transport_timeouts", &TRANSPORT_TIMEOUTS),
+    ("conn_reconnects", &CONN_RECONNECTS),
+    ("resync_bytes", &RESYNC_BYTES),
+    ("rounds_completed", &ROUNDS_COMPLETED),
+    ("evals_run", &EVALS_RUN),
+    ("residual_store_hits", &RESIDUAL_STORE_HITS),
+    ("residual_store_misses", &RESIDUAL_STORE_MISSES),
+    ("residual_store_evictions", &RESIDUAL_STORE_EVICTIONS),
+    ("residual_store_spilled_bytes", &RESIDUAL_STORE_SPILLED_BYTES),
+    ("checkpoints_written", &CHECKPOINTS_WRITTEN),
+    ("checkpoint_bytes", &CHECKPOINT_BYTES),
+    ("restores", &RESTORES),
+    ("clients_quarantined", &CLIENTS_QUARANTINED),
+    ("faults_sock_write", &FAULTS_INJECTED[0]),
+    ("faults_sock_read", &FAULTS_INJECTED[1]),
+    ("faults_partial_write", &FAULTS_INJECTED[2]),
+    ("faults_frame_corrupt", &FAULTS_INJECTED[3]),
+    ("faults_frame_delay", &FAULTS_INJECTED[4]),
+    ("faults_frame_dup", &FAULTS_INJECTED[5]),
+    ("faults_spill_truncate", &FAULTS_INJECTED[6]),
+    ("faults_spill_corrupt", &FAULTS_INJECTED[7]),
+    ("faults_worker_panic", &FAULTS_INJECTED[8]),
+    ("faults_clock_stall", &FAULTS_INJECTED[9]),
+];
+
+/// Stable wire ids for gauges, mirroring [`WIRE_COUNTERS`].
+pub static WIRE_GAUGES: [(&str, &Gauge); 4] = [
+    ("queue_depth_peak", &QUEUE_DEPTH),
+    ("pool_width", &POOL_WIDTH),
+    ("resident_bytes_peak", &RESIDENT_BYTES_PEAK),
+    ("pipeline_depth_peak", &PIPELINE_DEPTH),
+];
+
+/// Frame counts by `FrameKind as u8` (slot 0 unused; kinds are 1-11).
 pub const FRAME_KIND_SLOTS: usize = 16;
 
 // Repeat-initializers for the static arrays below; only ever used in
@@ -307,6 +370,9 @@ pub fn reset_all() {
         &CHECKPOINT_BYTES,
         &RESTORES,
         &CLIENTS_QUARANTINED,
+        &TELEMETRY_BYTES,
+        &TELEMETRY_FRAMES,
+        &TELEMETRY_SPANS_DROPPED,
     ] {
         c.reset();
     }
@@ -317,6 +383,7 @@ pub fn reset_all() {
     POOL_WIDTH.reset();
     RESIDENT_BYTES_PEAK.reset();
     PIPELINE_DEPTH.reset();
+    CURRENT_ROUND.reset();
     for c in FRAMES_SENT.iter().chain(FRAMES_PARSED.iter()) {
         c.reset();
     }

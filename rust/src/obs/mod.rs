@@ -7,22 +7,31 @@
 //! per TCP connection. The upcoming adaptive bandwidth controller
 //! (ROADMAP) reads its signals from here.
 //!
-//! Three pieces:
+//! Four pieces:
 //!
 //! * [`span`] — an RAII span recorder writing fixed-size records into
 //!   **preallocated per-thread ring buffers** (no locks, no heap on
 //!   the warm path). Spans carry monotonic wall-clock timestamps;
 //!   round markers additionally carry the scheduler's *virtual* clock
-//!   so simulated time can be lined up with real time.
+//!   so simulated time can be lined up with real time. Fault
+//!   injections, quarantines, checkpoints, restores and session
+//!   resumes are instant-only stages on the same rings.
 //! * [`metrics`] — atomic counters/gauges and fixed-size log-bucketed
 //!   histograms in a static registry (bytes per direction, frames by
 //!   kind, CRC failures, stragglers cut, queue depth, per-connection
 //!   round-trips, per-stage latency).
 //! * [`export`] — Chrome trace-event JSON (`afd … --trace-out
 //!   trace.json`, loadable in Perfetto / `chrome://tracing`; one track
-//!   per worker thread plus one per TCP connection) and a stats JSON
-//!   dump (`--stats-out`), plus the per-stage breakdown table printed
-//!   next to the experiment summary.
+//!   per worker thread plus one per TCP connection, one process group
+//!   per remote client process) and a stats JSON dump (`--stats-out`),
+//!   plus the per-stage breakdown table printed next to the experiment
+//!   summary.
+//! * [`remote`] — the distributed telemetry plane: a client-side
+//!   [`remote::Shipper`] that delta-encodes local rings/counters into
+//!   `Telemetry` wire frames, a coordinator-side merge registry that
+//!   aligns remote monotonic clocks onto the coordinator's, and a live
+//!   HTTP stats endpoint (`--metrics-addr`, Prometheus text +
+//!   machine-readable JSON snapshot).
 //!
 //! ## The two load-bearing contracts
 //!
@@ -49,6 +58,7 @@
 
 pub mod export;
 pub mod metrics;
+pub mod remote;
 pub mod span;
 
 pub use span::{
@@ -92,6 +102,7 @@ pub fn init_from_env() {
 pub fn reset() {
     span::reset_rings();
     metrics::reset_all();
+    remote::reset();
 }
 
 /// Unit tests that toggle the global enable flag serialize on this

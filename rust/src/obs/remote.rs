@@ -1,0 +1,648 @@
+//! The distributed telemetry plane: client-side snapshot shipping and
+//! coordinator-side merging, plus the live stats endpoint.
+//!
+//! Since the federation became multi-process, every remote `afd
+//! client` recorded spans, counters and histograms that died inside
+//! its own process. This module closes the loop:
+//!
+//! * **[`Shipper`]** (client side) encodes incremental snapshots —
+//!   new span-ring records, counter/gauge deltas, stage-histogram
+//!   deltas — into `Telemetry` frames, piggybacked after `UpdateUp`
+//!   at round boundaries. Every buffer is preallocated, so a warm
+//!   snapshot encode makes zero heap allocations (the telemetry-armed
+//!   row of `tests/zero_alloc.rs`).
+//! * **The merge registry** (coordinator side) assigns each remote
+//!   process its own Chrome-trace `pid`, accumulates its counter
+//!   totals, and realigns its span timestamps onto the coordinator's
+//!   monotonic clock so one trace covers the whole federation.
+//! * **[`spawn_metrics_server`]** serves a Prometheus-style text
+//!   exposition (`GET /metrics`) and a machine-readable JSON snapshot
+//!   (`GET /snapshot`) from a background thread, so a running
+//!   federation can be watched mid-flight (`afd serve
+//!   --metrics-addr`).
+//!
+//! ## Clock alignment
+//!
+//! Each process timestamps spans against its own pinned monotonic
+//! epoch, so remote readings are meaningless on the coordinator's
+//! axis until shifted by a per-process offset. Two sources feed the
+//! estimate, both of the form `offset = coordinator_now − remote_now`
+//! sampled when a frame carrying `remote_now` arrives:
+//!
+//! 1. **Handshake**: `Ready` carries the client's clock; the first
+//!    sample seeds the offset.
+//! 2. **Round anchors**: every `Telemetry` frame carries a fresh
+//!    reading; since network latency only ever *inflates* a sample
+//!    (the coordinator reads its clock strictly after the remote
+//!    read), the running **minimum** over samples converges onto the
+//!    true offset from above. Alignment error is bounded by the best
+//!    one-way latency ever observed.
+//!
+//! Offsets can be negative (a client that pinned its epoch before the
+//! coordinator); aligned timestamps clamp at zero.
+//!
+//! ## Byte accounting
+//!
+//! Telemetry is a pure side channel: its wire bytes land in
+//! `TELEMETRY_BYTES` (like `RESYNC_BYTES`), never in
+//! `RoundRecord::{down,up}_bytes` — a telemetry-armed fixed-seed run
+//! is byte-identical (JSONL + model hash) to a telemetry-off run
+//! (`tests/obs_distributed.rs`).
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use super::metrics::{self, HIST_BUCKETS};
+use super::span::{self, Stage, RING_CAPACITY, STAGE_COUNT};
+use crate::transport::frame;
+
+// ---------------------------------------------------------------------
+// Client side: the shipper
+// ---------------------------------------------------------------------
+
+/// Incremental telemetry snapshot encoder for one process. Owns the
+/// "what did I already ship" cursors: per-ring heads, per-counter and
+/// per-gauge last values, per-stage histogram bucket occupancies. All
+/// state is preallocated at construction; [`Shipper::encode_into`] on
+/// a warm sink allocates nothing.
+pub struct Shipper {
+    ring_heads: Vec<(u32, usize)>,
+    last_counters: Vec<u64>,
+    last_gauges: Vec<u64>,
+    last_hist_count: Vec<u64>,
+    last_hist_sum: Vec<u64>,
+    last_hist_buckets: Vec<u64>,
+}
+
+impl Default for Shipper {
+    fn default() -> Shipper {
+        Shipper::new()
+    }
+}
+
+impl Shipper {
+    pub fn new() -> Shipper {
+        Shipper {
+            ring_heads: Vec::with_capacity(64),
+            last_counters: vec![0; metrics::WIRE_COUNTERS.len()],
+            last_gauges: vec![0; metrics::WIRE_GAUGES.len()],
+            last_hist_count: vec![0; STAGE_COUNT],
+            last_hist_sum: vec![0; STAGE_COUNT],
+            last_hist_buckets: vec![0; STAGE_COUNT * HIST_BUCKETS],
+        }
+    }
+
+    /// Encode one incremental snapshot as a complete `Telemetry` frame
+    /// appended to `out` (not cleared). Ships only what is new since
+    /// the previous call; a quiet process encodes four zero counts
+    /// (40 bytes on the wire).
+    pub fn encode_into(&mut self, out: &mut Vec<u8>, round: u32) {
+        let now = span::monotonic_ns();
+        let mut enc = frame::TelemetryEncoder::begin(out, round, now);
+
+        enc.begin_threads();
+        let mut threads = 0usize;
+        span::for_each_ring(|ring| {
+            if threads >= frame::MAX_TELEMETRY_THREADS {
+                return;
+            }
+            let tid = ring.tid();
+            let head = ring.head();
+            let last = match self.ring_heads.iter_mut().find(|(t, _)| *t == tid) {
+                Some(s) => s,
+                None => {
+                    self.ring_heads.push((tid, 0));
+                    self.ring_heads.last_mut().unwrap()
+                }
+            };
+            if head <= last.1 {
+                // Nothing new (a rewound ring after obs::reset starts
+                // a fresh cursor).
+                if head < last.1 {
+                    last.1 = head;
+                }
+                return;
+            }
+            // Oldest record still in the ring, and the cap on how many
+            // we put in one frame; everything older ships as drops.
+            let surviving = head.saturating_sub(RING_CAPACITY).max(last.1);
+            let from = head - (head - surviving).min(frame::MAX_TELEMETRY_SPANS);
+            let dropped = (from - last.1) as u64;
+            enc.begin_thread(tid, ring.name(), dropped);
+            threads += 1;
+            for i in from..head {
+                let (meta, start_ns, dur_ns, a, b) = ring.read_raw(i);
+                let stage = (meta & 0xff) as u8;
+                if stage as usize >= STAGE_COUNT {
+                    continue;
+                }
+                enc.span(stage, (meta >> 8) as u32, start_ns, dur_ns, a, b);
+            }
+            last.1 = head;
+        });
+        enc.end_threads();
+
+        enc.begin_counters();
+        for (i, (_, c)) in metrics::WIRE_COUNTERS.iter().enumerate() {
+            let v = c.get();
+            let d = v.saturating_sub(self.last_counters[i]);
+            if d != 0 || v < self.last_counters[i] {
+                enc.counter(i as u8, d);
+            }
+            self.last_counters[i] = v;
+        }
+        enc.end_counters();
+
+        enc.begin_gauges();
+        for (i, (_, g)) in metrics::WIRE_GAUGES.iter().enumerate() {
+            let v = g.get();
+            if v != self.last_gauges[i] {
+                enc.gauge(i as u8, v);
+                self.last_gauges[i] = v;
+            }
+        }
+        enc.end_gauges();
+
+        enc.begin_hists();
+        for s in 0..STAGE_COUNT {
+            let h = &metrics::STAGE_NS[s];
+            let count = h.count();
+            let d_count = count.saturating_sub(self.last_hist_count[s]);
+            if d_count == 0 {
+                self.last_hist_count[s] = count;
+                continue;
+            }
+            let sum = h.sum();
+            enc.begin_hist(
+                s as u8,
+                d_count,
+                sum.saturating_sub(self.last_hist_sum[s]),
+            );
+            self.last_hist_count[s] = count;
+            self.last_hist_sum[s] = sum;
+            for bkt in 0..HIST_BUCKETS {
+                let v = h.bucket_count(bkt);
+                let at = s * HIST_BUCKETS + bkt;
+                let d = v.saturating_sub(self.last_hist_buckets[at]);
+                if d != 0 {
+                    enc.bucket(bkt as u8, d);
+                }
+                self.last_hist_buckets[at] = v;
+            }
+        }
+        enc.end_hists();
+        enc.finish();
+    }
+}
+
+// ---------------------------------------------------------------------
+// Coordinator side: the merge registry
+// ---------------------------------------------------------------------
+
+/// Spans stored per remote process before the exporter runs; beyond
+/// this the oldest stay and later arrivals count as
+/// `TELEMETRY_SPANS_DROPPED`.
+pub const REMOTE_SPAN_CAP: usize = 65536;
+
+/// Chrome-trace `pid` of the coordinator process itself; remote
+/// processes get `FIRST_REMOTE_PID + index`.
+pub const COORDINATOR_PID: u32 = 1;
+pub const FIRST_REMOTE_PID: u32 = 2;
+
+/// One span shipped by a remote process, timestamps still on the
+/// *remote* clock (aligned at export via the process offset).
+#[derive(Clone, Debug)]
+pub struct RemoteSpan {
+    pub tid: u32,
+    pub stage: Stage,
+    pub track: u32,
+    pub start_ns: u64,
+    pub dur_ns: u64,
+    pub a: u64,
+    pub b: u64,
+}
+
+/// One remote process's merged telemetry.
+pub struct RemoteProc {
+    pub name: String,
+    /// `coordinator_ns ≈ remote_ns + offset_ns` (see module docs).
+    pub offset_ns: i64,
+    anchored: bool,
+    /// `(tid, thread name, ring drops reported by the remote)`.
+    pub threads: Vec<(u32, String, u64)>,
+    pub spans: Vec<RemoteSpan>,
+    /// Spans discarded at [`REMOTE_SPAN_CAP`].
+    pub spans_dropped: u64,
+    /// Totals per [`metrics::WIRE_COUNTERS`] id.
+    pub counters: Vec<u64>,
+    /// Latest per [`metrics::WIRE_GAUGES`] id (peaks ship as peaks).
+    pub gauges: Vec<u64>,
+    /// Per-stage histogram totals (count, sum ns).
+    pub hist_count: Vec<u64>,
+    pub hist_sum: Vec<u64>,
+    /// Telemetry frames merged from this process.
+    pub frames: u64,
+}
+
+impl RemoteProc {
+    fn new(name: String) -> RemoteProc {
+        RemoteProc {
+            name,
+            offset_ns: 0,
+            anchored: false,
+            threads: Vec::new(),
+            spans: Vec::new(),
+            spans_dropped: 0,
+            counters: vec![0; metrics::WIRE_COUNTERS.len()],
+            gauges: vec![0; metrics::WIRE_GAUGES.len()],
+            hist_count: vec![0; STAGE_COUNT],
+            hist_sum: vec![0; STAGE_COUNT],
+            frames: 0,
+        }
+    }
+
+    /// Shift a remote clock reading onto the coordinator timeline.
+    pub fn aligned_ns(&self, remote_ns: u64) -> u64 {
+        (remote_ns as i64).saturating_add(self.offset_ns).max(0) as u64
+    }
+
+    /// Chrome-trace pid for remote process index `idx`.
+    pub fn pid_for(idx: usize) -> u32 {
+        FIRST_REMOTE_PID + idx as u32
+    }
+
+    fn anchor(&mut self, remote_now_ns: u64, coord_now_ns: u64) {
+        let sample = (coord_now_ns as i64).saturating_sub(remote_now_ns as i64);
+        if !self.anchored {
+            self.offset_ns = sample;
+            self.anchored = true;
+        } else {
+            // Latency only inflates samples; the minimum is tightest.
+            self.offset_ns = self.offset_ns.min(sample);
+        }
+    }
+}
+
+static REMOTES: Mutex<Vec<RemoteProc>> = Mutex::new(Vec::new());
+
+fn remotes() -> std::sync::MutexGuard<'static, Vec<RemoteProc>> {
+    REMOTES.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Register (or look up) a remote process by name and return its
+/// index. A reconnecting process re-registers under the same name and
+/// keeps its track and totals.
+pub fn register(name: &str) -> usize {
+    let mut r = remotes();
+    if let Some(i) = r.iter().position(|p| p.name == name) {
+        return i;
+    }
+    r.push(RemoteProc::new(name.to_string()));
+    r.len() - 1
+}
+
+/// Feed one clock-offset sample for process `id` (handshake-time
+/// exchange): `remote_now_ns` is the reading the remote sent,
+/// sampled against the coordinator clock now.
+pub fn anchor(id: usize, remote_now_ns: u64) {
+    anchor_at(id, remote_now_ns, span::monotonic_ns());
+}
+
+/// Deterministic core of [`anchor`], split out for tests.
+pub fn anchor_at(id: usize, remote_now_ns: u64, coord_now_ns: u64) {
+    let mut r = remotes();
+    if let Some(p) = r.get_mut(id) {
+        p.anchor(remote_now_ns, coord_now_ns);
+    }
+}
+
+/// Merge one parsed `Telemetry` frame into process `id`: refine the
+/// clock offset with the frame's anchor, accumulate counter/gauge and
+/// histogram deltas, and append new spans (bounded by
+/// [`REMOTE_SPAN_CAP`]).
+pub fn ingest(id: usize, msg: &frame::TelemetryMsg) {
+    ingest_at(id, msg, span::monotonic_ns());
+}
+
+/// Deterministic core of [`ingest`], split out for tests.
+pub fn ingest_at(id: usize, msg: &frame::TelemetryMsg, coord_now_ns: u64) {
+    let mut r = remotes();
+    let Some(p) = r.get_mut(id) else {
+        return;
+    };
+    p.anchor(msg.sender_now_ns, coord_now_ns);
+    p.frames += 1;
+    metrics::TELEMETRY_FRAMES.incr();
+    for t in &msg.threads {
+        match p.threads.iter_mut().find(|(tid, _, _)| *tid == t.tid) {
+            Some(entry) => {
+                entry.2 += t.dropped;
+                if entry.1 != t.name {
+                    entry.1 = t.name.clone();
+                }
+            }
+            None => p.threads.push((t.tid, t.name.clone(), t.dropped)),
+        }
+        for s in &t.spans {
+            if p.spans.len() >= REMOTE_SPAN_CAP {
+                p.spans_dropped += 1;
+                metrics::TELEMETRY_SPANS_DROPPED.incr();
+                continue;
+            }
+            let Some(stage) = Stage::from_u8(s.stage) else {
+                continue;
+            };
+            p.spans.push(RemoteSpan {
+                tid: t.tid,
+                stage,
+                track: s.track,
+                start_ns: s.start_ns,
+                dur_ns: s.dur_ns,
+                a: s.a,
+                b: s.b,
+            });
+        }
+    }
+    for &(cid, delta) in &msg.counters {
+        if let Some(slot) = p.counters.get_mut(cid as usize) {
+            *slot = slot.saturating_add(delta);
+        }
+    }
+    for &(gid, value) in &msg.gauges {
+        if let Some(slot) = p.gauges.get_mut(gid as usize) {
+            *slot = (*slot).max(value);
+        }
+    }
+    for h in &msg.hists {
+        let s = h.stage as usize;
+        if s < STAGE_COUNT {
+            p.hist_count[s] = p.hist_count[s].saturating_add(h.d_count);
+            p.hist_sum[s] = p.hist_sum[s].saturating_add(h.d_sum);
+        }
+    }
+}
+
+/// Run `f` over the merged remote processes (export side).
+pub fn with_remotes<R>(f: impl FnOnce(&[RemoteProc]) -> R) -> R {
+    f(&remotes())
+}
+
+/// Number of registered remote processes.
+pub fn remote_count() -> usize {
+    remotes().len()
+}
+
+/// Forget every remote process (tests and back-to-back runs; called
+/// by [`crate::obs::reset`]).
+pub fn reset() {
+    remotes().clear();
+}
+
+// ---------------------------------------------------------------------
+// Live stats endpoint
+// ---------------------------------------------------------------------
+
+/// Bind `addr` and serve the live stats endpoint from a background
+/// thread: `GET /metrics` returns a Prometheus-style text exposition,
+/// `GET /snapshot` (or any other path) the full machine-readable JSON
+/// stats dump (the same document `--stats-out` writes, plus the
+/// current round). Returns the bound address (pass port 0 for an
+/// ephemeral one). The thread serves until the process exits.
+pub fn spawn_metrics_server(addr: &str) -> std::io::Result<SocketAddr> {
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    std::thread::Builder::new()
+        .name("afd-metrics".into())
+        .spawn(move || {
+            for stream in listener.incoming() {
+                let Ok(mut s) = stream else { continue };
+                let _ = serve_one(&mut s);
+            }
+        })?;
+    Ok(local)
+}
+
+fn serve_one(s: &mut TcpStream) -> std::io::Result<()> {
+    s.set_read_timeout(Some(Duration::from_millis(500)))?;
+    s.set_write_timeout(Some(Duration::from_millis(2000)))?;
+    let mut buf = [0u8; 2048];
+    let n = s.read(&mut buf).unwrap_or(0);
+    let head = String::from_utf8_lossy(&buf[..n]);
+    let path = head
+        .lines()
+        .next()
+        .and_then(|l| l.split_whitespace().nth(1))
+        .unwrap_or("/metrics")
+        .to_string();
+    let (ctype, body) = if path.starts_with("/metrics") {
+        ("text/plain; version=0.0.4", prometheus_text())
+    } else {
+        ("application/json", super::export::stats_json().to_string_compact())
+    };
+    write!(
+        s,
+        "HTTP/1.1 200 OK\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    )?;
+    s.write_all(body.as_bytes())
+}
+
+/// Render the Prometheus text exposition: every wire counter and
+/// gauge, the live round, telemetry side-channel totals, per-stage
+/// p50/p99/count/sum from `STAGE_NS`, and the remote process count.
+pub fn prometheus_text() -> String {
+    use std::fmt::Write as _;
+    let mut out = String::with_capacity(4096);
+    for (name, c) in metrics::WIRE_COUNTERS.iter() {
+        let _ = writeln!(out, "# TYPE afd_{name} counter\nafd_{name} {}", c.get());
+    }
+    for (name, g) in metrics::WIRE_GAUGES.iter() {
+        let _ = writeln!(out, "# TYPE afd_{name} gauge\nafd_{name} {}", g.get());
+    }
+    let _ = writeln!(
+        out,
+        "# TYPE afd_round gauge\nafd_round {}",
+        metrics::CURRENT_ROUND.get()
+    );
+    for (name, v) in [
+        ("telemetry_bytes", metrics::TELEMETRY_BYTES.get()),
+        ("telemetry_frames", metrics::TELEMETRY_FRAMES.get()),
+        (
+            "telemetry_spans_dropped",
+            metrics::TELEMETRY_SPANS_DROPPED.get(),
+        ),
+    ] {
+        let _ = writeln!(out, "# TYPE afd_{name} counter\nafd_{name} {v}");
+    }
+    let _ = writeln!(out, "# TYPE afd_stage_ns summary");
+    for stage in Stage::ALL.iter().filter(|s| !s.is_instant()) {
+        let h = &metrics::STAGE_NS[*stage as usize];
+        if h.count() == 0 {
+            continue;
+        }
+        let name = stage.name();
+        let _ = writeln!(
+            out,
+            "afd_stage_ns{{stage=\"{name}\",quantile=\"0.5\"}} {}",
+            h.quantile(0.5)
+        );
+        let _ = writeln!(
+            out,
+            "afd_stage_ns{{stage=\"{name}\",quantile=\"0.99\"}} {}",
+            h.quantile(0.99)
+        );
+        let _ = writeln!(out, "afd_stage_ns_sum{{stage=\"{name}\"}} {}", h.sum());
+        let _ = writeln!(out, "afd_stage_ns_count{{stage=\"{name}\"}} {}", h.count());
+    }
+    let _ = writeln!(
+        out,
+        "# TYPE afd_remote_processes gauge\nafd_remote_processes {}",
+        remote_count()
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn unique_name(tag: &str) -> String {
+        // Names key the registry; keep tests independent of each other
+        // even though they share the process-global state.
+        use std::sync::atomic::{AtomicU32, Ordering};
+        static N: AtomicU32 = AtomicU32::new(0);
+        format!("test-proc-{tag}-{}", N.fetch_add(1, Ordering::Relaxed))
+    }
+
+    #[test]
+    fn offset_estimate_is_min_over_samples() {
+        let id = register(&unique_name("offset"));
+        anchor_at(id, 1_000, 1_500); // +500 (handshake, latency-inflated)
+        anchor_at(id, 2_000, 2_120); // +120 (tighter round anchor)
+        anchor_at(id, 3_000, 3_400); // +400 (slow sample; ignored)
+        with_remotes(|procs| {
+            let p = &procs[id];
+            assert_eq!(p.offset_ns, 120);
+            assert_eq!(p.aligned_ns(2_000), 2_120);
+        });
+    }
+
+    #[test]
+    fn negative_offsets_align_and_clamp() {
+        let id = register(&unique_name("negative"));
+        anchor_at(id, 10_000, 4_000); // remote epoch pinned first
+        with_remotes(|procs| {
+            let p = &procs[id];
+            assert_eq!(p.offset_ns, -6_000);
+            assert_eq!(p.aligned_ns(10_500), 4_500);
+            assert_eq!(p.aligned_ns(1_000), 0); // clamped
+        });
+    }
+
+    #[test]
+    fn register_is_idempotent_by_name() {
+        let name = unique_name("idem");
+        let a = register(&name);
+        let b = register(&name);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn ingest_merges_counters_spans_and_hists() {
+        let id = register(&unique_name("ingest"));
+        let mut out = Vec::new();
+        let mut enc = frame::TelemetryEncoder::begin(&mut out, 3, 500);
+        enc.begin_threads();
+        enc.begin_thread(0, "main", 2);
+        enc.span(Stage::Train as u8, 0, 100, 50, 3, 9);
+        enc.span(Stage::FaultMark as u8, 0, 160, 0, 1, 7);
+        enc.end_threads();
+        enc.begin_counters();
+        enc.counter(11, 5); // rounds_completed
+        enc.end_counters();
+        enc.begin_gauges();
+        enc.gauge(0, 4);
+        enc.end_gauges();
+        enc.begin_hists();
+        enc.begin_hist(Stage::Train as u8, 1, 50);
+        enc.bucket(6, 1);
+        enc.end_hists();
+        enc.finish();
+        let (view, _) = frame::parse_frame(&out).unwrap();
+        let msg = frame::parse_telemetry(&view).unwrap();
+
+        ingest_at(id, &msg, 800); // offset = 300
+        ingest_at(id, &msg, 700); // offset min → 200; totals double
+        with_remotes(|procs| {
+            let p = &procs[id];
+            assert_eq!(p.offset_ns, 200);
+            assert_eq!(p.frames, 2);
+            assert_eq!(p.threads, vec![(0, "main".to_string(), 4)]);
+            assert_eq!(p.spans.len(), 4);
+            assert_eq!(p.spans[0].stage, Stage::Train);
+            assert_eq!(p.aligned_ns(p.spans[0].start_ns), 300);
+            assert_eq!(p.spans[1].stage, Stage::FaultMark);
+            assert_eq!(p.counters[11], 10);
+            assert_eq!(p.gauges[0], 4);
+            assert_eq!(p.hist_count[Stage::Train as usize], 2);
+            assert_eq!(p.hist_sum[Stage::Train as usize], 100);
+        });
+    }
+
+    #[test]
+    fn shipper_ships_deltas_not_totals() {
+        let mut sh = Shipper::new();
+        let mut out = Vec::new();
+        sh.encode_into(&mut out, 1);
+        let (view, used) = frame::parse_frame(&out).unwrap();
+        assert_eq!(used, out.len());
+        let first = frame::parse_telemetry(&view).unwrap();
+        assert_eq!(first.round, 1);
+        // Immediately shipping again: ring cursors and counter
+        // baselines advanced, so the second frame carries no spans for
+        // already-shipped records.
+        let mark = out.len();
+        sh.encode_into(&mut out, 2);
+        let (view, _) = frame::parse_frame(&out[mark..]).unwrap();
+        let second = frame::parse_telemetry(&view).unwrap();
+        assert_eq!(second.round, 2);
+        for t in &second.threads {
+            assert!(
+                t.spans.is_empty() || t.spans.len() < RING_CAPACITY,
+                "re-ship must not resend full rings"
+            );
+        }
+    }
+
+    #[test]
+    fn metrics_endpoint_serves_prometheus_and_json() {
+        let addr = spawn_metrics_server("127.0.0.1:0").expect("bind");
+        for (path, needle) in [
+            ("/metrics", "# TYPE afd_rounds_completed counter"),
+            ("/snapshot", "\"counters\""),
+        ] {
+            let mut s = TcpStream::connect(addr).expect("connect");
+            write!(s, "GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+            let mut body = String::new();
+            s.read_to_string(&mut body).expect("read");
+            assert!(body.starts_with("HTTP/1.1 200 OK\r\n"), "{body}");
+            assert!(body.contains(needle), "{path} missing {needle}: {body}");
+        }
+    }
+
+    #[test]
+    fn prometheus_text_is_line_shaped() {
+        metrics::ROUNDS_COMPLETED.add(0);
+        let text = prometheus_text();
+        assert!(text.contains("# TYPE afd_round gauge"));
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let mut parts = line.split_whitespace();
+            let (name, value) = (parts.next().unwrap(), parts.next().unwrap());
+            assert!(name.starts_with("afd_"), "{line}");
+            assert!(value.parse::<f64>().is_ok(), "{line}");
+            assert!(parts.next().is_none(), "{line}");
+        }
+    }
+}

@@ -74,9 +74,24 @@ pub enum Stage {
     /// Instant marker closing a round; `a` = round index, `b` = the
     /// scheduler's *virtual* clock in ns (simulated seconds × 1e9).
     RoundMark = 11,
+    /// Instant: a fault fired; `a` = `fault::Site` discriminant, `b` =
+    /// the site's first key (typically the round or client).
+    FaultMark = 12,
+    /// Instant: a client was quarantined; `a` = client, `b` = the
+    /// fault count that tripped the threshold.
+    QuarantineMark = 13,
+    /// Instant: a coordinator checkpoint was written; `a` = round,
+    /// `b` = checkpoint bytes.
+    CheckpointMark = 14,
+    /// Instant: the coordinator restored from a checkpoint; `a` = the
+    /// restored round, `b` = 0.
+    RestoreMark = 15,
+    /// Instant: a client session resumed after a reconnect; `a` =
+    /// connection slot, `b` = session token.
+    ResumeMark = 16,
 }
 
-pub const STAGE_COUNT: usize = 12;
+pub const STAGE_COUNT: usize = 17;
 
 impl Stage {
     pub const ALL: [Stage; STAGE_COUNT] = [
@@ -92,6 +107,11 @@ impl Stage {
         Stage::FrameParse,
         Stage::RoundTrip,
         Stage::RoundMark,
+        Stage::FaultMark,
+        Stage::QuarantineMark,
+        Stage::CheckpointMark,
+        Stage::RestoreMark,
+        Stage::ResumeMark,
     ];
 
     pub fn name(self) -> &'static str {
@@ -108,11 +128,31 @@ impl Stage {
             Stage::FrameParse => "frame_parse",
             Stage::RoundTrip => "round_trip",
             Stage::RoundMark => "round",
+            Stage::FaultMark => "fault",
+            Stage::QuarantineMark => "quarantine",
+            Stage::CheckpointMark => "checkpoint",
+            Stage::RestoreMark => "restore",
+            Stage::ResumeMark => "resume",
         }
     }
 
     pub fn from_u8(v: u8) -> Option<Stage> {
         Stage::ALL.get(v as usize).copied()
+    }
+
+    /// Instant-only stages: recorded via [`mark`] with zero duration,
+    /// rendered as Chrome `"i"` events, and excluded from the
+    /// duration-histogram stage table (they time nothing).
+    pub fn is_instant(self) -> bool {
+        matches!(
+            self,
+            Stage::RoundMark
+                | Stage::FaultMark
+                | Stage::QuarantineMark
+                | Stage::CheckpointMark
+                | Stage::RestoreMark
+                | Stage::ResumeMark
+        )
     }
 }
 
@@ -131,6 +171,16 @@ pub fn pin_epoch() {
 #[inline]
 fn now_ns() -> u64 {
     EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+/// The process-local monotonic trace clock (ns since the pinned
+/// epoch). Public for the distributed-telemetry plane: a client ships
+/// this reading in `Ready` and in every `Telemetry` frame, and the
+/// coordinator subtracts it from its own reading to align the two
+/// timelines (see `obs/remote.rs`).
+#[inline]
+pub fn monotonic_ns() -> u64 {
+    now_ns()
 }
 
 // ---------------------------------------------------------------------
@@ -170,6 +220,37 @@ pub struct ThreadRing {
 }
 
 impl ThreadRing {
+    pub fn tid(&self) -> u32 {
+        self.tid
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Total records ever written (monotonic; wraps index the ring
+    /// modulo [`RING_CAPACITY`]). `Acquire` pairs with the writer's
+    /// `Release` publish.
+    pub fn head(&self) -> usize {
+        self.head.load(Ordering::Acquire)
+    }
+
+    /// Read one logical record (`i` counts from 0, monotonically, like
+    /// [`ThreadRing::head`]): `(meta, start_ns, dur_ns, a, b)` where
+    /// `meta = (track << 8) | stage`. Relaxed reads — a concurrently
+    /// written slot can read torn, never unsafely (same contract as
+    /// [`snapshot`]).
+    pub fn read_raw(&self, i: usize) -> (u64, u64, u64, u64, u64) {
+        let slot = &self.slots[i & (RING_CAPACITY - 1)];
+        (
+            slot.meta.load(Ordering::Relaxed),
+            slot.start_ns.load(Ordering::Relaxed),
+            slot.dur_ns.load(Ordering::Relaxed),
+            slot.a.load(Ordering::Relaxed),
+            slot.b.load(Ordering::Relaxed),
+        )
+    }
+
     #[inline]
     fn record(&self, stage: Stage, track: u32, start_ns: u64, dur_ns: u64, a: u64, b: u64) {
         let h = self.head.load(Ordering::Relaxed);
@@ -374,6 +455,29 @@ pub fn snapshot() -> Vec<ThreadSpans> {
     }
     out.sort_by_key(|t| t.tid);
     out
+}
+
+/// Visit every registered ring without copying it out — the telemetry
+/// shipper walks rings in place so a warm snapshot encode allocates
+/// nothing. The registry lock is held for the duration of the walk.
+pub fn for_each_ring(mut f: impl FnMut(&ThreadRing)) {
+    for ring in REGISTRY.lock().unwrap_or_else(|e| e.into_inner()).iter() {
+        f(ring);
+    }
+}
+
+/// Totals across every ring: `(recorded, dropped)` where `recorded`
+/// counts the records currently held and `dropped` the older ones
+/// each ring overwrote (`RING_CAPACITY` wraps). Allocation-free.
+pub fn ring_totals() -> (u64, u64) {
+    let (mut recorded, mut dropped) = (0u64, 0u64);
+    for ring in REGISTRY.lock().unwrap_or_else(|e| e.into_inner()).iter() {
+        let head = ring.head.load(Ordering::Acquire);
+        let kept = head.min(RING_CAPACITY);
+        recorded += kept as u64;
+        dropped += (head - kept) as u64;
+    }
+    (recorded, dropped)
 }
 
 /// Rewind every ring (slots stay allocated; old records become

@@ -358,6 +358,11 @@ impl Engine {
             self.quarantined[client] = true;
             self.quarantined_total += 1;
             crate::obs::metrics::CLIENTS_QUARANTINED.incr();
+            crate::obs::span::mark(
+                crate::obs::Stage::QuarantineMark,
+                client as u64,
+                self.fault_counts[client] as u64,
+            );
         }
     }
 

@@ -5,7 +5,7 @@
 //! ```text
 //! offset  size  field
 //! 0       2     magic      b"AF"
-//! 2       1     version    WIRE_VERSION (= 2)
+//! 2       1     version    WIRE_VERSION (= 3)
 //! 3       1     kind       FrameKind as u8
 //! 4       4     len        u32 LE, payload length in bytes
 //! 8       len   payload    kind-specific (see the message structs)
@@ -37,7 +37,13 @@ pub const MAGIC: [u8; 2] = *b"AF";
 /// v2: `Hello` carries a session token, `Config` echoes the assigned
 /// token, `StateSync` exists, and `RoundOffer` kept-unit bitmaps may be
 /// run-length encoded (see [`encode_round_offer`]).
-pub const WIRE_VERSION: u8 = 2;
+///
+/// v3: the `Telemetry` frame exists (client → coordinator span rings,
+/// counter deltas and histogram snapshots, see [`parse_telemetry`]),
+/// and `Ready` carries the client's monotonic clock reading next to
+/// the fingerprint so the coordinator can align remote timelines
+/// (handshake-time offset exchange; see `obs/remote.rs`).
+pub const WIRE_VERSION: u8 = 3;
 pub const HEADER_LEN: usize = 8;
 pub const CRC_LEN: usize = 4;
 /// Fixed per-frame overhead: header + trailing CRC.
@@ -79,6 +85,13 @@ pub enum FrameKind {
     /// process resumes bit-exactly where the coordinator's host-side
     /// shadow fleet says it should.
     StateSync = 10,
+    /// Client process → server: observability snapshot — per-thread
+    /// span-ring deltas, counter/gauge deltas, and stage-histogram
+    /// deltas — piggybacked after `UpdateUp` at round boundaries.
+    /// Pure side channel: never acked, never counted against
+    /// `RoundRecord` byte accounting (`TELEMETRY_BYTES` tracks it
+    /// separately, like `RESYNC_BYTES`).
+    Telemetry = 11,
 }
 
 impl FrameKind {
@@ -94,6 +107,7 @@ impl FrameKind {
             8 => FrameKind::Cut,
             9 => FrameKind::Bye,
             10 => FrameKind::StateSync,
+            11 => FrameKind::Telemetry,
             _ => return None,
         })
     }
@@ -879,20 +893,31 @@ pub fn parse_hello(view: &FrameView<'_>) -> Result<u64, FrameError> {
     PayloadReader::new(view).u64("session token")
 }
 
-pub fn encode_ready(out: &mut Vec<u8>, fingerprint: u64) {
+/// `Ready` payload: `u64 fingerprint ‖ u64 client monotonic now (ns)`.
+/// The clock reading is the handshake half of remote timeline
+/// alignment: the coordinator subtracts it from its own monotonic
+/// clock at parse time to get a first offset estimate, later refined
+/// by per-round `Telemetry` anchors (see `obs/remote.rs`).
+pub fn encode_ready(out: &mut Vec<u8>, fingerprint: u64, now_ns: u64) {
     let base = begin_frame(out, FrameKind::Ready);
     out.extend_from_slice(&fingerprint.to_le_bytes());
+    out.extend_from_slice(&now_ns.to_le_bytes());
     end_frame(out, base);
 }
 
-pub fn parse_ready(view: &FrameView<'_>) -> Result<u64, FrameError> {
+/// Returns `(fingerprint, client_now_ns)`; a clock-less peer that sent
+/// only the fingerprint reads back as `now_ns = 0` (no alignment).
+pub fn parse_ready(view: &FrameView<'_>) -> Result<(u64, u64), FrameError> {
     if view.kind != FrameKind::Ready {
         return Err(FrameError::BadPayload {
             kind: view.kind,
             what: "expected Ready",
         });
     }
-    PayloadReader::new(view).u64("fingerprint")
+    let mut r = PayloadReader::new(view);
+    let fp = r.u64("fingerprint")?;
+    let now_ns = r.u64("client clock").unwrap_or(0);
+    Ok((fp, now_ns))
 }
 
 pub fn encode_bye(out: &mut Vec<u8>) {
@@ -1000,6 +1025,366 @@ impl StateSyncMsg<'_> {
     }
 }
 
+// ---------------------------------------------------------------------
+// Telemetry (wire v3)
+// ---------------------------------------------------------------------
+
+/// Caps on `Telemetry` section counts: a hostile count field is
+/// rejected before any reader honors it, and no single frame can carry
+/// an unbounded snapshot (the shipper truncates and reports drops
+/// instead).
+pub const MAX_TELEMETRY_THREADS: usize = 256;
+pub const MAX_TELEMETRY_NAME: usize = 96;
+/// Per-thread span cap — one full ring (`obs::span::RING_CAPACITY`).
+pub const MAX_TELEMETRY_SPANS: usize = 16384;
+pub const MAX_TELEMETRY_COUNTERS: usize = 256;
+pub const MAX_TELEMETRY_GAUGES: usize = 64;
+pub const MAX_TELEMETRY_HISTS: usize = 64;
+/// Stage tags and histogram bucket indices must fall below this.
+pub const TELEMETRY_STAGE_LIMIT: u8 = 64;
+
+/// Streaming encoder for `Telemetry` frames.
+///
+/// `Telemetry` payload:
+/// `u32 round ‖ u64 sender monotonic now (ns) ‖
+///  u32 thread count ‖ per thread: u32 tid ‖ u8 name len ‖ name bytes ‖
+///  u64 ring drops ‖ u32 span count ‖ per span: u8 stage ‖ u32 track ‖
+///  u64 start_ns ‖ u64 dur_ns ‖ u64 a ‖ u64 b ‖
+///  u32 counter count ‖ per counter: u8 id ‖ u64 delta ‖
+///  u32 gauge count ‖ per gauge: u8 id ‖ u64 value ‖
+///  u32 histogram count ‖ per histogram: u8 stage ‖ u64 Δcount ‖
+///  u64 Δsum ‖ u8 nonzero buckets ‖ per bucket: u8 index ‖ u64 Δ`.
+///
+/// All four sections are mandatory, in that order (a snapshot with
+/// nothing to say encodes four zero counts). Counts are patched in
+/// place, so the encoder appends to a caller-provided sink and a warm
+/// sink frames a snapshot with zero heap allocations — the client-side
+/// shipper (`obs/remote.rs`) relies on this to keep the warm round
+/// alloc-free with telemetry live.
+pub struct TelemetryEncoder<'o> {
+    out: &'o mut Vec<u8>,
+    base: usize,
+    sect_at: usize,
+    sect_n: u32,
+    thread_at: usize,
+    thread_n: u32,
+    hist_at: usize,
+    hist_n: u8,
+}
+
+const NO_PATCH: usize = usize::MAX;
+
+impl<'o> TelemetryEncoder<'o> {
+    pub fn begin(out: &'o mut Vec<u8>, round: u32, now_ns: u64) -> TelemetryEncoder<'o> {
+        let base = begin_frame(out, FrameKind::Telemetry);
+        out.extend_from_slice(&round.to_le_bytes());
+        out.extend_from_slice(&now_ns.to_le_bytes());
+        TelemetryEncoder {
+            out,
+            base,
+            sect_at: NO_PATCH,
+            sect_n: 0,
+            thread_at: NO_PATCH,
+            thread_n: 0,
+            hist_at: NO_PATCH,
+            hist_n: 0,
+        }
+    }
+
+    fn sect_begin(&mut self) {
+        debug_assert_eq!(self.sect_at, NO_PATCH, "previous section still open");
+        self.sect_at = self.out.len();
+        self.out.extend_from_slice(&0u32.to_le_bytes());
+        self.sect_n = 0;
+    }
+
+    fn sect_end(&mut self) {
+        let n = self.sect_n.to_le_bytes();
+        self.out[self.sect_at..self.sect_at + 4].copy_from_slice(&n);
+        self.sect_at = NO_PATCH;
+    }
+
+    pub fn begin_threads(&mut self) {
+        self.sect_begin();
+    }
+
+    fn close_thread(&mut self) {
+        if self.thread_at != NO_PATCH {
+            let n = self.thread_n.to_le_bytes();
+            self.out[self.thread_at..self.thread_at + 4].copy_from_slice(&n);
+            self.thread_at = NO_PATCH;
+        }
+    }
+
+    /// Open one thread record; spans recorded until the next
+    /// `begin_thread`/`end_threads` belong to it.
+    pub fn begin_thread(&mut self, tid: u32, name: &str, dropped: u64) {
+        self.close_thread();
+        let name = &name.as_bytes()[..name.len().min(MAX_TELEMETRY_NAME)];
+        self.out.extend_from_slice(&tid.to_le_bytes());
+        self.out.push(name.len() as u8);
+        self.out.extend_from_slice(name);
+        self.out.extend_from_slice(&dropped.to_le_bytes());
+        self.thread_at = self.out.len();
+        self.out.extend_from_slice(&0u32.to_le_bytes());
+        self.thread_n = 0;
+        self.sect_n += 1;
+    }
+
+    pub fn span(&mut self, stage: u8, track: u32, start_ns: u64, dur_ns: u64, a: u64, b: u64) {
+        debug_assert!(self.thread_at != NO_PATCH, "span outside a thread");
+        debug_assert!(stage < TELEMETRY_STAGE_LIMIT);
+        self.out.push(stage);
+        self.out.extend_from_slice(&track.to_le_bytes());
+        self.out.extend_from_slice(&start_ns.to_le_bytes());
+        self.out.extend_from_slice(&dur_ns.to_le_bytes());
+        self.out.extend_from_slice(&a.to_le_bytes());
+        self.out.extend_from_slice(&b.to_le_bytes());
+        self.thread_n += 1;
+    }
+
+    pub fn end_threads(&mut self) {
+        self.close_thread();
+        self.sect_end();
+    }
+
+    pub fn begin_counters(&mut self) {
+        self.sect_begin();
+    }
+
+    pub fn counter(&mut self, id: u8, delta: u64) {
+        self.out.push(id);
+        self.out.extend_from_slice(&delta.to_le_bytes());
+        self.sect_n += 1;
+    }
+
+    pub fn end_counters(&mut self) {
+        self.sect_end();
+    }
+
+    pub fn begin_gauges(&mut self) {
+        self.sect_begin();
+    }
+
+    pub fn gauge(&mut self, id: u8, value: u64) {
+        self.out.push(id);
+        self.out.extend_from_slice(&value.to_le_bytes());
+        self.sect_n += 1;
+    }
+
+    pub fn end_gauges(&mut self) {
+        self.sect_end();
+    }
+
+    pub fn begin_hists(&mut self) {
+        self.sect_begin();
+    }
+
+    fn close_hist(&mut self) {
+        if self.hist_at != NO_PATCH {
+            self.out[self.hist_at] = self.hist_n;
+            self.hist_at = NO_PATCH;
+        }
+    }
+
+    pub fn begin_hist(&mut self, stage: u8, d_count: u64, d_sum: u64) {
+        debug_assert!(stage < TELEMETRY_STAGE_LIMIT);
+        self.close_hist();
+        self.out.push(stage);
+        self.out.extend_from_slice(&d_count.to_le_bytes());
+        self.out.extend_from_slice(&d_sum.to_le_bytes());
+        self.hist_at = self.out.len();
+        self.out.push(0);
+        self.hist_n = 0;
+        self.sect_n += 1;
+    }
+
+    pub fn bucket(&mut self, index: u8, delta: u64) {
+        debug_assert!(self.hist_at != NO_PATCH, "bucket outside a histogram");
+        debug_assert!(index < TELEMETRY_STAGE_LIMIT);
+        self.out.push(index);
+        self.out.extend_from_slice(&delta.to_le_bytes());
+        self.hist_n += 1;
+    }
+
+    pub fn end_hists(&mut self) {
+        self.close_hist();
+        self.sect_end();
+    }
+
+    /// Seal the frame (length patch + CRC).
+    pub fn finish(self) {
+        debug_assert_eq!(self.sect_at, NO_PATCH, "a section is still open");
+        end_frame(self.out, self.base);
+    }
+}
+
+/// One span record inside a parsed `Telemetry` frame. Timestamps are
+/// on the *sender's* monotonic clock; the merge layer realigns them.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TelemetrySpan {
+    pub stage: u8,
+    pub track: u32,
+    pub start_ns: u64,
+    pub dur_ns: u64,
+    pub a: u64,
+    pub b: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct TelemetryThread {
+    pub tid: u32,
+    pub name: String,
+    pub dropped: u64,
+    pub spans: Vec<TelemetrySpan>,
+}
+
+#[derive(Clone, Debug)]
+pub struct TelemetryHist {
+    pub stage: u8,
+    pub d_count: u64,
+    pub d_sum: u64,
+    pub buckets: Vec<(u8, u64)>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct TelemetryMsg {
+    pub round: u32,
+    pub sender_now_ns: u64,
+    pub threads: Vec<TelemetryThread>,
+    pub counters: Vec<(u8, u64)>,
+    pub gauges: Vec<(u8, u64)>,
+    pub hists: Vec<TelemetryHist>,
+}
+
+fn bad_telemetry(what: &'static str) -> FrameError {
+    FrameError::BadPayload {
+        kind: FrameKind::Telemetry,
+        what,
+    }
+}
+
+/// Parse a `Telemetry` frame into an owned message (coordinator side —
+/// off the zero-alloc path by design). Every count field is capped,
+/// every stage tag and bucket index bounds-checked, and trailing bytes
+/// are rejected, so a hostile payload is a typed error, never a panic
+/// or an unbounded allocation.
+pub fn parse_telemetry(view: &FrameView<'_>) -> Result<TelemetryMsg, FrameError> {
+    if view.kind != FrameKind::Telemetry {
+        return Err(FrameError::BadPayload {
+            kind: view.kind,
+            what: "expected Telemetry",
+        });
+    }
+    let mut r = PayloadReader::new(view);
+    let round = r.u32("round")?;
+    let sender_now_ns = r.u64("sender clock")?;
+
+    let nthreads = r.u32("thread count")? as usize;
+    if nthreads > MAX_TELEMETRY_THREADS {
+        return Err(bad_telemetry("thread count"));
+    }
+    let mut threads = Vec::with_capacity(nthreads);
+    for _ in 0..nthreads {
+        let tid = r.u32("thread id")?;
+        let nlen = r.u8("thread name length")? as usize;
+        if nlen > MAX_TELEMETRY_NAME {
+            return Err(bad_telemetry("thread name length"));
+        }
+        let name = std::str::from_utf8(r.bytes(nlen, "thread name")?)
+            .map_err(|_| bad_telemetry("thread name is not UTF-8"))?
+            .to_string();
+        let dropped = r.u64("ring drop count")?;
+        let nspans = r.u32("span count")? as usize;
+        if nspans > MAX_TELEMETRY_SPANS {
+            return Err(bad_telemetry("span count"));
+        }
+        let mut spans = Vec::with_capacity(nspans);
+        for _ in 0..nspans {
+            let stage = r.u8("span stage")?;
+            if stage >= TELEMETRY_STAGE_LIMIT {
+                return Err(bad_telemetry("span stage"));
+            }
+            spans.push(TelemetrySpan {
+                stage,
+                track: r.u32("span track")?,
+                start_ns: r.u64("span start")?,
+                dur_ns: r.u64("span duration")?,
+                a: r.u64("span arg a")?,
+                b: r.u64("span arg b")?,
+            });
+        }
+        threads.push(TelemetryThread {
+            tid,
+            name,
+            dropped,
+            spans,
+        });
+    }
+
+    let ncounters = r.u32("counter count")? as usize;
+    if ncounters > MAX_TELEMETRY_COUNTERS {
+        return Err(bad_telemetry("counter count"));
+    }
+    let mut counters = Vec::with_capacity(ncounters);
+    for _ in 0..ncounters {
+        counters.push((r.u8("counter id")?, r.u64("counter delta")?));
+    }
+
+    let ngauges = r.u32("gauge count")? as usize;
+    if ngauges > MAX_TELEMETRY_GAUGES {
+        return Err(bad_telemetry("gauge count"));
+    }
+    let mut gauges = Vec::with_capacity(ngauges);
+    for _ in 0..ngauges {
+        gauges.push((r.u8("gauge id")?, r.u64("gauge value")?));
+    }
+
+    let nhists = r.u32("histogram count")? as usize;
+    if nhists > MAX_TELEMETRY_HISTS {
+        return Err(bad_telemetry("histogram count"));
+    }
+    let mut hists = Vec::with_capacity(nhists);
+    for _ in 0..nhists {
+        let stage = r.u8("histogram stage")?;
+        if stage >= TELEMETRY_STAGE_LIMIT {
+            return Err(bad_telemetry("histogram stage"));
+        }
+        let d_count = r.u64("histogram count delta")?;
+        let d_sum = r.u64("histogram sum delta")?;
+        let nbuckets = r.u8("bucket count")? as usize;
+        if nbuckets > TELEMETRY_STAGE_LIMIT as usize {
+            return Err(bad_telemetry("bucket count"));
+        }
+        let mut buckets = Vec::with_capacity(nbuckets);
+        for _ in 0..nbuckets {
+            let idx = r.u8("bucket index")?;
+            if idx >= TELEMETRY_STAGE_LIMIT {
+                return Err(bad_telemetry("bucket index"));
+            }
+            buckets.push((idx, r.u64("bucket delta")?));
+        }
+        hists.push(TelemetryHist {
+            stage,
+            d_count,
+            d_sum,
+            buckets,
+        });
+    }
+
+    if !r.rest().is_empty() {
+        return Err(bad_telemetry("trailing bytes"));
+    }
+    Ok(TelemetryMsg {
+        round,
+        sender_now_ns,
+        threads,
+        counters,
+        gauges,
+        hists,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1029,14 +1414,14 @@ mod tests {
     fn frames_concatenate() {
         let mut out = Vec::new();
         encode_hello(&mut out, 0);
-        encode_ready(&mut out, 7);
+        encode_ready(&mut out, 7, 1234);
         encode_bye(&mut out);
         let (a, ua) = parse_frame(&out).unwrap();
         assert_eq!(a.kind, FrameKind::Hello);
         assert_eq!(parse_hello(&a).unwrap(), 0);
         let (b, ub) = parse_frame(&out[ua..]).unwrap();
         assert_eq!(b.kind, FrameKind::Ready);
-        assert_eq!(parse_ready(&b).unwrap(), 7);
+        assert_eq!(parse_ready(&b).unwrap(), (7, 1234));
         let (c, uc) = parse_frame(&out[ua + ub..]).unwrap();
         assert_eq!(c.kind, FrameKind::Bye);
         assert_eq!(ua + ub + uc, out.len());
@@ -1132,6 +1517,114 @@ mod tests {
             parse_state_sync(&view),
             Err(FrameError::BadPayload { what: "residual body length", .. })
         ));
+    }
+
+    #[test]
+    fn telemetry_roundtrips_every_section() {
+        let mut out = Vec::new();
+        let mut enc = TelemetryEncoder::begin(&mut out, 12, 9_876_543_210);
+        enc.begin_threads();
+        enc.begin_thread(0, "main", 3);
+        enc.span(5, 0, 100, 40, 12, 7);
+        enc.span(11, 0, 150, 0, 12, 2_000_000_000);
+        enc.begin_thread(2, "pool-1", 0);
+        enc.end_threads();
+        enc.begin_counters();
+        enc.counter(4, 17);
+        enc.counter(0, 1 << 40);
+        enc.end_counters();
+        enc.begin_gauges();
+        enc.gauge(1, 8);
+        enc.end_gauges();
+        enc.begin_hists();
+        enc.begin_hist(5, 2, 140, );
+        enc.bucket(6, 1);
+        enc.bucket(7, 1);
+        enc.begin_hist(8, 1, 40);
+        enc.bucket(6, 1);
+        enc.end_hists();
+        enc.finish();
+
+        let (view, used) = parse_frame(&out).unwrap();
+        assert_eq!(used, out.len());
+        assert_eq!(view.kind, FrameKind::Telemetry);
+        let msg = parse_telemetry(&view).unwrap();
+        assert_eq!(msg.round, 12);
+        assert_eq!(msg.sender_now_ns, 9_876_543_210);
+        assert_eq!(msg.threads.len(), 2);
+        assert_eq!(msg.threads[0].name, "main");
+        assert_eq!(msg.threads[0].dropped, 3);
+        assert_eq!(msg.threads[0].spans.len(), 2);
+        assert_eq!(
+            msg.threads[0].spans[0],
+            TelemetrySpan {
+                stage: 5,
+                track: 0,
+                start_ns: 100,
+                dur_ns: 40,
+                a: 12,
+                b: 7
+            }
+        );
+        assert_eq!(msg.threads[1].tid, 2);
+        assert!(msg.threads[1].spans.is_empty());
+        assert_eq!(msg.counters, vec![(4, 17), (0, 1 << 40)]);
+        assert_eq!(msg.gauges, vec![(1, 8)]);
+        assert_eq!(msg.hists.len(), 2);
+        assert_eq!(msg.hists[0].stage, 5);
+        assert_eq!(msg.hists[0].d_sum, 140);
+        assert_eq!(msg.hists[0].buckets, vec![(6, 1), (7, 1)]);
+    }
+
+    #[test]
+    fn empty_telemetry_is_four_zero_counts() {
+        let mut out = Vec::new();
+        let mut enc = TelemetryEncoder::begin(&mut out, 0, 0);
+        enc.begin_threads();
+        enc.end_threads();
+        enc.begin_counters();
+        enc.end_counters();
+        enc.begin_gauges();
+        enc.end_gauges();
+        enc.begin_hists();
+        enc.end_hists();
+        enc.finish();
+        // round + clock + four u32 section counts.
+        assert_eq!(out.len() as u64, FRAME_OVERHEAD + 4 + 8 + 16);
+        let (view, _) = parse_frame(&out).unwrap();
+        let msg = parse_telemetry(&view).unwrap();
+        assert!(msg.threads.is_empty() && msg.counters.is_empty());
+        assert!(msg.gauges.is_empty() && msg.hists.is_empty());
+    }
+
+    #[test]
+    fn telemetry_rejects_hostile_counts() {
+        let mut out = Vec::new();
+        let mut enc = TelemetryEncoder::begin(&mut out, 1, 2);
+        enc.begin_threads();
+        enc.end_threads();
+        enc.begin_counters();
+        enc.end_counters();
+        enc.begin_gauges();
+        enc.end_gauges();
+        enc.begin_hists();
+        enc.end_hists();
+        enc.finish();
+        // Thread-count field sits right after round + clock.
+        let at = HEADER_LEN + 4 + 8;
+        for hostile in [u32::MAX, (MAX_TELEMETRY_THREADS + 1) as u32] {
+            let mut v = out.clone();
+            v[at..at + 4].copy_from_slice(&hostile.to_le_bytes());
+            let n = v.len();
+            let crc = crc32(&v[..n - CRC_LEN]).to_le_bytes();
+            v[n - 4..].copy_from_slice(&crc);
+            let (view, _) = parse_frame(&v).unwrap();
+            let got = parse_telemetry(&view);
+            assert!(
+                matches!(got, Err(FrameError::BadPayload { .. })),
+                "hostile thread count {hostile}: {got:?}"
+            );
+        }
     }
 
     fn offer_for(keep: Vec<Vec<bool>>) -> Vec<u8> {

@@ -14,6 +14,16 @@
 //! `finish`/`shutdown` are no-ops: the device state lives host-side,
 //! where the engine already performs the Ack/Cut commit-or-rollback on
 //! its own fleet structures.
+//!
+//! With tracing enabled the loopback also mirrors the **distributed
+//! telemetry plane** in-process: after each delivered round it runs a
+//! [`crate::obs::remote::Shipper`] over the local rings, encodes a real
+//! `Telemetry` frame, parses it back and merges it into the remote
+//! registry under the process name `"loopback"` — so every test that
+//! runs traced loopback rounds exercises the full encode → parse →
+//! merge path without a socket.
+
+use std::sync::Mutex;
 
 use anyhow::{Context, Result};
 
@@ -23,7 +33,36 @@ use crate::transport::frame;
 use crate::transport::{LossReason, RoundTripStatus, StateSyncSnapshot, Transport};
 
 /// The in-process [`Transport`] (default for every experiment).
-pub struct Loopback;
+#[derive(Default)]
+pub struct Loopback {
+    /// Telemetry mirror: shipper cursors + frame buffer + registry id,
+    /// shared across the engine's worker threads.
+    tele: Mutex<Option<(crate::obs::remote::Shipper, Vec<u8>, usize)>>,
+}
+
+impl Loopback {
+    /// Delta-ship the local rings/counters through the real wire
+    /// format and merge the result, as a remote client would at a
+    /// round boundary. Any parse failure here is a bug in the encoder,
+    /// so it surfaces loudly in tests via `expect`.
+    fn mirror_telemetry(&self, round: u32) {
+        let mut guard = self.tele.lock().unwrap_or_else(|e| e.into_inner());
+        let (shipper, buf, id) = guard.get_or_insert_with(|| {
+            (
+                crate::obs::remote::Shipper::new(),
+                Vec::with_capacity(64 * 1024),
+                crate::obs::remote::register("loopback"),
+            )
+        });
+        crate::obs::remote::anchor(*id, crate::obs::span::monotonic_ns());
+        buf.clear();
+        shipper.encode_into(buf, round);
+        let (view, _) = frame::parse_frame(buf).expect("self-encoded telemetry frame");
+        let msg = frame::parse_telemetry(&view).expect("self-encoded telemetry payload");
+        crate::obs::remote::ingest(*id, &msg);
+        crate::obs::metrics::TELEMETRY_BYTES.add(buf.len() as u64);
+    }
+}
 
 impl Transport for Loopback {
     fn name(&self) -> &'static str {
@@ -137,6 +176,9 @@ impl Transport for Loopback {
             // "writes" in one piece, and the socket transport resumes
             // short writes from its cursor — fully masked by design.
             let _ = fault::should(Site::PartialWrite, fr, fc);
+        }
+        if crate::obs::enabled() {
+            self.mirror_telemetry(offer_msg.round);
         }
         Ok(RoundTripStatus::Delivered)
     }

@@ -8,8 +8,10 @@
 //!
 //! * [`frame`] — the versioned, CRC32-checked, length-prefixed binary
 //!   frame format for the whole conversation (`RoundOffer`,
-//!   `ModelDown`, `UpdateUp`, `Ack`/`Cut`, plus the
-//!   `Hello`/`Config`/`Ready`/`Bye` session envelope);
+//!   `ModelDown`, `UpdateUp`, `Ack`/`Cut`, the
+//!   `Hello`/`Config`/`Ready`/`Bye` session envelope, `StateSync`
+//!   resume records, and the `Telemetry` side channel shipping remote
+//!   span/counter/histogram snapshots home);
 //! * [`client_round`] — the client side of one round as a pure
 //!   function of frames ([`client_round::client_execute`]): decode the
 //!   offered sub-model and payload, train locally, encode the update.
@@ -32,10 +34,16 @@
 //! ```text
 //! session:   client ── Hello(token) ─▶ server ── Config(token) ─▶ client ── Ready ─▶ server
 //! per round: server ── [StateSync] ‖ RoundOffer ‖ ModelDown ─▶ client
-//!            client ── UpdateUp ─▶ server
+//!            client ── UpdateUp [‖ Telemetry] ─▶ server
 //!            server ── Ack (aggregated) | Cut (discarded) ─▶ client
 //! shutdown:  server ── Bye ─▶ client
 //! ```
+//!
+//! The optional `Telemetry` frame (wire v3, tracing-enabled clients
+//! only) is consumed out-of-band by the coordinator: it never matches
+//! an open round and its bytes are accounted in `TELEMETRY_BYTES`
+//! rather than `RoundRecord`, so arming telemetry cannot perturb
+//! results (`rust/tests/obs_distributed.rs`).
 //!
 //! `Ack`/`Cut` carry the round-closing decision to the device: a DGC
 //! client clears sent coordinates from its accumulators when it

@@ -171,6 +171,9 @@ struct ConnState {
     /// Generation at which each logical client last received a
     /// `StateSync`, so one reconnect syncs each client exactly once.
     last_synced: HashMap<u32, u64>,
+    /// Merge-registry id of the remote process behind this slot (set at
+    /// handshake), for routing inbound `Telemetry` frames.
+    remote_id: Option<usize>,
 }
 
 impl ConnState {
@@ -185,6 +188,7 @@ impl ConnState {
             open: BTreeMap::new(),
             sent: VecDeque::new(),
             last_synced: HashMap::new(),
+            remote_id: None,
         }
     }
 }
@@ -275,6 +279,28 @@ fn drain_frames(conn: &mut ConnState) -> Result<bool, ()> {
         let total = frame::HEADER_LEN + len + frame::CRC_LEN;
         if avail < total {
             break;
+        }
+        if FrameKind::from_u8(kind) == Some(FrameKind::Telemetry) {
+            // Pure side channel: merge into the remote registry and
+            // consume the bytes without touching the FIFO — replies
+            // still match open rounds in send order. A frame that fails
+            // the full parse (CRC, grammar) is a protocol violation
+            // like any other malformed inbound frame.
+            let whole = &conn.rbuf[off..off + total];
+            let Ok((view, _)) = frame::parse_frame(whole) else {
+                return Err(());
+            };
+            let Ok(msg) = frame::parse_telemetry(&view) else {
+                return Err(());
+            };
+            if let Some(id) = conn.remote_id {
+                crate::obs::remote::ingest(id, &msg);
+            }
+            if crate::obs::enabled() {
+                crate::obs::metrics::TELEMETRY_BYTES.add(total as u64);
+            }
+            off += total;
+            continue;
         }
         if FrameKind::from_u8(kind) != Some(FrameKind::UpdateUp) {
             return Err(());
@@ -517,7 +543,7 @@ fn handshake_and_install(
     stream.write_all(&out).context("sending Config")?;
     read_frame_into(&mut stream, &mut buf).context("waiting for Ready")?;
     let (view, _) = frame::parse_frame(&buf)?;
-    let theirs = frame::parse_ready(&view)?;
+    let (theirs, client_now_ns) = frame::parse_ready(&view)?;
     anyhow::ensure!(
         theirs == fingerprint,
         "peer derived layout fingerprint {theirs:#018x}, server has \
@@ -525,11 +551,21 @@ fn handshake_and_install(
     );
     stream.set_nonblocking(true)?;
 
+    // Telemetry identity: one named remote process per slot, stable
+    // across reconnects (a restarted process resuming the slot keeps
+    // the same merged-trace track). The Ready clock sample seeds the
+    // monotonic offset before any Telemetry frame arrives.
+    let remote_id = crate::obs::remote::register(&format!("client-slot-{slot}"));
+    if client_now_ns > 0 {
+        crate::obs::remote::anchor(remote_id, client_now_ns);
+    }
+
     let mut sh = lock(&shared.0);
     if sh.stopping {
         return Ok(());
     }
     let conn = &mut sh.conns[slot];
+    conn.remote_id = Some(remote_id);
     // Takeover: a token reconnect may beat the event loop to a half-dead
     // socket — drop whatever occupied the slot and start its I/O fresh.
     conn.stream = None;
@@ -542,6 +578,12 @@ fn handshake_and_install(
         if crate::obs::enabled() {
             crate::obs::metrics::CONN_RECONNECTS.incr();
         }
+        // Session resume is an instant on the merged timeline.
+        crate::obs::span::mark(
+            crate::obs::Stage::ResumeMark,
+            slot as u64,
+            (slot + 1) as u64,
+        );
         if resume {
             // Replay every still-open round in deterministic key order,
             // each client's first entry preceded by its StateSync.
@@ -1221,10 +1263,15 @@ pub fn run_client_loop(addr: &str, opts: &ClientOptions) -> Result<ClientEnd> {
     stream.set_read_timeout(Some(io_timeout))?;
     stream.set_write_timeout(Some(io_timeout))?;
     out.clear();
-    frame::encode_ready(&mut out, fp);
+    frame::encode_ready(&mut out, fp, crate::obs::span::monotonic_ns());
     stream.write_all(&out).context("sending Ready")?;
 
     // ---- session state -----------------------------------------------
+    // Telemetry side channel (armed by AFD_TRACE=1): delta-ships this
+    // process's span rings, counters and histograms right after each
+    // UpdateUp. Preallocated so a warm round stays zero-alloc.
+    let mut shipper = crate::obs::remote::Shipper::new();
+    let mut tele: Vec<u8> = Vec::with_capacity(64 * 1024);
     let mut offers: VecDeque<PendingOffer> = VecDeque::new();
     // Rollback snapshots are residuals-only and capped: v1 cloned whole
     // `DgcState`s into a fleet-sized table, which at million-client
@@ -1367,6 +1414,13 @@ pub fn run_client_loop(addr: &str, opts: &ClientOptions) -> Result<ClientEnd> {
                     if let Err(e) = write_res {
                         break 'serve anyhow::anyhow!("sending UpdateUp: {e}");
                     }
+                    if crate::obs::enabled() {
+                        tele.clear();
+                        shipper.encode_into(&mut tele, offer.round);
+                        if let Err(e) = stream.write_all(&tele) {
+                            break 'serve anyhow::anyhow!("sending Telemetry: {e}");
+                        }
+                    }
                 }
                 FrameKind::Ack | FrameKind::Cut => {
                     let close = frame::parse_round_close(&view)?;
@@ -1408,7 +1462,7 @@ pub fn run_client_loop(addr: &str, opts: &ClientOptions) -> Result<ClientEnd> {
         anyhow::ensure!(sfp == fp, "server fingerprint changed across reconnect");
         token = tok;
         out.clear();
-        frame::encode_ready(&mut out, fp);
+        frame::encode_ready(&mut out, fp, crate::obs::span::monotonic_ns());
         stream.write_all(&out).context("sending Ready after reconnect")?;
     };
     Ok(end)
@@ -1441,7 +1495,7 @@ mod tests {
         let (fp, tok, _json) = frame::parse_config(&view).unwrap();
         assert_eq!(fp, FP);
         out.clear();
-        frame::encode_ready(&mut out, fp);
+        frame::encode_ready(&mut out, fp, 1);
         s.write_all(&out).unwrap();
         (s, tok)
     }

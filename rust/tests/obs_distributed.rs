@@ -1,0 +1,290 @@
+//! Distributed telemetry conformance: shipping telemetry must be
+//! *invisible* in results, and the merge must be real.
+//!
+//! Two contracts on top of `obs_conformance.rs`:
+//!
+//! 1. **Bit-identity with the side channel live** — a fixed-seed run
+//!    with telemetry armed (loopback mirror, or real `Telemetry`
+//!    frames over in-process TCP) produces byte-identical per-round
+//!    JSONL records and final model hash to a telemetry-off run, for
+//!    every scheduler policy. Telemetry bytes land in
+//!    `TELEMETRY_BYTES`, never in `RoundRecord` accounting.
+//! 2. **The merged timeline is well-formed** — after a traced TCP run
+//!    the Chrome trace carries one named process track per remote
+//!    client process (distinct pids, all different from the
+//!    coordinator's), remote spans ride those pids with non-negative
+//!    clock-aligned timestamps, and the embedded stats dump reports
+//!    per-process frame/span/counter totals.
+//!
+//! The enable flag, metrics registry and remote-process registry are
+//! process-global, so every test here serializes on one mutex.
+
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use afd::config::{ExperimentConfig, Preset};
+use afd::coordinator::experiment::Experiment;
+use afd::runtime::native::mlp_from_config;
+use afd::transport::tcp::{run_client_loop, ClientOptions, TcpServer};
+use afd::transport::Transport;
+use afd::util::model_hash;
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn smoke_cfg(policy: &str) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::preset(Preset::NativeSmoke);
+    cfg.rounds = 5;
+    cfg.eval_every = 2;
+    cfg.uplink_dgc = true;
+    cfg.sched.policy = policy.into();
+    cfg
+}
+
+/// Run over the loopback transport, returning each round's record
+/// exactly as the CLI would serialize it, plus the final model hash.
+fn run_loopback(cfg: &ExperimentConfig) -> (Vec<String>, u64) {
+    let mut exp = Experiment::build(cfg).unwrap();
+    let mut lines = Vec::with_capacity(cfg.rounds);
+    for round in 1..=cfg.rounds {
+        lines.push(exp.step(round).unwrap().to_json().to_string_compact());
+    }
+    (lines, model_hash(&exp.global))
+}
+
+/// Run over real sockets: in-process client threads driving the actual
+/// `afd client` loop against an ephemeral-port server.
+fn run_tcp(cfg: &ExperimentConfig, conns: usize) -> (Vec<String>, u64) {
+    let (_, spec) = mlp_from_config(cfg);
+    let server = TcpServer::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let handles: Vec<_> = (0..conns)
+        .map(|_| {
+            let a = addr.clone();
+            let opts = ClientOptions {
+                connect_retry_s: 10.0,
+                ..ClientOptions::default()
+            };
+            std::thread::spawn(move || run_client_loop(&a, &opts))
+        })
+        .collect();
+    let transport = server
+        .accept_clients(
+            conns,
+            &cfg.to_json().to_string_compact(),
+            spec.layout_fingerprint(),
+            &cfg.transport,
+        )
+        .unwrap();
+    let transport: Arc<dyn Transport> = Arc::new(transport);
+    let mut exp = Experiment::build_with_transport(cfg, Arc::clone(&transport)).unwrap();
+    let mut lines = Vec::with_capacity(cfg.rounds);
+    for round in 1..=cfg.rounds {
+        lines.push(exp.step(round).unwrap().to_json().to_string_compact());
+    }
+    let hash = model_hash(&exp.global);
+    transport.shutdown().unwrap();
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+    (lines, hash)
+}
+
+fn assert_identical(plain: &(Vec<String>, u64), armed: &(Vec<String>, u64), what: &str) {
+    assert_eq!(plain.0.len(), armed.0.len(), "{what}: round count diverged");
+    for (a, b) in plain.0.iter().zip(&armed.0) {
+        assert_eq!(a, b, "{what}: a round record diverged under telemetry");
+    }
+    assert_eq!(
+        plain.1, armed.1,
+        "{what}: final model hash diverged under telemetry"
+    );
+}
+
+/// The loopback transport mirrors the full telemetry path in-process
+/// (encode → parse → merge) when tracing is live; the mirror must not
+/// perturb a single byte of the results.
+#[test]
+fn telemetry_mirror_keeps_loopback_runs_bit_identical() {
+    let _s = serial();
+    for policy in ["sync", "overselect", "async_buffered"] {
+        let cfg = smoke_cfg(policy);
+
+        afd::obs::reset();
+        afd::obs::set_enabled(false);
+        let plain = run_loopback(&cfg);
+
+        afd::obs::reset();
+        afd::obs::set_enabled(true);
+        let armed = run_loopback(&cfg);
+        let was_live = afd::obs::enabled();
+        afd::obs::set_enabled(false);
+
+        assert_identical(&plain, &armed, policy);
+
+        if was_live {
+            // The mirror really ran: telemetry frames were encoded,
+            // parsed and merged under the "loopback" process name, and
+            // their bytes were accounted on the side channel.
+            assert!(
+                afd::obs::metrics::TELEMETRY_FRAMES.get() >= cfg.rounds as u64,
+                "{policy}: loopback mirror shipped no telemetry frames"
+            );
+            assert!(
+                afd::obs::metrics::TELEMETRY_BYTES.get() > 0,
+                "{policy}: telemetry bytes not accounted"
+            );
+            let stats = afd::obs::export::stats_json();
+            let rem = stats.get("remote").unwrap().get("loopback").unwrap();
+            assert!(
+                rem.get("frames").and_then(|f| f.as_f64()).unwrap_or(0.0)
+                    >= cfg.rounds as f64,
+                "{policy}: loopback proc missing from merged stats"
+            );
+        }
+    }
+}
+
+/// Real `Telemetry` frames over real sockets: piggybacked after
+/// `UpdateUp`, consumed by the coordinator without entering the
+/// round's FIFO, merged into per-process tracks — and still invisible
+/// in the results.
+#[test]
+fn telemetry_shipping_keeps_tcp_runs_bit_identical_for_every_policy() {
+    let _s = serial();
+    for policy in ["sync", "overselect", "async_buffered"] {
+        let cfg = smoke_cfg(policy);
+
+        afd::obs::reset();
+        afd::obs::set_enabled(false);
+        let plain = run_tcp(&cfg, 2);
+
+        afd::obs::reset();
+        afd::obs::set_enabled(true);
+        let armed = run_tcp(&cfg, 2);
+        let was_live = afd::obs::enabled();
+        afd::obs::set_enabled(false);
+
+        assert_identical(&plain, &armed, policy);
+
+        if was_live {
+            assert!(
+                afd::obs::metrics::TELEMETRY_FRAMES.get() > 0,
+                "{policy}: no telemetry frames arrived over TCP"
+            );
+            assert!(
+                afd::obs::metrics::TELEMETRY_BYTES.get() > 0,
+                "{policy}: telemetry wire bytes not accounted"
+            );
+        }
+    }
+}
+
+/// After a traced TCP run the merged Chrome trace must hold one named
+/// process group per remote client process with clock-aligned spans,
+/// and the stats dump must carry per-process totals.
+#[test]
+fn merged_trace_has_a_named_clock_aligned_track_per_remote_process() {
+    let _s = serial();
+    let cfg = smoke_cfg("sync");
+
+    afd::obs::reset();
+    afd::obs::set_enabled(true);
+    let _ = run_tcp(&cfg, 2);
+    let was_live = afd::obs::enabled();
+    afd::obs::set_enabled(false);
+    if !was_live {
+        return; // probes compiled out (--no-default-features)
+    }
+
+    let doc = afd::obs::export::chrome_trace_json();
+    let text = doc.to_string_compact();
+    let back = afd::util::json::parse(&text).unwrap();
+    let events = back.get("traceEvents").unwrap().as_arr().unwrap();
+
+    // Every remote client process got its own named pid, distinct from
+    // the coordinator's and from each other.
+    let mut proc_pids: Vec<(u64, String)> = Vec::new();
+    for e in events {
+        if e.get("name").and_then(|n| n.as_str()) == Some("process_name") {
+            let pid = e.get("pid").and_then(|p| p.as_f64()).unwrap() as u64;
+            let name = e
+                .get("args")
+                .and_then(|a| a.get("name"))
+                .and_then(|n| n.as_str())
+                .unwrap()
+                .to_string();
+            proc_pids.push((pid, name));
+        }
+    }
+    let coord_pid = afd::obs::remote::COORDINATOR_PID as u64;
+    assert!(
+        proc_pids.iter().any(|(p, _)| *p == coord_pid),
+        "coordinator process track missing"
+    );
+    let remote_tracks: Vec<&(u64, String)> =
+        proc_pids.iter().filter(|(p, _)| *p != coord_pid).collect();
+    assert!(
+        remote_tracks.len() >= 2,
+        "expected both client processes as tracks, got {proc_pids:?}"
+    );
+    for w in 0..remote_tracks.len() {
+        for v in (w + 1)..remote_tracks.len() {
+            assert_ne!(
+                remote_tracks[w].0, remote_tracks[v].0,
+                "remote processes share a pid: {proc_pids:?}"
+            );
+        }
+    }
+    assert!(
+        remote_tracks
+            .iter()
+            .any(|(_, n)| n.starts_with("client-slot-")),
+        "remote tracks not named by slot: {proc_pids:?}"
+    );
+
+    // Remote spans ride remote pids with sane aligned clocks, and
+    // every span track inside those pids is named.
+    let mut remote_spans = 0usize;
+    for e in events {
+        let ph = e.get("ph").and_then(|p| p.as_str());
+        if ph != Some("X") {
+            continue;
+        }
+        let ts = e.get("ts").and_then(|t| t.as_f64()).unwrap();
+        let dur = e.get("dur").and_then(|d| d.as_f64()).unwrap();
+        assert!(ts >= 0.0 && dur >= 0.0, "negative clock in merged trace");
+        if e.get("pid").and_then(|p| p.as_f64()).unwrap() as u64 != coord_pid {
+            remote_spans += 1;
+        }
+    }
+    assert!(remote_spans > 0, "no spans merged from remote processes");
+
+    // The embedded stats dump mirrors the same merge.
+    let stats = back.get("afd_stats").unwrap();
+    let rem = stats.get("remote").unwrap().as_obj().unwrap();
+    let slots: Vec<&String> = rem
+        .iter()
+        .map(|(k, _)| k)
+        .filter(|k| k.starts_with("client-slot-"))
+        .collect();
+    assert!(
+        slots.len() >= 2,
+        "stats dump missing remote client processes: {slots:?}"
+    );
+    for (name, r) in rem.iter() {
+        assert!(
+            r.get("frames").and_then(|f| f.as_f64()).unwrap_or(0.0) > 0.0,
+            "{name}: merged zero telemetry frames"
+        );
+        assert!(
+            r.get("counters")
+                .and_then(|c| c.as_obj())
+                .map(|c| !c.is_empty())
+                .unwrap_or(false),
+            "{name}: no counter totals shipped"
+        );
+    }
+}

@@ -50,7 +50,7 @@ fn frame_corpus(seed: u64) -> Vec<Vec<u8>> {
     frames.push(std::mem::take(&mut buf));
     frame::encode_hello(&mut buf, rng.next_u64());
     frames.push(std::mem::take(&mut buf));
-    frame::encode_ready(&mut buf, rng.next_u64());
+    frame::encode_ready(&mut buf, rng.next_u64(), rng.next_u64());
     frames.push(std::mem::take(&mut buf));
     frame::encode_bye(&mut buf);
     frames.push(std::mem::take(&mut buf));
@@ -107,6 +107,59 @@ fn frame_corpus(seed: u64) -> Vec<Vec<u8>> {
     let uniform = SubModel::from_keep(vec![vec![true; 200], vec![false; 177], vec![true; 64]]);
     frame::encode_round_offer(&mut buf, 200, 0, 2, 0.05, 1.0, &uniform);
     frames.push(std::mem::take(&mut buf));
+
+    // Telemetry frames: empty (quiet process), and a few populated
+    // ones so the truncation / bit-flip sweeps walk every section of
+    // the schema (threads, spans, counters, gauges, histograms).
+    {
+        let mut enc = frame::TelemetryEncoder::begin(&mut buf, 0, rng.next_u64());
+        enc.begin_threads();
+        enc.end_threads();
+        enc.begin_counters();
+        enc.end_counters();
+        enc.begin_gauges();
+        enc.end_gauges();
+        enc.begin_hists();
+        enc.end_hists();
+        enc.finish();
+    }
+    frames.push(std::mem::take(&mut buf));
+    for case in 0..3u32 {
+        let mut enc = frame::TelemetryEncoder::begin(&mut buf, 7 + case, rng.next_u64());
+        enc.begin_threads();
+        for t in 0..=case {
+            enc.begin_thread(t, &format!("worker-{t}"), rng.below(5));
+            for _ in 0..rng.below(6) {
+                enc.span(
+                    (rng.below(12) + 1) as u8,
+                    rng.below(4) as u32,
+                    rng.next_u64() >> 20,
+                    rng.below(1 << 30),
+                    rng.next_u64(),
+                    rng.next_u64(),
+                );
+            }
+        }
+        enc.end_threads();
+        enc.begin_counters();
+        for id in 0..rng.below(8) as u8 {
+            enc.counter(id, rng.below(1 << 40));
+        }
+        enc.end_counters();
+        enc.begin_gauges();
+        if case > 0 {
+            enc.gauge(0, rng.next_u64());
+        }
+        enc.end_gauges();
+        enc.begin_hists();
+        for h in 0..rng.below(3) as u8 {
+            enc.begin_hist(h + 1, 1 + rng.below(100), rng.below(1 << 40));
+            enc.bucket((rng.below(30)) as u8, 1 + rng.below(50));
+        }
+        enc.end_hists();
+        enc.finish();
+        frames.push(std::mem::take(&mut buf));
+    }
 
     frames
 }
@@ -283,9 +336,93 @@ fn random_garbage_never_panics() {
             let _ = frame::parse_ready(&view);
             let _ = frame::parse_hello(&view);
             let _ = frame::parse_state_sync(&view);
+            let _ = frame::parse_telemetry(&view);
         }
         Ok(())
     });
+}
+
+/// Telemetry frames from the corpus round-trip through the owned
+/// parser: every section count, span field, and delta survives.
+#[test]
+fn telemetry_frames_roundtrip_through_the_parser() {
+    let mut parsed = 0;
+    for f in frame_corpus(11) {
+        let (view, _) = frame::parse_frame(&f).unwrap();
+        if view.kind != FrameKind::Telemetry {
+            continue;
+        }
+        let msg = frame::parse_telemetry(&view).expect("corpus telemetry parses");
+        parsed += 1;
+        for t in &msg.threads {
+            assert!(!t.name.is_empty());
+            for s in &t.spans {
+                assert!((s.stage as usize) < frame::TELEMETRY_STAGE_LIMIT as usize);
+            }
+        }
+    }
+    assert!(parsed >= 4, "corpus should carry telemetry frames, got {parsed}");
+}
+
+/// Hostile section counts inside a CRC-valid envelope must be rejected
+/// by the cap checks with a typed error — never an allocation of
+/// count × size or a panic.
+#[test]
+fn telemetry_hostile_counts_error_without_allocating() {
+    let mut buf = Vec::new();
+    {
+        let mut enc = frame::TelemetryEncoder::begin(&mut buf, 1, 2);
+        enc.begin_threads();
+        enc.begin_thread(0, "main", 0);
+        enc.span(1, 0, 10, 5, 0, 0);
+        enc.end_threads();
+        enc.begin_counters();
+        enc.counter(0, 1);
+        enc.end_counters();
+        enc.begin_gauges();
+        enc.end_gauges();
+        enc.begin_hists();
+        enc.end_hists();
+        enc.finish();
+    }
+    // Payload layout: round u32 ‖ now u64 ‖ thread count u32 ‖ ...
+    let thread_count_at = frame::HEADER_LEN + 4 + 8;
+    for hostile in [u32::MAX, (frame::MAX_TELEMETRY_THREADS as u32) + 1] {
+        let mut v = buf.clone();
+        v[thread_count_at..thread_count_at + 4].copy_from_slice(&hostile.to_le_bytes());
+        let n = v.len();
+        let crc = frame::crc32(&v[..n - frame::CRC_LEN]).to_le_bytes();
+        v[n - 4..].copy_from_slice(&crc);
+        let (view, _) = frame::parse_frame(&v).expect("envelope still valid");
+        match frame::parse_telemetry(&view) {
+            Err(FrameError::BadPayload { kind, .. }) => {
+                assert_eq!(kind, FrameKind::Telemetry)
+            }
+            other => panic!("hostile thread count {hostile}: want BadPayload, got {other:?}"),
+        }
+    }
+}
+
+/// A peer still speaking wire v2 gets a diagnosable version refusal —
+/// the error names both versions so the operator knows which binary
+/// is stale.
+#[test]
+fn v2_peer_gets_a_diagnosable_version_refusal() {
+    let mut buf = Vec::new();
+    frame::encode_hello(&mut buf, 42);
+    assert_eq!(buf[2], frame::WIRE_VERSION);
+    buf[2] = 2;
+    // Re-seal the CRC so only the version differs — the check order
+    // must surface BadVersion, not BadCrc.
+    let n = buf.len();
+    let crc = frame::crc32(&buf[..n - frame::CRC_LEN]).to_le_bytes();
+    buf[n - 4..].copy_from_slice(&crc);
+    match frame::parse_frame(&buf) {
+        Err(FrameError::BadVersion { got, want }) => {
+            assert_eq!((got, want), (2, frame::WIRE_VERSION));
+        }
+        other => panic!("want BadVersion, got {other:?}"),
+    }
 }
 
 /// Payload-level malformation (valid frame envelope, short payload)

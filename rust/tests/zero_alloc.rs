@@ -2,8 +2,9 @@
 //! [`Workspace`], a full `train_epoch`, the plan-based
 //! pack/unpack/mask — and the **entire client round** (epoch assembly
 //! → pack → encode → decode → train → DGC compress/decode → batched
-//! aggregate) — perform **no heap allocations**, counted by a real
-//! `GlobalAlloc` wrapper, not inferred.
+//! aggregate) — and a warm telemetry snapshot encode perform **no
+//! heap allocations**, counted by a real `GlobalAlloc` wrapper, not
+//! inferred.
 //!
 //! These tests live alone in their own integration-test binary because
 //! the counting allocator is process-global: nothing else may allocate
@@ -91,6 +92,69 @@ fn frame_encode_parse_allocates_nothing_after_warmup() {
     let allocs = alloc_count::disarm();
     afd::obs::set_enabled(false);
     assert_eq!(allocs, 0, "framing a warm round made {allocs} allocations");
+}
+
+/// Distributed-telemetry contract: encoding a warm incremental
+/// telemetry snapshot — new span-ring records, counter deltas, stage
+/// histogram deltas, framed and CRC-sealed — performs zero heap
+/// allocations. The shipper's cursor tables are preallocated at
+/// construction and the frame sink is sized by the warm-up passes, so
+/// a remote client can ship telemetry every round without breaking
+/// the PR 4 zero-alloc contract.
+#[test]
+fn telemetry_snapshot_encode_allocates_nothing_after_warmup() {
+    let _guard = SERIAL.lock().unwrap();
+    use afd::obs::remote::Shipper;
+    use afd::obs::Stage;
+    use afd::transport::frame;
+    afd::obs::set_enabled(true);
+    afd::obs::register_thread();
+
+    let mut shipper = Shipper::new();
+    let mut out: Vec<u8> = Vec::with_capacity(64 * 1024);
+
+    let record_some = || {
+        for i in 0..8u64 {
+            let _g = afd::obs::span_ab(Stage::CodecEncode, i, i + 1);
+        }
+        afd::obs::mark(Stage::FaultMark, 1, 2);
+        afd::obs::metrics::ROUNDS_COMPLETED.incr();
+        afd::obs::metrics::BYTES_UP_WIRE.add(128);
+    };
+
+    // Warm-up: the first encode sizes the per-ring cursor table and
+    // the frame sink, the second settles them.
+    record_some();
+    shipper.encode_into(&mut out, 1);
+    record_some();
+    out.clear();
+    shipper.encode_into(&mut out, 2);
+
+    // Armed: fresh spans and counter deltas through warm buffers.
+    record_some();
+    out.clear();
+    alloc_count::arm();
+    shipper.encode_into(&mut out, 3);
+    let allocs = alloc_count::disarm();
+    let was_live = afd::obs::enabled();
+    afd::obs::set_enabled(false);
+    assert_eq!(
+        allocs, 0,
+        "a warm telemetry snapshot encode made {allocs} allocations"
+    );
+
+    // The armed pass produced a real, parseable frame carrying the
+    // fresh records (when the trace feature is compiled in).
+    let (view, used) = frame::parse_frame(&out).unwrap();
+    assert_eq!(used, out.len());
+    let msg = frame::parse_telemetry(&view).unwrap();
+    assert_eq!(msg.round, 3);
+    if was_live {
+        assert!(
+            msg.threads.iter().any(|t| !t.spans.is_empty()),
+            "armed snapshot shipped no spans despite live tracing"
+        );
+    }
 }
 
 #[test]

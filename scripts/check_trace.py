@@ -5,9 +5,16 @@ Checks the shape Perfetto / chrome://tracing require plus the afd
 contract: complete ("X") events carry name/cat/ts/dur/pid/tid, every
 track is named by a thread_name metadata event, the core pipeline
 stages all appear, and the embedded afd_stats dump is present and
-consistent. Stdlib only; exits non-zero with a message on any failure.
+consistent. For merged distributed traces it can additionally require
+a minimum number of process tracks (coordinator + remote client
+processes), specific instant events (faults, checkpoints, resumes),
+and remote counter totals in the embedded stats. Nonzero span-ring
+drop counts are reported as warnings. Stdlib only; exits non-zero
+with a message on any failure.
 
 Usage: check_trace.py TRACE.json [--require-stage NAME ...]
+           [--require-instant NAME ...] [--min-process-tracks N]
+           [--min-remote-procs N]
 """
 
 import json
@@ -30,16 +37,35 @@ def fail(msg):
     sys.exit(1)
 
 
+def warn(msg):
+    print(f"check_trace: WARN: {msg}", file=sys.stderr)
+
+
 def main():
     args = sys.argv[1:]
     if not args:
-        fail("usage: check_trace.py TRACE.json [--require-stage NAME ...]")
+        fail(
+            "usage: check_trace.py TRACE.json [--require-stage NAME ...] "
+            "[--require-instant NAME ...] [--min-process-tracks N] "
+            "[--min-remote-procs N]"
+        )
     path = args[0]
     required = set(REQUIRED_STAGES)
+    required_instants = set()
+    min_process_tracks = 0
+    min_remote_procs = 0
     it = iter(args[1:])
     for a in it:
         if a == "--require-stage":
             required.add(next(it, "") or fail("--require-stage needs a name"))
+        elif a == "--require-instant":
+            required_instants.add(
+                next(it, "") or fail("--require-instant needs a name")
+            )
+        elif a == "--min-process-tracks":
+            min_process_tracks = int(next(it, "0"))
+        elif a == "--min-remote-procs":
+            min_remote_procs = int(next(it, "0"))
         else:
             fail(f"unknown argument {a!r}")
 
@@ -53,9 +79,11 @@ def main():
     if not isinstance(events, list) or not events:
         fail("traceEvents missing, not a list, or empty")
 
-    named_tracks = set()
-    used_tracks = set()
+    named_tracks = set()  # (pid, tid) named by a thread_name event
+    used_tracks = set()  # (pid, tid) carrying at least one span
+    process_tracks = {}  # pid -> process name
     span_names = set()
+    instant_names = set()
     x_events = 0
     for n, ev in enumerate(events):
         if not isinstance(ev, dict):
@@ -69,7 +97,14 @@ def main():
                     fail(f"event {n}: thread_name without tid")
                 if not ev.get("args", {}).get("name"):
                     fail(f"event {n}: thread_name without args.name")
-                named_tracks.add(ev["tid"])
+                named_tracks.add((ev.get("pid"), ev["tid"]))
+            elif ev.get("name") == "process_name":
+                if "pid" not in ev:
+                    fail(f"event {n}: process_name without pid")
+                pname = ev.get("args", {}).get("name")
+                if not pname:
+                    fail(f"event {n}: process_name without args.name")
+                process_tracks[ev["pid"]] = pname
             continue
         if ph == "X":
             x_events += 1
@@ -81,20 +116,29 @@ def main():
             if not isinstance(ev["dur"], (int, float)) or ev["dur"] < 0:
                 fail(f"event {n}: bad dur {ev['dur']!r}")
             span_names.add(ev["name"])
-            used_tracks.add(ev["tid"])
+            used_tracks.add((ev.get("pid"), ev["tid"]))
         elif ph == "i":
             if "name" not in ev or "ts" not in ev:
                 fail(f"event {n}: instant event missing name/ts")
             span_names.add(ev["name"])
+            instant_names.add(ev["name"])
 
     if x_events == 0:
         fail("no complete (ph=X) span events recorded")
     missing = required - span_names
     if missing:
         fail(f"required stages absent from trace: {sorted(missing)}")
+    missing_i = required_instants - instant_names
+    if missing_i:
+        fail(f"required instant events absent from trace: {sorted(missing_i)}")
     unnamed = used_tracks - named_tracks
     if unnamed:
         fail(f"tracks used by spans but never named: {sorted(unnamed)}")
+    if len(process_tracks) < min_process_tracks:
+        fail(
+            f"only {len(process_tracks)} named process track(s) "
+            f"({sorted(process_tracks.values())}), need {min_process_tracks}"
+        )
 
     stats = doc.get("afd_stats")
     if not isinstance(stats, dict):
@@ -106,9 +150,41 @@ def main():
     if recorded <= 0:
         fail("afd_stats.spans.recorded is zero in a traced run")
 
+    # Span-ring pressure is legal but lossy — surface it.
+    dropped = stats["spans"].get("dropped", 0)
+    if dropped:
+        warn(f"{dropped:.0f} local span record(s) overwritten before export")
+    tele_dropped = stats["counters"].get("telemetry_spans_dropped", 0)
+    if tele_dropped:
+        warn(f"{tele_dropped:.0f} shipped span(s) dropped at the merge cap")
+
+    remote = stats.get("remote", {})
+    if min_remote_procs:
+        if len(remote) < min_remote_procs:
+            fail(
+                f"afd_stats.remote has {len(remote)} process(es) "
+                f"({sorted(remote)}), need {min_remote_procs}"
+            )
+        for name, r in remote.items():
+            if r.get("frames", 0) <= 0:
+                fail(f"remote process {name!r} shipped no telemetry frames")
+            if not r.get("counters"):
+                fail(f"remote process {name!r} has no counter totals in stats")
+        for name, r in remote.items():
+            if r.get("ring_dropped", 0):
+                warn(
+                    f"remote {name!r}: {r['ring_dropped']:.0f} span record(s) "
+                    "overwritten before shipping"
+                )
+
+    extra = ""
+    if process_tracks:
+        extra = f", {len(process_tracks)} process track(s)"
+    if remote:
+        extra += f", {len(remote)} remote proc(s) in stats"
     print(
         f"check_trace: OK — {x_events} spans over {len(used_tracks)} tracks, "
-        f"{len(span_names)} distinct names, stats embedded"
+        f"{len(span_names)} distinct names, stats embedded" + extra
     )
 
 
